@@ -1,0 +1,60 @@
+//! Approximation study (the Figure-1 workflow as a library example):
+//! sweep sketch sizes for a chosen set of methods on realistic inputs and
+//! print a compact loss-vs-d table with standard errors.
+//!
+//! ```bash
+//! cargo run --release --example approximation_study -- --n 1024 --trials 8
+//! ```
+
+use skeinformer::attention::{registry, Standard};
+use skeinformer::cli::Args;
+use skeinformer::metrics::RunningStats;
+use skeinformer::rng::Rng;
+use skeinformer::synth_qkv::{generate, QkvConfig};
+use skeinformer::tensor::{spectral_norm, spectral_norm_diff};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let n = args.get_usize("n", 1024)?;
+    let p = args.get_usize("p", 64)?;
+    let trials = args.get_usize("trials", 6)? as u64;
+
+    let mut rng = Rng::new(2024);
+    let (q, k, v) = generate(&QkvConfig::pretrained(n, p), &mut rng);
+    let exact = Standard::exact(&q, &k, &v, None);
+    let base = spectral_norm(&exact);
+
+    let focus = ["vmean", "skeinformer", "skein_no_norm", "informer", "linformer",
+                 "linformer_jlt", "nystromformer"];
+    println!("relative spectral-norm loss ‖BV−R‖₂/‖BV‖₂  (n={n}, {trials} trials)\n");
+    print!("{:<18}", "method \\ d");
+    let ds = [16usize, 32, 64, 128, 256];
+    for d in ds {
+        print!("{d:>12}");
+    }
+    println!();
+    for name in focus {
+        print!("{name:<18}");
+        for d in ds {
+            if d > n {
+                print!("{:>12}", "-");
+                continue;
+            }
+            let method = registry(d).into_iter().find(|m| m.name() == name).unwrap();
+            let mut stats = RunningStats::new();
+            for t in 0..trials {
+                let out = method.compute(&q, &k, &v, None, &mut Rng::new(10 + t));
+                stats.push((spectral_norm_diff(&out, &exact) / base) as f64);
+            }
+            print!("{:>12}", format!("{:.3}±{:.3}", stats.mean(), stats.std_err()));
+        }
+        println!();
+    }
+    println!(
+        "\nreading guide: V-Mean is flat (rank-one, no d); Skeinformer should\n\
+         drop fastest with d; the unreduced JLT beats the reduced Linformer;\n\
+         disabling adaptive row normalization (skein_no_norm) hurts — the\n\
+         qualitative shape of the paper's Figure 1."
+    );
+    Ok(())
+}

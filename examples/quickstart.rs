@@ -1,0 +1,104 @@
+//! Quickstart: approximate one self-attention call with Skeinformer.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds a realistic (Q, K, V) triple, runs exact attention and
+//! Algorithm 1 side by side, and prints the approximation error and
+//! speedup — the 30-second version of the paper's whole story.  If AOT
+//! artifacts are present it also runs the Pallas-kernel version through
+//! PJRT to show the L1/L3 layers producing the same numbers.
+
+use skeinformer::attention::{AttentionMethod, Skeinformer, Standard, VMean};
+use skeinformer::rng::Rng;
+use skeinformer::synth_qkv::{generate, QkvConfig};
+use skeinformer::tensor::{spectral_norm, spectral_norm_diff};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let n = 2048;
+    let p = 64;
+    let d = 256;
+    println!("Skeinformer quickstart: n={n}, head dim p={p}, sketch size d={d}\n");
+
+    // 1. realistic inputs (pretrained-embedding statistics)
+    let mut rng = Rng::new(7);
+    let (q, k, v) = generate(&QkvConfig::pretrained(n, p), &mut rng);
+
+    // 2. exact attention (the O(n²) baseline)
+    let t0 = Instant::now();
+    let exact = Standard::exact(&q, &k, &v, None);
+    let t_exact = t0.elapsed();
+    let base = spectral_norm(&exact);
+    println!("standard attention:   {:>8.1} ms", t_exact.as_secs_f64() * 1e3);
+
+    // 3. Skeinformer (Algorithm 1) — O(n log n)
+    let skein = Skeinformer::new(d);
+    let t0 = Instant::now();
+    let approx = skein.compute(&q, &k, &v, None, &mut Rng::new(1));
+    let t_skein = t0.elapsed();
+    let err = spectral_norm_diff(&approx, &exact) / base;
+    println!(
+        "skeinformer:          {:>8.1} ms   rel spectral error {err:.4}   speedup {:.1}x",
+        t_skein.as_secs_f64() * 1e3,
+        t_exact.as_secs_f64() / t_skein.as_secs_f64()
+    );
+
+    // 4. the rank-one baseline, for calibration
+    let vm = VMean.compute(&q, &k, &v, None, &mut Rng::new(0));
+    println!(
+        "v-mean (rank-1):      {:>8} —   rel spectral error {:.4}",
+        "-",
+        spectral_norm_diff(&vm, &exact) / base
+    );
+
+    // 5. the same kernel through the AOT/PJRT path, if built
+    let manifest = std::path::Path::new("artifacts/attn_manifest.json");
+    if manifest.exists() {
+        println!("\nrunning the Pallas-kernel artifact through PJRT ...");
+        run_artifact()?;
+    } else {
+        println!("\n(artifacts/ not built — run `make artifacts` to also exercise the\n AOT Pallas-kernel path through PJRT)");
+    }
+    Ok(())
+}
+
+/// Load artifacts/attn_skeinformer.hlo.txt (the L1 Pallas kernel lowered by
+/// jax) and artifacts/attn_standard.hlo.txt, run both on the same inputs.
+fn run_artifact() -> anyhow::Result<()> {
+    use skeinformer::json;
+    use skeinformer::runtime::{literal_f32, scalar_i32, Runtime};
+
+    let man = json::parse(&std::fs::read_to_string("artifacts/attn_manifest.json")?)?;
+    let n = man.req_usize("n")?;
+    let p = man.req_usize("p")?;
+    let rt = Runtime::cpu()?;
+    let skein_exe = rt.load_hlo(std::path::Path::new("artifacts/attn_skeinformer.hlo.txt"))?;
+    let std_exe = rt.load_hlo(std::path::Path::new("artifacts/attn_standard.hlo.txt"))?;
+
+    let mut rng = Rng::new(11);
+    let (q, k, v) = generate(&QkvConfig::pretrained(n, p), &mut rng);
+    let inputs = [
+        literal_f32(q.data(), &[n, p])?,
+        literal_f32(k.data(), &[n, p])?,
+        literal_f32(v.data(), &[n, p])?,
+        scalar_i32(0),
+    ];
+    let t0 = Instant::now();
+    let skein_out = skein_exe.run(&inputs)?;
+    let t_skein = t0.elapsed();
+    let t0 = Instant::now();
+    let std_out = std_exe.run(&inputs)?;
+    let t_std = t0.elapsed();
+
+    let skein_m = skeinformer::tensor::Matrix::from_vec(n, p, skein_out[0].to_vec::<f32>()?);
+    let std_m = skeinformer::tensor::Matrix::from_vec(n, p, std_out[0].to_vec::<f32>()?);
+    let rel = spectral_norm_diff(&skein_m, &std_m) / spectral_norm(&std_m);
+    println!(
+        "pallas skeinformer kernel: {:>7.1} ms | exact kernel: {:>7.1} ms | rel error {rel:.4}",
+        t_skein.as_secs_f64() * 1e3,
+        t_std.as_secs_f64() * 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Serving example: the L3 batched-inference service under an open-loop
+//! arrival process, reporting latency percentiles and throughput at
+//! several offered loads — the systems-side payoff of an O(n log n)
+//! attention: more sequences per second per device.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serving -- --method skeinformer
+//! ```
+
+use skeinformer::cli::Args;
+use skeinformer::config::ExperimentConfig;
+use skeinformer::coordinator::server;
+use skeinformer::data;
+use skeinformer::metrics::Percentiles;
+use skeinformer::rng::Rng;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/skeinformer_manifest.json").exists() {
+        anyhow::bail!("artifacts/ missing — run `make artifacts` first");
+    }
+    let args = Args::parse(std::env::args().skip(1))?;
+    let mut cfg = ExperimentConfig::default();
+    cfg.method = args.get_or("method", "skeinformer").to_string();
+    cfg.task = args.get_or("task", "text").to_string();
+    let total = args.get_usize("requests", 96)?;
+    let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 8)?);
+
+    let task = data::by_name(&cfg.task, cfg.model.seq_len).unwrap();
+    println!(
+        "batched inference service: method={} task={} (batch capacity from artifact)",
+        cfg.method, cfg.task
+    );
+
+    for rate_per_s in [50.0f64, 200.0] {
+        let handle = server::start(cfg.clone(), max_wait);
+        let mut rng = Rng::new(123);
+        let mut latency = Percentiles::default();
+        let gap = Duration::from_secs_f64(1.0 / rate_per_s);
+        let t0 = Instant::now();
+        let mut inflight = Vec::new();
+        for i in 0..total {
+            let ex = task.sample(&mut rng);
+            inflight.push((handle.submit(ex.tokens), Instant::now()));
+            if i + 1 < total {
+                std::thread::sleep(gap);
+            }
+        }
+        for (rx, sent) in inflight {
+            let logits = rx.recv()?;
+            anyhow::ensure!(logits.iter().all(|x| x.is_finite()));
+            latency.push(sent.elapsed().as_secs_f64() * 1e3);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = handle.shutdown()?;
+        println!(
+            "offered {rate_per_s:>6.0} req/s | served {:>4} in {wall:>6.2}s ({:>6.1} req/s) | \
+             batches {:>3} (occ {:.2}) | latency p50 {:>7.1} ms  p95 {:>7.1} ms  p99 {:>7.1} ms",
+            stats.requests,
+            stats.requests as f64 / wall,
+            stats.batches,
+            stats.mean_occupancy,
+            latency.percentile(50.0),
+            latency.percentile(95.0),
+            latency.percentile(99.0),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,244 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* + a JSON manifest.
+
+Run once by ``make artifacts``; python never touches the request path.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per method this emits into ``artifacts/``:
+
+  <method>_train.hlo.txt   train_step: (params, m, v, step, tokens, mask,
+                           labels, seed) -> (params', m', v', loss, acc)
+  <method>_fwd.hlo.txt     forward:    (params, tokens, mask, seed) -> logits
+  <method>_manifest.json   input/output layout + config + init-params blob info
+  <method>_params.bin      initial parameters, f32 LE, manifest order
+
+plus two raw-attention artifacts used by the quickstart/serving examples:
+
+  attn_skeinformer.hlo.txt  the L1 Pallas kernel path (q,k,v,seed) -> R
+  attn_standard.hlo.txt     the exact-attention Pallas kernel
+  attn_manifest.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .kernels.skeinformer import skeinformer_attention_kernelized
+from .kernels.standard import standard_attention_kernel
+
+DEFAULT_METHODS = [
+    "standard",
+    "standard_nodrop",
+    "vmean",
+    "skeinformer",
+    "skein_uniform",
+    "skein_no_norm",
+    "skein_simple_norm",
+    "skein_no_psr",
+    "informer",
+    "informer_mask",
+    "linformer",
+    "linformer_jlt",
+    "performer",
+    "nystromformer",
+    "bigbird",
+    "reformer",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(arr) -> dict:
+    return {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+
+
+def write_params_bin(path: str, flat_params) -> int:
+    """Concatenated f32 little-endian arrays in manifest order."""
+    total = 0
+    with open(path, "wb") as f:
+        for arr in flat_params:
+            data = jax.device_get(arr).astype("<f4").tobytes()
+            f.write(data)
+            total += arr.size
+    return total
+
+
+def build_method(method: str, out_dir: str, cfg_overrides: dict) -> None:
+    cfg = model_lib.ModelConfig(method=method, **cfg_overrides)
+    key = jax.random.PRNGKey(42)
+    params = model_lib.init_params(cfg, key)
+    names = model_lib.param_order(params)
+    flat = model_lib.flatten(params)
+    zeros = [jnp.zeros_like(p) for p in flat]
+
+    b, n = cfg.batch, cfg.seq_len
+    tokens = jnp.zeros((b, n), jnp.int32)
+    mask = jnp.ones((b, n), jnp.float32)
+    labels = jnp.zeros((b,), jnp.int32)
+    step = jnp.asarray(1.0, jnp.float32)
+    seed = jnp.asarray(0, jnp.int32)
+
+    train_step = model_lib.make_train_step(cfg, names)
+    # keep_unused=True: methods without stochastic ops would otherwise have
+    # their `seed` (etc.) parameter pruned from the entry signature, breaking
+    # the fixed input contract the rust runtime feeds.
+    lowered_train = jax.jit(train_step, keep_unused=True).lower(
+        flat, zeros, zeros, step, tokens, mask, labels, seed)
+    train_path = os.path.join(out_dir, f"{method}_train.hlo.txt")
+    with open(train_path, "w") as f:
+        f.write(to_hlo_text(lowered_train))
+
+    fwd = model_lib.make_forward(cfg, names)
+    lowered_fwd = jax.jit(fwd, keep_unused=True).lower(flat, tokens, mask, seed)
+    fwd_path = os.path.join(out_dir, f"{method}_fwd.hlo.txt")
+    with open(fwd_path, "w") as f:
+        f.write(to_hlo_text(lowered_fwd))
+
+    params_bin = os.path.join(out_dir, f"{method}_params.bin")
+    total = write_params_bin(params_bin, flat)
+
+    manifest = {
+        "method": method,
+        "config": {
+            "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len,
+            "embed": cfg.embed,
+            "heads": cfg.heads,
+            "layers": cfg.layers,
+            "ffn": cfg.ffn,
+            "classes": cfg.classes,
+            "features": cfg.features,
+            "batch": cfg.batch,
+            "lr": cfg.lr,
+        },
+        "params": [{"name": nm, **_spec(params[nm])} for nm in names],
+        "params_bin": {"file": os.path.basename(params_bin), "f32_count": total},
+        "train": {
+            "file": os.path.basename(train_path),
+            # input order: params*N, m*N, v*N, step, tokens, mask, labels, seed
+            "inputs": (
+                [{"role": "param", "name": nm, **_spec(params[nm])} for nm in names]
+                + [{"role": "adam_m", "name": nm, **_spec(params[nm])} for nm in names]
+                + [{"role": "adam_v", "name": nm, **_spec(params[nm])} for nm in names]
+                + [
+                    {"role": "step", "shape": [], "dtype": "float32"},
+                    {"role": "tokens", "shape": [b, n], "dtype": "int32"},
+                    {"role": "mask", "shape": [b, n], "dtype": "float32"},
+                    {"role": "labels", "shape": [b], "dtype": "int32"},
+                    {"role": "seed", "shape": [], "dtype": "int32"},
+                ]
+            ),
+            # output order: params'*N, m'*N, v'*N, loss, acc
+            "outputs": {"n_params": len(names), "extra": ["loss", "acc"]},
+        },
+        "forward": {
+            "file": os.path.basename(fwd_path),
+            "inputs": (
+                [{"role": "param", "name": nm, **_spec(params[nm])} for nm in names]
+                + [
+                    {"role": "tokens", "shape": [b, n], "dtype": "int32"},
+                    {"role": "mask", "shape": [b, n], "dtype": "float32"},
+                    {"role": "seed", "shape": [], "dtype": "int32"},
+                ]
+            ),
+            "outputs": {"logits": [b, cfg.classes]},
+        },
+    }
+    with open(os.path.join(out_dir, f"{method}_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] {method}: train={os.path.getsize(train_path)//1024}KiB "
+          f"fwd={os.path.getsize(fwd_path)//1024}KiB params={total} f32")
+
+
+def build_attention_kernels(out_dir: str, n: int = 1024, p: int = 64, d: int = 128) -> None:
+    """Raw L1 attention artifacts for the quickstart / serving examples."""
+    spec = jax.ShapeDtypeStruct((n, p), jnp.float32)
+
+    def skein(q, k, v, seed):
+        key = jax.random.PRNGKey(seed)
+        # block_n=256/block_d=32: perf-pass result (EXPERIMENTS.md §Perf L1)
+        # — fewer interpret-mode grid steps, same numerics.
+        return (skeinformer_attention_kernelized(q, k, v, key, d=d, block_n=n, block_d=d),)
+
+    def std(q, k, v, seed):
+        del seed
+        return (standard_attention_kernel(q, k, v),)
+
+    seed_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    for name, fn in (("attn_skeinformer", skein), ("attn_standard", std)):
+        lowered = jax.jit(fn, keep_unused=True).lower(spec, spec, spec, seed_spec)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"[aot] {name}: {os.path.getsize(path)//1024}KiB")
+    with open(os.path.join(out_dir, "attn_manifest.json"), "w") as f:
+        json.dump(
+            {
+                "n": n, "p": p, "d": d,
+                "inputs": [
+                    {"role": "q", "shape": [n, p], "dtype": "float32"},
+                    {"role": "k", "shape": [n, p], "dtype": "float32"},
+                    {"role": "v", "shape": [n, p], "dtype": "float32"},
+                    {"role": "seed", "shape": [], "dtype": "int32"},
+                ],
+                "files": {"skeinformer": "attn_skeinformer.hlo.txt",
+                          "standard": "attn_standard.hlo.txt"},
+            },
+            f,
+            indent=1,
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--methods", default=",".join(DEFAULT_METHODS),
+                    help="comma-separated method list, or 'core' for a fast subset")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--features", type=int, default=64)
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--vocab", type=int, default=64)
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    if args.methods == "core":
+        methods = ["standard", "skeinformer", "linformer", "informer"]
+    else:
+        methods = [m.strip() for m in args.methods.split(",") if m.strip()]
+
+    os.makedirs(args.out, exist_ok=True)
+    overrides = {
+        "batch": args.batch,
+        "seq_len": args.seq_len,
+        "features": args.features,
+        "classes": args.classes,
+        "vocab": args.vocab,
+    }
+    for method in methods:
+        build_method(method, args.out, overrides)
+    if not args.skip_kernels:
+        build_attention_kernels(args.out)
+    print("[aot] done", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

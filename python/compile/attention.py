@@ -1,0 +1,435 @@
+"""Layer-2 attention variants (pure jnp) used inside the training graph.
+
+Every method from the paper's Table 1 is implemented as a drop-in,
+single-head function ``(q, k, v, key, mask) -> (n, p)`` so the transformer
+in ``model.py`` can swap them via config.  The training graph uses these
+jnp forms (differentiable end-to-end); the Pallas kernels in ``kernels/``
+implement the same math for the inference/serving hot path and are tested
+against ``kernels/ref.py``, which these functions also match (see
+``tests/test_attention.py``).
+
+Method registry (paper Table 1 rows → names here):
+  standard            Vaswani et al. 2017 (optional attention dropout)
+  standard_nodrop     · w/o dropout
+  vmean               (1/n) 1 1^T V rank-one baseline
+  skeinformer         Algorithm 1 (column sampling + adaptive row norm + PSR)
+  skein_uniform       · w/ uniform sampling        (ablation)
+  skein_no_norm       · w/o row normalization      (ablation)
+  skein_simple_norm   · w/ simple row normalization(ablation)
+  skein_no_psr        · w/o pilot sampling reutil. (ablation)
+  informer            Zhou et al. 2020 (top-u queries by sparsity measure)
+  informer_mask       · w/ padding mask (section 4.4)
+  linformer           Wang et al. 2020 (reduced JL form, random projections)
+  linformer_jlt       · w/ unreduced JLT: D^{-1} A S S^T V
+  performer           Choromanski et al. 2020 (FAVOR+ positive features)
+  nystromformer       Xiong et al. 2021 (segment-mean landmarks)
+  bigbird             Zaheer et al. 2020 (window+global+random, masked dense)
+  reformer            Kitaev et al. 2020 (single-round LSH bucketing)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+_EPS = 1e-30
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _masked_softmax(scores, mask):
+    """Row softmax with optional (n,) 0/1 key mask."""
+    if mask is not None:
+        scores = jnp.where(mask[None, :] > 0, scores, -1e30)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores)
+    return e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), _EPS)
+
+
+def _gumbel_topk_without_replacement(key, log_probs, d):
+    g = -jnp.log(-jnp.log(jax.random.uniform(key, log_probs.shape, minval=1e-20, maxval=1.0)))
+    # argsort instead of lax.top_k (old-XLA HLO-text compatibility).
+    # stop_gradient: selection indices carry no gradient (and grad-of-sort
+    # is unsupported by the pinned jax/xla_extension pairing).
+    return jnp.argsort(jax.lax.stop_gradient(-(log_probs + g)))[:d]
+
+
+def _valid_count(mask, n, dtype):
+    if mask is None:
+        return jnp.asarray(n, dtype)
+    return jnp.maximum(jnp.sum(mask.astype(dtype)), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# exact baselines
+# ---------------------------------------------------------------------------
+
+def standard(q, k, v, key=None, mask=None, *, dropout: float = 0.0):
+    """Exact softmax attention, optional attention-prob dropout."""
+    p = q.shape[-1]
+    scores = q @ k.T / jnp.sqrt(jnp.asarray(p, q.dtype))
+    probs = _masked_softmax(scores, mask)
+    if dropout > 0.0 and key is not None:
+        keep = jax.random.bernoulli(key, 1.0 - dropout, probs.shape)
+        probs = probs * keep / (1.0 - dropout)
+    return probs @ v
+
+
+def standard_nodrop(q, k, v, key=None, mask=None):
+    return standard(q, k, v, None, mask, dropout=0.0)
+
+
+def vmean(q, k, v, key=None, mask=None):
+    return ref.vmean_attention(v, mask)
+
+
+# ---------------------------------------------------------------------------
+# Skeinformer (Algorithm 1) + ablations
+# ---------------------------------------------------------------------------
+
+def skeinformer(
+    q,
+    k,
+    v,
+    key,
+    mask=None,
+    *,
+    d: int = 64,
+    uniform_sampling: bool = False,
+    row_norm: str = "adaptive",  # "adaptive" | "simple" | "none"
+    psr: bool = True,
+):
+    """Algorithm 1 with ablation switches (Table 1's four ablation rows).
+
+    row_norm="adaptive": geometric-mean fill (Eq. 6), the paper's method.
+    row_norm="simple":   normalize by the selected-column sum only, i.e. the
+                         row normalization Informer implements.
+    row_norm="none":     no normalization — raw sketched product
+                         A^{J'} V_{J'} / d rescaled by inverse probabilities
+                         (the plain AMM estimator of Prop. 1).
+    """
+    n, p = q.shape
+    d = min(d, n)
+    key_pilot, key_col = jax.random.split(key)
+
+    m = _valid_count(mask, n, q.dtype)
+    if mask is not None:
+        logits = jnp.where(mask > 0, 0.0, -1e30)
+        pilot_idx = jax.random.categorical(key_pilot, logits, shape=(d,))
+    else:
+        pilot_idx = jax.random.randint(key_pilot, (d,), 0, n)
+
+    bj = ref.pilot_scores(q, k, pilot_idx, mask)  # (d, n)
+
+    if uniform_sampling:
+        if mask is not None:
+            w = mask.astype(q.dtype)
+        else:
+            w = jnp.ones((n,), q.dtype)
+        probs = w / jnp.sum(w)
+    else:
+        probs = ref.pilot_probabilities(bj, v, mask)
+
+    sel_idx = _gumbel_topk_without_replacement(key_col, jnp.log(jnp.maximum(probs, _EPS)), d)
+
+    k_sel = k[sel_idx]
+    v_sel = v[sel_idx]
+    a_sel = ref.sampled_exp_scores(q, k_sel)
+    if mask is not None:
+        a_sel = a_sel * mask[sel_idx][None, :]
+
+    if row_norm == "adaptive":
+        if mask is not None:
+            v_total = jnp.sum(v * mask[:, None], axis=0)
+        else:
+            v_total = jnp.sum(v, axis=0)
+        v_unsel_sum = v_total - jnp.sum(v_sel, axis=0)
+        r = ref.skeinformer_assemble(a_sel, v_sel, v_unsel_sum, m - d)
+    elif row_norm == "simple":
+        row_sum = jnp.maximum(jnp.sum(a_sel, axis=1), _EPS)
+        r = (a_sel @ v_sel) / row_sum[:, None]
+    elif row_norm == "none":
+        # Unbiased AMM estimator: B S S^T V with S from Definition 3.1,
+        # realised as a probability-weighted sum over the sampled columns.
+        inv_dp = 1.0 / jnp.maximum(d * probs[sel_idx], _EPS)
+        # Rows of B are softmax rows; approximate them with the exp scores
+        # normalized by the *estimated* full row sum from the pilot columns.
+        est_row_sum = jnp.maximum(jnp.sum(a_sel * inv_dp[None, :], axis=1), _EPS)
+        r = ((a_sel * inv_dp[None, :]) @ v_sel) / est_row_sum[:, None]
+    else:
+        raise ValueError(f"unknown row_norm {row_norm!r}")
+
+    if psr:
+        r = r.at[pilot_idx].set(bj @ v)  # line 12
+    return r
+
+
+skein_uniform = functools.partial(skeinformer, uniform_sampling=True)
+skein_no_norm = functools.partial(skeinformer, row_norm="none")
+skein_simple_norm = functools.partial(skeinformer, row_norm="simple")
+skein_no_psr = functools.partial(skeinformer, psr=False)
+
+
+# ---------------------------------------------------------------------------
+# Informer (Zhou et al. 2020)
+# ---------------------------------------------------------------------------
+
+def informer(q, k, v, key, mask=None, *, d: int = 64, use_mask: bool = False):
+    """ProbSparse self-attention: only the top-u queries (by the sparsity
+    measurement M_i, estimated from sampled keys) attend exactly; the
+    remaining rows fall back to the mean of V (Informer's row fill).
+
+    ``use_mask=True`` is the paper's section-4.4 padding-aware variant.
+    """
+    n, p = q.shape
+    u = min(d, n)
+    key_s, _ = jax.random.split(key)
+    m_valid = mask if use_mask else None
+
+    # Sample O(log n)-scaled key subset to estimate M_i = max - mean proxy
+    # (the standard Informer implementation uses max-minus-mean of sampled
+    # scores as a cheap surrogate for the KL sparsity measurement).
+    n_sample = min(u, n)
+    if m_valid is not None:
+        logits = jnp.where(m_valid > 0, 0.0, -1e30)
+        samp = jax.random.categorical(key_s, logits, shape=(n_sample,))
+    else:
+        samp = jax.random.randint(key_s, (n_sample,), 0, n)
+    k_samp = k[samp]  # (s, p)
+    scores_samp = q @ k_samp.T / jnp.sqrt(jnp.asarray(p, q.dtype))  # (n, s)
+    if m_valid is not None:
+        col_ok = m_valid[samp]
+        scores_samp = jnp.where(col_ok[None, :] > 0, scores_samp, -1e30)
+    sparsity = jnp.max(scores_samp, axis=1) - jnp.mean(scores_samp, axis=1)
+    if m_valid is not None:
+        sparsity = jnp.where(m_valid > 0, sparsity, -1e30)
+
+    top_idx = jnp.argsort(jax.lax.stop_gradient(-sparsity))[:u]  # argsort, not lax.top_k (old XLA)
+    q_top = q[top_idx]
+    scores = q_top @ k.T / jnp.sqrt(jnp.asarray(p, q.dtype))  # (u, n)
+    probs = _masked_softmax(scores, m_valid)
+    exact = probs @ v  # (u, p)
+
+    # Row fill: mean of V (non-causal Informer uses cumulative/global mean).
+    mean_v = ref.vmean_attention(v, m_valid)
+    out = mean_v.at[top_idx].set(exact)
+    return out
+
+
+informer_mask = functools.partial(informer, use_mask=True)
+
+
+# ---------------------------------------------------------------------------
+# Linformer (Wang et al. 2020)
+# ---------------------------------------------------------------------------
+
+def linformer(q, k, v, key, mask=None, *, d: int = 64):
+    """Reduced JL form: softmax(Q (S^T K)^T / sqrt(p)) (S^T V).
+
+    S is a fresh (n, d) Gaussian sketch (E = F = S^T / sqrt(d)); the
+    published Linformer learns E, F, but the paper analyses exactly this
+    random-JL drop-in, which is what we reproduce.
+    """
+    n, p = q.shape
+    s = jax.random.normal(key, (n, d), q.dtype) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    if mask is not None:
+        s = s * mask[:, None]
+    k_proj = s.T @ k  # (d, p)
+    v_proj = s.T @ v  # (d, p)
+    scores = q @ k_proj.T / jnp.sqrt(jnp.asarray(p, q.dtype))
+    probs = _masked_softmax(scores, None)
+    return probs @ v_proj
+
+
+def linformer_jlt(q, k, v, key, mask=None, *, d: int = 64):
+    """Unreduced JLT: D^{-1} A S S^T V — the true sketching form Linformer
+    deviates from (computes the full attention, then sketches V)."""
+    n, p = q.shape
+    scores = q @ k.T / jnp.sqrt(jnp.asarray(p, q.dtype))
+    b = _masked_softmax(scores, mask)  # (n, n) = D^{-1} A
+    s = jax.random.normal(key, (n, d), q.dtype) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    if mask is not None:
+        s = s * mask[:, None]
+    return (b @ s) @ (s.T @ v)
+
+
+# ---------------------------------------------------------------------------
+# Performer (Choromanski et al. 2020)
+# ---------------------------------------------------------------------------
+
+def performer(q, k, v, key, mask=None, *, d: int = 64):
+    """FAVOR+ with positive softmax features:
+    phi(x) = exp(W x - ||x||^2 / 2) / sqrt(m)."""
+    n, p = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.sqrt(jnp.asarray(p, q.dtype)))
+    qs = q * scale
+    ks = k * scale
+    w = jax.random.normal(key, (d, p), q.dtype)  # unstructured ORF omitted
+
+    def phi(x):
+        proj = x @ w.T  # (n, d)
+        sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+        # subtract max for stability (standard FAVOR+ stabilisation)
+        z = proj - sq
+        z = z - jnp.max(z)
+        return jnp.exp(z) / jnp.sqrt(jnp.asarray(d, x.dtype))
+
+    qp = phi(qs)  # (n, d)
+    kp = phi(ks)  # (n, d)
+    if mask is not None:
+        kp = kp * mask[:, None]
+    kv = kp.T @ v  # (d, p)
+    normal = kp.T @ jnp.ones((n,), q.dtype)  # (d,)
+    out = qp @ kv
+    denom = jnp.maximum(qp @ normal, _EPS)
+    return out / denom[:, None]
+
+
+# ---------------------------------------------------------------------------
+# Nystromformer (Xiong et al. 2021)
+# ---------------------------------------------------------------------------
+
+def _newton_pinv(a, iters: int = 6):
+    """Iterative Moore-Penrose pseudo-inverse (the Nystromformer trick)."""
+    z = a.T / (jnp.max(jnp.sum(jnp.abs(a), axis=0)) * jnp.max(jnp.sum(jnp.abs(a), axis=1)) + _EPS)
+    ident = jnp.eye(a.shape[0], dtype=a.dtype)
+
+    def body(z, _):
+        az = a @ z
+        z = 0.25 * z @ (13.0 * ident - az @ (15.0 * ident - az @ (7.0 * ident - az)))
+        return z, None
+
+    z, _ = jax.lax.scan(body, z, None, length=iters)
+    return z
+
+
+def nystromformer(q, k, v, key=None, mask=None, *, d: int = 64):
+    """Nyström approximation with segment-mean landmarks."""
+    n, p = q.shape
+    m_land = min(d, n)
+    seg = n // m_land
+    scale = 1.0 / jnp.sqrt(jnp.asarray(p, q.dtype))
+    q_land = jnp.mean(q[: seg * m_land].reshape(m_land, seg, p), axis=1)
+    k_land = jnp.mean(k[: seg * m_land].reshape(m_land, seg, p), axis=1)
+
+    f1 = _masked_softmax(q @ k_land.T * scale, None)  # (n, m)
+    a2 = _masked_softmax(q_land @ k_land.T * scale, None)  # (m, m)
+    f3 = _masked_softmax(q_land @ k.T * scale, mask)  # (m, n)
+    return f1 @ (_newton_pinv(a2) @ (f3 @ v))
+
+
+# ---------------------------------------------------------------------------
+# BigBird (Zaheer et al. 2020) — masked-dense form
+# ---------------------------------------------------------------------------
+
+def bigbird(
+    q, k, v, key, mask=None, *, window: int = 3, n_global: int = 2, n_random: int = 3, block: int = 16
+):
+    """Random + window + global attention, realised as a sparse 0/1 pattern
+    applied to the dense score matrix.  At training length (n=128) the
+    masked-dense form is exact and simplest; the rust implementation uses
+    the block-sparse gather for the large-n benchmarks.
+    """
+    n, p = q.shape
+    nb = max(n // block, 1)
+    bi = jnp.arange(nb)
+    # window pattern over blocks
+    diff = jnp.abs(bi[:, None] - bi[None, :])
+    pat = diff <= (window // 2)
+    # global: first n_global blocks attend/are attended everywhere
+    g = bi < n_global
+    pat = pat | g[:, None] | g[None, :]
+    # random blocks per row (fixed by key — BigBird's random pattern)
+    rnd = jax.random.randint(key, (nb, n_random), 0, nb)
+    pat = pat | jnp.any(bi[None, None, :] == rnd[:, :, None], axis=1)
+    # expand block pattern to token level
+    tok_pat = jnp.repeat(jnp.repeat(pat, block, axis=0), block, axis=1)[:n, :n]
+
+    scores = q @ k.T / jnp.sqrt(jnp.asarray(p, q.dtype))
+    scores = jnp.where(tok_pat, scores, -1e30)
+    probs = _masked_softmax(scores, mask)
+    return probs @ v
+
+
+# ---------------------------------------------------------------------------
+# Reformer (Kitaev et al. 2020) — simplified single-round LSH
+# ---------------------------------------------------------------------------
+
+def reformer(q, k, v, key, mask=None, *, n_buckets: int = 8, chunk: int = 32):
+    """Single-round LSH attention with shared QK (Reformer ties Q=K).
+
+    Tokens are bucketed by random-rotation argmax, sorted by bucket, and
+    attend within fixed-size chunks plus the previous chunk — the standard
+    simplification of Reformer's scheme.
+    """
+    n, p = q.shape
+    qk = q  # Reformer shares QK; we take Q as the shared projection.
+    rot = jax.random.normal(key, (p, n_buckets // 2), q.dtype)
+    proj = qk @ rot  # (n, nb/2)
+    buckets = jnp.argmax(jnp.concatenate([proj, -proj], axis=-1), axis=-1)  # (n,)
+    order = jnp.argsort(buckets * (n + 1) + jnp.arange(n))  # stable by position
+    inv_order = jnp.argsort(order)
+
+    qs = qk[order].reshape(n // chunk, chunk, p)
+    vs = v[order].reshape(n // chunk, chunk, p)
+    bs = buckets[order].reshape(n // chunk, chunk)
+    ms = None if mask is None else mask[order].reshape(n // chunk, chunk)
+
+    # each chunk attends to itself and the previous chunk
+    k_prev = jnp.roll(qs, 1, axis=0)
+    v_prev = jnp.roll(vs, 1, axis=0)
+    b_prev = jnp.roll(bs, 1, axis=0)
+    k_cat = jnp.concatenate([qs, k_prev], axis=1)  # (nc, 2c, p)
+    v_cat = jnp.concatenate([vs, v_prev], axis=1)
+    b_cat = jnp.concatenate([bs, b_prev], axis=1)  # (nc, 2c)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(p, q.dtype))
+    scores = jnp.einsum("ncp,nmp->ncm", qs, k_cat) * scale
+    same_bucket = bs[:, :, None] == b_cat[:, None, :]
+    scores = jnp.where(same_bucket, scores, -1e30)
+    if ms is not None:
+        m_prev = jnp.roll(ms, 1, axis=0)
+        m_cat = jnp.concatenate([ms, m_prev], axis=1)
+        scores = jnp.where(m_cat[:, None, :] > 0, scores, -1e30)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores)
+    probs = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), _EPS)
+    out = jnp.einsum("ncm,nmp->ncp", probs, v_cat).reshape(n, p)
+    return out[inv_order]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+METHODS = {
+    "standard": functools.partial(standard, dropout=0.1),
+    "standard_nodrop": standard_nodrop,
+    "vmean": vmean,
+    "skeinformer": skeinformer,
+    "skein_uniform": skein_uniform,
+    "skein_no_norm": skein_no_norm,
+    "skein_simple_norm": skein_simple_norm,
+    "skein_no_psr": skein_no_psr,
+    "informer": informer,
+    "informer_mask": informer_mask,
+    "linformer": linformer,
+    "linformer_jlt": linformer_jlt,
+    "performer": performer,
+    "nystromformer": nystromformer,
+    "bigbird": bigbird,
+    "reformer": reformer,
+}
+
+
+def get_method(name: str):
+    try:
+        return METHODS[name]
+    except KeyError:
+        raise KeyError(f"unknown attention method {name!r}; known: {sorted(METHODS)}") from None

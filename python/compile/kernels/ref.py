@@ -1,0 +1,172 @@
+"""Pure-jnp reference oracles for the attention kernels.
+
+Everything in this file is the *ground truth* the Pallas kernels (and the
+rust implementations, transitively, through golden files) are validated
+against.  It mirrors Algorithm 1 of the paper step by step, with no fusion
+or tiling tricks, so each line can be read against the paper text.
+
+Shapes follow the paper's notation: Q, K, V are (n, p); the sketch size is
+``d`` (the paper's sub-sample size); ``J`` is the pilot index set and ``J'``
+the importance-sampled column set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "standard_attention",
+    "pilot_scores",
+    "pilot_probabilities",
+    "sampled_exp_scores",
+    "skeinformer_assemble",
+    "skeinformer_attention",
+    "vmean_attention",
+]
+
+
+def standard_attention(q, k, v, mask=None):
+    """Exact softmax attention: softmax(QK^T/sqrt(p)) V.
+
+    ``mask`` is an optional (n,) 0/1 float vector of valid (un-padded) key
+    positions; masked keys receive -inf score before the softmax, matching
+    the usual padding-mask convention.
+    """
+    p = q.shape[-1]
+    scores = q @ k.T / jnp.sqrt(jnp.asarray(p, q.dtype))
+    if mask is not None:
+        scores = jnp.where(mask[None, :] > 0, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return probs @ v
+
+
+def pilot_scores(q, k, pilot_idx, mask=None):
+    """Line 3 of Algorithm 1: B_J = softmax(Q_J K^T / sqrt(p)).
+
+    Returns the (d, n) row-stochastic pilot score matrix.  With a padding
+    mask, padded *columns* are zeroed after the softmax (section 4.4: the
+    columns belonging to the padded part are set to all zero so their
+    sampling probability vanishes).
+    """
+    p = q.shape[-1]
+    qj = q[pilot_idx]  # (d, p)
+    scores = qj @ k.T / jnp.sqrt(jnp.asarray(p, q.dtype))
+    if mask is not None:
+        scores = jnp.where(mask[None, :] > 0, scores, -jnp.inf)
+    bj = jax.nn.softmax(scores, axis=-1)
+    if mask is not None:
+        bj = bj * mask[None, :]
+    return bj
+
+
+def pilot_probabilities(bj, v, mask=None):
+    """Equation (5): p̂_i ∝ (Σ_k b_{j_k i}^2)^{1/2} · ||V_(i)||."""
+    col_norm = jnp.sqrt(jnp.sum(bj * bj, axis=0))  # (n,)
+    v_norm = jnp.sqrt(jnp.sum(v * v, axis=-1))  # (n,)
+    w = col_norm * v_norm
+    if mask is not None:
+        w = w * mask
+    total = jnp.sum(w)
+    # Guard against a fully-degenerate pilot (all-zero weights).
+    return jnp.where(total > 0, w / jnp.maximum(total, 1e-30), 1.0 / w.shape[0])
+
+
+def sampled_exp_scores(q, k_sel, mask_sel=None):
+    """Line 7 of Algorithm 1: A^{J'} = exp(Q K_{J'}^T / sqrt(p)).
+
+    ``mask_sel`` optionally zeroes out columns whose sampled index was
+    padding (defensive; the sampler never selects padded columns when the
+    probabilities are masked).
+    """
+    p = q.shape[-1]
+    # clip logits to ±30 before exp: f32 overflow guard (exp(30)·n ≈ 1e15
+    # stays finite); the pallas kernel applies the identical clip.
+    logits = jnp.clip(q @ k_sel.T / jnp.sqrt(jnp.asarray(p, q.dtype)), -30.0, 30.0)
+    a = jnp.exp(logits)
+    if mask_sel is not None:
+        a = a * mask_sel[None, :]
+    return a
+
+
+def skeinformer_assemble(a_sel, v_sel, v_unsel_sum, n_unsel):
+    """Lines 8-11 of Algorithm 1 (adaptive row normalization).
+
+    a_sel      : (n, d)  exp scores for the selected columns
+    v_sel      : (d, p)  selected value rows
+    v_unsel_sum: (p,)    1^T V over the *un-selected* rows (line 10's v)
+    n_unsel    : scalar  number of un-selected rows (n - d, or mask-aware)
+
+    Returns the intermediate output R (n, p) of line 11.
+    """
+    r_sel = a_sel @ v_sel  # (n, p), line 7's R_{J'}
+    # Line 8: g_i = geometric mean of the selected exp-scores in row i.
+    # Computed in log space for stability; a_sel > 0 by construction.
+    log_a = jnp.log(jnp.maximum(a_sel, 1e-30))
+    g = jnp.exp(jnp.mean(log_a, axis=1))  # (n,)
+    # Line 9: d_i = Σ_k a_{i j'_k} + (n - d) g_i
+    row_sum = jnp.sum(a_sel, axis=1) + n_unsel * g
+    # Line 11: R = diag(d)^{-1} (R_{J'} + g v^T)
+    r = (r_sel + g[:, None] * v_unsel_sum[None, :]) / row_sum[:, None]
+    return r
+
+
+def skeinformer_attention(q, k, v, d, key, mask=None):
+    """Full Algorithm 1 in plain jnp (the oracle for the fused kernel).
+
+    d    : sub-sample size (pilot size == column-sample size, as in the paper)
+    key  : jax PRNG key driving both sampling stages
+    mask : optional (n,) 0/1 float padding mask
+
+    Sampling without replacement (line 5) is realised with the Gumbel
+    top-k trick, which is exactly sampling-without-replacement for the
+    categorical distribution given by the probabilities.
+    """
+    n = q.shape[0]
+    key_pilot, key_col = jax.random.split(key)
+
+    if mask is not None:
+        m = jnp.maximum(jnp.sum(mask), 1.0)
+        # Pilot sampling restricted to the un-padded range (section 4.4).
+        logits = jnp.where(mask > 0, 0.0, -jnp.inf)
+        pilot_idx = jax.random.categorical(key_pilot, logits, shape=(d,))
+    else:
+        m = jnp.asarray(n, q.dtype)
+        pilot_idx = jax.random.randint(key_pilot, (d,), 0, n)
+
+    bj = pilot_scores(q, k, pilot_idx, mask)  # (d, n)
+    probs = pilot_probabilities(bj, v, mask)  # (n,)
+
+    # Gumbel top-k == weighted sampling without replacement (line 5).
+    gumbel = -jnp.log(-jnp.log(jax.random.uniform(key_col, (n,), minval=1e-20, maxval=1.0)))
+    # argsort instead of lax.top_k (see kernels/skeinformer.py note)
+    sel_idx = jnp.argsort(jax.lax.stop_gradient(-(jnp.log(jnp.maximum(probs, 1e-30)) + gumbel)))[:d]
+
+    k_sel = k[sel_idx]
+    v_sel = v[sel_idx]
+    a_sel = sampled_exp_scores(q, k_sel)
+
+    # Line 10: v = V_{(J')^C}^T 1 — total value mass minus the selected rows.
+    if mask is not None:
+        v_total = jnp.sum(v * mask[:, None], axis=0)
+    else:
+        v_total = jnp.sum(v, axis=0)
+    v_unsel_sum = v_total - jnp.sum(v_sel, axis=0)
+    n_unsel = m - d
+
+    r = skeinformer_assemble(a_sel, v_sel, v_unsel_sum, n_unsel)
+
+    # Line 12: pilot sampling reutilization — pilot rows get the exact output.
+    exact_rows = bj @ v  # (d, p)
+    r = r.at[pilot_idx].set(exact_rows)
+    return r
+
+
+def vmean_attention(v, mask=None):
+    """The rank-one "V-Mean" baseline: (1/n) 1 1^T V."""
+    if mask is not None:
+        m = jnp.maximum(jnp.sum(mask), 1.0)
+        mean = jnp.sum(v * mask[:, None], axis=0) / m
+    else:
+        mean = jnp.mean(v, axis=0)
+    return jnp.broadcast_to(mean[None, :], v.shape)

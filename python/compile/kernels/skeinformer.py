@@ -1,0 +1,179 @@
+"""Layer-1 Pallas kernels for Skeinformer (Algorithm 1 hot spots).
+
+Two kernels implement the compute-bound parts of Algorithm 1:
+
+* :func:`pilot_scores` — line 3: ``B_J = softmax(Q_J K^T / sqrt(p))``,
+  tiled over pilot rows; each grid step owns a ``(block_d, n)`` strip so
+  the row softmax is computed locally and numerically stably.
+* :func:`sampled_attention` — lines 7-11 fused: for a block of query rows
+  it computes the exp-scores against the ``d`` sampled keys, the partial
+  product ``R_{J'}``, the row-sum estimate with geometric-mean fill
+  (adaptive row normalization, Eq. 6) and the final normalized output in
+  one pass, so the ``(n, d)`` score strip never round-trips to HBM.
+
+TPU adaptation (see DESIGN.md §7): the sampled ``K_{J'}, V_{J'}`` blocks
+(d×p) are small enough to persist in VMEM across the whole grid, while the
+query rows stream through in MXU-shaped ``(block_n, p)`` tiles.  On CPU the
+kernels run with ``interpret=True`` — the only mode the CPU PJRT client can
+execute — and the same code lowers to Mosaic for a real TPU target.
+
+The index sampling itself (lines 1, 4-6) is O(n log d) control work, not
+MXU work, and deliberately stays in jnp (see ``ref.skeinformer_attention``
+and ``attention.py``), mirroring how the paper keeps the sampler on the
+host side of the GPU kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pilot_scores", "sampled_attention", "skeinformer_attention_kernelized"]
+
+# Interpret mode is mandatory on CPU PJRT (real-TPU lowering emits a Mosaic
+# custom-call the CPU plugin cannot run).  Kept as a module switch so a TPU
+# build can flip it off without touching call sites.
+INTERPRET = True
+
+
+def _pilot_kernel(qj_ref, k_ref, scale_ref, bj_ref):
+    """One (block_d, n) strip of B_J = softmax(Q_J K^T * scale)."""
+    qj = qj_ref[...].astype(jnp.float32)  # (block_d, p)
+    k = k_ref[...].astype(jnp.float32)  # (n, p)
+    scale = scale_ref[0]
+    scores = jax.lax.dot_general(
+        qj, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    scores = scores * scale
+    scores = scores - jnp.max(scores, axis=1, keepdims=True)
+    e = jnp.exp(scores)
+    bj = e / jnp.sum(e, axis=1, keepdims=True)
+    bj_ref[...] = bj.astype(bj_ref.dtype)
+
+
+def pilot_scores(qj, k, *, block_d: int = 8):
+    """B_J = softmax(Q_J K^T / sqrt(p)) as a Pallas kernel.
+
+    qj : (d, p) pilot query rows, k : (n, p).  Returns (d, n) float32.
+    """
+    d, p = qj.shape
+    n = k.shape[0]
+    block_d = min(block_d, d)
+    if d % block_d != 0:
+        raise ValueError(f"pilot size {d} not divisible by block_d {block_d}")
+    scale = jnp.full((1,), 1.0 / jnp.sqrt(p), jnp.float32)
+    return pl.pallas_call(
+        _pilot_kernel,
+        grid=(d // block_d,),
+        in_specs=[
+            pl.BlockSpec((block_d, p), lambda i: (i, 0)),
+            pl.BlockSpec((n, p), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_d, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, n), jnp.float32),
+        interpret=INTERPRET,
+    )(qj, k, scale)
+
+
+def _sampled_kernel(q_ref, ksel_ref, vsel_ref, vuns_ref, nuns_ref, scale_ref, r_ref):
+    """Fused lines 7-11 for one (block_n, p) strip of query rows.
+
+    a   = exp(q @ K_sel^T * scale)                     (block_n, d)
+    g   = exp(mean(log a, axis=1))                     geometric-mean fill
+    dhat= sum(a, 1) + n_unsel * g                      Eq. (6)
+    r   = (a @ V_sel + g * v_unsel_sum) / dhat         line 11
+    """
+    q = q_ref[...].astype(jnp.float32)  # (block_n, p)
+    ksel = ksel_ref[...].astype(jnp.float32)  # (d, p)
+    vsel = vsel_ref[...].astype(jnp.float32)  # (d, p)
+    vuns = vuns_ref[...].astype(jnp.float32)  # (1, p)
+    n_unsel = nuns_ref[0]
+    scale = scale_ref[0]
+
+    logits = jax.lax.dot_general(
+        q, ksel, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    logits = jnp.clip(logits * scale, -30.0, 30.0)  # (block_n, d); clip = overflow guard (matches ref)
+    a = jnp.exp(logits)
+    # log a == logits, so the geometric mean needs no log() call: one fewer
+    # transcendental per element than the naive exp(mean(log(exp(l)))).
+    g = jnp.exp(jnp.mean(logits, axis=1))  # (block_n,)
+    row_sum = jnp.sum(a, axis=1) + n_unsel * g
+    r_sel = jax.lax.dot_general(
+        a, vsel, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    r = (r_sel + g[:, None] * vuns) / row_sum[:, None]
+    r_ref[...] = r.astype(r_ref.dtype)
+
+
+def sampled_attention(q, k_sel, v_sel, v_unsel_sum, n_unsel, *, block_n: int = 128):
+    """Fused column-sampled attention with adaptive row normalization.
+
+    q           : (n, p) queries
+    k_sel, v_sel: (d, p) importance-sampled key/value rows
+    v_unsel_sum : (p,)   1^T V over the un-selected rows
+    n_unsel     : scalar (float) count of un-selected rows
+
+    Returns (n, p) float32 — R of line 11 (pilot reutilization, line 12, is
+    a cheap scatter applied by the caller).
+    """
+    n, p = q.shape
+    d = k_sel.shape[0]
+    block_n = min(block_n, n)
+    if n % block_n != 0:
+        raise ValueError(f"sequence length {n} not divisible by block_n {block_n}")
+    vuns = jnp.asarray(v_unsel_sum, jnp.float32).reshape(1, p)
+    nuns = jnp.asarray(n_unsel, jnp.float32).reshape(1)
+    scale = jnp.full((1,), 1.0 / jnp.sqrt(p), jnp.float32)
+    return pl.pallas_call(
+        _sampled_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((d, p), lambda i: (0, 0)),
+            pl.BlockSpec((d, p), lambda i: (0, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, p), jnp.float32),
+        interpret=INTERPRET,
+    )(q, k_sel, v_sel, vuns, nuns, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "block_n", "block_d"))
+def skeinformer_attention_kernelized(q, k, v, key, *, d: int, block_n: int = 128, block_d: int = 8):
+    """Full Algorithm 1 with the two Pallas kernels on the hot path.
+
+    Equivalent to ``ref.skeinformer_attention`` (same sampling trick and
+    PRNG layout) but with lines 3 and 7-11 executed by the fused kernels.
+    """
+    n = q.shape[0]
+    key_pilot, key_col = jax.random.split(key)
+    pilot_idx = jax.random.randint(key_pilot, (d,), 0, n)
+
+    bj = pilot_scores(q[pilot_idx], k, block_d=block_d)  # (d, n)
+
+    col_norm = jnp.sqrt(jnp.sum(bj * bj, axis=0))
+    v_norm = jnp.sqrt(jnp.sum(v * v, axis=-1))
+    w = col_norm * v_norm
+    probs = w / jnp.maximum(jnp.sum(w), 1e-30)
+
+    gumbel = -jnp.log(-jnp.log(jax.random.uniform(key_col, (n,), minval=1e-20, maxval=1.0)))
+    # argsort instead of lax.top_k: the topk HLO op postdates xla_extension
+    # 0.5.1's parser; sort round-trips through HLO text cleanly.
+    sel_idx = jnp.argsort(jax.lax.stop_gradient(-(jnp.log(jnp.maximum(probs, 1e-30)) + gumbel)))[:d]
+
+    k_sel = k[sel_idx]
+    v_sel = v[sel_idx]
+    v_unsel_sum = jnp.sum(v, axis=0) - jnp.sum(v_sel, axis=0)
+
+    r = sampled_attention(q, k_sel, v_sel, v_unsel_sum, float(n - d), block_n=block_n)
+    # Line 12: pilot sampling reutilization.
+    r = r.at[pilot_idx].set(bj @ v)
+    return r

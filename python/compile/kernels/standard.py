@@ -1,0 +1,64 @@
+"""Layer-1 Pallas kernel for the exact (standard) softmax attention baseline.
+
+Query rows stream through in ``(block_n, p)`` MXU tiles; each grid step
+computes its full score strip against K, takes a numerically-stable softmax
+and multiplies into V.  This is the O(n²) baseline every approximation in
+the paper is measured against, so it is kept deliberately simple — the
+``(block_n, n)`` strip is the quadratic object the paper's Figure 1 and
+Table 5 count.
+
+On a real TPU the K/V operands would be streamed block-wise with a running
+(max, sum) rescale (flash-attention style) to bound VMEM at large n; under
+``interpret=True`` the whole K/V is a single VMEM block, which is exact and
+adequate for the CPU correctness path (n ≤ 4096 → K,V ≤ 1 MiB each).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["standard_attention_kernel"]
+
+INTERPRET = True
+
+
+def _std_kernel(q_ref, k_ref, v_ref, scale_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)  # (block_n, p)
+    k = k_ref[...].astype(jnp.float32)  # (n, p)
+    v = v_ref[...].astype(jnp.float32)  # (n, p)
+    scale = scale_ref[0]
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    scores = scores * scale
+    scores = scores - jnp.max(scores, axis=1, keepdims=True)
+    e = jnp.exp(scores)
+    probs = e / jnp.sum(e, axis=1, keepdims=True)
+    o = jax.lax.dot_general(
+        probs, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def standard_attention_kernel(q, k, v, *, block_n: int = 128):
+    """Exact softmax(QK^T/sqrt(p))V with row-block tiling."""
+    n, p = q.shape
+    block_n = min(block_n, n)
+    if n % block_n != 0:
+        raise ValueError(f"sequence length {n} not divisible by block_n {block_n}")
+    scale = jnp.full((1,), 1.0 / jnp.sqrt(p), jnp.float32)
+    return pl.pallas_call(
+        _std_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((n, p), lambda i: (0, 0)),
+            pl.BlockSpec((n, p), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, p), jnp.float32),
+        interpret=INTERPRET,
+    )(q, k, v, scale)

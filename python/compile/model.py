@@ -1,0 +1,219 @@
+"""Layer-2 model: a 2-layer transformer encoder classifier in plain jax.
+
+This mirrors the paper's experimental model exactly (section 6.2): 2 layers,
+64 embedding dims, 128 FFN dims, 2 attention heads, mean pooling, with the
+self-attention module swapped per method via ``attention.METHODS``.
+
+Everything needed for training — forward, softmax cross-entropy, and a
+hand-written Adam (lr 1e-4, the paper's optimizer) — lives here so the whole
+train step lowers to a single HLO module with **no Python on the request
+path**.  Parameters travel as a flat, name-sorted list of arrays; the same
+ordering is recorded in the AOT manifest consumed by the rust runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 64
+    seq_len: int = 128
+    embed: int = 64
+    heads: int = 2
+    layers: int = 2
+    ffn: int = 128
+    classes: int = 10
+    method: str = "skeinformer"
+    # feature budget d: the paper uses 256 at n∈[1k,4k]; we scale it with n
+    # to keep d/n comparable (256/1024 -> 32/128 ... default 64 = n/2).
+    features: int = 64
+    batch: int = 32
+    lr: float = 1e-4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.embed % self.heads == 0
+        return self.embed // self.heads
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    """Glorot-ish init; returns a flat {name: array} dict."""
+    params: Dict[str, jnp.ndarray] = {}
+    k_iter = iter(jax.random.split(key, 6 + 12 * cfg.layers))
+
+    def dense(name, shape, scale=None):
+        if scale is None:
+            scale = 1.0 / jnp.sqrt(shape[0])
+        params[name] = jax.random.normal(next(k_iter), shape, jnp.float32) * scale
+
+    dense("embed/tok", (cfg.vocab, cfg.embed), 0.02)
+    dense("embed/pos", (cfg.seq_len, cfg.embed), 0.02)
+    for layer in range(cfg.layers):
+        pre = f"layer{layer}"
+        for nm in ("wq", "wk", "wv", "wo"):
+            dense(f"{pre}/attn/{nm}", (cfg.embed, cfg.embed))
+        params[f"{pre}/ln1/g"] = jnp.ones((cfg.embed,), jnp.float32)
+        params[f"{pre}/ln1/b"] = jnp.zeros((cfg.embed,), jnp.float32)
+        params[f"{pre}/ln2/g"] = jnp.ones((cfg.embed,), jnp.float32)
+        params[f"{pre}/ln2/b"] = jnp.zeros((cfg.embed,), jnp.float32)
+        dense(f"{pre}/ffn/w1", (cfg.embed, cfg.ffn))
+        params[f"{pre}/ffn/b1"] = jnp.zeros((cfg.ffn,), jnp.float32)
+        dense(f"{pre}/ffn/w2", (cfg.ffn, cfg.embed))
+        params[f"{pre}/ffn/b2"] = jnp.zeros((cfg.embed,), jnp.float32)
+    params["head/lnf/g"] = jnp.ones((cfg.embed,), jnp.float32)
+    params["head/lnf/b"] = jnp.zeros((cfg.embed,), jnp.float32)
+    dense("head/cls/w", (cfg.embed, cfg.classes))
+    params["head/cls/b"] = jnp.zeros((cfg.classes,), jnp.float32)
+    return params
+
+
+def param_order(params: Dict[str, jnp.ndarray]) -> List[str]:
+    """The canonical flatten order shared with the rust manifest."""
+    return sorted(params)
+
+
+def flatten(params: Dict[str, jnp.ndarray]) -> List[jnp.ndarray]:
+    return [params[k] for k in param_order(params)]
+
+
+def unflatten(names: List[str], arrays) -> Dict[str, jnp.ndarray]:
+    return dict(zip(names, arrays))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _multihead(cfg: ModelConfig, attn_fn, x, mask, key, wq, wk, wv, wo):
+    """x: (n, e).  Splits heads, applies attn_fn per head, merges."""
+    n = x.shape[0]
+    h, hd = cfg.heads, cfg.head_dim
+    q = (x @ wq).reshape(n, h, hd).transpose(1, 0, 2)  # (h, n, hd)
+    k = (x @ wk).reshape(n, h, hd).transpose(1, 0, 2)
+    v = (x @ wv).reshape(n, h, hd).transpose(1, 0, 2)
+    keys = jax.random.split(key, h)
+    out = jax.vmap(lambda qq, kk, vv, kk2: attn_fn(qq, kk, vv, kk2, mask))(q, k, v, keys)
+    out = out.transpose(1, 0, 2).reshape(n, cfg.embed)
+    return out @ wo
+
+
+def forward(cfg: ModelConfig, params: Dict[str, jnp.ndarray], tokens, mask, key):
+    """tokens: (B, n) int32, mask: (B, n) f32 → logits (B, classes).
+
+    The PRNG key drives the attention's sampling (and dropout for the
+    standard method); it is folded per example so every sequence in the
+    batch sees an independent sketch — matching how the paper's stochastic
+    approximations behave under batching.
+    """
+    method = attention.get_method(cfg.method)
+
+    def attn_fn(q, k, v, kk, m):
+        if cfg.method in ("standard", "standard_nodrop", "vmean"):
+            return method(q, k, v, kk, m)
+        if cfg.method in ("bigbird", "reformer"):
+            return method(q, k, v, kk, m)
+        return method(q, k, v, kk, m, d=cfg.features)
+
+    def encode_one(tok, m, kk):
+        x = params["embed/tok"][tok] + params["embed/pos"]
+        x = x * m[:, None]
+        for layer in range(cfg.layers):
+            pre = f"layer{layer}"
+            kk, k_attn = jax.random.split(kk)
+            h = _layer_norm(x, params[f"{pre}/ln1/g"], params[f"{pre}/ln1/b"])
+            h = _multihead(
+                cfg, attn_fn, h, m, k_attn,
+                params[f"{pre}/attn/wq"], params[f"{pre}/attn/wk"],
+                params[f"{pre}/attn/wv"], params[f"{pre}/attn/wo"],
+            )
+            x = x + h
+            h = _layer_norm(x, params[f"{pre}/ln2/g"], params[f"{pre}/ln2/b"])
+            h = jax.nn.gelu(h @ params[f"{pre}/ffn/w1"] + params[f"{pre}/ffn/b1"])
+            h = h @ params[f"{pre}/ffn/w2"] + params[f"{pre}/ffn/b2"]
+            x = x + h
+        x = _layer_norm(x, params["head/lnf/g"], params["head/lnf/b"])
+        # mean pooling over valid positions (the paper's pooling)
+        denom = jnp.maximum(jnp.sum(m), 1.0)
+        pooled = jnp.sum(x * m[:, None], axis=0) / denom
+        return pooled @ params["head/cls/w"] + params["head/cls/b"]
+
+    batch = tokens.shape[0]
+    keys = jax.random.split(key, batch)
+    return jax.vmap(encode_one)(tokens, mask, keys)
+
+
+# ---------------------------------------------------------------------------
+# loss / metrics / adam
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params, tokens, mask, labels, key):
+    logits = forward(cfg, params, tokens, mask, key)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).squeeze(-1)
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, acc
+
+
+def adam_update(cfg: ModelConfig, p, g, m, v, step, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / (1 - b1 ** step)
+    vhat = v / (1 - b2 ** step)
+    p = p - cfg.lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p, m, v
+
+
+def make_train_step(cfg: ModelConfig, names: List[str]):
+    """Returns train_step(flat_params, flat_m, flat_v, step, tokens, mask,
+    labels, seed) -> (flat_params', flat_m', flat_v', loss, acc).
+
+    ``step`` is a float32 scalar (Adam bias correction), ``seed`` an int32
+    scalar expanded to a PRNG key inside the graph, so the rust coordinator
+    only ever feeds plain scalars.
+    """
+
+    def train_step(flat_params, flat_m, flat_v, step, tokens, mask, labels, seed):
+        params = unflatten(names, flat_params)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), jnp.asarray(step, jnp.int32))
+        (loss, acc), grads = jax.value_and_grad(
+            lambda pr: loss_fn(cfg, pr, tokens, mask, labels, key), has_aux=True
+        )(params)
+        new_p, new_m, new_v = [], [], []
+        for name, p0, m0, v0 in zip(names, flat_params, flat_m, flat_v):
+            p1, m1, v1 = adam_update(cfg, p0, grads[name], m0, v0, step)
+            new_p.append(p1)
+            new_m.append(m1)
+            new_v.append(v1)
+        return tuple(new_p + new_m + new_v + [loss, acc])
+
+    return train_step
+
+
+def make_forward(cfg: ModelConfig, names: List[str]):
+    """Returns eval_fn(flat_params, tokens, mask, seed) -> (logits,)."""
+
+    def eval_step(flat_params, tokens, mask, seed):
+        params = unflatten(names, flat_params)
+        key = jax.random.PRNGKey(seed)
+        return (forward(cfg, params, tokens, mask, key),)
+
+    return eval_step

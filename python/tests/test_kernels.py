@@ -1,0 +1,169 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle in kernels/ref.py.
+
+hypothesis sweeps shapes/dtypes; every property is an exact-math identity
+(same sampling keys on both sides), so tolerances only absorb float
+reassociation from tiling.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.skeinformer import (
+    pilot_scores,
+    sampled_attention,
+    skeinformer_attention_kernelized,
+)
+from compile.kernels.standard import standard_attention_kernel
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_qkv(seed, n, p, dtype=jnp.float32, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (n, p), dtype) * scale
+    k = jax.random.normal(kk, (n, p), dtype) * scale
+    v = jax.random.normal(kv, (n, p), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# standard kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([64, 128, 256, 384]),
+    p=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**16),
+    scale=st.sampled_from([0.3, 1.0, 3.0]),
+)
+def test_standard_kernel_matches_ref(n, p, seed, scale):
+    q, k, v = make_qkv(seed, n, p, scale=scale)
+    got = standard_attention_kernel(q, k, v, block_n=64)
+    want = ref.standard_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_standard_kernel_bf16_inputs():
+    q, k, v = make_qkv(7, 128, 32, dtype=jnp.bfloat16)
+    got = standard_attention_kernel(q, k, v)
+    want = ref.standard_attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                                  v.astype(jnp.float32))
+    # bf16 inputs, f32 accumulate: tolerance is the bf16 mantissa.
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
+def test_standard_kernel_rejects_ragged():
+    q, k, v = make_qkv(0, 100, 16)
+    with pytest.raises(ValueError):
+        standard_attention_kernel(q, k, v, block_n=64)
+
+
+def test_standard_kernel_rows_convex():
+    """Each output row is a convex combination of V rows -> bounded by V."""
+    q, k, v = make_qkv(3, 128, 16)
+    out = standard_attention_kernel(q, k, v)
+    assert float(jnp.max(out)) <= float(jnp.max(v)) + 1e-5
+    assert float(jnp.min(out)) >= float(jnp.min(v)) - 1e-5
+
+
+# ---------------------------------------------------------------------------
+# pilot scores kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([64, 128, 256]),
+    p=st.sampled_from([16, 32]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_pilot_scores_matches_ref(n, p, d, seed):
+    q, k, _ = make_qkv(seed, n, p)
+    idx = jax.random.randint(jax.random.PRNGKey(seed + 1), (d,), 0, n)
+    got = pilot_scores(q[idx], k, block_d=8)
+    want = ref.pilot_scores(q, k, idx)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_pilot_scores_row_stochastic():
+    q, k, _ = make_qkv(11, 256, 32)
+    idx = jnp.arange(16)
+    bj = pilot_scores(q[idx], k)
+    np.testing.assert_allclose(jnp.sum(bj, axis=1), jnp.ones(16), rtol=1e-5)
+    assert float(jnp.min(bj)) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# fused sampled-attention kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([128, 256]),
+    p=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_sampled_attention_matches_assemble(n, p, d, seed):
+    q, k, v = make_qkv(seed, n, p)
+    idx = jax.random.permutation(jax.random.PRNGKey(seed + 2), n)[:d]
+    k_sel, v_sel = k[idx], v[idx]
+    v_unsel_sum = jnp.sum(v, axis=0) - jnp.sum(v_sel, axis=0)
+    got = sampled_attention(q, k_sel, v_sel, v_unsel_sum, float(n - d), block_n=64)
+    a_sel = ref.sampled_exp_scores(q, k_sel)
+    want = ref.skeinformer_assemble(a_sel, v_sel, v_unsel_sum, float(n - d))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_sampled_attention_block_invariance():
+    """Tiling must not change the numbers (pure data parallel over rows)."""
+    q, k, v = make_qkv(5, 256, 32)
+    idx = jnp.arange(32)
+    vu = jnp.sum(v[32:], axis=0)
+    a = sampled_attention(q, k[idx], v[idx], vu, 224.0, block_n=32)
+    b = sampled_attention(q, k[idx], v[idx], vu, 224.0, block_n=256)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end kernelized Algorithm 1
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_kernelized_skeinformer_matches_ref(seed):
+    n, p, d = 256, 32, 64
+    q, k, v = make_qkv(seed, n, p)
+    key = jax.random.PRNGKey(seed + 3)
+    got = skeinformer_attention_kernelized(q, k, v, key, d=d, block_n=64)
+    want = ref.skeinformer_attention(q, k, v, d, key)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+def test_kernelized_approximates_exact_attention():
+    """Approximation quality: with d = n/4 on peaked attention, skeinformer
+    must beat the rank-one V-Mean baseline (the paper's sanity ablation)."""
+    n, p, d = 256, 32, 64
+    q, k, v = make_qkv(21, n, p, scale=2.0)  # sharper attention rows
+    exact = ref.standard_attention(q, k, v)
+    errs = []
+    for s in range(8):
+        r = skeinformer_attention_kernelized(q, k, v, jax.random.PRNGKey(s), d=d)
+        errs.append(float(jnp.linalg.norm(r - exact, 2)))
+    vmean_err = float(jnp.linalg.norm(ref.vmean_attention(v) - exact, 2))
+    assert np.mean(errs) < vmean_err
+
+
+def test_kernelized_deterministic_given_key():
+    n, p, d = 128, 16, 32
+    q, k, v = make_qkv(2, n, p)
+    key = jax.random.PRNGKey(9)
+    a = skeinformer_attention_kernelized(q, k, v, key, d=d)
+    b = skeinformer_attention_kernelized(q, k, v, key, d=d)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

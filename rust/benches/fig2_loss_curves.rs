@@ -1,0 +1,72 @@
+//! E7 — Figure 2: validation loss vs training wall-clock time.
+//!
+//! Trains a set of methods on one task, recording the (seconds, val_loss)
+//! series at every evaluation, and writes `reports/figure2_<task>.csv`
+//! plus an ASCII sparkline so the convergence ordering is visible in the
+//! bench output.  Paper shape: the efficient methods reach the long-time
+//! limit in a fraction of Standard's wall-clock; Skeinformer finds equal
+//! or lower validation loss.
+
+use skeinformer::bench_util::write_csv;
+use skeinformer::config::ExperimentConfig;
+use skeinformer::coordinator::{run_sweep, Sweep};
+use skeinformer::report;
+
+fn sparkline(series: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if series.is_empty() {
+        return String::new();
+    }
+    let min = series.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = series.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (max - min).max(1e-9);
+    series
+        .iter()
+        .map(|x| BARS[(((x - min) / span) * 7.0).round() as usize])
+        .collect()
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/skeinformer_manifest.json").exists() {
+        eprintln!("fig2_loss_curves: artifacts/ missing — run `make artifacts`; skipping");
+        return;
+    }
+    let full = std::env::args().any(|a| a == "--full");
+    let methods: Vec<&str> = if full {
+        vec!["standard_nodrop", "vmean", "skeinformer", "skein_uniform", "informer",
+             "linformer", "performer", "nystromformer"]
+    } else {
+        vec!["standard_nodrop", "skeinformer", "linformer", "vmean"]
+    };
+    let task = std::env::args()
+        .skip_while(|a| a != "--task")
+        .nth(1)
+        .unwrap_or_else(|| "listops".into());
+
+    let mut base = ExperimentConfig::default();
+    base.train.max_steps = if full { 300 } else { 100 };
+    base.train.eval_every = 10;
+    base.train.patience = 30; // run to the step cap: we want the full curve
+    base.train.eval_examples = 128;
+
+    let sweep = Sweep::new(&methods, &[task.as_str()], base);
+    let outcomes = run_sweep(&sweep, true).expect("sweep");
+
+    println!("\n=== Figure 2: validation-loss curves ({task}) ===");
+    for o in &outcomes {
+        let losses: Vec<f64> = o.history.points().iter().map(|p| p.val_loss).collect();
+        println!(
+            "{:<18} {}  (final {:.3}, best {:.3}, {:.0}s)",
+            o.method,
+            sparkline(&losses),
+            losses.last().copied().unwrap_or(f64::NAN),
+            o.history.best_val_loss().unwrap_or(f64::NAN),
+            o.seconds
+        );
+    }
+
+    let (header, rows) = report::figure2_csv(&outcomes);
+    let path = format!("reports/figure2_{task}.csv");
+    write_csv(&path, &header, &rows).expect("csv");
+    println!("-> {path}");
+}

@@ -1,0 +1,92 @@
+//! §Perf — hot-path microbenchmarks for the optimization loop.
+//!
+//! Times the individual stages of the L3 skeinformer pipeline (pilot
+//! matmul+softmax, probability estimation, weighted sampling, sampled
+//! matmul+assemble) plus the core tensor kernels, so EXPERIMENTS.md §Perf
+//! can attribute end-to-end gains to specific stages.  Also times the
+//! PJRT execute round-trip when artifacts are present (the training-loop
+//! hot path).
+
+use skeinformer::attention::{AttentionMethod, Skeinformer};
+use skeinformer::bench_util::{bench, BenchConfig};
+use skeinformer::rng::Rng;
+use skeinformer::synth_qkv::{generate, QkvConfig};
+use skeinformer::tensor::{matmul, matmul_nt, softmax_rows, Matrix};
+
+fn main() {
+    let n = 2048;
+    let p = 64;
+    let d = 128;
+    let bcfg = BenchConfig { warmup_iters: 2, measure_iters: 8, max_seconds: 60.0 };
+
+    let mut rng = Rng::new(9);
+    let (q, k, v) = generate(&QkvConfig::pretrained(n, p), &mut rng);
+
+    // --- tensor kernels ---
+    let a = Matrix::from_fn(n, p, |i, j| ((i * 13 + j) % 7) as f32 * 0.1);
+    let b = Matrix::from_fn(p, n, |i, j| ((i + j * 3) % 5) as f32 * 0.1);
+    println!("{}", bench("matmul (n,p)x(p,n)", bcfg, || {
+        std::hint::black_box(matmul(&a, &b));
+    }).report_line());
+    println!("{}", bench("matmul_nt QK^T strip (n,p)x(d,p)", bcfg, || {
+        let kd = k.gather_rows(&(0..d).collect::<Vec<_>>());
+        std::hint::black_box(matmul_nt(&q, &kd));
+    }).report_line());
+    println!("{}", bench("softmax_rows (d,n)", bcfg, || {
+        let mut s = Matrix::from_fn(d, n, |i, j| ((i * j) % 11) as f32 * 0.2 - 1.0);
+        softmax_rows(&mut s);
+        std::hint::black_box(s);
+    }).report_line());
+
+    // --- skeinformer stages ---
+    let skein = Skeinformer::new(d);
+    println!("{}", bench("stage: pilot (lines 1-3)", bcfg, || {
+        let mut r = Rng::new(1);
+        std::hint::black_box(skein.pilot(&q, &k, None, &mut r));
+    }).report_line());
+    let (pilot_idx, bj) = skein.pilot(&q, &k, None, &mut Rng::new(1));
+    let _ = pilot_idx;
+    println!("{}", bench("stage: probabilities (eq. 5)", bcfg, || {
+        std::hint::black_box(Skeinformer::probabilities(&bj, &v, None));
+    }).report_line());
+    let weights = Skeinformer::probabilities(&bj, &v, None);
+    println!("{}", bench("stage: weighted sampling (line 5)", bcfg, || {
+        let mut r = Rng::new(2);
+        std::hint::black_box(r.weighted_without_replacement(&weights, d));
+    }).report_line());
+    println!("{}", bench("skeinformer end-to-end", bcfg, || {
+        let mut r = Rng::new(3);
+        std::hint::black_box(skein.compute(&q, &k, &v, None, &mut r));
+    }).report_line());
+    println!("{}", bench("standard end-to-end (reference)", bcfg, || {
+        std::hint::black_box(skeinformer::attention::Standard::exact(&q, &k, &v, None));
+    }).report_line());
+
+    // --- PJRT train-step round trip (the coordinator hot path) ---
+    if std::path::Path::new("artifacts/skeinformer_manifest.json").exists() {
+        use skeinformer::config::ExperimentConfig;
+        use skeinformer::data::Batcher;
+        use skeinformer::runtime::Runtime;
+        use skeinformer::train::TrainSession;
+        let rt = Runtime::cpu().expect("rt");
+        let cfg = ExperimentConfig::default();
+        let mut session = TrainSession::load(&rt, &cfg).expect("session");
+        let task = skeinformer::data::by_name("listops", session.seq_len()).unwrap();
+        let batcher = Batcher::new(task.as_ref(), session.batch(), session.seq_len());
+        let mut drng = Rng::new(4);
+        let batch = batcher.next_batch(&mut drng);
+        session.step(&batch).expect("warmup");
+        println!("{}", bench("PJRT train step (batch 32, skeinformer)", bcfg, || {
+            let b = batcher.next_batch(&mut drng);
+            session.step(&b).expect("step");
+        }).report_line());
+        println!("{}", bench("PJRT forward (batch 32)", bcfg, || {
+            std::hint::black_box(session.forward(&batch).expect("fwd"));
+        }).report_line());
+        println!("{}", bench("data: batcher.next_batch", bcfg, || {
+            std::hint::black_box(batcher.next_batch(&mut drng));
+        }).report_line());
+    } else {
+        eprintln!("(artifacts missing — skipping PJRT round-trip benches)");
+    }
+}

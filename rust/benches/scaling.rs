@@ -1,0 +1,69 @@
+//! E8 — §4.5 complexity claim: O(n log n) Skeinformer vs O(n²) Standard.
+//!
+//! Sweeps n ∈ {256 .. 4096} at fixed d and measures wall-clock of the
+//! pure-rust implementations.  Reports the empirical scaling exponent
+//! (log-log slope) per method and the skeinformer-vs-standard speedup at
+//! each n — the crossover shape the paper's complexity analysis predicts.
+
+use skeinformer::attention::by_name;
+use skeinformer::bench_util::{bench, write_csv, BenchConfig};
+use skeinformer::rng::Rng;
+use skeinformer::synth_qkv::{generate, QkvConfig};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: Vec<usize> =
+        if quick { vec![256, 512, 1024] } else { vec![256, 512, 1024, 2048, 4096] };
+    let d = 128;
+    let p = 64;
+    let bcfg = BenchConfig {
+        warmup_iters: 1,
+        measure_iters: if quick { 3 } else { 5 },
+        max_seconds: 90.0,
+    };
+
+    let methods = ["standard", "skeinformer", "informer", "linformer", "performer"];
+    let mut results: Vec<(String, usize, f64)> = Vec::new();
+    for &n in &sizes {
+        let mut rng = Rng::new(42);
+        let (q, k, v) = generate(&QkvConfig::pretrained(n, p), &mut rng);
+        for name in methods {
+            let method = by_name(name, d).unwrap();
+            let r = bench(&format!("{name}@n={n}"), bcfg, || {
+                std::hint::black_box(method.compute(&q, &k, &v, None, &mut Rng::new(1)));
+            });
+            println!("  {}", r.report_line());
+            results.push((name.to_string(), n, r.mean_ms));
+        }
+    }
+
+    println!("\nempirical scaling exponents (log2 time / log2 n):");
+    for name in methods {
+        let series: Vec<(usize, f64)> = results
+            .iter()
+            .filter(|(m, ..)| m == name)
+            .map(|(_, n, t)| (*n, *t))
+            .collect();
+        let first = series.first().unwrap();
+        let last = series.last().unwrap();
+        let slope = ((last.1 / first.1).log2()) / ((last.0 as f64 / first.0 as f64).log2());
+        println!("  {name:<14} exponent ≈ {slope:.2}");
+    }
+
+    println!("\nskeinformer speedup over standard:");
+    let mut csv = Vec::new();
+    for &n in &sizes {
+        let t = |m: &str| {
+            results
+                .iter()
+                .find(|(mm, nn, _)| mm == m && *nn == n)
+                .map(|(.., t)| *t)
+                .unwrap()
+        };
+        let speedup = t("standard") / t("skeinformer");
+        println!("  n={n:<6} {speedup:.2}x");
+        csv.push(format!("{n},{:.3},{:.3},{speedup:.3}", t("standard"), t("skeinformer")));
+    }
+    write_csv("reports/scaling.csv", "n,standard_ms,skeinformer_ms,speedup", &csv).expect("csv");
+    println!("-> reports/scaling.csv");
+}

@@ -1,0 +1,68 @@
+//! E2 — Table 1: classification accuracy on the synthetic LRA suite.
+//!
+//! Trains the 2-layer/64-dim/2-head transformer (the paper's experimental
+//! model) for every method × task through the AOT train-step artifacts and
+//! prints the Table-1-shaped accuracy grid plus the paper-vs-measured
+//! comparison.  Absolute numbers differ from the paper (synthetic tasks,
+//! CPU substrate — see DESIGN.md §4); the *orderings* are the
+//! reproduction target.
+//!
+//! Default is a bounded-budget run (subset of methods, 2 tasks, capped
+//! steps) so `cargo bench` completes in minutes; pass `--full` for all 16
+//! methods × 5 tasks.
+
+use skeinformer::bench_util::write_csv;
+use skeinformer::config::ExperimentConfig;
+use skeinformer::coordinator::{run_sweep, Sweep};
+use skeinformer::report;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    if !std::path::Path::new("artifacts/skeinformer_manifest.json").exists() {
+        eprintln!("table1_lra: artifacts/ missing — run `make artifacts` first; skipping");
+        return;
+    }
+
+    let methods: Vec<&str> = if full {
+        skeinformer::config::KNOWN_METHODS.to_vec()
+    } else {
+        vec!["standard_nodrop", "vmean", "skeinformer", "skein_uniform", "informer", "linformer"]
+    };
+    let tasks: Vec<&str> = if full {
+        skeinformer::data::TASK_NAMES.to_vec()
+    } else {
+        vec!["listops", "text"]
+    };
+
+    let mut base = ExperimentConfig::default();
+    base.train.max_steps = if full { 400 } else { 80 };
+    base.train.eval_every = 20;
+    base.train.patience = 6;
+    base.train.eval_examples = 128;
+
+    let sweep = Sweep::new(&methods, &tasks, base);
+    let outcomes = run_sweep(&sweep, true).expect("sweep failed");
+
+    println!("\n=== Table 1 (accuracy %, synthetic LRA) ===");
+    println!("{}", report::table1(&outcomes));
+    println!("=== Paper vs measured ===");
+    println!("{}", report::paper_vs_measured(&outcomes));
+
+    let rows: Vec<String> = outcomes
+        .iter()
+        .map(|o| {
+            format!(
+                "{},{},{},{:.4},{:.4},{:.1},{:.2}",
+                o.method, o.task, o.steps, o.best_accuracy, o.final_accuracy, o.seconds,
+                o.ms_per_step
+            )
+        })
+        .collect();
+    write_csv(
+        "reports/table1_lra.csv",
+        "method,task,steps,best_acc,final_acc,seconds,ms_per_step",
+        &rows,
+    )
+    .expect("write csv");
+    println!("-> reports/table1_lra.csv");
+}

@@ -1,0 +1,55 @@
+//! E4 — Table 3: total training steps and total wall-clock time to
+//! convergence (the early-stopping protocol), per method, on one task.
+//!
+//! Paper shape: Skeinformer's total time is a small fraction of
+//! Standard's (the "nearly 9× speedup on text classification" claim);
+//! the O(n²) methods (standard, unreduced JLT, informer) dominate the
+//! time column even when step counts are similar.
+
+use skeinformer::bench_util::write_csv;
+use skeinformer::config::ExperimentConfig;
+use skeinformer::coordinator::{run_sweep, Sweep};
+use skeinformer::report;
+
+fn main() {
+    if !std::path::Path::new("artifacts/skeinformer_manifest.json").exists() {
+        eprintln!("table3_convergence: artifacts/ missing — run `make artifacts`; skipping");
+        return;
+    }
+    let full = std::env::args().any(|a| a == "--full");
+    let methods: Vec<&str> = if full {
+        skeinformer::config::KNOWN_METHODS.to_vec()
+    } else {
+        vec!["standard_nodrop", "skeinformer", "linformer", "vmean"]
+    };
+
+    let mut base = ExperimentConfig::default();
+    base.train.max_steps = if full { 400 } else { 100 };
+    base.train.eval_every = 15;
+    base.train.patience = 5;
+    base.train.eval_examples = 128;
+
+    let sweep = Sweep::new(&methods, &["listops"], base);
+    let outcomes = run_sweep(&sweep, true).expect("sweep");
+
+    println!("\n=== Table 3 (total steps / total seconds to converge) ===");
+    println!("{}", report::table3(&outcomes));
+
+    // the headline relative-speedup check
+    let time_of = |m: &str| {
+        outcomes.iter().find(|o| o.method == m).map(|o| o.seconds)
+    };
+    if let (Some(std_t), Some(skein_t)) = (time_of("standard_nodrop"), time_of("skeinformer")) {
+        println!(
+            "standard/skeinformer total-time ratio: {:.2}x (paper: ~3.8x on ListOps at n=1k-4k)",
+            std_t / skein_t
+        );
+    }
+
+    let rows: Vec<String> = outcomes
+        .iter()
+        .map(|o| format!("{},{},{},{:.2}", o.method, o.task, o.steps, o.seconds))
+        .collect();
+    write_csv("reports/table3_convergence.csv", "method,task,steps,seconds", &rows).expect("csv");
+    println!("-> reports/table3_convergence.csv");
+}

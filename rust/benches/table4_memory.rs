@@ -1,0 +1,64 @@
+//! E5 — Table 4: actual batch size under the memory budget, with
+//! gradient-accumulation steps to reach each task's effective batch.
+//!
+//! Driven by the analytic activation-memory model (`flops.rs`) at the
+//! paper's scale (n = 1024, d = 256, p = 32, 16 GB device).  Paper shape
+//! to verify: Skeinformer / Linformer / V-Mean run the full effective
+//! batch (accu = 1-2); Standard and the unreduced JLT need 4-16×
+//! accumulation; the no-row-norm ablation is worse than the full method.
+
+use skeinformer::bench_util::{ascii_table, write_csv};
+use skeinformer::data::TASK_NAMES;
+use skeinformer::train::{
+    budget::{effective_batch, task_seq_len},
+    plan_batching,
+};
+
+fn main() {
+    let d = 256u64;
+    let p = 32u64;
+    let budget = 16u64 << 30; // 16 GB V100
+
+    println!("Table 4: actual batch size (bz) and accumulation (accu) under {}GB", budget >> 30);
+    let mut headers = vec!["Model".to_string()];
+    for t in TASK_NAMES {
+        headers.push(format!("{t}({}) bz", effective_batch(t)));
+        headers.push("accu".into());
+    }
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for method in skeinformer::config::KNOWN_METHODS {
+        let mut row = vec![method.to_string()];
+        let mut csv_row = method.to_string();
+        for task in TASK_NAMES {
+            let plan = plan_batching(method, task, task_seq_len(task), d, p, budget);
+            row.push(format!("{}", plan.actual_batch));
+            row.push(format!("{}", plan.accum_steps));
+            csv_row.push_str(&format!(",{},{}", plan.actual_batch, plan.accum_steps));
+        }
+        rows.push(row);
+        csv.push(csv_row);
+    }
+    println!("{}", ascii_table(&header_refs, &rows));
+
+    // shape checks against the paper's Table 4
+    let check = |m: &str, t: &str| plan_batching(m, t, task_seq_len(t), d, p, budget);
+    let skein = check("skeinformer", "text");
+    let std = check("standard", "text");
+    let jlt = check("linformer_jlt", "text");
+    println!(
+        "shape: skeinformer accu {} <= standard accu {} <= unreduced-JLT accu {}",
+        skein.accum_steps, std.accum_steps, jlt.accum_steps
+    );
+    assert!(skein.accum_steps <= std.accum_steps);
+    assert!(skein.actual_batch >= std.actual_batch);
+
+    let mut header = "method".to_string();
+    for t in TASK_NAMES {
+        header.push_str(&format!(",{t}_bz,{t}_accu"));
+    }
+    write_csv("reports/table4_memory.csv", &header, &csv).expect("csv");
+    println!("-> reports/table4_memory.csv");
+}

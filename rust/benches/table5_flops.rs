@@ -1,0 +1,79 @@
+//! E6 — Table 5: leading-term FLOPs of each attention method.
+//!
+//! Prints the symbolic leading terms exactly as the paper's Appendix A.2
+//! reports them (p = 32, d = 256), evaluates them at n ∈ {1024, 4096},
+//! and cross-checks the analytic model against *measured* wall-clock of
+//! the pure-rust implementations (time should scale like the FLOPs model:
+//! standard grows ~quadratically between the two n, the O(n log n) group
+//! ~linearly).
+
+use skeinformer::attention::{by_name, registry};
+use skeinformer::bench_util::{ascii_table, bench, write_csv, BenchConfig};
+use skeinformer::flops::{leading_flops, leading_flops_symbolic};
+use skeinformer::rng::Rng;
+use skeinformer::synth_qkv::{generate, QkvConfig};
+
+fn main() {
+    let d = 256u64;
+    let p = 32u64;
+
+    // --- the symbolic table, verbatim ---
+    let mut rows = Vec::new();
+    for m in ["standard", "bigbird", "performer", "nystromformer", "linformer", "informer",
+              "skeinformer"] {
+        rows.push(vec![
+            m.to_string(),
+            leading_flops_symbolic(m).unwrap().to_string(),
+            format!("{:.2}G", leading_flops(m, 1024, d, p).unwrap() as f64 / 1e9),
+            format!("{:.2}G", leading_flops(m, 4096, d, p).unwrap() as f64 / 1e9),
+        ]);
+    }
+    rows.push(vec!["reformer".into(), "input-dependent".into(), "-".into(), "-".into()]);
+    println!(
+        "=== Table 5 (leading FLOPs terms, p={p}, d={d}) ===\n{}",
+        ascii_table(&["Model", "Leading term", "n=1024", "n=4096"], &rows)
+    );
+
+    // --- measured scaling cross-check ---
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: [usize; 2] = if quick { [512, 1024] } else { [1024, 4096] };
+    println!("measured wall-clock of the rust implementations (d=256):");
+    let mut csv = Vec::new();
+    let bcfg = BenchConfig { warmup_iters: 1, measure_iters: if quick { 3 } else { 5 }, max_seconds: 60.0 };
+    for name in ["standard", "skeinformer", "informer", "linformer", "performer",
+                 "nystromformer", "bigbird"] {
+        let mut times = Vec::new();
+        for &n in &sizes {
+            let method = by_name(name, 256).unwrap();
+            let mut rng = Rng::new(5);
+            let (q, k, v) = generate(&QkvConfig::pretrained(n, p as usize), &mut rng);
+            let r = bench(&format!("{name}@n={n}"), bcfg, || {
+                let out = method.compute(&q, &k, &v, None, &mut Rng::new(1));
+                std::hint::black_box(out);
+            });
+            println!("  {}", r.report_line());
+            times.push(r.mean_ms);
+        }
+        let measured_ratio = times[1] / times[0].max(1e-9);
+        let model_ratio = leading_flops(name, sizes[1] as u64, d, p).unwrap() as f64
+            / leading_flops(name, sizes[0] as u64, d, p).unwrap() as f64;
+        println!(
+            "    time ratio n{}→n{}: measured {measured_ratio:.1}x, FLOPs model {model_ratio:.1}x",
+            sizes[0], sizes[1]
+        );
+        csv.push(format!(
+            "{name},{},{},{:.3},{:.3},{measured_ratio:.3},{model_ratio:.3}",
+            sizes[0], sizes[1], times[0], times[1]
+        ));
+    }
+    write_csv(
+        "reports/table5_flops.csv",
+        "method,n_small,n_large,ms_small,ms_large,measured_ratio,model_ratio",
+        &csv,
+    )
+    .expect("csv");
+    println!("-> reports/table5_flops.csv");
+
+    // also dump the full registry at d for completeness
+    let _ = registry(256);
+}

@@ -1,0 +1,216 @@
+//! Informer (Zhou et al. 2020) — ProbSparse attention, as analysed in §3.3:
+//! a deterministic variant of row sub-sampling sketching where the top-u
+//! queries under the sparsity measurement `M_i` attend exactly and the
+//! remaining rows fall back to the mean of V.
+//!
+//! The sparsity measurement is estimated from a uniformly-sampled subset of
+//! keys (max-minus-mean surrogate, the published implementation's choice).
+//! `with_padding_mask()` is the paper's §4.4 extension that makes Informer
+//! usable on padded NLP batches (Table 1's "Informer w/ padding mask").
+
+use super::{check_inputs, masking, AttentionMethod};
+use crate::rng::Rng;
+use crate::tensor::{matmul, matmul_nt, scale_inplace, softmax_rows, Matrix};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Informer {
+    /// Number of exactly-attended queries (the paper's feature budget).
+    pub u: usize,
+    /// §4.4 padding-mask handling.
+    pub padding_mask: bool,
+}
+
+impl Informer {
+    pub fn new(u: usize) -> Self {
+        Self { u, padding_mask: false }
+    }
+
+    pub fn with_padding_mask(mut self) -> Self {
+        self.padding_mask = true;
+        self
+    }
+
+    /// Estimate the sparsity measurement for every query from a sampled
+    /// key subset; returns (scores, sampled key indices).
+    fn sparsity_scores(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        mask: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Vec<f32> {
+        let n = q.rows();
+        let p = q.cols() as f32;
+        let s = self.u.min(n);
+        let valid = masking::valid_indices(mask, n);
+        let samp: Vec<usize> = (0..s).map(|_| valid[rng.below(valid.len())]).collect();
+        let k_samp = k.gather_rows(&samp);
+        let mut scores = matmul_nt(q, &k_samp); // (n, s)
+        scale_inplace(&mut scores, 1.0 / p.sqrt());
+        (0..n)
+            .map(|i| {
+                if let Some(m) = mask {
+                    if m[i] <= 0.0 {
+                        return f32::NEG_INFINITY;
+                    }
+                }
+                let row = scores.row(i);
+                let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let mean = row.iter().sum::<f32>() / row.len() as f32;
+                max - mean
+            })
+            .collect()
+    }
+}
+
+impl AttentionMethod for Informer {
+    fn name(&self) -> &'static str {
+        if self.padding_mask {
+            "informer_mask"
+        } else {
+            "informer"
+        }
+    }
+
+    fn compute(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        mask: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Matrix {
+        check_inputs(q, k, v, mask);
+        let n = q.rows();
+        let p = q.cols() as f32;
+        let u = self.u.min(n);
+        let eff_mask = if self.padding_mask { mask } else { None };
+
+        let sparsity = self.sparsity_scores(q, k, eff_mask, rng);
+        // top-u queries by sparsity measurement
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.select_nth_unstable_by(u.saturating_sub(1).min(n - 1), |&a, &b| {
+            sparsity[b].partial_cmp(&sparsity[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let top: Vec<usize> = idx[..u].to_vec();
+
+        // exact attention for the top queries
+        let q_top = q.gather_rows(&top);
+        let mut scores = matmul_nt(&q_top, k); // (u, n)
+        scale_inplace(&mut scores, 1.0 / p.sqrt());
+        masking::mask_score_columns(&mut scores, eff_mask);
+        softmax_rows(&mut scores);
+        let exact = matmul(&scores, v); // (u, p)
+
+        // remaining rows: mean of V (Informer's non-causal row fill)
+        let m = masking::valid_count(eff_mask, n);
+        let sums = masking::masked_col_sums(v, eff_mask);
+        let mean: Vec<f32> = sums.iter().map(|s| s / m).collect();
+        let mut out = Matrix::from_fn(n, v.cols(), |_, j| mean[j]);
+        for (row, &i) in top.iter().enumerate() {
+            out.set_row(i, exact.row(row));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Standard;
+
+    fn qkv(n: usize, p: usize, seed: u64, scale: f32) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let mut mk = |s: f32| {
+            let mut m = Matrix::zeros(n, p);
+            rng.fill_normal(m.data_mut());
+            scale_inplace(&mut m, s);
+            m
+        };
+        (mk(scale), mk(scale), mk(1.0))
+    }
+
+    #[test]
+    fn selected_rows_are_exact_others_are_mean() {
+        let (q, k, v) = qkv(48, 8, 1, 2.0);
+        let exact = Standard::exact(&q, &k, &v, None);
+        let out = Informer::new(12).compute(&q, &k, &v, None, &mut Rng::new(2));
+        let mean: Vec<f32> = (0..8)
+            .map(|j| (0..48).map(|i| v.get(i, j)).sum::<f32>() / 48.0)
+            .collect();
+        let mut n_exact = 0;
+        let mut n_mean = 0;
+        for i in 0..48 {
+            let is_exact =
+                (0..8).all(|j| (out.get(i, j) - exact.get(i, j)).abs() < 1e-3);
+            let is_mean = (0..8).all(|j| (out.get(i, j) - mean[j]).abs() < 1e-5);
+            assert!(is_exact || is_mean, "row {i} neither exact nor mean");
+            if is_mean {
+                n_mean += 1;
+            } else {
+                n_exact += 1;
+            }
+        }
+        assert!(n_exact >= 12 - 2, "too few exact rows: {n_exact}");
+        assert!(n_mean > 0);
+    }
+
+    #[test]
+    fn u_equals_n_recovers_standard() {
+        let (q, k, v) = qkv(24, 8, 3, 1.0);
+        let exact = Standard::exact(&q, &k, &v, None);
+        let out = Informer::new(24).compute(&q, &k, &v, None, &mut Rng::new(4));
+        assert!(out.max_abs_diff(&exact) < 1e-3);
+    }
+
+    #[test]
+    fn masked_variant_ignores_padding_content() {
+        let (q, k, v) = qkv(40, 8, 5, 1.0);
+        let mut mask = vec![1.0f32; 40];
+        for m in mask.iter_mut().skip(30) {
+            *m = 0.0;
+        }
+        let inf = Informer::new(10).with_padding_mask();
+        let a = inf.compute(&q, &k, &v, Some(&mask), &mut Rng::new(6));
+        let mut v2 = v.clone();
+        let mut k2 = k.clone();
+        for i in 30..40 {
+            for j in 0..8 {
+                v2.set(i, j, 1e4);
+                k2.set(i, j, 1e4);
+            }
+        }
+        let b = inf.compute(&q, &k2, &v2, Some(&mask), &mut Rng::new(6));
+        for i in 0..30 {
+            for j in 0..8 {
+                assert!((a.get(i, j) - b.get(i, j)).abs() < 1e-2, "row {i} leaked");
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_selects_peaked_queries() {
+        // Construct one query with a huge aligned key -> extreme sparsity;
+        // it must be among the selected (exact) rows.
+        let n = 32;
+        let p = 8;
+        let mut q = Matrix::zeros(n, p);
+        let mut k = Matrix::zeros(n, p);
+        let mut rng = Rng::new(7);
+        q.data_mut().iter_mut().for_each(|x| *x = rng.normal() * 0.1);
+        k.data_mut().iter_mut().for_each(|x| *x = rng.normal() * 0.1);
+        for j in 0..p {
+            q.set(5, j, 10.0);
+            k.set(9, j, 10.0);
+        }
+        let v = Matrix::from_fn(n, p, |i, j| ((i * p + j) as f32 * 0.05).sin());
+        let exact = Standard::exact(&q, &k, &v, None);
+        let out = Informer::new(4).compute(&q, &k, &v, None, &mut Rng::new(8));
+        for j in 0..p {
+            assert!(
+                (out.get(5, j) - exact.get(5, j)).abs() < 1e-3,
+                "peaked query row not selected"
+            );
+        }
+    }
+}

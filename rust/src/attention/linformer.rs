@@ -1,0 +1,192 @@
+//! Linformer (Wang et al. 2020) — JL-sketch attention, in both forms the
+//! paper analyses (§3.3):
+//!
+//! * [`Linformer`] — the *reduced* form the published model ships:
+//!   `softmax(Q (SᵀK)ᵀ / √p) (SᵀV)` — sketch first, softmax after, which
+//!   "deviates from the usual sketching form for efficiency".
+//! * [`LinformerUnreducedJlt`] — the true sketching form `D⁻¹ A S Sᵀ V`
+//!   (Table 1's "w/ unreduced JLT"): compute the full attention, then
+//!   sketch V.  O(n²) — it exists to *measure* what the reduction costs.
+
+use super::{check_inputs, masking, AttentionMethod};
+use crate::rng::Rng;
+use crate::tensor::{matmul, matmul_nt, matmul_tn, scale_inplace, softmax_rows, Matrix};
+
+/// Draw an (n, d) Gaussian sketch `S` with `E[S Sᵀ] = I` (entries
+/// N(0, 1/d)); masked rows are zeroed so padding carries no mass.
+fn gaussian_sketch(n: usize, d: usize, mask: Option<&[f32]>, rng: &mut Rng) -> Matrix {
+    let std = 1.0 / (d as f32).sqrt();
+    let mut s = Matrix::zeros(n, d);
+    for i in 0..n {
+        let keep = mask.map_or(1.0, |m| m[i]);
+        if keep > 0.0 {
+            for x in s.row_mut(i) {
+                *x = rng.normal() * std;
+            }
+        }
+    }
+    s
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Linformer {
+    pub d: usize,
+}
+
+impl Linformer {
+    pub fn new(d: usize) -> Self {
+        Self { d }
+    }
+}
+
+impl AttentionMethod for Linformer {
+    fn name(&self) -> &'static str {
+        "linformer"
+    }
+
+    fn compute(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        mask: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Matrix {
+        check_inputs(q, k, v, mask);
+        let p = q.cols() as f32;
+        let s = gaussian_sketch(k.rows(), self.d, mask, rng);
+        let k_proj = matmul_tn(&s, k); // (d, p)
+        let v_proj = matmul_tn(&s, v); // (d, p)
+        let mut scores = matmul_nt(q, &k_proj); // (n, d)
+        scale_inplace(&mut scores, 1.0 / p.sqrt());
+        softmax_rows(&mut scores);
+        matmul(&scores, &v_proj)
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct LinformerUnreducedJlt {
+    pub d: usize,
+}
+
+impl LinformerUnreducedJlt {
+    pub fn new(d: usize) -> Self {
+        Self { d }
+    }
+}
+
+impl AttentionMethod for LinformerUnreducedJlt {
+    fn name(&self) -> &'static str {
+        "linformer_jlt"
+    }
+
+    fn compute(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        mask: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Matrix {
+        check_inputs(q, k, v, mask);
+        let p = q.cols() as f32;
+        // full attention score matrix B = D⁻¹A (this form is O(n²) by design)
+        let mut b = matmul_nt(q, k);
+        scale_inplace(&mut b, 1.0 / p.sqrt());
+        masking::mask_score_columns(&mut b, mask);
+        softmax_rows(&mut b);
+        let s = gaussian_sketch(k.rows(), self.d, mask, rng);
+        let bs = matmul(&b, &s); // (n, d)
+        let sv = matmul_tn(&s, v); // (d, p)
+        matmul(&bs, &sv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Standard;
+    use crate::tensor::spectral_norm_diff;
+
+    fn qkv(n: usize, p: usize, seed: u64, scale: f32) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let mut mk = |s: f32| {
+            let mut m = Matrix::zeros(n, p);
+            rng.fill_normal(m.data_mut());
+            scale_inplace(&mut m, s);
+            m
+        };
+        (mk(scale), mk(scale), mk(1.0))
+    }
+
+    #[test]
+    fn sketch_is_approximately_isometric() {
+        // E[S Sᵀ] = I  ⇒  ‖Sᵀx‖ ≈ ‖x‖ for fixed x, averaged over draws.
+        let mut rng = Rng::new(1);
+        let n = 128;
+        let x: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.1).sin()).collect();
+        let xn: f32 = x.iter().map(|a| a * a).sum::<f32>();
+        let mut est = 0.0f32;
+        let trials = 64;
+        for _ in 0..trials {
+            let s = gaussian_sketch(n, 64, None, &mut rng);
+            let xm = Matrix::from_vec(1, n, x.clone());
+            let proj = matmul(&xm, &s);
+            est += proj.data().iter().map(|a| a * a).sum::<f32>();
+        }
+        est /= trials as f32;
+        assert!((est / xn - 1.0).abs() < 0.15, "ratio {}", est / xn);
+    }
+
+    #[test]
+    fn unreduced_jlt_converges_with_d() {
+        let (q, k, v) = qkv(96, 8, 2, 1.5);
+        let exact = Standard::exact(&q, &k, &v, None);
+        let mean_err = |d: usize| {
+            let jl = LinformerUnreducedJlt::new(d);
+            (0..8)
+                .map(|s| {
+                    spectral_norm_diff(
+                        &jl.compute(&q, &k, &v, None, &mut Rng::new(100 + s)),
+                        &exact,
+                    )
+                })
+                .sum::<f32>()
+                / 8.0
+        };
+        let e8 = mean_err(8);
+        let e64 = mean_err(64);
+        assert!(e64 < e8, "err d=8 {e8} vs d=64 {e64}");
+    }
+
+    #[test]
+    fn unreduced_beats_reduced_on_peaked_inputs() {
+        // The paper's observation: the reduced form trades accuracy.
+        let (q, k, v) = qkv(96, 8, 3, 2.0);
+        let exact = Standard::exact(&q, &k, &v, None);
+        let avg = |f: &dyn AttentionMethod| {
+            (0..10)
+                .map(|s| {
+                    spectral_norm_diff(
+                        &f.compute(&q, &k, &v, None, &mut Rng::new(200 + s)),
+                        &exact,
+                    )
+                })
+                .sum::<f32>()
+                / 10.0
+        };
+        let red = avg(&Linformer::new(24));
+        let unred = avg(&LinformerUnreducedJlt::new(24));
+        assert!(unred < red, "unreduced {unred} vs reduced {red}");
+    }
+
+    #[test]
+    fn masked_rows_carry_no_sketch_mass() {
+        let mut rng = Rng::new(4);
+        let mask = [1.0, 1.0, 0.0, 0.0];
+        let s = gaussian_sketch(4, 8, Some(&mask), &mut rng);
+        assert!(s.row(2).iter().all(|x| *x == 0.0));
+        assert!(s.row(3).iter().all(|x| *x == 0.0));
+        assert!(s.row(0).iter().any(|x| *x != 0.0));
+    }
+}

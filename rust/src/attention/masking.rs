@@ -1,0 +1,120 @@
+//! Padding-mask helpers shared by the attention implementations (§4.4).
+//!
+//! A mask is a length-n slice of 0.0/1.0 weights over key positions.  The
+//! helpers keep the convention in one place: masked keys get `-inf` scores
+//! before a softmax, zeroed columns after it, and are excluded from
+//! sampling probabilities.
+
+use crate::tensor::Matrix;
+
+/// Number of valid (un-padded) positions; at least 1 to avoid div-by-zero.
+pub fn valid_count(mask: Option<&[f32]>, n: usize) -> f32 {
+    match mask {
+        None => n as f32,
+        Some(m) => m.iter().filter(|x| **x > 0.0).count().max(1) as f32,
+    }
+}
+
+/// Indices of valid positions (all of `0..n` when unmasked).
+pub fn valid_indices(mask: Option<&[f32]>, n: usize) -> Vec<usize> {
+    match mask {
+        None => (0..n).collect(),
+        Some(m) => (0..n).filter(|&i| m[i] > 0.0).collect(),
+    }
+}
+
+/// Apply `-1e30` to masked-key columns of a raw score matrix, in place.
+pub fn mask_score_columns(scores: &mut Matrix, mask: Option<&[f32]>) {
+    let Some(m) = mask else { return };
+    assert_eq!(m.len(), scores.cols());
+    for i in 0..scores.rows() {
+        let row = scores.row_mut(i);
+        for (x, &w) in row.iter_mut().zip(m) {
+            if w <= 0.0 {
+                *x = -1e30;
+            }
+        }
+    }
+}
+
+/// Zero masked columns of a (row-stochastic) matrix, in place — the §4.4
+/// trick that makes padded columns unsampleable.
+pub fn zero_masked_columns(probs: &mut Matrix, mask: Option<&[f32]>) {
+    let Some(m) = mask else { return };
+    assert_eq!(m.len(), probs.cols());
+    for i in 0..probs.rows() {
+        let row = probs.row_mut(i);
+        for (x, &w) in row.iter_mut().zip(m) {
+            if w <= 0.0 {
+                *x = 0.0;
+            }
+        }
+    }
+}
+
+/// Zero out per-index weights at masked positions.
+pub fn mask_weights(weights: &mut [f32], mask: Option<&[f32]>) {
+    let Some(m) = mask else { return };
+    assert_eq!(m.len(), weights.len());
+    for (w, &keep) in weights.iter_mut().zip(m) {
+        if keep <= 0.0 {
+            *w = 0.0;
+        }
+    }
+}
+
+/// Column sums of V restricted to valid rows: `1ᵀ V` over the mask.
+pub fn masked_col_sums(v: &Matrix, mask: Option<&[f32]>) -> Vec<f32> {
+    let mut out = vec![0.0f32; v.cols()];
+    for i in 0..v.rows() {
+        let keep = mask.map_or(1.0, |m| m[i]);
+        if keep > 0.0 {
+            for (o, &x) in out.iter_mut().zip(v.row(i)) {
+                *o += x;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_count_and_indices() {
+        let mask = [1.0, 0.0, 1.0, 1.0];
+        assert_eq!(valid_count(Some(&mask), 4), 3.0);
+        assert_eq!(valid_indices(Some(&mask), 4), vec![0, 2, 3]);
+        assert_eq!(valid_count(None, 4), 4.0);
+        assert_eq!(valid_indices(None, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn fully_masked_count_clamps_to_one() {
+        let mask = [0.0; 4];
+        assert_eq!(valid_count(Some(&mask), 4), 1.0);
+    }
+
+    #[test]
+    fn score_and_prob_masking() {
+        let mask = [1.0, 0.0];
+        let mut s = Matrix::full(2, 2, 1.0);
+        mask_score_columns(&mut s, Some(&mask));
+        assert_eq!(s.get(0, 0), 1.0);
+        assert!(s.get(0, 1) < -1e29);
+
+        let mut p = Matrix::full(2, 2, 0.5);
+        zero_masked_columns(&mut p, Some(&mask));
+        assert_eq!(p.get(1, 1), 0.0);
+        assert_eq!(p.get(1, 0), 0.5);
+    }
+
+    #[test]
+    fn masked_col_sums_skips_padded_rows() {
+        let v = Matrix::from_rows(&[vec![1.0, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]]);
+        let mask = [1.0, 0.0, 1.0];
+        assert_eq!(masked_col_sums(&v, Some(&mask)), vec![101.0, 202.0]);
+        assert_eq!(masked_col_sums(&v, None), vec![111.0, 222.0]);
+    }
+}

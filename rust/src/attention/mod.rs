@@ -1,0 +1,174 @@
+//! Pure-rust implementations of every attention method in the paper.
+//!
+//! These power the Figure-1 approximation study, the scaling benches
+//! (E8), the property suites, and the serving example's CPU fallback.
+//! Each file implements one method; all share the [`AttentionMethod`]
+//! interface:
+//!
+//! ```
+//! use skeinformer::attention::{AttentionMethod, Standard};
+//! use skeinformer::tensor::Matrix;
+//! use skeinformer::rng::Rng;
+//!
+//! let n = 64;
+//! let q = Matrix::from_fn(n, 16, |i, j| ((i + j) as f32 * 0.1).sin());
+//! let out = Standard.compute(&q, &q, &q, None, &mut Rng::new(0));
+//! assert_eq!(out.shape(), (n, 16));
+//! ```
+//!
+//! Methods are registered by the same names the python layer uses
+//! (`attention.METHODS`), so experiment configs work across layers.
+
+mod bigbird;
+mod informer;
+mod linformer;
+pub mod masking;
+mod nystromformer;
+mod performer;
+mod reformer;
+mod skeinformer;
+mod standard;
+mod vmean;
+
+pub use bigbird::BigBird;
+pub use informer::Informer;
+pub use linformer::{Linformer, LinformerUnreducedJlt};
+pub use nystromformer::Nystromformer;
+pub use performer::Performer;
+pub use reformer::Reformer;
+pub use skeinformer::{RowNorm, Skeinformer};
+pub use standard::Standard;
+pub use vmean::VMean;
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// A drop-in self-attention approximation: given Q, K, V (all `n×p`) and an
+/// optional padding mask (length-n 0/1 weights), produce the `n×p` output.
+///
+/// Implementations draw any sampling randomness from the supplied [`Rng`],
+/// so a fixed seed reproduces a run exactly (the discipline the AOT
+/// artifacts follow with their `seed` input).
+pub trait AttentionMethod: Sync {
+    /// Registry name (matches `python/compile/attention.py`).
+    fn name(&self) -> &'static str;
+
+    /// Compute the (approximate) attention output.
+    fn compute(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        mask: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Matrix;
+
+    /// Whether the method is exact (no approximation error).
+    fn is_exact(&self) -> bool {
+        false
+    }
+}
+
+/// Validate the shared preconditions; every implementation calls this.
+pub(crate) fn check_inputs(q: &Matrix, k: &Matrix, v: &Matrix, mask: Option<&[f32]>) {
+    assert_eq!(q.cols(), k.cols(), "Q/K head dims differ");
+    assert_eq!(k.rows(), v.rows(), "K/V lengths differ");
+    assert_eq!(q.rows(), k.rows(), "self-attention requires square n");
+    if let Some(m) = mask {
+        assert_eq!(m.len(), k.rows(), "mask length mismatch");
+    }
+}
+
+/// Build every method at a given feature budget `d` — the registry used by
+/// the Figure-1 bench and the CLI. Order matches the paper's Table 1 rows.
+pub fn registry(d: usize) -> Vec<Box<dyn AttentionMethod>> {
+    vec![
+        Box::new(Standard),
+        Box::new(VMean),
+        Box::new(Skeinformer::new(d)),
+        Box::new(Skeinformer::new(d).uniform_sampling()),
+        Box::new(Skeinformer::new(d).row_norm(RowNorm::None)),
+        Box::new(Skeinformer::new(d).row_norm(RowNorm::Simple)),
+        Box::new(Skeinformer::new(d).without_psr()),
+        Box::new(Informer::new(d)),
+        Box::new(Informer::new(d).with_padding_mask()),
+        Box::new(Linformer::new(d)),
+        Box::new(LinformerUnreducedJlt::new(d)),
+        Box::new(Performer::new(d)),
+        Box::new(Nystromformer::new(d)),
+        Box::new(BigBird::default()),
+        Box::new(Reformer::default()),
+    ]
+}
+
+/// Look a method up by registry name.
+pub fn by_name(name: &str, d: usize) -> Option<Box<dyn AttentionMethod>> {
+    registry(d).into_iter().find(|m| m.name() == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> (Matrix, Matrix, Matrix) {
+        let n = 64;
+        let p = 16;
+        let q = Matrix::from_fn(n, p, |i, j| ((i * 3 + j) as f32 * 0.13).sin());
+        let k = Matrix::from_fn(n, p, |i, j| ((i + j * 5) as f32 * 0.07).cos());
+        let v = Matrix::from_fn(n, p, |i, j| ((i * j) as f32 * 0.01).tanh());
+        (q, k, v)
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_complete() {
+        let reg = registry(16);
+        let names: std::collections::HashSet<_> = reg.iter().map(|m| m.name()).collect();
+        assert_eq!(names.len(), reg.len(), "duplicate names");
+        for expect in [
+            "standard",
+            "vmean",
+            "skeinformer",
+            "skein_uniform",
+            "skein_no_norm",
+            "skein_simple_norm",
+            "skein_no_psr",
+            "informer",
+            "informer_mask",
+            "linformer",
+            "linformer_jlt",
+            "performer",
+            "nystromformer",
+            "bigbird",
+            "reformer",
+        ] {
+            assert!(names.contains(expect), "missing {expect}");
+        }
+    }
+
+    #[test]
+    fn every_method_produces_finite_output_of_right_shape() {
+        let (q, k, v) = toy();
+        for m in registry(16) {
+            let mut rng = Rng::new(1);
+            let out = m.compute(&q, &k, &v, None, &mut rng);
+            assert_eq!(out.shape(), v.shape(), "{}", m.name());
+            assert!(out.all_finite(), "{} produced non-finite values", m.name());
+        }
+    }
+
+    #[test]
+    fn every_method_is_deterministic_given_seed() {
+        let (q, k, v) = toy();
+        for m in registry(16) {
+            let a = m.compute(&q, &k, &v, None, &mut Rng::new(33));
+            let b = m.compute(&q, &k, &v, None, &mut Rng::new(33));
+            assert_eq!(a.max_abs_diff(&b), 0.0, "{} not deterministic", m.name());
+        }
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        assert!(by_name("skeinformer", 8).is_some());
+        assert!(by_name("nope", 8).is_none());
+    }
+}

@@ -1,0 +1,182 @@
+//! Nyströmformer (Xiong et al. 2021) — landmark-based Nyström approximation
+//! of the softmax score matrix:
+//!
+//! `B ≈ softmax(Q K̃ᵀ/√p) · pinv(softmax(Q̃ K̃ᵀ/√p)) · softmax(Q̃ Kᵀ/√p)`
+//!
+//! with landmarks Q̃, K̃ from segment means and the pseudo-inverse computed
+//! by the same Newton–Schulz iteration the published model uses.
+
+use super::{check_inputs, masking, AttentionMethod};
+use crate::rng::Rng;
+use crate::tensor::{matmul, matmul_nt, scale_inplace, softmax_rows, Matrix};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Nystromformer {
+    /// Number of landmarks.
+    pub landmarks: usize,
+    /// Newton–Schulz iterations for the pseudo-inverse.
+    pub pinv_iters: usize,
+}
+
+impl Nystromformer {
+    pub fn new(landmarks: usize) -> Self {
+        Self { landmarks, pinv_iters: 6 }
+    }
+
+    /// Segment-mean landmarks: average consecutive chunks of rows.
+    fn segment_means(x: &Matrix, m: usize) -> Matrix {
+        let n = x.rows();
+        let m = m.min(n);
+        let seg = n / m;
+        let mut out = Matrix::zeros(m, x.cols());
+        for s in 0..m {
+            let start = s * seg;
+            let end = if s == m - 1 { n } else { start + seg };
+            let count = (end - start) as f32;
+            for i in start..end {
+                for (o, &v) in out.row_mut(s).iter_mut().zip(x.row(i)) {
+                    *o += v;
+                }
+            }
+            out.row_mut(s).iter_mut().for_each(|v| *v /= count);
+        }
+        out
+    }
+
+    /// Newton–Schulz pseudo-inverse (the published Nystromformer recipe):
+    /// `Z₀ = Aᵀ / (‖A‖₁ ‖A‖∞)`, then
+    /// `Z ← ¼ Z (13 I − A Z (15 I − A Z (7 I − A Z)))`.
+    pub fn newton_pinv(a: &Matrix, iters: usize) -> Matrix {
+        let n = a.rows();
+        assert_eq!(n, a.cols(), "pinv expects square");
+        let norm1 = (0..n)
+            .map(|j| (0..n).map(|i| a.get(i, j).abs()).sum::<f32>())
+            .fold(0.0f32, f32::max);
+        let norminf = (0..n)
+            .map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f32>())
+            .fold(0.0f32, f32::max);
+        let mut z = a.transpose();
+        scale_inplace(&mut z, 1.0 / (norm1 * norminf).max(1e-30));
+        let ident = Matrix::eye(n);
+        for _ in 0..iters {
+            let az = matmul(a, &z);
+            // t1 = 7I − AZ
+            let mut t1 = crate::tensor::sub(&ident, &az);
+            scale_inplace(&mut t1, 1.0); // readability: t1 = I − AZ
+            let mut seven = ident.clone();
+            scale_inplace(&mut seven, 7.0);
+            let t1 = crate::tensor::sub(&seven, &az);
+            // t2 = 15I − AZ·t1
+            let mut fifteen = ident.clone();
+            scale_inplace(&mut fifteen, 15.0);
+            let t2 = crate::tensor::sub(&fifteen, &matmul(&az, &t1));
+            // t3 = 13I − AZ·t2
+            let mut thirteen = ident.clone();
+            scale_inplace(&mut thirteen, 13.0);
+            let t3 = crate::tensor::sub(&thirteen, &matmul(&az, &t2));
+            z = matmul(&z, &t3);
+            scale_inplace(&mut z, 0.25);
+        }
+        z
+    }
+}
+
+impl AttentionMethod for Nystromformer {
+    fn name(&self) -> &'static str {
+        "nystromformer"
+    }
+
+    fn compute(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        mask: Option<&[f32]>,
+        _rng: &mut Rng,
+    ) -> Matrix {
+        check_inputs(q, k, v, mask);
+        let p = q.cols() as f32;
+        let scale = 1.0 / p.sqrt();
+        let q_land = Self::segment_means(q, self.landmarks);
+        let k_land = Self::segment_means(k, self.landmarks);
+
+        // F1 = softmax(Q K̃ᵀ)
+        let mut f1 = matmul_nt(q, &k_land);
+        scale_inplace(&mut f1, scale);
+        softmax_rows(&mut f1);
+        // A2 = softmax(Q̃ K̃ᵀ)
+        let mut a2 = matmul_nt(&q_land, &k_land);
+        scale_inplace(&mut a2, scale);
+        softmax_rows(&mut a2);
+        // F3 = softmax(Q̃ Kᵀ) with padding mask on keys
+        let mut f3 = matmul_nt(&q_land, k);
+        scale_inplace(&mut f3, scale);
+        masking::mask_score_columns(&mut f3, mask);
+        softmax_rows(&mut f3);
+
+        let pinv = Self::newton_pinv(&a2, self.pinv_iters);
+        matmul(&f1, &matmul(&pinv, &matmul(&f3, v)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Standard;
+    use crate::tensor::spectral_norm_diff;
+
+    fn qkv(n: usize, p: usize, seed: u64, scale: f32) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let mut mk = |s: f32| {
+            let mut m = Matrix::zeros(n, p);
+            rng.fill_normal(m.data_mut());
+            scale_inplace(&mut m, s);
+            m
+        };
+        (mk(scale), mk(scale), mk(1.0))
+    }
+
+    #[test]
+    fn newton_pinv_inverts_well_conditioned() {
+        // a diagonally-dominant row-stochastic-ish matrix
+        let n = 8;
+        let a = Matrix::from_fn(n, n, |i, j| if i == j { 0.8 } else { 0.2 / (n - 1) as f32 });
+        let z = Nystromformer::newton_pinv(&a, 12);
+        let prod = matmul(&a, &z);
+        let eye = Matrix::eye(n);
+        assert!(prod.max_abs_diff(&eye) < 1e-2, "AZ far from I");
+    }
+
+    #[test]
+    fn segment_means_average_chunks() {
+        let x = Matrix::from_fn(8, 2, |i, _| i as f32);
+        let m = Nystromformer::segment_means(&x, 4);
+        assert_eq!(m.rows(), 4);
+        assert!((m.get(0, 0) - 0.5).abs() < 1e-6);
+        assert!((m.get(3, 0) - 6.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn more_landmarks_reduce_error() {
+        let (q, k, v) = qkv(128, 8, 1, 1.0);
+        let exact = Standard::exact(&q, &k, &v, None);
+        let err = |m: usize| {
+            spectral_norm_diff(
+                &Nystromformer::new(m).compute(&q, &k, &v, None, &mut Rng::new(0)),
+                &exact,
+            )
+        };
+        assert!(err(64) < err(4), "landmarks 64 {} vs 4 {}", err(64), err(4));
+    }
+
+    #[test]
+    fn near_exact_with_full_landmarks_on_smooth_inputs() {
+        // Landmarks == n on smooth inputs: Nyström becomes near-exact.
+        let n = 32;
+        let (q, k, v) = qkv(n, 8, 3, 0.4);
+        let exact = Standard::exact(&q, &k, &v, None);
+        let out = Nystromformer::new(n).compute(&q, &k, &v, None, &mut Rng::new(0));
+        let rel = spectral_norm_diff(&out, &exact) / crate::tensor::spectral_norm(&exact);
+        assert!(rel < 0.25, "rel err {rel}");
+    }
+}

@@ -1,0 +1,173 @@
+//! Performer (Choromanski et al. 2020) — FAVOR+ linear attention with
+//! positive softmax random features:
+//!
+//! `phi(x) = exp(ω·x − ‖x‖²/2) / √m`,  Attention ≈ φ(Q)(φ(K)ᵀV) / φ(Q)(φ(K)ᵀ1)
+//!
+//! One of the Table-1/2 baselines; the paper groups it with methods that
+//! decompose the score matrix without strictly approximating the original
+//! attention (§2), and its LRA behaviour (strong on Text, weak on
+//! Pathfinder) is part of the reproduced shape.
+
+use super::{check_inputs, AttentionMethod};
+use crate::rng::Rng;
+use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Performer {
+    /// Number of random features m.
+    pub m: usize,
+}
+
+impl Performer {
+    pub fn new(m: usize) -> Self {
+        Self { m }
+    }
+
+    /// Positive random-feature map with a shared max-subtraction for
+    /// numerical stability (standard FAVOR+ stabilisation).
+    fn features(x: &Matrix, w: &Matrix) -> Matrix {
+        let m = w.rows();
+        let mut proj = matmul_nt(x, w); // (n, m): rows ω·x
+        // subtract ‖x‖²/2 per row, then global max
+        let mut gmax = f32::NEG_INFINITY;
+        for i in 0..x.rows() {
+            let sq: f32 = x.row(i).iter().map(|a| a * a).sum::<f32>() * 0.5;
+            for z in proj.row_mut(i) {
+                *z -= sq;
+                gmax = gmax.max(*z);
+            }
+        }
+        let inv_sqrt_m = 1.0 / (m as f32).sqrt();
+        for z in proj.data_mut() {
+            *z = (*z - gmax).exp() * inv_sqrt_m;
+        }
+        proj
+    }
+}
+
+impl AttentionMethod for Performer {
+    fn name(&self) -> &'static str {
+        "performer"
+    }
+
+    fn compute(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        mask: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Matrix {
+        check_inputs(q, k, v, mask);
+        let n = q.rows();
+        let p = q.cols();
+        // 1/√√p scaling splits the softmax temperature between Q and K.
+        let scale = 1.0 / (p as f32).sqrt().sqrt();
+        let qs = Matrix::from_fn(n, p, |i, j| q.get(i, j) * scale);
+        let ks = Matrix::from_fn(n, p, |i, j| k.get(i, j) * scale);
+        let mut w = Matrix::zeros(self.m, p);
+        rng.fill_normal(w.data_mut());
+
+        let qp = Self::features(&qs, &w); // (n, m)
+        let mut kp = Self::features(&ks, &w); // (n, m)
+        if let Some(m) = mask {
+            for i in 0..n {
+                if m[i] <= 0.0 {
+                    kp.row_mut(i).iter_mut().for_each(|x| *x = 0.0);
+                }
+            }
+        }
+        let kv = matmul_tn(&kp, v); // (m, p)
+        let norm = crate::tensor::col_sums(&kp); // φ(K)ᵀ1 : (m,)
+        let out = matmul(&qp, &kv); // (n, p)
+        let denom: Vec<f32> = (0..n)
+            .map(|i| {
+                crate::tensor::dot(qp.row(i), &norm).max(1e-30)
+            })
+            .collect();
+        Matrix::from_fn(n, v.cols(), |i, j| out.get(i, j) / denom[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Standard;
+    use crate::tensor::{scale_inplace, spectral_norm_diff};
+
+    fn qkv(n: usize, p: usize, seed: u64, scale: f32) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let mut mk = |s: f32| {
+            let mut m = Matrix::zeros(n, p);
+            rng.fill_normal(m.data_mut());
+            scale_inplace(&mut m, s);
+            m
+        };
+        (mk(scale), mk(scale), mk(1.0))
+    }
+
+    #[test]
+    fn rows_are_convex_combinations_of_v() {
+        let (q, k, v) = qkv(64, 8, 1, 0.7);
+        let out = Performer::new(64).compute(&q, &k, &v, None, &mut Rng::new(2));
+        let vmax = v.data().iter().copied().fold(f32::MIN, f32::max);
+        let vmin = v.data().iter().copied().fold(f32::MAX, f32::min);
+        for &x in out.data() {
+            assert!(x <= vmax + 1e-3 && x >= vmin - 1e-3);
+        }
+    }
+
+    #[test]
+    fn approximates_softmax_on_mild_inputs() {
+        // FAVOR+ is unbiased for the softmax kernel; with many features and
+        // small logits the relative error should be modest.
+        let (q, k, v) = qkv(64, 8, 3, 0.5);
+        let exact = Standard::exact(&q, &k, &v, None);
+        let mut err = 0.0;
+        let trials = 6;
+        for s in 0..trials {
+            let out = Performer::new(256).compute(&q, &k, &v, None, &mut Rng::new(10 + s));
+            err += spectral_norm_diff(&out, &exact);
+        }
+        err /= trials as f32;
+        let base = crate::tensor::spectral_norm(&exact);
+        assert!(err / base < 0.5, "relative err {}", err / base);
+    }
+
+    #[test]
+    fn more_features_reduce_error() {
+        let (q, k, v) = qkv(64, 8, 5, 0.8);
+        let exact = Standard::exact(&q, &k, &v, None);
+        let mean_err = |m: usize| {
+            (0..8)
+                .map(|s| {
+                    spectral_norm_diff(
+                        &Performer::new(m).compute(&q, &k, &v, None, &mut Rng::new(30 + s)),
+                        &exact,
+                    )
+                })
+                .sum::<f32>()
+                / 8.0
+        };
+        assert!(mean_err(256) < mean_err(16));
+    }
+
+    #[test]
+    fn masked_keys_contribute_nothing() {
+        let (q, k, v) = qkv(32, 8, 7, 0.6);
+        let mut mask = vec![1.0f32; 32];
+        for m in mask.iter_mut().skip(24) {
+            *m = 0.0;
+        }
+        let perf = Performer::new(64);
+        let a = perf.compute(&q, &k, &v, Some(&mask), &mut Rng::new(4));
+        let mut v2 = v.clone();
+        for i in 24..32 {
+            for j in 0..8 {
+                v2.set(i, j, 1e5);
+            }
+        }
+        let b = perf.compute(&q, &k, &v2, Some(&mask), &mut Rng::new(4));
+        assert!(a.max_abs_diff(&b) < 1e-3);
+    }
+}

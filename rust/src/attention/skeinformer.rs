@@ -1,0 +1,390 @@
+//! Skeinformer — Algorithm 1 of the paper, line by line, with the ablation
+//! switches Table 1 studies (uniform sampling, row-norm variants, PSR).
+//!
+//! Complexity: O(n·d) time and space with d = O(log n) (§4.5).  The only
+//! O(n²)-shaped object the exact method needs — the full score matrix —
+//! never materialises: the pilot strip is (d, n) and the sampled strip is
+//! (n, d).
+
+use super::{check_inputs, masking, AttentionMethod};
+use crate::rng::Rng;
+use crate::tensor::{
+    col_norms, matmul, matmul_nt, row_geometric_means, row_norms, scale_inplace, softmax_rows,
+    Matrix,
+};
+
+/// Row-normalization strategy (§4.2 + ablations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowNorm {
+    /// Adaptive row normalization: geometric-mean fill (Eq. 6) — the paper's method.
+    Adaptive,
+    /// Normalize by the selected-column sum only (Informer-style).
+    Simple,
+    /// No normalization: the plain importance-weighted AMM estimator.
+    None,
+}
+
+/// Algorithm 1 with configurable components.
+#[derive(Clone, Copy, Debug)]
+pub struct Skeinformer {
+    /// Sub-sample size `d` (pilot size == column-sample size).
+    pub d: usize,
+    /// Ablation: replace Eq.-5 importance weights with uniform.
+    pub uniform_sampling: bool,
+    /// Row-normalization strategy.
+    pub row_norm: RowNorm,
+    /// Pilot sampling reutilization (line 12).
+    pub psr: bool,
+}
+
+impl Skeinformer {
+    pub fn new(d: usize) -> Self {
+        Self { d, uniform_sampling: false, row_norm: RowNorm::Adaptive, psr: true }
+    }
+
+    pub fn uniform_sampling(mut self) -> Self {
+        self.uniform_sampling = true;
+        self
+    }
+
+    pub fn row_norm(mut self, rn: RowNorm) -> Self {
+        self.row_norm = rn;
+        self
+    }
+
+    pub fn without_psr(mut self) -> Self {
+        self.psr = false;
+        self
+    }
+
+    /// Lines 1-3: uniform pilot sampling + `B_J = softmax(Q_J Kᵀ/√p)`.
+    ///
+    /// Returns `(pilot_idx, B_J)` with `B_J` shaped `(d, n)`; padded
+    /// columns are zeroed per §4.4 so they can never be sampled.
+    pub fn pilot(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        mask: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> (Vec<usize>, Matrix) {
+        let n = q.rows();
+        let d = self.d.min(n);
+        let valid = masking::valid_indices(mask, n);
+        let pilot_idx: Vec<usize> =
+            (0..d).map(|_| valid[rng.below(valid.len())]).collect();
+        let qj = q.gather_rows(&pilot_idx);
+        let mut bj = matmul_nt(&qj, k); // (d, n)
+        scale_inplace(&mut bj, 1.0 / (q.cols() as f32).sqrt());
+        masking::mask_score_columns(&mut bj, mask);
+        softmax_rows(&mut bj);
+        masking::zero_masked_columns(&mut bj, mask);
+        (pilot_idx, bj)
+    }
+
+    /// Equation (5): estimated sub-sampling probabilities
+    /// `p̂_i ∝ (Σ_k b²_{j_k i})^{1/2} ‖V_(i)‖` (un-normalised weights —
+    /// the sampler normalises internally).
+    pub fn probabilities(bj: &Matrix, v: &Matrix, mask: Option<&[f32]>) -> Vec<f32> {
+        let col = col_norms(bj);
+        let vn = row_norms(v);
+        let mut w: Vec<f32> = col.iter().zip(&vn).map(|(c, r)| c * r).collect();
+        masking::mask_weights(&mut w, mask);
+        if w.iter().all(|x| *x <= 0.0) {
+            // degenerate pilot — fall back to uniform over valid positions
+            for (i, wi) in w.iter_mut().enumerate() {
+                *wi = mask.map_or(1.0, |m| m[i]);
+            }
+        }
+        w
+    }
+
+    fn compute_impl(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        mask: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Matrix {
+        check_inputs(q, k, v, mask);
+        let n = q.rows();
+        let p = q.cols() as f32;
+        let d = self.d.min(n);
+        let m_valid = masking::valid_count(mask, n);
+
+        // Lines 1-4: pilot sampling + probabilities.
+        let (pilot_idx, bj) = self.pilot(q, k, mask, rng);
+        let weights = if self.uniform_sampling {
+            let mut w = vec![1.0f32; n];
+            masking::mask_weights(&mut w, mask);
+            w
+        } else {
+            Self::probabilities(&bj, v, mask)
+        };
+
+        // Line 5: importance sampling without replacement (Gumbel top-k).
+        let sel_idx = rng.weighted_without_replacement(&weights, d);
+        let d_eff = sel_idx.len();
+
+        // Lines 6-7: gather K_{J'}, V_{J'}, compute A^{J'} = exp(Q K_{J'}ᵀ/√p).
+        let k_sel = k.gather_rows(&sel_idx);
+        let v_sel = v.gather_rows(&sel_idx);
+        let mut a_sel = matmul_nt(q, &k_sel); // (n, d)
+        scale_inplace(&mut a_sel, 1.0 / p.sqrt());
+        // clip logits to ±30 before exp (f32 overflow guard — mirrors the
+        // pallas kernel and jnp reference exactly)
+        a_sel.data_mut().iter_mut().for_each(|x| *x = x.clamp(-30.0, 30.0).exp());
+        let r_sel = matmul(&a_sel, &v_sel); // (n, p) — R_{J'}
+
+        let mut r = match self.row_norm {
+            RowNorm::Adaptive => {
+                // Line 8: geometric-mean fill g.
+                let g = row_geometric_means(&a_sel);
+                // Line 9: d̂_i = Σ_k a_{ij'_k} + (m - d) g_i  (mask-aware count)
+                let n_unsel = (m_valid - d_eff as f32).max(0.0);
+                let row_sum: Vec<f32> = (0..n)
+                    .map(|i| a_sel.row(i).iter().sum::<f32>() + n_unsel * g[i])
+                    .collect();
+                // Line 10: v = V_{(J')ᶜ}ᵀ 1
+                let total = masking::masked_col_sums(v, mask);
+                let sel_sum = crate::tensor::col_sums(&v_sel);
+                let v_unsel: Vec<f32> =
+                    total.iter().zip(&sel_sum).map(|(t, s)| t - s).collect();
+                // Line 11: R = diag(d̂)⁻¹ (R_{J'} + g vᵀ)
+                Matrix::from_fn(n, v.cols(), |i, j| {
+                    (r_sel.get(i, j) + g[i] * v_unsel[j]) / row_sum[i].max(1e-30)
+                })
+            }
+            RowNorm::Simple => {
+                let mut out = r_sel;
+                let inv: Vec<f32> = (0..n)
+                    .map(|i| 1.0 / a_sel.row(i).iter().sum::<f32>().max(1e-30))
+                    .collect();
+                crate::tensor::scale_rows_inplace(&mut out, &inv);
+                out
+            }
+            RowNorm::None => {
+                // Plain AMM estimator of Prop. 1: rescale each sampled
+                // column by 1/(d p̂_i), estimate the softmax row sum from
+                // the same sample.
+                let total_w: f32 = weights.iter().sum();
+                let inv_dp: Vec<f32> = sel_idx
+                    .iter()
+                    .map(|&i| {
+                        let p_i = (weights[i] / total_w).max(1e-30);
+                        1.0 / (d_eff as f32 * p_i)
+                    })
+                    .collect();
+                let mut out = Matrix::zeros(n, v.cols());
+                for i in 0..n {
+                    let arow = a_sel.row(i);
+                    let mut est_row_sum = 0.0f32;
+                    for (s, &w) in arow.iter().zip(&inv_dp) {
+                        est_row_sum += s * w;
+                    }
+                    let inv = 1.0 / est_row_sum.max(1e-30);
+                    let orow = out.row_mut(i);
+                    for (jj, (&a, &w)) in arow.iter().zip(&inv_dp).enumerate() {
+                        let coeff = a * w * inv;
+                        for (o, &vv) in orow.iter_mut().zip(v_sel.row(jj)) {
+                            *o += coeff * vv;
+                        }
+                    }
+                }
+                out
+            }
+        };
+
+        // Line 12: pilot sampling reutilization — exact rows B_J V.
+        if self.psr {
+            let exact = matmul(&bj, v); // (d, p)
+            for (row, &i) in pilot_idx.iter().enumerate() {
+                r.set_row(i, exact.row(row));
+            }
+        }
+        r
+    }
+}
+
+impl AttentionMethod for Skeinformer {
+    fn name(&self) -> &'static str {
+        if self.uniform_sampling {
+            "skein_uniform"
+        } else if self.row_norm == RowNorm::None {
+            "skein_no_norm"
+        } else if self.row_norm == RowNorm::Simple {
+            "skein_simple_norm"
+        } else if !self.psr {
+            "skein_no_psr"
+        } else {
+            "skeinformer"
+        }
+    }
+
+    fn compute(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        mask: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Matrix {
+        self.compute_impl(q, k, v, mask, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Standard;
+
+    fn peaked_qkv(n: usize, p: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        // correlated inputs -> non-uniform attention (the realistic regime)
+        let mut rng = Rng::new(seed);
+        let mut mk = |scale: f32| {
+            let mut m = Matrix::zeros(n, p);
+            rng.fill_normal(m.data_mut());
+            scale_inplace(&mut m, scale);
+            m
+        };
+        (mk(1.8), mk(1.8), mk(1.0))
+    }
+
+    #[test]
+    fn full_sample_with_psr_is_near_exact() {
+        // d == n: every column selected, pilot rows exact; the sampled part
+        // still uses the geometric fill with weight (m-d)=0, so the result
+        // should match the exact attention closely.
+        let (q, k, v) = peaked_qkv(32, 8, 1);
+        let exact = Standard::exact(&q, &k, &v, None);
+        let skein = Skeinformer::new(32);
+        let out = skein.compute(&q, &k, &v, None, &mut Rng::new(2));
+        assert!(
+            out.max_abs_diff(&exact) < 1e-3,
+            "diff {}",
+            out.max_abs_diff(&exact)
+        );
+    }
+
+    #[test]
+    fn pilot_rows_match_exact_attention() {
+        let (q, k, v) = peaked_qkv(64, 8, 3);
+        let exact = Standard::exact(&q, &k, &v, None);
+        let skein = Skeinformer::new(16);
+        // Re-derive the pilot set with the same RNG stream the compute uses.
+        let mut rng_probe = Rng::new(7);
+        let (pilot_idx, _) = skein.pilot(&q, &k, None, &mut rng_probe);
+        let out = skein.compute(&q, &k, &v, None, &mut Rng::new(7));
+        for &i in &pilot_idx {
+            for j in 0..v.cols() {
+                assert!(
+                    (out.get(i, j) - exact.get(i, j)).abs() < 1e-4,
+                    "pilot row {i} not exact"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn beats_vmean_on_structured_attention() {
+        // The paper's regime (Figure 1, "pretrained"): token embeddings
+        // share cluster structure, so important columns are shared across
+        // rows and column sampling pays off.  (On i.i.d.-random peaked
+        // inputs every row attends to its own private column — there the
+        // rank-collapse premise doesn't hold and no column sketch helps.)
+        use crate::attention::VMean;
+        use crate::synth_qkv::{generate, QkvConfig};
+        use crate::tensor::spectral_norm_diff;
+        let mut gen_rng = Rng::new(5);
+        let (q, k, v) = generate(&QkvConfig::pretrained(128, 16), &mut gen_rng);
+        let exact = Standard::exact(&q, &k, &v, None);
+        let skein = Skeinformer::new(32);
+        let mut err_sum = 0.0;
+        for s in 0..6 {
+            let out = skein.compute(&q, &k, &v, None, &mut Rng::new(100 + s));
+            err_sum += spectral_norm_diff(&out, &exact);
+        }
+        let vm = VMean.compute(&q, &k, &v, None, &mut Rng::new(0));
+        let vm_err = spectral_norm_diff(&vm, &exact);
+        assert!(
+            err_sum / 6.0 < vm_err,
+            "skein {} vs vmean {}",
+            err_sum / 6.0,
+            vm_err
+        );
+    }
+
+    #[test]
+    fn never_samples_padded_columns() {
+        let (q, k, v) = peaked_qkv(64, 8, 9);
+        let mut mask = vec![1.0f32; 64];
+        for m in mask.iter_mut().skip(40) {
+            *m = 0.0;
+        }
+        let skein = Skeinformer::new(16);
+        let (_, bj) = skein.pilot(&q, &k, Some(&mask), &mut Rng::new(4));
+        let w = Skeinformer::probabilities(&bj, &v, Some(&mask));
+        for (i, &wi) in w.iter().enumerate().skip(40) {
+            assert_eq!(wi, 0.0, "padded index {i} has weight");
+        }
+    }
+
+    #[test]
+    fn padded_content_invariance() {
+        let (q, k, v) = peaked_qkv(64, 8, 11);
+        let mut mask = vec![1.0f32; 64];
+        for m in mask.iter_mut().skip(48) {
+            *m = 0.0;
+        }
+        let skein = Skeinformer::new(16);
+        let a = skein.compute(&q, &k, &v, Some(&mask), &mut Rng::new(21));
+        // corrupt padded rows of K and V
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for i in 48..64 {
+            for j in 0..8 {
+                k2.set(i, j, 1e3);
+                v2.set(i, j, -1e3);
+            }
+        }
+        let b = skein.compute(&q, &k2, &v2, Some(&mask), &mut Rng::new(21));
+        for i in 0..48 {
+            for j in 0..8 {
+                assert!(
+                    (a.get(i, j) - b.get(i, j)).abs() < 1e-3,
+                    "row {i} leaked padding"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ablations_produce_distinct_estimators() {
+        let (q, k, v) = peaked_qkv(96, 8, 13);
+        let base = Skeinformer::new(24);
+        let out_full = base.compute(&q, &k, &v, None, &mut Rng::new(50));
+        let out_simple =
+            base.row_norm(RowNorm::Simple).compute(&q, &k, &v, None, &mut Rng::new(50));
+        let out_none = base.row_norm(RowNorm::None).compute(&q, &k, &v, None, &mut Rng::new(50));
+        let out_nopsr = base.without_psr().compute(&q, &k, &v, None, &mut Rng::new(50));
+        assert!(out_full.max_abs_diff(&out_simple) > 1e-6);
+        assert!(out_full.max_abs_diff(&out_none) > 1e-6);
+        assert!(out_full.max_abs_diff(&out_nopsr) > 1e-6);
+    }
+
+    #[test]
+    fn adaptive_norm_rows_are_normalized_mixtures() {
+        // With adaptive row norm (and no PSR, to see pure line-11 rows) the
+        // output rows are convex-ish combinations of V rows plus the fill —
+        // they must stay within a modest factor of V's range.
+        let (q, k, v) = peaked_qkv(64, 8, 17);
+        let out = Skeinformer::new(16)
+            .without_psr()
+            .compute(&q, &k, &v, None, &mut Rng::new(3));
+        let vmax = v.data().iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        for &x in out.data() {
+            assert!(x.abs() <= vmax * 3.0, "unnormalized output {x}");
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Exact O(n²) softmax attention — the baseline every approximation is
+//! measured against (the paper's "Standard" row).
+
+use super::{check_inputs, masking, AttentionMethod};
+use crate::rng::Rng;
+use crate::tensor::{matmul, matmul_nt, softmax_rows, Matrix};
+
+/// `softmax(QKᵀ/√p) V`, computed exactly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Standard;
+
+impl Standard {
+    /// The exact attention as a free function (used by benches/tests that
+    /// don't want trait dispatch).
+    pub fn exact(q: &Matrix, k: &Matrix, v: &Matrix, mask: Option<&[f32]>) -> Matrix {
+        check_inputs(q, k, v, mask);
+        let p = q.cols() as f32;
+        let mut scores = matmul_nt(q, k);
+        crate::tensor::scale_inplace(&mut scores, 1.0 / p.sqrt());
+        masking::mask_score_columns(&mut scores, mask);
+        softmax_rows(&mut scores);
+        matmul(&scores, v)
+    }
+}
+
+impl AttentionMethod for Standard {
+    fn name(&self) -> &'static str {
+        "standard"
+    }
+
+    fn compute(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        mask: Option<&[f32]>,
+        _rng: &mut Rng,
+    ) -> Matrix {
+        Self::exact(q, k, v, mask)
+    }
+
+    fn is_exact(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_keys_give_row_mean_of_v() {
+        // If all scores are equal, attention output is the mean of V rows.
+        let n = 16;
+        let q = Matrix::zeros(n, 4);
+        let k = Matrix::from_fn(n, 4, |_, j| j as f32);
+        let v = Matrix::from_fn(n, 4, |i, _| i as f32);
+        let out = Standard::exact(&q, &k, &v, None);
+        let mean = (0..n).map(|i| i as f32).sum::<f32>() / n as f32;
+        for i in 0..n {
+            assert!((out.get(i, 0) - mean).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn peaked_scores_select_one_row() {
+        // Make query i align strongly with key i: output ≈ V row i.
+        let n = 8;
+        let p = 8;
+        let big = 40.0;
+        let q = Matrix::from_fn(n, p, |i, j| if i == j { big } else { 0.0 });
+        let k = Matrix::from_fn(n, p, |i, j| if i == j { big } else { 0.0 });
+        let v = Matrix::from_fn(n, p, |i, j| (i * 10 + j) as f32);
+        let out = Standard::exact(&q, &k, &v, None);
+        for i in 0..n {
+            for j in 0..p {
+                assert!((out.get(i, j) - v.get(i, j)).abs() < 1e-2, "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn masked_keys_do_not_contribute() {
+        let n = 12;
+        let p = 4;
+        let q = Matrix::from_fn(n, p, |i, j| ((i + j) as f32).sin());
+        let k = Matrix::from_fn(n, p, |i, j| ((i * j) as f32 * 0.1).cos());
+        let mut v = Matrix::from_fn(n, p, |i, j| (i + j) as f32 * 0.1);
+        let mut mask = vec![1.0f32; n];
+        for i in 8..n {
+            mask[i] = 0.0;
+        }
+        let base = Standard::exact(&q, &k, &v, Some(&mask));
+        // corrupt padded V rows — output must not change
+        for i in 8..n {
+            for j in 0..p {
+                v.set(i, j, 1e6);
+            }
+        }
+        let after = Standard::exact(&q, &k, &v, Some(&mask));
+        assert!(base.max_abs_diff(&after) < 1e-3);
+    }
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        let n = 32;
+        let q = Matrix::from_fn(n, 8, |i, j| ((i * 7 + j) as f32 * 0.2).sin());
+        let k = Matrix::from_fn(n, 8, |i, j| ((i + j * 3) as f32 * 0.15).cos());
+        let v = Matrix::from_fn(n, 8, |i, j| ((i * 13 + j * 5) % 9) as f32 - 4.0);
+        let out = Standard::exact(&q, &k, &v, None);
+        let vmax = v.data().iter().copied().fold(f32::MIN, f32::max);
+        let vmin = v.data().iter().copied().fold(f32::MAX, f32::min);
+        for &x in out.data() {
+            assert!(x <= vmax + 1e-4 && x >= vmin - 1e-4);
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! The rank-one "V-Mean" baseline: `(1/n) 1 1ᵀ V`.
+//!
+//! The paper uses this as the ablation for pure row normalization — it is
+//! adaptive row normalization with *zero* sub-samples, and its surprising
+//! strength on some LRA tasks (Table 1: best Text score) is one of the
+//! paper's observations.
+
+use super::{check_inputs, masking, AttentionMethod};
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VMean;
+
+impl AttentionMethod for VMean {
+    fn name(&self) -> &'static str {
+        "vmean"
+    }
+
+    fn compute(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        mask: Option<&[f32]>,
+        _rng: &mut Rng,
+    ) -> Matrix {
+        check_inputs(q, k, v, mask);
+        let n = v.rows();
+        let m = masking::valid_count(mask, n);
+        let sums = masking::masked_col_sums(v, mask);
+        let mean: Vec<f32> = sums.iter().map(|s| s / m).collect();
+        Matrix::from_fn(n, v.cols(), |_, j| mean[j])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_is_mean_of_v() {
+        let v = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 6.0]]);
+        let out = VMean.compute(&v, &v, &v, None, &mut Rng::new(0));
+        for i in 0..2 {
+            assert_eq!(out.row(i), &[2.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn ignores_q_and_k_entirely() {
+        let v = Matrix::from_fn(8, 4, |i, j| (i * 4 + j) as f32);
+        let q1 = Matrix::zeros(8, 4);
+        let q2 = Matrix::full(8, 4, 123.0);
+        let a = VMean.compute(&q1, &q1, &v, None, &mut Rng::new(0));
+        let b = VMean.compute(&q2, &q2, &v, None, &mut Rng::new(1));
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn masked_rows_excluded_from_mean() {
+        let v = Matrix::from_rows(&[vec![2.0], vec![4.0], vec![1000.0]]);
+        let mask = [1.0, 1.0, 0.0];
+        let out = VMean.compute(&v, &v, &v, Some(&mask), &mut Rng::new(0));
+        assert_eq!(out.get(0, 0), 3.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Bench harness substrate (no criterion offline).
+//!
+//! Benches are plain binaries (`[[bench]] harness = false`) that use
+//! [`Bench`] for warmup + timed iterations with mean/std/percentile
+//! reporting, and [`csv`] helpers to emit the figure series the paper
+//! plots.  Designed so `cargo bench` output is self-describing.
+
+use crate::metrics::{Percentiles, RunningStats};
+use std::time::Instant;
+
+/// Timing configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub measure_iters: u32,
+    /// Hard cap on total measuring time (seconds) for slow cases.
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup_iters: 2, measure_iters: 10, max_seconds: 30.0 }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub p50_ms: f64,
+    pub min_ms: f64,
+    pub iters: u32,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<40} {:>10.3} ms ± {:>8.3}  (p50 {:>9.3}, min {:>9.3}, n={})",
+            self.name, self.mean_ms, self.std_ms, self.p50_ms, self.min_ms, self.iters
+        )
+    }
+}
+
+/// Run one benchmark case.
+pub fn bench(name: &str, cfg: BenchConfig, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut stats = RunningStats::new();
+    let mut pct = Percentiles::default();
+    let deadline = Instant::now();
+    let mut iters = 0u32;
+    for _ in 0..cfg.measure_iters {
+        let t0 = Instant::now();
+        f();
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        stats.push(ms);
+        pct.push(ms);
+        iters += 1;
+        if deadline.elapsed().as_secs_f64() > cfg.max_seconds {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        mean_ms: stats.mean(),
+        std_ms: stats.std(),
+        p50_ms: pct.percentile(50.0),
+        min_ms: stats.min(),
+        iters,
+    }
+}
+
+/// Write a CSV file under `reports/`, creating the directory.
+pub fn write_csv(path: &str, header: &str, rows: &[String]) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::with_capacity(rows.len() * 32 + header.len() + 1);
+    out.push_str(header);
+    out.push('\n');
+    for r in rows {
+        out.push_str(r);
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+}
+
+/// Render a fixed-width ASCII table (the paper-table reports).
+pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        for w in &widths {
+            out.push('+');
+            out.push_str(&"-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    sep(&mut out);
+    out.push('|');
+    for (h, w) in headers.iter().zip(&widths) {
+        out.push_str(&format!(" {h:<w$} |"));
+    }
+    out.push('\n');
+    sep(&mut out);
+    for row in rows {
+        out.push('|');
+        for (c, w) in row.iter().zip(&widths) {
+            out.push_str(&format!(" {c:<w$} |"));
+        }
+        out.push('\n');
+    }
+    sep(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench(
+            "noop-ish",
+            BenchConfig { warmup_iters: 1, measure_iters: 5, max_seconds: 5.0 },
+            || {
+                let mut x = 0u64;
+                for i in 0..10_000 {
+                    x = x.wrapping_add(i);
+                }
+                std::hint::black_box(x);
+            },
+        );
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.min_ms <= r.mean_ms + 1e-9);
+        assert!(!r.report_line().is_empty());
+    }
+
+    #[test]
+    fn ascii_table_renders_aligned() {
+        let t = ascii_table(
+            &["model", "acc"],
+            &[
+                vec!["skeinformer".into(), "58.08".into()],
+                vec!["standard".into(), "57.50".into()],
+            ],
+        );
+        assert!(t.contains("| model"));
+        assert!(t.contains("| skeinformer"));
+        // all lines equal width
+        let lens: std::collections::HashSet<usize> =
+            t.lines().map(|l| l.len()).collect();
+        assert_eq!(lens.len(), 1, "ragged table:\n{t}");
+    }
+
+    #[test]
+    fn write_csv_roundtrip() {
+        let dir = std::env::temp_dir().join("skein_csv_test");
+        let path = dir.join("x.csv");
+        let p = path.to_str().unwrap();
+        write_csv(p, "a,b", &["1,2".into(), "3,4".into()]).unwrap();
+        let body = std::fs::read_to_string(p).unwrap();
+        assert_eq!(body, "a,b\n1,2\n3,4\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,163 @@
+//! CLI argument-parsing substrate (no clap offline).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! switch grammar the `skein` binary uses, with typed accessors, defaults,
+//! and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, flags, and positional args.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{flag}: {value:?} ({expected})")]
+    BadValue { flag: String, value: String, expected: &'static str },
+}
+
+impl Args {
+    /// Parse `argv[1..]`.  The first non-flag token becomes the subcommand;
+    /// later bare tokens are positional.  A flag followed by a non-flag
+    /// token consumes it as its value; trailing flags become switches.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, CliError> {
+        let mut out = Args::default();
+        let tokens: Vec<String> = argv.into_iter().collect();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// From the process environment.
+    pub fn from_env() -> Result<Self, CliError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                flag: name.into(),
+                value: v.into(),
+                expected: "unsigned integer",
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                flag: name.into(),
+                value: v.into(),
+                expected: "number",
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                flag: name.into(),
+                value: v.into(),
+                expected: "unsigned integer",
+            }),
+        }
+    }
+
+    /// Boolean switch (present / `--name true|false`).
+    pub fn switch(&self, name: &str) -> bool {
+        if self.switches.iter().any(|s| s == name) {
+            return true;
+        }
+        matches!(self.get(name), Some("true" | "1" | "yes"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --method skeinformer --steps 500 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("method"), Some("skeinformer"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 500);
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = parse("fig1 --n=1024 --trials=8");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 1024);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert_eq!(a.get_or("mode", "pretrained"), "pretrained");
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse("sweep --methods skeinformer,standard,informer,");
+        assert_eq!(
+            a.get_list("methods").unwrap(),
+            vec!["skeinformer".to_string(), "standard".into(), "informer".into()]
+        );
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse("x --steps banana");
+        assert!(a.get_usize("steps", 1).is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("inspect artifacts/skeinformer_manifest.json extra");
+        assert_eq!(a.subcommand.as_deref(), Some("inspect"));
+        assert_eq!(a.positional, vec!["artifacts/skeinformer_manifest.json", "extra"]);
+    }
+}

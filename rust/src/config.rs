@@ -1,0 +1,295 @@
+//! Typed experiment configuration, loadable from JSON files with CLI
+//! overrides — the coordinator's single source of truth for a run.
+//!
+//! ```
+//! use skeinformer::config::ExperimentConfig;
+//! let cfg = ExperimentConfig::default();
+//! assert_eq!(cfg.model.seq_len, 128);
+//! cfg.validate().unwrap();
+//! ```
+
+use crate::json::{parse, Json};
+use anyhow::{bail, Context, Result};
+
+/// Model hyper-parameters — must mirror `python/compile/model.py`'s
+/// `ModelConfig` (the artifact manifests carry the authoritative copy; this
+/// struct is checked against the manifest at load time).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub embed: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub ffn: usize,
+    pub classes: usize,
+    pub features: usize,
+    pub batch: usize,
+    pub lr: f64,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            vocab: 64,
+            seq_len: 128,
+            embed: 64,
+            heads: 2,
+            layers: 2,
+            ffn: 128,
+            classes: 10,
+            features: 64,
+            batch: 32,
+            lr: 1e-4,
+        }
+    }
+}
+
+/// Training-loop parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    /// Hard cap on optimizer steps.
+    pub max_steps: usize,
+    /// Validation cadence (steps).
+    pub eval_every: usize,
+    /// Early stopping: halt after this many evals without improvement
+    /// (the paper's "10 checking steps" strategy).
+    pub patience: usize,
+    /// Gradient-accumulation steps (Table 4's `accu`).
+    pub grad_accum: usize,
+    /// Examples in each validation slice.
+    pub eval_examples: usize,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            max_steps: 400,
+            eval_every: 20,
+            patience: 10,
+            grad_accum: 1,
+            eval_examples: 256,
+            seed: 42,
+        }
+    }
+}
+
+/// A full experiment: which method, which task, model + training params.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub method: String,
+    pub task: String,
+    pub artifacts_dir: String,
+    pub model: ModelConfig,
+    pub train: TrainConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            method: "skeinformer".into(),
+            task: "listops".into(),
+            artifacts_dir: "artifacts".into(),
+            model: ModelConfig::default(),
+            train: TrainConfig::default(),
+        }
+    }
+}
+
+pub const KNOWN_TASKS: &[&str] = &["text", "listops", "retrieval", "pathfinder", "image"];
+
+pub const KNOWN_METHODS: &[&str] = &[
+    "standard",
+    "standard_nodrop",
+    "vmean",
+    "skeinformer",
+    "skein_uniform",
+    "skein_no_norm",
+    "skein_simple_norm",
+    "skein_no_psr",
+    "informer",
+    "informer_mask",
+    "linformer",
+    "linformer_jlt",
+    "performer",
+    "nystromformer",
+    "bigbird",
+    "reformer",
+];
+
+impl ExperimentConfig {
+    /// Load from a JSON file; missing fields fall back to defaults.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let j = parse(&text).with_context(|| format!("parsing config {path}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = Self::default();
+        if let Some(m) = j.get("method").and_then(Json::as_str) {
+            cfg.method = m.to_string();
+        }
+        if let Some(t) = j.get("task").and_then(Json::as_str) {
+            cfg.task = t.to_string();
+        }
+        if let Some(a) = j.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = a.to_string();
+        }
+        if let Some(model) = j.get("model") {
+            let m = &mut cfg.model;
+            read_usize(model, "vocab", &mut m.vocab);
+            read_usize(model, "seq_len", &mut m.seq_len);
+            read_usize(model, "embed", &mut m.embed);
+            read_usize(model, "heads", &mut m.heads);
+            read_usize(model, "layers", &mut m.layers);
+            read_usize(model, "ffn", &mut m.ffn);
+            read_usize(model, "classes", &mut m.classes);
+            read_usize(model, "features", &mut m.features);
+            read_usize(model, "batch", &mut m.batch);
+            if let Some(x) = model.get("lr").and_then(Json::as_f64) {
+                m.lr = x;
+            }
+        }
+        if let Some(train) = j.get("train") {
+            let t = &mut cfg.train;
+            read_usize(train, "max_steps", &mut t.max_steps);
+            read_usize(train, "eval_every", &mut t.eval_every);
+            read_usize(train, "patience", &mut t.patience);
+            read_usize(train, "grad_accum", &mut t.grad_accum);
+            read_usize(train, "eval_examples", &mut t.eval_examples);
+            if let Some(x) = train.get("seed").and_then(Json::as_i64) {
+                t.seed = x as u64;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize (for experiment provenance next to results).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(self.method.clone())),
+            ("task", Json::str(self.task.clone())),
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+            (
+                "model",
+                Json::obj(vec![
+                    ("vocab", Json::num(self.model.vocab as f64)),
+                    ("seq_len", Json::num(self.model.seq_len as f64)),
+                    ("embed", Json::num(self.model.embed as f64)),
+                    ("heads", Json::num(self.model.heads as f64)),
+                    ("layers", Json::num(self.model.layers as f64)),
+                    ("ffn", Json::num(self.model.ffn as f64)),
+                    ("classes", Json::num(self.model.classes as f64)),
+                    ("features", Json::num(self.model.features as f64)),
+                    ("batch", Json::num(self.model.batch as f64)),
+                    ("lr", Json::num(self.model.lr)),
+                ]),
+            ),
+            (
+                "train",
+                Json::obj(vec![
+                    ("max_steps", Json::num(self.train.max_steps as f64)),
+                    ("eval_every", Json::num(self.train.eval_every as f64)),
+                    ("patience", Json::num(self.train.patience as f64)),
+                    ("grad_accum", Json::num(self.train.grad_accum as f64)),
+                    ("eval_examples", Json::num(self.train.eval_examples as f64)),
+                    ("seed", Json::num(self.train.seed as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Sanity checks before a run.
+    pub fn validate(&self) -> Result<()> {
+        if !KNOWN_METHODS.contains(&self.method.as_str()) {
+            bail!("unknown method {:?}; known: {KNOWN_METHODS:?}", self.method);
+        }
+        if !KNOWN_TASKS.contains(&self.task.as_str()) {
+            bail!("unknown task {:?}; known: {KNOWN_TASKS:?}", self.task);
+        }
+        if self.model.embed % self.model.heads != 0 {
+            bail!("embed {} not divisible by heads {}", self.model.embed, self.model.heads);
+        }
+        if self.model.features > self.model.seq_len {
+            bail!(
+                "feature budget {} exceeds sequence length {}",
+                self.model.features,
+                self.model.seq_len
+            );
+        }
+        if self.train.eval_every == 0 || self.train.max_steps == 0 {
+            bail!("eval_every and max_steps must be positive");
+        }
+        Ok(())
+    }
+}
+
+fn read_usize(j: &Json, key: &str, out: &mut usize) {
+    if let Some(x) = j.get(key).and_then(Json::as_usize) {
+        *out = x;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.method = "linformer".into();
+        cfg.task = "image".into();
+        cfg.model.batch = 8;
+        cfg.train.seed = 7;
+        let j = cfg.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = parse(r#"{"method": "informer"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.method, "informer");
+        assert_eq!(cfg.task, "listops");
+        assert_eq!(cfg.model.seq_len, 128);
+    }
+
+    #[test]
+    fn rejects_unknown_method_and_task() {
+        let j = parse(r#"{"method": "magic"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j2 = parse(r#"{"task": "sudoku"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j2).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_model() {
+        let j = parse(r#"{"model": {"embed": 65}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j2 = parse(r#"{"model": {"features": 512}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j2).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("skein_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        let cfg = ExperimentConfig::default();
+        std::fs::write(&path, cfg.to_json().to_pretty()).unwrap();
+        let back = ExperimentConfig::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg, back);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,121 @@
+//! Experiment coordinator: sweeps (method × task) experiments, collects
+//! [`TrainOutcome`]s, and renders the paper's tables.  This is the L3
+//! entrypoint the `skein` CLI and the table benches drive.
+
+pub mod server;
+
+use crate::config::ExperimentConfig;
+use crate::runtime::Runtime;
+use crate::train::{run_experiment, TrainOutcome};
+use anyhow::Result;
+
+/// A sweep request: the cross product of methods and tasks.
+#[derive(Clone, Debug)]
+pub struct Sweep {
+    pub methods: Vec<String>,
+    pub tasks: Vec<String>,
+    pub base: ExperimentConfig,
+}
+
+impl Sweep {
+    pub fn new(methods: &[&str], tasks: &[&str], base: ExperimentConfig) -> Self {
+        Self {
+            methods: methods.iter().map(|s| s.to_string()).collect(),
+            tasks: tasks.iter().map(|s| s.to_string()).collect(),
+            base,
+        }
+    }
+
+    /// Expand into per-experiment configs.
+    pub fn configs(&self) -> Vec<ExperimentConfig> {
+        let mut out = Vec::with_capacity(self.methods.len() * self.tasks.len());
+        for task in &self.tasks {
+            for method in &self.methods {
+                let mut cfg = self.base.clone();
+                cfg.method = method.clone();
+                cfg.task = task.clone();
+                out.push(cfg);
+            }
+        }
+        out
+    }
+}
+
+/// Run a sweep sequentially (PJRT clients are not `Send`; experiment-level
+/// parallelism would need one process per worker) with progress logging.
+pub fn run_sweep(sweep: &Sweep, verbose: bool) -> Result<Vec<TrainOutcome>> {
+    let rt = Runtime::cpu()?;
+    let configs = sweep.configs();
+    let total = configs.len();
+    let mut outcomes = Vec::with_capacity(total);
+    for (i, cfg) in configs.iter().enumerate() {
+        if verbose {
+            eprintln!("[sweep {}/{}] {} on {}", i + 1, total, cfg.method, cfg.task);
+        }
+        let outcome = run_experiment(&rt, cfg)?;
+        if verbose {
+            eprintln!(
+                "    steps={} best_acc={:.4} {:.1}s ({:.1} ms/step)",
+                outcome.steps, outcome.best_accuracy, outcome.seconds, outcome.ms_per_step
+            );
+        }
+        outcomes.push(outcome);
+    }
+    Ok(outcomes)
+}
+
+/// Group outcomes as (task → method → outcome) for table rendering.
+pub fn index_outcomes<'a>(
+    outcomes: &'a [TrainOutcome],
+) -> std::collections::BTreeMap<&'a str, std::collections::BTreeMap<&'a str, &'a TrainOutcome>> {
+    let mut map: std::collections::BTreeMap<&str, std::collections::BTreeMap<&str, &TrainOutcome>> =
+        Default::default();
+    for o in outcomes {
+        map.entry(o.task.as_str()).or_default().insert(o.method.as_str(), o);
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::History;
+
+    #[test]
+    fn sweep_expands_cross_product() {
+        let sweep = Sweep::new(
+            &["skeinformer", "standard"],
+            &["listops", "text"],
+            ExperimentConfig::default(),
+        );
+        let cfgs = sweep.configs();
+        assert_eq!(cfgs.len(), 4);
+        assert!(cfgs.iter().any(|c| c.method == "standard" && c.task == "text"));
+        for c in &cfgs {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn outcome_indexing() {
+        let mk = |method: &str, task: &str, acc: f64| TrainOutcome {
+            method: method.into(),
+            task: task.into(),
+            steps: 10,
+            best_accuracy: acc,
+            final_accuracy: acc,
+            seconds: 1.0,
+            ms_per_step: 100.0,
+            grad_accum: 1,
+            history: History::new(),
+        };
+        let outcomes = vec![
+            mk("skeinformer", "listops", 0.4),
+            mk("standard", "listops", 0.35),
+            mk("skeinformer", "text", 0.7),
+        ];
+        let idx = index_outcomes(&outcomes);
+        assert_eq!(idx["listops"]["skeinformer"].best_accuracy, 0.4);
+        assert_eq!(idx["text"].len(), 1);
+    }
+}

@@ -1,0 +1,144 @@
+//! Batched inference service: the L3 serving path.
+//!
+//! Clients submit token sequences; a dedicated runtime thread owns the
+//! PJRT client (it is `Rc`-based and must not cross threads), groups
+//! pending requests into fixed-shape batches (padding the remainder), runs
+//! the AOT forward artifact, and answers each request with its logits.
+//! Dynamic batching policy: wait up to `max_wait` for a full batch, then
+//! flush whatever is pending — the standard latency/throughput knob.
+
+use crate::config::ExperimentConfig;
+use crate::data::{Batch, PAD};
+use crate::runtime::Runtime;
+use crate::train::TrainSession;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One inference request: raw tokens (≤ seq_len) and a reply channel.
+struct Request {
+    tokens: Vec<i32>,
+    reply: mpsc::Sender<Vec<f32>>,
+    enqueued: Instant,
+}
+
+/// Client handle to a running server.
+pub struct ServerHandle {
+    tx: mpsc::Sender<Request>,
+    join: Option<std::thread::JoinHandle<Result<ServerStats>>>,
+}
+
+/// Aggregate serving statistics, reported on shutdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    /// Mean queueing delay (ms) — time from submit to batch formation.
+    pub mean_queue_ms: f64,
+    /// Mean executed batch occupancy (filled slots / capacity).
+    pub mean_occupancy: f64,
+}
+
+impl ServerHandle {
+    /// Submit a request; returns a receiver for the logits row.
+    pub fn submit(&self, tokens: Vec<i32>) -> mpsc::Receiver<Vec<f32>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let _ = self.tx.send(Request { tokens, reply: reply_tx, enqueued: Instant::now() });
+        reply_rx
+    }
+
+    /// Stop the server and collect stats.
+    pub fn shutdown(mut self) -> Result<ServerStats> {
+        drop(self.tx);
+        self.join
+            .take()
+            .expect("server already joined")
+            .join()
+            .map_err(|_| anyhow::anyhow!("server thread panicked"))?
+    }
+}
+
+/// Start the inference server for `cfg.method` using its forward artifact.
+/// `max_wait` bounds the batching delay.
+pub fn start(cfg: ExperimentConfig, max_wait: Duration) -> ServerHandle {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let join = std::thread::spawn(move || serve_loop(cfg, rx, max_wait));
+    ServerHandle { tx, join: Some(join) }
+}
+
+fn serve_loop(
+    cfg: ExperimentConfig,
+    rx: mpsc::Receiver<Request>,
+    max_wait: Duration,
+) -> Result<ServerStats> {
+    // The PJRT client lives (and dies) on this thread.
+    let rt = Runtime::cpu()?;
+    let session = TrainSession::load(&rt, &cfg)?;
+    let capacity = session.batch();
+    let seq_len = session.seq_len();
+    let classes = session.classes();
+
+    let mut stats = ServerStats::default();
+    let mut queue_ms_sum = 0.0f64;
+    let mut occupancy_sum = 0.0f64;
+
+    'outer: loop {
+        // block for the first request of a batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break 'outer, // all senders dropped -> shutdown
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + max_wait;
+        while pending.len() < capacity {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // pack into a fixed-shape batch (pad unused slots)
+        let mut tokens = vec![PAD; capacity * seq_len];
+        let mut mask = vec![0.0f32; capacity * seq_len];
+        for (b, req) in pending.iter().enumerate() {
+            let len = req.tokens.len().min(seq_len);
+            tokens[b * seq_len..b * seq_len + len].copy_from_slice(&req.tokens[..len]);
+            for m in &mut mask[b * seq_len..b * seq_len + len] {
+                *m = 1.0;
+            }
+            queue_ms_sum += req.enqueued.elapsed().as_secs_f64() * 1e3;
+        }
+        let batch = Batch {
+            tokens,
+            mask,
+            labels: vec![0; capacity],
+            batch: capacity,
+            seq_len,
+        };
+        let logits = session.forward(&batch)?;
+        for (b, req) in pending.iter().enumerate() {
+            let row = logits[b * classes..(b + 1) * classes].to_vec();
+            let _ = req.reply.send(row);
+        }
+        stats.requests += pending.len() as u64;
+        stats.batches += 1;
+        occupancy_sum += pending.len() as f64 / capacity as f64;
+    }
+
+    if stats.requests > 0 {
+        stats.mean_queue_ms = queue_ms_sum / stats.requests as f64;
+        stats.mean_occupancy = occupancy_sum / stats.batches.max(1) as f64;
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    // integration tests with real artifacts live in rust/tests/; packing
+    // logic here is covered through them.
+}

@@ -1,0 +1,203 @@
+//! Image classification — the CIFAR-10 substitute (DESIGN.md §4):
+//! procedurally rendered grayscale glyphs on a small grid, flattened
+//! row-major into intensity-bucket tokens.  Ten classes = five shape
+//! families × two sizes, with pixel noise and random placement, so the
+//! classifier must integrate 2-D structure from a 1-D pixel sequence —
+//! the property the LRA Image task tests.
+
+use super::{Example, Task, CLS};
+use crate::rng::Rng;
+
+const INTENSITY0: i32 = 3; // 8 intensity buckets: ids 3..10
+const N_BUCKETS: i32 = 8;
+
+#[derive(Clone, Copy, Debug)]
+enum Shape {
+    Square,
+    Cross,
+    DiagTL, // main diagonal
+    HBar,
+    VBar,
+}
+
+const SHAPES: [Shape; 5] = [Shape::Square, Shape::Cross, Shape::DiagTL, Shape::HBar, Shape::VBar];
+
+pub struct ImageTask {
+    grid: usize,
+    seq_len: usize,
+}
+
+impl ImageTask {
+    pub fn new(seq_len: usize) -> Self {
+        let mut grid = 2;
+        while (grid + 1) * (grid + 1) + 1 <= seq_len {
+            grid += 1;
+        }
+        Self { grid, seq_len }
+    }
+
+    pub fn grid(&self) -> usize {
+        self.grid
+    }
+
+    fn render(&self, shape: Shape, big: bool, rng: &mut Rng) -> Vec<f32> {
+        let g = self.grid;
+        let size = if big { g * 3 / 4 } else { g * 2 / 5 };
+        let size = size.max(2);
+        let r0 = rng.below(g - size + 1);
+        let c0 = rng.below(g - size + 1);
+        let mut img = vec![0.0f32; g * g];
+        let put = |r: usize, c: usize, img: &mut Vec<f32>| {
+            if r < g && c < g {
+                img[r * g + c] = 1.0;
+            }
+        };
+        match shape {
+            Shape::Square => {
+                for i in 0..size {
+                    put(r0, c0 + i, &mut img);
+                    put(r0 + size - 1, c0 + i, &mut img);
+                    put(r0 + i, c0, &mut img);
+                    put(r0 + i, c0 + size - 1, &mut img);
+                }
+            }
+            Shape::Cross => {
+                let mid = size / 2;
+                for i in 0..size {
+                    put(r0 + mid, c0 + i, &mut img);
+                    put(r0 + i, c0 + mid, &mut img);
+                }
+            }
+            Shape::DiagTL => {
+                for i in 0..size {
+                    put(r0 + i, c0 + i, &mut img);
+                }
+            }
+            Shape::HBar => {
+                let mid = size / 2;
+                for i in 0..size {
+                    put(r0 + mid, c0 + i, &mut img);
+                }
+            }
+            Shape::VBar => {
+                let mid = size / 2;
+                for i in 0..size {
+                    put(r0 + i, c0 + mid, &mut img);
+                }
+            }
+        }
+        // pixel noise + intensity jitter
+        for px in img.iter_mut() {
+            if *px > 0.0 {
+                *px = (0.7 + 0.3 * rng.uniform()).min(1.0);
+            } else if rng.bernoulli(0.04) {
+                *px = 0.3 * rng.uniform();
+            }
+        }
+        img
+    }
+
+    fn bucketize(img: &[f32]) -> Vec<i32> {
+        img.iter()
+            .map(|&x| {
+                let b = (x * (N_BUCKETS - 1) as f32).round() as i32;
+                INTENSITY0 + b.clamp(0, N_BUCKETS - 1)
+            })
+            .collect()
+    }
+}
+
+impl Task for ImageTask {
+    fn name(&self) -> &'static str {
+        "image"
+    }
+
+    fn classes(&self) -> usize {
+        10 // 5 shapes × 2 sizes
+    }
+
+    fn vocab(&self) -> usize {
+        (INTENSITY0 + N_BUCKETS) as usize
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let class = rng.below(10);
+        let shape = SHAPES[class % 5];
+        let big = class >= 5;
+        let img = self.render(shape, big, rng);
+        let mut tokens = Vec::with_capacity(self.grid * self.grid + 1);
+        tokens.push(CLS);
+        tokens.extend(Self::bucketize(&img));
+        debug_assert!(tokens.len() <= self.seq_len);
+        Example { tokens, label: class as i32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_classes_all_produced() {
+        let task = ImageTask::new(128);
+        let mut rng = Rng::new(1);
+        let mut seen = [false; 10];
+        for _ in 0..500 {
+            seen[task.sample(&mut rng).label as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "missing classes: {seen:?}");
+    }
+
+    #[test]
+    fn images_have_shape_pixels() {
+        let task = ImageTask::new(128);
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let ex = task.sample(&mut rng);
+            // bright pixels (upper intensity buckets) must exist
+            let bright = ex.tokens[1..]
+                .iter()
+                .filter(|&&t| t >= INTENSITY0 + N_BUCKETS / 2)
+                .count();
+            assert!(bright >= 2, "almost-empty image");
+        }
+    }
+
+    #[test]
+    fn big_and_small_variants_differ_in_extent() {
+        let task = ImageTask::new(128);
+        let g = task.grid();
+        let mut rng = Rng::new(3);
+        // average bright-pixel count: big classes (5..10) > small (0..5)
+        let mut bright_small = 0usize;
+        let mut bright_big = 0usize;
+        let mut n_small = 0usize;
+        let mut n_big = 0usize;
+        for _ in 0..600 {
+            let ex = task.sample(&mut rng);
+            let bright = ex.tokens[1..]
+                .iter()
+                .filter(|&&t| t >= INTENSITY0 + N_BUCKETS / 2)
+                .count();
+            if ex.label >= 5 {
+                bright_big += bright;
+                n_big += 1;
+            } else {
+                bright_small += bright;
+                n_small += 1;
+            }
+        }
+        let avg_small = bright_small as f64 / n_small as f64;
+        let avg_big = bright_big as f64 / n_big as f64;
+        assert!(avg_big > avg_small, "big {avg_big} !> small {avg_small} (grid {g})");
+    }
+
+    #[test]
+    fn bucketize_range() {
+        let img = vec![0.0, 0.5, 1.0];
+        let toks = ImageTask::bucketize(&img);
+        assert_eq!(toks[0], INTENSITY0);
+        assert_eq!(toks[2], INTENSITY0 + N_BUCKETS - 1);
+        assert!(toks[1] > toks[0] && toks[1] < toks[2]);
+    }
+}

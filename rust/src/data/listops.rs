@@ -1,0 +1,235 @@
+//! ListOps — an *exact* reproduction of the LRA task family: ListOps is a
+//! synthetic dataset by construction (Nangia & Bowman 2018), so no
+//! substitution is needed, only a generator with bounded length.
+//!
+//! Expressions are nested prefix operations over digits:
+//! `[MAX 2 9 [MIN 4 7 ] 0 ]` → 9.  Operators: MIN, MAX, MED (median),
+//! SM (sum mod 10).  The label is the evaluated result (10 classes).
+
+use super::{Example, Task, CLS};
+use crate::rng::Rng;
+
+// token ids (see data/mod.rs convention; 3.. task symbols)
+const DIGIT0: i32 = 3; // digits 0..9 -> ids 3..12
+const OPEN_MIN: i32 = 13;
+const OPEN_MAX: i32 = 14;
+const OPEN_MED: i32 = 15;
+const OPEN_SM: i32 = 16;
+const CLOSE: i32 = 17;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Op {
+    Min,
+    Max,
+    Med,
+    SumMod,
+}
+
+impl Op {
+    fn token(self) -> i32 {
+        match self {
+            Op::Min => OPEN_MIN,
+            Op::Max => OPEN_MAX,
+            Op::Med => OPEN_MED,
+            Op::SumMod => OPEN_SM,
+        }
+    }
+
+    fn apply(self, args: &[i64]) -> i64 {
+        match self {
+            Op::Min => *args.iter().min().unwrap(),
+            Op::Max => *args.iter().max().unwrap(),
+            Op::Med => {
+                let mut v = args.to_vec();
+                v.sort_unstable();
+                v[v.len() / 2]
+            }
+            Op::SumMod => args.iter().sum::<i64>() % 10,
+        }
+    }
+}
+
+pub struct ListOpsTask {
+    seq_len: usize,
+    max_depth: usize,
+    max_args: usize,
+}
+
+impl ListOpsTask {
+    pub fn new(seq_len: usize) -> Self {
+        Self { seq_len, max_depth: 4, max_args: 5 }
+    }
+
+    /// Generate one expression tree, emitting tokens; returns its value.
+    fn gen_expr(&self, rng: &mut Rng, depth: usize, budget: &mut usize, out: &mut Vec<i32>) -> i64 {
+        // each node costs at least 2 tokens (open+close) or 1 (digit)
+        let want_leaf = depth >= self.max_depth || *budget < 6 || rng.bernoulli(0.35);
+        if want_leaf {
+            let v = rng.below(10) as i64;
+            out.push(DIGIT0 + v as i32);
+            *budget = budget.saturating_sub(1);
+            return v;
+        }
+        let op = *[Op::Min, Op::Max, Op::Med, Op::SumMod]
+            .get(rng.below(4))
+            .unwrap();
+        out.push(op.token());
+        *budget = budget.saturating_sub(2); // open + close
+        let n_args = 2 + rng.below(self.max_args - 1);
+        let mut args = Vec::with_capacity(n_args);
+        for _ in 0..n_args {
+            if *budget == 0 {
+                break;
+            }
+            args.push(self.gen_expr(rng, depth + 1, budget, out));
+        }
+        if args.is_empty() {
+            // degenerate budget case: force one digit argument
+            let v = rng.below(10) as i64;
+            out.push(DIGIT0 + v as i32);
+            args.push(v);
+        }
+        out.push(CLOSE);
+        op.apply(&args)
+    }
+
+    /// Evaluate a token sequence back to its value (used by tests to verify
+    /// generator/evaluator agreement — the generator's label must equal an
+    /// independent parse).
+    pub fn evaluate(tokens: &[i32]) -> Option<i64> {
+        let mut pos = 0usize;
+        let toks: Vec<i32> = tokens.iter().copied().filter(|&t| t != CLS).collect();
+        let v = Self::eval_at(&toks, &mut pos)?;
+        if pos == toks.len() {
+            Some(v)
+        } else {
+            None
+        }
+    }
+
+    fn eval_at(tokens: &[i32], pos: &mut usize) -> Option<i64> {
+        let t = *tokens.get(*pos)?;
+        *pos += 1;
+        if (DIGIT0..DIGIT0 + 10).contains(&t) {
+            return Some((t - DIGIT0) as i64);
+        }
+        let op = match t {
+            OPEN_MIN => Op::Min,
+            OPEN_MAX => Op::Max,
+            OPEN_MED => Op::Med,
+            OPEN_SM => Op::SumMod,
+            _ => return None,
+        };
+        let mut args = Vec::new();
+        loop {
+            let nt = *tokens.get(*pos)?;
+            if nt == CLOSE {
+                *pos += 1;
+                break;
+            }
+            args.push(Self::eval_at(tokens, pos)?);
+        }
+        if args.is_empty() {
+            None
+        } else {
+            Some(op.apply(&args))
+        }
+    }
+}
+
+impl Task for ListOpsTask {
+    fn name(&self) -> &'static str {
+        "listops"
+    }
+
+    fn classes(&self) -> usize {
+        10
+    }
+
+    fn vocab(&self) -> usize {
+        (CLOSE + 1) as usize
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let mut tokens = vec![CLS];
+        let mut budget = self.seq_len - 2;
+        let value = self.gen_expr(rng, 0, &mut budget, &mut tokens);
+        debug_assert!(tokens.len() <= self.seq_len);
+        Example { tokens, label: value as i32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_label_matches_independent_evaluator() {
+        let task = ListOpsTask::new(128);
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let ex = task.sample(&mut rng);
+            let val = ListOpsTask::evaluate(&ex.tokens)
+                .unwrap_or_else(|| panic!("unparseable: {:?}", ex.tokens));
+            assert_eq!(val as i32, ex.label);
+        }
+    }
+
+    #[test]
+    fn respects_sequence_budget() {
+        let task = ListOpsTask::new(64);
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let ex = task.sample(&mut rng);
+            assert!(ex.tokens.len() <= 64, "len {}", ex.tokens.len());
+        }
+    }
+
+    #[test]
+    fn operators_apply_correctly() {
+        assert_eq!(Op::Min.apply(&[3, 1, 4]), 1);
+        assert_eq!(Op::Max.apply(&[3, 1, 4]), 4);
+        assert_eq!(Op::Med.apply(&[3, 1, 4]), 3);
+        assert_eq!(Op::SumMod.apply(&[7, 8]), 5);
+    }
+
+    #[test]
+    fn evaluator_handles_nesting() {
+        // [MAX 2 [MIN 9 4] 0] = max(2, 4, 0) = 4
+        let toks = vec![
+            OPEN_MAX,
+            DIGIT0 + 2,
+            OPEN_MIN,
+            DIGIT0 + 9,
+            DIGIT0 + 4,
+            CLOSE,
+            DIGIT0,
+            CLOSE,
+        ];
+        assert_eq!(ListOpsTask::evaluate(&toks), Some(4));
+    }
+
+    #[test]
+    fn evaluator_rejects_malformed() {
+        assert_eq!(ListOpsTask::evaluate(&[OPEN_MIN, DIGIT0]), None); // no close
+        assert_eq!(ListOpsTask::evaluate(&[CLOSE]), None);
+        assert_eq!(ListOpsTask::evaluate(&[OPEN_SM, CLOSE]), None); // no args
+    }
+
+    #[test]
+    fn expressions_are_actually_nested_sometimes() {
+        let task = ListOpsTask::new(128);
+        let mut rng = Rng::new(5);
+        let mut saw_nested = false;
+        for _ in 0..100 {
+            let ex = task.sample(&mut rng);
+            let opens =
+                ex.tokens.iter().filter(|&&t| (OPEN_MIN..=OPEN_SM).contains(&t)).count();
+            if opens >= 2 {
+                saw_nested = true;
+                break;
+            }
+        }
+        assert!(saw_nested, "never generated a nested expression");
+    }
+}

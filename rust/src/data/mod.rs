@@ -1,0 +1,200 @@
+//! Synthetic LRA-style tasks (DESIGN.md §4 documents each substitution).
+//!
+//! Every task implements [`Task`]: an infinite, seeded stream of
+//! `(tokens, label)` examples over a shared vocabulary budget.  The
+//! [`Batcher`] pads/truncates to the model's sequence length and packs the
+//! `(tokens, mask, labels)` arrays the AOT train-step artifact consumes.
+//!
+//! Task vocabulary convention (shared `vocab = 64` budget):
+//! * id 0 — PAD (always masked)
+//! * id 1 — CLS/BOS
+//! * id 2 — SEP
+//! * ids 3.. — task-specific symbols
+
+mod image;
+mod listops;
+mod pathfinder;
+mod retrieval;
+mod text;
+
+pub use image::ImageTask;
+pub use listops::ListOpsTask;
+pub use pathfinder::PathfinderTask;
+pub use retrieval::RetrievalTask;
+pub use text::TextTask;
+
+use crate::rng::Rng;
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+
+/// One labelled example: token ids (un-padded) and a class label.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub tokens: Vec<i32>,
+    pub label: i32,
+}
+
+/// A synthetic classification task over token sequences.
+pub trait Task: Sync {
+    /// Registry name (matches config and the paper's task columns).
+    fn name(&self) -> &'static str;
+    /// Number of classes.
+    fn classes(&self) -> usize;
+    /// Upper bound on token ids + 1 (must fit the model vocab).
+    fn vocab(&self) -> usize;
+    /// Draw one example.
+    fn sample(&self, rng: &mut Rng) -> Example;
+}
+
+/// Build a task by name.
+pub fn by_name(name: &str, seq_len: usize) -> Option<Box<dyn Task>> {
+    Some(match name {
+        "listops" => Box::new(ListOpsTask::new(seq_len)),
+        "text" => Box::new(TextTask::new(seq_len)),
+        "retrieval" => Box::new(RetrievalTask::new(seq_len)),
+        "pathfinder" => Box::new(PathfinderTask::new(seq_len)),
+        "image" => Box::new(ImageTask::new(seq_len)),
+        _ => return None,
+    })
+}
+
+/// All task names, in the paper's Table-1 column order.
+pub const TASK_NAMES: &[&str] = &["text", "listops", "retrieval", "pathfinder", "image"];
+
+/// A packed batch in the exact layout the train artifact expects.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// (batch × seq_len) row-major token ids.
+    pub tokens: Vec<i32>,
+    /// (batch × seq_len) 0/1 validity mask.
+    pub mask: Vec<f32>,
+    /// (batch,) labels.
+    pub labels: Vec<i32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+/// Pads/truncates examples into fixed-shape batches.
+pub struct Batcher<'a> {
+    task: &'a dyn Task,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(task: &'a dyn Task, batch: usize, seq_len: usize) -> Self {
+        Self { task, batch, seq_len }
+    }
+
+    /// Draw one batch from the stream.
+    pub fn next_batch(&self, rng: &mut Rng) -> Batch {
+        let mut tokens = vec![PAD; self.batch * self.seq_len];
+        let mut mask = vec![0.0f32; self.batch * self.seq_len];
+        let mut labels = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            let ex = self.task.sample(rng);
+            let len = ex.tokens.len().min(self.seq_len);
+            let row = b * self.seq_len;
+            tokens[row..row + len].copy_from_slice(&ex.tokens[..len]);
+            for m in &mut mask[row..row + len] {
+                *m = 1.0;
+            }
+            labels.push(ex.label);
+        }
+        Batch { tokens, mask, labels, batch: self.batch, seq_len: self.seq_len }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_tasks(seq_len: usize) -> Vec<Box<dyn Task>> {
+        TASK_NAMES.iter().map(|n| by_name(n, seq_len).unwrap()).collect()
+    }
+
+    #[test]
+    fn registry_covers_table1_columns() {
+        for name in TASK_NAMES {
+            assert!(by_name(name, 128).is_some(), "{name}");
+        }
+        assert!(by_name("sudoku", 128).is_none());
+    }
+
+    #[test]
+    fn examples_respect_vocab_and_classes() {
+        for task in all_tasks(128) {
+            let mut rng = Rng::new(1);
+            for _ in 0..50 {
+                let ex = task.sample(&mut rng);
+                assert!(!ex.tokens.is_empty(), "{}", task.name());
+                assert!(
+                    ex.tokens.iter().all(|&t| (t as usize) < task.vocab()),
+                    "{} token out of vocab",
+                    task.name()
+                );
+                assert!(
+                    (ex.label as usize) < task.classes(),
+                    "{} label {} out of range",
+                    task.name(),
+                    ex.label
+                );
+                assert!(task.vocab() <= 64, "{} vocab too large", task.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_given_seed() {
+        for task in all_tasks(128) {
+            let a = task.sample(&mut Rng::new(9));
+            let b = task.sample(&mut Rng::new(9));
+            assert_eq!(a.tokens, b.tokens, "{}", task.name());
+            assert_eq!(a.label, b.label);
+        }
+    }
+
+    #[test]
+    fn labels_are_reasonably_balanced() {
+        for task in all_tasks(128) {
+            let mut rng = Rng::new(3);
+            let mut counts = vec![0usize; task.classes()];
+            let n = 600;
+            for _ in 0..n {
+                counts[task.sample(&mut rng).label as usize] += 1;
+            }
+            let max = *counts.iter().max().unwrap();
+            assert!(
+                max < n * 9 / 10,
+                "{}: dominant class {max}/{n} ({counts:?})",
+                task.name()
+            );
+        }
+    }
+
+    #[test]
+    fn batcher_pads_and_masks() {
+        let task = by_name("text", 64).unwrap();
+        let batcher = Batcher::new(task.as_ref(), 4, 64);
+        let batch = batcher.next_batch(&mut Rng::new(5));
+        assert_eq!(batch.tokens.len(), 4 * 64);
+        assert_eq!(batch.mask.len(), 4 * 64);
+        assert_eq!(batch.labels.len(), 4);
+        for b in 0..4 {
+            for i in 0..64 {
+                let t = batch.tokens[b * 64 + i];
+                let m = batch.mask[b * 64 + i];
+                if m == 0.0 {
+                    assert_eq!(t, PAD, "padded position has non-PAD token");
+                }
+            }
+            // mask is a prefix of ones
+            let row = &batch.mask[b * 64..(b + 1) * 64];
+            let ones = row.iter().take_while(|&&m| m == 1.0).count();
+            assert!(row[ones..].iter().all(|&m| m == 0.0));
+            assert!(ones > 0);
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Pathfinder — the LRA Pathfinder substitute (DESIGN.md §4): decide
+//! whether two endpoint markers on a small grid are connected by a drawn
+//! path.  Positive examples draw one self-avoiding lattice path between
+//! the endpoints plus distractor fragments; negatives draw two *disjoint*
+//! fragments starting at the endpoints plus distractors.  The image is
+//! flattened row-major into a pixel-token sequence, so solving it requires
+//! integrating spatial evidence across the whole sequence — the
+//! long-range-dependency property the LRA task tests.
+
+use super::{Example, Task, CLS};
+use crate::rng::Rng;
+
+const EMPTY: i32 = 3;
+const PATH: i32 = 4;
+const ENDPOINT: i32 = 5;
+
+pub struct PathfinderTask {
+    grid: usize,
+    seq_len: usize,
+}
+
+impl PathfinderTask {
+    pub fn new(seq_len: usize) -> Self {
+        // grid² + CLS must fit the sequence budget
+        let mut grid = 2;
+        while (grid + 1) * (grid + 1) + 1 <= seq_len {
+            grid += 1;
+        }
+        Self { grid, seq_len }
+    }
+
+    pub fn grid(&self) -> usize {
+        self.grid
+    }
+
+    fn idx(&self, r: usize, c: usize) -> usize {
+        r * self.grid + c
+    }
+
+    /// Random walk from `start` biased toward `goal`; marks cells PATH.
+    /// Returns true if the goal was reached.
+    fn walk(
+        &self,
+        cells: &mut [i32],
+        start: (usize, usize),
+        goal: (usize, usize),
+        max_steps: usize,
+        rng: &mut Rng,
+    ) -> bool {
+        let (mut r, mut c) = start;
+        for _ in 0..max_steps {
+            if (r, c) == goal {
+                return true;
+            }
+            // biased step: 70% toward the goal, else random
+            let toward = rng.bernoulli(0.7);
+            let dr = goal.0 as i64 - r as i64;
+            let dc = goal.1 as i64 - c as i64;
+            let (nr, nc) = if toward && dr.abs() >= dc.abs() && dr != 0 {
+                ((r as i64 + dr.signum()) as usize, c)
+            } else if toward && dc != 0 {
+                (r, (c as i64 + dc.signum()) as usize)
+            } else {
+                match rng.below(4) {
+                    0 if r + 1 < self.grid => (r + 1, c),
+                    1 if r > 0 => (r - 1, c),
+                    2 if c + 1 < self.grid => (r, c + 1),
+                    _ if c > 0 => (r, c - 1),
+                    _ => (r, c),
+                }
+            };
+            r = nr;
+            c = nc;
+            if cells[self.idx(r, c)] == EMPTY {
+                cells[self.idx(r, c)] = PATH;
+            }
+        }
+        (r, c) == goal
+    }
+
+    /// Connectivity oracle: BFS over PATH/ENDPOINT cells (tests verify the
+    /// generated label against this).
+    pub fn connected(cells: &[i32], grid: usize) -> bool {
+        let endpoints: Vec<usize> = cells
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v == ENDPOINT)
+            .map(|(i, _)| i)
+            .collect();
+        if endpoints.len() != 2 {
+            return false;
+        }
+        let mut seen = vec![false; cells.len()];
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(endpoints[0]);
+        seen[endpoints[0]] = true;
+        while let Some(i) = queue.pop_front() {
+            if i == endpoints[1] {
+                return true;
+            }
+            let (r, c) = (i / grid, i % grid);
+            let mut push = |nr: usize, nc: usize, queue: &mut std::collections::VecDeque<usize>| {
+                let j = nr * grid + nc;
+                if !seen[j] && (cells[j] == PATH || cells[j] == ENDPOINT) {
+                    seen[j] = true;
+                    queue.push_back(j);
+                }
+            };
+            if r + 1 < grid {
+                push(r + 1, c, &mut queue);
+            }
+            if r > 0 {
+                push(r - 1, c, &mut queue);
+            }
+            if c + 1 < grid {
+                push(r, c + 1, &mut queue);
+            }
+            if c > 0 {
+                push(r, c - 1, &mut queue);
+            }
+        }
+        false
+    }
+
+    fn random_cell(&self, rng: &mut Rng) -> (usize, usize) {
+        (rng.below(self.grid), rng.below(self.grid))
+    }
+}
+
+impl Task for PathfinderTask {
+    fn name(&self) -> &'static str {
+        "pathfinder"
+    }
+
+    fn classes(&self) -> usize {
+        2
+    }
+
+    fn vocab(&self) -> usize {
+        (ENDPOINT + 1) as usize
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let g = self.grid;
+        loop {
+            let mut cells = vec![EMPTY; g * g];
+            let want_connected = rng.bernoulli(0.5);
+            // two endpoints, far apart
+            let a = (rng.below(g / 2), rng.below(g / 2));
+            let b = (g / 2 + rng.below(g - g / 2), g / 2 + rng.below(g - g / 2));
+            if a == b {
+                continue;
+            }
+            if want_connected {
+                let ok = self.walk(&mut cells, a, b, g * g * 3, rng);
+                if !ok {
+                    continue;
+                }
+            } else {
+                // two short disjoint fragments from each endpoint
+                let mid1 = (a.0, (a.1 + 1).min(g - 1));
+                let mid2 = (b.0, b.1.saturating_sub(1));
+                self.walk(&mut cells, a, mid1, g / 2, rng);
+                self.walk(&mut cells, b, mid2, g / 2, rng);
+            }
+            // distractor fragments
+            for _ in 0..2 {
+                let s = self.random_cell(rng);
+                let t = self.random_cell(rng);
+                self.walk(&mut cells, s, t, g, rng);
+            }
+            cells[self.idx(a.0, a.1)] = ENDPOINT;
+            cells[self.idx(b.0, b.1)] = ENDPOINT;
+
+            // verify label with the BFS oracle; regenerate on mismatch
+            // (distractors can accidentally bridge the fragments)
+            let label = Self::connected(&cells, g);
+            if label != want_connected {
+                continue;
+            }
+            let mut tokens = Vec::with_capacity(g * g + 1);
+            tokens.push(CLS);
+            tokens.extend_from_slice(&cells);
+            debug_assert!(tokens.len() <= self.seq_len);
+            return Example { tokens, label: i32::from(label) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_fits_budget() {
+        for seq in [64, 128, 256] {
+            let t = PathfinderTask::new(seq);
+            assert!(t.grid() * t.grid() + 1 <= seq);
+            assert!((t.grid() + 1) * (t.grid() + 1) + 1 > seq);
+        }
+    }
+
+    #[test]
+    fn labels_verified_by_bfs_oracle() {
+        let task = PathfinderTask::new(128);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let ex = task.sample(&mut rng);
+            let cells = &ex.tokens[1..];
+            let got = PathfinderTask::connected(cells, task.grid());
+            assert_eq!(i32::from(got), ex.label);
+        }
+    }
+
+    #[test]
+    fn exactly_two_endpoints() {
+        let task = PathfinderTask::new(128);
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let ex = task.sample(&mut rng);
+            let n_end = ex.tokens.iter().filter(|&&t| t == ENDPOINT).count();
+            assert_eq!(n_end, 2);
+        }
+    }
+
+    #[test]
+    fn bfs_oracle_on_handcrafted_grids() {
+        // 3×3: path across the top row
+        let g = 3;
+        let mut cells = vec![EMPTY; 9];
+        cells[0] = ENDPOINT;
+        cells[1] = PATH;
+        cells[2] = ENDPOINT;
+        assert!(PathfinderTask::connected(&cells, g));
+        cells[1] = EMPTY;
+        assert!(!PathfinderTask::connected(&cells, g));
+        // diagonal adjacency does NOT connect
+        cells[4] = PATH;
+        assert!(!PathfinderTask::connected(&cells, g));
+    }
+}

@@ -1,0 +1,155 @@
+//! Text classification — the IMDb substitute (DESIGN.md §4): a synthetic
+//! "sentiment grammar" over a small word-id vocabulary.  Documents are a
+//! sequence of clauses; each clause contributes polarity (positive /
+//! negative word ids), optionally flipped by a preceding negation token,
+//! diluted by neutral filler.  The label is the sign of the summed
+//! polarity — token-level evidence spread over a long, variable-length
+//! sequence, which is the property the LRA Text task exercises.
+
+use super::{Example, Task, CLS, SEP};
+use crate::rng::Rng;
+
+const NEG_WORD0: i32 = 3; // 8 negative word ids: 3..10
+const POS_WORD0: i32 = 11; // 8 positive word ids: 11..18
+const NEUTRAL0: i32 = 19; // 24 neutral filler ids: 19..42
+const NOT: i32 = 43; // negation token
+const INTENSIFIER: i32 = 44; // doubles the next clause's weight
+
+pub struct TextTask {
+    seq_len: usize,
+}
+
+impl TextTask {
+    pub fn new(seq_len: usize) -> Self {
+        Self { seq_len }
+    }
+
+    /// Ground-truth polarity score of a token sequence (the label oracle,
+    /// also used by tests).
+    pub fn polarity(tokens: &[i32]) -> i32 {
+        let mut score = 0i32;
+        let mut negate = false;
+        let mut weight = 1i32;
+        for &t in tokens {
+            match t {
+                NOT => negate = !negate,
+                INTENSIFIER => weight = 2,
+                t if (NEG_WORD0..NEG_WORD0 + 8).contains(&t) => {
+                    score += if negate { weight } else { -weight };
+                    negate = false;
+                    weight = 1;
+                }
+                t if (POS_WORD0..POS_WORD0 + 8).contains(&t) => {
+                    score += if negate { -weight } else { weight };
+                    negate = false;
+                    weight = 1;
+                }
+                _ => {}
+            }
+        }
+        score
+    }
+}
+
+impl Task for TextTask {
+    fn name(&self) -> &'static str {
+        "text"
+    }
+
+    fn classes(&self) -> usize {
+        2
+    }
+
+    fn vocab(&self) -> usize {
+        (INTENSIFIER + 1) as usize
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Example {
+        // choose a target sentiment, then generate until the polarity is
+        // clearly on that side (|score| >= 2) so labels are unambiguous.
+        loop {
+            let min_len = self.seq_len / 2;
+            let len = min_len + rng.below(self.seq_len - min_len);
+            let mut tokens = Vec::with_capacity(len);
+            tokens.push(CLS);
+            while tokens.len() < len - 1 {
+                let roll = rng.uniform();
+                if roll < 0.62 {
+                    tokens.push(NEUTRAL0 + rng.below(24) as i32);
+                } else if roll < 0.70 {
+                    tokens.push(NOT);
+                } else if roll < 0.74 {
+                    tokens.push(INTENSIFIER);
+                } else if roll < 0.87 {
+                    tokens.push(POS_WORD0 + rng.below(8) as i32);
+                } else {
+                    tokens.push(NEG_WORD0 + rng.below(8) as i32);
+                }
+                // occasional clause boundary
+                if rng.bernoulli(0.05) && tokens.len() < len - 1 {
+                    tokens.push(SEP);
+                }
+            }
+            let score = Self::polarity(&tokens);
+            if score.abs() >= 2 {
+                return Example { tokens, label: i32::from(score > 0) };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polarity_oracle_basics() {
+        assert_eq!(TextTask::polarity(&[POS_WORD0, POS_WORD0 + 3]), 2);
+        assert_eq!(TextTask::polarity(&[NEG_WORD0]), -1);
+        assert_eq!(TextTask::polarity(&[NOT, POS_WORD0]), -1);
+        assert_eq!(TextTask::polarity(&[NOT, NOT, POS_WORD0]), 1);
+        assert_eq!(TextTask::polarity(&[INTENSIFIER, NEG_WORD0]), -2);
+        assert_eq!(TextTask::polarity(&[NEUTRAL0, NEUTRAL0 + 5]), 0);
+    }
+
+    #[test]
+    fn labels_match_oracle() {
+        let task = TextTask::new(128);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let ex = task.sample(&mut rng);
+            let score = TextTask::polarity(&ex.tokens);
+            assert!(score.abs() >= 2);
+            assert_eq!(ex.label, i32::from(score > 0));
+        }
+    }
+
+    #[test]
+    fn lengths_are_variable_and_bounded() {
+        let task = TextTask::new(128);
+        let mut rng = Rng::new(2);
+        let lens: Vec<usize> = (0..100).map(|_| task.sample(&mut rng).tokens.len()).collect();
+        assert!(lens.iter().all(|&l| l <= 128 && l >= 32));
+        let distinct: std::collections::HashSet<_> = lens.iter().collect();
+        assert!(distinct.len() > 10, "lengths not variable");
+    }
+
+    #[test]
+    fn negation_actually_flips_labels_sometimes() {
+        // ensure NOT tokens appear and matter — remove them and the
+        // polarity should change for some documents.
+        let task = TextTask::new(128);
+        let mut rng = Rng::new(3);
+        let mut flipped = false;
+        for _ in 0..200 {
+            let ex = task.sample(&mut rng);
+            let without: Vec<i32> =
+                ex.tokens.iter().copied().filter(|&t| t != NOT).collect();
+            if TextTask::polarity(&without).signum() != TextTask::polarity(&ex.tokens).signum() {
+                flipped = true;
+                break;
+            }
+        }
+        assert!(flipped, "negation never mattered");
+    }
+}

@@ -1,0 +1,44 @@
+//! # Skeinformer: sketching-based efficient self-attention
+//!
+//! A full-system reproduction of *"Sketching as a Tool for Understanding and
+//! Accelerating Self-attention for Long Sequences"* (NAACL 2022) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — coordinator: experiment sweeps, the training
+//!   loop driving AOT-compiled XLA artifacts, synthetic LRA data
+//!   generators, a batched inference service, and a pure-rust attention
+//!   substrate used by the approximation study (Figure 1) and the
+//!   property-test suites.
+//! * **L2 (`python/compile/`)** — the jax transformer + per-method
+//!   attention, lowered once to HLO text artifacts (`make artifacts`).
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the
+//!   column-sampled attention hot spot, validated against a pure-jnp
+//!   oracle.
+//!
+//! Python never runs on the request path: the rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and executes
+//! them directly.  See `DESIGN.md` for the experiment index.
+
+pub mod attention;
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod flops;
+pub mod json;
+pub mod metrics;
+pub mod pool;
+pub mod prop;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod sketch;
+pub mod synth_qkv;
+pub mod tensor;
+pub mod train;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

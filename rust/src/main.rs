@@ -1,0 +1,244 @@
+//! `skein` — the Skeinformer coordinator CLI.
+//!
+//! Subcommands:
+//!   train    — train one (method, task) experiment via the AOT artifacts
+//!   sweep    — run a method × task sweep and print Tables 1-3
+//!   fig1     — the Figure-1 spectral-norm approximation study
+//!   flops    — print the Table-5 FLOPs model
+//!   serve    — run the batched inference service demo
+//!   inspect  — dump an artifact manifest summary
+//!
+//! Run `skein help` for flags.
+
+use anyhow::{bail, Context, Result};
+use skeinformer::{
+    attention, bench_util, cli::Args, config::ExperimentConfig, coordinator, data, flops, json,
+    metrics::Percentiles, report, rng::Rng, runtime::Runtime, synth_qkv, tensor, train,
+};
+use std::time::Duration;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("fig1") => cmd_fig1(&args),
+        Some("flops") => cmd_flops(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?} — try `skein help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "skein {} — Skeinformer (NAACL 2022) reproduction\n\n\
+         USAGE: skein <subcommand> [--flags]\n\n\
+         SUBCOMMANDS\n\
+           train    --method skeinformer --task listops [--steps N] [--eval-every N]\n\
+           sweep    --methods a,b,c --tasks x,y [--steps N]\n\
+           fig1     [--n 1024] [--trials 8] [--mode pretrained|random]\n\
+           flops    [--n 4096] [--d 256] [--p 32]\n\
+           serve    --method skeinformer [--requests N] [--max-wait-ms N]\n\
+           inspect  <artifacts/..._manifest.json>\n\n\
+         Artifacts come from `make artifacts` (python AOT path).",
+        skeinformer::version()
+    );
+}
+
+fn base_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.method = args.get_or("method", "skeinformer").to_string();
+    cfg.task = args.get_or("task", "listops").to_string();
+    cfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
+    cfg.train.max_steps = args.get_usize("steps", cfg.train.max_steps)?;
+    cfg.train.eval_every = args.get_usize("eval-every", cfg.train.eval_every)?;
+    cfg.train.patience = args.get_usize("patience", cfg.train.patience)?;
+    cfg.train.seed = args.get_u64("seed", cfg.train.seed)?;
+    cfg.train.eval_examples = args.get_usize("eval-examples", cfg.train.eval_examples)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    let rt = Runtime::cpu()?;
+    eprintln!("training {} on {} (artifacts: {})", cfg.method, cfg.task, cfg.artifacts_dir);
+    let outcome = train::run_experiment(&rt, &cfg)?;
+    println!(
+        "method={} task={} steps={} best_acc={:.4} final_acc={:.4} time={:.1}s ms/step={:.1}",
+        outcome.method,
+        outcome.task,
+        outcome.steps,
+        outcome.best_accuracy,
+        outcome.final_accuracy,
+        outcome.seconds,
+        outcome.ms_per_step
+    );
+    for p in outcome.history.points() {
+        println!(
+            "  step {:>5}  t={:>7.1}s  train_loss={:.4}  val_loss={:.4}  val_acc={:.4}",
+            p.step, p.seconds, p.train_loss, p.val_loss, p.val_accuracy
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    let methods = args
+        .get_list("methods")
+        .unwrap_or_else(|| vec!["skeinformer".into(), "standard".into()]);
+    let tasks = args.get_list("tasks").unwrap_or_else(|| vec!["listops".into()]);
+    let sweep = coordinator::Sweep { methods, tasks, base: cfg };
+    let outcomes = coordinator::run_sweep(&sweep, true)?;
+    println!("\n=== Table 1 (accuracy %) ===\n{}", report::table1(&outcomes));
+    println!("=== Table 2 (steps / ms-per-step / accum) ===\n{}", report::table2(&outcomes));
+    println!("=== Table 3 (total steps / seconds) ===\n{}", report::table3(&outcomes));
+    println!("=== Paper vs measured ===\n{}", report::paper_vs_measured(&outcomes));
+    let (header, rows) = report::figure2_csv(&outcomes);
+    bench_util::write_csv("reports/figure2_sweep.csv", &header, &rows)?;
+    eprintln!("figure-2 series written to reports/figure2_sweep.csv");
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 1024)?;
+    let p = args.get_usize("p", 64)?;
+    let trials = args.get_usize("trials", 8)?;
+    let mode = args.get_or("mode", "pretrained");
+    let seed = args.get_u64("seed", 0)?;
+    let cfg = match mode {
+        "pretrained" => synth_qkv::QkvConfig::pretrained(n, p),
+        "random" => synth_qkv::QkvConfig::random_init(n, p),
+        other => bail!("unknown mode {other:?}"),
+    };
+    println!("Figure 1: spectral-norm loss, n={n} p={p} mode={mode} trials={trials}");
+    let mut rng = Rng::new(seed);
+    let (q, k, v) = synth_qkv::generate(&cfg, &mut rng);
+    let exact = attention::Standard::exact(&q, &k, &v, None);
+    let base = tensor::spectral_norm(&exact);
+    let ds: Vec<usize> = (3..=8).map(|e| 1usize << e).collect();
+    let mut rows = Vec::new();
+    for &d in &ds {
+        for method in attention::registry(d) {
+            if method.is_exact() {
+                continue;
+            }
+            let mut stats = skeinformer::metrics::RunningStats::new();
+            for t in 0..trials {
+                let out = method.compute(&q, &k, &v, None, &mut Rng::new(seed + 1 + t as u64));
+                stats.push((tensor::spectral_norm_diff(&out, &exact) / base) as f64);
+            }
+            println!(
+                "  d={d:<4} {:<20} loss={:.4} ± {:.4}",
+                method.name(),
+                stats.mean(),
+                stats.std_err()
+            );
+            rows.push(format!(
+                "{},{},{},{:.6},{:.6}",
+                mode,
+                d,
+                method.name(),
+                stats.mean(),
+                stats.std_err()
+            ));
+        }
+    }
+    bench_util::write_csv(
+        &format!("reports/figure1_n{n}_{mode}.csv"),
+        "mode,d,method,rel_spectral_loss,std_err",
+        &rows,
+    )?;
+    Ok(())
+}
+
+fn cmd_flops(args: &Args) -> Result<()> {
+    let n = args.get_u64("n", 4096)?;
+    let d = args.get_u64("d", 256)?;
+    let p = args.get_u64("p", 32)?;
+    println!("Table 5: leading-term attention FLOPs at n={n}, d={d}, p={p}");
+    let mut rows = Vec::new();
+    for m in skeinformer::config::KNOWN_METHODS {
+        let sym = flops::leading_flops_symbolic(m).unwrap_or("-");
+        match flops::leading_flops(m, n, d, p) {
+            Some(fl) => {
+                rows.push(vec![m.to_string(), sym.into(), format!("{:.3}G", fl as f64 / 1e9)])
+            }
+            None => rows.push(vec![m.to_string(), sym.into(), "input-dependent".into()]),
+        }
+    }
+    println!("{}", bench_util::ascii_table(&["Model", "Leading term", "FLOPs"], &rows));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    let n_requests = args.get_usize("requests", 64)?;
+    let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5)?);
+    eprintln!("starting inference server for {} ...", cfg.method);
+    let task = data::by_name(&cfg.task, cfg.model.seq_len).context("task")?;
+    let handle = coordinator::server::start(cfg, max_wait);
+
+    let mut rng = Rng::new(7);
+    let mut latency = Percentiles::default();
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..n_requests {
+        let ex = task.sample(&mut rng);
+        let sent = std::time::Instant::now();
+        pending.push((handle.submit(ex.tokens), sent));
+    }
+    for (rx, sent) in pending {
+        let logits = rx.recv().context("server dropped request")?;
+        latency.push(sent.elapsed().as_secs_f64() * 1e3);
+        anyhow::ensure!(!logits.is_empty());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = handle.shutdown()?;
+    println!(
+        "served {} requests in {:.2}s ({:.1} req/s) — batches={} occupancy={:.2}",
+        stats.requests,
+        wall,
+        stats.requests as f64 / wall,
+        stats.batches,
+        stats.mean_occupancy
+    );
+    println!(
+        "latency ms: p50={:.1} p95={:.1} p99={:.1} (queue {:.1})",
+        latency.percentile(50.0),
+        latency.percentile(95.0),
+        latency.percentile(99.0),
+        stats.mean_queue_ms
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args.positional.first().context("usage: skein inspect <manifest.json>")?;
+    let text = std::fs::read_to_string(path)?;
+    let j = json::parse(&text)?;
+    let dir = std::path::Path::new(path).parent().unwrap_or(std::path::Path::new("."));
+    let man = skeinformer::runtime::ArtifactManifest::from_json(&j, dir)?;
+    println!("method: {}", man.method);
+    println!("config: {:?}", man.config);
+    println!("params: {} tensors, {} f32 total", man.params.len(), man.params_f32_count);
+    for p in &man.params {
+        println!("  {:<24} {:?}", p.name, p.shape);
+    }
+    println!("train inputs: {}", man.train_inputs.len());
+    println!("train hlo: {:?}", man.train_path());
+    println!("forward hlo: {:?}", man.forward_path());
+    Ok(())
+}

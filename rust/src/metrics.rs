@@ -1,0 +1,208 @@
+//! Metrics substrate: timers, running statistics, and throughput counters
+//! used by the training loop, the benches, and the serving example.
+
+use std::time::{Duration, Instant};
+
+/// Running mean/variance/min/max via Welford's algorithm.
+#[derive(Clone, Debug, Default)]
+pub struct RunningStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl RunningStats {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean — the error bars in Figure 1.
+    pub fn std_err(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// A percentile sketch backed by full sample retention (fine at bench
+/// scale) — used for latency p50/p95/p99 in the serving example.
+#[derive(Clone, Debug, Default)]
+pub struct Percentiles {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Percentiles {
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Linear-interpolated percentile, `q` in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let pos = q / 100.0 * (self.samples.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+}
+
+/// A simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Items-per-second throughput meter.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    items: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Self { start: Instant::now(), items: 0 }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.items += n;
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.items as f64 / secs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_stats_match_closed_form() {
+        let mut s = RunningStats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // sample variance of that classic dataset is 32/7
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert!((s.std_err() - s.std() / (8.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut p = Percentiles::default();
+        for x in 1..=100 {
+            p.push(x as f64);
+        }
+        assert!((p.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((p.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((p.percentile(50.0) - 50.5).abs() < 1e-9);
+        let p95 = p.percentile(95.0);
+        assert!(p95 > 94.0 && p95 < 97.0);
+    }
+
+    #[test]
+    fn percentile_of_empty_is_zero() {
+        let mut p = Percentiles::default();
+        assert_eq!(p.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.add(10);
+        t.add(5);
+        assert_eq!(t.items(), 15);
+        assert!(t.per_second() > 0.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Scoped-thread parallelism substrate (no rayon/tokio offline).
+//!
+//! Two primitives cover every parallel site in the codebase:
+//!
+//! * [`parallel_row_blocks`] — split a row-major output buffer into
+//!   contiguous row blocks and fill each on its own thread (matmul,
+//!   attention row strips).
+//! * [`parallel_map`] — map a function over items with a bounded worker
+//!   count (Figure-1 trials, per-method experiment sweeps).
+//!
+//! Threads are spawned per call via `std::thread::scope`; for the coarse
+//! work sizes here (≥ milliseconds per block) spawn overhead (~10 µs) is
+//! noise, and the scope guarantees no detached threads survive a panic.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (≈ physical parallelism, capped).
+pub fn worker_count() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Fill `out` (a `rows × cols` row-major buffer) by handing each worker a
+/// contiguous block of rows. `f(range, block)` must fill `block` completely,
+/// where `block` is the sub-slice for `range` (row indices).
+pub fn parallel_row_blocks(
+    out: &mut [f32],
+    rows: usize,
+    cols: usize,
+    f: impl Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+) {
+    assert_eq!(out.len(), rows * cols);
+    let workers = worker_count().min(rows.max(1));
+    if workers <= 1 || rows < 2 {
+        f(0..rows, out);
+        return;
+    }
+    let block = rows.div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut start = 0usize;
+        while start < rows {
+            let end = (start + block).min(rows);
+            let (chunk, tail) = rest.split_at_mut((end - start) * cols);
+            rest = tail;
+            let fr = &f;
+            let range = start..end;
+            s.spawn(move || fr(range, chunk));
+            start = end;
+        }
+    });
+}
+
+/// Map `f` over `items` in parallel, preserving order, with at most
+/// [`worker_count`] threads. Work stealing via an atomic cursor keeps load
+/// balanced when item costs vary (e.g. different attention methods).
+pub fn parallel_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = worker_count().min(n);
+    if workers <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots_ptr = SendPtr(slots.as_mut_ptr());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let cursor = &cursor;
+            let f = &f;
+            let slots_ptr = slots_ptr;
+            s.spawn(move || {
+                // force whole-struct capture (edition-2021 captures fields
+                // at field granularity, which would capture the raw ptr)
+                let slots_ptr = slots_ptr;
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(&items[i]);
+                    // SAFETY: each index i is claimed exactly once by exactly
+                    // one worker (fetch_add), so writes never alias.
+                    unsafe { *slots_ptr.0.add(i) = Some(r) };
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|x| x.expect("worker filled slot")).collect()
+}
+
+struct SendPtr<T>(*mut T);
+impl<T> Copy for SendPtr<T> {}
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        Self(self.0)
+    }
+}
+// SAFETY: see parallel_map — disjoint index ownership.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_blocks_cover_everything() {
+        let rows = 37;
+        let cols = 5;
+        let mut out = vec![0.0f32; rows * cols];
+        parallel_row_blocks(&mut out, rows, cols, |range, block| {
+            for (bi, i) in range.enumerate() {
+                for j in 0..cols {
+                    block[bi * cols + j] = (i * cols + j) as f32;
+                }
+            }
+        });
+        for (idx, v) in out.iter().enumerate() {
+            assert_eq!(*v, idx as f32);
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..101).collect();
+        let out = parallel_map(&items, |&x| x * x);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let items: Vec<u32> = vec![];
+        assert!(parallel_map(&items, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn parallel_map_uneven_costs() {
+        let items: Vec<u64> = (0..32).collect();
+        let out = parallel_map(&items, |&x| {
+            // simulate variable cost
+            let mut acc = 0u64;
+            for i in 0..(x * 1000) {
+                acc = acc.wrapping_add(i);
+            }
+            acc.wrapping_add(x)
+        });
+        assert_eq!(out.len(), 32);
+    }
+}

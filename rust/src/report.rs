@@ -1,0 +1,231 @@
+//! Table renderers: turn sweep outcomes into the paper's Tables 1-4 and
+//! the Figure-2 CSV series, plus a side-by-side paper-vs-measured view for
+//! EXPERIMENTS.md.
+
+use crate::bench_util::ascii_table;
+use crate::data::TASK_NAMES;
+use crate::train::TrainOutcome;
+
+/// Paper Table-1 accuracies (%), used for the paper-vs-measured report.
+pub fn paper_table1(method: &str, task: &str) -> Option<f64> {
+    let col = TASK_NAMES.iter().position(|t| *t == task)?;
+    // columns: text, listops, retrieval, pathfinder, image
+    let row: [f64; 5] = match method {
+        "standard" => [57.69, 38.15, 80.10, 73.59, 37.97],
+        "standard_nodrop" => [59.44, 38.17, 79.35, 72.35, 37.58],
+        "vmean" => [65.29, 28.78, 80.49, 61.01, 34.33],
+        "bigbird" => [61.91, 38.86, 79.73, 71.75, 35.00],
+        "performer" => [57.67, 37.70, 75.69, 56.50, 37.40],
+        "nystromformer" => [60.91, 37.76, 79.87, 72.53, 31.93],
+        "reformer" => [62.69, 37.94, 78.85, 69.21, 36.42],
+        "linformer" => [58.52, 37.97, 77.40, 55.57, 37.48],
+        "linformer_jlt" => [59.12, 37.48, 79.39, 68.45, 35.96],
+        "informer" => [61.55, 38.43, 80.88, 59.34, 36.55],
+        "informer_mask" => [60.98, 37.26, 79.92, 62.51, 37.19],
+        "skeinformer" => [62.47, 38.73, 80.42, 71.51, 37.27],
+        "skein_uniform" => [64.48, 30.02, 80.57, 64.35, 36.97],
+        "skein_no_norm" => [60.67, 37.69, 78.67, 66.35, 37.06],
+        "skein_simple_norm" => [60.26, 38.35, 78.97, 65.41, 39.72],
+        "skein_no_psr" => [62.39, 38.12, 79.88, 71.53, 37.20],
+        _ => return None,
+    };
+    Some(row[col])
+}
+
+/// Render a Table-1-shaped accuracy table from outcomes.
+pub fn table1(outcomes: &[TrainOutcome]) -> String {
+    let idx = crate::coordinator::index_outcomes(outcomes);
+    let methods = method_order(outcomes);
+    let mut headers = vec!["Model"];
+    headers.extend(TASK_NAMES.iter().copied());
+    headers.push("Average");
+    let mut rows = Vec::new();
+    for m in &methods {
+        let mut row = vec![m.to_string()];
+        let mut sum = 0.0;
+        let mut count = 0;
+        for t in TASK_NAMES {
+            match idx.get(t).and_then(|by| by.get(m.as_str())) {
+                Some(o) => {
+                    row.push(format!("{:.2}", o.best_accuracy * 100.0));
+                    sum += o.best_accuracy * 100.0;
+                    count += 1;
+                }
+                None => row.push("-".into()),
+            }
+        }
+        row.push(if count > 0 { format!("{:.2}", sum / count as f64) } else { "-".into() });
+        rows.push(row);
+    }
+    ascii_table(&headers, &rows)
+}
+
+/// Render Table-2 (steps (k), min per 1k steps, grad-accum steps).
+pub fn table2(outcomes: &[TrainOutcome]) -> String {
+    let idx = crate::coordinator::index_outcomes(outcomes);
+    let methods = method_order(outcomes);
+    let mut headers = vec!["Model".to_string()];
+    for t in TASK_NAMES {
+        headers.push(format!("{t}:steps"));
+        headers.push(format!("{t}:ms/step"));
+        headers.push(format!("{t}:accu"));
+    }
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut rows = Vec::new();
+    for m in &methods {
+        let mut row = vec![m.to_string()];
+        for t in TASK_NAMES {
+            match idx.get(t).and_then(|by| by.get(m.as_str())) {
+                Some(o) => {
+                    row.push(format!("{}", o.steps));
+                    row.push(format!("{:.1}", o.ms_per_step));
+                    row.push(format!("{}", o.grad_accum));
+                }
+                None => {
+                    row.extend(["-".to_string(), "-".into(), "-".into()]);
+                }
+            }
+        }
+        rows.push(row);
+    }
+    ascii_table(&header_refs, &rows)
+}
+
+/// Render Table-3 (total steps + total time).
+pub fn table3(outcomes: &[TrainOutcome]) -> String {
+    let idx = crate::coordinator::index_outcomes(outcomes);
+    let methods = method_order(outcomes);
+    let mut headers = vec!["Model".to_string()];
+    for t in TASK_NAMES {
+        headers.push(format!("{t}:steps"));
+        headers.push(format!("{t}:secs"));
+    }
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut rows = Vec::new();
+    for m in &methods {
+        let mut row = vec![m.to_string()];
+        for t in TASK_NAMES {
+            match idx.get(t).and_then(|by| by.get(m.as_str())) {
+                Some(o) => {
+                    row.push(format!("{}", o.steps));
+                    row.push(format!("{:.1}", o.seconds));
+                }
+                None => row.extend(["-".to_string(), "-".into()]),
+            }
+        }
+        rows.push(row);
+    }
+    ascii_table(&header_refs, &rows)
+}
+
+/// Paper-vs-measured accuracy comparison (EXPERIMENTS.md body).
+pub fn paper_vs_measured(outcomes: &[TrainOutcome]) -> String {
+    let idx = crate::coordinator::index_outcomes(outcomes);
+    let methods = method_order(outcomes);
+    let mut rows = Vec::new();
+    for m in &methods {
+        for t in TASK_NAMES {
+            if let Some(o) = idx.get(t).and_then(|by| by.get(m.as_str())) {
+                let paper = paper_table1(m, t)
+                    .map(|x| format!("{x:.2}"))
+                    .unwrap_or_else(|| "-".into());
+                rows.push(vec![
+                    m.to_string(),
+                    t.to_string(),
+                    paper,
+                    format!("{:.2}", o.best_accuracy * 100.0),
+                ]);
+            }
+        }
+    }
+    ascii_table(&["Model", "Task", "Paper acc%", "Ours acc% (synthetic)"], &rows)
+}
+
+/// Figure-2 CSV (all methods' loss curves concatenated).
+pub fn figure2_csv(outcomes: &[TrainOutcome]) -> (String, Vec<String>) {
+    let mut rows = Vec::new();
+    for o in outcomes {
+        let label = format!("{}:{}", o.method, o.task);
+        rows.extend(o.history.csv_rows(&label));
+    }
+    (crate::train::History::CSV_HEADER.to_string(), rows)
+}
+
+/// Preserve first-seen method order (Table 1 ordering comes from sweep
+/// construction, which mirrors the paper's row order).
+fn method_order(outcomes: &[TrainOutcome]) -> Vec<String> {
+    let mut seen = std::collections::HashSet::new();
+    let mut order = Vec::new();
+    for o in outcomes {
+        if seen.insert(o.method.clone()) {
+            order.push(o.method.clone());
+        }
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::History;
+
+    fn outcome(method: &str, task: &str, acc: f64) -> TrainOutcome {
+        TrainOutcome {
+            method: method.into(),
+            task: task.into(),
+            steps: 100,
+            best_accuracy: acc,
+            final_accuracy: acc,
+            seconds: 12.5,
+            ms_per_step: 42.0,
+            grad_accum: 2,
+            history: History::new(),
+        }
+    }
+
+    #[test]
+    fn paper_numbers_spot_check() {
+        assert_eq!(paper_table1("skeinformer", "text"), Some(62.47));
+        assert_eq!(paper_table1("standard", "pathfinder"), Some(73.59));
+        assert_eq!(paper_table1("vmean", "listops"), Some(28.78));
+        assert_eq!(paper_table1("nope", "text"), None);
+    }
+
+    #[test]
+    fn table1_renders_all_methods() {
+        let outcomes = vec![
+            outcome("standard", "listops", 0.38),
+            outcome("skeinformer", "listops", 0.39),
+            outcome("skeinformer", "text", 0.62),
+        ];
+        let t = table1(&outcomes);
+        assert!(t.contains("skeinformer"));
+        assert!(t.contains("39.00"));
+        assert!(t.contains("Average"));
+        // missing cells render as '-'
+        assert!(t.contains('-'));
+    }
+
+    #[test]
+    fn table2_and_3_render() {
+        let outcomes = vec![outcome("skeinformer", "image", 0.3)];
+        assert!(table2(&outcomes).contains("image:ms/step"));
+        assert!(table3(&outcomes).contains("12.5"));
+    }
+
+    #[test]
+    fn figure2_csv_has_labels() {
+        let mut o = outcome("skeinformer", "listops", 0.4);
+        o.history.push(crate::train::HistoryPoint {
+            step: 10,
+            seconds: 1.0,
+            train_loss: 2.0,
+            val_loss: 2.1,
+            val_accuracy: 0.2,
+        });
+        let (header, rows) = figure2_csv(&[o]);
+        assert!(header.starts_with("method,"));
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].starts_with("skeinformer:listops,10,"));
+    }
+}

@@ -1,0 +1,89 @@
+//! Continuous distributions on top of [`Rng`].
+
+use super::Rng;
+
+impl Rng {
+    /// Standard normal via Box-Muller (one value per call; the pair's
+    /// second half is discarded to keep the stream stateless and
+    /// fold-in-friendly).
+    pub fn normal(&mut self) -> f32 {
+        // avoid log(0)
+        let u1 = self.uniform().max(1e-12);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (std::f32::consts::TAU * u2).cos()
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_scaled(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal()
+    }
+
+    /// Standard Gumbel — the perturbation behind Gumbel-top-k sampling
+    /// without replacement (matches the jax-side trick bit-for-concept).
+    pub fn gumbel(&mut self) -> f32 {
+        let u = self.uniform().clamp(1e-20, 1.0 - 1e-7);
+        -(-u.ln()).ln()
+    }
+
+    /// Exponential(1).
+    pub fn exponential(&mut self) -> f32 {
+        -self.uniform().max(1e-12).ln()
+    }
+
+    /// Fill a buffer with iid standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        out.iter_mut().for_each(|x| *x = self.normal());
+    }
+
+    /// Fill with iid uniform [lo, hi).
+    pub fn fill_uniform(&mut self, out: &mut [f32], lo: f32, hi: f32) {
+        out.iter_mut().for_each(|x| *x = self.uniform_range(lo, hi));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(11);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = rng.normal() as f64;
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gumbel_mean_is_euler_gamma() {
+        let mut rng = Rng::new(13);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.gumbel() as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.5772).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn exponential_mean_one() {
+        let mut rng = Rng::new(17);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential() as f64).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.03, "mean {mean}");
+    }
+
+    #[test]
+    fn fill_helpers() {
+        let mut rng = Rng::new(19);
+        let mut buf = vec![0.0f32; 64];
+        rng.fill_uniform(&mut buf, 2.0, 3.0);
+        assert!(buf.iter().all(|x| (2.0..3.0).contains(x)));
+        rng.fill_normal(&mut buf);
+        assert!(buf.iter().any(|x| *x < 0.0) && buf.iter().any(|x| *x > 0.0));
+    }
+}

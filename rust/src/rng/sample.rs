@@ -1,0 +1,218 @@
+//! Index sampling: the machinery behind the paper's sub-sampling sketches.
+//!
+//! * [`Rng::sample_with_replacement`] — uniform iid indices (pilot sampling,
+//!   line 1 of Algorithm 1).
+//! * [`Rng::categorical`] — one draw from a weighted distribution.
+//! * [`Rng::weighted_without_replacement`] — Gumbel-top-k sampling without
+//!   replacement under importance weights (line 5 of Algorithm 1).
+//! * [`alias_table`] — O(1)-per-draw categorical sampling for the repeated
+//!   draws in Definition 3.1's sub-sampling matrices.
+
+use super::Rng;
+
+impl Rng {
+    /// `d` uniform indices in `[0, n)` with replacement.
+    pub fn sample_with_replacement(&mut self, n: usize, d: usize) -> Vec<usize> {
+        (0..d).map(|_| self.below(n)).collect()
+    }
+
+    /// One categorical draw from (unnormalised, non-negative) weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f64 = weights.iter().map(|w| w.max(0.0) as f64).sum();
+        assert!(total > 0.0, "categorical with all-zero weights");
+        let mut target = self.uniform() as f64 * total;
+        for (i, &w) in weights.iter().enumerate() {
+            target -= w.max(0.0) as f64;
+            if target <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1 // floating-point tail
+    }
+
+    /// Sample `d` distinct indices without replacement, with probability
+    /// proportional to `weights`, via the Gumbel-top-k trick.  Zero-weight
+    /// indices are never selected (padding masks rely on this).
+    pub fn weighted_without_replacement(&mut self, weights: &[f32], d: usize) -> Vec<usize> {
+        let n = weights.len();
+        let d = d.min(weights.iter().filter(|w| **w > 0.0).count());
+        let mut keyed: Vec<(f32, usize)> = weights
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| **w > 0.0)
+            .map(|(i, &w)| (w.max(1e-30).ln() + self.gumbel(), i))
+            .collect();
+        debug_assert!(keyed.len() <= n);
+        // partial selection of the top d keys
+        if d < keyed.len() {
+            keyed.select_nth_unstable_by(d, |a, b| b.0.partial_cmp(&a.0).unwrap());
+            keyed.truncate(d);
+        }
+        keyed.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        keyed.into_iter().map(|(_, i)| i).collect()
+    }
+
+    /// Uniform sample of `d` distinct indices (Floyd's algorithm).
+    pub fn uniform_without_replacement(&mut self, n: usize, d: usize) -> Vec<usize> {
+        let d = d.min(n);
+        let mut chosen = std::collections::HashSet::with_capacity(d);
+        let mut out = Vec::with_capacity(d);
+        for j in n - d..n {
+            let t = self.below(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+}
+
+/// Walker alias table for O(1) categorical draws.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f32>,
+    alias: Vec<usize>,
+}
+
+/// Build an alias table from (unnormalised) weights.
+pub fn alias_table(weights: &[f32]) -> AliasTable {
+    let n = weights.len();
+    let total: f64 = weights.iter().map(|w| w.max(0.0) as f64).sum();
+    assert!(total > 0.0 && n > 0, "alias_table needs positive mass");
+    let scaled: Vec<f64> = weights.iter().map(|&w| w.max(0.0) as f64 * n as f64 / total).collect();
+    let mut prob = vec![0.0f32; n];
+    let mut alias = vec![0usize; n];
+    let mut small: Vec<usize> = Vec::new();
+    let mut large: Vec<usize> = Vec::new();
+    let mut work = scaled;
+    for (i, &w) in work.iter().enumerate() {
+        if w < 1.0 {
+            small.push(i);
+        } else {
+            large.push(i);
+        }
+    }
+    // NB: pop only when BOTH stacks are non-empty — a combined
+    // `while let (Some, Some) = (small.pop(), large.pop())` would pop and
+    // silently discard the last element of the non-empty stack.
+    while !small.is_empty() && !large.is_empty() {
+        let s = small.pop().unwrap();
+        let l = large.pop().unwrap();
+        prob[s] = work[s] as f32;
+        alias[s] = l;
+        work[l] = (work[l] + work[s]) - 1.0;
+        if work[l] < 1.0 {
+            small.push(l);
+        } else {
+            large.push(l);
+        }
+    }
+    for i in small.into_iter().chain(large) {
+        prob[i] = 1.0;
+        alias[i] = i;
+    }
+    AliasTable { prob, alias }
+}
+
+impl AliasTable {
+    /// One O(1) categorical draw.
+    pub fn draw(&self, rng: &mut Rng) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.uniform() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_replacement_in_range() {
+        let mut rng = Rng::new(1);
+        let idx = rng.sample_with_replacement(10, 100);
+        assert_eq!(idx.len(), 100);
+        assert!(idx.iter().all(|&i| i < 10));
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut rng = Rng::new(2);
+        let w = [0.0f32, 1.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[rng.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let ratio = counts[2] as f64 / counts[1] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn without_replacement_distinct_and_weighted() {
+        let mut rng = Rng::new(3);
+        let mut w = vec![1.0f32; 100];
+        w[7] = 1000.0; // index 7 should essentially always be selected
+        let mut hit7 = 0;
+        for _ in 0..200 {
+            let sel = rng.weighted_without_replacement(&w, 10);
+            assert_eq!(sel.len(), 10);
+            let set: std::collections::HashSet<_> = sel.iter().collect();
+            assert_eq!(set.len(), 10, "duplicates in {sel:?}");
+            if sel.contains(&7) {
+                hit7 += 1;
+            }
+        }
+        assert!(hit7 > 195, "heavy index selected only {hit7}/200");
+    }
+
+    #[test]
+    fn without_replacement_skips_zero_weights() {
+        let mut rng = Rng::new(4);
+        let mut w = vec![0.0f32; 50];
+        for item in w.iter_mut().take(20) {
+            *item = 1.0;
+        }
+        for _ in 0..50 {
+            let sel = rng.weighted_without_replacement(&w, 10);
+            assert!(sel.iter().all(|&i| i < 20), "picked padded index: {sel:?}");
+        }
+    }
+
+    #[test]
+    fn without_replacement_caps_at_support() {
+        let mut rng = Rng::new(5);
+        let w = [1.0f32, 0.0, 2.0];
+        let sel = rng.weighted_without_replacement(&w, 10);
+        assert_eq!(sel.len(), 2);
+    }
+
+    #[test]
+    fn uniform_without_replacement_distinct() {
+        let mut rng = Rng::new(6);
+        let sel = rng.uniform_without_replacement(30, 30);
+        let mut sorted = sel.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..30).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn alias_table_matches_weights() {
+        let mut rng = Rng::new(7);
+        let w = [1.0f32, 2.0, 7.0];
+        let table = alias_table(&w);
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[table.draw(&mut rng)] += 1;
+        }
+        for (i, &wi) in w.iter().enumerate() {
+            let expect = wi as f64 / 10.0;
+            let got = counts[i] as f64 / n as f64;
+            assert!((got - expect).abs() < 0.01, "i={i} got {got} expect {expect}");
+        }
+    }
+}

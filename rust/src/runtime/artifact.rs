@@ -1,0 +1,294 @@
+//! Artifact manifests: the contract between `python/compile/aot.py` and the
+//! rust runtime.  A manifest records the input ordering (params, adam
+//! state, batch tensors, scalars), output layout, the model config the
+//! artifact was lowered with, and the initial-parameter blob.
+
+use crate::json::{parse, Json};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one input/output tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub role: String,
+    pub name: Option<String>,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .req_arr("shape")?
+            .iter()
+            .map(|x| x.as_usize().context("bad shape entry"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            role: j.req_str("role")?.to_string(),
+            name: j.get("name").and_then(Json::as_str).map(str::to_string),
+            shape,
+            dtype: j.req_str("dtype")?.to_string(),
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One named parameter tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `<method>_manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub method: String,
+    pub dir: PathBuf,
+    /// Model config fields (vocab, seq_len, batch, classes, ...).
+    pub config: std::collections::BTreeMap<String, f64>,
+    pub params: Vec<ParamSpec>,
+    pub params_bin_file: String,
+    pub params_f32_count: usize,
+    pub train_file: String,
+    pub train_inputs: Vec<IoSpec>,
+    pub forward_file: String,
+    pub forward_inputs: Vec<IoSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/<method>_manifest.json`.
+    pub fn load(dir: &Path, method: &str) -> Result<Self> {
+        let path = dir.join(format!("{method}_manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`?)"))?;
+        let j = parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Self> {
+        let method = j.req_str("method")?.to_string();
+        let mut config = std::collections::BTreeMap::new();
+        if let Some(cfg) = j.get("config").and_then(Json::as_obj) {
+            for (k, v) in cfg {
+                if let Some(x) = v.as_f64() {
+                    config.insert(k.clone(), x);
+                }
+            }
+        }
+        let params = j
+            .req_arr("params")?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req_str("name")?.to_string(),
+                    shape: p
+                        .req_arr("shape")?
+                        .iter()
+                        .map(|x| x.as_usize().context("bad param shape"))
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let pb = j.get("params_bin").context("missing params_bin")?;
+        let train = j.get("train").context("missing train section")?;
+        let fwd = j.get("forward").context("missing forward section")?;
+        let train_inputs = train
+            .req_arr("inputs")?
+            .iter()
+            .map(IoSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let forward_inputs = fwd
+            .req_arr("inputs")?
+            .iter()
+            .map(IoSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let man = Self {
+            method,
+            dir: dir.to_path_buf(),
+            config,
+            params,
+            params_bin_file: pb.req_str("file")?.to_string(),
+            params_f32_count: pb.req_usize("f32_count")?,
+            train_file: train.req_str("file")?.to_string(),
+            train_inputs,
+            forward_file: fwd.req_str("file")?.to_string(),
+            forward_inputs,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    /// Internal consistency checks (the contract tests in python mirror
+    /// these from the producer side).
+    pub fn validate(&self) -> Result<()> {
+        let n = self.params.len();
+        anyhow::ensure!(n > 0, "no parameters");
+        let total: usize = self.params.iter().map(ParamSpec::elements).sum();
+        anyhow::ensure!(
+            total == self.params_f32_count,
+            "params_bin count {} != sum of param elements {}",
+            self.params_f32_count,
+            total
+        );
+        // train inputs: params*N, adam_m*N, adam_v*N, step, tokens, mask, labels, seed
+        anyhow::ensure!(
+            self.train_inputs.len() == 3 * n + 5,
+            "train inputs {} != 3*{n}+5",
+            self.train_inputs.len()
+        );
+        for (i, spec) in self.train_inputs.iter().take(n).enumerate() {
+            anyhow::ensure!(spec.role == "param", "input {i} role {}", spec.role);
+            anyhow::ensure!(
+                spec.name.as_deref() == Some(self.params[i].name.as_str()),
+                "param order mismatch at {i}"
+            );
+        }
+        let tail: Vec<&str> =
+            self.train_inputs[3 * n..].iter().map(|s| s.role.as_str()).collect();
+        anyhow::ensure!(
+            tail == ["step", "tokens", "mask", "labels", "seed"],
+            "unexpected tail roles {tail:?}"
+        );
+        // names sorted == canonical order
+        let mut sorted = self.params.clone();
+        sorted.sort_by(|a, b| a.name.cmp(&b.name));
+        anyhow::ensure!(
+            sorted.iter().map(|p| &p.name).eq(self.params.iter().map(|p| &p.name)),
+            "params not in canonical (sorted) order"
+        );
+        Ok(())
+    }
+
+    pub fn train_path(&self) -> PathBuf {
+        self.dir.join(&self.train_file)
+    }
+
+    pub fn forward_path(&self) -> PathBuf {
+        self.dir.join(&self.forward_file)
+    }
+
+    /// Config accessors (lowered-with values).
+    pub fn cfg(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .map(|x| *x as usize)
+            .with_context(|| format!("manifest config missing {key}"))
+    }
+
+    /// Load the initial parameters from the binary blob, split per tensor
+    /// in manifest order.
+    pub fn load_initial_params(&self) -> Result<Vec<Vec<f32>>> {
+        let path = self.dir.join(&self.params_bin_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading params blob {path:?}"))?;
+        anyhow::ensure!(
+            bytes.len() == self.params_f32_count * 4,
+            "blob size {} != {} f32",
+            bytes.len(),
+            self.params_f32_count
+        );
+        let mut all = Vec::with_capacity(self.params_f32_count);
+        for chunk in bytes.chunks_exact(4) {
+            all.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0usize;
+        for p in &self.params {
+            let n = p.elements();
+            out.push(all[off..off + n].to_vec());
+            off += n;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_json(n_extra_tail: bool) -> String {
+        let tail = if n_extra_tail {
+            r#"{"role": "step", "shape": [], "dtype": "float32"},
+               {"role": "tokens", "shape": [2, 8], "dtype": "int32"},
+               {"role": "mask", "shape": [2, 8], "dtype": "float32"},
+               {"role": "labels", "shape": [2], "dtype": "int32"},
+               {"role": "seed", "shape": [], "dtype": "int32"}"#
+        } else {
+            r#"{"role": "step", "shape": [], "dtype": "float32"}"#
+        };
+        format!(
+            r#"{{
+            "method": "vmean",
+            "config": {{"batch": 2, "seq_len": 8, "classes": 3}},
+            "params": [
+               {{"name": "a/w", "shape": [2, 3], "dtype": "float32"}},
+               {{"name": "b/w", "shape": [4], "dtype": "float32"}}
+            ],
+            "params_bin": {{"file": "p.bin", "f32_count": 10}},
+            "train": {{
+              "file": "t.hlo.txt",
+              "inputs": [
+                {{"role": "param", "name": "a/w", "shape": [2,3], "dtype": "float32"}},
+                {{"role": "param", "name": "b/w", "shape": [4], "dtype": "float32"}},
+                {{"role": "adam_m", "name": "a/w", "shape": [2,3], "dtype": "float32"}},
+                {{"role": "adam_m", "name": "b/w", "shape": [4], "dtype": "float32"}},
+                {{"role": "adam_v", "name": "a/w", "shape": [2,3], "dtype": "float32"}},
+                {{"role": "adam_v", "name": "b/w", "shape": [4], "dtype": "float32"}},
+                {tail}
+              ],
+              "outputs": {{"n_params": 2, "extra": ["loss", "acc"]}}
+            }},
+            "forward": {{
+              "file": "f.hlo.txt",
+              "inputs": [{{"role": "tokens", "shape": [2,8], "dtype": "int32"}}],
+              "outputs": {{"logits": [2, 3]}}
+            }}
+          }}"#
+        )
+    }
+
+    #[test]
+    fn parses_and_validates_well_formed_manifest() {
+        let j = parse(&fake_manifest_json(true)).unwrap();
+        let man = ArtifactManifest::from_json(&j, Path::new("/tmp/a")).unwrap();
+        assert_eq!(man.method, "vmean");
+        assert_eq!(man.params.len(), 2);
+        assert_eq!(man.cfg("batch").unwrap(), 2);
+        assert_eq!(man.train_path(), PathBuf::from("/tmp/a/t.hlo.txt"));
+        assert_eq!(man.params[0].elements(), 6);
+    }
+
+    #[test]
+    fn rejects_truncated_inputs() {
+        let j = parse(&fake_manifest_json(false)).unwrap();
+        assert!(ArtifactManifest::from_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn params_blob_split() {
+        let dir = std::env::temp_dir().join("skein_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut blob = Vec::new();
+        for i in 0..10 {
+            blob.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        std::fs::write(dir.join("p.bin"), blob).unwrap();
+        let j = parse(&fake_manifest_json(true)).unwrap();
+        let man = ArtifactManifest::from_json(&j, &dir).unwrap();
+        let params = man.load_initial_params().unwrap();
+        assert_eq!(params.len(), 2);
+        assert_eq!(params[0], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(params[1], vec![6.0, 7.0, 8.0, 9.0]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

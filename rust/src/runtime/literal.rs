@@ -1,0 +1,72 @@
+//! Host ↔ `xla::Literal` packing helpers.
+
+use anyhow::{Context, Result};
+
+/// An f32 literal of the given shape from a row-major buffer.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let count: usize = shape.iter().product();
+    anyhow::ensure!(count == data.len(), "shape {shape:?} != data len {}", data.len());
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).context("reshaping f32 literal")
+}
+
+/// An i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let count: usize = shape.iter().product();
+    anyhow::ensure!(count == data.len(), "shape {shape:?} != data len {}", data.len());
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).context("reshaping i32 literal")
+}
+
+/// Rank-0 scalars.
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Copy a literal back to a host f32 vector.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("reading f32 literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![7i32, -1, 0, 3];
+        let lit = literal_i32(&data, &[4]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn scalars_are_rank_zero() {
+        let s = scalar_f32(2.5);
+        assert_eq!(s.element_count(), 1);
+        let shape = s.array_shape().unwrap();
+        assert_eq!(shape.dims().len(), 0);
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the rust request path (python never runs here).
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format — jax ≥ 0.5 serialized protos use
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `python/compile/aot.py`).
+
+pub mod artifact;
+pub mod literal;
+
+pub use artifact::{ArtifactManifest, IoSpec, ParamSpec};
+pub use literal::{literal_f32, literal_i32, scalar_f32, scalar_i32, to_vec_f32};
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU device handle. One per thread of execution — the underlying
+/// client is `Rc`-based (not `Send`), matching PJRT's threading model.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU runtime.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it for this device.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-utf8 artifact path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path_str}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path_str}"))?;
+        Ok(Executable { exe, source: path.to_path_buf() })
+    }
+}
+
+/// A compiled XLA executable (one entry computation, tuple output — the
+/// `return_tuple=True` convention from aot.py).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    source: PathBuf,
+}
+
+impl Executable {
+    pub fn source(&self) -> &Path {
+        &self.source
+    }
+
+    /// Execute with host literals; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outputs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {:?}", self.source))?;
+        let mut result = outputs
+            .first()
+            .and_then(|r| r.first())
+            .context("executable returned no outputs")?
+            .to_literal_sync()
+            .context("fetching output literal")?;
+        result.decompose_tuple().context("decomposing output tuple")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need real artifacts live in rust/tests/ (they
+    // depend on `make artifacts` having run); here we only test pure logic.
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let rt = Runtime::cpu().unwrap();
+        let err = rt.load_hlo(Path::new("/nonexistent/x.hlo.txt"));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn runtime_reports_cpu_platform() {
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+        assert!(rt.device_count() >= 1);
+    }
+}

@@ -1,0 +1,150 @@
+//! Approximate matrix multiplication (Proposition 1 / Drineas-Kannan-
+//! Mahoney Theorem 1): `B V ≈ B S Sᵀ V` with sub-sampling probabilities
+//! `p_i ∝ ‖B^(i)‖ ‖V_(i)‖`, and the Frobenius error bound
+//!
+//! `‖BV − BSSᵀV‖_F² ≤ (η²/βd) ‖B‖_F² ‖V‖_F²`  w.p. ≥ 1 − δ.
+//!
+//! The property suite samples many draws and asserts the bound's empirical
+//! quantiles — the executable version of the paper's Proposition 1.
+
+use super::subsample::SubSampleSketch;
+use crate::rng::Rng;
+use crate::tensor::{col_norms, frobenius_norm, matmul, row_norms, Matrix};
+
+/// The optimal DKM probabilities `p_i ∝ ‖B^(i)‖ ‖V_(i)‖`.
+pub fn optimal_probabilities(b: &Matrix, v: &Matrix) -> Vec<f32> {
+    let bc = col_norms(b);
+    let vr = row_norms(v);
+    bc.iter().zip(&vr).map(|(x, y)| x * y).collect()
+}
+
+/// One draw of the AMM estimator `B S Sᵀ V` using the index fast path
+/// (never materialises S): gather + rescale columns of B and rows of V.
+pub fn amm_approximate(
+    b: &Matrix,
+    v: &Matrix,
+    sketch: &SubSampleSketch,
+    rng: &mut Rng,
+) -> Matrix {
+    let (idx, scales) = sketch.draw_indices(rng);
+    // BS: (n_B, d) — scaled column gather of B
+    let bs = Matrix::from_fn(b.rows(), idx.len(), |r, c| b.get(r, idx[c]) * scales[c]);
+    // SᵀV: (d, p) — scaled row gather of V
+    let sv = Matrix::from_fn(idx.len(), v.cols(), |r, c| v.get(idx[r], c) * scales[r]);
+    matmul(&bs, &sv)
+}
+
+/// The right-hand side of Eq. (4): `(η²/βd)‖B‖_F²‖V‖_F²` with
+/// `η = 1 + sqrt((8/β) log(1/δ))`.
+pub fn amm_error_bound(b: &Matrix, v: &Matrix, d: usize, beta: f32, delta: f32) -> f32 {
+    let eta = 1.0 + ((8.0 / beta) * (1.0 / delta).ln()).sqrt();
+    (eta * eta) / (beta * d as f32) * frobenius_norm(b).powi(2) * frobenius_norm(v).powi(2)
+}
+
+/// Summary statistics over repeated AMM draws.
+#[derive(Clone, Copy, Debug)]
+pub struct AmmStats {
+    pub mean_sq_err: f32,
+    pub max_sq_err: f32,
+    pub bound: f32,
+}
+
+/// Run `trials` draws and compare squared Frobenius errors to the bound.
+pub fn amm_trials(
+    b: &Matrix,
+    v: &Matrix,
+    d: usize,
+    beta: f32,
+    delta: f32,
+    trials: usize,
+    seed: u64,
+) -> AmmStats {
+    let probs = optimal_probabilities(b, v);
+    let sketch = SubSampleSketch::new(probs, d);
+    let exact = matmul(b, v);
+    let mut rng = Rng::new(seed);
+    let mut sum = 0.0f64;
+    let mut max = 0.0f32;
+    for _ in 0..trials {
+        let approx = amm_approximate(b, v, &sketch, &mut rng);
+        let err = frobenius_norm(&crate::tensor::sub(&approx, &exact)).powi(2);
+        sum += err as f64;
+        max = max.max(err);
+    }
+    AmmStats {
+        mean_sq_err: (sum / trials as f64) as f32,
+        max_sq_err: max,
+        bound: amm_error_bound(b, v, d, beta, delta),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mats(n: usize, p: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let mut b = Matrix::zeros(n, n);
+        rng.fill_normal(b.data_mut());
+        // make B row-stochastic-ish (like an attention matrix)
+        crate::tensor::softmax_rows(&mut b);
+        let mut v = Matrix::zeros(n, p);
+        rng.fill_normal(v.data_mut());
+        (b, v)
+    }
+
+    #[test]
+    fn estimator_is_unbiased() {
+        // average of many draws converges to BV
+        let (b, v) = mats(24, 4, 1);
+        let probs = optimal_probabilities(&b, &v);
+        let sk = SubSampleSketch::new(probs, 8);
+        let exact = matmul(&b, &v);
+        let mut acc = Matrix::zeros(24, 4);
+        let trials = 3000;
+        let mut rng = Rng::new(2);
+        for _ in 0..trials {
+            let a = amm_approximate(&b, &v, &sk, &mut rng);
+            for (x, &y) in acc.data_mut().iter_mut().zip(a.data()) {
+                *x += y;
+            }
+        }
+        acc.data_mut().iter_mut().for_each(|x| *x /= trials as f32);
+        let rel = frobenius_norm(&crate::tensor::sub(&acc, &exact)) / frobenius_norm(&exact);
+        assert!(rel < 0.1, "bias {rel}");
+    }
+
+    #[test]
+    fn proposition_1_bound_holds_empirically() {
+        let (b, v) = mats(32, 8, 3);
+        let stats = amm_trials(&b, &v, 16, 1.0, 0.1, 200, 4);
+        // the bound is a ≥(1−δ) high-probability bound; the max over 200
+        // draws exceeding it would be a clear violation
+        assert!(
+            stats.max_sq_err <= stats.bound,
+            "max {} > bound {}",
+            stats.max_sq_err,
+            stats.bound
+        );
+        assert!(stats.mean_sq_err < stats.bound / 4.0);
+    }
+
+    #[test]
+    fn error_decreases_with_d() {
+        let (b, v) = mats(32, 8, 5);
+        let e8 = amm_trials(&b, &v, 8, 1.0, 0.1, 100, 6).mean_sq_err;
+        let e64 = amm_trials(&b, &v, 64, 1.0, 0.1, 100, 7).mean_sq_err;
+        assert!(e64 < e8, "d=8 {e8} vs d=64 {e64}");
+    }
+
+    #[test]
+    fn optimal_probs_match_formula() {
+        let (b, v) = mats(8, 3, 9);
+        let probs = optimal_probabilities(&b, &v);
+        for (i, p) in probs.iter().enumerate() {
+            let bc: f32 = (0..8).map(|r| b.get(r, i).powi(2)).sum::<f32>().sqrt();
+            let vr: f32 = v.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((p - bc * vr).abs() < 1e-5);
+        }
+    }
+}

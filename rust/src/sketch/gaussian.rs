@@ -1,0 +1,107 @@
+//! Gaussian (sub-Gaussian / JL) sketching matrices (Definition 3.2).
+//!
+//! Entries are i.i.d. `N(0, 1/d)`, so `E[S Sᵀ] = I` and with
+//! `d = O(ε⁻² log(1/δ))` the sketch satisfies the oblivious
+//! (ε, δ)-JL guarantee — verified empirically by the tests below.
+
+use super::Sketch;
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct GaussianSketch {
+    n: usize,
+    d: usize,
+}
+
+impl GaussianSketch {
+    pub fn new(n: usize, d: usize) -> Self {
+        Self { n, d }
+    }
+}
+
+impl Sketch for GaussianSketch {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn draw(&self, rng: &mut Rng) -> Matrix {
+        let std = 1.0 / (self.d as f32).sqrt();
+        let mut s = Matrix::zeros(self.n, self.d);
+        for x in s.data_mut() {
+            *x = rng.normal() * std;
+        }
+        s
+    }
+}
+
+/// Empirical JL check: fraction of draws where
+/// `| ‖Sᵀb‖² − ‖b‖² | > ε ‖b‖²` (Eq. 2, with S applied on the left as in
+/// Definition 3.2's convention `‖S b‖` for S: R^n → R^d — our S is n×d so
+/// the mapped vector is `Sᵀ b`).
+pub fn jl_failure_rate(
+    sketch: &GaussianSketch,
+    b: &[f32],
+    eps: f32,
+    trials: usize,
+    seed: u64,
+) -> f32 {
+    assert_eq!(b.len(), sketch.n());
+    let bn2: f32 = b.iter().map(|x| x * x).sum();
+    let mut rng = Rng::new(seed);
+    let mut fails = 0usize;
+    for _ in 0..trials {
+        let s = sketch.draw(&mut rng);
+        // Sᵀ b
+        let mut proj = vec![0.0f32; sketch.d()];
+        for i in 0..sketch.n() {
+            let bi = b[i];
+            if bi != 0.0 {
+                for (pj, &sij) in proj.iter_mut().zip(s.row(i)) {
+                    *pj += bi * sij;
+                }
+            }
+        }
+        let pn2: f32 = proj.iter().map(|x| x * x).sum();
+        if (pn2 - bn2).abs() > eps * bn2 {
+            fails += 1;
+        }
+    }
+    fails as f32 / trials as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jl_guarantee_holds_at_sufficient_d() {
+        // d = 128, ε = 0.5 ⇒ failure rate should be far below 10%.
+        let sk = GaussianSketch::new(64, 128);
+        let b: Vec<f32> = (0..64).map(|i| ((i as f32) * 0.3).sin() + 0.1).collect();
+        let rate = jl_failure_rate(&sk, &b, 0.5, 300, 7);
+        assert!(rate < 0.05, "failure rate {rate}");
+    }
+
+    #[test]
+    fn jl_degrades_at_tiny_d() {
+        let b: Vec<f32> = (0..64).map(|i| (i as f32 * 0.2).cos()).collect();
+        let tight = jl_failure_rate(&GaussianSketch::new(64, 2), &b, 0.2, 300, 8);
+        let loose = jl_failure_rate(&GaussianSketch::new(64, 256), &b, 0.2, 300, 9);
+        assert!(tight > loose, "d=2 rate {tight} vs d=256 rate {loose}");
+    }
+
+    #[test]
+    fn entries_have_variance_one_over_d() {
+        let sk = GaussianSketch::new(32, 50);
+        let mut rng = Rng::new(10);
+        let s = sk.draw(&mut rng);
+        let var: f32 =
+            s.data().iter().map(|x| x * x).sum::<f32>() / (32.0 * 50.0);
+        assert!((var - 1.0 / 50.0).abs() < 0.005, "var {var}");
+    }
+}

@@ -1,0 +1,94 @@
+//! The sketching framework of §3: random sketching matrices `S` with
+//! `E[S Sᵀ] = I` and the approximate-matrix-multiplication (AMM) machinery
+//! of Proposition 1.
+//!
+//! This module is the paper's *theory* made executable: the property tests
+//! verify Definition 3.1's expectation identity, the JL guarantee of
+//! Definition 3.2, and the Frobenius error bound of Proposition 1 —
+//! empirically, over many random draws.
+
+mod amm;
+mod gaussian;
+mod sparse;
+mod srht;
+mod subsample;
+
+pub use amm::{amm_approximate, amm_error_bound, amm_trials, optimal_probabilities, AmmStats};
+pub use gaussian::{jl_failure_rate, GaussianSketch};
+pub use sparse::VerySparseSketch;
+pub use srht::{fwht, SrhtSketch};
+pub use subsample::SubSampleSketch;
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// A random sketching matrix S ∈ R^{n×d} satisfying `E[S Sᵀ] = I` (Eq. 1).
+pub trait Sketch {
+    /// Source dimension n.
+    fn n(&self) -> usize;
+    /// Sketch dimension d.
+    fn d(&self) -> usize;
+    /// Materialise a fresh random draw of S.
+    fn draw(&self, rng: &mut Rng) -> Matrix;
+
+    /// `B S` without materialising S when a structured fast-path exists.
+    fn sketch_right(&self, b: &Matrix, rng: &mut Rng) -> Matrix {
+        crate::tensor::matmul(b, &self.draw(rng))
+    }
+}
+
+/// Empirical check of Eq. (1): average `S Sᵀ` over `trials` draws and
+/// return the max deviation from the identity. Used by property tests.
+pub fn expectation_deviation(sketch: &dyn Sketch, trials: usize, seed: u64) -> f32 {
+    let n = sketch.n();
+    let mut acc = Matrix::zeros(n, n);
+    let mut rng = Rng::new(seed);
+    for _ in 0..trials {
+        let s = sketch.draw(&mut rng);
+        let sst = crate::tensor::matmul_nt(&s, &s);
+        for (a, &b) in acc.data_mut().iter_mut().zip(sst.data()) {
+            *a += b;
+        }
+    }
+    let inv = 1.0 / trials as f32;
+    let eye = Matrix::eye(n);
+    let mut max_dev = 0.0f32;
+    for (i, (&a, &e)) in acc.data().iter().zip(eye.data()).enumerate() {
+        let _ = i;
+        max_dev = max_dev.max((a * inv - e).abs());
+    }
+    max_dev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subsample_expectation_is_identity() {
+        // uniform probabilities
+        let n = 24;
+        let probs = vec![1.0 / n as f32; n];
+        let sk = SubSampleSketch::new(probs, 8);
+        let dev = expectation_deviation(&sk, 4000, 1);
+        assert!(dev < 0.25, "deviation {dev}");
+    }
+
+    #[test]
+    fn subsample_expectation_nonuniform() {
+        let n = 16;
+        let mut probs: Vec<f32> = (1..=n).map(|i| i as f32).collect();
+        let total: f32 = probs.iter().sum();
+        probs.iter_mut().for_each(|p| *p /= total);
+        let sk = SubSampleSketch::new(probs, 8);
+        let dev = expectation_deviation(&sk, 6000, 2);
+        assert!(dev < 0.3, "deviation {dev}");
+    }
+
+    #[test]
+    fn gaussian_expectation_is_identity() {
+        let sk = GaussianSketch::new(16, 32);
+        let dev = expectation_deviation(&sk, 3000, 3);
+        assert!(dev < 0.2, "deviation {dev}");
+    }
+}

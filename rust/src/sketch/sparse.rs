@@ -1,0 +1,148 @@
+//! Very sparse random projections (Li, Hastie & Church 2006) — §3.2's
+//! fourth construction.  Entries are `sqrt(s/d)·{+1, 0, −1}` with
+//! probabilities `{1/2s, 1−1/s, 1/2s}`; with `s = sqrt(n)` each column
+//! touches only ~`n/√n` rows, so the sketch-apply is sub-linear in dense
+//! multiplications while keeping `E[S Sᵀ] = I`.
+
+use super::Sketch;
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct VerySparseSketch {
+    n: usize,
+    d: usize,
+    /// Sparsity parameter s (entry is non-zero w.p. 1/s).
+    s: f32,
+}
+
+impl VerySparseSketch {
+    /// Li et al.'s recommended `s = sqrt(n)`.
+    pub fn new(n: usize, d: usize) -> Self {
+        Self { n, d, s: (n as f32).sqrt().max(1.0) }
+    }
+
+    pub fn with_sparsity(n: usize, d: usize, s: f32) -> Self {
+        assert!(s >= 1.0);
+        Self { n, d, s }
+    }
+
+    /// Expected number of non-zeros per column.
+    pub fn expected_nnz_per_col(&self) -> f32 {
+        self.n as f32 / self.s
+    }
+
+    /// Sparse draw: per column, the (row, value) pairs.
+    pub fn draw_sparse(&self, rng: &mut Rng) -> Vec<Vec<(usize, f32)>> {
+        let p_nonzero = 1.0 / self.s;
+        let val = (self.s / self.d as f32).sqrt();
+        (0..self.d)
+            .map(|_| {
+                let mut col = Vec::new();
+                for i in 0..self.n {
+                    let u = rng.uniform();
+                    if u < p_nonzero {
+                        let sign = if u < p_nonzero * 0.5 { 1.0 } else { -1.0 };
+                        col.push((i, sign * val));
+                    }
+                }
+                col
+            })
+            .collect()
+    }
+}
+
+impl Sketch for VerySparseSketch {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn draw(&self, rng: &mut Rng) -> Matrix {
+        let cols = self.draw_sparse(rng);
+        let mut s = Matrix::zeros(self.n, self.d);
+        for (k, col) in cols.iter().enumerate() {
+            for &(i, v) in col {
+                s.set(i, k, v);
+            }
+        }
+        s
+    }
+
+    /// Sparse fast path for `B S`.
+    fn sketch_right(&self, b: &Matrix, rng: &mut Rng) -> Matrix {
+        let cols = self.draw_sparse(rng);
+        let mut out = Matrix::zeros(b.rows(), self.d);
+        for (k, col) in cols.iter().enumerate() {
+            for &(i, v) in col {
+                for r in 0..b.rows() {
+                    let cur = out.get(r, k);
+                    out.set(r, k, cur + b.get(r, i) * v);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+
+    #[test]
+    fn sparsity_level_matches_parameter() {
+        let sk = VerySparseSketch::with_sparsity(400, 8, 20.0);
+        let mut rng = Rng::new(1);
+        let cols = sk.draw_sparse(&mut rng);
+        let total_nnz: usize = cols.iter().map(Vec::len).sum();
+        let expect = 400.0 / 20.0 * 8.0;
+        assert!(
+            (total_nnz as f32 - expect).abs() < expect * 0.4,
+            "nnz {total_nnz} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn expectation_is_identity() {
+        let sk = VerySparseSketch::with_sparsity(12, 16, 3.0);
+        let dev = crate::sketch::expectation_deviation(&sk, 4000, 3);
+        assert!(dev < 0.35, "E[SSᵀ] deviation {dev}");
+    }
+
+    #[test]
+    fn sparse_apply_matches_dense() {
+        let b = Matrix::from_fn(5, 30, |i, j| ((i * 30 + j) as f32 * 0.07).sin());
+        let sk = VerySparseSketch::new(30, 6);
+        let dense = {
+            let mut rng = Rng::new(9);
+            matmul(&b, &sk.draw(&mut rng))
+        };
+        let fast = {
+            let mut rng = Rng::new(9);
+            sk.sketch_right(&b, &mut rng)
+        };
+        assert!(dense.max_abs_diff(&fast) < 1e-4);
+    }
+
+    #[test]
+    fn norm_preservation_on_average() {
+        let n = 100;
+        let sk = VerySparseSketch::new(n, 64);
+        let x: Vec<f32> = (0..n).map(|i| ((i % 7) as f32 - 3.0) * 0.2).collect();
+        let xm = Matrix::from_vec(1, n, x.clone());
+        let xn2: f32 = x.iter().map(|a| a * a).sum();
+        let mut rng = Rng::new(5);
+        let trials = 150;
+        let mut est = 0.0f64;
+        for _ in 0..trials {
+            let proj = sk.sketch_right(&xm, &mut rng);
+            est += proj.data().iter().map(|a| (a * a) as f64).sum::<f64>();
+        }
+        est /= trials as f64;
+        assert!((est / xn2 as f64 - 1.0).abs() < 0.2, "ratio {}", est / xn2 as f64);
+    }
+}

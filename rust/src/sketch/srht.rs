@@ -1,0 +1,170 @@
+//! Subsampled Randomized Hadamard Transform (SRHT) sketching — the third
+//! construction §3.2 lists (Ailon-Chazelle 2006; Lu et al. 2013).
+//!
+//! `S = sqrt(n/d) · D H P`, where `D` is a random ±1 diagonal, `H` the
+//! (normalised) Walsh-Hadamard transform and `P` a uniform column
+//! sub-sampler.  Applying `Sᵀ` to a vector costs O(n log n) via the fast
+//! WHT instead of O(n d) for a dense Gaussian sketch — the sketching
+//! counterpart of the paper's complexity target.
+
+use super::Sketch;
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// In-place fast Walsh-Hadamard transform (unnormalised); `x.len()` must
+/// be a power of two.
+pub fn fwht(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT needs a power-of-two length");
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let (a, b) = (x[j], x[j + h]);
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SrhtSketch {
+    n: usize,
+    d: usize,
+}
+
+impl SrhtSketch {
+    /// `n` must be a power of two (pad externally otherwise).
+    pub fn new(n: usize, d: usize) -> Self {
+        assert!(n.is_power_of_two(), "SRHT needs power-of-two n");
+        Self { n, d }
+    }
+
+    /// Draw the structured representation: (sign diagonal, sampled columns).
+    pub fn draw_parts(&self, rng: &mut Rng) -> (Vec<f32>, Vec<usize>) {
+        let signs: Vec<f32> =
+            (0..self.n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let cols: Vec<usize> = (0..self.d).map(|_| rng.below(self.n)).collect();
+        (signs, cols)
+    }
+
+    /// Fast path: `Bᵀ ← Sᵀ x` for one vector in O(n log n).
+    pub fn apply_t(&self, x: &[f32], signs: &[f32], cols: &[usize]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n);
+        let mut buf: Vec<f32> = x.iter().zip(signs).map(|(a, s)| a * s).collect();
+        fwht(&mut buf);
+        // normalised H: divide by sqrt(n); overall scale sqrt(n/d)/sqrt(n)
+        let scale = 1.0 / (self.d as f32).sqrt();
+        cols.iter().map(|&c| buf[c] * scale).collect()
+    }
+}
+
+impl Sketch for SrhtSketch {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn draw(&self, rng: &mut Rng) -> Matrix {
+        let (signs, cols) = self.draw_parts(rng);
+        // column k of S is sqrt(n/d)·D H e_{c_k} / sqrt(n) = D·H[:,c_k]/sqrt(d)
+        let mut s = Matrix::zeros(self.n, self.d);
+        for (k, &c) in cols.iter().enumerate() {
+            // H[:,c] entries are ±1 (Hadamard); H[i,c] = (-1)^{popcount(i&c)}
+            for i in 0..self.n {
+                let h = if (i & c).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+                s.set(i, k, signs[i] * h / (self.d as f32).sqrt());
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwht_matches_hadamard_matrix() {
+        // H e_j gives column j: entries (-1)^{popcount(i&j)}
+        let n = 8;
+        for j in 0..n {
+            let mut x = vec![0.0f32; n];
+            x[j] = 1.0;
+            fwht(&mut x);
+            for (i, &v) in x.iter().enumerate() {
+                let expect = if (i & j).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+                assert_eq!(v, expect, "H[{i},{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_is_self_inverse_up_to_n() {
+        let n = 16;
+        let orig: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut x = orig.clone();
+        fwht(&mut x);
+        fwht(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a / n as f32 - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fast_apply_matches_dense_draw() {
+        let sk = SrhtSketch::new(16, 6);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).cos()).collect();
+        let mut rng1 = Rng::new(5);
+        let (signs, cols) = sk.draw_parts(&mut rng1);
+        let fast = sk.apply_t(&x, &signs, &cols);
+        // dense: same RNG stream -> same parts
+        let mut rng2 = Rng::new(5);
+        let s = sk.draw(&mut rng2);
+        // Sᵀ x
+        let mut dense = vec![0.0f32; 6];
+        for k in 0..6 {
+            for i in 0..16 {
+                dense[k] += s.get(i, k) * x[i];
+            }
+        }
+        for (f, d) in fast.iter().zip(&dense) {
+            assert!((f - d).abs() < 1e-4, "fast {f} vs dense {d}");
+        }
+    }
+
+    #[test]
+    fn srht_expectation_is_identity() {
+        let sk = SrhtSketch::new(16, 8);
+        let dev = crate::sketch::expectation_deviation(&sk, 3000, 11);
+        assert!(dev < 0.25, "E[SSᵀ] deviation {dev}");
+    }
+
+    #[test]
+    fn srht_preserves_norms_on_average() {
+        let sk = SrhtSketch::new(64, 32);
+        let x: Vec<f32> = (0..64).map(|i| ((i * 7 % 13) as f32) * 0.1 - 0.5).collect();
+        let xn2: f32 = x.iter().map(|a| a * a).sum();
+        let mut rng = Rng::new(7);
+        let trials = 200;
+        let mut est = 0.0f64;
+        for _ in 0..trials {
+            let (signs, cols) = sk.draw_parts(&mut rng);
+            let proj = sk.apply_t(&x, &signs, &cols);
+            est += proj.iter().map(|a| (a * a) as f64).sum::<f64>();
+        }
+        est /= trials as f64;
+        assert!((est / xn2 as f64 - 1.0).abs() < 0.15, "ratio {}", est / xn2 as f64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_rejected() {
+        let _ = SrhtSketch::new(12, 4);
+    }
+}

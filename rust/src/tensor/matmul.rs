@@ -1,0 +1,227 @@
+//! Blocked, threaded matrix multiplication kernels.
+//!
+//! Three layouts cover every product the attention algorithms need without
+//! materialising transposes:
+//!
+//! * [`matmul`]     — `C = A · B`        (ikj loop order, row-major streams)
+//! * [`matmul_nt`]  — `C = A · Bᵀ`       (dot-product of rows; the `QKᵀ` shape)
+//! * [`matmul_tn`]  — `C = Aᵀ · B`       (outer-product accumulate; `SᵀV`)
+//!
+//! All kernels parallelise over row blocks with [`crate::pool::parallel_chunks`]
+//! when the output is large enough to amortise the thread spawn.
+
+use super::Matrix;
+use crate::pool;
+
+/// Work threshold (output elements × inner dim) below which the
+/// single-threaded kernel is used.
+const PAR_FLOP_THRESHOLD: usize = 1 << 22;
+
+/// Execution plan — lets benches force single/multi-thread variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatmulPlan {
+    Auto,
+    SingleThread,
+    MultiThread,
+}
+
+fn should_par(m: usize, n: usize, k: usize, plan: MatmulPlan) -> bool {
+    match plan {
+        MatmulPlan::SingleThread => false,
+        MatmulPlan::MultiThread => true,
+        MatmulPlan::Auto => m * n * k >= PAR_FLOP_THRESHOLD,
+    }
+}
+
+/// `C = A · B` with `A: (m,k)`, `B: (k,n)`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_plan(a, b, MatmulPlan::Auto)
+}
+
+pub fn matmul_plan(a: &Matrix, b: &Matrix, plan: MatmulPlan) -> Matrix {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "matmul inner-dim mismatch: {ka} vs {kb}");
+    let mut out = Matrix::zeros(m, n);
+    let bd = b.data();
+    let run = |rows: std::ops::Range<usize>, out_rows: &mut [f32]| {
+        // ikj order: C[i,:] += A[i,k] * B[k,:] — unit-stride on both C and B,
+        // which the compiler auto-vectorises.
+        for (ri, i) in rows.enumerate() {
+            let arow = a.row(i);
+            let crow = &mut out_rows[ri * n..(ri + 1) * n];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue; // sparse-ish rows (masked attention) skip work
+                }
+                let brow = &bd[k * n..(k + 1) * n];
+                for (c, &bv) in crow.iter_mut().zip(brow) {
+                    *c += aik * bv;
+                }
+            }
+        }
+    };
+    if should_par(m, n, ka, plan) {
+        pool::parallel_row_blocks(out.data_mut(), m, n, |r, buf| run(r, buf));
+    } else {
+        run(0..m, out.data_mut());
+    }
+    out
+}
+
+/// `C = A · Bᵀ` with `A: (m,k)`, `B: (n,k)` — the `Q Kᵀ` shape.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_nt_plan(a, b, MatmulPlan::Auto)
+}
+
+pub fn matmul_nt_plan(a: &Matrix, b: &Matrix, plan: MatmulPlan) -> Matrix {
+    let (m, ka) = a.shape();
+    let (n, kb) = b.shape();
+    assert_eq!(ka, kb, "matmul_nt inner-dim mismatch: {ka} vs {kb}");
+    let k = ka;
+    let mut out = Matrix::zeros(m, n);
+    let run = |rows: std::ops::Range<usize>, out_rows: &mut [f32]| {
+        for (ri, i) in rows.enumerate() {
+            let arow = a.row(i);
+            let crow = &mut out_rows[ri * n..(ri + 1) * n];
+            for j in 0..n {
+                let brow = b.row(j);
+                // 4-way unrolled dot product; slices are unit-stride.
+                let mut acc0 = 0.0f32;
+                let mut acc1 = 0.0f32;
+                let mut acc2 = 0.0f32;
+                let mut acc3 = 0.0f32;
+                let chunks = k / 4;
+                for c in 0..chunks {
+                    let o = c * 4;
+                    acc0 += arow[o] * brow[o];
+                    acc1 += arow[o + 1] * brow[o + 1];
+                    acc2 += arow[o + 2] * brow[o + 2];
+                    acc3 += arow[o + 3] * brow[o + 3];
+                }
+                let mut acc = acc0 + acc1 + acc2 + acc3;
+                for o in chunks * 4..k {
+                    acc += arow[o] * brow[o];
+                }
+                crow[j] = acc;
+            }
+        }
+    };
+    if should_par(m, n, k, plan) {
+        pool::parallel_row_blocks(out.data_mut(), m, n, |r, buf| run(r, buf));
+    } else {
+        run(0..m, out.data_mut());
+    }
+    out
+}
+
+/// `C = Aᵀ · B` with `A: (k,m)`, `B: (k,n)` — the `Sᵀ V` / pilot-norm shape.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let (ka, m) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "matmul_tn inner-dim mismatch: {ka} vs {kb}");
+    let mut out = Matrix::zeros(m, n);
+    // Accumulate rank-1 updates: C += A[k,:]ᵀ ⊗ B[k,:]. Single-threaded —
+    // every k touches the whole output, and the m×n outputs here are small
+    // (d×p) in all call sites.
+    for kk in 0..ka {
+        let arow = a.row(kk);
+        let brow = b.row(kk);
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut out.data_mut()[i * n..(i + 1) * n];
+            for (c, &bv) in crow.iter_mut().zip(brow) {
+                *c += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `y = A · x` with `A: (m,k)`, `x: (k,)`.
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    let (m, k) = a.shape();
+    assert_eq!(k, x.len(), "matvec dim mismatch");
+    let mut y = vec![0.0f32; m];
+    for i in 0..m {
+        let row = a.row(i);
+        let mut acc = 0.0f32;
+        for (av, xv) in row.iter().zip(x) {
+            acc += av * xv;
+        }
+        y[i] = acc;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let (_, n) = b.shape();
+        Matrix::from_fn(m, n, |i, j| (0..k).map(|kk| a.get(i, kk) * b.get(kk, j)).sum())
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = Matrix::from_fn(7, 5, |i, j| (i as f32 - j as f32) * 0.5);
+        let b = Matrix::from_fn(5, 9, |i, j| (i * j) as f32 * 0.1 - 1.0);
+        let got = matmul(&a, &b);
+        let want = naive(&a, &b);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_nt_matches_transpose() {
+        let a = Matrix::from_fn(6, 8, |i, j| ((i + j) as f32).sin());
+        let b = Matrix::from_fn(10, 8, |i, j| ((i * 2 + j) as f32).cos());
+        let got = matmul_nt(&a, &b);
+        let want = matmul(&a, &b.transpose());
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_tn_matches_transpose() {
+        let a = Matrix::from_fn(8, 6, |i, j| (i as f32 * 0.3 - j as f32 * 0.7).tanh());
+        let b = Matrix::from_fn(8, 4, |i, j| (i + 3 * j) as f32 * 0.05);
+        let got = matmul_tn(&a, &b);
+        let want = matmul(&a.transpose(), &b);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn threaded_matches_single() {
+        let a = Matrix::from_fn(257, 130, |i, j| ((i * 31 + j * 17) % 13) as f32 - 6.0);
+        let b = Matrix::from_fn(130, 129, |i, j| ((i * 7 + j * 3) % 11) as f32 * 0.25);
+        let st = matmul_plan(&a, &b, MatmulPlan::SingleThread);
+        let mt = matmul_plan(&a, &b, MatmulPlan::MultiThread);
+        assert!(st.max_abs_diff(&mt) < 1e-4);
+        let st2 = matmul_nt_plan(&a, &b.transpose(), MatmulPlan::SingleThread);
+        let mt2 = matmul_nt_plan(&a, &b.transpose(), MatmulPlan::MultiThread);
+        assert!(st2.max_abs_diff(&mt2) < 1e-4);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Matrix::from_fn(5, 4, |i, j| (i * 4 + j) as f32);
+        let x = vec![1.0, -1.0, 2.0, 0.5];
+        let y = matvec(&a, &x);
+        let xm = Matrix::from_vec(4, 1, x);
+        let want = matmul(&a, &xm);
+        for i in 0..5 {
+            assert!((y[i] - want.get(i, 0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        let _ = matmul(&a, &b);
+    }
+}

@@ -1,0 +1,228 @@
+//! Element-wise and row-wise operations on [`Matrix`] / `&[f32]`.
+//!
+//! Everything the attention algorithms (and the softmax structure of the
+//! paper) need: stable row softmax, exp, row sums/means, scaling, the
+//! geometric-mean fill of Eq. (6), and small vector helpers.
+
+use super::Matrix;
+
+/// Numerically-stable softmax applied to every row in place.
+pub fn softmax_rows(m: &mut Matrix) {
+    let cols = m.cols();
+    for i in 0..m.rows() {
+        let row = m.row_mut(i);
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        if !max.is_finite() {
+            // fully-masked row: fall back to uniform so downstream stays finite
+            let u = 1.0 / cols as f32;
+            row.iter_mut().for_each(|x| *x = u);
+            continue;
+        }
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        let inv = 1.0 / sum;
+        row.iter_mut().for_each(|x| *x *= inv);
+    }
+}
+
+/// `exp` applied element-wise in place.
+pub fn exp_inplace(m: &mut Matrix) {
+    m.data_mut().iter_mut().for_each(|x| *x = x.exp());
+}
+
+/// Multiply every element by a scalar in place.
+pub fn scale_inplace(m: &mut Matrix, s: f32) {
+    m.data_mut().iter_mut().for_each(|x| *x *= s);
+}
+
+/// `a - b`, allocating.
+pub fn sub(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.shape(), b.shape());
+    let data = a.data().iter().zip(b.data()).map(|(x, y)| x - y).collect();
+    Matrix::from_vec(a.rows(), a.cols(), data)
+}
+
+/// `a + b`, allocating.
+pub fn add(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.shape(), b.shape());
+    let data = a.data().iter().zip(b.data()).map(|(x, y)| x + y).collect();
+    Matrix::from_vec(a.rows(), a.cols(), data)
+}
+
+/// Sum of each row.
+pub fn row_sums(m: &Matrix) -> Vec<f32> {
+    (0..m.rows()).map(|i| m.row(i).iter().sum()).collect()
+}
+
+/// Mean of each row.
+pub fn row_means(m: &Matrix) -> Vec<f32> {
+    row_sums(m).iter().map(|s| s / m.cols() as f32).collect()
+}
+
+/// ℓ2 norm of each row — the paper's `‖V_(i)‖`.
+pub fn row_norms(m: &Matrix) -> Vec<f32> {
+    (0..m.rows())
+        .map(|i| m.row(i).iter().map(|x| x * x).sum::<f32>().sqrt())
+        .collect()
+}
+
+/// ℓ2 norm of each column — the paper's `‖B^(i)‖` (strided; used on small
+/// pilot strips only, where the strip fits cache).
+pub fn col_norms(m: &Matrix) -> Vec<f32> {
+    let mut out = vec![0.0f32; m.cols()];
+    for i in 0..m.rows() {
+        for (o, &x) in out.iter_mut().zip(m.row(i)) {
+            *o += x * x;
+        }
+    }
+    out.iter_mut().for_each(|x| *x = x.sqrt());
+    out
+}
+
+/// Column sums: `1ᵀ M`.
+pub fn col_sums(m: &Matrix) -> Vec<f32> {
+    let mut out = vec![0.0f32; m.cols()];
+    for i in 0..m.rows() {
+        for (o, &x) in out.iter_mut().zip(m.row(i)) {
+            *o += x;
+        }
+    }
+    out
+}
+
+/// Row-wise geometric mean computed in log space (Eq. 6's `g`); every
+/// element must be > 0 (exp scores are).
+pub fn row_geometric_means(m: &Matrix) -> Vec<f32> {
+    (0..m.rows())
+        .map(|i| {
+            let row = m.row(i);
+            let mean_log: f32 =
+                row.iter().map(|x| x.max(1e-30).ln()).sum::<f32>() / row.len() as f32;
+            mean_log.exp()
+        })
+        .collect()
+}
+
+/// Divide each row by the matching scalar (`diag(d)⁻¹ M`).
+pub fn scale_rows_inplace(m: &mut Matrix, scales: &[f32]) {
+    assert_eq!(scales.len(), m.rows());
+    for (i, &s) in scales.iter().enumerate() {
+        m.row_mut(i).iter_mut().for_each(|x| *x *= s);
+    }
+}
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// ℓ2 norm of a vector.
+pub fn norm2(v: &[f32]) -> f32 {
+    dot(v, v).sqrt()
+}
+
+/// Normalize a vector to unit ℓ2 norm in place; returns the original norm.
+pub fn normalize(v: &mut [f32]) -> f32 {
+    let n = norm2(v);
+    if n > 0.0 {
+        let inv = 1.0 / n;
+        v.iter_mut().for_each(|x| *x *= inv);
+    }
+    n
+}
+
+/// axpy: `y += a * x`.
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_are_stochastic() {
+        let mut m = Matrix::from_fn(4, 8, |i, j| (i * j) as f32 * 0.3 - 1.0);
+        softmax_rows(&mut m);
+        for s in row_sums(&m) {
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!(m.data().iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let mut a = Matrix::from_fn(2, 5, |_, j| j as f32);
+        let mut b = Matrix::from_fn(2, 5, |_, j| j as f32 + 1000.0);
+        softmax_rows(&mut a);
+        softmax_rows(&mut b);
+        assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+
+    #[test]
+    fn softmax_handles_fully_masked_row() {
+        let mut m = Matrix::full(1, 4, f32::NEG_INFINITY);
+        softmax_rows(&mut m);
+        for &x in m.data() {
+            assert!((x - 0.25).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn norms_match_manual() {
+        let m = Matrix::from_rows(&[vec![3.0, 4.0], vec![0.0, 0.0]]);
+        assert_eq!(row_norms(&m), vec![5.0, 0.0]);
+        let c = col_norms(&m);
+        assert!((c[0] - 3.0).abs() < 1e-6 && (c[1] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn geometric_mean_of_constants() {
+        let m = Matrix::full(2, 10, 3.0);
+        for g in row_geometric_means(&m) {
+            assert!((g - 3.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn geometric_le_arithmetic() {
+        // AM-GM inequality, the heart of Informer's sparsity measurement.
+        let m = Matrix::from_fn(5, 16, |i, j| ((i * 37 + j * 11) % 17) as f32 * 0.2 + 0.1);
+        let gm = row_geometric_means(&m);
+        let am = row_means(&m);
+        for (g, a) in gm.iter().zip(&am) {
+            assert!(g <= &(a + 1e-5));
+        }
+    }
+
+    #[test]
+    fn scale_rows_matches_diag_product() {
+        let mut m = Matrix::from_fn(3, 4, |i, j| (i + j) as f32 + 1.0);
+        let orig = m.clone();
+        scale_rows_inplace(&mut m, &[2.0, 0.5, -1.0]);
+        for j in 0..4 {
+            assert_eq!(m.get(0, j), orig.get(0, j) * 2.0);
+            assert_eq!(m.get(1, j), orig.get(1, j) * 0.5);
+            assert_eq!(m.get(2, j), -orig.get(2, j));
+        }
+    }
+
+    #[test]
+    fn vector_helpers() {
+        let mut v = vec![3.0, 4.0];
+        assert_eq!(norm2(&v), 5.0);
+        let n = normalize(&mut v);
+        assert_eq!(n, 5.0);
+        assert!((norm2(&v) - 1.0).abs() < 1e-6);
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &v, &mut y);
+        assert!((y[0] - (1.0 + 2.0 * 0.6)).abs() < 1e-6);
+    }
+}

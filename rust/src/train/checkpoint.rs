@@ -1,0 +1,166 @@
+//! Checkpointing: persist/restore a training session's parameter and Adam
+//! state, so long sweeps can resume and trained models can be served.
+//!
+//! Format: a JSON header (`<name>.ckpt.json`) with tensor names/shapes and
+//! the step counter, plus a raw little-endian f32 blob (`<name>.ckpt.bin`)
+//! holding params ‖ adam_m ‖ adam_v in manifest order — the same layout
+//! discipline as the AOT params blob.
+
+use crate::json::{parse, Json};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A snapshot of training state, decoupled from the live session.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub method: String,
+    pub step: u64,
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub params: Vec<Vec<f32>>,
+    pub adam_m: Vec<Vec<f32>>,
+    pub adam_v: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    /// Write `<prefix>.ckpt.json` + `<prefix>.ckpt.bin`.
+    pub fn save(&self, prefix: &Path) -> Result<()> {
+        if let Some(dir) = prefix.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let header = Json::obj(vec![
+            ("method", Json::str(self.method.clone())),
+            ("step", Json::num(self.step as f64)),
+            (
+                "tensors",
+                Json::arr(
+                    self.names
+                        .iter()
+                        .zip(&self.shapes)
+                        .map(|(n, s)| {
+                            Json::obj(vec![
+                                ("name", Json::str(n.clone())),
+                                (
+                                    "shape",
+                                    Json::arr(s.iter().map(|&x| Json::num(x as f64)).collect()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(path_json(prefix), header.to_pretty())?;
+        let mut blob = Vec::new();
+        for group in [&self.params, &self.adam_m, &self.adam_v] {
+            for tensor in group.iter() {
+                for x in tensor {
+                    blob.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        std::fs::write(path_bin(prefix), blob)?;
+        Ok(())
+    }
+
+    /// Load a checkpoint pair written by [`Checkpoint::save`].
+    pub fn load(prefix: &Path) -> Result<Self> {
+        let header = parse(&std::fs::read_to_string(path_json(prefix))?)
+            .context("parsing checkpoint header")?;
+        let method = header.req_str("method")?.to_string();
+        let step = header.req_f64("step")? as u64;
+        let tensors = header.req_arr("tensors")?;
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        for t in tensors {
+            names.push(t.req_str("name")?.to_string());
+            shapes.push(
+                t.req_arr("shape")?
+                    .iter()
+                    .map(|x| x.as_usize().context("bad shape"))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        let sizes: Vec<usize> = shapes.iter().map(|s| s.iter().product()).collect();
+        let total: usize = sizes.iter().sum();
+
+        let bytes = std::fs::read(path_bin(prefix)).context("reading checkpoint blob")?;
+        anyhow::ensure!(
+            bytes.len() == total * 3 * 4,
+            "blob size {} != 3×{total} f32",
+            bytes.len()
+        );
+        let mut all = Vec::with_capacity(total * 3);
+        for chunk in bytes.chunks_exact(4) {
+            all.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        let split_group = |off: &mut usize| {
+            let mut group = Vec::with_capacity(sizes.len());
+            for &sz in &sizes {
+                group.push(all[*off..*off + sz].to_vec());
+                *off += sz;
+            }
+            group
+        };
+        let mut off = 0usize;
+        let params = split_group(&mut off);
+        let adam_m = split_group(&mut off);
+        let adam_v = split_group(&mut off);
+        Ok(Self { method, step, names, shapes, params, adam_m, adam_v })
+    }
+}
+
+fn path_json(prefix: &Path) -> std::path::PathBuf {
+    prefix.with_extension("ckpt.json")
+}
+
+fn path_bin(prefix: &Path) -> std::path::PathBuf {
+    prefix.with_extension("ckpt.bin")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            method: "skeinformer".into(),
+            step: 123,
+            names: vec!["a/w".into(), "b/w".into()],
+            shapes: vec![vec![2, 3], vec![4]],
+            params: vec![vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![7.0, 8.0, 9.0, 10.0]],
+            adam_m: vec![vec![0.1; 6], vec![0.2; 4]],
+            adam_v: vec![vec![0.3; 6], vec![0.4; 4]],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("skein_ckpt_test");
+        let prefix = dir.join("run1");
+        let ck = sample();
+        ck.save(&prefix).unwrap();
+        let back = Checkpoint::load(&prefix).unwrap();
+        assert_eq!(ck, back);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn truncated_blob_is_error() {
+        let dir = std::env::temp_dir().join("skein_ckpt_trunc");
+        let prefix = dir.join("run1");
+        let ck = sample();
+        ck.save(&prefix).unwrap();
+        // truncate the blob
+        let bin = prefix.with_extension("ckpt.bin");
+        let bytes = std::fs::read(&bin).unwrap();
+        std::fs::write(&bin, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(Checkpoint::load(&prefix).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_files_are_errors() {
+        assert!(Checkpoint::load(Path::new("/nonexistent/run")).is_err());
+    }
+}

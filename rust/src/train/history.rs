@@ -1,0 +1,128 @@
+//! Training curves (Figure 2's validation-loss-vs-time series).
+
+/// One evaluation point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HistoryPoint {
+    pub step: usize,
+    pub seconds: f64,
+    pub train_loss: f64,
+    pub val_loss: f64,
+    pub val_accuracy: f64,
+}
+
+/// An ordered series of evaluation points.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    points: Vec<HistoryPoint>,
+}
+
+impl History {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, p: HistoryPoint) {
+        debug_assert!(
+            self.points.last().map_or(true, |last| p.step > last.step),
+            "history must be monotone in step"
+        );
+        self.points.push(p);
+    }
+
+    pub fn points(&self) -> &[HistoryPoint] {
+        &self.points
+    }
+
+    pub fn last(&self) -> Option<&HistoryPoint> {
+        self.points.last()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Best (lowest) validation loss.
+    pub fn best_val_loss(&self) -> Option<f64> {
+        self.points.iter().map(|p| p.val_loss).min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Best validation accuracy.
+    pub fn best_val_accuracy(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|p| p.val_accuracy)
+            .max_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Area-proxy for convergence speed: seconds until val loss first drops
+    /// within `tol` of its eventual best (the "time to long-time limit"
+    /// notion behind the paper's Fast Convergence claim).
+    pub fn seconds_to_converge(&self, tol: f64) -> Option<f64> {
+        let best = self.best_val_loss()?;
+        self.points.iter().find(|p| p.val_loss <= best + tol).map(|p| p.seconds)
+    }
+
+    /// CSV rows for Figure-2 style plotting.
+    pub fn csv_rows(&self, label: &str) -> Vec<String> {
+        self.points
+            .iter()
+            .map(|p| {
+                format!(
+                    "{label},{},{:.3},{:.5},{:.5},{:.4}",
+                    p.step, p.seconds, p.train_loss, p.val_loss, p.val_accuracy
+                )
+            })
+            .collect()
+    }
+
+    pub const CSV_HEADER: &'static str = "method,step,seconds,train_loss,val_loss,val_accuracy";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(step: usize, secs: f64, vl: f64, va: f64) -> HistoryPoint {
+        HistoryPoint { step, seconds: secs, train_loss: vl + 0.1, val_loss: vl, val_accuracy: va }
+    }
+
+    #[test]
+    fn best_metrics() {
+        let mut h = History::new();
+        h.push(mk(10, 1.0, 2.0, 0.3));
+        h.push(mk(20, 2.0, 1.5, 0.5));
+        h.push(mk(30, 3.0, 1.7, 0.45));
+        assert_eq!(h.best_val_loss(), Some(1.5));
+        assert_eq!(h.best_val_accuracy(), Some(0.5));
+        assert_eq!(h.last().unwrap().step, 30);
+    }
+
+    #[test]
+    fn convergence_time() {
+        let mut h = History::new();
+        h.push(mk(10, 1.0, 3.0, 0.2));
+        h.push(mk(20, 2.0, 1.01, 0.4));
+        h.push(mk(30, 3.0, 1.0, 0.4));
+        // within 0.05 of best (1.0) first at t=2.0
+        assert_eq!(h.seconds_to_converge(0.05), Some(2.0));
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut h = History::new();
+        h.push(mk(10, 1.0, 2.0, 0.3));
+        let rows = h.csv_rows("skeinformer");
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].starts_with("skeinformer,10,"));
+        assert_eq!(History::CSV_HEADER.split(',').count(), rows[0].split(',').count());
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn non_monotone_push_asserts() {
+        let mut h = History::new();
+        h.push(mk(10, 1.0, 1.0, 0.1));
+        h.push(mk(5, 2.0, 1.0, 0.1));
+    }
+}

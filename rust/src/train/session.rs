@@ -1,0 +1,211 @@
+//! A live training session: compiled train/forward executables plus the
+//! host-side copies of parameters and Adam state, advanced step by step.
+
+use crate::config::ExperimentConfig;
+use crate::data::Batch;
+use crate::runtime::{literal_f32, literal_i32, scalar_f32, scalar_i32, ArtifactManifest,
+                     Executable, Runtime};
+use anyhow::{Context, Result};
+
+pub struct TrainSession {
+    manifest: ArtifactManifest,
+    train_exe: Executable,
+    fwd_exe: Executable,
+    /// Host copies of params / adam m / adam v, in manifest order.
+    params: Vec<Vec<f32>>,
+    adam_m: Vec<Vec<f32>>,
+    adam_v: Vec<Vec<f32>>,
+    step_no: u64,
+    seed: i32,
+    batch: usize,
+    seq_len: usize,
+    classes: usize,
+    last_loss: f32,
+    last_acc: f32,
+}
+
+impl TrainSession {
+    /// Load artifacts for `cfg.method` and initialise state from the
+    /// params blob.
+    pub fn load(rt: &Runtime, cfg: &ExperimentConfig) -> Result<Self> {
+        let dir = std::path::Path::new(&cfg.artifacts_dir);
+        let manifest = ArtifactManifest::load(dir, &cfg.method)?;
+        // The artifact is shape-specialised; cross-check the config.
+        let batch = manifest.cfg("batch")?;
+        let seq_len = manifest.cfg("seq_len")?;
+        let classes = manifest.cfg("classes")?;
+        anyhow::ensure!(
+            seq_len == cfg.model.seq_len,
+            "artifact lowered at seq_len {seq_len}, config wants {}; re-run `make artifacts`",
+            cfg.model.seq_len
+        );
+        let train_exe = rt.load_hlo(&manifest.train_path())?;
+        let fwd_exe = rt.load_hlo(&manifest.forward_path())?;
+        let params = manifest.load_initial_params()?;
+        let adam_m: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let adam_v = adam_m.clone();
+        Ok(Self {
+            manifest,
+            train_exe,
+            fwd_exe,
+            params,
+            adam_m,
+            adam_v,
+            step_no: 0,
+            seed: cfg.train.seed as i32,
+            batch,
+            seq_len,
+            classes,
+            last_loss: f32::NAN,
+            last_acc: f32::NAN,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.step_no
+    }
+
+    pub fn method(&self) -> &str {
+        &self.manifest.method
+    }
+
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    /// Snapshot the full optimizer state for checkpointing.
+    pub fn snapshot(&self) -> crate::train::Checkpoint {
+        crate::train::Checkpoint {
+            method: self.manifest.method.clone(),
+            step: self.step_no,
+            names: self.manifest.params.iter().map(|p| p.name.clone()).collect(),
+            shapes: self.manifest.params.iter().map(|p| p.shape.clone()).collect(),
+            params: self.params.clone(),
+            adam_m: self.adam_m.clone(),
+            adam_v: self.adam_v.clone(),
+        }
+    }
+
+    /// Restore from a checkpoint (must match this session's method/shapes).
+    pub fn restore(&mut self, ck: &crate::train::Checkpoint) -> Result<()> {
+        anyhow::ensure!(ck.method == self.manifest.method, "checkpoint method mismatch");
+        anyhow::ensure!(ck.params.len() == self.params.len(), "tensor count mismatch");
+        for ((spec, ours), theirs) in
+            self.manifest.params.iter().zip(&self.params).zip(&ck.params)
+        {
+            anyhow::ensure!(
+                ours.len() == theirs.len(),
+                "shape mismatch for {}", spec.name
+            );
+        }
+        self.params = ck.params.clone();
+        self.adam_m = ck.adam_m.clone();
+        self.adam_v = ck.adam_v.clone();
+        self.step_no = ck.step;
+        Ok(())
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        let n = self.params.len();
+        let mut lits = Vec::with_capacity(3 * n + 5);
+        for (spec, buf) in self.manifest.params.iter().zip(&self.params) {
+            lits.push(literal_f32(buf, &spec.shape)?);
+        }
+        for (spec, buf) in self.manifest.params.iter().zip(&self.adam_m) {
+            lits.push(literal_f32(buf, &spec.shape)?);
+        }
+        for (spec, buf) in self.manifest.params.iter().zip(&self.adam_v) {
+            lits.push(literal_f32(buf, &spec.shape)?);
+        }
+        Ok(lits)
+    }
+
+    /// One optimizer step on a batch; returns (loss, accuracy-on-batch).
+    pub fn step(&mut self, batch: &Batch) -> Result<(f32, f32)> {
+        anyhow::ensure!(batch.batch == self.batch, "batch size mismatch");
+        anyhow::ensure!(batch.seq_len == self.seq_len, "seq_len mismatch");
+        self.step_no += 1;
+        let mut inputs = self.param_literals()?;
+        inputs.push(scalar_f32(self.step_no as f32));
+        inputs.push(literal_i32(&batch.tokens, &[self.batch, self.seq_len])?);
+        inputs.push(literal_f32(&batch.mask, &[self.batch, self.seq_len])?);
+        inputs.push(literal_i32(&batch.labels, &[self.batch])?);
+        inputs.push(scalar_i32(self.seed));
+
+        let outputs = self.train_exe.run(&inputs).context("train step")?;
+        let n = self.params.len();
+        anyhow::ensure!(
+            outputs.len() == 3 * n + 2,
+            "train step returned {} outputs, expected {}",
+            outputs.len(),
+            3 * n + 2
+        );
+        for (i, out) in outputs.iter().take(n).enumerate() {
+            self.params[i] = out.to_vec::<f32>()?;
+        }
+        for (i, out) in outputs.iter().skip(n).take(n).enumerate() {
+            self.adam_m[i] = out.to_vec::<f32>()?;
+        }
+        for (i, out) in outputs.iter().skip(2 * n).take(n).enumerate() {
+            self.adam_v[i] = out.to_vec::<f32>()?;
+        }
+        self.last_loss = outputs[3 * n].get_first_element::<f32>()?;
+        self.last_acc = outputs[3 * n + 1].get_first_element::<f32>()?;
+        Ok((self.last_loss, self.last_acc))
+    }
+
+    /// Forward pass on one batch; returns logits (batch × classes).
+    pub fn forward(&self, batch: &Batch) -> Result<Vec<f32>> {
+        let mut inputs = Vec::with_capacity(self.params.len() + 3);
+        for (spec, buf) in self.manifest.params.iter().zip(&self.params) {
+            inputs.push(literal_f32(buf, &spec.shape)?);
+        }
+        inputs.push(literal_i32(&batch.tokens, &[self.batch, self.seq_len])?);
+        inputs.push(literal_f32(&batch.mask, &[self.batch, self.seq_len])?);
+        inputs.push(scalar_i32(self.seed));
+        let outputs = self.fwd_exe.run(&inputs).context("forward")?;
+        anyhow::ensure!(!outputs.is_empty(), "forward returned nothing");
+        Ok(outputs[0].to_vec::<f32>()?)
+    }
+
+    /// Mean (val_loss, val_accuracy) over held-out batches.
+    pub fn evaluate(&self, batches: &[Batch]) -> Result<(f64, f64)> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut loss_sum = 0.0f64;
+        for batch in batches {
+            let logits = self.forward(batch)?;
+            for (b, &label) in batch.labels.iter().enumerate() {
+                let row = &logits[b * self.classes..(b + 1) * self.classes];
+                // softmax CE on host for the val loss
+                let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let logsum =
+                    max + row.iter().map(|x| (x - max).exp()).sum::<f32>().ln();
+                loss_sum += (logsum - row[label as usize]) as f64;
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1)) // NaN-safe: diverged runs count as wrong
+                    .map(|(i, _)| i)
+                    .unwrap();
+                if pred == label as usize {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok((loss_sum / total.max(1) as f64, correct as f64 / total.max(1) as f64))
+    }
+}

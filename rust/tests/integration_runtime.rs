@@ -1,0 +1,130 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These require `make artifacts` to have run; when artifacts are absent
+//! the tests skip (printing why) so `cargo test` stays green on a fresh
+//! clone.
+
+use skeinformer::json;
+use skeinformer::rng::Rng;
+use skeinformer::runtime::{literal_f32, scalar_i32, ArtifactManifest, Runtime};
+use skeinformer::synth_qkv::{generate, QkvConfig};
+use skeinformer::tensor::{spectral_norm, spectral_norm_diff, Matrix};
+use std::path::Path;
+
+fn artifacts_ready() -> bool {
+    Path::new("artifacts/attn_manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn attn_artifacts_load_and_execute() {
+    require_artifacts!();
+    let man = json::parse(&std::fs::read_to_string("artifacts/attn_manifest.json").unwrap())
+        .unwrap();
+    let n = man.req_usize("n").unwrap();
+    let p = man.req_usize("p").unwrap();
+
+    let rt = Runtime::cpu().unwrap();
+    let skein = rt.load_hlo(Path::new("artifacts/attn_skeinformer.hlo.txt")).unwrap();
+    let std_exe = rt.load_hlo(Path::new("artifacts/attn_standard.hlo.txt")).unwrap();
+
+    let mut rng = Rng::new(3);
+    let (q, k, v) = generate(&QkvConfig::pretrained(n, p), &mut rng);
+    let inputs = [
+        literal_f32(q.data(), &[n, p]).unwrap(),
+        literal_f32(k.data(), &[n, p]).unwrap(),
+        literal_f32(v.data(), &[n, p]).unwrap(),
+        scalar_i32(7),
+    ];
+    let skein_out = skein.run(&inputs).unwrap();
+    let std_out = std_exe.run(&inputs).unwrap();
+    let skein_m = Matrix::from_vec(n, p, skein_out[0].to_vec::<f32>().unwrap());
+    let std_m = Matrix::from_vec(n, p, std_out[0].to_vec::<f32>().unwrap());
+    assert!(skein_m.all_finite());
+    assert!(std_m.all_finite());
+
+    // the pallas skeinformer kernel must approximate the exact kernel and
+    // beat the trivial rank-one approximation
+    let base = spectral_norm(&std_m);
+    let rel = spectral_norm_diff(&skein_m, &std_m) / base;
+    assert!(rel < 0.9, "kernel approximation error {rel}");
+
+    // determinism given the same seed input
+    let skein_out2 = skein.run(&inputs).unwrap();
+    let again = Matrix::from_vec(n, p, skein_out2[0].to_vec::<f32>().unwrap());
+    assert_eq!(skein_m.max_abs_diff(&again), 0.0);
+}
+
+#[test]
+fn pallas_kernel_artifact_matches_rust_exact_attention() {
+    // L1 (pallas standard kernel, through PJRT) vs L3 (pure rust) — the
+    // cross-layer consistency check.
+    require_artifacts!();
+    let man = json::parse(&std::fs::read_to_string("artifacts/attn_manifest.json").unwrap())
+        .unwrap();
+    let n = man.req_usize("n").unwrap();
+    let p = man.req_usize("p").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let std_exe = rt.load_hlo(Path::new("artifacts/attn_standard.hlo.txt")).unwrap();
+    let mut rng = Rng::new(11);
+    let (q, k, v) = generate(&QkvConfig::pretrained(n, p), &mut rng);
+    let out = std_exe
+        .run(&[
+            literal_f32(q.data(), &[n, p]).unwrap(),
+            literal_f32(k.data(), &[n, p]).unwrap(),
+            literal_f32(v.data(), &[n, p]).unwrap(),
+            scalar_i32(0),
+        ])
+        .unwrap();
+    let kernel = Matrix::from_vec(n, p, out[0].to_vec::<f32>().unwrap());
+    let rust = skeinformer::attention::Standard::exact(&q, &k, &v, None);
+    let diff = kernel.max_abs_diff(&rust);
+    assert!(diff < 1e-3, "pallas kernel vs rust exact attention: {diff}");
+}
+
+#[test]
+fn every_method_manifest_is_consistent() {
+    if !Path::new("artifacts/skeinformer_manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    for method in skeinformer::config::KNOWN_METHODS {
+        let man = ArtifactManifest::load(Path::new("artifacts"), method)
+            .unwrap_or_else(|e| panic!("{method}: {e:#}"));
+        assert_eq!(&man.method, method);
+        assert!(man.train_path().exists(), "{method}: missing train hlo");
+        assert!(man.forward_path().exists(), "{method}: missing fwd hlo");
+        let params = man.load_initial_params().unwrap();
+        assert_eq!(params.len(), man.params.len());
+        // all params finite
+        for (spec, buf) in man.params.iter().zip(&params) {
+            assert!(
+                buf.iter().all(|x| x.is_finite()),
+                "{method}: non-finite init in {}",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn manifest_config_matches_default_experiment_config() {
+    if !Path::new("artifacts/skeinformer_manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let man = ArtifactManifest::load(Path::new("artifacts"), "skeinformer").unwrap();
+    let cfg = skeinformer::config::ExperimentConfig::default();
+    assert_eq!(man.cfg("seq_len").unwrap(), cfg.model.seq_len);
+    assert_eq!(man.cfg("vocab").unwrap(), cfg.model.vocab);
+    assert_eq!(man.cfg("classes").unwrap(), cfg.model.classes);
+    assert_eq!(man.cfg("embed").unwrap(), cfg.model.embed);
+}

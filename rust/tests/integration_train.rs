@@ -1,0 +1,196 @@
+//! Integration tests over the training stack: TrainSession stepping the
+//! real AOT artifacts, the experiment runner, and the inference server.
+//! All skip gracefully when artifacts are missing.
+
+use skeinformer::config::ExperimentConfig;
+use skeinformer::data::Batcher;
+use skeinformer::rng::Rng;
+use skeinformer::runtime::Runtime;
+use skeinformer::train::{run_experiment, TrainSession};
+use std::path::Path;
+
+fn ready() -> bool {
+    Path::new("artifacts/skeinformer_manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !ready() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn train_step_reduces_loss_on_fixed_batch() {
+    require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let cfg = ExperimentConfig::default();
+    let mut session = TrainSession::load(&rt, &cfg).unwrap();
+    let task = skeinformer::data::by_name("listops", session.seq_len()).unwrap();
+    let batcher = Batcher::new(task.as_ref(), session.batch(), session.seq_len());
+    let batch = batcher.next_batch(&mut Rng::new(1));
+
+    // repeatedly stepping on the same batch must drive its loss down
+    let (first_loss, _) = session.step(&batch).unwrap();
+    let mut last = first_loss;
+    for _ in 0..15 {
+        let (l, _) = session.step(&batch).unwrap();
+        last = l;
+    }
+    assert!(
+        last < first_loss * 0.9,
+        "loss did not decrease on fixed batch: {first_loss} -> {last}"
+    );
+}
+
+#[test]
+fn forward_is_deterministic_and_shaped() {
+    require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let cfg = ExperimentConfig::default();
+    let session = TrainSession::load(&rt, &cfg).unwrap();
+    let task = skeinformer::data::by_name("text", session.seq_len()).unwrap();
+    let batcher = Batcher::new(task.as_ref(), session.batch(), session.seq_len());
+    let batch = batcher.next_batch(&mut Rng::new(2));
+    let a = session.forward(&batch).unwrap();
+    let b = session.forward(&batch).unwrap();
+    assert_eq!(a.len(), session.batch() * session.classes());
+    assert_eq!(a, b, "forward not deterministic given fixed seed");
+    assert!(a.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn evaluate_reports_sane_metrics() {
+    require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let cfg = ExperimentConfig::default();
+    let session = TrainSession::load(&rt, &cfg).unwrap();
+    let task = skeinformer::data::by_name("listops", session.seq_len()).unwrap();
+    let batcher = Batcher::new(task.as_ref(), session.batch(), session.seq_len());
+    let mut rng = Rng::new(3);
+    let batches: Vec<_> = (0..3).map(|_| batcher.next_batch(&mut rng)).collect();
+    let (loss, acc) = session.evaluate(&batches).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+    // untrained model ≈ chance on a 10-class task
+    assert!(acc < 0.5, "untrained accuracy suspiciously high: {acc}");
+}
+
+#[test]
+fn run_experiment_end_to_end_short() {
+    require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = ExperimentConfig::default();
+    cfg.method = "skeinformer".into();
+    cfg.task = "text".into();
+    cfg.train.max_steps = 30;
+    cfg.train.eval_every = 10;
+    cfg.train.patience = 10;
+    cfg.train.eval_examples = 64;
+    let outcome = run_experiment(&rt, &cfg).unwrap();
+    assert_eq!(outcome.method, "skeinformer");
+    assert!(outcome.steps > 0 && outcome.steps <= 30);
+    assert!(!outcome.history.is_empty());
+    assert!(outcome.ms_per_step > 0.0);
+    // history is monotone in step and time
+    let pts = outcome.history.points();
+    for w in pts.windows(2) {
+        assert!(w[1].step > w[0].step);
+        assert!(w[1].seconds >= w[0].seconds);
+    }
+}
+
+#[test]
+fn early_stopping_respects_patience() {
+    require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = ExperimentConfig::default();
+    // vmean on pathfinder barely learns -> early stop path gets exercised
+    cfg.method = "vmean".into();
+    cfg.task = "pathfinder".into();
+    cfg.train.max_steps = 200;
+    cfg.train.eval_every = 5;
+    cfg.train.patience = 2;
+    cfg.train.eval_examples = 32;
+    let outcome = run_experiment(&rt, &cfg).unwrap();
+    assert!(
+        outcome.steps < 200,
+        "expected early stop, ran all {} steps",
+        outcome.steps
+    );
+}
+
+#[test]
+fn inference_server_round_trip() {
+    require_artifacts!();
+    let cfg = ExperimentConfig::default();
+    let task = skeinformer::data::by_name("listops", cfg.model.seq_len).unwrap();
+    let handle =
+        skeinformer::coordinator::server::start(cfg.clone(), std::time::Duration::from_millis(3));
+    let mut rng = Rng::new(5);
+    let mut rxs = Vec::new();
+    for _ in 0..40 {
+        let ex = skeinformer::data::Task::sample(task.as_ref(), &mut rng);
+        rxs.push(handle.submit(ex.tokens));
+    }
+    for rx in rxs {
+        let logits = rx.recv().expect("reply");
+        assert_eq!(logits.len(), cfg.model.classes);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.requests, 40);
+    assert!(stats.batches >= 2, "batching never formed multiple batches");
+    assert!(stats.mean_occupancy > 0.0);
+}
+
+#[test]
+fn seed_changes_training_trajectory_but_not_contract() {
+    require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = ExperimentConfig::default();
+    cfg.train.max_steps = 6;
+    cfg.train.eval_every = 3;
+    cfg.train.eval_examples = 32;
+    let o1 = run_experiment(&rt, &cfg).unwrap();
+    cfg.train.seed = 777;
+    let o2 = run_experiment(&rt, &cfg).unwrap();
+    // different seeds -> different data stream -> different losses
+    let l1 = o1.history.points().last().unwrap().val_loss;
+    let l2 = o2.history.points().last().unwrap().val_loss;
+    assert!((l1 - l2).abs() > 1e-9, "seeds produced identical trajectories");
+}
+
+#[test]
+fn checkpoint_roundtrip_through_session() {
+    require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let cfg = ExperimentConfig::default();
+    let mut session = TrainSession::load(&rt, &cfg).unwrap();
+    let task = skeinformer::data::by_name("listops", session.seq_len()).unwrap();
+    let batcher = Batcher::new(task.as_ref(), session.batch(), session.seq_len());
+    let mut rng = Rng::new(9);
+    for _ in 0..3 {
+        let b = batcher.next_batch(&mut rng);
+        session.step(&b).unwrap();
+    }
+    let ck = session.snapshot();
+    let dir = std::env::temp_dir().join("skein_session_ckpt");
+    let prefix = dir.join("run");
+    ck.save(&prefix).unwrap();
+    let loaded = skeinformer::train::Checkpoint::load(&prefix).unwrap();
+
+    // restoring into a fresh session reproduces the same forward outputs
+    let mut fresh = TrainSession::load(&rt, &cfg).unwrap();
+    let probe = batcher.next_batch(&mut rng);
+    let before = fresh.forward(&probe).unwrap();
+    fresh.restore(&loaded).unwrap();
+    let after = fresh.forward(&probe).unwrap();
+    let trained = session.forward(&probe).unwrap();
+    assert_ne!(before, after, "restore had no effect");
+    assert_eq!(after, trained, "restored state differs from source session");
+    assert_eq!(fresh.steps_taken(), 3);
+    let _ = std::fs::remove_dir_all(dir);
+}

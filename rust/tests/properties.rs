@@ -1,0 +1,371 @@
+//! Cross-module property suites (prop::Runner substrate — the proptest
+//! analogue).  Each property runs over many randomized cases; failures
+//! report a replayable seed.
+
+use skeinformer::attention::{registry, AttentionMethod, Skeinformer, Standard};
+use skeinformer::data;
+use skeinformer::json;
+use skeinformer::prop::Runner;
+use skeinformer::rng::Rng;
+use skeinformer::sketch::{amm_error_bound, GaussianSketch, Sketch, SubSampleSketch};
+use skeinformer::tensor::{
+    self, frobenius_norm, matmul, matmul_nt, row_sums, softmax_rows, spectral_norm, Matrix,
+};
+
+fn random_matrix(g: &mut skeinformer::prop::Gen, rows: usize, cols: usize) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    for x in m.data_mut() {
+        *x = g.normal();
+    }
+    m
+}
+
+// ---------------------------------------------------------------- tensor
+
+#[test]
+fn prop_matmul_distributes_over_addition() {
+    Runner::new("matmul-distributive", 40).run(|g| {
+        let (m, k, n) = (g.int(1, 12), g.int(1, 12), g.int(1, 12));
+        let a = random_matrix(g, m, k);
+        let b = random_matrix(g, k, n);
+        let c = random_matrix(g, k, n);
+        let left = matmul(&a, &tensor::add(&b, &c));
+        let right = tensor::add(&matmul(&a, &b), &matmul(&a, &c));
+        assert!(left.max_abs_diff(&right) < 1e-3);
+    });
+}
+
+#[test]
+fn prop_matmul_nt_equals_explicit_transpose() {
+    Runner::new("matmul-nt-transpose", 40).run(|g| {
+        let (m, k, n) = (g.int(1, 16), g.int(1, 16), g.int(1, 16));
+        let a = random_matrix(g, m, k);
+        let b = random_matrix(g, n, k);
+        assert!(matmul_nt(&a, &b).max_abs_diff(&matmul(&a, &b.transpose())) < 1e-3);
+    });
+}
+
+#[test]
+fn prop_softmax_rows_stochastic_and_order_preserving() {
+    Runner::new("softmax-stochastic", 40).run(|g| {
+        let (r, c) = (g.int(1, 10), g.int(2, 20));
+        let mut m = random_matrix(g, r, c);
+        let before = m.clone();
+        softmax_rows(&mut m);
+        for s in row_sums(&m) {
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+        // order preservation within each row
+        for i in 0..r {
+            for j in 1..c {
+                let ord_in = before.get(i, j) > before.get(i, j - 1);
+                let ord_out = m.get(i, j) > m.get(i, j - 1);
+                assert_eq!(ord_in, ord_out, "softmax reordered elements");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_spectral_norm_is_submultiplicative_with_vectors() {
+    // ‖Mx‖ ≤ ‖M‖₂ ‖x‖ for random vectors
+    Runner::new("spectral-operator-bound", 30).run(|g| {
+        let (m, n) = (g.int(2, 15), g.int(2, 15));
+        let a = random_matrix(g, m, n);
+        let norm = spectral_norm(&a);
+        let x: Vec<f32> = (0..n).map(|_| g.normal()).collect();
+        let ax = tensor::matvec(&a, &x);
+        let lhs = tensor::norm2(&ax);
+        let rhs = norm * tensor::norm2(&x);
+        assert!(lhs <= rhs * 1.01 + 1e-4, "‖Ax‖={lhs} > ‖A‖‖x‖={rhs}");
+    });
+}
+
+// ---------------------------------------------------------------- sketch
+
+#[test]
+fn prop_subsample_sketch_unbiased_for_matvec() {
+    // E[S Sᵀ x] = x — averaged over draws the sketch acts like identity.
+    Runner::new("sketch-unbiased", 8).run(|g| {
+        let n = g.int(6, 20);
+        let d = g.int(2, 8);
+        let probs: Vec<f32> = (0..n).map(|_| g.f32(0.1, 1.0)).collect();
+        let sk = SubSampleSketch::new(probs, d);
+        let x: Vec<f32> = (0..n).map(|_| g.normal()).collect();
+        let xm = Matrix::from_vec(1, n, x.clone());
+        let trials = 2500;
+        let mut acc = vec![0.0f64; n];
+        let mut rng = Rng::new(g.int(0, 1 << 30) as u64);
+        for _ in 0..trials {
+            let s = sk.draw(&mut rng);
+            // x S Sᵀ  (1×n): (1,d) · (n,d)ᵀ
+            let xs = matmul(&xm, &s);
+            let xss = matmul_nt(&xs, &s);
+            for (a, &v) in acc.iter_mut().zip(xss.data()) {
+                *a += v as f64;
+            }
+        }
+        let xn = tensor::norm2(&x) as f64;
+        for (i, a) in acc.iter().enumerate() {
+            let mean = a / trials as f64;
+            assert!(
+                (mean - x[i] as f64).abs() < 0.25 * xn.max(1.0),
+                "index {i}: mean {mean} vs {}",
+                x[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_amm_bound_holds() {
+    // Proposition 1's bound, randomized over shapes and probability floors.
+    Runner::new("amm-bound", 10).run(|g| {
+        let n = g.int(8, 32);
+        let p = g.int(2, 8);
+        let d = g.int(4, 16);
+        let mut b = random_matrix(g, n, n);
+        softmax_rows(&mut b);
+        let v = random_matrix(g, n, p);
+        let probs = skeinformer::sketch::amm_approximate; // silence unused warn path
+        let _ = probs;
+        let opt = {
+            let bc = tensor::col_norms(&b);
+            let vr = tensor::row_norms(&v);
+            bc.iter().zip(&vr).map(|(x, y)| (x * y).max(1e-6)).collect::<Vec<_>>()
+        };
+        let sk = SubSampleSketch::new(opt, d);
+        let exact = matmul(&b, &v);
+        let bound = amm_error_bound(&b, &v, d, 1.0, 0.05);
+        let mut rng = Rng::new(g.int(0, 1 << 30) as u64);
+        for _ in 0..50 {
+            let approx = skeinformer::sketch::amm_approximate(&b, &v, &sk, &mut rng);
+            let err = frobenius_norm(&tensor::sub(&approx, &exact)).powi(2);
+            assert!(err <= bound, "err {err} > bound {bound} (n={n}, d={d})");
+        }
+    });
+}
+
+#[test]
+fn prop_gaussian_sketch_preserves_norms_on_average() {
+    Runner::new("jl-average", 10).run(|g| {
+        let n = g.int(8, 40);
+        let d = 64;
+        let sk = GaussianSketch::new(n, d);
+        let x: Vec<f32> = (0..n).map(|_| g.normal()).collect();
+        let xn2: f32 = x.iter().map(|a| a * a).sum();
+        let mut rng = Rng::new(g.int(0, 1 << 30) as u64);
+        let trials = 60;
+        let mut est = 0.0f64;
+        for _ in 0..trials {
+            let s = sk.draw(&mut rng);
+            let xm = Matrix::from_vec(1, n, x.clone());
+            let proj = matmul(&xm, &s);
+            est += proj.data().iter().map(|a| (a * a) as f64).sum::<f64>();
+        }
+        est /= trials as f64;
+        assert!((est / xn2 as f64 - 1.0).abs() < 0.3, "ratio {}", est / xn2 as f64);
+    });
+}
+
+// -------------------------------------------------------------- attention
+
+#[test]
+fn prop_every_method_finite_and_shaped_on_random_inputs() {
+    Runner::new("attention-finite", 12).run(|g| {
+        let n = g.pow2(16, 64);
+        let p = g.pow2(4, 16);
+        let d = g.pow2(4, 16).min(n);
+        let q = random_matrix(g, n, p);
+        let k = random_matrix(g, n, p);
+        let v = random_matrix(g, n, p);
+        let seed = g.int(0, 1 << 20) as u64;
+        for m in registry(d) {
+            let out = m.compute(&q, &k, &v, None, &mut Rng::new(seed));
+            assert_eq!(out.shape(), (n, p), "{}", m.name());
+            assert!(out.all_finite(), "{} non-finite", m.name());
+        }
+    });
+}
+
+#[test]
+fn prop_standard_attention_is_permutation_equivariant_in_keys() {
+    // permuting (K, V) rows together must not change the output
+    Runner::new("key-permutation-invariance", 20).run(|g| {
+        let n = g.int(4, 24);
+        let p = g.pow2(4, 8);
+        let q = random_matrix(g, n, p);
+        let k = random_matrix(g, n, p);
+        let v = random_matrix(g, n, p);
+        let base = Standard::exact(&q, &k, &v, None);
+        let mut perm: Vec<usize> = (0..n).collect();
+        let seed = g.int(0, 1 << 20) as u64;
+        Rng::new(seed).shuffle(&mut perm);
+        let kp = k.gather_rows(&perm);
+        let vp = v.gather_rows(&perm);
+        let out = Standard::exact(&q, &kp, &vp, None);
+        assert!(base.max_abs_diff(&out) < 1e-3);
+    });
+}
+
+#[test]
+fn prop_skeinformer_full_budget_close_to_exact() {
+    // d == n with PSR: pilot rows exact, selected columns = all columns.
+    Runner::new("skeinformer-full-budget", 15).run(|g| {
+        let n = g.pow2(8, 32);
+        let p = g.pow2(4, 8);
+        let q = random_matrix(g, n, p);
+        let k = random_matrix(g, n, p);
+        let v = random_matrix(g, n, p);
+        let exact = Standard::exact(&q, &k, &v, None);
+        let out =
+            Skeinformer::new(n).compute(&q, &k, &v, None, &mut Rng::new(g.int(0, 99999) as u64));
+        assert!(
+            out.max_abs_diff(&exact) < 5e-3,
+            "full-budget diff {}",
+            out.max_abs_diff(&exact)
+        );
+    });
+}
+
+#[test]
+fn prop_masked_positions_never_leak() {
+    // randomized version of the §4.4 invariance test, across mask sizes
+    Runner::new("mask-never-leaks", 12).run(|g| {
+        let n = 48;
+        let p = 8;
+        let valid = g.int(8, 40);
+        let q = random_matrix(g, n, p);
+        let mut k = random_matrix(g, n, p);
+        let mut v = random_matrix(g, n, p);
+        let mask: Vec<f32> = (0..n).map(|i| if i < valid { 1.0 } else { 0.0 }).collect();
+        let seed = g.int(0, 1 << 20) as u64;
+        let skein = Skeinformer::new(16);
+        let a = skein.compute(&q, &k, &v, Some(&mask), &mut Rng::new(seed));
+        for i in valid..n {
+            for j in 0..p {
+                k.set(i, j, g.f32(-1e3, 1e3));
+                v.set(i, j, g.f32(-1e3, 1e3));
+            }
+        }
+        let b = skein.compute(&q, &k, &v, Some(&mask), &mut Rng::new(seed));
+        for i in 0..valid {
+            for j in 0..p {
+                assert!((a.get(i, j) - b.get(i, j)).abs() < 1e-2, "row {i} leaked");
+            }
+        }
+    });
+}
+
+// -------------------------------------------------------------------- data
+
+#[test]
+fn prop_listops_generator_evaluator_agree() {
+    Runner::new("listops-agreement", 60).run(|g| {
+        let seq = g.pow2(32, 256);
+        let task = data::ListOpsTask::new(seq);
+        let seed = g.int(0, 1 << 30) as u64;
+        let ex = data::Task::sample(&task, &mut Rng::new(seed));
+        let val = data::ListOpsTask::evaluate(&ex.tokens).expect("parse");
+        assert_eq!(val as i32, ex.label);
+        assert!(ex.tokens.len() <= seq);
+    });
+}
+
+#[test]
+fn prop_batcher_invariants() {
+    Runner::new("batcher-invariants", 30).run(|g| {
+        let seq = g.pow2(32, 128);
+        let bsz = g.pow2(1, 16);
+        let name = *g.choose(data::TASK_NAMES);
+        let task = data::by_name(name, seq).unwrap();
+        let batcher = data::Batcher::new(task.as_ref(), bsz, seq);
+        let batch = batcher.next_batch(&mut Rng::new(g.int(0, 1 << 30) as u64));
+        assert_eq!(batch.tokens.len(), bsz * seq);
+        assert_eq!(batch.labels.len(), bsz);
+        for b in 0..bsz {
+            let row_mask = &batch.mask[b * seq..(b + 1) * seq];
+            let ones = row_mask.iter().take_while(|&&m| m == 1.0).count();
+            assert!(ones >= 1, "{name}: empty example");
+            assert!(row_mask[ones..].iter().all(|&m| m == 0.0), "{name}: non-prefix mask");
+            for (i, &m) in row_mask.iter().enumerate() {
+                if m == 0.0 {
+                    assert_eq!(batch.tokens[b * seq + i], data::PAD);
+                }
+            }
+            assert!((batch.labels[b] as usize) < task.classes());
+        }
+    });
+}
+
+// -------------------------------------------------------------------- json
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    Runner::new("json-roundtrip", 60).run(|g| {
+        // build a random JSON value, serialize, reparse, compare
+        fn build(g: &mut skeinformer::prop::Gen, depth: usize) -> json::Json {
+            match if depth >= 3 { g.int(0, 3) } else { g.int(0, 5) } {
+                0 => json::Json::Null,
+                1 => json::Json::Bool(g.int(0, 1) == 1),
+                2 => json::Json::Num((g.normal() * 100.0) as f64),
+                3 => {
+                    let len = g.int(0, 8);
+                    let s: String = (0..len)
+                        .map(|_| {
+                            let c = g.int(0, 4);
+                            match c {
+                                0 => '"',
+                                1 => '\\',
+                                2 => '\n',
+                                3 => 'é',
+                                _ => 'a',
+                            }
+                        })
+                        .collect();
+                    json::Json::Str(s)
+                }
+                4 => {
+                    let len = g.int(0, 4);
+                    json::Json::Arr((0..len).map(|_| build(g, depth + 1)).collect())
+                }
+                _ => {
+                    let len = g.int(0, 4);
+                    json::Json::Obj(
+                        (0..len)
+                            .map(|i| (format!("k{i}"), build(g, depth + 1)))
+                            .collect(),
+                    )
+                }
+            }
+        }
+        let v = build(g, 0);
+        let compact = json::parse(&v.to_string()).expect("compact reparse");
+        assert_eq!(v, compact);
+        let pretty = json::parse(&v.to_pretty()).expect("pretty reparse");
+        assert_eq!(v, pretty);
+    });
+}
+
+// ------------------------------------------------------------------ config
+
+#[test]
+fn prop_config_roundtrip() {
+    Runner::new("config-roundtrip", 40).run(|g| {
+        let mut cfg = skeinformer::config::ExperimentConfig::default();
+        cfg.method = g.choose(skeinformer::config::KNOWN_METHODS).to_string();
+        cfg.task = g.choose(skeinformer::config::KNOWN_TASKS).to_string();
+        cfg.model.batch = g.pow2(1, 64);
+        cfg.model.features = g.pow2(8, 64);
+        cfg.train.max_steps = g.int(1, 1000);
+        cfg.train.eval_every = g.int(1, 50);
+        cfg.train.seed = g.int(0, 1 << 30) as u64;
+        let j = cfg.to_json();
+        let back = skeinformer::config::ExperimentConfig::from_json(&j).expect("parse");
+        assert_eq!(cfg, back);
+    });
+}
+
+// keep the trait import used even if a future edit drops a call site
+#[allow(unused)]
+fn _assert_object_safe(_: &dyn AttentionMethod) {}
