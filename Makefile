@@ -1,0 +1,24 @@
+# Convenience targets the module docs reference.
+#
+# `make artifacts` needs a python environment with jax installed (the L2
+# lowering path); everything else is pure rust and works offline.
+
+.PHONY: artifacts build test bench fmt clippy
+
+artifacts:
+	python3 python/compile/aot.py --out artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench batched_throughput
+
+fmt:
+	cargo fmt --check
+
+clippy:
+	cargo clippy -- -D warnings

@@ -1,25 +1,130 @@
-//! Serving example: the L3 batched-inference service under an open-loop
-//! arrival process, reporting latency percentiles and throughput at
-//! several offered loads — the systems-side payoff of an O(n log n)
-//! attention: more sequences per second per device.
+//! Serving example: batched inference under an open-loop arrival process,
+//! reporting latency percentiles and throughput at several offered loads —
+//! the systems-side payoff of an O(n log n) attention: more sequences per
+//! second per device.
+//!
+//! Two engines:
+//!
+//! * `--engine cpu` (default) — the pure-rust [`BatchedAttention`] path:
+//!   clients submit `[heads, seq, head_dim]` Q/K/V slabs, the server packs
+//!   them into a `B × H` grid and fans heads out across workers.  Works
+//!   offline, no artifacts needed.
+//! * `--engine pjrt` — the AOT artifact path (token sequences through the
+//!   compiled forward graph); requires `make artifacts`.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serving -- --method skeinformer
+//! cargo run --release --example serving -- --method skeinformer --batch 8 --heads 4
 //! ```
+//!
+//! [`BatchedAttention`]: skeinformer::attention::BatchedAttention
 
 use skeinformer::cli::Args;
-use skeinformer::config::ExperimentConfig;
-use skeinformer::coordinator::server;
-use skeinformer::data;
+use skeinformer::coordinator::attention_server::{self, AttentionServerConfig, HeadsRequest};
 use skeinformer::metrics::Percentiles;
 use skeinformer::rng::Rng;
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
-    if !std::path::Path::new("artifacts/skeinformer_manifest.json").exists() {
-        anyhow::bail!("artifacts/ missing — run `make artifacts` first");
-    }
     let args = Args::parse(std::env::args().skip(1))?;
+    match args.get_or("engine", "cpu") {
+        "cpu" => run_cpu(&args),
+        "pjrt" => run_pjrt(&args),
+        other => anyhow::bail!("unknown engine {other:?} — expected cpu or pjrt"),
+    }
+}
+
+/// Drain (receiver, submit-time) pairs concurrently with the submission
+/// loop, so recorded latency is submit→reply, not submit→end-of-run.
+/// (Replies come back in submission order — the batcher is FIFO — so an
+/// in-order blocking drain observes each reply as soon as it is ready.)
+fn spawn_latency_collector<T: Send + 'static>(
+    check: impl Fn(&T) -> bool + Send + 'static,
+) -> (
+    mpsc::Sender<(mpsc::Receiver<T>, Instant)>,
+    std::thread::JoinHandle<anyhow::Result<Percentiles>>,
+) {
+    let (pipe_tx, pipe_rx) = mpsc::channel::<(mpsc::Receiver<T>, Instant)>();
+    let join = std::thread::spawn(move || {
+        let mut latency = Percentiles::default();
+        for (rx, sent) in pipe_rx {
+            let out = rx.recv()?;
+            anyhow::ensure!(check(&out), "bad reply payload");
+            latency.push(sent.elapsed().as_secs_f64() * 1e3);
+        }
+        Ok(latency)
+    });
+    (pipe_tx, join)
+}
+
+fn run_cpu(args: &Args) -> anyhow::Result<()> {
+    let cfg = AttentionServerConfig::from_args(args)?;
+    let total = args.get_usize("requests", 96)?;
+    println!(
+        "batched attention service: method={} B<={} H={} n={} p={} d={}",
+        cfg.method, cfg.max_batch, cfg.heads, cfg.seq, cfg.head_dim, cfg.d
+    );
+
+    for rate_per_s in [50.0f64, 200.0] {
+        let handle = attention_server::start(cfg.clone())?;
+        let mut rng = Rng::new(123);
+        let gap = Duration::from_secs_f64(1.0 / rate_per_s);
+        let (pipe, collector) =
+            spawn_latency_collector(|out: &Vec<f32>| out.iter().all(|x| x.is_finite()));
+        let t0 = Instant::now();
+        for i in 0..total {
+            // absolute-deadline pacing: payload generation time must not
+            // erode the offered rate
+            let target = t0 + gap.mul_f64(i as f64);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            let req = HeadsRequest::random(cfg.request_elems(), &mut rng);
+            let _ = pipe.send((handle.submit(req), Instant::now()));
+        }
+        drop(pipe);
+        let collected = collector
+            .join()
+            .map_err(|_| anyhow::anyhow!("latency collector panicked"))?;
+        let wall = t0.elapsed().as_secs_f64();
+        let mut latency = match collected {
+            Ok(l) => l,
+            // reply channels closed early: the serve thread bailed —
+            // surface its own error if it has one
+            Err(e) => {
+                return match handle.shutdown() {
+                    Ok(_) => Err(e),
+                    Err(server_err) => Err(server_err),
+                };
+            }
+        };
+        let stats = handle.shutdown()?;
+        println!(
+            "offered {rate_per_s:>6.0} seq/s | served {:>4} in {wall:>6.2}s ({:>6.1} seq/s) | \
+             batches {:>3} (occ {:.2}, {:.1} ms/batch) | \
+             latency p50 {:>7.1} ms  p95 {:>7.1} ms  p99 {:>7.1} ms",
+            stats.requests,
+            stats.requests as f64 / wall,
+            stats.batches,
+            stats.mean_occupancy,
+            stats.mean_batch_ms,
+            latency.percentile(50.0),
+            latency.percentile(95.0),
+            latency.percentile(99.0),
+        );
+    }
+    Ok(())
+}
+
+fn run_pjrt(args: &Args) -> anyhow::Result<()> {
+    use skeinformer::config::ExperimentConfig;
+    use skeinformer::coordinator::server;
+    use skeinformer::data;
+
+    if !std::path::Path::new("artifacts/skeinformer_manifest.json").exists() {
+        anyhow::bail!("artifacts/ missing — run `make artifacts` first (or use --engine cpu)");
+    }
     let mut cfg = ExperimentConfig::default();
     cfg.method = args.get_or("method", "skeinformer").to_string();
     cfg.task = args.get_or("task", "text").to_string();
@@ -35,23 +140,35 @@ fn main() -> anyhow::Result<()> {
     for rate_per_s in [50.0f64, 200.0] {
         let handle = server::start(cfg.clone(), max_wait);
         let mut rng = Rng::new(123);
-        let mut latency = Percentiles::default();
         let gap = Duration::from_secs_f64(1.0 / rate_per_s);
+        let (pipe, collector) =
+            spawn_latency_collector(|logits: &Vec<f32>| logits.iter().all(|x| x.is_finite()));
         let t0 = Instant::now();
-        let mut inflight = Vec::new();
         for i in 0..total {
-            let ex = task.sample(&mut rng);
-            inflight.push((handle.submit(ex.tokens), Instant::now()));
-            if i + 1 < total {
-                std::thread::sleep(gap);
+            let target = t0 + gap.mul_f64(i as f64);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
             }
+            let ex = task.sample(&mut rng);
+            let _ = pipe.send((handle.submit(ex.tokens), Instant::now()));
         }
-        for (rx, sent) in inflight {
-            let logits = rx.recv()?;
-            anyhow::ensure!(logits.iter().all(|x| x.is_finite()));
-            latency.push(sent.elapsed().as_secs_f64() * 1e3);
-        }
+        drop(pipe);
+        let collected = collector
+            .join()
+            .map_err(|_| anyhow::anyhow!("latency collector panicked"))?;
         let wall = t0.elapsed().as_secs_f64();
+        let mut latency = match collected {
+            Ok(l) => l,
+            // reply channels closed early: surface the serve thread's own
+            // error (e.g. "PJRT unavailable" in offline stub builds)
+            Err(e) => {
+                return match handle.shutdown() {
+                    Ok(_) => Err(e),
+                    Err(server_err) => Err(server_err),
+                };
+            }
+        };
         let stats = handle.shutdown()?;
         println!(
             "offered {rate_per_s:>6.0} req/s | served {:>4} in {wall:>6.2}s ({:>6.1} req/s) | \

@@ -1,0 +1,94 @@
+//! Batched multi-head throughput: sequences/sec for standard vs
+//! skeinformer vs linformer across `B × H` grids and sequence lengths —
+//! the serving-shaped counterpart of the single-head scaling bench.
+//!
+//! Default run covers `B×H ∈ {1×1, 4×8, 16×8}` at `n = 512` (so the quick
+//! pass finishes in seconds even for exact attention); `--full` extends to
+//! `n ∈ {512, 2048, 4096}`, where the paper's O(n²) vs O(n log n) gap
+//! dominates.  Emits `reports/batched_throughput.csv`.
+
+use skeinformer::attention::{self, BatchedAttention};
+use skeinformer::bench_util::{ascii_table, bench, write_csv, BenchConfig};
+use skeinformer::rng::Rng;
+use skeinformer::tensor::BatchTensor;
+
+fn random_qkv(
+    batch: usize,
+    heads: usize,
+    seq: usize,
+    dim: usize,
+    seed: u64,
+) -> (BatchTensor, BatchTensor, BatchTensor) {
+    let mut rng = Rng::new(seed);
+    let mut mk = |_salt: u64| {
+        let mut t = BatchTensor::zeros(batch, heads, seq, dim);
+        rng.fill_normal(t.data_mut());
+        t
+    };
+    (mk(0), mk(1), mk(2))
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let shapes: &[(usize, usize)] = &[(1, 1), (4, 8), (16, 8)];
+    let seqs: &[usize] = if full { &[512, 2048, 4096] } else { &[512] };
+    let head_dim = 32;
+    let d = 64;
+    let methods = ["standard", "skeinformer", "linformer"];
+
+    println!(
+        "batched multi-head throughput (head_dim={head_dim}, d={d}{})",
+        if full { ", --full" } else { ", quick pass; --full for n up to 4096" }
+    );
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for &n in seqs {
+        for &(b, h) in shapes {
+            let (q, k, v) = random_qkv(b, h, n, head_dim, 42);
+            for name in methods {
+                let method = attention::by_name(name, d).expect("registry method");
+                let engine = BatchedAttention::new();
+                let cfg = BenchConfig {
+                    warmup_iters: 1,
+                    measure_iters: if n >= 2048 { 3 } else { 5 },
+                    max_seconds: 60.0,
+                };
+                let label = format!("{name} B{b}xH{h} n{n}");
+                let r = bench(&label, cfg, || {
+                    std::hint::black_box(engine.run(
+                        method.as_ref(),
+                        &q,
+                        &k,
+                        &v,
+                        None,
+                        7,
+                    ));
+                });
+                let seqs_per_sec = b as f64 / (r.mean_ms / 1e3);
+                println!("{}  ->  {seqs_per_sec:>9.2} seq/s", r.report_line());
+                rows.push(vec![
+                    name.to_string(),
+                    format!("{b}x{h}"),
+                    format!("{n}"),
+                    format!("{:.2}", r.mean_ms),
+                    format!("{seqs_per_sec:.2}"),
+                ]);
+                csv.push(format!(
+                    "{name},{b},{h},{n},{:.3},{seqs_per_sec:.3}",
+                    r.mean_ms
+                ));
+            }
+        }
+    }
+    println!(
+        "\n=== Batched throughput (sequences/sec) ===\n{}",
+        ascii_table(&["Model", "BxH", "n", "ms/batch", "seq/s"], &rows)
+    );
+    write_csv(
+        "reports/batched_throughput.csv",
+        "method,batch,heads,n,mean_ms,seqs_per_sec",
+        &csv,
+    )
+    .expect("csv");
+    println!("-> reports/batched_throughput.csv");
+}

@@ -1,0 +1,269 @@
+//! Batched multi-head attention engine: run any [`AttentionMethod`] over a
+//! `B × H` grid of head slices, dispatching heads across workers.
+//!
+//! This is the execution path the serving coordinator and the throughput
+//! benches use for the realistic workload shape — many sequences × many
+//! heads — instead of the single-matrix `n×p` call.
+//!
+//! **Shape conventions.** Inputs are [`BatchTensor`]s of shape
+//! `[batch, heads, seq, head_dim]` (head slices contiguous, so per-head
+//! extraction is one memcpy).  Padding masks are per *sequence*: a
+//! `(batch, seq)` [`Matrix`] whose row `b` is the 0/1 key mask shared by
+//! all heads of sequence `b`.
+//!
+//! **RNG-stream derivation rule.** Head `(b, h)` draws its randomness from
+//! `Rng::new(seed ^ head_index)` with `head_index = b * heads + h`.  The
+//! stream depends only on the grid position and the caller's seed — never
+//! on the worker schedule — so the output is **bitwise identical for every
+//! worker count** (verified by the conformance suite at workers `1` vs
+//! [`pool::worker_count`]).
+//!
+//! ```
+//! use skeinformer::attention::{BatchedAttention, Standard};
+//! use skeinformer::tensor::BatchTensor;
+//!
+//! let q = BatchTensor::from_fn(2, 4, 32, 8, |b, h, i, j| {
+//!     ((b + h * 3 + i * 5 + j) as f32 * 0.1).sin()
+//! });
+//! let out = BatchedAttention::new().run(&Standard, &q, &q, &q, None, 7);
+//! assert_eq!(out.shape(), (2, 4, 32, 8));
+//! ```
+
+use super::AttentionMethod;
+use crate::pool;
+use crate::rng::Rng;
+use crate::tensor::{BatchTensor, Matrix};
+
+/// The shape of a batched multi-head workload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HeadSpec {
+    /// Number of sequences in the batch.
+    pub batch: usize,
+    /// Attention heads per sequence.
+    pub heads: usize,
+    /// Sequence length n.
+    pub seq: usize,
+    /// Per-head feature dimension p.
+    pub head_dim: usize,
+}
+
+impl HeadSpec {
+    pub fn new(batch: usize, heads: usize, seq: usize, head_dim: usize) -> Self {
+        Self { batch, heads, seq, head_dim }
+    }
+
+    /// The spec of an existing tensor.
+    pub fn of(t: &BatchTensor) -> Self {
+        let (batch, heads, seq, head_dim) = t.shape();
+        Self { batch, heads, seq, head_dim }
+    }
+
+    /// Head slices in the grid (`batch * heads`).
+    pub fn head_count(&self) -> usize {
+        self.batch * self.heads
+    }
+
+    /// Total f32 elements per tensor of this shape.
+    pub fn elems(&self) -> usize {
+        self.batch * self.heads * self.seq * self.head_dim
+    }
+
+    /// Flat grid index of head `(b, h)` — the value XOR'd into the seed.
+    pub fn head_index(&self, b: usize, h: usize) -> u64 {
+        (b * self.heads + h) as u64
+    }
+
+    /// An all-zeros tensor of this shape.
+    pub fn zeros(&self) -> BatchTensor {
+        BatchTensor::zeros(self.batch, self.heads, self.seq, self.head_dim)
+    }
+
+    pub fn matches(&self, t: &BatchTensor) -> bool {
+        *self == Self::of(t)
+    }
+}
+
+/// Runs an [`AttentionMethod`] over every head of a batched workload,
+/// dispatching heads across workers via [`pool::parallel_map_workers`].
+///
+/// The default worker cap is [`pool::worker_count`]; `with_workers` pins it
+/// (the worker-invariance tests pin 1 vs N and assert bitwise equality).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchedAttention {
+    workers: Option<usize>,
+}
+
+impl BatchedAttention {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pin the worker cap for head dispatch.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers.max(1));
+        self
+    }
+
+    /// The effective worker cap.
+    pub fn workers(&self) -> usize {
+        self.workers.unwrap_or_else(pool::worker_count)
+    }
+
+    /// Compute attention for every head of the grid.
+    ///
+    /// `q`, `k`, `v` must share one shape; `masks`, when present, is
+    /// `(batch, seq)` with row `b` the 0/1 key mask for sequence `b`.
+    /// Randomness follows the module-level derivation rule, so the result
+    /// is a pure function of `(method, inputs, seed)`.
+    pub fn run(
+        &self,
+        method: &dyn AttentionMethod,
+        q: &BatchTensor,
+        k: &BatchTensor,
+        v: &BatchTensor,
+        masks: Option<&Matrix>,
+        seed: u64,
+    ) -> BatchTensor {
+        let spec = HeadSpec::of(q);
+        assert!(spec.matches(k), "Q/K batch shapes differ: {:?} vs {:?}", q, k);
+        assert!(spec.matches(v), "Q/V batch shapes differ: {:?} vs {:?}", q, v);
+        if let Some(m) = masks {
+            assert_eq!(
+                m.shape(),
+                (spec.batch, spec.seq),
+                "mask must be (batch, seq)"
+            );
+        }
+
+        let grid: Vec<(usize, usize)> = (0..spec.batch)
+            .flat_map(|b| (0..spec.heads).map(move |h| (b, h)))
+            .collect();
+        let outs = pool::parallel_map_workers(&grid, self.workers(), |&(b, h)| {
+            let mut rng = Rng::new(seed ^ spec.head_index(b, h));
+            let qm = q.head_matrix(b, h);
+            let km = k.head_matrix(b, h);
+            let vm = v.head_matrix(b, h);
+            let mask_row = masks.map(|m| m.row(b));
+            method.compute(&qm, &km, &vm, mask_row, &mut rng)
+        });
+
+        let mut out = spec.zeros();
+        for (&(b, h), m) in grid.iter().zip(&outs) {
+            out.set_head(b, h, m);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{Skeinformer, Standard};
+
+    fn toy_qkv(spec: HeadSpec) -> (BatchTensor, BatchTensor, BatchTensor) {
+        let mk = |salt: usize| {
+            let mut t = spec.zeros();
+            let mut rng = Rng::new(900 + salt as u64);
+            rng.fill_normal(t.data_mut());
+            t
+        };
+        (mk(0), mk(1), mk(2))
+    }
+
+    #[test]
+    fn batched_standard_matches_per_head_exact() {
+        let spec = HeadSpec::new(2, 3, 16, 4);
+        let (q, k, v) = toy_qkv(spec);
+        let out = BatchedAttention::new().run(&Standard, &q, &k, &v, None, 0);
+        for b in 0..spec.batch {
+            for h in 0..spec.heads {
+                let want = Standard::exact(
+                    &q.head_matrix(b, h),
+                    &k.head_matrix(b, h),
+                    &v.head_matrix(b, h),
+                    None,
+                );
+                assert_eq!(out.head_matrix(b, h).max_abs_diff(&want), 0.0, "head ({b},{h})");
+            }
+        }
+    }
+
+    #[test]
+    fn rng_streams_follow_the_derivation_rule() {
+        let spec = HeadSpec::new(2, 2, 24, 4);
+        let (q, k, v) = toy_qkv(spec);
+        let skein = Skeinformer::new(8);
+        let seed = 41u64;
+        let out = BatchedAttention::new().run(&skein, &q, &k, &v, None, seed);
+        for b in 0..spec.batch {
+            for h in 0..spec.heads {
+                let mut rng = Rng::new(seed ^ spec.head_index(b, h));
+                let want = skein.compute(
+                    &q.head_matrix(b, h),
+                    &k.head_matrix(b, h),
+                    &v.head_matrix(b, h),
+                    None,
+                    &mut rng,
+                );
+                assert_eq!(
+                    out.head_matrix(b, h).max_abs_diff(&want),
+                    0.0,
+                    "head ({b},{h}) deviates from documented stream"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn per_sequence_masks_apply_to_the_right_rows() {
+        let spec = HeadSpec::new(2, 2, 12, 4);
+        let (q, k, v) = toy_qkv(spec);
+        // sequence 0 fully valid; sequence 1 padded after position 8
+        let masks = Matrix::from_fn(2, 12, |b, i| {
+            if b == 1 && i >= 8 {
+                0.0
+            } else {
+                1.0
+            }
+        });
+        let out = BatchedAttention::new().run(&Standard, &q, &k, &v, Some(&masks), 0);
+        for h in 0..spec.heads {
+            let want0 = Standard::exact(
+                &q.head_matrix(0, h),
+                &k.head_matrix(0, h),
+                &v.head_matrix(0, h),
+                None,
+            );
+            assert_eq!(out.head_matrix(0, h).max_abs_diff(&want0), 0.0);
+            let mask1: Vec<f32> = masks.row(1).to_vec();
+            let want1 = Standard::exact(
+                &q.head_matrix(1, h),
+                &k.head_matrix(1, h),
+                &v.head_matrix(1, h),
+                Some(&mask1),
+            );
+            assert_eq!(out.head_matrix(1, h).max_abs_diff(&want1), 0.0);
+        }
+    }
+
+    #[test]
+    fn worker_cap_does_not_change_results() {
+        let spec = HeadSpec::new(3, 4, 32, 8);
+        let (q, k, v) = toy_qkv(spec);
+        let skein = Skeinformer::new(12);
+        let one = BatchedAttention::new().with_workers(1).run(&skein, &q, &k, &v, None, 5);
+        let many = BatchedAttention::new()
+            .with_workers(pool::worker_count())
+            .run(&skein, &q, &k, &v, None, 5);
+        assert_eq!(one.max_abs_diff(&many), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let q = BatchTensor::zeros(1, 2, 8, 4);
+        let k = BatchTensor::zeros(1, 2, 8, 4);
+        let v = BatchTensor::zeros(1, 2, 16, 4);
+        let _ = BatchedAttention::new().run(&Standard, &q, &k, &v, None, 0);
+    }
+}

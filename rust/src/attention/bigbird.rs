@@ -93,7 +93,7 @@ impl AttentionMethod for BigBird {
                 let mut scores: Vec<f32> = keys
                     .iter()
                     .map(|&j| {
-                        let masked = mask.map_or(false, |m| m[j] <= 0.0);
+                        let masked = mask.is_some_and(|m| m[j] <= 0.0);
                         if masked {
                             f32::NEG_INFINITY
                         } else {

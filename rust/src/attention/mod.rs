@@ -18,7 +18,13 @@
 //!
 //! Methods are registered by the same names the python layer uses
 //! (`attention.METHODS`), so experiment configs work across layers.
+//!
+//! The single-matrix call above is the unit of work; realistic workloads
+//! (many sequences × many heads) go through [`BatchedAttention`], which
+//! dispatches every method over a `B × H` grid of head slices with
+//! deterministic per-head RNG streams.
 
+mod batch;
 mod bigbird;
 mod informer;
 mod linformer;
@@ -30,6 +36,7 @@ mod skeinformer;
 mod standard;
 mod vmean;
 
+pub use batch::{BatchedAttention, HeadSpec};
 pub use bigbird::BigBird;
 pub use informer::Informer;
 pub use linformer::{Linformer, LinformerUnreducedJlt};

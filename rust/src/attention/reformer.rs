@@ -101,7 +101,7 @@ impl AttentionMethod for Reformer {
                 for &kp in &key_pos {
                     let j = order[kp];
                     let same_bucket = buckets[j] == bi;
-                    let masked = mask.map_or(false, |m| m[j] <= 0.0);
+                    let masked = mask.is_some_and(|m| m[j] <= 0.0);
                     if !same_bucket || masked {
                         scores.push(f32::NEG_INFINITY);
                     } else {

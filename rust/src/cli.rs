@@ -15,13 +15,24 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("flag --{0} expects a value")]
     MissingValue(String),
-    #[error("invalid value for --{flag}: {value:?} ({expected})")]
     BadValue { flag: String, value: String, expected: &'static str },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(flag) => write!(f, "flag --{flag} expects a value"),
+            CliError::BadValue { flag, value, expected } => {
+                write!(f, "invalid value for --{flag}: {value:?} ({expected})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse `argv[1..]`.  The first non-flag token becomes the subcommand;
@@ -152,6 +163,18 @@ mod tests {
     fn bad_value_is_error() {
         let a = parse("x --steps banana");
         assert!(a.get_usize("steps", 1).is_err());
+    }
+
+    #[test]
+    fn batched_serving_flags() {
+        // the grid flags the batched attention engine consumes (`skein
+        // serve --engine cpu` and the serving example)
+        let a = parse("serve --engine cpu --batch 16 --heads 8 --seq 2048 --head-dim 64");
+        assert_eq!(a.get_or("engine", "pjrt"), "cpu");
+        assert_eq!(a.get_usize("batch", 1).unwrap(), 16);
+        assert_eq!(a.get_usize("heads", 1).unwrap(), 8);
+        assert_eq!(a.get_usize("seq", 512).unwrap(), 2048);
+        assert_eq!(a.get_usize("head-dim", 32).unwrap(), 64);
     }
 
     #[test]

@@ -1,0 +1,367 @@
+//! Batched attention service over the pure-rust engine: the serving path
+//! that needs no AOT artifacts and no PJRT.
+//!
+//! Clients submit one sequence per request — the `[heads, seq, head_dim]`
+//! Q/K/V slabs (plus an optional padding mask) — and a dedicated engine
+//! thread groups pending requests into a `B × H` grid, runs
+//! [`BatchedAttention`] across workers, and answers each request with its
+//! sequence's output slab.  Dynamic batching policy matches the PJRT
+//! server: wait up to `max_wait` for a full batch, then flush whatever is
+//! pending.
+//!
+//! Batch `i` of a server's lifetime computes with [`batch_seed`]`(cfg.seed,
+//! i)`, and each head inside a batch follows the engine's derivation rule,
+//! so a given arrival order reproduces exactly while distinct batches get
+//! disjoint per-head streams.
+
+use crate::attention::{self, BatchedAttention, HeadSpec};
+use crate::rng::Rng;
+use crate::tensor::{BatchTensor, Matrix};
+use anyhow::Result;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Engine seed for batch `i` of a server's lifetime.  The engine XORs
+/// small head indices into its seed, so deriving batch seeds by XOR too
+/// (`base ^ i`) would collide: with `H` heads, batches `i` and `i ^ 1`
+/// would reuse the same stream set.  [`crate::rng::mix`] instead.
+pub fn batch_seed(base: u64, batch: u64) -> u64 {
+    crate::rng::mix(base, batch)
+}
+
+/// Server configuration: workload shape + batching policy.
+#[derive(Clone, Debug)]
+pub struct AttentionServerConfig {
+    /// Registry name of the attention method (see `attention::by_name`).
+    pub method: String,
+    /// Feature budget `d` for approximate methods.
+    pub d: usize,
+    /// Heads per sequence.
+    pub heads: usize,
+    /// Sequence length n.
+    pub seq: usize,
+    /// Per-head feature dimension p.
+    pub head_dim: usize,
+    /// Max sequences per executed batch.
+    pub max_batch: usize,
+    /// Max time to wait for a full batch before flushing.
+    pub max_wait: Duration,
+    /// Base RNG seed (batch `i` computes with [`batch_seed`]`(seed, i)`).
+    pub seed: u64,
+    /// Worker cap for head dispatch (None = pool default).
+    pub workers: Option<usize>,
+}
+
+impl AttentionServerConfig {
+    /// The per-request head grid (batch dimension = 1 sequence).
+    pub fn request_elems(&self) -> usize {
+        self.heads * self.seq * self.head_dim
+    }
+
+    /// Build from CLI flags — the one place the flag names and defaults
+    /// live (`skein serve --engine cpu` and the serving example share it):
+    /// `--method --d --heads --seq --head-dim --batch --max-wait-ms
+    /// --seed --workers` (workers 0 = pool default).
+    pub fn from_args(args: &crate::cli::Args) -> Result<Self, crate::cli::CliError> {
+        let workers = args.get_usize("workers", 0)?;
+        Ok(Self {
+            method: args.get_or("method", "skeinformer").to_string(),
+            d: args.get_usize("d", 64)?,
+            heads: args.get_usize("heads", 4)?,
+            seq: args.get_usize("seq", 512)?,
+            head_dim: args.get_usize("head-dim", 32)?,
+            max_batch: args.get_usize("batch", 8)?,
+            max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 4)?),
+            seed: args.get_u64("seed", 0)?,
+            workers: if workers == 0 { None } else { Some(workers) },
+        })
+    }
+}
+
+/// One sequence's attention inputs: `[heads, seq, head_dim]` row-major
+/// slabs, plus an optional length-`seq` 0/1 padding mask.
+#[derive(Clone, Debug)]
+pub struct HeadsRequest {
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub mask: Option<Vec<f32>>,
+}
+
+impl HeadsRequest {
+    /// Dense standard-normal request of `elems = heads * seq * head_dim`
+    /// values per slab — the demo/bench payload.
+    pub fn random(elems: usize, rng: &mut Rng) -> Self {
+        let mut mk = || {
+            let mut buf = vec![0.0f32; elems];
+            rng.fill_normal(&mut buf);
+            buf
+        };
+        Self { q: mk(), k: mk(), v: mk(), mask: None }
+    }
+}
+
+struct Pending {
+    req: HeadsRequest,
+    reply: mpsc::Sender<Vec<f32>>,
+    enqueued: Instant,
+}
+
+/// Client handle to a running attention server.
+pub struct AttentionServerHandle {
+    tx: mpsc::Sender<Pending>,
+    join: Option<std::thread::JoinHandle<AttentionServerStats>>,
+}
+
+/// Aggregate serving statistics, reported on shutdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AttentionServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    /// Requests dropped for malformed payloads (wrong slab/mask length).
+    pub rejected: u64,
+    /// Mean queueing delay (ms) — time from submit to batch formation.
+    pub mean_queue_ms: f64,
+    /// Mean executed batch occupancy (filled slots / max_batch).
+    pub mean_occupancy: f64,
+    /// Mean engine time per executed batch (ms).
+    pub mean_batch_ms: f64,
+}
+
+impl AttentionServerHandle {
+    /// Submit a request; returns a receiver for the output slab.  The
+    /// receiver errors if the request is rejected (malformed payload).
+    pub fn submit(&self, req: HeadsRequest) -> mpsc::Receiver<Vec<f32>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let _ = self.tx.send(Pending { req, reply: reply_tx, enqueued: Instant::now() });
+        reply_rx
+    }
+
+    /// Stop the server and collect stats.
+    pub fn shutdown(mut self) -> Result<AttentionServerStats> {
+        drop(self.tx);
+        self.join
+            .take()
+            .expect("server already joined")
+            .join()
+            .map_err(|_| anyhow::anyhow!("attention server thread panicked"))
+    }
+}
+
+/// Start the engine-backed server; validates the method name up front.
+pub fn start(cfg: AttentionServerConfig) -> Result<AttentionServerHandle> {
+    anyhow::ensure!(
+        attention::by_name(&cfg.method, cfg.d).is_some(),
+        "unknown attention method {:?}",
+        cfg.method
+    );
+    anyhow::ensure!(cfg.max_batch > 0, "max_batch must be positive");
+    let (tx, rx) = mpsc::channel::<Pending>();
+    let join = std::thread::spawn(move || serve_loop(cfg, rx));
+    Ok(AttentionServerHandle { tx, join: Some(join) })
+}
+
+fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<Pending>) -> AttentionServerStats {
+    let method = attention::by_name(&cfg.method, cfg.d).expect("method validated in start()");
+    let mut engine = BatchedAttention::new();
+    if let Some(w) = cfg.workers {
+        engine = engine.with_workers(w);
+    }
+    let elems = cfg.request_elems();
+
+    let mut stats = AttentionServerStats::default();
+    let mut queue_ms_sum = 0.0f64;
+    let mut occupancy_sum = 0.0f64;
+    let mut batch_ms_sum = 0.0f64;
+
+    'outer: loop {
+        // block for the first request of a batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break 'outer, // all senders dropped -> shutdown
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while pending.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(_) => break, // timeout or disconnect: flush what we have
+            }
+        }
+
+        // drop malformed payloads (their reply sender closes -> client
+        // recv errors); keep the rest
+        pending.retain(|p| {
+            let r = &p.req;
+            let ok = r.q.len() == elems
+                && r.k.len() == elems
+                && r.v.len() == elems
+                && r.mask.as_ref().is_none_or(|m| m.len() == cfg.seq);
+            if !ok {
+                stats.rejected += 1;
+            }
+            ok
+        });
+        if pending.is_empty() {
+            continue;
+        }
+
+        // pack the grid: batch = sequences in this flush
+        let spec = HeadSpec::new(pending.len(), cfg.heads, cfg.seq, cfg.head_dim);
+        let mut q = spec.zeros();
+        let mut k = spec.zeros();
+        let mut v = spec.zeros();
+        let any_mask = pending.iter().any(|p| p.req.mask.is_some());
+        let mut masks = if any_mask {
+            Some(Matrix::full(spec.batch, cfg.seq, 1.0))
+        } else {
+            None
+        };
+        for (b, p) in pending.iter().enumerate() {
+            q.data_mut()[b * elems..(b + 1) * elems].copy_from_slice(&p.req.q);
+            k.data_mut()[b * elems..(b + 1) * elems].copy_from_slice(&p.req.k);
+            v.data_mut()[b * elems..(b + 1) * elems].copy_from_slice(&p.req.v);
+            if let (Some(mm), Some(req_mask)) = (masks.as_mut(), p.req.mask.as_ref()) {
+                mm.set_row(b, req_mask);
+            }
+            queue_ms_sum += p.enqueued.elapsed().as_secs_f64() * 1e3;
+        }
+
+        let t0 = Instant::now();
+        let seed = batch_seed(cfg.seed, stats.batches);
+        let out = engine.run(method.as_ref(), &q, &k, &v, masks.as_ref(), seed);
+        batch_ms_sum += t0.elapsed().as_secs_f64() * 1e3;
+
+        for (b, p) in pending.iter().enumerate() {
+            let _ = p.reply.send(out.sequence(b).to_vec());
+        }
+        stats.requests += pending.len() as u64;
+        stats.batches += 1;
+        occupancy_sum += pending.len() as f64 / cfg.max_batch as f64;
+    }
+
+    if stats.requests > 0 {
+        stats.mean_queue_ms = queue_ms_sum / stats.requests as f64;
+    }
+    if stats.batches > 0 {
+        stats.mean_occupancy = occupancy_sum / stats.batches as f64;
+        stats.mean_batch_ms = batch_ms_sum / stats.batches as f64;
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Standard;
+    use crate::rng::Rng;
+
+    fn cfg(method: &str, max_batch: usize) -> AttentionServerConfig {
+        AttentionServerConfig {
+            method: method.to_string(),
+            d: 8,
+            heads: 2,
+            seq: 16,
+            head_dim: 4,
+            max_batch,
+            max_wait: Duration::from_millis(2),
+            seed: 0,
+            workers: None,
+        }
+    }
+
+    fn random_request(cfg: &AttentionServerConfig, seed: u64) -> HeadsRequest {
+        HeadsRequest::random(cfg.request_elems(), &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn batch_seeds_do_not_collide_across_nearby_batches() {
+        // the engine XORs head indices 0..B*H into the seed; the sets
+        // {batch_seed(s,i) ^ g} must be disjoint across batches
+        let mut seen = std::collections::HashSet::new();
+        for batch in 0..64u64 {
+            for g in 0..16u64 {
+                assert!(
+                    seen.insert(batch_seed(0, batch) ^ g),
+                    "stream seed reused at batch {batch}, head {g}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn serves_requests_and_reports_stats() {
+        let c = cfg("standard", 4);
+        let handle = start(c.clone()).unwrap();
+        let rxs: Vec<_> = (0..6).map(|i| handle.submit(random_request(&c, i))).collect();
+        for rx in rxs {
+            let out = rx.recv().expect("reply");
+            assert_eq!(out.len(), c.request_elems());
+            assert!(out.iter().all(|x| x.is_finite()));
+        }
+        let stats = handle.shutdown().unwrap();
+        assert_eq!(stats.requests, 6);
+        assert!(stats.batches >= 2, "6 requests at max_batch 4 need >= 2 batches");
+        assert_eq!(stats.rejected, 0);
+    }
+
+    #[test]
+    fn single_sequence_batch_matches_direct_engine_call() {
+        let c = cfg("standard", 1); // batch size 1: deterministic packing
+        let handle = start(c.clone()).unwrap();
+        let req = random_request(&c, 9);
+        let got = handle.submit(req.clone()).recv().unwrap();
+        let stats = handle.shutdown().unwrap();
+        assert_eq!(stats.batches, 1);
+
+        let spec = HeadSpec::new(1, c.heads, c.seq, c.head_dim);
+        let q = crate::tensor::BatchTensor::from_vec(1, c.heads, c.seq, c.head_dim, req.q);
+        let k = crate::tensor::BatchTensor::from_vec(1, c.heads, c.seq, c.head_dim, req.k);
+        let v = crate::tensor::BatchTensor::from_vec(1, c.heads, c.seq, c.head_dim, req.v);
+        // the first batch of a server's lifetime computes with batch_seed(seed, 0)
+        let want =
+            BatchedAttention::new().run(&Standard, &q, &k, &v, None, batch_seed(c.seed, 0));
+        assert!(spec.matches(&want));
+        assert_eq!(got, want.data().to_vec());
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected_not_wedged() {
+        let c = cfg("standard", 2);
+        let handle = start(c.clone()).unwrap();
+        let bad = HeadsRequest { q: vec![0.0; 3], k: vec![0.0; 3], v: vec![0.0; 3], mask: None };
+        let bad_rx = handle.submit(bad);
+        let good_rx = handle.submit(random_request(&c, 1));
+        assert!(good_rx.recv().is_ok());
+        assert!(bad_rx.recv().is_err(), "malformed request must not get a reply");
+        let stats = handle.shutdown().unwrap();
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn unknown_method_is_rejected_up_front() {
+        assert!(start(cfg("no-such-method", 2)).is_err());
+    }
+
+    #[test]
+    fn masked_requests_flow_through() {
+        let mut c = cfg("skeinformer", 2);
+        c.d = 4;
+        let handle = start(c.clone()).unwrap();
+        let mut req = random_request(&c, 3);
+        let mut mask = vec![1.0f32; c.seq];
+        for m in mask.iter_mut().skip(12) {
+            *m = 0.0;
+        }
+        req.mask = Some(mask);
+        let out = handle.submit(req).recv().unwrap();
+        assert_eq!(out.len(), c.request_elems());
+        assert!(out.iter().all(|x| x.is_finite()));
+        handle.shutdown().unwrap();
+    }
+}

@@ -1,7 +1,13 @@
 //! Experiment coordinator: sweeps (method × task) experiments, collects
 //! [`TrainOutcome`]s, and renders the paper's tables.  This is the L3
 //! entrypoint the `skein` CLI and the table benches drive.
+//!
+//! Two serving paths live here: [`server`] (token sequences through the
+//! AOT/PJRT artifacts) and [`attention_server`] (raw Q/K/V head slabs
+//! through the pure-rust [`crate::attention::BatchedAttention`] engine —
+//! no artifacts required).
 
+pub mod attention_server;
 pub mod server;
 
 use crate::config::ExperimentConfig;

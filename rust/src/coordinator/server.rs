@@ -47,6 +47,15 @@ impl ServerHandle {
         reply_rx
     }
 
+    /// Submit a batch of sequences at once (one reply channel each).  The
+    /// sequences land in the queue back-to-back, so in the common case the
+    /// batcher drains whole batches without waiting out `max_wait` per
+    /// straggler.  No atomicity is guaranteed: a concurrently-forming
+    /// batch may still split the call across flush boundaries.
+    pub fn submit_many(&self, sequences: Vec<Vec<i32>>) -> Vec<mpsc::Receiver<Vec<f32>>> {
+        sequences.into_iter().map(|tokens| self.submit(tokens)).collect()
+    }
+
     /// Stop the server and collect stats.
     pub fn shutdown(mut self) -> Result<ServerStats> {
         drop(self.tx);

@@ -6,9 +6,10 @@
 //!
 //! * **L3 (this crate)** — coordinator: experiment sweeps, the training
 //!   loop driving AOT-compiled XLA artifacts, synthetic LRA data
-//!   generators, a batched inference service, and a pure-rust attention
-//!   substrate used by the approximation study (Figure 1) and the
-//!   property-test suites.
+//!   generators, batched inference services (artifact-backed and the
+//!   pure-rust [`attention::BatchedAttention`] engine), and a pure-rust
+//!   attention substrate used by the approximation study (Figure 1) and
+//!   the property-test suites.
 //! * **L2 (`python/compile/`)** — the jax transformer + per-method
 //!   attention, lowered once to HLO text artifacts (`make artifacts`).
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the
@@ -17,7 +18,9 @@
 //!
 //! Python never runs on the request path: the rust binary loads
 //! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and executes
-//! them directly.  See `DESIGN.md` for the experiment index.
+//! them directly.  Offline builds use the vendored stub `xla` crate
+//! (`rust/vendor/xla`), so the L3 layer builds and tests without
+//! artifacts.  See `DESIGN.md` for the layer map and experiment index.
 
 pub mod attention;
 pub mod bench_util;

@@ -50,9 +50,13 @@ fn print_help() {
            sweep    --methods a,b,c --tasks x,y [--steps N]\n\
            fig1     [--n 1024] [--trials 8] [--mode pretrained|random]\n\
            flops    [--n 4096] [--d 256] [--p 32]\n\
-           serve    --method skeinformer [--requests N] [--max-wait-ms N]\n\
+           serve    --method skeinformer [--engine cpu|pjrt] [--requests N] [--max-wait-ms N]\n\
+                    cpu engine (default; batched attention, no artifacts needed):\n\
+                    [--batch B] [--heads H] [--seq N] [--head-dim P] [--d D] [--workers W]\n\
            inspect  <artifacts/..._manifest.json>\n\n\
-         Artifacts come from `make artifacts` (python AOT path).",
+         Artifacts come from `make artifacts` (python AOT path); `serve\n\
+         --engine pjrt` additionally needs the real xla crate (not the\n\
+         offline stub) linked in.",
         skeinformer::version()
     );
 }
@@ -184,6 +188,67 @@ fn cmd_flops(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    // Default to the pure-rust engine: it is always available, whereas
+    // artifacts on disk do not imply PJRT is executable (offline builds
+    // link the stub xla crate).  `--engine pjrt` opts into the AOT path.
+    match args.get_or("engine", "cpu") {
+        "cpu" => cmd_serve_cpu(args),
+        "pjrt" => cmd_serve_pjrt(args),
+        other => bail!("unknown engine {other:?} — expected cpu or pjrt"),
+    }
+}
+
+/// Serve raw Q/K/V head slabs through the batched attention engine: the
+/// B×H workload shape (`--batch`, `--heads`) the throughput benches use.
+fn cmd_serve_cpu(args: &Args) -> Result<()> {
+    use skeinformer::coordinator::attention_server::{self, AttentionServerConfig, HeadsRequest};
+
+    let cfg = AttentionServerConfig::from_args(args)?;
+    let n_requests = args.get_usize("requests", 64)?;
+    eprintln!(
+        "batched attention service: method={} B<={} H={} n={} p={} d={}",
+        cfg.method, cfg.max_batch, cfg.heads, cfg.seq, cfg.head_dim, cfg.d
+    );
+
+    let handle = attention_server::start(cfg.clone())?;
+    let mut rng = Rng::new(7);
+    let elems = cfg.request_elems();
+    let mut latency = Percentiles::default();
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..n_requests {
+        let req = HeadsRequest::random(elems, &mut rng);
+        pending.push((handle.submit(req), std::time::Instant::now()));
+    }
+    for (rx, sent) in pending {
+        let out = rx.recv().context("server dropped request")?;
+        latency.push(sent.elapsed().as_secs_f64() * 1e3);
+        anyhow::ensure!(out.len() == elems);
+        anyhow::ensure!(out.iter().all(|x| x.is_finite()));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = handle.shutdown()?;
+    println!(
+        "served {} sequences in {:.2}s ({:.1} seq/s) — batches={} occupancy={:.2} \
+         engine {:.1} ms/batch",
+        stats.requests,
+        wall,
+        stats.requests as f64 / wall,
+        stats.batches,
+        stats.mean_occupancy,
+        stats.mean_batch_ms
+    );
+    println!(
+        "latency ms: p50={:.1} p95={:.1} p99={:.1} (queue {:.1})",
+        latency.percentile(50.0),
+        latency.percentile(95.0),
+        latency.percentile(99.0),
+        stats.mean_queue_ms
+    );
+    Ok(())
+}
+
+fn cmd_serve_pjrt(args: &Args) -> Result<()> {
     let cfg = base_config(args)?;
     let n_requests = args.get_usize("requests", 64)?;
     let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5)?);
@@ -193,16 +258,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let mut rng = Rng::new(7);
     let mut latency = Percentiles::default();
+    let sequences: Vec<Vec<i32>> =
+        (0..n_requests).map(|_| task.sample(&mut rng).tokens).collect();
     let t0 = std::time::Instant::now();
-    let mut pending = Vec::new();
-    for _ in 0..n_requests {
-        let ex = task.sample(&mut rng);
-        let sent = std::time::Instant::now();
-        pending.push((handle.submit(ex.tokens), sent));
-    }
-    for (rx, sent) in pending {
-        let logits = rx.recv().context("server dropped request")?;
-        latency.push(sent.elapsed().as_secs_f64() * 1e3);
+    // batched submission: sequences land in the queue back-to-back so the
+    // batcher fills whole batches instead of waiting out max_wait each
+    let receivers = handle.submit_many(sequences);
+    let submitted = std::time::Instant::now();
+    for rx in receivers {
+        let logits = match rx.recv() {
+            Ok(l) => l,
+            // reply channel closed: the serve thread bailed — surface its
+            // own error (e.g. "PJRT unavailable" when the stub xla crate
+            // is linked) instead of a bare channel error
+            Err(_) => {
+                return match handle.shutdown() {
+                    Ok(stats) => {
+                        Err(anyhow::anyhow!("server dropped requests (stats: {stats:?})"))
+                    }
+                    Err(e) => Err(e),
+                };
+            }
+        };
+        latency.push(submitted.elapsed().as_secs_f64() * 1e3);
         anyhow::ensure!(!logits.is_empty());
     }
     let wall = t0.elapsed().as_secs_f64();

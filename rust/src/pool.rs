@@ -6,7 +6,10 @@
 //!   contiguous row blocks and fill each on its own thread (matmul,
 //!   attention row strips).
 //! * [`parallel_map`] — map a function over items with a bounded worker
-//!   count (Figure-1 trials, per-method experiment sweeps).
+//!   count (Figure-1 trials, per-method experiment sweeps, the batched
+//!   attention engine's per-head dispatch).  [`parallel_map_workers`] is
+//!   the same primitive with an explicit worker cap — the batched engine's
+//!   worker-count-invariance tests pin it to 1 vs [`worker_count`].
 //!
 //! Threads are spawned per call via `std::thread::scope`; for the coarse
 //! work sizes here (≥ milliseconds per block) spawn overhead (~10 µs) is
@@ -54,11 +57,23 @@ pub fn parallel_row_blocks(
 /// [`worker_count`] threads. Work stealing via an atomic cursor keeps load
 /// balanced when item costs vary (e.g. different attention methods).
 pub fn parallel_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    parallel_map_workers(items, worker_count(), f)
+}
+
+/// [`parallel_map`] with an explicit worker cap.  Results are identical for
+/// every cap (ordering and each item's computation are independent of the
+/// schedule) — the batched attention engine's determinism tests rely on
+/// comparing `workers = 1` against `workers = worker_count()` bitwise.
+pub fn parallel_map_workers<T: Sync, R: Send>(
+    items: &[T],
+    workers: usize,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
-    let workers = worker_count().min(n);
+    let workers = workers.max(1).min(n);
     if workers <= 1 {
         return items.iter().map(&f).collect();
     }
@@ -135,6 +150,16 @@ mod tests {
     fn parallel_map_empty() {
         let items: Vec<u32> = vec![];
         assert!(parallel_map(&items, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn parallel_map_workers_invariant_to_cap() {
+        let items: Vec<usize> = (0..53).collect();
+        let one = parallel_map_workers(&items, 1, |&x| x * 3 + 1);
+        for cap in [2, 3, worker_count(), 64] {
+            let many = parallel_map_workers(&items, cap, |&x| x * 3 + 1);
+            assert_eq!(one, many, "cap {cap} changed results");
+        }
     }
 
     #[test]

@@ -22,6 +22,17 @@ pub struct Rng {
     inc: u64,
 }
 
+/// Mix a label into a base seed, returning a decorrelated derived seed —
+/// the same SplitMix64 discipline [`Rng::fold_in`] uses, as a plain u64
+/// function.  For handing disjoint seed *families* to subsystems that
+/// themselves XOR small indices into their seeds (e.g. the batched
+/// attention engine's per-head derivation): XOR-composing labels would
+/// collide, mixing does not.
+pub fn mix(base: u64, data: u64) -> u64 {
+    let mut s = base ^ data.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    splitmix64(&mut s)
+}
+
 /// SplitMix64 — used for seeding and stream derivation.
 #[inline]
 fn splitmix64(x: &mut u64) -> u64 {

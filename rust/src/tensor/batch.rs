@@ -1,0 +1,235 @@
+//! Batched multi-head tensor storage: `[batch, heads, seq, head_dim]`.
+//!
+//! The batched attention engine works over a `B × H` grid of `(seq,
+//! head_dim)` head slices.  With `seq` and `head_dim` innermost, every head
+//! slice is a *contiguous* run of the backing buffer, so per-head access is
+//! a zero-copy borrow ([`BatchTensor::head`]) and materialising a head as a
+//! [`Matrix`] ([`BatchTensor::head_matrix`]) is a single `memcpy` — no
+//! strided gather, no per-element work.  Per-sequence output slabs
+//! (`[heads, seq, head_dim]` for one batch index) are contiguous too, which
+//! is what the serving path hands back to clients.
+
+use super::Matrix;
+
+/// A dense, row-major f32 tensor of shape `(batch, heads, seq, dim)`.
+#[derive(Clone, PartialEq)]
+pub struct BatchTensor {
+    batch: usize,
+    heads: usize,
+    seq: usize,
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for BatchTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "BatchTensor({}x{}x{}x{})",
+            self.batch, self.heads, self.seq, self.dim
+        )
+    }
+}
+
+impl BatchTensor {
+    /// All-zeros tensor.
+    pub fn zeros(batch: usize, heads: usize, seq: usize, dim: usize) -> Self {
+        Self { batch, heads, seq, dim, data: vec![0.0; batch * heads * seq * dim] }
+    }
+
+    /// Wrap an existing `[b][h][n][d]` row-major buffer.
+    pub fn from_vec(batch: usize, heads: usize, seq: usize, dim: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), batch * heads * seq * dim, "buffer size mismatch");
+        Self { batch, heads, seq, dim, data }
+    }
+
+    /// Build from a generator `f(b, h, i, j)`.
+    pub fn from_fn(
+        batch: usize,
+        heads: usize,
+        seq: usize,
+        dim: usize,
+        mut f: impl FnMut(usize, usize, usize, usize) -> f32,
+    ) -> Self {
+        let mut data = Vec::with_capacity(batch * heads * seq * dim);
+        for b in 0..batch {
+            for h in 0..heads {
+                for i in 0..seq {
+                    for j in 0..dim {
+                        data.push(f(b, h, i, j));
+                    }
+                }
+            }
+        }
+        Self { batch, heads, seq, dim, data }
+    }
+
+    /// Stack `batch * heads` equal-shape head matrices (grid order: head
+    /// varies fastest).
+    pub fn from_heads(batch: usize, heads: usize, mats: &[Matrix]) -> Self {
+        assert_eq!(mats.len(), batch * heads, "expected batch*heads matrices");
+        assert!(!mats.is_empty(), "from_heads needs at least one head");
+        let (seq, dim) = mats[0].shape();
+        let mut data = Vec::with_capacity(batch * heads * seq * dim);
+        for m in mats {
+            assert_eq!(m.shape(), (seq, dim), "ragged head shapes");
+            data.extend_from_slice(m.data());
+        }
+        Self { batch, heads, seq, dim, data }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// `(batch, heads, seq, dim)`.
+    pub fn shape(&self) -> (usize, usize, usize, usize) {
+        (self.batch, self.heads, self.seq, self.dim)
+    }
+
+    /// Number of head slices in the grid (`batch * heads`).
+    pub fn head_count(&self) -> usize {
+        self.batch * self.heads
+    }
+
+    #[inline]
+    fn head_offset(&self, b: usize, h: usize) -> usize {
+        debug_assert!(b < self.batch && h < self.heads);
+        (b * self.heads + h) * self.seq * self.dim
+    }
+
+    /// Zero-copy borrow of head `(b, h)` as a `seq * dim` row-major slice.
+    #[inline]
+    pub fn head(&self, b: usize, h: usize) -> &[f32] {
+        let o = self.head_offset(b, h);
+        &self.data[o..o + self.seq * self.dim]
+    }
+
+    /// Mutable zero-copy borrow of head `(b, h)`.
+    #[inline]
+    pub fn head_mut(&mut self, b: usize, h: usize) -> &mut [f32] {
+        let o = self.head_offset(b, h);
+        let len = self.seq * self.dim;
+        &mut self.data[o..o + len]
+    }
+
+    /// Head `(b, h)` as a `(seq, dim)` [`Matrix`] — one contiguous memcpy.
+    pub fn head_matrix(&self, b: usize, h: usize) -> Matrix {
+        Matrix::from_vec(self.seq, self.dim, self.head(b, h).to_vec())
+    }
+
+    /// Overwrite head `(b, h)` from a `(seq, dim)` matrix.
+    pub fn set_head(&mut self, b: usize, h: usize, m: &Matrix) {
+        assert_eq!(m.shape(), (self.seq, self.dim), "head shape mismatch");
+        self.head_mut(b, h).copy_from_slice(m.data());
+    }
+
+    /// Zero-copy borrow of sequence `b`'s full `[heads, seq, dim]` slab —
+    /// the per-request payload the serving path returns.
+    pub fn sequence(&self, b: usize) -> &[f32] {
+        let len = self.heads * self.seq * self.dim;
+        &self.data[b * len..(b + 1) * len]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// True if every element is finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Max absolute element-wise difference to another tensor.
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_slices_are_contiguous_and_correct() {
+        let t = BatchTensor::from_fn(2, 3, 4, 5, |b, h, i, j| {
+            (b * 1000 + h * 100 + i * 10 + j) as f32
+        });
+        assert_eq!(t.shape(), (2, 3, 4, 5));
+        assert_eq!(t.head_count(), 6);
+        let s = t.head(1, 2);
+        assert_eq!(s.len(), 20);
+        assert_eq!(s[0], 1200.0);
+        assert_eq!(s[19], 1234.0);
+        let m = t.head_matrix(1, 2);
+        assert_eq!(m.shape(), (4, 5));
+        assert_eq!(m.get(3, 4), 1234.0);
+    }
+
+    #[test]
+    fn set_head_roundtrips() {
+        let mut t = BatchTensor::zeros(2, 2, 3, 3);
+        let m = Matrix::from_fn(3, 3, |i, j| (i * 3 + j) as f32);
+        t.set_head(1, 0, &m);
+        assert_eq!(t.head_matrix(1, 0), m);
+        assert!(t.head(0, 0).iter().all(|&x| x == 0.0));
+        assert!(t.head(1, 1).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn from_heads_matches_grid_order() {
+        let mats: Vec<Matrix> = (0..4).map(|g| Matrix::full(2, 2, g as f32)).collect();
+        let t = BatchTensor::from_heads(2, 2, &mats);
+        assert_eq!(t.head(0, 0)[0], 0.0);
+        assert_eq!(t.head(0, 1)[0], 1.0);
+        assert_eq!(t.head(1, 0)[0], 2.0);
+        assert_eq!(t.head(1, 1)[0], 3.0);
+    }
+
+    #[test]
+    fn sequence_slab_covers_all_heads() {
+        let t = BatchTensor::from_fn(2, 2, 2, 2, |b, _, _, _| b as f32);
+        let s = t.sequence(1);
+        assert_eq!(s.len(), 8);
+        assert!(s.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        let a = BatchTensor::zeros(1, 2, 2, 2);
+        let mut b = a.clone();
+        b.data_mut()[5] = -2.5;
+        assert_eq!(a.max_abs_diff(&b), 2.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_size_mismatch_panics() {
+        let _ = BatchTensor::from_vec(2, 2, 2, 2, vec![0.0; 15]);
+    }
+}

@@ -7,8 +7,12 @@
 //! * [`matmul_nt`]  — `C = A · Bᵀ`       (dot-product of rows; the `QKᵀ` shape)
 //! * [`matmul_tn`]  — `C = Aᵀ · B`       (outer-product accumulate; `SᵀV`)
 //!
-//! All kernels parallelise over row blocks with [`crate::pool::parallel_chunks`]
-//! when the output is large enough to amortise the thread spawn.
+//! All kernels parallelise over row blocks with
+//! [`crate::pool::parallel_row_blocks`] when the output is large enough to
+//! amortise the thread spawn.  Results are independent of the thread
+//! count: every output row is computed by the same per-row arithmetic
+//! regardless of which block it lands in (the batched attention engine's
+//! bitwise worker-invariance rests on this).
 
 use super::Matrix;
 use crate::pool;

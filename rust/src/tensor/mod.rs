@@ -8,12 +8,15 @@
 //!
 //! Conventions: all matrices are row-major `Vec<f32>`, shape `(rows, cols)`.
 //! Methods that allocate return new matrices; `_into` / `*_assign` variants
-//! reuse buffers on hot paths.
+//! reuse buffers on hot paths.  Batched multi-head inputs live in
+//! [`BatchTensor`] (`[batch, heads, seq, head_dim]`, contiguous per head).
 
+mod batch;
 mod matmul;
 mod norms;
 mod ops;
 
+pub use batch::BatchTensor;
 pub use matmul::{matmul, matmul_nt, matmul_tn, matvec, MatmulPlan};
 pub use norms::{frobenius_norm, power_iteration, spectral_norm, spectral_norm_diff};
 pub use ops::*;

@@ -23,7 +23,7 @@ impl History {
 
     pub fn push(&mut self, p: HistoryPoint) {
         debug_assert!(
-            self.points.last().map_or(true, |last| p.step > last.step),
+            self.points.last().is_none_or(|last| p.step > last.step),
             "history must be monotone in step"
         );
         self.points.push(p);

@@ -1,0 +1,225 @@
+//! Cross-method conformance suite: every method in `attention::registry`
+//! must honor the shared contract — output shape/finiteness across
+//! non-square-friendly sizes, masked-out rows contributing zero weight,
+//! and seed determinism (including bitwise worker-count invariance) under
+//! the batched multi-head path.
+//!
+//! Methods declare their masking contract by membership in one of the
+//! three lists below; a registry method missing from all of them fails the
+//! coverage test, so new methods must pick a class explicitly.
+
+use skeinformer::attention::{registry, BatchedAttention, HeadSpec};
+use skeinformer::pool;
+use skeinformer::rng::Rng;
+use skeinformer::tensor::{BatchTensor, Matrix};
+
+/// Methods whose output over valid rows is invariant to the *content* of
+/// masked K and V rows (the §4.4 contract).
+const MASK_KV_INVARIANT: &[&str] = &[
+    "standard",
+    "vmean",
+    "skeinformer",
+    "skein_uniform",
+    "skein_no_norm",
+    "skein_simple_norm",
+    "skein_no_psr",
+    "informer_mask",
+    "linformer",
+    "linformer_jlt",
+    "performer",
+    "bigbird",
+    "reformer",
+];
+
+/// Methods invariant to masked V content only (landmark construction mixes
+/// raw K rows before masking).
+const MASK_V_INVARIANT: &[&str] = &["nystromformer"];
+
+/// Methods that ignore the padding mask by design (the paper's point about
+/// the published Informer; its `informer_mask` variant is the fix).
+const MASK_OBLIVIOUS: &[&str] = &["informer"];
+
+fn random_matrix(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    rng.fill_normal(m.data_mut());
+    m
+}
+
+fn qkv(n: usize, p: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    (
+        random_matrix(n, p, &mut rng),
+        random_matrix(n, p, &mut rng),
+        random_matrix(n, p, &mut rng),
+    )
+}
+
+fn random_batch(spec: HeadSpec, seed: u64) -> (BatchTensor, BatchTensor, BatchTensor) {
+    let mut rng = Rng::new(seed);
+    let mut mk = || {
+        let mut t = spec.zeros();
+        rng.fill_normal(t.data_mut());
+        t
+    };
+    (mk(), mk(), mk())
+}
+
+#[test]
+fn every_registry_method_declares_a_mask_class() {
+    for m in registry(16) {
+        let name = m.name();
+        let classes = [MASK_KV_INVARIANT, MASK_V_INVARIANT, MASK_OBLIVIOUS];
+        let hits: usize = classes.iter().filter(|c| c.contains(&name)).count();
+        assert_eq!(hits, 1, "{name} must appear in exactly one mask class (got {hits})");
+    }
+}
+
+#[test]
+fn shape_and_finiteness_across_sizes_and_budgets() {
+    // n covers the required {32, 64, 128}; p includes non-power-of-two,
+    // non-square-friendly head dims; d includes a non-power-of-two budget.
+    for &n in &[32usize, 64, 128] {
+        for &p in &[8usize, 12, 20] {
+            let (q, k, v) = qkv(n, p, 1000 + (n * 31 + p) as u64);
+            for &d in &[12usize, 24] {
+                for m in registry(d) {
+                    let out = m.compute(&q, &k, &v, None, &mut Rng::new(7));
+                    assert_eq!(
+                        out.shape(),
+                        (n, p),
+                        "{} wrong shape at n={n} p={p} d={d}",
+                        m.name()
+                    );
+                    assert!(
+                        out.all_finite(),
+                        "{} produced non-finite values at n={n} p={p} d={d}",
+                        m.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn masked_out_rows_contribute_zero_weight() {
+    let n = 48;
+    let p = 8;
+    let valid = 32;
+    let mask: Vec<f32> = (0..n).map(|i| if i < valid { 1.0 } else { 0.0 }).collect();
+    let (q, k, v) = qkv(n, p, 21);
+
+    // corrupted copies: masked rows replaced with huge values
+    let corrupt = |m: &Matrix| {
+        let mut c = m.clone();
+        for i in valid..n {
+            for j in 0..p {
+                c.set(i, j, if (i + j) % 2 == 0 { 1e3 } else { -1e3 });
+            }
+        }
+        c
+    };
+    let (k_bad, v_bad) = (corrupt(&k), corrupt(&v));
+
+    for m in registry(16) {
+        let name = m.name();
+        if MASK_OBLIVIOUS.contains(&name) {
+            continue;
+        }
+        let kv = MASK_KV_INVARIANT.contains(&name);
+        let (k2, v2) = if kv { (&k_bad, &v_bad) } else { (&k, &v_bad) };
+        let base = m.compute(&q, &k, &v, Some(&mask), &mut Rng::new(33));
+        let after = m.compute(&q, k2, v2, Some(&mask), &mut Rng::new(33));
+        for i in 0..valid {
+            for j in 0..p {
+                assert!(
+                    (base.get(i, j) - after.get(i, j)).abs() < 1e-2,
+                    "{name}: masked content leaked into valid row {i} \
+                     ({} vs {})",
+                    base.get(i, j),
+                    after.get(i, j)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_path_is_seed_deterministic_for_every_method() {
+    let spec = HeadSpec::new(2, 2, 32, 8);
+    let (q, k, v) = random_batch(spec, 5);
+    let engine = BatchedAttention::new();
+    for m in registry(16) {
+        let a = engine.run(m.as_ref(), &q, &k, &v, None, 99);
+        let b = engine.run(m.as_ref(), &q, &k, &v, None, 99);
+        assert_eq!(
+            a.max_abs_diff(&b),
+            0.0,
+            "{} not deterministic under the batched path",
+            m.name()
+        );
+        assert!(a.all_finite(), "{} non-finite batched output", m.name());
+    }
+}
+
+#[test]
+fn batched_worker_count_invariance() {
+    // The acceptance-criterion methods plus the exact baseline and a
+    // random-feature method: worker counts 1 and worker_count() must agree
+    // bitwise for the same seed.
+    let spec = HeadSpec::new(3, 4, 48, 8);
+    let (q, k, v) = random_batch(spec, 11);
+    let masks = Matrix::from_fn(spec.batch, spec.seq, |b, i| {
+        if b == 2 && i >= 40 {
+            0.0
+        } else {
+            1.0
+        }
+    });
+    for name in ["skeinformer", "informer", "linformer", "standard", "performer"] {
+        let m = skeinformer::attention::by_name(name, 16).expect("registry method");
+        let one = BatchedAttention::new()
+            .with_workers(1)
+            .run(m.as_ref(), &q, &k, &v, Some(&masks), 7);
+        let many = BatchedAttention::new()
+            .with_workers(pool::worker_count())
+            .run(m.as_ref(), &q, &k, &v, Some(&masks), 7);
+        assert_eq!(
+            one.max_abs_diff(&many),
+            0.0,
+            "{name}: workers=1 vs workers={} diverged",
+            pool::worker_count()
+        );
+    }
+}
+
+#[test]
+fn batched_heads_follow_the_documented_rng_rule() {
+    // head (b, h) must equal a single-head call with
+    // Rng::new(seed ^ (b * heads + h)) — the engine's contract.
+    let spec = HeadSpec::new(2, 3, 32, 8);
+    let (q, k, v) = random_batch(spec, 17);
+    let seed = 1234u64;
+    let engine = BatchedAttention::new();
+    for name in ["skeinformer", "linformer", "informer"] {
+        let m = skeinformer::attention::by_name(name, 12).expect("registry method");
+        let out = engine.run(m.as_ref(), &q, &k, &v, None, seed);
+        for b in 0..spec.batch {
+            for h in 0..spec.heads {
+                let mut rng = Rng::new(seed ^ spec.head_index(b, h));
+                let want = m.compute(
+                    &q.head_matrix(b, h),
+                    &k.head_matrix(b, h),
+                    &v.head_matrix(b, h),
+                    None,
+                    &mut rng,
+                );
+                assert_eq!(
+                    out.head_matrix(b, h).max_abs_diff(&want),
+                    0.0,
+                    "{name}: head ({b},{h}) deviates from the derivation rule"
+                );
+            }
+        }
+    }
+}

@@ -7,9 +7,10 @@ use skeinformer::data;
 use skeinformer::json;
 use skeinformer::prop::Runner;
 use skeinformer::rng::Rng;
-use skeinformer::sketch::{amm_error_bound, GaussianSketch, Sketch, SubSampleSketch};
+use skeinformer::sketch::{amm_error_bound, GaussianSketch, Sketch, SrhtSketch, SubSampleSketch};
 use skeinformer::tensor::{
-    self, frobenius_norm, matmul, matmul_nt, row_sums, softmax_rows, spectral_norm, Matrix,
+    self, frobenius_norm, matmul, matmul_nt, matmul_tn, row_sums, softmax_rows, spectral_norm,
+    Matrix,
 };
 
 fn random_matrix(g: &mut skeinformer::prop::Gen, rows: usize, cols: usize) -> Matrix {
@@ -165,6 +166,116 @@ fn prop_gaussian_sketch_preserves_norms_on_average() {
         }
         est /= trials as f64;
         assert!((est / xn2 as f64 - 1.0).abs() < 0.3, "ratio {}", est / xn2 as f64);
+    });
+}
+
+#[test]
+fn prop_srht_columns_are_near_orthogonal() {
+    // SRHT columns are sign-flipped Hadamard columns scaled by 1/√d, so
+    // (d/n)·SᵀS equals the indicator [c_a == c_b] up to f32 rounding —
+    // in particular ‖(d/n)·SᵀS − I‖ is tiny whenever the sampled columns
+    // are distinct.
+    Runner::new("srht-orthogonal", 20).run(|g| {
+        let n = g.pow2(8, 64);
+        let d = g.int(2, 8).min(n);
+        let sk = SrhtSketch::new(n, d);
+        let seed = g.int(0, 1 << 30) as u64;
+        // same seed -> draw() materialises exactly the parts draw_parts gives
+        let s = sk.draw(&mut Rng::new(seed));
+        let (_, cols) = sk.draw_parts(&mut Rng::new(seed));
+        let sts = matmul_tn(&s, &s); // (d, d)
+        let scale = d as f32 / n as f32;
+        for a in 0..d {
+            for b in 0..d {
+                let expect = if cols[a] == cols[b] { 1.0 } else { 0.0 };
+                let got = sts.get(a, b) * scale;
+                assert!(
+                    (got - expect).abs() < 1e-3,
+                    "(d/n)·SᵀS[{a},{b}] = {got}, expected {expect} (n={n}, d={d})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_subsample_amm_unbiased_for_matrix_product() {
+    // E[Aᵀ S Sᵀ B] = Aᵀ B over repeated draws — Definition 3.1's
+    // expectation identity pushed through the AMM estimator, for arbitrary
+    // (positive) sampling probabilities.
+    Runner::new("subsample-amm-unbiased", 6).run(|g| {
+        let n = g.int(8, 20);
+        let p1 = g.int(2, 5);
+        let p2 = g.int(2, 5);
+        let d = g.int(3, 8);
+        let a = random_matrix(g, n, p1);
+        let b = random_matrix(g, n, p2);
+        let probs: Vec<f32> = (0..n).map(|_| g.f32(0.1, 1.0)).collect();
+        let sk = SubSampleSketch::new(probs, d);
+        let exact = matmul_tn(&a, &b); // (p1, p2)
+        let trials = 4000;
+        let mut acc = vec![0.0f64; p1 * p2];
+        let mut rng = Rng::new(g.int(0, 1 << 30) as u64);
+        for _ in 0..trials {
+            let (idx, scales) = sk.draw_indices(&mut rng);
+            // Sᵀ A: (d, p1) and Sᵀ B: (d, p2) are scaled row gathers
+            let sa = Matrix::from_fn(d, p1, |r, c| a.get(idx[r], c) * scales[r]);
+            let sb = Matrix::from_fn(d, p2, |r, c| b.get(idx[r], c) * scales[r]);
+            let est = matmul_tn(&sa, &sb); // Aᵀ S Sᵀ B
+            for (acc_x, &e) in acc.iter_mut().zip(est.data()) {
+                *acc_x += e as f64;
+            }
+        }
+        let scale_ref = frobenius_norm(&exact) as f64 + 1.0;
+        for (i, acc_x) in acc.iter().enumerate() {
+            let mean = acc_x / trials as f64;
+            let want = exact.data()[i] as f64;
+            assert!(
+                (mean - want).abs() < 0.15 * scale_ref,
+                "entry {i}: mean {mean} vs exact {want} (n={n}, d={d})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_gaussian_sketch_variance_matches_chi_square() {
+    // With i.i.d. N(0, 1/d) entries, y = ‖Sᵀx‖² is (‖x‖²/d)·χ²_d:
+    // E[y] = ‖x‖² and Var[y] = 2‖x‖⁴/d.  The sample variance over many
+    // draws must sit within a 3× band of the theory value — the
+    // quantitative version of "JL concentration tightens with d".
+    Runner::new("gaussian-sketch-variance", 6).run(|g| {
+        let n = g.int(8, 32);
+        let d = g.pow2(8, 32);
+        let sk = GaussianSketch::new(n, d);
+        let x: Vec<f32> = (0..n).map(|_| g.normal()).collect();
+        let xn2: f64 = x.iter().map(|a| (a * a) as f64).sum();
+        if xn2 < 1e-3 {
+            return; // astronomically unlikely degenerate draw
+        }
+        let trials = 500;
+        let xm = Matrix::from_vec(1, n, x.clone());
+        let mut rng = Rng::new(g.int(0, 1 << 30) as u64);
+        let mut s1 = 0.0f64;
+        let mut s2 = 0.0f64;
+        for _ in 0..trials {
+            let s = sk.draw(&mut rng);
+            let proj = matmul(&xm, &s);
+            let y: f64 = proj.data().iter().map(|a| (*a as f64) * (*a as f64)).sum();
+            s1 += y;
+            s2 += y * y;
+        }
+        let mean = s1 / trials as f64;
+        let var = s2 / trials as f64 - mean * mean;
+        let theory = 2.0 * xn2 * xn2 / d as f64;
+        assert!(
+            (mean / xn2 - 1.0).abs() < 0.2,
+            "mean {mean} vs ‖x‖² {xn2} (n={n}, d={d})"
+        );
+        assert!(
+            var > theory / 3.0 && var < theory * 3.0,
+            "sample var {var} outside 3x band of theory {theory} (n={n}, d={d})"
+        );
     });
 }
 
