@@ -3,7 +3,7 @@
 # `make artifacts` needs a python environment with jax installed (the L2
 # lowering path); everything else is pure rust and works offline.
 
-.PHONY: artifacts build test bench fmt clippy
+.PHONY: artifacts build test bench fmt clippy doc
 
 artifacts:
 	python3 python/compile/aot.py --out artifacts
@@ -22,3 +22,6 @@ fmt:
 
 clippy:
 	cargo clippy -- -D warnings
+
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -6,9 +6,11 @@
 //! Two engines:
 //!
 //! * `--engine cpu` (default) — the pure-rust [`BatchedAttention`] path:
-//!   clients submit `[heads, seq, head_dim]` Q/K/V slabs, the server packs
-//!   them into a `B × H` grid and fans heads out across workers.  Works
-//!   offline, no artifacts needed.
+//!   clients submit `Arc<[f32]>` Q/K/V slabs of shape
+//!   `[heads, seq, head_dim]`, the server wraps them into a `B × H` grid
+//!   without copying and fans heads out across the persistent worker
+//!   pool.  Works offline, no artifacts needed.  `--pool-size N` sizes
+//!   the pool.
 //! * `--engine pjrt` — the AOT artifact path (token sequences through the
 //!   compiled forward graph); requires `make artifacts`.
 //!
@@ -27,6 +29,10 @@ use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
+    let pool_size = args.get_usize("pool-size", 0)?;
+    if pool_size > 0 {
+        skeinformer::pool::set_pool_size(pool_size);
+    }
     match args.get_or("engine", "cpu") {
         "cpu" => run_cpu(&args),
         "pjrt" => run_pjrt(&args),

@@ -5,10 +5,17 @@
 //! Default run covers `B×H ∈ {1×1, 4×8, 16×8}` at `n = 512` (so the quick
 //! pass finishes in seconds even for exact attention); `--full` extends to
 //! `n ∈ {512, 2048, 4096}`, where the paper's O(n²) vs O(n log n) gap
-//! dominates.  Emits `reports/batched_throughput.csv`.
+//! dominates.  A spawn-overhead probe then runs a small-n grid (64×8 at
+//! n = 128, where per-head work is tiny and dispatch overhead is a
+//! visible fraction) twice: on the persistent pool, and with the pool
+//! torn down before every engine call so each run pays cold thread
+//! spawn — the pre-pool per-call `thread::scope` cost.  Emits
+//! `reports/batched_throughput.csv` (probe rows carry a `pool` /
+//! `respawn` suffix in the method column).
 
 use skeinformer::attention::{self, BatchedAttention};
 use skeinformer::bench_util::{ascii_table, bench, write_csv, BenchConfig};
+use skeinformer::pool;
 use skeinformer::rng::Rng;
 use skeinformer::tensor::BatchTensor;
 
@@ -80,6 +87,38 @@ fn main() {
             }
         }
     }
+    // Spawn-overhead probe: many tiny heads, so dispatch cost is a
+    // visible fraction of the batch.  "pool" reuses the persistent
+    // workers; "respawn" tears the pool down before every run, forcing a
+    // cold thread spawn per call — the pre-pool baseline.
+    let (pb, ph, pn) = (64usize, 8usize, 128usize);
+    let (q, k, v) = random_qkv(pb, ph, pn, head_dim, 42);
+    let method = attention::by_name("skeinformer", d).expect("registry method");
+    let engine = BatchedAttention::new();
+    let probe_cfg = BenchConfig { warmup_iters: 2, measure_iters: 10, max_seconds: 60.0 };
+    for mode in ["pool", "respawn"] {
+        let label = format!("skeinformer({mode}) B{pb}xH{ph} n{pn}");
+        let r = bench(&label, probe_cfg, || {
+            if mode == "respawn" {
+                pool::shutdown_pool();
+            }
+            std::hint::black_box(engine.run(method.as_ref(), &q, &k, &v, None, 7));
+        });
+        let seqs_per_sec = pb as f64 / (r.mean_ms / 1e3);
+        println!("{}  ->  {seqs_per_sec:>9.2} seq/s", r.report_line());
+        rows.push(vec![
+            format!("skeinformer({mode})"),
+            format!("{pb}x{ph}"),
+            format!("{pn}"),
+            format!("{:.2}", r.mean_ms),
+            format!("{seqs_per_sec:.2}"),
+        ]);
+        csv.push(format!(
+            "skeinformer({mode}),{pb},{ph},{pn},{:.3},{seqs_per_sec:.3}",
+            r.mean_ms
+        ));
+    }
+
     println!(
         "\n=== Batched throughput (sequences/sec) ===\n{}",
         ascii_table(&["Model", "BxH", "n", "ms/batch", "seq/s"], &rows)

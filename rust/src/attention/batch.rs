@@ -1,5 +1,6 @@
 //! Batched multi-head attention engine: run any [`AttentionMethod`] over a
-//! `B × H` grid of head slices, dispatching heads across workers.
+//! `B × H` grid of head slices, dispatching heads across the persistent
+//! worker pool.
 //!
 //! This is the execution path the serving coordinator and the throughput
 //! benches use for the realistic workload shape — many sequences × many
@@ -7,7 +8,10 @@
 //!
 //! **Shape conventions.** Inputs are [`BatchTensor`]s of shape
 //! `[batch, heads, seq, head_dim]` (head slices contiguous, so per-head
-//! extraction is one memcpy).  Padding masks are per *sequence*: a
+//! extraction is one memcpy — into a per-worker scratch buffer reused
+//! across heads, so steady state allocates nothing).  Slab-backed
+//! tensors ([`BatchTensor::from_slabs`]) work identically: the engine
+//! reads each client slab in place.  Padding masks are per *sequence*: a
 //! `(batch, seq)` [`Matrix`] whose row `b` is the 0/1 key mask shared by
 //! all heads of sequence `b`.
 //!
@@ -17,6 +21,16 @@
 //! on the worker schedule — so the output is **bitwise identical for every
 //! worker count** (verified by the conformance suite at workers `1` vs
 //! [`pool::worker_count`]).
+//!
+//! **Inner-kernel planning.** When the head grid alone saturates the pool
+//! (`min(head_count, worker cap) ≥ pool size`), each head's inner matmuls
+//! are forced single-threaded via
+//! [`with_default_plan`](crate::tensor::with_default_plan) — parallelism
+//! is already exhausted at the head level, and letting every head also
+//! spawn row-block tasks oversubscribes the pool (~10–20% throughput loss
+//! measured at 16×8).  Under-saturated grids keep `Auto`, so a 1×1 grid
+//! at long `seq` still parallelises inside the head.  Plans never change
+//! results, only threading.
 //!
 //! ```
 //! use skeinformer::attention::{BatchedAttention, Standard};
@@ -32,7 +46,7 @@
 use super::AttentionMethod;
 use crate::pool;
 use crate::rng::Rng;
-use crate::tensor::{BatchTensor, Matrix};
+use crate::tensor::{with_default_plan, BatchTensor, Matrix, MatmulPlan};
 
 /// The shape of a batched multi-head workload.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -86,8 +100,10 @@ impl HeadSpec {
 /// Runs an [`AttentionMethod`] over every head of a batched workload,
 /// dispatching heads across workers via [`pool::parallel_map_workers`].
 ///
-/// The default worker cap is [`pool::worker_count`]; `with_workers` pins it
-/// (the worker-invariance tests pin 1 vs N and assert bitwise equality).
+/// The default worker cap is [`pool::pool_size`] — the persistent pool's
+/// thread count, so a `--pool-size` override propagates to head dispatch;
+/// `with_workers` pins it (the worker-invariance tests pin 1 vs N and
+/// assert bitwise equality).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BatchedAttention {
     workers: Option<usize>,
@@ -106,7 +122,7 @@ impl BatchedAttention {
 
     /// The effective worker cap.
     pub fn workers(&self) -> usize {
-        self.workers.unwrap_or_else(pool::worker_count)
+        self.workers.unwrap_or_else(pool::pool_size)
     }
 
     /// Compute attention for every head of the grid.
@@ -138,13 +154,36 @@ impl BatchedAttention {
         let grid: Vec<(usize, usize)> = (0..spec.batch)
             .flat_map(|b| (0..spec.heads).map(move |h| (b, h)))
             .collect();
-        let outs = pool::parallel_map_workers(&grid, self.workers(), |&(b, h)| {
+        // The grid saturates the pool when the heads running concurrently
+        // already cover every pool thread; inner matmuls then go
+        // single-threaded instead of oversubscribing (module docs).
+        let workers = self.workers();
+        let inner_plan = if grid.len().min(workers) >= pool::pool_size() {
+            MatmulPlan::SingleThread
+        } else {
+            MatmulPlan::Auto
+        };
+        let head_elems = spec.seq * spec.head_dim;
+        let outs = pool::parallel_map_workers(&grid, workers, |&(b, h)| {
             let mut rng = Rng::new(seed ^ spec.head_index(b, h));
-            let qm = q.head_matrix(b, h);
-            let km = k.head_matrix(b, h);
-            let vm = v.head_matrix(b, h);
+            // Head extraction copies into per-worker scratch reused across
+            // heads (and across engine calls, since the pool threads are
+            // persistent) — no steady-state allocation.
+            let extract = |t: &BatchTensor| {
+                let mut buf = pool::take_scratch(head_elems);
+                buf.extend_from_slice(t.head(b, h));
+                Matrix::from_vec(spec.seq, spec.head_dim, buf)
+            };
+            let qm = extract(q);
+            let km = extract(k);
+            let vm = extract(v);
             let mask_row = masks.map(|m| m.row(b));
-            method.compute(&qm, &km, &vm, mask_row, &mut rng)
+            let out =
+                with_default_plan(inner_plan, || method.compute(&qm, &km, &vm, mask_row, &mut rng));
+            pool::recycle_scratch(qm.into_vec());
+            pool::recycle_scratch(km.into_vec());
+            pool::recycle_scratch(vm.into_vec());
+            out
         });
 
         let mut out = spec.zeros();
@@ -256,6 +295,29 @@ mod tests {
             .with_workers(pool::worker_count())
             .run(&skein, &q, &k, &v, None, 5);
         assert_eq!(one.max_abs_diff(&many), 0.0);
+    }
+
+    #[test]
+    fn slab_backed_inputs_match_owned_bitwise() {
+        // zero-copy serving path: Arc-slab views must produce the exact
+        // bytes the owned-Vec path does
+        let spec = HeadSpec::new(3, 2, 24, 4);
+        let (q, k, v) = toy_qkv(spec);
+        let to_slabs = |t: &BatchTensor| {
+            BatchTensor::from_slabs(
+                spec.heads,
+                spec.seq,
+                spec.head_dim,
+                (0..spec.batch)
+                    .map(|b| std::sync::Arc::from(t.sequence(b).to_vec()))
+                    .collect(),
+            )
+        };
+        let (qs, ks, vs) = (to_slabs(&q), to_slabs(&k), to_slabs(&v));
+        let skein = Skeinformer::new(8);
+        let owned = BatchedAttention::new().run(&skein, &q, &k, &v, None, 9);
+        let slab = BatchedAttention::new().run(&skein, &qs, &ks, &vs, None, 9);
+        assert_eq!(owned.max_abs_diff(&slab), 0.0);
     }
 
     #[test]

@@ -168,13 +168,20 @@ mod tests {
     #[test]
     fn batched_serving_flags() {
         // the grid flags the batched attention engine consumes (`skein
-        // serve --engine cpu` and the serving example)
-        let a = parse("serve --engine cpu --batch 16 --heads 8 --seq 2048 --head-dim 64");
+        // serve --engine cpu` and the serving example), plus the global
+        // `--pool-size` knob for the persistent worker pool
+        let a = parse(
+            "serve --engine cpu --batch 16 --heads 8 --seq 2048 --head-dim 64 --pool-size 12",
+        );
         assert_eq!(a.get_or("engine", "pjrt"), "cpu");
         assert_eq!(a.get_usize("batch", 1).unwrap(), 16);
         assert_eq!(a.get_usize("heads", 1).unwrap(), 8);
         assert_eq!(a.get_usize("seq", 512).unwrap(), 2048);
         assert_eq!(a.get_usize("head-dim", 32).unwrap(), 64);
+        assert_eq!(a.get_usize("pool-size", 0).unwrap(), 12);
+        // absent flag keeps the "use the default pool" sentinel
+        let b = parse("serve --engine cpu");
+        assert_eq!(b.get_usize("pool-size", 0).unwrap(), 0);
     }
 
     #[test]

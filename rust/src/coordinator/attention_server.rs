@@ -1,24 +1,64 @@
 //! Batched attention service over the pure-rust engine: the serving path
 //! that needs no AOT artifacts and no PJRT.
 //!
-//! Clients submit one sequence per request — the `[heads, seq, head_dim]`
-//! Q/K/V slabs (plus an optional padding mask) — and a dedicated engine
-//! thread groups pending requests into a `B × H` grid, runs
-//! [`BatchedAttention`] across workers, and answers each request with its
-//! sequence's output slab.  Dynamic batching policy matches the PJRT
-//! server: wait up to `max_wait` for a full batch, then flush whatever is
-//! pending.
+//! Clients submit one sequence per request — `Arc<[f32]>` Q/K/V slabs of
+//! shape `[heads, seq, head_dim]` (plus an optional padding mask) — and a
+//! dedicated engine thread groups pending requests into a `B × H` grid,
+//! runs [`BatchedAttention`] across the worker pool, and answers each
+//! request with its sequence's output slab.  Dynamic batching policy
+//! matches the PJRT server: wait up to `max_wait` for a full batch, then
+//! flush whatever is pending.
+//!
+//! **Zero-copy request path.**  Batch formation wraps the pending
+//! requests' slabs in a slab-backed [`BatchTensor`]
+//! ([`BatchTensor::from_slabs`]) — `Arc` clones, no element copies — so
+//! the engine reads each client's memory in place.  The `Arc` ownership
+//! rule: the client keeps its clone (requests are reusable), the server
+//! holds one only for the duration of the batch, and the slab is freed
+//! when the last clone drops.  Slab contents must stay immutable after
+//! submission — `Arc<[f32]>` enforces this in the type.  The one
+//! remaining copy on the request path is the reply (the output slab is
+//! handed to the client as an owned `Vec<f32>`).
+//!
+//! **Invariants** (checked per request at batch formation; violators are
+//! rejected and their reply channel closed): each of `q`/`k`/`v` holds
+//! exactly `heads * seq * head_dim` elements, and `mask`, when present,
+//! holds `seq`.
 //!
 //! Batch `i` of a server's lifetime computes with [`batch_seed`]`(cfg.seed,
 //! i)`, and each head inside a batch follows the engine's derivation rule,
 //! so a given arrival order reproduces exactly while distinct batches get
 //! disjoint per-head streams.
+//!
+//! # Examples
+//!
+//! ```
+//! use skeinformer::coordinator::attention_server::{self, AttentionServerConfig, HeadsRequest};
+//! use skeinformer::rng::Rng;
+//! use std::time::Duration;
+//!
+//! let cfg = AttentionServerConfig {
+//!     method: "standard".into(),
+//!     d: 8,
+//!     heads: 2,
+//!     seq: 16,
+//!     head_dim: 4,
+//!     max_batch: 2,
+//!     max_wait: Duration::from_millis(1),
+//!     seed: 0,
+//!     workers: None,
+//! };
+//! let handle = attention_server::start(cfg.clone()).unwrap();
+//! let reply = handle.submit(HeadsRequest::random(cfg.request_elems(), &mut Rng::new(1)));
+//! assert_eq!(reply.recv().unwrap().len(), cfg.request_elems());
+//! handle.shutdown().unwrap();
+//! ```
 
-use crate::attention::{self, BatchedAttention, HeadSpec};
+use crate::attention::{self, BatchedAttention};
 use crate::rng::Rng;
 use crate::tensor::{BatchTensor, Matrix};
 use anyhow::Result;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Engine seed for batch `i` of a server's lifetime.  The engine XORs
@@ -61,7 +101,9 @@ impl AttentionServerConfig {
     /// Build from CLI flags — the one place the flag names and defaults
     /// live (`skein serve --engine cpu` and the serving example share it):
     /// `--method --d --heads --seq --head-dim --batch --max-wait-ms
-    /// --seed --workers` (workers 0 = pool default).
+    /// --seed --workers` (workers 0 = pool default).  The global
+    /// `--pool-size` flag sizes the process-wide worker pool itself and
+    /// is handled by the binaries via [`crate::pool::set_pool_size`].
     pub fn from_args(args: &crate::cli::Args) -> Result<Self, crate::cli::CliError> {
         let workers = args.get_usize("workers", 0)?;
         Ok(Self {
@@ -78,17 +120,33 @@ impl AttentionServerConfig {
     }
 }
 
-/// One sequence's attention inputs: `[heads, seq, head_dim]` row-major
-/// slabs, plus an optional length-`seq` 0/1 padding mask.
+/// One sequence's attention inputs: shared `[heads, seq, head_dim]`
+/// row-major slabs, plus an optional length-`seq` 0/1 padding mask.
+///
+/// The slabs are `Arc<[f32]>` so batch formation is zero-copy: the server
+/// reads the client's memory in place and never copies the payload
+/// (`Clone` bumps three reference counts; only the optional `mask`, a
+/// plain `Vec`, is deep-copied).  A client that keeps its payload in
+/// `Arc<[f32]>` slabs (e.g. resubmitting or fanning one slab into many
+/// requests) submits with no element copies at all.
+/// [`HeadsRequest::from_vecs`] is the convenience for owned buffers — note
+/// `Vec → Arc<[f32]>` allocates and copies once per slab, so hot-path
+/// clients should build `Arc` slabs up front and reuse them.
 #[derive(Clone, Debug)]
 pub struct HeadsRequest {
-    pub q: Vec<f32>,
-    pub k: Vec<f32>,
-    pub v: Vec<f32>,
+    pub q: Arc<[f32]>,
+    pub k: Arc<[f32]>,
+    pub v: Arc<[f32]>,
     pub mask: Option<Vec<f32>>,
 }
 
 impl HeadsRequest {
+    /// Wrap owned Q/K/V buffers (each `heads * seq * head_dim` elements,
+    /// row-major `[heads, seq, head_dim]`).
+    pub fn from_vecs(q: Vec<f32>, k: Vec<f32>, v: Vec<f32>) -> Self {
+        Self { q: q.into(), k: k.into(), v: v.into(), mask: None }
+    }
+
     /// Dense standard-normal request of `elems = heads * seq * head_dim`
     /// values per slab — the demo/bench payload.
     pub fn random(elems: usize, rng: &mut Rng) -> Self {
@@ -97,7 +155,7 @@ impl HeadsRequest {
             rng.fill_normal(&mut buf);
             buf
         };
-        Self { q: mk(), k: mk(), v: mk(), mask: None }
+        Self::from_vecs(mk(), mk(), mk())
     }
 }
 
@@ -174,24 +232,10 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<Pending>) -> Attent
     let mut occupancy_sum = 0.0f64;
     let mut batch_ms_sum = 0.0f64;
 
-    'outer: loop {
-        // block for the first request of a batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break 'outer, // all senders dropped -> shutdown
+    loop {
+        let Some(mut pending) = super::collect_batch(&rx, cfg.max_batch, cfg.max_wait) else {
+            break; // all senders dropped -> shutdown
         };
-        let mut pending = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
-        while pending.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(_) => break, // timeout or disconnect: flush what we have
-            }
-        }
 
         // drop malformed payloads (their reply sender closes -> client
         // recv errors); keep the rest
@@ -210,21 +254,26 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<Pending>) -> Attent
             continue;
         }
 
-        // pack the grid: batch = sequences in this flush
-        let spec = HeadSpec::new(pending.len(), cfg.heads, cfg.seq, cfg.head_dim);
-        let mut q = spec.zeros();
-        let mut k = spec.zeros();
-        let mut v = spec.zeros();
+        // pack the grid zero-copy: batch = sequences in this flush, each
+        // request's slabs wrapped in place (Arc clones, no element copies)
+        let slab_views = |get: fn(&HeadsRequest) -> &Arc<[f32]>| {
+            BatchTensor::from_slabs(
+                cfg.heads,
+                cfg.seq,
+                cfg.head_dim,
+                pending.iter().map(|p| Arc::clone(get(&p.req))).collect(),
+            )
+        };
+        let q = slab_views(|r| &r.q);
+        let k = slab_views(|r| &r.k);
+        let v = slab_views(|r| &r.v);
         let any_mask = pending.iter().any(|p| p.req.mask.is_some());
         let mut masks = if any_mask {
-            Some(Matrix::full(spec.batch, cfg.seq, 1.0))
+            Some(Matrix::full(pending.len(), cfg.seq, 1.0))
         } else {
             None
         };
         for (b, p) in pending.iter().enumerate() {
-            q.data_mut()[b * elems..(b + 1) * elems].copy_from_slice(&p.req.q);
-            k.data_mut()[b * elems..(b + 1) * elems].copy_from_slice(&p.req.k);
-            v.data_mut()[b * elems..(b + 1) * elems].copy_from_slice(&p.req.v);
             if let (Some(mm), Some(req_mask)) = (masks.as_mut(), p.req.mask.as_ref()) {
                 mm.set_row(b, req_mask);
             }
@@ -257,7 +306,7 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<Pending>) -> Attent
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::Standard;
+    use crate::attention::{HeadSpec, Standard};
     use crate::rng::Rng;
 
     fn cfg(method: &str, max_batch: usize) -> AttentionServerConfig {
@@ -319,9 +368,9 @@ mod tests {
         assert_eq!(stats.batches, 1);
 
         let spec = HeadSpec::new(1, c.heads, c.seq, c.head_dim);
-        let q = crate::tensor::BatchTensor::from_vec(1, c.heads, c.seq, c.head_dim, req.q);
-        let k = crate::tensor::BatchTensor::from_vec(1, c.heads, c.seq, c.head_dim, req.k);
-        let v = crate::tensor::BatchTensor::from_vec(1, c.heads, c.seq, c.head_dim, req.v);
+        let q = crate::tensor::BatchTensor::from_vec(1, c.heads, c.seq, c.head_dim, req.q.to_vec());
+        let k = crate::tensor::BatchTensor::from_vec(1, c.heads, c.seq, c.head_dim, req.k.to_vec());
+        let v = crate::tensor::BatchTensor::from_vec(1, c.heads, c.seq, c.head_dim, req.v.to_vec());
         // the first batch of a server's lifetime computes with batch_seed(seed, 0)
         let want =
             BatchedAttention::new().run(&Standard, &q, &k, &v, None, batch_seed(c.seed, 0));
@@ -333,7 +382,7 @@ mod tests {
     fn malformed_requests_are_rejected_not_wedged() {
         let c = cfg("standard", 2);
         let handle = start(c.clone()).unwrap();
-        let bad = HeadsRequest { q: vec![0.0; 3], k: vec![0.0; 3], v: vec![0.0; 3], mask: None };
+        let bad = HeadsRequest::from_vecs(vec![0.0; 3], vec![0.0; 3], vec![0.0; 3]);
         let bad_rx = handle.submit(bad);
         let good_rx = handle.submit(random_request(&c, 1));
         assert!(good_rx.recv().is_ok());
@@ -346,6 +395,32 @@ mod tests {
     #[test]
     fn unknown_method_is_rejected_up_front() {
         assert!(start(cfg("no-such-method", 2)).is_err());
+    }
+
+    #[test]
+    fn shared_slab_requests_are_served_in_place() {
+        // q, k, and v may all alias ONE client allocation — the zero-copy
+        // path must read it in place without tripping over the aliasing,
+        // and the client's clone must survive the request untouched.
+        let c = cfg("standard", 1);
+        let mut buf = vec![0.0f32; c.request_elems()];
+        Rng::new(5).fill_normal(&mut buf);
+        let slab: Arc<[f32]> = buf.clone().into();
+        let req =
+            HeadsRequest { q: slab.clone(), k: slab.clone(), v: slab.clone(), mask: None };
+        let handle = start(c.clone()).unwrap();
+        let got = handle.submit(req).recv().unwrap();
+        handle.shutdown().unwrap();
+        assert_eq!(got.len(), c.request_elems());
+        assert!(got.iter().all(|x| x.is_finite()));
+        assert_eq!(&slab[..], &buf[..], "client slab must be untouched");
+
+        // and it matches the owned-Vec construction bitwise
+        let handle = start(c.clone()).unwrap();
+        let owned = HeadsRequest::from_vecs(buf.clone(), buf.clone(), buf.clone());
+        let got_owned = handle.submit(owned).recv().unwrap();
+        handle.shutdown().unwrap();
+        assert_eq!(got, got_owned);
     }
 
     #[test]

@@ -14,6 +14,33 @@ use crate::config::ExperimentConfig;
 use crate::runtime::Runtime;
 use crate::train::{run_experiment, TrainOutcome};
 use anyhow::Result;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Dynamic-batching collect shared by both serving paths: block for the
+/// first request, then drain the queue until `max` requests are pending
+/// or `max_wait` has elapsed — "wait for a full batch, else flush".
+/// Returns `None` when every sender has dropped (server shutdown).
+pub(crate) fn collect_batch<T>(
+    rx: &mpsc::Receiver<T>,
+    max: usize,
+    max_wait: Duration,
+) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut pending = vec![first];
+    let deadline = Instant::now() + max_wait;
+    while pending.len() < max {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => pending.push(r),
+            Err(_) => break, // timeout or disconnect: flush what we have
+        }
+    }
+    Some(pending)
+}
 
 /// A sweep request: the cross product of methods and tasks.
 #[derive(Clone, Debug)]

@@ -91,25 +91,10 @@ fn serve_loop(
     let mut queue_ms_sum = 0.0f64;
     let mut occupancy_sum = 0.0f64;
 
-    'outer: loop {
-        // block for the first request of a batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break 'outer, // all senders dropped -> shutdown
+    loop {
+        let Some(pending) = super::collect_batch(&rx, capacity, max_wait) else {
+            break; // all senders dropped -> shutdown
         };
-        let mut pending = vec![first];
-        let deadline = Instant::now() + max_wait;
-        while pending.len() < capacity {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        }
 
         // pack into a fixed-shape batch (pad unused slots)
         let mut tokens = vec![PAD; capacity * seq_len];

@@ -26,6 +26,13 @@ fn main() {
 
 fn run() -> Result<()> {
     let args = Args::from_env()?;
+    // Global flag: size of the persistent worker pool every parallel path
+    // (matmul row blocks, batched head dispatch) executes on.  0 keeps
+    // the default (logical CPUs, capped at 16).
+    let pool_size = args.get_usize("pool-size", 0)?;
+    if pool_size > 0 {
+        skeinformer::pool::set_pool_size(pool_size);
+    }
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("sweep") => cmd_sweep(&args),
@@ -54,6 +61,9 @@ fn print_help() {
                     cpu engine (default; batched attention, no artifacts needed):\n\
                     [--batch B] [--heads H] [--seq N] [--head-dim P] [--d D] [--workers W]\n\
            inspect  <artifacts/..._manifest.json>\n\n\
+         GLOBAL FLAGS\n\
+           --pool-size N   worker threads in the persistent pool (default:\n\
+                           logical CPUs, capped at 16; 0 = default)\n\n\
          Artifacts come from `make artifacts` (python AOT path); `serve\n\
          --engine pjrt` additionally needs the real xla crate (not the\n\
          offline stub) linked in.",

@@ -1,9 +1,9 @@
-//! Scoped-thread parallelism substrate (no rayon/tokio offline).
+//! Persistent worker-pool parallelism substrate (no rayon/tokio offline).
 //!
 //! Two primitives cover every parallel site in the codebase:
 //!
 //! * [`parallel_row_blocks`] — split a row-major output buffer into
-//!   contiguous row blocks and fill each on its own thread (matmul,
+//!   contiguous row blocks and fill each on its own worker (matmul,
 //!   attention row strips).
 //! * [`parallel_map`] — map a function over items with a bounded worker
 //!   count (Figure-1 trials, per-method experiment sweeps, the batched
@@ -11,20 +11,351 @@
 //!   the same primitive with an explicit worker cap — the batched engine's
 //!   worker-count-invariance tests pin it to 1 vs [`worker_count`].
 //!
-//! Threads are spawned per call via `std::thread::scope`; for the coarse
-//! work sizes here (≥ milliseconds per block) spawn overhead (~10 µs) is
-//! noise, and the scope guarantees no detached threads survive a panic.
+//! Both primitives execute on one process-wide worker pool: long-lived
+//! worker threads created lazily on first use, fed through a shared work
+//! queue, torn down with [`shutdown_pool`] (and re-created on the next
+//! parallel call).  Compared to the per-call `std::thread::scope` spawning
+//! this replaced, the pool removes ~10–100 µs of spawn/join overhead per
+//! call — noise for second-long blocks, but measurable for serving-shaped
+//! workloads that issue thousands of small batched-attention grids (see
+//! `benches/batched_throughput.rs`'s spawn-overhead probe).  Because the
+//! workers are persistent, per-worker state is meaningful: the
+//! [`take_scratch`]/[`recycle_scratch`] pair hands out reusable per-thread
+//! f32 buffers so hot paths stop re-allocating head-sized slabs on every
+//! task.
+//!
+//! **Blocking discipline (deadlock freedom).** A caller that submits a
+//! batch of tasks never parks while work it depends on sits in the queue:
+//! it *helps* — popping and running queued tasks until its own batch
+//! completes.  Nested parallelism (a pool task that itself calls
+//! [`parallel_row_blocks`], e.g. a per-head matmul) is therefore safe even
+//! when every worker is busy: some thread always makes progress on the
+//! leaf tasks.  Panics inside tasks are caught, forwarded to the
+//! submitting caller (which re-raises after the whole batch has drained,
+//! so no borrow outlives its use), and never kill a worker thread.
+//!
+//! **Determinism.** The pool never changes results: each task's
+//! computation is a pure function of its inputs, independent of which
+//! thread runs it or in what order (the batched attention engine's
+//! bitwise worker-count invariance rests on this, and
+//! `rust/tests/conformance.rs` pins it).
+//!
+//! Worker threads are pinned to the pool for its lifetime, not to cores —
+//! CPU affinity is left to the deployment (`taskset`/cgroups), since std
+//! has no portable affinity API.
+//!
+//! # Examples
+//!
+//! ```
+//! use skeinformer::pool;
+//!
+//! let items: Vec<u64> = (0..64).collect();
+//! let squares = pool::parallel_map(&items, |&x| x * x);
+//! assert_eq!(squares[10], 100);
+//!
+//! // The pool can be resized or torn down between workloads; the next
+//! // parallel call lazily re-initialises it.
+//! pool::shutdown_pool();
+//! assert_eq!(pool::parallel_map(&items, |&x| x + 1)[0], 1);
+//! ```
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
-/// Number of worker threads to use (≈ physical parallelism, capped).
+/// Number of worker threads to use by default: the logical CPU count
+/// reported by `available_parallelism` (which honors cgroup quotas),
+/// capped at 16.  [`pool_size`] reflects any [`set_pool_size`] override.
 pub fn worker_count() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Upper bound on a configured pool size — a guard against typo'd
+/// `--pool-size` values, far above any sensible CPU count here.
+const MAX_POOL_SIZE: usize = 512;
+
+/// Requested pool size; 0 means "default to [`worker_count`]".
+static REQUESTED_SIZE: AtomicUsize = AtomicUsize::new(0);
+
+/// The effective worker-thread count of the (current or next) pool.
+pub fn pool_size() -> usize {
+    match REQUESTED_SIZE.load(Ordering::Relaxed) {
+        0 => worker_count(),
+        n => n.min(MAX_POOL_SIZE),
+    }
+}
+
+/// Set the pool's worker-thread count (`0` restores the
+/// [`worker_count`] default).  If a pool of a different size is already
+/// running it is shut down; the next parallel call re-initialises at the
+/// new size.  Results never depend on the size — only throughput does.
+///
+/// Must not be called from inside a pool task (it joins worker threads).
+pub fn set_pool_size(n: usize) {
+    REQUESTED_SIZE.store(n, Ordering::Relaxed);
+    let stale = {
+        let mut guard = pool_slot().lock().expect("pool registry poisoned");
+        let differs = guard.as_ref().is_some_and(|pool| pool.size != pool_size());
+        if differs {
+            guard.take()
+        } else {
+            None
+        }
+    };
+    if let Some(pool) = stale {
+        pool.stop();
+    }
+}
+
+/// Shut down the process-wide pool: signal the workers, let them drain the
+/// queue, and join them.  In-flight batches still complete (their
+/// submitters help run any tasks the exiting workers leave behind).  The
+/// next parallel call lazily re-creates the pool, so this is safe to call
+/// between workloads — e.g. to measure cold-spawn cost, or to release the
+/// threads before forking.
+///
+/// Must not be called from inside a pool task (it joins worker threads).
+pub fn shutdown_pool() {
+    let pool = pool_slot().lock().expect("pool registry poisoned").take();
+    if let Some(pool) = pool {
+        pool.stop();
+    }
+}
+
+/// True once the process-wide pool has been created and not yet shut
+/// down (diagnostics / tests).
+pub fn pool_is_running() -> bool {
+    pool_slot().lock().expect("pool registry poisoned").is_some()
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// State shared between the workers, submitters, and helpers: the work
+/// queue plus the condvar that signals "queue non-empty or a batch
+/// finished".
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    signal: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A running pool: the shared queue plus the worker join handles.
+/// Worker threads are named `skein-pool-{i}`.
+struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl WorkerPool {
+    fn spawn(size: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            signal: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("skein-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, workers, size }
+    }
+
+    /// Signal shutdown and join.  Workers exit only once the queue is
+    /// empty, so no queued task is ever dropped unrun.
+    fn stop(self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _guard = self.shared.queue.lock().expect("pool queue poisoned");
+            self.shared.signal.notify_all();
+        }
+        for worker in self.workers {
+            let _ = worker.join();
+        }
+    }
+}
+
+fn pool_slot() -> &'static Mutex<Option<WorkerPool>> {
+    static POOL: Mutex<Option<WorkerPool>> = Mutex::new(None);
+    &POOL
+}
+
+/// Shared queue handle, creating the pool on first use.
+fn acquire() -> Arc<PoolShared> {
+    let mut guard = pool_slot().lock().expect("pool registry poisoned");
+    if guard.is_none() {
+        *guard = Some(WorkerPool::spawn(pool_size()));
+    }
+    Arc::clone(&guard.as_ref().expect("pool just initialised").shared)
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut queue = shared.queue.lock().expect("pool queue poisoned");
+            loop {
+                if let Some(job) = queue.pop_front() {
+                    break job;
+                }
+                // Drain-then-exit: only leave on shutdown once the queue
+                // is empty, so no batch is stranded.
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                queue = shared.signal.wait(queue).expect("pool queue poisoned");
+            }
+        };
+        // Jobs are panic-wrapped by `run_batch`; nothing unwinds here.
+        job();
+    }
+}
+
+/// Completion latch for one submitted batch: outstanding-task count plus
+/// the first panic payload (re-raised by the submitter once the batch has
+/// fully drained).
+struct Batch {
+    remaining: AtomicUsize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// Run a set of independent tasks to completion on the pool, helping from
+/// the calling thread.  Blocks until every task has finished; re-raises
+/// the first task panic after that point, so borrows inside the tasks
+/// never outlive their use.
+fn run_batch(tasks: Vec<Box<dyn FnOnce() + Send + '_>>) {
+    let count = tasks.len();
+    if count == 0 {
+        return;
+    }
+    if count == 1 {
+        // Inline: no queue round-trip, panics propagate natively.
+        (tasks.into_iter().next().expect("one task"))();
+        return;
+    }
+
+    let shared = acquire();
+    let batch = Arc::new(Batch { remaining: AtomicUsize::new(count), panic: Mutex::new(None) });
+    // Wrap every task outside the queue lock (boxing allocates; the lock
+    // is the hottest in the process under many-small-batches load).
+    let jobs: Vec<Job> = tasks
+        .into_iter()
+        .map(|task| {
+            // SAFETY: the task may borrow from this stack frame.  We do
+            // not return (or unwind) past the completion wait below until
+            // `batch.remaining` reaches zero, i.e. until every task has
+            // run to completion — the CompletionGuard enforces this even
+            // if the wait itself fails, by aborting the process.  This is
+            // the contract `std::thread::scope` provides, made explicit.
+            let task: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(task)
+            };
+            let batch = Arc::clone(&batch);
+            let shared = Arc::clone(&shared);
+            Box::new(move || {
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(task)) {
+                    let mut slot = batch.panic.lock().expect("panic slot poisoned");
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+                if batch.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    // Last task: wake the submitter.  Taking the queue
+                    // lock orders this notify against the submitter's
+                    // check-then-wait, so the wakeup cannot be missed.
+                    // notify_all, not notify_one: the wakeup must not be
+                    // swallowed by an idle worker.
+                    let _guard = shared.queue.lock().expect("pool queue poisoned");
+                    shared.signal.notify_all();
+                }
+            }) as Job
+        })
+        .collect();
+    {
+        // If this lock acquisition panics (poisoned), no job was queued
+        // and no guard is armed yet, so unwinding here is safe.
+        let mut queue = shared.queue.lock().expect("pool queue poisoned");
+        queue.extend(jobs);
+        // Wake at most one thread per queued job instead of the whole
+        // pool — a woken thread always finds either a job to run or an
+        // empty queue (someone else took it and will signal completion),
+        // so no wakeup is load-bearing beyond these.
+        for _ in 0..count.min(pool_size() + 1) {
+            shared.signal.notify_one();
+        }
+    }
+
+    // From here until the batch drains, the queue holds (or workers run)
+    // jobs borrowing this frame; the guard keeps us from unwinding past
+    // them no matter what.
+    let mut guard = CompletionGuard { shared: &shared, batch: &batch, done: false };
+    wait_batch(&shared, &batch);
+    guard.done = true;
+    drop(guard);
+
+    let payload = batch.panic.lock().expect("panic slot poisoned").take();
+    if let Some(payload) = payload {
+        resume_unwind(payload);
+    }
+}
+
+/// Help-first wait: run queued tasks (ours or anyone's) instead of
+/// parking while work is available.  Guarantees progress even if the
+/// pool was shut down concurrently and zero workers remain.  Returns
+/// once `batch.remaining` is zero.
+fn wait_batch(shared: &PoolShared, batch: &Batch) {
+    let mut queue = shared.queue.lock().expect("pool queue poisoned");
+    loop {
+        if batch.remaining.load(Ordering::Acquire) == 0 {
+            break;
+        }
+        if let Some(job) = queue.pop_front() {
+            drop(queue);
+            job();
+            queue = shared.queue.lock().expect("pool queue poisoned");
+        } else {
+            queue = shared.signal.wait(queue).expect("pool queue poisoned");
+        }
+    }
+}
+
+/// Armed between enqueue and batch completion: if `run_batch` unwinds
+/// while tasks borrowing its frame may still be queued or running, the
+/// guard re-enters the completion wait; if even that fails (poisoned pool
+/// lock), it aborts the process rather than let a worker touch a dead
+/// stack frame — the same last-resort `std::thread::scope` takes.
+struct CompletionGuard<'a> {
+    shared: &'a PoolShared,
+    batch: &'a Batch,
+    done: bool,
+}
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        if self.done {
+            return;
+        }
+        let waited =
+            catch_unwind(AssertUnwindSafe(|| wait_batch(self.shared, self.batch)));
+        if waited.is_err() {
+            std::process::abort();
+        }
+    }
 }
 
 /// Fill `out` (a `rows × cols` row-major buffer) by handing each worker a
 /// contiguous block of rows. `f(range, block)` must fill `block` completely,
 /// where `block` is the sub-slice for `range` (row indices).
+///
+/// # Panics
+///
+/// Panics if `out.len() != rows * cols`, or re-raises a panic from `f`
+/// (after all blocks have drained).
 pub fn parallel_row_blocks(
     out: &mut [f32],
     rows: usize,
@@ -32,38 +363,41 @@ pub fn parallel_row_blocks(
     f: impl Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
 ) {
     assert_eq!(out.len(), rows * cols);
-    let workers = worker_count().min(rows.max(1));
+    let workers = pool_size().min(rows.max(1));
     if workers <= 1 || rows < 2 {
         f(0..rows, out);
         return;
     }
     let block = rows.div_ceil(workers);
-    std::thread::scope(|s| {
-        let mut rest = out;
-        let mut start = 0usize;
-        while start < rows {
-            let end = (start + block).min(rows);
-            let (chunk, tail) = rest.split_at_mut((end - start) * cols);
-            rest = tail;
-            let fr = &f;
-            let range = start..end;
-            s.spawn(move || fr(range, chunk));
-            start = end;
-        }
-    });
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(workers);
+    let mut rest = out;
+    let mut start = 0usize;
+    while start < rows {
+        let end = (start + block).min(rows);
+        let (chunk, tail) = rest.split_at_mut((end - start) * cols);
+        rest = tail;
+        let fr = &f;
+        tasks.push(Box::new(move || fr(start..end, chunk)));
+        start = end;
+    }
+    run_batch(tasks);
 }
 
 /// Map `f` over `items` in parallel, preserving order, with at most
-/// [`worker_count`] threads. Work stealing via an atomic cursor keeps load
-/// balanced when item costs vary (e.g. different attention methods).
+/// [`pool_size`] concurrent runners. Work stealing via an atomic cursor
+/// keeps load balanced when item costs vary (e.g. different attention
+/// methods).
 pub fn parallel_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
-    parallel_map_workers(items, worker_count(), f)
+    parallel_map_workers(items, pool_size(), f)
 }
 
 /// [`parallel_map`] with an explicit worker cap.  Results are identical for
 /// every cap (ordering and each item's computation are independent of the
 /// schedule) — the batched attention engine's determinism tests rely on
 /// comparing `workers = 1` against `workers = worker_count()` bitwise.
+///
+/// A cap above [`pool_size`] is honoured by queueing extra runners; they
+/// execute as pool threads (plus the helping caller) free up.
 pub fn parallel_map_workers<T: Sync, R: Send>(
     items: &[T],
     workers: usize,
@@ -74,35 +408,32 @@ pub fn parallel_map_workers<T: Sync, R: Send>(
         return Vec::new();
     }
     let workers = workers.max(1).min(n);
-    if workers <= 1 {
+    if workers <= 1 || pool_size() <= 1 {
         return items.iter().map(&f).collect();
     }
     let cursor = AtomicUsize::new(0);
     let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let slots_ptr = SendPtr(slots.as_mut_ptr());
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            let cursor = &cursor;
-            let f = &f;
-            let slots_ptr = slots_ptr;
-            s.spawn(move || {
-                // force whole-struct capture (edition-2021 captures fields
-                // at field granularity, which would capture the raw ptr)
-                let slots_ptr = slots_ptr;
-                loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let r = f(&items[i]);
-                    // SAFETY: each index i is claimed exactly once by exactly
-                    // one worker (fetch_add), so writes never alias.
-                    unsafe { *slots_ptr.0.add(i) = Some(r) };
-                }
-            });
+    let runner = |_: usize| {
+        // force whole-struct capture (edition-2021 captures fields at
+        // field granularity, which would capture the raw ptr)
+        let slots_ptr = slots_ptr;
+        loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let r = f(&items[i]);
+            // SAFETY: each index i is claimed exactly once by exactly
+            // one runner (fetch_add), so writes never alias.
+            unsafe { *slots_ptr.0.add(i) = Some(r) };
         }
-    });
-    slots.into_iter().map(|x| x.expect("worker filled slot")).collect()
+    };
+    let runner = &runner;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+        (0..workers).map(|w| Box::new(move || runner(w)) as Box<dyn FnOnce() + Send + '_>).collect();
+    run_batch(tasks);
+    slots.into_iter().map(|x| x.expect("runner filled slot")).collect()
 }
 
 struct SendPtr<T>(*mut T);
@@ -112,9 +443,51 @@ impl<T> Clone for SendPtr<T> {
         Self(self.0)
     }
 }
-// SAFETY: see parallel_map — disjoint index ownership.
+// SAFETY: see parallel_map_workers — disjoint index ownership.
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
+
+// ---------------------------------------------------------------------------
+// Per-worker scratch buffers
+// ---------------------------------------------------------------------------
+
+/// How many recycled buffers each thread keeps. The batched engine uses 3
+/// per in-flight head (Q/K/V); a little headroom covers nested use.
+const SCRATCH_KEEP: usize = 8;
+
+thread_local! {
+    static SCRATCH: std::cell::RefCell<Vec<Vec<f32>>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Take a cleared, reusable f32 buffer with at least `capacity` reserved.
+/// Buffers are per-thread: on the persistent pool workers they live for
+/// the pool's lifetime, so steady-state hot paths stop allocating.
+/// Return buffers with [`recycle_scratch`] when done; forgetting to is
+/// safe (the buffer is simply freed).
+pub fn take_scratch(capacity: usize) -> Vec<f32> {
+    let recycled = SCRATCH.with(|s| s.borrow_mut().pop());
+    match recycled {
+        Some(mut buf) => {
+            buf.clear();
+            buf.reserve(capacity);
+            buf
+        }
+        None => Vec::with_capacity(capacity),
+    }
+}
+
+/// Return a buffer taken with [`take_scratch`] to this thread's pool.
+/// Keeps at most a small fixed number per thread; excess buffers are
+/// dropped.
+pub fn recycle_scratch(buf: Vec<f32>) {
+    SCRATCH.with(|s| {
+        let mut stash = s.borrow_mut();
+        if stash.len() < SCRATCH_KEEP {
+            stash.push(buf);
+        }
+    });
+}
 
 #[cfg(test)]
 mod tests {
@@ -174,5 +547,64 @@ mod tests {
             acc.wrapping_add(x)
         });
         assert_eq!(out.len(), 32);
+    }
+
+    #[test]
+    fn pool_persists_across_calls() {
+        if pool_size() <= 1 {
+            // single-core environment: every parallel call takes the
+            // serial fast path and the pool is (correctly) never created
+            return;
+        }
+        let items: Vec<usize> = (0..16).collect();
+        let _ = parallel_map(&items, |&x| x);
+        assert!(pool_is_running(), "first parallel call must initialise the pool");
+        let _ = parallel_map(&items, |&x| x + 1);
+        assert!(pool_is_running());
+    }
+
+    #[test]
+    fn nested_parallelism_completes() {
+        // a pool task that itself uses the pool (per-head matmul shape):
+        // must finish rather than deadlock, with correct results.
+        let items: Vec<usize> = (0..8).collect();
+        let out = parallel_map(&items, |&x| {
+            let inner: Vec<usize> = (0..32).collect();
+            parallel_map_workers(&inner, 4, |&y| y * x).iter().sum::<usize>()
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * (31 * 32) / 2);
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let items: Vec<usize> = (0..16).collect();
+        let result = std::panic::catch_unwind(|| {
+            parallel_map(&items, |&x| {
+                if x == 7 {
+                    panic!("boom");
+                }
+                x
+            })
+        });
+        assert!(result.is_err(), "task panic must reach the caller");
+        // the pool must still work afterwards
+        let out = parallel_map(&items, |&x| x + 1);
+        assert_eq!(out[15], 16);
+    }
+
+    #[test]
+    fn scratch_buffers_recycle_per_thread() {
+        let mut buf = take_scratch(64);
+        buf.extend_from_slice(&[1.0; 64]);
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        recycle_scratch(buf);
+        let again = take_scratch(16);
+        assert!(again.is_empty(), "recycled scratch must come back cleared");
+        assert!(again.capacity() >= cap.min(64));
+        assert_eq!(again.as_ptr(), ptr, "same-thread take after recycle reuses the allocation");
+        recycle_scratch(again);
     }
 }

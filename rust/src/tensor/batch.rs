@@ -2,48 +2,138 @@
 //!
 //! The batched attention engine works over a `B × H` grid of `(seq,
 //! head_dim)` head slices.  With `seq` and `head_dim` innermost, every head
-//! slice is a *contiguous* run of the backing buffer, so per-head access is
+//! slice is a *contiguous* run of its backing memory, so per-head access is
 //! a zero-copy borrow ([`BatchTensor::head`]) and materialising a head as a
 //! [`Matrix`] ([`BatchTensor::head_matrix`]) is a single `memcpy` — no
-//! strided gather, no per-element work.  Per-sequence output slabs
-//! (`[heads, seq, head_dim]` for one batch index) are contiguous too, which
-//! is what the serving path hands back to clients.
+//! strided gather, no per-element work.
+//!
+//! # Two storage modes
+//!
+//! * **Owned** — one contiguous `Vec<f32>` covering the whole grid.  This
+//!   is what [`zeros`](BatchTensor::zeros) / [`from_vec`](BatchTensor::from_vec)
+//!   build and what the engine writes its outputs into.  Mutable access
+//!   ([`data_mut`](BatchTensor::data_mut), [`set_head`](BatchTensor::set_head))
+//!   requires owned storage.
+//! * **Slab-backed** — [`from_slabs`](BatchTensor::from_slabs) wraps one
+//!   `Arc<[f32]>` slab of shape `[heads, seq, head_dim]` *per batch index*,
+//!   without copying.  This is the serving path's zero-copy request
+//!   packing: each client's Q/K/V slab is read in place by the engine, and
+//!   the `Arc` keeps it alive for exactly as long as any tensor view
+//!   does.  Slab-backed tensors are **read-only views**: the mutating and
+//!   whole-buffer accessors panic (see each method's *Panics* section),
+//!   and [`into_vec`](BatchTensor::into_vec) materialises a contiguous
+//!   copy on demand.
+//!
+//! The invariant either way: every slab holds exactly
+//! `heads * seq * head_dim` elements and the grid holds
+//! `batch * heads * seq * head_dim` total.  Constructors assert this.
+//!
+//! # Examples
+//!
+//! ```
+//! use std::sync::Arc;
+//! use skeinformer::tensor::BatchTensor;
+//!
+//! // Two clients submit [heads=2, seq=4, head_dim=8] slabs; the batcher
+//! // packs them into a B=2 grid without copying either slab.
+//! let client_a: Arc<[f32]> = vec![1.0f32; 2 * 4 * 8].into();
+//! let client_b: Arc<[f32]> = vec![2.0f32; 2 * 4 * 8].into();
+//! let grid = BatchTensor::from_slabs(2, 4, 8, vec![client_a.clone(), client_b]);
+//! assert_eq!(grid.shape(), (2, 2, 4, 8));
+//! assert_eq!(grid.head(0, 1)[0], 1.0); // reads client_a's memory in place
+//! assert_eq!(grid.sequence(1)[0], 2.0);
+//! ```
 
 use super::Matrix;
+use std::sync::Arc;
+
+/// Backing memory: one contiguous owned buffer, or one shared slab per
+/// batch index (the zero-copy serving path).
+#[derive(Clone)]
+enum Storage {
+    Owned(Vec<f32>),
+    Slabs(Vec<Arc<[f32]>>),
+}
 
 /// A dense, row-major f32 tensor of shape `(batch, heads, seq, dim)`.
-#[derive(Clone, PartialEq)]
+#[derive(Clone)]
 pub struct BatchTensor {
     batch: usize,
     heads: usize,
     seq: usize,
     dim: usize,
-    data: Vec<f32>,
+    storage: Storage,
 }
 
 impl std::fmt::Debug for BatchTensor {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "BatchTensor({}x{}x{}x{})",
-            self.batch, self.heads, self.seq, self.dim
+            "BatchTensor({}x{}x{}x{}{})",
+            self.batch,
+            self.heads,
+            self.seq,
+            self.dim,
+            if self.is_slab_backed() { ", slab-backed" } else { "" }
         )
     }
 }
 
+/// Element-wise equality across storage modes: an owned tensor and a
+/// slab-backed view with the same shape and values compare equal.
+impl PartialEq for BatchTensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.shape() == other.shape()
+            && (0..self.batch).all(|b| self.sequence(b) == other.sequence(b))
+    }
+}
+
 impl BatchTensor {
-    /// All-zeros tensor.
+    /// All-zeros tensor (owned storage).
     pub fn zeros(batch: usize, heads: usize, seq: usize, dim: usize) -> Self {
-        Self { batch, heads, seq, dim, data: vec![0.0; batch * heads * seq * dim] }
+        Self {
+            batch,
+            heads,
+            seq,
+            dim,
+            storage: Storage::Owned(vec![0.0; batch * heads * seq * dim]),
+        }
     }
 
-    /// Wrap an existing `[b][h][n][d]` row-major buffer.
+    /// Wrap an existing `[b][h][n][d]` row-major buffer (owned storage).
+    ///
+    /// # Panics
+    ///
+    /// Panics unless `data.len() == batch * heads * seq * dim`.
     pub fn from_vec(batch: usize, heads: usize, seq: usize, dim: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), batch * heads * seq * dim, "buffer size mismatch");
-        Self { batch, heads, seq, dim, data }
+        Self { batch, heads, seq, dim, storage: Storage::Owned(data) }
     }
 
-    /// Build from a generator `f(b, h, i, j)`.
+    /// Zero-copy view over one shared `[heads, seq, dim]` slab per batch
+    /// index — the serving path's request packing (`batch = slabs.len()`).
+    /// The tensor holds an `Arc` clone of each slab; no element is copied
+    /// and the client memory stays alive while any view does.  The
+    /// resulting tensor is read-only (see the module docs).
+    ///
+    /// # Panics
+    ///
+    /// Panics unless every slab holds exactly `heads * seq * dim`
+    /// elements.
+    pub fn from_slabs(heads: usize, seq: usize, dim: usize, slabs: Vec<Arc<[f32]>>) -> Self {
+        let elems = heads * seq * dim;
+        for (b, slab) in slabs.iter().enumerate() {
+            assert_eq!(
+                slab.len(),
+                elems,
+                "slab {b}: expected heads*seq*dim = {elems} elements, got {}",
+                slab.len()
+            );
+        }
+        Self { batch: slabs.len(), heads, seq, dim, storage: Storage::Slabs(slabs) }
+    }
+
+    /// Build from a generator `f(b, h, i, j)` (owned storage).
     pub fn from_fn(
         batch: usize,
         heads: usize,
@@ -61,11 +151,16 @@ impl BatchTensor {
                 }
             }
         }
-        Self { batch, heads, seq, dim, data }
+        Self { batch, heads, seq, dim, storage: Storage::Owned(data) }
     }
 
     /// Stack `batch * heads` equal-shape head matrices (grid order: head
-    /// varies fastest).
+    /// varies fastest; owned storage).
+    ///
+    /// # Panics
+    ///
+    /// Panics if `mats.len() != batch * heads`, `mats` is empty, or the
+    /// head shapes are ragged.
     pub fn from_heads(batch: usize, heads: usize, mats: &[Matrix]) -> Self {
         assert_eq!(mats.len(), batch * heads, "expected batch*heads matrices");
         assert!(!mats.is_empty(), "from_heads needs at least one head");
@@ -75,7 +170,7 @@ impl BatchTensor {
             assert_eq!(m.shape(), (seq, dim), "ragged head shapes");
             data.extend_from_slice(m.data());
         }
-        Self { batch, heads, seq, dim, data }
+        Self { batch, heads, seq, dim, storage: Storage::Owned(data) }
     }
 
     pub fn batch(&self) -> usize {
@@ -104,25 +199,51 @@ impl BatchTensor {
         self.batch * self.heads
     }
 
-    #[inline]
-    fn head_offset(&self, b: usize, h: usize) -> usize {
-        debug_assert!(b < self.batch && h < self.heads);
-        (b * self.heads + h) * self.seq * self.dim
+    /// Total element count (`batch * heads * seq * dim`).
+    pub fn elems(&self) -> usize {
+        self.batch * self.heads * self.seq * self.dim
+    }
+
+    /// True for zero-copy views built with [`from_slabs`](Self::from_slabs)
+    /// (read-only; no single contiguous buffer).
+    pub fn is_slab_backed(&self) -> bool {
+        matches!(self.storage, Storage::Slabs(_))
     }
 
     /// Zero-copy borrow of head `(b, h)` as a `seq * dim` row-major slice.
+    /// Works for both storage modes — this is the accessor the engine's
+    /// per-head dispatch reads through.
     #[inline]
     pub fn head(&self, b: usize, h: usize) -> &[f32] {
-        let o = self.head_offset(b, h);
-        &self.data[o..o + self.seq * self.dim]
+        debug_assert!(b < self.batch && h < self.heads);
+        let len = self.seq * self.dim;
+        match &self.storage {
+            Storage::Owned(data) => {
+                let o = (b * self.heads + h) * len;
+                &data[o..o + len]
+            }
+            Storage::Slabs(slabs) => {
+                let o = h * len;
+                &slabs[b][o..o + len]
+            }
+        }
     }
 
     /// Mutable zero-copy borrow of head `(b, h)`.
+    ///
+    /// # Panics
+    ///
+    /// Panics on slab-backed tensors — they are read-only views of shared
+    /// client memory.
     #[inline]
     pub fn head_mut(&mut self, b: usize, h: usize) -> &mut [f32] {
-        let o = self.head_offset(b, h);
+        debug_assert!(b < self.batch && h < self.heads);
         let len = self.seq * self.dim;
-        &mut self.data[o..o + len]
+        let o = (b * self.heads + h) * len;
+        match &mut self.storage {
+            Storage::Owned(data) => &mut data[o..o + len],
+            Storage::Slabs(_) => panic!("head_mut on a slab-backed (read-only) BatchTensor"),
+        }
     }
 
     /// Head `(b, h)` as a `(seq, dim)` [`Matrix`] — one contiguous memcpy.
@@ -131,42 +252,96 @@ impl BatchTensor {
     }
 
     /// Overwrite head `(b, h)` from a `(seq, dim)` matrix.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the shape differs, or on slab-backed tensors (read-only).
     pub fn set_head(&mut self, b: usize, h: usize, m: &Matrix) {
         assert_eq!(m.shape(), (self.seq, self.dim), "head shape mismatch");
         self.head_mut(b, h).copy_from_slice(m.data());
     }
 
     /// Zero-copy borrow of sequence `b`'s full `[heads, seq, dim]` slab —
-    /// the per-request payload the serving path returns.
+    /// the per-request payload the serving path returns.  Works for both
+    /// storage modes.
     pub fn sequence(&self, b: usize) -> &[f32] {
         let len = self.heads * self.seq * self.dim;
-        &self.data[b * len..(b + 1) * len]
+        match &self.storage {
+            Storage::Owned(data) => &data[b * len..(b + 1) * len],
+            Storage::Slabs(slabs) => &slabs[b],
+        }
     }
 
+    /// The whole grid as one contiguous slice.
+    ///
+    /// # Panics
+    ///
+    /// Panics on slab-backed tensors: their batch entries live in separate
+    /// client allocations, so no single contiguous borrow exists.  Iterate
+    /// [`sequence`](Self::sequence) / [`head`](Self::head), or materialise
+    /// with [`into_vec`](Self::into_vec).
     pub fn data(&self) -> &[f32] {
-        &self.data
+        match &self.storage {
+            Storage::Owned(data) => data,
+            Storage::Slabs(_) => {
+                panic!("data() on a slab-backed BatchTensor — no contiguous buffer; \
+                        use sequence()/head() or into_vec()")
+            }
+        }
     }
 
+    /// Mutable access to the whole grid.
+    ///
+    /// # Panics
+    ///
+    /// Panics on slab-backed tensors (read-only views; see [`data`](Self::data)).
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        match &mut self.storage {
+            Storage::Owned(data) => data,
+            Storage::Slabs(_) => {
+                panic!("data_mut() on a slab-backed (read-only) BatchTensor")
+            }
+        }
     }
 
+    /// Consume into one contiguous `[b][h][n][d]` buffer.  Free for owned
+    /// storage; slab-backed views pay one concatenating copy here (the
+    /// only place a slab-backed tensor ever copies).
     pub fn into_vec(self) -> Vec<f32> {
-        self.data
+        let elems = self.elems();
+        match self.storage {
+            Storage::Owned(data) => data,
+            Storage::Slabs(slabs) => {
+                let mut data = Vec::with_capacity(elems);
+                for slab in &slabs {
+                    data.extend_from_slice(slab);
+                }
+                data
+            }
+        }
     }
 
     /// True if every element is finite.
     pub fn all_finite(&self) -> bool {
-        self.data.iter().all(|x| x.is_finite())
+        (0..self.batch).all(|b| self.sequence(b).iter().all(|x| x.is_finite()))
     }
 
-    /// Max absolute element-wise difference to another tensor.
+    /// Max absolute element-wise difference to another tensor (any mix of
+    /// storage modes).
+    ///
+    /// # Panics
+    ///
+    /// Panics if the shapes differ.
     pub fn max_abs_diff(&self, other: &Self) -> f32 {
         assert_eq!(self.shape(), other.shape());
-        self.data
-            .iter()
-            .zip(&other.data)
-            .map(|(a, b)| (a - b).abs())
+        (0..self.batch)
+            .map(|b| {
+                self.sequence(b)
+                    .iter()
+                    .zip(other.sequence(b))
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max)
+            })
             .fold(0.0f32, f32::max)
     }
 }
@@ -231,5 +406,51 @@ mod tests {
     #[should_panic]
     fn from_vec_size_mismatch_panics() {
         let _ = BatchTensor::from_vec(2, 2, 2, 2, vec![0.0; 15]);
+    }
+
+    #[test]
+    fn slab_view_aliases_client_memory() {
+        let owned = BatchTensor::from_fn(3, 2, 4, 5, |b, h, i, j| {
+            (b * 1000 + h * 100 + i * 10 + j) as f32
+        });
+        let slabs: Vec<Arc<[f32]>> =
+            (0..3).map(|b| Arc::from(owned.sequence(b).to_vec())).collect();
+        let view = BatchTensor::from_slabs(2, 4, 5, slabs.clone());
+        assert!(view.is_slab_backed());
+        assert_eq!(view.shape(), owned.shape());
+        // same bytes, read in place (no copy on construction)
+        assert_eq!(view, owned);
+        assert_eq!(view.max_abs_diff(&owned), 0.0);
+        for b in 0..3 {
+            assert!(std::ptr::eq(view.sequence(b).as_ptr(), slabs[b].as_ptr()));
+            for h in 0..2 {
+                assert_eq!(view.head(b, h), owned.head(b, h));
+            }
+        }
+        // materialising pays the one copy and matches the owned layout
+        assert_eq!(view.clone().into_vec(), owned.data().to_vec());
+    }
+
+    #[test]
+    #[should_panic]
+    fn slab_view_rejects_wrong_slab_length() {
+        let slab: Arc<[f32]> = vec![0.0f32; 7].into();
+        let _ = BatchTensor::from_slabs(2, 4, 5, vec![slab]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn slab_view_is_read_only() {
+        let slab: Arc<[f32]> = vec![0.0f32; 2 * 4 * 5].into();
+        let mut view = BatchTensor::from_slabs(2, 4, 5, vec![slab]);
+        let _ = view.data_mut();
+    }
+
+    #[test]
+    #[should_panic]
+    fn slab_view_has_no_contiguous_data() {
+        let slab: Arc<[f32]> = vec![0.0f32; 2 * 4 * 5].into();
+        let view = BatchTensor::from_slabs(2, 4, 5, vec![slab.clone(), slab]);
+        let _ = view.data();
     }
 }

@@ -9,13 +9,21 @@
 //!
 //! All kernels parallelise over row blocks with
 //! [`crate::pool::parallel_row_blocks`] when the output is large enough to
-//! amortise the thread spawn.  Results are independent of the thread
-//! count: every output row is computed by the same per-row arithmetic
-//! regardless of which block it lands in (the batched attention engine's
-//! bitwise worker-invariance rests on this).
+//! amortise the queue round-trip on the persistent worker pool.  Results
+//! are independent of the thread count *and* of the chosen
+//! [`MatmulPlan`]: every output row is computed by the same per-row
+//! arithmetic regardless of which block it lands in (the batched
+//! attention engine's bitwise worker-invariance rests on this).
+//!
+//! Callers that already occupy the whole pool — the batched engine when
+//! its `B × H` head grid saturates the workers — scope-override the
+//! `Auto` decision with [`with_default_plan`], forcing the inner kernels
+//! single-threaded instead of oversubscribing (~10–20% loss at 16×8
+//! before this existed).
 
 use super::Matrix;
 use crate::pool;
+use std::cell::Cell;
 
 /// Work threshold (output elements × inner dim) below which the
 /// single-threaded kernel is used.
@@ -29,7 +37,39 @@ pub enum MatmulPlan {
     MultiThread,
 }
 
+thread_local! {
+    /// What `MatmulPlan::Auto` resolves to on this thread (see
+    /// [`with_default_plan`]).  `Auto` means "use the FLOP threshold".
+    static DEFAULT_PLAN: Cell<MatmulPlan> = const { Cell::new(MatmulPlan::Auto) };
+}
+
+/// Run `f` with `MatmulPlan::Auto` resolving to `plan` on this thread —
+/// restores the previous default afterwards, panic or not.
+///
+/// This is how an outer parallel layer keeps inner kernels from
+/// oversubscribing: the batched attention engine wraps each per-head
+/// `compute` in `with_default_plan(MatmulPlan::SingleThread, ..)` once
+/// its head grid alone saturates the pool.  Kernels invoked with an
+/// explicit non-`Auto` plan are unaffected; `Auto` — whether implicit
+/// ([`matmul`] etc.) or passed to [`matmul_plan`]/[`matmul_nt_plan`]
+/// directly — consults the default.  The plan never changes results,
+/// only the threading (see the module docs).
+pub fn with_default_plan<R>(plan: MatmulPlan, f: impl FnOnce() -> R) -> R {
+    struct Restore(MatmulPlan);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            DEFAULT_PLAN.with(|p| p.set(self.0));
+        }
+    }
+    let _restore = Restore(DEFAULT_PLAN.with(|p| p.replace(plan)));
+    f()
+}
+
 fn should_par(m: usize, n: usize, k: usize, plan: MatmulPlan) -> bool {
+    let plan = match plan {
+        MatmulPlan::Auto => DEFAULT_PLAN.with(|p| p.get()),
+        explicit => explicit,
+    };
     match plan {
         MatmulPlan::SingleThread => false,
         MatmulPlan::MultiThread => true,
@@ -219,6 +259,19 @@ mod tests {
         for i in 0..5 {
             assert!((y[i] - want.get(i, 0)).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn default_plan_override_is_scoped_and_bitwise_neutral() {
+        let a = Matrix::from_fn(200, 160, |i, j| ((i * 13 + j * 7) % 17) as f32 - 8.0);
+        let b = Matrix::from_fn(160, 190, |i, j| ((i * 5 + j * 11) % 19) as f32 * 0.125);
+        let auto = matmul(&a, &b);
+        let forced = with_default_plan(MatmulPlan::SingleThread, || matmul(&a, &b));
+        // plan changes threading only — outputs are bitwise identical
+        assert_eq!(forced.max_abs_diff(&auto), 0.0);
+        // the override is scoped: Auto behaviour is restored afterwards
+        let again = matmul(&a, &b);
+        assert_eq!(again.max_abs_diff(&auto), 0.0);
     }
 
     #[test]

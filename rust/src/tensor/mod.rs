@@ -17,7 +17,10 @@ mod norms;
 mod ops;
 
 pub use batch::BatchTensor;
-pub use matmul::{matmul, matmul_nt, matmul_tn, matvec, MatmulPlan};
+pub use matmul::{
+    matmul, matmul_nt, matmul_nt_plan, matmul_plan, matmul_tn, matvec, with_default_plan,
+    MatmulPlan,
+};
 pub use norms::{frobenius_norm, power_iteration, spectral_norm, spectral_norm_diff};
 pub use ops::*;
 

@@ -1,0 +1,152 @@
+//! Stress and lifecycle tests for the persistent worker pool and the
+//! zero-copy serving path.
+//!
+//! These run in their own test binary on purpose: they mutate process-wide
+//! pool state (shutdown, resize) and hammer the queue from many client
+//! threads at once, which is exactly the serving workload the pool
+//! replaced per-call `thread::scope` spawning for.  Correctness must hold
+//! under any interleaving with other pool users — the pool's contract is
+//! that results never depend on its size, liveness, or scheduling.
+
+use skeinformer::attention::{BatchedAttention, HeadSpec, Skeinformer, Standard};
+use skeinformer::pool;
+use skeinformer::rng::Rng;
+use skeinformer::tensor::BatchTensor;
+use std::sync::Arc;
+
+/// Many concurrent client threads each issuing many small parallel maps —
+/// the spawn-overhead-sensitive shape the persistent pool exists for.
+/// Every call must return exact, ordered results.
+#[test]
+fn concurrent_small_maps_from_many_threads() {
+    let clients = 8;
+    let calls_per_client = 200;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                for call in 0..calls_per_client {
+                    let items: Vec<usize> = (0..16).collect();
+                    let out = pool::parallel_map_workers(&items, 4, |&x| x * 3 + c * 1000 + call);
+                    for (i, v) in out.iter().enumerate() {
+                        assert_eq!(*v, i * 3 + c * 1000 + call, "client {c} call {call}");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+}
+
+/// Shutdown must drain cleanly, and the next parallel call must
+/// re-initialise the pool transparently — including across resizes, and
+/// with bitwise-identical engine output throughout.  (One test on
+/// purpose: it is the only place the global pool size is mutated, so it
+/// cannot race another test's size assumptions — pool *users* stay
+/// correct under any size, which the other tests exercise concurrently.)
+#[test]
+fn shutdown_resize_reinit_roundtrip() {
+    let items: Vec<usize> = (0..64).collect();
+    let want: Vec<usize> = items.iter().map(|&x| x * x).collect();
+
+    let spec = HeadSpec::new(4, 4, 32, 8);
+    let mk = |salt: u64| {
+        let mut t = spec.zeros();
+        Rng::new(77 + salt).fill_normal(t.data_mut());
+        t
+    };
+    let (q, k, v) = (mk(0), mk(1), mk(2));
+    let skein = Skeinformer::new(8);
+    let baseline = BatchedAttention::new().run(&skein, &q, &k, &v, None, 3);
+
+    assert_eq!(pool::parallel_map(&items, |&x| x * x), want);
+    pool::shutdown_pool();
+    // lazily re-created on next use, with identical results
+    assert_eq!(pool::parallel_map(&items, |&x| x * x), want);
+    let fresh = BatchedAttention::new().run(&skein, &q, &k, &v, None, 3);
+    assert_eq!(baseline.max_abs_diff(&fresh), 0.0, "fresh pool changed results");
+
+    // resize down, up, and back to default — results invariant throughout
+    for size in [2, 1, 9, 0] {
+        pool::set_pool_size(size);
+        assert_eq!(pool::parallel_map(&items, |&x| x * x), want, "pool size {size}");
+        let resized = BatchedAttention::new().run(&skein, &q, &k, &v, None, 3);
+        assert_eq!(
+            baseline.max_abs_diff(&resized),
+            0.0,
+            "pool size {size} changed engine results"
+        );
+    }
+    assert_eq!(pool::pool_size(), pool::worker_count(), "0 restores the default");
+
+    // shutdown while idle is a no-op for correctness; repeated shutdown too
+    pool::shutdown_pool();
+    pool::shutdown_pool();
+    assert_eq!(pool::parallel_map(&items, |&x| x * x), want);
+}
+
+/// Zero-copy aliasing contract: the engine must produce bitwise-identical
+/// output whether the request tensors own their storage or are
+/// slab-backed `Arc<[f32]>` views of client memory — including when Q, K,
+/// and V all alias one slab — and must leave client memory untouched.
+#[test]
+fn owned_and_slab_request_paths_are_bitwise_identical() {
+    let spec = HeadSpec::new(3, 2, 40, 8);
+    let mk = |salt: u64| {
+        let mut t = spec.zeros();
+        Rng::new(500 + salt).fill_normal(t.data_mut());
+        t
+    };
+    let (q, k, v) = (mk(0), mk(1), mk(2));
+    let to_slabs = |t: &BatchTensor| -> (Vec<Arc<[f32]>>, BatchTensor) {
+        let slabs: Vec<Arc<[f32]>> =
+            (0..spec.batch).map(|b| Arc::from(t.sequence(b).to_vec())).collect();
+        let view = BatchTensor::from_slabs(spec.heads, spec.seq, spec.head_dim, slabs.clone());
+        (slabs, view)
+    };
+    let (q_slabs, qs) = to_slabs(&q);
+    let (_, ks) = to_slabs(&k);
+    let (_, vs) = to_slabs(&v);
+
+    for (name, method) in [
+        ("standard", &Standard as &dyn skeinformer::attention::AttentionMethod),
+        ("skeinformer", &Skeinformer::new(12)),
+    ] {
+        let owned = BatchedAttention::new().run(method, &q, &k, &v, None, 21);
+        let slab = BatchedAttention::new().run(method, &qs, &ks, &vs, None, 21);
+        assert_eq!(owned.max_abs_diff(&slab), 0.0, "{name}: slab path diverged");
+        assert_eq!(owned, slab, "{name}: element-wise equality across storage modes");
+    }
+
+    // self-aliasing: q = k = v reading one slab three times
+    let self_owned = BatchedAttention::new().run(&Standard, &q, &q, &q, None, 4);
+    let self_slab = BatchedAttention::new().run(&Standard, &qs, &qs, &qs, None, 4);
+    assert_eq!(self_owned.max_abs_diff(&self_slab), 0.0);
+
+    // client memory is untouched by the run
+    for (b, slab) in q_slabs.iter().enumerate() {
+        assert_eq!(&slab[..], q.sequence(b), "client slab {b} mutated");
+    }
+}
+
+/// A panicking task must reach the submitting thread as a panic, after
+/// the batch drains — and the pool must keep serving afterwards, from
+/// every client thread.
+#[test]
+fn pool_survives_panicking_tasks_under_load() {
+    let items: Vec<usize> = (0..32).collect();
+    for round in 0..4 {
+        let result = std::panic::catch_unwind(|| {
+            pool::parallel_map_workers(&items, 8, |&x| {
+                if x == 13 {
+                    panic!("injected failure, round {round}");
+                }
+                x + round
+            })
+        });
+        assert!(result.is_err(), "round {round}: panic must propagate");
+        let out = pool::parallel_map_workers(&items, 8, |&x| x + round);
+        assert_eq!(out[31], 31 + round, "round {round}: pool unusable after panic");
+    }
+}
