@@ -3,7 +3,7 @@
 # `make artifacts` needs a python environment with jax installed (the L2
 # lowering path); everything else is pure rust and works offline.
 
-.PHONY: artifacts build test bench fmt clippy doc
+.PHONY: artifacts build test test-doc bench stream-bench fmt clippy doc
 
 artifacts:
 	python3 python/compile/aot.py --out artifacts
@@ -14,8 +14,16 @@ build:
 test:
 	cargo test -q
 
+# rustdoc runnable examples (the v2 attention API docs are executable)
+test-doc:
+	cargo test --doc
+
 bench:
 	cargo bench --bench batched_throughput
+
+# streaming decode probe: session append-one-token vs full recompute
+stream-bench:
+	cargo bench --bench streaming_decode
 
 fmt:
 	cargo fmt --check

@@ -1,0 +1,124 @@
+//! Streaming-decode probe: per-token cost of append-one-token decode
+//! through an [`AttentionSession`] vs recomputing the whole prefix from
+//! scratch each token — the workload the Attention API v2 sessions exist
+//! for.
+//!
+//! For each method × context length `n ∈ {512, 2048}`:
+//!
+//! * **session** — prefill a session with `n` tokens, then measure the
+//!   steady-state decode step: one `append` + one 1-row `query`
+//!   (re-pilot stride 1, the most conservative setting).
+//! * **recompute** — measure one full `compute_into` over the `n×p`
+//!   state: the per-token cost of the no-session serving loop, which
+//!   re-runs the method on the whole prefix for every generated token.
+//!
+//! Reported as tokens/s; emits `reports/streaming_decode.csv`.  The gap
+//! is the point: exact-incremental sessions (vmean O(p), linformer
+//! O(d·p), standard O(n·p)) beat the O(n·d)–O(n²) recompute by orders of
+//! magnitude, while recompute-backed sessions (skeinformer) track the
+//! method's own linear cost.
+//!
+//! `--full` extends to n = 4096.
+
+use skeinformer::attention::{self, AttnInputs, AttnScratch, SessionSpec};
+use skeinformer::bench_util::{ascii_table, bench, write_csv, BenchConfig};
+use skeinformer::rng::Rng;
+use skeinformer::tensor::Matrix;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let seqs: &[usize] = if full { &[512, 2048, 4096] } else { &[512, 2048] };
+    let head_dim = 32;
+    let d = 64;
+    let methods = ["standard", "vmean", "linformer", "skeinformer"];
+    let decode_steps = 32u32;
+
+    println!(
+        "streaming decode: session append+query vs full recompute per token \
+         (head_dim={head_dim}, d={d}{})",
+        if full { ", --full" } else { "" }
+    );
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for &n in seqs {
+        // token stream + decode queries
+        let mut rng = Rng::new(7);
+        let mk = |rng: &mut Rng, rows: usize| {
+            let mut m = Matrix::zeros(rows, head_dim);
+            rng.fill_normal(m.data_mut());
+            m
+        };
+        let k = mk(&mut rng, n + decode_steps as usize + 8);
+        let v = mk(&mut rng, n + decode_steps as usize + 8);
+        let q1 = mk(&mut rng, 1);
+
+        for name in methods {
+            let method = attention::by_name(name, d).expect("registry method");
+
+            // --- session path: steady-state decode step at context ~n ---
+            let mut session =
+                method.begin_session(SessionSpec::new(head_dim).with_seed(1).with_capacity_hint(n));
+            for i in 0..n {
+                session.append(k.row(i), v.row(i));
+            }
+            let mut scratch = AttnScratch::new();
+            let mut out = Matrix::zeros(1, head_dim);
+            let mut t = n;
+            let cfg = BenchConfig { warmup_iters: 2, measure_iters: decode_steps, max_seconds: 30.0 };
+            let r = bench(&format!("{name} session n{n}"), cfg, || {
+                session.append(k.row(t), v.row(t));
+                t += 1;
+                session.query_into(&q1, &mut out, &mut scratch);
+                std::hint::black_box(out.get(0, 0));
+            });
+            let tok_s_session = 1e3 / r.mean_ms;
+            println!("{}  ->  {tok_s_session:>12.1} tok/s", r.report_line());
+
+            // --- recompute path: full prefix recompute per token ---
+            let kp = k.gather_rows(&(0..n).collect::<Vec<_>>());
+            let vp = v.gather_rows(&(0..n).collect::<Vec<_>>());
+            let inputs = AttnInputs::new(&q1, &kp, &vp).with_seed(1);
+            let mut out_full = Matrix::zeros(1, head_dim);
+            let cfg = BenchConfig {
+                warmup_iters: 1,
+                measure_iters: if n >= 2048 { 5 } else { 10 },
+                max_seconds: 30.0,
+            };
+            let r2 = bench(&format!("{name} recompute n{n}"), cfg, || {
+                method.compute_into(&inputs, &mut out_full, &mut scratch);
+                std::hint::black_box(out_full.get(0, 0));
+            });
+            let tok_s_recompute = 1e3 / r2.mean_ms;
+            println!("{}  ->  {tok_s_recompute:>12.1} tok/s", r2.report_line());
+
+            rows.push(vec![
+                name.to_string(),
+                format!("{n}"),
+                format!("{:.4}", r.mean_ms),
+                format!("{tok_s_session:.1}"),
+                format!("{:.4}", r2.mean_ms),
+                format!("{tok_s_recompute:.1}"),
+                format!("{:.1}x", tok_s_session / tok_s_recompute),
+            ]);
+            csv.push(format!(
+                "{name},{n},{:.5},{tok_s_session:.2},{:.5},{tok_s_recompute:.2}",
+                r.mean_ms, r2.mean_ms
+            ));
+        }
+    }
+
+    println!(
+        "\n=== Streaming decode (per-token) ===\n{}",
+        ascii_table(
+            &["Model", "n", "session ms/tok", "session tok/s", "recompute ms/tok", "recompute tok/s", "speedup"],
+            &rows
+        )
+    );
+    write_csv(
+        "reports/streaming_decode.csv",
+        "method,n,session_ms_per_tok,session_tok_s,recompute_ms_per_tok,recompute_tok_s",
+        &csv,
+    )
+    .expect("csv");
+    println!("-> reports/streaming_decode.csv");
+}

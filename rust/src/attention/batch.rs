@@ -15,6 +15,17 @@
 //! `(batch, seq)` [`Matrix`] whose row `b` is the 0/1 key mask shared by
 //! all heads of sequence `b`.
 //!
+//! **Zero-allocation hot loop.** Heads execute through the v2
+//! [`AttentionMethod::compute_into`] API: per-head Q/K/V extraction, the
+//! per-head output staging buffer, and every method temporary
+//! ([`AttnScratch`]) come from the worker pool's thread-local recycled
+//! stash, and each head's result is written directly into the output
+//! tensor's slice ([`BatchedAttention::run_into`]).  After the first
+//! batch warms each worker, the per-head loop performs no
+//! `seq × head_dim`-scaled heap allocation; what remains is O(B·H)
+//! dispatch bookkeeping per *call* (task boxes, the grid list) and the
+//! O(d) keyed vector inside the Gumbel sampler for sampling methods.
+//!
 //! **RNG-stream derivation rule.** Head `(b, h)` draws its randomness from
 //! `Rng::new(seed ^ head_index)` with `head_index = b * heads + h`.  The
 //! stream depends only on the grid position and the caller's seed — never
@@ -43,9 +54,8 @@
 //! assert_eq!(out.shape(), (2, 4, 32, 8));
 //! ```
 
-use super::AttentionMethod;
+use super::{AttentionMethod, AttnInputs, AttnScratch};
 use crate::pool;
-use crate::rng::Rng;
 use crate::tensor::{with_default_plan, BatchTensor, Matrix, MatmulPlan};
 
 /// The shape of a batched multi-head workload.
@@ -140,9 +150,34 @@ impl BatchedAttention {
         masks: Option<&Matrix>,
         seed: u64,
     ) -> BatchTensor {
+        let mut out = HeadSpec::of(q).zeros();
+        self.run_into(method, q, k, v, masks, seed, &mut out);
+        out
+    }
+
+    /// [`run`](Self::run) into a caller-provided output tensor (owned
+    /// storage, same shape as `q`; fully overwritten) — the
+    /// zero-allocation serving path.  Each worker computes its heads
+    /// through [`AttentionMethod::compute_into`] with per-worker recycled
+    /// scratch and writes the result directly into `out`'s head slice, so
+    /// after warmup the B×H hot loop performs no heap allocation (the
+    /// only steady-state allocations left are the per-call dispatch
+    /// bookkeeping — O(B·H) task records, not O(elements) buffers).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_into(
+        &self,
+        method: &dyn AttentionMethod,
+        q: &BatchTensor,
+        k: &BatchTensor,
+        v: &BatchTensor,
+        masks: Option<&Matrix>,
+        seed: u64,
+        out: &mut BatchTensor,
+    ) {
         let spec = HeadSpec::of(q);
         assert!(spec.matches(k), "Q/K batch shapes differ: {:?} vs {:?}", q, k);
         assert!(spec.matches(v), "Q/V batch shapes differ: {:?} vs {:?}", q, v);
+        assert!(spec.matches(out), "output shape differs: {:?} vs {:?}", q, out);
         if let Some(m) = masks {
             assert_eq!(
                 m.shape(),
@@ -164,8 +199,16 @@ impl BatchedAttention {
             MatmulPlan::Auto
         };
         let head_elems = spec.seq * spec.head_dim;
-        let outs = pool::parallel_map_workers(&grid, workers, |&(b, h)| {
-            let mut rng = Rng::new(seed ^ spec.head_index(b, h));
+        // Workers write disjoint head slices of `out` in place.  SAFETY:
+        // head (b, h) owns exactly out[head_index * head_elems ..][..head_elems]
+        // (owned storage is one contiguous [b][h][n][d] buffer), each grid
+        // entry appears once, and parallel_map_workers does not return
+        // until every task completed — so writes never alias and never
+        // outlive the borrow.
+        let out_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        pool::parallel_map_workers(&grid, workers, |&(b, h)| {
+            let out_ptr = out_ptr; // force whole-struct capture
+            let head_seed = seed ^ spec.head_index(b, h);
             // Head extraction copies into per-worker scratch reused across
             // heads (and across engine calls, since the pool threads are
             // persistent) — no steady-state allocation.
@@ -178,26 +221,41 @@ impl BatchedAttention {
             let km = extract(k);
             let vm = extract(v);
             let mask_row = masks.map(|m| m.row(b));
-            let out =
-                with_default_plan(inner_plan, || method.compute(&qm, &km, &vm, mask_row, &mut rng));
+            let mut head_out = {
+                let mut buf = pool::take_scratch(head_elems);
+                buf.resize(head_elems, 0.0);
+                Matrix::from_vec(spec.seq, spec.head_dim, buf)
+            };
+            let mut scratch = AttnScratch::new();
+            let inputs = AttnInputs::new(&qm, &km, &vm).with_mask(mask_row).with_seed(head_seed);
+            with_default_plan(inner_plan, || {
+                method.compute_into(&inputs, &mut head_out, &mut scratch)
+            });
+            let offset = (b * spec.heads + h) * head_elems;
+            unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.0.add(offset), head_elems)
+                    .copy_from_slice(head_out.data());
+            }
+            pool::recycle_scratch(head_out.into_vec());
             pool::recycle_scratch(qm.into_vec());
             pool::recycle_scratch(km.into_vec());
             pool::recycle_scratch(vm.into_vec());
-            out
         });
-
-        let mut out = spec.zeros();
-        for (&(b, h), m) in grid.iter().zip(&outs) {
-            out.set_head(b, h, m);
-        }
-        out
     }
 }
+
+/// Raw-pointer wrapper for the disjoint head-slice writes in
+/// [`BatchedAttention::run_into`]; see the SAFETY note there.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::attention::{Skeinformer, Standard};
+    use crate::rng::Rng;
 
     fn toy_qkv(spec: HeadSpec) -> (BatchTensor, BatchTensor, BatchTensor) {
         let mk = |salt: usize| {
@@ -318,6 +376,22 @@ mod tests {
         let owned = BatchedAttention::new().run(&skein, &q, &k, &v, None, 9);
         let slab = BatchedAttention::new().run(&skein, &qs, &ks, &vs, None, 9);
         assert_eq!(owned.max_abs_diff(&slab), 0.0);
+    }
+
+    #[test]
+    fn run_into_overwrites_dirty_output_bitwise() {
+        let spec = HeadSpec::new(2, 3, 16, 4);
+        let (q, k, v) = toy_qkv(spec);
+        let skein = Skeinformer::new(8);
+        let engine = BatchedAttention::new();
+        let want = engine.run(&skein, &q, &k, &v, None, 3);
+        let mut out = spec.zeros();
+        out.data_mut().iter_mut().for_each(|x| *x = f32::NAN);
+        engine.run_into(&skein, &q, &k, &v, None, 3, &mut out);
+        assert_eq!(out.max_abs_diff(&want), 0.0);
+        // reusing the same output tensor again must also be clean
+        engine.run_into(&skein, &q, &k, &v, None, 3, &mut out);
+        assert_eq!(out.max_abs_diff(&want), 0.0);
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //! dense-masked jnp form used in the small-n training graph) so the E8
 //! scaling bench reflects its ~`5·n·d` FLOPs (Table 5's `5ndp`).
 
-use super::{check_inputs, masking, AttentionMethod};
+use super::{
+    check_inputs, AttentionMethod, AttentionSession, AttnInputs, AttnScratch, RecomputeSession,
+    SessionSpec,
+};
 use crate::rng::Rng;
 use crate::tensor::Matrix;
 
@@ -26,24 +29,23 @@ impl Default for BigBird {
 }
 
 impl BigBird {
-    /// The set of key-block indices a query block attends to.
-    fn attended_blocks(&self, qb: usize, nb: usize, rng: &mut Rng) -> Vec<usize> {
-        let mut set = std::collections::BTreeSet::new();
+    /// The set of key-block indices a query block attends to, written
+    /// into a reused buffer (cleared first) — sorted and deduplicated,
+    /// exactly the order the old `BTreeSet` form produced.
+    fn attended_blocks_into(&self, qb: usize, nb: usize, rng: &mut Rng, out: &mut Vec<usize>) {
+        out.clear();
         // window
         let half = self.window / 2;
         for off in 0..=half {
-            set.insert(qb.saturating_sub(off));
-            set.insert((qb + off).min(nb - 1));
+            out.push(qb.saturating_sub(off));
+            out.push((qb + off).min(nb - 1));
         }
         // global columns
-        for g in 0..self.n_global.min(nb) {
-            set.insert(g);
-        }
+        out.extend(0..self.n_global.min(nb));
         // random
-        for _ in 0..self.n_random {
-            set.insert(rng.below(nb));
-        }
-        set.into_iter().collect()
+        out.extend((0..self.n_random).map(|_| rng.below(nb)));
+        out.sort_unstable();
+        out.dedup();
     }
 }
 
@@ -52,55 +54,56 @@ impl AttentionMethod for BigBird {
         "bigbird"
     }
 
-    fn compute(
+    fn compute_rng_into(
         &self,
-        q: &Matrix,
-        k: &Matrix,
-        v: &Matrix,
-        mask: Option<&[f32]>,
+        inputs: &AttnInputs<'_>,
         rng: &mut Rng,
-    ) -> Matrix {
-        check_inputs(q, k, v, mask);
+        out: &mut Matrix,
+        scratch: &mut AttnScratch,
+    ) {
+        let (q, k, v) = (inputs.q, inputs.k, inputs.v);
+        let mask = inputs.mask;
+        check_inputs(self.name(), self.supports_cross_shape(), q, k, v, mask);
         let n = q.rows();
         let p = q.cols();
         let block = self.block.min(n).max(1);
         let nb = n.div_ceil(block);
         let scale = 1.0 / (p as f32).sqrt();
-        let mut out = Matrix::zeros(n, v.cols());
+        out.data_mut().iter_mut().for_each(|x| *x = 0.0);
 
-        // global *rows* (first n_global blocks) attend to everything
-        let global_rows = (self.n_global * block).min(n);
+        // per-block key/block lists and per-row score strip, reused
+        // across the whole grid instead of re-allocated per row/block
+        // (scratch audit)
+        let mut keys = scratch.idx_buf();
+        let mut blocks = scratch.idx_buf();
+        let mut scores = scratch.buf(0);
 
         for qb in 0..nb {
             let rows = qb * block..((qb + 1) * block).min(n);
-            let keys: Vec<usize> = if qb < self.n_global {
-                (0..n).collect()
+            keys.clear();
+            if qb < self.n_global {
+                // global *rows* (first n_global blocks) attend to everything
+                keys.extend(0..n);
             } else {
-                let blocks = self.attended_blocks(qb, nb, rng);
-                let mut ks = Vec::with_capacity(blocks.len() * block);
-                for b in blocks {
-                    for i in b * block..((b + 1) * block).min(n) {
-                        ks.push(i);
-                    }
-                }
                 // key side of global attention: global blocks already
-                // included via attended_blocks (n_global blocks inserted).
-                ks
-            };
+                // included via attended_blocks_into (n_global blocks inserted).
+                self.attended_blocks_into(qb, nb, rng, &mut blocks);
+                for &b in blocks.iter() {
+                    keys.extend(b * block..((b + 1) * block).min(n));
+                }
+            }
             for i in rows {
                 let qi = q.row(i);
                 // stable softmax over the gathered keys
-                let mut scores: Vec<f32> = keys
-                    .iter()
-                    .map(|&j| {
-                        let masked = mask.is_some_and(|m| m[j] <= 0.0);
-                        if masked {
-                            f32::NEG_INFINITY
-                        } else {
-                            crate::tensor::dot(qi, k.row(j)) * scale
-                        }
-                    })
-                    .collect();
+                scores.clear();
+                scores.extend(keys.iter().map(|&j| {
+                    let masked = mask.is_some_and(|m| m[j] <= 0.0);
+                    if masked {
+                        f32::NEG_INFINITY
+                    } else {
+                        crate::tensor::dot(qi, k.row(j)) * scale
+                    }
+                }));
                 let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
                 let mut sum = 0.0f32;
                 for s in scores.iter_mut() {
@@ -117,9 +120,22 @@ impl AttentionMethod for BigBird {
                 }
             }
         }
-        let _ = global_rows;
-        let _ = masking::valid_count(mask, n);
-        out
+        scratch.recycle_buf(scores);
+        scratch.recycle_idx(blocks);
+        scratch.recycle_idx(keys);
+    }
+
+    fn supports_cross_shape(&self) -> bool {
+        // the window/global block pattern ties query position i to key
+        // position i — a detached m-row query has no position
+        false
+    }
+
+    fn begin_session(&self, spec: SessionSpec) -> Box<dyn AttentionSession> {
+        // square-only: session queries must supply all n query rows (the
+        // block pattern needs every position); random blocks re-draw on
+        // the epoch stride
+        RecomputeSession::boxed(*self, spec)
     }
 }
 

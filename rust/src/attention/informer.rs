@@ -8,9 +8,12 @@
 //! `with_padding_mask()` is the paper's §4.4 extension that makes Informer
 //! usable on padded NLP batches (Table 1's "Informer w/ padding mask").
 
-use super::{check_inputs, masking, AttentionMethod};
+use super::{
+    check_inputs, masking, AttentionMethod, AttentionSession, AttnInputs, AttnScratch,
+    RecomputeSession, SessionSpec,
+};
 use crate::rng::Rng;
-use crate::tensor::{matmul, matmul_nt, scale_inplace, softmax_rows, Matrix};
+use crate::tensor::{matmul_into, matmul_nt_into, scale_inplace, softmax_rows, Matrix};
 
 #[derive(Clone, Copy, Debug)]
 pub struct Informer {
@@ -31,35 +34,50 @@ impl Informer {
     }
 
     /// Estimate the sparsity measurement for every query from a sampled
-    /// key subset; returns (scores, sampled key indices).
-    fn sparsity_scores(
+    /// key subset, into `out` (length `q.rows()`, fully overwritten).
+    /// Query rows that are themselves padded (square case only — in
+    /// cross shape queries carry no mask) score `-inf`.
+    fn sparsity_scores_into(
         &self,
         q: &Matrix,
         k: &Matrix,
         mask: Option<&[f32]>,
         rng: &mut Rng,
-    ) -> Vec<f32> {
-        let n = q.rows();
+        out: &mut [f32],
+        scratch: &mut AttnScratch,
+    ) {
+        let m = q.rows();
+        let n = k.rows();
         let p = q.cols() as f32;
         let s = self.u.min(n);
-        let valid = masking::valid_indices(mask, n);
-        let samp: Vec<usize> = (0..s).map(|_| valid[rng.below(valid.len())]).collect();
-        let k_samp = k.gather_rows(&samp);
-        let mut scores = matmul_nt(q, &k_samp); // (n, s)
+        let mut valid = scratch.idx_buf();
+        masking::valid_indices_into(mask, n, &mut valid);
+        let mut samp = scratch.idx_buf();
+        samp.extend((0..s).map(|_| valid[rng.below(valid.len())]));
+        scratch.recycle_idx(valid);
+        let mut k_samp = scratch.matrix(s, k.cols());
+        k.gather_rows_into(&samp, &mut k_samp);
+        scratch.recycle_idx(samp);
+        let mut scores = scratch.matrix(m, s); // (m, s)
+        matmul_nt_into(q, &k_samp, &mut scores);
+        scratch.recycle(k_samp);
         scale_inplace(&mut scores, 1.0 / p.sqrt());
-        (0..n)
-            .map(|i| {
-                if let Some(m) = mask {
-                    if m[i] <= 0.0 {
-                        return f32::NEG_INFINITY;
-                    }
+        // a query row is maskable only in the square case, where query
+        // position i is key position i
+        let query_mask = if m == n { mask } else { None };
+        for (i, o) in out.iter_mut().enumerate() {
+            if let Some(mm) = query_mask {
+                if mm[i] <= 0.0 {
+                    *o = f32::NEG_INFINITY;
+                    continue;
                 }
-                let row = scores.row(i);
-                let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-                let mean = row.iter().sum::<f32>() / row.len() as f32;
-                max - mean
-            })
-            .collect()
+            }
+            let row = scores.row(i);
+            let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mean = row.iter().sum::<f32>() / row.len() as f32;
+            *o = max - mean;
+        }
+        scratch.recycle(scores);
     }
 }
 
@@ -72,45 +90,70 @@ impl AttentionMethod for Informer {
         }
     }
 
-    fn compute(
+    fn compute_rng_into(
         &self,
-        q: &Matrix,
-        k: &Matrix,
-        v: &Matrix,
-        mask: Option<&[f32]>,
+        inputs: &AttnInputs<'_>,
         rng: &mut Rng,
-    ) -> Matrix {
-        check_inputs(q, k, v, mask);
-        let n = q.rows();
+        out: &mut Matrix,
+        scratch: &mut AttnScratch,
+    ) {
+        let (q, k, v) = (inputs.q, inputs.k, inputs.v);
+        check_inputs(self.name(), self.supports_cross_shape(), q, k, v, inputs.mask);
+        let m_rows = q.rows();
+        let n = k.rows();
         let p = q.cols() as f32;
-        let u = self.u.min(n);
-        let eff_mask = if self.padding_mask { mask } else { None };
+        let u = self.u.min(m_rows);
+        let eff_mask = if self.padding_mask { inputs.mask } else { None };
 
-        let sparsity = self.sparsity_scores(q, k, eff_mask, rng);
+        let mut sparsity = scratch.buf(m_rows);
+        self.sparsity_scores_into(q, k, eff_mask, rng, &mut sparsity, scratch);
         // top-u queries by sparsity measurement
-        let mut idx: Vec<usize> = (0..n).collect();
-        idx.select_nth_unstable_by(u.saturating_sub(1).min(n - 1), |&a, &b| {
+        let mut idx = scratch.idx_buf();
+        idx.extend(0..m_rows);
+        idx.select_nth_unstable_by(u.saturating_sub(1).min(m_rows - 1), |&a, &b| {
             sparsity[b].partial_cmp(&sparsity[a]).unwrap_or(std::cmp::Ordering::Equal)
         });
-        let top: Vec<usize> = idx[..u].to_vec();
+        idx.truncate(u);
+        scratch.recycle_buf(sparsity);
 
         // exact attention for the top queries
-        let q_top = q.gather_rows(&top);
-        let mut scores = matmul_nt(&q_top, k); // (u, n)
+        let mut q_top = scratch.matrix(u, q.cols());
+        q.gather_rows_into(&idx, &mut q_top);
+        let mut scores = scratch.matrix(u, n); // (u, n)
+        matmul_nt_into(&q_top, k, &mut scores);
+        scratch.recycle(q_top);
         scale_inplace(&mut scores, 1.0 / p.sqrt());
         masking::mask_score_columns(&mut scores, eff_mask);
         softmax_rows(&mut scores);
-        let exact = matmul(&scores, v); // (u, p)
+        let mut exact = scratch.matrix(u, v.cols()); // (u, p)
+        matmul_into(&scores, v, &mut exact);
+        scratch.recycle(scores);
 
         // remaining rows: mean of V (Informer's non-causal row fill)
         let m = masking::valid_count(eff_mask, n);
-        let sums = masking::masked_col_sums(v, eff_mask);
-        let mean: Vec<f32> = sums.iter().map(|s| s / m).collect();
-        let mut out = Matrix::from_fn(n, v.cols(), |_, j| mean[j]);
-        for (row, &i) in top.iter().enumerate() {
+        let mut sums = scratch.buf(v.cols());
+        masking::masked_col_sums_into(v, eff_mask, &mut sums);
+        for i in 0..m_rows {
+            for (o, &s) in out.row_mut(i).iter_mut().zip(&sums) {
+                *o = s / m;
+            }
+        }
+        scratch.recycle_buf(sums);
+        for (row, &i) in idx.iter().enumerate() {
             out.set_row(i, exact.row(row));
         }
-        out
+        scratch.recycle(exact);
+        scratch.recycle_idx(idx);
+    }
+
+    fn supports_cross_shape(&self) -> bool {
+        true
+    }
+
+    fn begin_session(&self, spec: SessionSpec) -> Box<dyn AttentionSession> {
+        // ProbSparse re-selects its top queries per query batch, so the
+        // session recomputes over the full state with the epoch seed
+        RecomputeSession::boxed(*self, spec)
     }
 }
 

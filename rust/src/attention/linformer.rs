@@ -8,16 +8,22 @@
 //!   (Table 1's "w/ unreduced JLT"): compute the full attention, then
 //!   sketch V.  O(n²) — it exists to *measure* what the reduction costs.
 
-use super::{check_inputs, masking, AttentionMethod};
+use super::{
+    check_inputs, masking, AttentionMethod, AttentionSession, AttnInputs, AttnScratch,
+    LinformerSession, RecomputeSession, SessionSpec,
+};
 use crate::rng::Rng;
-use crate::tensor::{matmul, matmul_nt, matmul_tn, scale_inplace, softmax_rows, Matrix};
+use crate::tensor::{
+    matmul_into, matmul_nt_into, matmul_tn_into, scale_inplace, softmax_rows, Matrix,
+};
 
 /// Draw an (n, d) Gaussian sketch `S` with `E[S Sᵀ] = I` (entries
-/// N(0, 1/d)); masked rows are zeroed so padding carries no mass.
-fn gaussian_sketch(n: usize, d: usize, mask: Option<&[f32]>, rng: &mut Rng) -> Matrix {
+/// N(0, 1/d)) into a zero-filled scratch matrix; masked rows stay zero so
+/// padding carries no mass.
+fn gaussian_sketch_into(s: &mut Matrix, mask: Option<&[f32]>, rng: &mut Rng) {
+    let d = s.cols();
     let std = 1.0 / (d as f32).sqrt();
-    let mut s = Matrix::zeros(n, d);
-    for i in 0..n {
+    for i in 0..s.rows() {
         let keep = mask.map_or(1.0, |m| m[i]);
         if keep > 0.0 {
             for x in s.row_mut(i) {
@@ -25,6 +31,12 @@ fn gaussian_sketch(n: usize, d: usize, mask: Option<&[f32]>, rng: &mut Rng) -> M
             }
         }
     }
+}
+
+#[cfg_attr(not(test), allow(dead_code))]
+fn gaussian_sketch(n: usize, d: usize, mask: Option<&[f32]>, rng: &mut Rng) -> Matrix {
+    let mut s = Matrix::zeros(n, d);
+    gaussian_sketch_into(&mut s, mask, rng);
     s
 }
 
@@ -44,23 +56,40 @@ impl AttentionMethod for Linformer {
         "linformer"
     }
 
-    fn compute(
+    fn compute_rng_into(
         &self,
-        q: &Matrix,
-        k: &Matrix,
-        v: &Matrix,
-        mask: Option<&[f32]>,
+        inputs: &AttnInputs<'_>,
         rng: &mut Rng,
-    ) -> Matrix {
-        check_inputs(q, k, v, mask);
+        out: &mut Matrix,
+        scratch: &mut AttnScratch,
+    ) {
+        let (q, k, v) = (inputs.q, inputs.k, inputs.v);
+        check_inputs(self.name(), self.supports_cross_shape(), q, k, v, inputs.mask);
         let p = q.cols() as f32;
-        let s = gaussian_sketch(k.rows(), self.d, mask, rng);
-        let k_proj = matmul_tn(&s, k); // (d, p)
-        let v_proj = matmul_tn(&s, v); // (d, p)
-        let mut scores = matmul_nt(q, &k_proj); // (n, d)
+        let mut s = scratch.matrix(k.rows(), self.d);
+        gaussian_sketch_into(&mut s, inputs.mask, rng);
+        let mut k_proj = scratch.matrix(self.d, k.cols());
+        let mut v_proj = scratch.matrix(self.d, v.cols());
+        matmul_tn_into(&s, k, &mut k_proj); // (d, p)
+        matmul_tn_into(&s, v, &mut v_proj); // (d, p)
+        scratch.recycle(s);
+        let mut scores = scratch.matrix(q.rows(), self.d); // (m, d)
+        matmul_nt_into(q, &k_proj, &mut scores);
         scale_inplace(&mut scores, 1.0 / p.sqrt());
         softmax_rows(&mut scores);
-        matmul(&scores, &v_proj)
+        matmul_into(&scores, &v_proj, out);
+        scratch.recycle(scores);
+        scratch.recycle(v_proj);
+        scratch.recycle(k_proj);
+    }
+
+    fn supports_cross_shape(&self) -> bool {
+        true
+    }
+
+    fn begin_session(&self, spec: SessionSpec) -> Box<dyn AttentionSession> {
+        // exact incremental projections: O(d·p) per appended token
+        Box::new(LinformerSession::new(self.d, spec))
     }
 }
 
@@ -80,25 +109,42 @@ impl AttentionMethod for LinformerUnreducedJlt {
         "linformer_jlt"
     }
 
-    fn compute(
+    fn compute_rng_into(
         &self,
-        q: &Matrix,
-        k: &Matrix,
-        v: &Matrix,
-        mask: Option<&[f32]>,
+        inputs: &AttnInputs<'_>,
         rng: &mut Rng,
-    ) -> Matrix {
-        check_inputs(q, k, v, mask);
+        out: &mut Matrix,
+        scratch: &mut AttnScratch,
+    ) {
+        let (q, k, v) = (inputs.q, inputs.k, inputs.v);
+        check_inputs(self.name(), self.supports_cross_shape(), q, k, v, inputs.mask);
         let p = q.cols() as f32;
         // full attention score matrix B = D⁻¹A (this form is O(n²) by design)
-        let mut b = matmul_nt(q, k);
+        let mut b = scratch.matrix(q.rows(), k.rows());
+        matmul_nt_into(q, k, &mut b);
         scale_inplace(&mut b, 1.0 / p.sqrt());
-        masking::mask_score_columns(&mut b, mask);
+        masking::mask_score_columns(&mut b, inputs.mask);
         softmax_rows(&mut b);
-        let s = gaussian_sketch(k.rows(), self.d, mask, rng);
-        let bs = matmul(&b, &s); // (n, d)
-        let sv = matmul_tn(&s, v); // (d, p)
-        matmul(&bs, &sv)
+        let mut s = scratch.matrix(k.rows(), self.d);
+        gaussian_sketch_into(&mut s, inputs.mask, rng);
+        let mut bs = scratch.matrix(q.rows(), self.d); // (m, d)
+        matmul_into(&b, &s, &mut bs);
+        scratch.recycle(b);
+        let mut sv = scratch.matrix(self.d, v.cols()); // (d, p)
+        matmul_tn_into(&s, v, &mut sv);
+        scratch.recycle(s);
+        matmul_into(&bs, &sv, out);
+        scratch.recycle(sv);
+        scratch.recycle(bs);
+    }
+
+    fn supports_cross_shape(&self) -> bool {
+        true
+    }
+
+    fn begin_session(&self, spec: SessionSpec) -> Box<dyn AttentionSession> {
+        // O(n²) by design, so the session recomputes with the epoch seed
+        RecomputeSession::boxed(*self, spec)
     }
 }
 
@@ -106,7 +152,7 @@ impl AttentionMethod for LinformerUnreducedJlt {
 mod tests {
     use super::*;
     use crate::attention::Standard;
-    use crate::tensor::spectral_norm_diff;
+    use crate::tensor::{matmul, spectral_norm_diff};
 
     fn qkv(n: usize, p: usize, seed: u64, scale: f32) -> (Matrix, Matrix, Matrix) {
         let mut rng = Rng::new(seed);

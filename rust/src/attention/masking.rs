@@ -17,9 +17,18 @@ pub fn valid_count(mask: Option<&[f32]>, n: usize) -> f32 {
 
 /// Indices of valid positions (all of `0..n` when unmasked).
 pub fn valid_indices(mask: Option<&[f32]>, n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    valid_indices_into(mask, n, &mut out);
+    out
+}
+
+/// [`valid_indices`] into a reused buffer (cleared first) — the
+/// scratch-friendly variant the v2 hot paths use.
+pub fn valid_indices_into(mask: Option<&[f32]>, n: usize, out: &mut Vec<usize>) {
+    out.clear();
     match mask {
-        None => (0..n).collect(),
-        Some(m) => (0..n).filter(|&i| m[i] > 0.0).collect(),
+        None => out.extend(0..n),
+        Some(m) => out.extend((0..n).filter(|&i| m[i] > 0.0)),
     }
 }
 
@@ -66,6 +75,16 @@ pub fn mask_weights(weights: &mut [f32], mask: Option<&[f32]>) {
 /// Column sums of V restricted to valid rows: `1ᵀ V` over the mask.
 pub fn masked_col_sums(v: &Matrix, mask: Option<&[f32]>) -> Vec<f32> {
     let mut out = vec![0.0f32; v.cols()];
+    masked_col_sums_into(v, mask, &mut out);
+    out
+}
+
+/// [`masked_col_sums`] into a reused buffer (fully overwritten; dirty
+/// reuse is fine) — the scratch-friendly variant.  `out` must hold
+/// exactly `v.cols()` elements.
+pub fn masked_col_sums_into(v: &Matrix, mask: Option<&[f32]>, out: &mut [f32]) {
+    assert_eq!(out.len(), v.cols(), "masked_col_sums_into length mismatch");
+    out.iter_mut().for_each(|x| *x = 0.0);
     for i in 0..v.rows() {
         let keep = mask.map_or(1.0, |m| m[i]);
         if keep > 0.0 {
@@ -74,7 +93,6 @@ pub fn masked_col_sums(v: &Matrix, mask: Option<&[f32]>) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -116,5 +134,18 @@ mod tests {
         let mask = [1.0, 0.0, 1.0];
         assert_eq!(masked_col_sums(&v, Some(&mask)), vec![101.0, 202.0]);
         assert_eq!(masked_col_sums(&v, None), vec![111.0, 222.0]);
+    }
+
+    #[test]
+    fn into_variants_reset_reused_buffers() {
+        let v = Matrix::from_rows(&[vec![1.0, 2.0], vec![10.0, 20.0]]);
+        let mut sums = vec![9.0f32, 9.0]; // dirty reuse
+        masked_col_sums_into(&v, None, &mut sums);
+        assert_eq!(sums, vec![11.0, 22.0]);
+
+        let mask = [1.0, 0.0, 1.0, 1.0];
+        let mut idx = vec![7usize; 3]; // dirty reuse
+        valid_indices_into(Some(&mask), 4, &mut idx);
+        assert_eq!(idx, vec![0, 2, 3]);
     }
 }

@@ -1,19 +1,33 @@
 //! Pure-rust implementations of every attention method in the paper.
 //!
 //! These power the Figure-1 approximation study, the scaling benches
-//! (E8), the property suites, and the serving example's CPU fallback.
-//! Each file implements one method; all share the [`AttentionMethod`]
-//! interface:
+//! (E8), the property suites, and the serving stack's CPU engine.  Each
+//! file implements one method; all share the [`AttentionMethod`]
+//! interface, which has two entry points:
+//!
+//! * [`compute_into`](AttentionMethod::compute_into) — the v2
+//!   zero-allocation path: borrowed inputs ([`AttnInputs`]), a
+//!   caller-provided output, and recycled temporaries ([`AttnScratch`]).
+//! * [`compute`](AttentionMethod::compute) — the legacy allocating call,
+//!   kept as a thin wrapper so existing callers migrate incrementally.
 //!
 //! ```
-//! use skeinformer::attention::{AttentionMethod, Standard};
+//! use skeinformer::attention::{AttentionMethod, AttnInputs, AttnScratch, Standard};
 //! use skeinformer::tensor::Matrix;
 //! use skeinformer::rng::Rng;
 //!
 //! let n = 64;
 //! let q = Matrix::from_fn(n, 16, |i, j| ((i + j) as f32 * 0.1).sin());
+//!
+//! // legacy allocating call
 //! let out = Standard.compute(&q, &q, &q, None, &mut Rng::new(0));
 //! assert_eq!(out.shape(), (n, 16));
+//!
+//! // v2: same bytes, no allocation — output and temporaries are reused
+//! let mut out2 = Matrix::zeros(n, 16);
+//! let mut scratch = AttnScratch::new();
+//! Standard.compute_into(&AttnInputs::new(&q, &q, &q), &mut out2, &mut scratch);
+//! assert_eq!(out.max_abs_diff(&out2), 0.0);
 //! ```
 //!
 //! Methods are registered by the same names the python layer uses
@@ -22,7 +36,9 @@
 //! The single-matrix call above is the unit of work; realistic workloads
 //! (many sequences × many heads) go through [`BatchedAttention`], which
 //! dispatches every method over a `B × H` grid of head slices with
-//! deterministic per-head RNG streams.
+//! deterministic per-head RNG streams, and autoregressive decode goes
+//! through [`AttentionSession`]s
+//! ([`begin_session`](AttentionMethod::begin_session)).
 
 mod batch;
 mod bigbird;
@@ -32,6 +48,8 @@ pub mod masking;
 mod nystromformer;
 mod performer;
 mod reformer;
+mod scratch;
+mod session;
 mod skeinformer;
 mod standard;
 mod vmean;
@@ -43,6 +61,11 @@ pub use linformer::{Linformer, LinformerUnreducedJlt};
 pub use nystromformer::Nystromformer;
 pub use performer::Performer;
 pub use reformer::Reformer;
+pub use scratch::AttnScratch;
+pub use session::{
+    session_epoch, session_seed, AttentionSession, LinformerSession, RecomputeSession,
+    SessionSpec, VMeanSession,
+};
 pub use skeinformer::{RowNorm, Skeinformer};
 pub use standard::Standard;
 pub use vmean::VMean;
@@ -50,17 +73,142 @@ pub use vmean::VMean;
 use crate::rng::Rng;
 use crate::tensor::Matrix;
 
-/// A drop-in self-attention approximation: given Q, K, V (all `n×p`) and an
-/// optional padding mask (length-n 0/1 weights), produce the `n×p` output.
+/// Borrowed inputs for one attention computation: `m×p` queries against
+/// `n×p` keys/values, an optional length-`n` 0/1 padding mask over key
+/// positions, and the seed any sampling randomness derives from.
 ///
-/// Implementations draw any sampling randomness from the supplied [`Rng`],
-/// so a fixed seed reproduces a run exactly (the discipline the AOT
-/// artifacts follow with their `seed` input).
+/// This is a plain view struct — it borrows, never owns, so building one
+/// costs nothing and the borrows pin the caller's buffers for exactly the
+/// duration of the call.  `m == n` (self-attention) is the classic shape;
+/// `m != n` (cross-shape, e.g. a one-row decode query against a long key
+/// cache) is accepted by methods whose
+/// [`supports_cross_shape`](AttentionMethod::supports_cross_shape) is true.
+///
+/// ```
+/// use skeinformer::attention::AttnInputs;
+/// use skeinformer::tensor::Matrix;
+///
+/// let q = Matrix::zeros(2, 8); // m = 2 decode queries
+/// let k = Matrix::zeros(64, 8); // n = 64 cached keys
+/// let v = Matrix::zeros(64, 8);
+/// let inputs = AttnInputs::new(&q, &k, &v).with_seed(7);
+/// assert_eq!(inputs.out_shape(), (2, 8));
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct AttnInputs<'a> {
+    /// Queries, `m × p`.
+    pub q: &'a Matrix,
+    /// Keys, `n × p`.
+    pub k: &'a Matrix,
+    /// Values, `n × p`.
+    pub v: &'a Matrix,
+    /// Optional length-`n` 0/1 weights over key positions.
+    pub mask: Option<&'a [f32]>,
+    /// Seed for sampling randomness ([`AttentionMethod::compute_into`]
+    /// draws from `Rng::new(seed)`).
+    pub seed: u64,
+}
+
+impl<'a> AttnInputs<'a> {
+    /// Unmasked inputs with seed 0.
+    pub fn new(q: &'a Matrix, k: &'a Matrix, v: &'a Matrix) -> Self {
+        Self { q, k, v, mask: None, seed: 0 }
+    }
+
+    /// Attach a padding mask (length `k.rows()`).
+    pub fn with_mask(mut self, mask: Option<&'a [f32]>) -> Self {
+        self.mask = mask;
+        self
+    }
+
+    /// Set the sampling seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// The output shape: `(q.rows(), v.cols())`.
+    pub fn out_shape(&self) -> (usize, usize) {
+        (self.q.rows(), self.v.cols())
+    }
+
+    /// True when queries and keys have the same row count (classic
+    /// self-attention shape).
+    pub fn is_square(&self) -> bool {
+        self.q.rows() == self.k.rows()
+    }
+}
+
+/// A drop-in self-attention approximation: given Q (`m×p`), K, V (both
+/// `n×p`) and an optional padding mask (length-n 0/1 weights over keys),
+/// produce the `m×p` output.
+///
+/// Implementations draw any sampling randomness from the supplied seed /
+/// [`Rng`], so a fixed seed reproduces a run exactly (the discipline the
+/// AOT artifacts follow with their `seed` input).
+///
+/// Implementors provide [`compute_rng_into`](Self::compute_rng_into) (and
+/// [`begin_session`](Self::begin_session)); the allocating
+/// [`compute`](Self::compute) and the seeded
+/// [`compute_into`](Self::compute_into) are derived wrappers, guaranteed
+/// bitwise-consistent with each other: `compute` with `Rng::new(s)`
+/// produces exactly the bytes `compute_into` produces with `seed = s`.
 pub trait AttentionMethod: Sync {
     /// Registry name (matches `python/compile/attention.py`).
     fn name(&self) -> &'static str;
 
-    /// Compute the (approximate) attention output.
+    /// Core computation: write the attention output for `inputs` into
+    /// `out` (shape [`AttnInputs::out_shape`]), drawing temporaries from
+    /// `scratch` and randomness from `rng`.  `out` is fully overwritten —
+    /// callers may pass a dirty reused buffer.
+    ///
+    /// This is the one method implementations define; prefer calling
+    /// [`compute_into`](Self::compute_into) (seeded) or
+    /// [`compute`](Self::compute) (allocating) instead.
+    fn compute_rng_into(
+        &self,
+        inputs: &AttnInputs<'_>,
+        rng: &mut Rng,
+        out: &mut Matrix,
+        scratch: &mut AttnScratch,
+    );
+
+    /// v2 entry point: compute into a caller-provided output with
+    /// recycled temporaries, seeding randomness from `inputs.seed`.
+    ///
+    /// Bitwise identical to [`compute`](Self::compute) called with
+    /// `Rng::new(inputs.seed)`.
+    ///
+    /// ```
+    /// use skeinformer::attention::{AttentionMethod, AttnInputs, AttnScratch, Skeinformer};
+    /// use skeinformer::rng::Rng;
+    /// use skeinformer::tensor::Matrix;
+    ///
+    /// let q = Matrix::from_fn(32, 8, |i, j| ((i * 3 + j) as f32 * 0.1).sin());
+    /// let method = Skeinformer::new(8);
+    /// let mut out = Matrix::zeros(32, 8);
+    /// let mut scratch = AttnScratch::new();
+    /// method.compute_into(&AttnInputs::new(&q, &q, &q).with_seed(5), &mut out, &mut scratch);
+    /// let legacy = method.compute(&q, &q, &q, None, &mut Rng::new(5));
+    /// assert_eq!(out.max_abs_diff(&legacy), 0.0);
+    /// ```
+    fn compute_into(&self, inputs: &AttnInputs<'_>, out: &mut Matrix, scratch: &mut AttnScratch) {
+        // validated here once, so every method's write loops (including
+        // the zip-based ones that would silently truncate) are safe
+        assert_eq!(
+            out.shape(),
+            inputs.out_shape(),
+            "{}: output shape mismatch (expected {:?})",
+            self.name(),
+            inputs.out_shape()
+        );
+        let mut rng = Rng::new(inputs.seed);
+        self.compute_rng_into(inputs, &mut rng, out, scratch);
+    }
+
+    /// Legacy v1 entry point: allocate and return the output.  A thin
+    /// wrapper over [`compute_rng_into`](Self::compute_rng_into), kept so
+    /// existing callers migrate incrementally.
     fn compute(
         &self,
         q: &Matrix,
@@ -68,21 +216,74 @@ pub trait AttentionMethod: Sync {
         v: &Matrix,
         mask: Option<&[f32]>,
         rng: &mut Rng,
-    ) -> Matrix;
+    ) -> Matrix {
+        let inputs = AttnInputs::new(q, k, v).with_mask(mask);
+        let mut out = Matrix::zeros(q.rows(), v.cols());
+        let mut scratch = AttnScratch::new();
+        self.compute_rng_into(&inputs, rng, &mut out, &mut scratch);
+        out
+    }
 
     /// Whether the method is exact (no approximation error).
     fn is_exact(&self) -> bool {
         false
     }
+
+    /// Whether `m×p` queries against `n×p` keys (`m != n`) are supported.
+    /// Methods whose structure ties query position `i` to key position
+    /// `i` (Reformer's shared QK projection, BigBird's window pattern)
+    /// return false and panic with a clear message on cross-shape inputs.
+    fn supports_cross_shape(&self) -> bool {
+        false
+    }
+
+    /// Open a stateful streaming session for autoregressive decode:
+    /// append `(k_row, v_row)` tokens one at a time, query any number of
+    /// `m×p` query rows against everything appended so far.  See
+    /// [`AttentionSession`] for the exactness/re-pilot contract.
+    ///
+    /// ```
+    /// use skeinformer::attention::{AttentionMethod, SessionSpec, Standard};
+    /// use skeinformer::tensor::Matrix;
+    ///
+    /// let mut session = Standard.begin_session(SessionSpec::new(4).with_seed(1));
+    /// session.append(&[1.0, 0.0, 0.0, 0.0], &[2.0, 2.0, 2.0, 2.0]);
+    /// session.append(&[0.0, 1.0, 0.0, 0.0], &[4.0, 4.0, 4.0, 4.0]);
+    /// let q = Matrix::zeros(1, 4); // uniform scores -> mean of V
+    /// let out = session.query(&q);
+    /// assert!((out.get(0, 0) - 3.0).abs() < 1e-5);
+    /// ```
+    fn begin_session(&self, spec: SessionSpec) -> Box<dyn AttentionSession>;
 }
 
 /// Validate the shared preconditions; every implementation calls this.
-pub(crate) fn check_inputs(q: &Matrix, k: &Matrix, v: &Matrix, mask: Option<&[f32]>) {
-    assert_eq!(q.cols(), k.cols(), "Q/K head dims differ");
-    assert_eq!(k.rows(), v.rows(), "K/V lengths differ");
-    assert_eq!(q.rows(), k.rows(), "self-attention requires square n");
+/// `cross_ok` is the method's `supports_cross_shape()` capability: when
+/// false, non-square inputs panic with a message naming the method.
+pub(crate) fn check_inputs(
+    name: &str,
+    cross_ok: bool,
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    mask: Option<&[f32]>,
+) {
+    assert_eq!(q.cols(), k.cols(), "{name}: Q/K head dims differ");
+    assert_eq!(k.rows(), v.rows(), "{name}: K/V lengths differ");
+    if !cross_ok {
+        assert_eq!(
+            q.rows(),
+            k.rows(),
+            "{name} ties query position i to key position i and requires square n×p inputs \
+             (got {}×{} queries vs {}×{} keys); use a method with supports_cross_shape() for \
+             m×p decode queries",
+            q.rows(),
+            q.cols(),
+            k.rows(),
+            k.cols()
+        );
+    }
     if let Some(m) = mask {
-        assert_eq!(m.len(), k.rows(), "mask length mismatch");
+        assert_eq!(m.len(), k.rows(), "{name}: mask length mismatch");
     }
 }
 
@@ -171,6 +372,45 @@ mod tests {
             let b = m.compute(&q, &k, &v, None, &mut Rng::new(33));
             assert_eq!(a.max_abs_diff(&b), 0.0, "{} not deterministic", m.name());
         }
+    }
+
+    #[test]
+    fn compute_into_matches_legacy_compute_bitwise() {
+        let (q, k, v) = toy();
+        let mut scratch = AttnScratch::new();
+        for m in registry(16) {
+            let legacy = m.compute(&q, &k, &v, None, &mut Rng::new(9));
+            // dirty output buffer: compute_into must fully overwrite it
+            let mut out = Matrix::full(q.rows(), v.cols(), f32::NAN);
+            m.compute_into(&AttnInputs::new(&q, &k, &v).with_seed(9), &mut out, &mut scratch);
+            assert_eq!(out.max_abs_diff(&legacy), 0.0, "{} diverged", m.name());
+        }
+    }
+
+    #[test]
+    fn cross_shape_capability_is_honoured() {
+        let (q, k, v) = toy();
+        let q_small = q.gather_rows(&[0, 5, 9]); // 3 decode queries
+        for m in registry(16) {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                m.compute(&q_small, &k, &v, None, &mut Rng::new(2))
+            }));
+            if m.supports_cross_shape() {
+                let out = result.unwrap_or_else(|_| panic!("{} rejected cross shape", m.name()));
+                assert_eq!(out.shape(), (3, v.cols()), "{}", m.name());
+                assert!(out.all_finite(), "{}", m.name());
+            } else {
+                assert!(result.is_err(), "{} must reject cross shape", m.name());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn compute_into_rejects_wrong_output_shape() {
+        let (q, k, v) = toy();
+        let mut out = Matrix::zeros(q.rows(), v.cols() + 1);
+        Standard.compute_into(&AttnInputs::new(&q, &k, &v), &mut out, &mut AttnScratch::new());
     }
 
     #[test]

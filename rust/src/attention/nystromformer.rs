@@ -6,9 +6,12 @@
 //! with landmarks Q̃, K̃ from segment means and the pseudo-inverse computed
 //! by the same Newton–Schulz iteration the published model uses.
 
-use super::{check_inputs, masking, AttentionMethod};
+use super::{
+    check_inputs, masking, AttentionMethod, AttentionSession, AttnInputs, AttnScratch,
+    RecomputeSession, SessionSpec,
+};
 use crate::rng::Rng;
-use crate::tensor::{matmul, matmul_nt, scale_inplace, softmax_rows, Matrix};
+use crate::tensor::{matmul, matmul_into, matmul_nt_into, scale_inplace, softmax_rows, Matrix};
 
 #[derive(Clone, Copy, Debug)]
 pub struct Nystromformer {
@@ -23,12 +26,13 @@ impl Nystromformer {
         Self { landmarks, pinv_iters: 6 }
     }
 
-    /// Segment-mean landmarks: average consecutive chunks of rows.
-    fn segment_means(x: &Matrix, m: usize) -> Matrix {
+    /// Segment-mean landmarks: average consecutive chunks of rows, into a
+    /// zero-filled `(m.min(x.rows()), x.cols())` output.
+    fn segment_means_into(x: &Matrix, m: usize, out: &mut Matrix) {
         let n = x.rows();
         let m = m.min(n);
+        assert_eq!(out.shape(), (m, x.cols()), "segment_means_into shape mismatch");
         let seg = n / m;
-        let mut out = Matrix::zeros(m, x.cols());
         for s in 0..m {
             let start = s * seg;
             let end = if s == m - 1 { n } else { start + seg };
@@ -40,6 +44,14 @@ impl Nystromformer {
             }
             out.row_mut(s).iter_mut().for_each(|v| *v /= count);
         }
+    }
+
+    /// Allocating convenience over
+    /// [`segment_means_into`](Self::segment_means_into).
+    #[cfg_attr(not(test), allow(dead_code))]
+    fn segment_means(x: &Matrix, m: usize) -> Matrix {
+        let mut out = Matrix::zeros(m.min(x.rows()), x.cols());
+        Self::segment_means_into(x, m, &mut out);
         out
     }
 
@@ -50,7 +62,7 @@ impl Nystromformer {
         let n = a.rows();
         assert_eq!(n, a.cols(), "pinv expects square");
         let norm1 = (0..n)
-            .map(|j| (0..n).map(|i| a.get(i, j).abs()).sum::<f32>())
+            .map(|j| a.col_iter(j).map(f32::abs).sum::<f32>())
             .fold(0.0f32, f32::max);
         let norminf = (0..n)
             .map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f32>())
@@ -86,36 +98,68 @@ impl AttentionMethod for Nystromformer {
         "nystromformer"
     }
 
-    fn compute(
+    fn compute_rng_into(
         &self,
-        q: &Matrix,
-        k: &Matrix,
-        v: &Matrix,
-        mask: Option<&[f32]>,
+        inputs: &AttnInputs<'_>,
         _rng: &mut Rng,
-    ) -> Matrix {
-        check_inputs(q, k, v, mask);
+        out: &mut Matrix,
+        scratch: &mut AttnScratch,
+    ) {
+        let (q, k, v) = (inputs.q, inputs.k, inputs.v);
+        check_inputs(self.name(), self.supports_cross_shape(), q, k, v, inputs.mask);
         let p = q.cols() as f32;
         let scale = 1.0 / p.sqrt();
-        let q_land = Self::segment_means(q, self.landmarks);
-        let k_land = Self::segment_means(k, self.landmarks);
+        // one landmark count for both sides: the Nyström core A2 (and its
+        // Newton–Schulz pseudo-inverse) must be square even when m != n
+        let l = self.landmarks.min(q.rows()).min(k.rows());
+        let (lq, lk) = (l, l);
+        let mut q_land = scratch.matrix(lq, q.cols());
+        Self::segment_means_into(q, l, &mut q_land);
+        let mut k_land = scratch.matrix(lk, k.cols());
+        Self::segment_means_into(k, l, &mut k_land);
 
         // F1 = softmax(Q K̃ᵀ)
-        let mut f1 = matmul_nt(q, &k_land);
+        let mut f1 = scratch.matrix(q.rows(), lk);
+        matmul_nt_into(q, &k_land, &mut f1);
         scale_inplace(&mut f1, scale);
         softmax_rows(&mut f1);
         // A2 = softmax(Q̃ K̃ᵀ)
-        let mut a2 = matmul_nt(&q_land, &k_land);
+        let mut a2 = scratch.matrix(lq, lk);
+        matmul_nt_into(&q_land, &k_land, &mut a2);
         scale_inplace(&mut a2, scale);
         softmax_rows(&mut a2);
+        scratch.recycle(k_land);
         // F3 = softmax(Q̃ Kᵀ) with padding mask on keys
-        let mut f3 = matmul_nt(&q_land, k);
+        let mut f3 = scratch.matrix(lq, k.rows());
+        matmul_nt_into(&q_land, k, &mut f3);
+        scratch.recycle(q_land);
         scale_inplace(&mut f3, scale);
-        masking::mask_score_columns(&mut f3, mask);
+        masking::mask_score_columns(&mut f3, inputs.mask);
         softmax_rows(&mut f3);
 
+        // the pseudo-inverse chain stays landmark-sized (L×L) — the
+        // Newton–Schulz internals allocate, but only O(L²), never O(n²)
         let pinv = Self::newton_pinv(&a2, self.pinv_iters);
-        matmul(&f1, &matmul(&pinv, &matmul(&f3, v)))
+        scratch.recycle(a2);
+        let mut f3v = scratch.matrix(f3.rows(), v.cols());
+        matmul_into(&f3, v, &mut f3v);
+        scratch.recycle(f3);
+        let mut mid = scratch.matrix(pinv.rows(), v.cols());
+        matmul_into(&pinv, &f3v, &mut mid);
+        scratch.recycle(f3v);
+        matmul_into(&f1, &mid, out);
+        scratch.recycle(mid);
+        scratch.recycle(f1);
+    }
+
+    fn supports_cross_shape(&self) -> bool {
+        true
+    }
+
+    fn begin_session(&self, spec: SessionSpec) -> Box<dyn AttentionSession> {
+        // landmarks are segment means over the whole state; the session
+        // recomputes them per query (epoch seed is unused — deterministic)
+        RecomputeSession::boxed(*self, spec)
     }
 }
 

@@ -8,9 +8,12 @@
 //! attention (§2), and its LRA behaviour (strong on Text, weak on
 //! Pathfinder) is part of the reproduced shape.
 
-use super::{check_inputs, AttentionMethod};
+use super::{
+    check_inputs, AttentionMethod, AttentionSession, AttnInputs, AttnScratch, RecomputeSession,
+    SessionSpec,
+};
 use crate::rng::Rng;
-use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix};
+use crate::tensor::{matmul_into, matmul_nt_into, matmul_tn_into, Matrix};
 
 #[derive(Clone, Copy, Debug)]
 pub struct Performer {
@@ -24,10 +27,11 @@ impl Performer {
     }
 
     /// Positive random-feature map with a shared max-subtraction for
-    /// numerical stability (standard FAVOR+ stabilisation).
-    fn features(x: &Matrix, w: &Matrix) -> Matrix {
+    /// numerical stability (standard FAVOR+ stabilisation), into `proj`
+    /// (shape `(x.rows(), w.rows())`, fully overwritten).
+    fn features_into(x: &Matrix, w: &Matrix, proj: &mut Matrix) {
         let m = w.rows();
-        let mut proj = matmul_nt(x, w); // (n, m): rows ω·x
+        matmul_nt_into(x, w, proj); // (n, m): rows ω·x
         // subtract ‖x‖²/2 per row, then global max
         let mut gmax = f32::NEG_INFINITY;
         for i in 0..x.rows() {
@@ -41,7 +45,6 @@ impl Performer {
         for z in proj.data_mut() {
             *z = (*z - gmax).exp() * inv_sqrt_m;
         }
-        proj
     }
 }
 
@@ -50,42 +53,72 @@ impl AttentionMethod for Performer {
         "performer"
     }
 
-    fn compute(
+    fn compute_rng_into(
         &self,
-        q: &Matrix,
-        k: &Matrix,
-        v: &Matrix,
-        mask: Option<&[f32]>,
+        inputs: &AttnInputs<'_>,
         rng: &mut Rng,
-    ) -> Matrix {
-        check_inputs(q, k, v, mask);
-        let n = q.rows();
+        out: &mut Matrix,
+        scratch: &mut AttnScratch,
+    ) {
+        let (q, k, v) = (inputs.q, inputs.k, inputs.v);
+        check_inputs(self.name(), self.supports_cross_shape(), q, k, v, inputs.mask);
+        let m_rows = q.rows();
+        let n = k.rows();
         let p = q.cols();
         // 1/√√p scaling splits the softmax temperature between Q and K.
         let scale = 1.0 / (p as f32).sqrt().sqrt();
-        let qs = Matrix::from_fn(n, p, |i, j| q.get(i, j) * scale);
-        let ks = Matrix::from_fn(n, p, |i, j| k.get(i, j) * scale);
-        let mut w = Matrix::zeros(self.m, p);
+        let mut qs = scratch.matrix(m_rows, p);
+        for i in 0..m_rows {
+            for (o, &x) in qs.row_mut(i).iter_mut().zip(q.row(i)) {
+                *o = x * scale;
+            }
+        }
+        let mut ks = scratch.matrix(n, p);
+        for i in 0..n {
+            for (o, &x) in ks.row_mut(i).iter_mut().zip(k.row(i)) {
+                *o = x * scale;
+            }
+        }
+        let mut w = scratch.matrix(self.m, p);
         rng.fill_normal(w.data_mut());
 
-        let qp = Self::features(&qs, &w); // (n, m)
-        let mut kp = Self::features(&ks, &w); // (n, m)
-        if let Some(m) = mask {
+        let mut qp = scratch.matrix(m_rows, self.m); // (m_rows, m)
+        Self::features_into(&qs, &w, &mut qp);
+        scratch.recycle(qs);
+        let mut kp = scratch.matrix(n, self.m); // (n, m)
+        Self::features_into(&ks, &w, &mut kp);
+        scratch.recycle(ks);
+        scratch.recycle(w);
+        if let Some(m) = inputs.mask {
             for i in 0..n {
                 if m[i] <= 0.0 {
                     kp.row_mut(i).iter_mut().for_each(|x| *x = 0.0);
                 }
             }
         }
-        let kv = matmul_tn(&kp, v); // (m, p)
-        let norm = crate::tensor::col_sums(&kp); // φ(K)ᵀ1 : (m,)
-        let out = matmul(&qp, &kv); // (n, p)
-        let denom: Vec<f32> = (0..n)
-            .map(|i| {
-                crate::tensor::dot(qp.row(i), &norm).max(1e-30)
-            })
-            .collect();
-        Matrix::from_fn(n, v.cols(), |i, j| out.get(i, j) / denom[i])
+        let mut kv = scratch.matrix(self.m, v.cols()); // (m, p)
+        matmul_tn_into(&kp, v, &mut kv);
+        let mut norm = scratch.buf(self.m); // φ(K)ᵀ1 : (m,)
+        crate::tensor::col_sums_into(&kp, &mut norm);
+        scratch.recycle(kp);
+        matmul_into(&qp, &kv, out); // (m_rows, p)
+        scratch.recycle(kv);
+        for i in 0..m_rows {
+            let denom = crate::tensor::dot(qp.row(i), &norm).max(1e-30);
+            out.row_mut(i).iter_mut().for_each(|x| *x /= denom);
+        }
+        scratch.recycle_buf(norm);
+        scratch.recycle(qp);
+    }
+
+    fn supports_cross_shape(&self) -> bool {
+        true
+    }
+
+    fn begin_session(&self, spec: SessionSpec) -> Box<dyn AttentionSession> {
+        // FAVOR+ features are drawn per call; the session recomputes with
+        // the epoch seed so features refresh on the re-pilot stride
+        RecomputeSession::boxed(*self, spec)
     }
 }
 

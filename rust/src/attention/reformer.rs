@@ -6,7 +6,10 @@
 //!
 //! Reformer ties Q = K; we follow that by hashing and scoring with Q only.
 
-use super::{check_inputs, AttentionMethod};
+use super::{
+    check_inputs, AttentionMethod, AttentionSession, AttnInputs, AttnScratch, RecomputeSession,
+    SessionSpec,
+};
 use crate::rng::Rng;
 use crate::tensor::Matrix;
 
@@ -26,33 +29,48 @@ impl Default for Reformer {
 
 impl Reformer {
     /// Random-rotation LSH: bucket = argmax over [xR; −xR].
+    #[cfg_attr(not(test), allow(dead_code))]
     fn buckets(&self, qk: &Matrix, rng: &mut Rng) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.buckets_into(qk, rng, &mut out, &mut AttnScratch::new());
+        out
+    }
+
+    /// [`buckets`](Self::buckets) into a reused index buffer (cleared
+    /// first), with the rotation drawn into scratch — the hot-loop form.
+    fn buckets_into(
+        &self,
+        qk: &Matrix,
+        rng: &mut Rng,
+        out: &mut Vec<usize>,
+        scratch: &mut AttnScratch,
+    ) {
         let half = (self.n_buckets / 2).max(1);
         let p = qk.cols();
-        let mut rot = Matrix::zeros(p, half);
+        let mut rot = scratch.matrix(p, half);
         rng.fill_normal(rot.data_mut());
-        (0..qk.rows())
-            .map(|i| {
-                let row = qk.row(i);
-                let mut best = 0usize;
-                let mut best_val = f32::NEG_INFINITY;
-                for b in 0..half {
-                    let mut acc = 0.0f32;
-                    for (jj, &x) in row.iter().enumerate() {
-                        acc += x * rot.get(jj, b);
-                    }
-                    if acc > best_val {
-                        best_val = acc;
-                        best = b;
-                    }
-                    if -acc > best_val {
-                        best_val = -acc;
-                        best = b + half;
-                    }
+        out.clear();
+        out.extend((0..qk.rows()).map(|i| {
+            let row = qk.row(i);
+            let mut best = 0usize;
+            let mut best_val = f32::NEG_INFINITY;
+            for b in 0..half {
+                let mut acc = 0.0f32;
+                for (jj, &x) in row.iter().enumerate() {
+                    acc += x * rot.get(jj, b);
                 }
-                best
-            })
-            .collect()
+                if acc > best_val {
+                    best_val = acc;
+                    best = b;
+                }
+                if -acc > best_val {
+                    best_val = -acc;
+                    best = b + half;
+                }
+            }
+            best
+        }));
+        scratch.recycle(rot);
     }
 }
 
@@ -61,35 +79,45 @@ impl AttentionMethod for Reformer {
         "reformer"
     }
 
-    fn compute(
+    fn compute_rng_into(
         &self,
-        q: &Matrix,
-        k: &Matrix,
-        v: &Matrix,
-        mask: Option<&[f32]>,
+        inputs: &AttnInputs<'_>,
         rng: &mut Rng,
-    ) -> Matrix {
-        check_inputs(q, k, v, mask);
+        out: &mut Matrix,
+        scratch: &mut AttnScratch,
+    ) {
+        let (q, k, v) = (inputs.q, inputs.k, inputs.v);
+        let mask = inputs.mask;
+        check_inputs(self.name(), self.supports_cross_shape(), q, k, v, mask);
         let n = q.rows();
         let p = q.cols() as f32;
         let scale = 1.0 / p.sqrt();
         let _ = k; // Q = K (Reformer shares the projection)
 
-        let buckets = self.buckets(q, rng);
-        // stable sort by bucket, preserving position order inside buckets
-        let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by_key(|&i| (buckets[i], i));
+        let mut buckets = scratch.idx_buf();
+        self.buckets_into(q, rng, &mut buckets, scratch);
+        // sort by bucket, preserving position order inside buckets — the
+        // (bucket, position) key is a total order, so the allocation-free
+        // unstable sort yields exactly the stable-sort permutation
+        let mut order = scratch.idx_buf();
+        order.extend(0..n);
+        order.sort_unstable_by_key(|&i| (buckets[i], i));
 
         let chunk = self.chunk.min(n).max(1);
         let n_chunks = n.div_ceil(chunk);
-        let mut out = Matrix::zeros(n, v.cols());
+        out.data_mut().iter_mut().for_each(|x| *x = 0.0);
+
+        // per-chunk key list and per-row score strip, reused across the
+        // whole pass instead of re-allocated per row (scratch audit)
+        let mut key_pos = scratch.idx_buf();
+        let mut scores = scratch.buf(0);
 
         for c in 0..n_chunks {
             let rows = c * chunk..((c + 1) * chunk).min(n);
             // keys: this chunk + previous chunk (wrapping), the standard scheme
             let prev = if c == 0 { n_chunks - 1 } else { c - 1 };
-            let mut key_pos: Vec<usize> =
-                (c * chunk..((c + 1) * chunk).min(n)).collect();
+            key_pos.clear();
+            key_pos.extend(c * chunk..((c + 1) * chunk).min(n));
             if n_chunks > 1 {
                 key_pos.extend(prev * chunk..((prev + 1) * chunk).min(n));
             }
@@ -97,8 +125,8 @@ impl AttentionMethod for Reformer {
                 let i = order[ri];
                 let qi = q.row(i);
                 let bi = buckets[i];
-                let mut scores: Vec<f32> = Vec::with_capacity(key_pos.len());
-                for &kp in &key_pos {
+                scores.clear();
+                for &kp in key_pos.iter() {
                     let j = order[kp];
                     let same_bucket = buckets[j] == bi;
                     let masked = mask.is_some_and(|m| m[j] <= 0.0);
@@ -121,7 +149,7 @@ impl AttentionMethod for Reformer {
                 }
                 let inv = 1.0 / sum;
                 let orow = out.row_mut(i);
-                for (&kp, &s) in key_pos.iter().zip(&scores) {
+                for (&kp, &s) in key_pos.iter().zip(scores.iter()) {
                     let w = s * inv;
                     if w > 0.0 {
                         crate::tensor::axpy(w, v.row(order[kp]), orow);
@@ -129,7 +157,22 @@ impl AttentionMethod for Reformer {
                 }
             }
         }
-        out
+        scratch.recycle_buf(scores);
+        scratch.recycle_idx(key_pos);
+        scratch.recycle_idx(order);
+        scratch.recycle_idx(buckets);
+    }
+
+    fn supports_cross_shape(&self) -> bool {
+        // Reformer ties Q = K: a query row *is* a key row, so detached
+        // m-row queries have no bucket assignment
+        false
+    }
+
+    fn begin_session(&self, spec: SessionSpec) -> Box<dyn AttentionSession> {
+        // square-only: session queries must supply all n query rows (Q=K
+        // hashing needs every position); hashes re-draw on the epoch stride
+        RecomputeSession::boxed(*self, spec)
     }
 }
 

@@ -1,0 +1,175 @@
+//! Reusable temporary storage for the v2 attention API
+//! ([`compute_into`](super::AttentionMethod::compute_into)).
+//!
+//! An [`AttnScratch`] is a per-call handle over recycled buffers: methods
+//! draw their temporaries (score strips, sketches, gathered rows, weight
+//! vectors) from it instead of allocating, and return them when done.  The
+//! buffers themselves come from the worker pool's thread-local stash
+//! ([`pool::take_scratch`]/[`pool::recycle_scratch`]) — on the persistent
+//! pool workers the stash lives for the pool's lifetime, so the batched
+//! B×H hot loop stops allocating once each worker has warmed up.  Dropping
+//! an `AttnScratch` returns every buffer it still holds to the stash;
+//! buffers checked out and never recycled are simply freed.
+//!
+//! The take/recycle discipline is LIFO and per-call-site symmetric: a hot
+//! loop that performs the same sequence of takes and recycles on every
+//! call gets back buffers of exactly the capacities it needs, so
+//! steady-state `reserve`/`resize` calls never reallocate.
+//!
+//! # Examples
+//!
+//! ```
+//! use skeinformer::attention::AttnScratch;
+//!
+//! let mut scratch = AttnScratch::new();
+//! let m = scratch.matrix(4, 8); // zero-filled, recycled backing buffer
+//! assert_eq!(m.shape(), (4, 8));
+//! scratch.recycle(m); // hand the buffer back for the next temporary
+//! let v = scratch.buf(16); // zero-filled f32 buffer
+//! assert_eq!(v.len(), 16);
+//! scratch.recycle_buf(v);
+//! let idx = scratch.idx_buf(); // cleared index buffer
+//! assert!(idx.is_empty());
+//! scratch.recycle_idx(idx);
+//! ```
+
+use crate::pool;
+use crate::tensor::Matrix;
+
+/// How many index buffers each thread keeps (f32 buffers are capped by
+/// the pool's own per-thread stash instead).
+const IDX_KEEP: usize = 8;
+
+thread_local! {
+    /// Per-thread recycled `Vec<usize>` buffers — thread-local for the
+    /// same reason the pool's f32 stash is: an `AttnScratch` handle is
+    /// per-call, but the pool workers running the B×H hot loop are
+    /// persistent, so index buffers must outlive the handle to be
+    /// allocation-free across heads.
+    static IDX_STASH: std::cell::RefCell<Vec<Vec<usize>>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Recycled temporary storage for one attention computation.
+///
+/// See the [module docs](self) for the lifecycle; the short version:
+/// `take` ↔ `recycle` pairs are cheap, and on pool workers they are
+/// allocation-free after warmup.  The handle itself is stateless — both
+/// the f32 and the index buffers live in per-thread stashes — so
+/// creating one per call costs nothing.
+#[derive(Default)]
+pub struct AttnScratch {}
+
+impl AttnScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zero-filled f32 buffer of exactly `len` elements, backed by a
+    /// recycled allocation when one is available.
+    ///
+    /// The zero fill is part of the contract — consumers like the masked
+    /// Gaussian sketch rely on untouched entries being zero, and it
+    /// matches what the allocating path (`vec![0.0; len]` /
+    /// `Matrix::zeros`) always paid.  A buffer that will be *fully*
+    /// overwritten from a source slice can skip the memset with
+    /// [`buf_from`](Self::buf_from).
+    pub fn buf(&mut self, len: usize) -> Vec<f32> {
+        let mut b = pool::take_scratch(len);
+        b.resize(len, 0.0);
+        b
+    }
+
+    /// A recycled buffer initialised as a copy of `src` — one copy, no
+    /// zero fill (the streaming query path's per-head staging uses this).
+    pub fn buf_from(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut b = pool::take_scratch(src.len());
+        b.extend_from_slice(src);
+        b
+    }
+
+    /// A zero-filled `rows × cols` [`Matrix`] backed by a recycled buffer —
+    /// the scratch equivalent of [`Matrix::zeros`].
+    pub fn matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.buf(rows * cols))
+    }
+
+    /// Return a matrix taken with [`matrix`](Self::matrix) (or any owned
+    /// matrix) so its buffer backs the next temporary.
+    pub fn recycle(&mut self, m: Matrix) {
+        self.recycle_buf(m.into_vec());
+    }
+
+    /// Return an f32 buffer to the recycling stash.
+    pub fn recycle_buf(&mut self, b: Vec<f32>) {
+        pool::recycle_scratch(b);
+    }
+
+    /// A cleared `Vec<usize>` for gather/sample index lists, recycled
+    /// through this thread's stash.
+    pub fn idx_buf(&mut self) -> Vec<usize> {
+        match IDX_STASH.with(|s| s.borrow_mut().pop()) {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Return an index buffer to this thread's stash.
+    pub fn recycle_idx(&mut self, b: Vec<usize>) {
+        IDX_STASH.with(|s| {
+            let mut stash = s.borrow_mut();
+            if stash.len() < IDX_KEEP {
+                stash.push(b);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_are_zeroed_and_shaped() {
+        let mut s = AttnScratch::new();
+        let mut b = s.buf(8);
+        b.iter().for_each(|x| assert_eq!(*x, 0.0));
+        b[3] = 5.0;
+        s.recycle_buf(b);
+        // a recycled buffer must come back cleared to zero
+        let again = s.buf(8);
+        assert!(again.iter().all(|x| *x == 0.0));
+        s.recycle_buf(again);
+
+        let m = s.matrix(3, 4);
+        assert_eq!(m.shape(), (3, 4));
+        assert!(m.data().iter().all(|x| *x == 0.0));
+        s.recycle(m);
+    }
+
+    #[test]
+    fn buf_from_copies_without_zeroing() {
+        let mut s = AttnScratch::new();
+        let b = s.buf_from(&[1.0, 2.0, 3.0]);
+        assert_eq!(b, vec![1.0, 2.0, 3.0]);
+        s.recycle_buf(b);
+        let again = s.buf_from(&[4.0]);
+        assert_eq!(again, vec![4.0]);
+        s.recycle_buf(again);
+    }
+
+    #[test]
+    fn idx_buffers_recycle_locally() {
+        let mut s = AttnScratch::new();
+        let mut i = s.idx_buf();
+        i.extend_from_slice(&[1, 2, 3]);
+        let cap = i.capacity();
+        s.recycle_idx(i);
+        let again = s.idx_buf();
+        assert!(again.is_empty());
+        assert!(again.capacity() >= cap.min(3));
+    }
+}

@@ -1,0 +1,436 @@
+//! Stateful streaming attention sessions — the autoregressive-decode
+//! formulation of every registry method.
+//!
+//! A session is opened from a method
+//! ([`AttentionMethod::begin_session`](super::AttentionMethod::begin_session)),
+//! fed one `(k_row, v_row)` token at a time with [`AttentionSession::append`],
+//! and queried with any number of `m×p` query rows against everything
+//! appended so far.  This is the serving shape the batched `compute` call
+//! cannot express: the KV state persists across calls, so a decode step
+//! costs one append plus one query instead of a from-scratch recompute
+//! over re-uploaded tensors.
+//!
+//! **Exactness contract.**
+//!
+//! * *Exact incremental sessions* — [`VMeanSession`] (running masked
+//!   column sums, O(p) per token) and [`LinformerSession`] (the sketch
+//!   projections `SᵀK`, `SᵀV` maintained one rank-1 update per token,
+//!   O(d·p)) — produce **bitwise** the output a full recompute at the
+//!   session seed would: the incremental accumulation performs the same
+//!   float additions in the same order as the batch kernels.
+//! * *Recompute sessions* ([`RecomputeSession`], the default for every
+//!   other method) — store the appended K/V and serve each query by
+//!   running the method over the full state.  For linear-time methods
+//!   (Skeinformer et al.) that is O(n·d) work per query — the same
+//!   asymptotics as a true incremental step — and for `Standard` it is
+//!   the exact O(n·p) streaming softmax.
+//!
+//! **Re-pilot stride.** Approximating methods refresh their sampling
+//! randomness every [`SessionSpec::repilot_stride`] appended tokens: a
+//! query at length `n` computes with seed [`session_seed`]`(spec.seed,`
+//! [`session_epoch`]`(n, stride))`.  Within an epoch the pilot draw is
+//! frozen (queries are reproducible and comparable); at stride 1 every
+//! token re-pilots, so a session query is bit-identical to a full
+//! recompute at the same derived seed.  Exact sessions ignore the stride
+//! (they have no sampling randomness to refresh).
+
+use super::{AttentionMethod, AttnInputs, AttnScratch};
+use crate::rng::Rng;
+use crate::tensor::{matmul_into, matmul_nt_into, scale_inplace, softmax_rows, Matrix};
+
+/// Configuration for a streaming session.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionSpec {
+    /// Per-head feature dimension `p` of the K/V rows (and query rows).
+    pub head_dim: usize,
+    /// Base seed; query-time randomness derives via [`session_seed`].
+    pub seed: u64,
+    /// Re-pilot every this many appended tokens (clamped to ≥ 1).
+    /// Ignored by exact sessions.
+    pub repilot_stride: usize,
+    /// Expected token count — a reservation hint, not a cap.
+    pub capacity_hint: usize,
+}
+
+impl SessionSpec {
+    pub fn new(head_dim: usize) -> Self {
+        Self { head_dim, seed: 0, repilot_stride: 1, capacity_hint: 0 }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_repilot_stride(mut self, stride: usize) -> Self {
+        self.repilot_stride = stride;
+        self
+    }
+
+    pub fn with_capacity_hint(mut self, tokens: usize) -> Self {
+        self.capacity_hint = tokens;
+        self
+    }
+
+    /// The effective stride (`repilot_stride` clamped to ≥ 1).
+    pub fn stride(&self) -> usize {
+        self.repilot_stride.max(1)
+    }
+}
+
+/// The re-pilot epoch a session of length `appended` is in.
+pub fn session_epoch(appended: usize, stride: usize) -> u64 {
+    (appended / stride.max(1)) as u64
+}
+
+/// The seed a session query computes with at a given epoch — a
+/// [`mix`](crate::rng::mix) of the spec seed and the epoch, so epochs get
+/// decorrelated streams and tests can reproduce any query exactly.
+pub fn session_seed(base: u64, epoch: u64) -> u64 {
+    crate::rng::mix(base, epoch)
+}
+
+/// A stateful attention stream: appended `(k, v)` token state plus the
+/// method-specific incremental machinery.  See the [module docs](self)
+/// for the exactness and re-pilot contract.
+pub trait AttentionSession: Send {
+    /// Per-head feature dimension `p`.
+    fn head_dim(&self) -> usize;
+
+    /// Tokens appended so far.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append one token's key and value rows (each length
+    /// [`head_dim`](Self::head_dim)).
+    fn append(&mut self, k_row: &[f32], v_row: &[f32]);
+
+    /// Compute attention of `q` (`m × p`) against every appended token,
+    /// into `out` (`m × p`, fully overwritten).
+    ///
+    /// # Panics
+    ///
+    /// Panics if the session is empty, `q.cols() != head_dim`, or the
+    /// underlying method rejects cross-shape queries and `m != len`.
+    fn query_into(&mut self, q: &Matrix, out: &mut Matrix, scratch: &mut AttnScratch);
+
+    /// Allocating convenience over [`query_into`](Self::query_into).
+    fn query(&mut self, q: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(q.rows(), self.head_dim());
+        self.query_into(q, &mut out, &mut AttnScratch::new());
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recompute session (the generic fallback)
+// ---------------------------------------------------------------------------
+
+/// The generic session: append into growing K/V buffers, serve queries by
+/// running the wrapped method over the full state with the epoch seed.
+/// Exact for `Standard` (streaming softmax); for approximating methods
+/// this *is* the re-pilot: sampling randomness refreshes every
+/// [`SessionSpec::repilot_stride`] tokens.
+pub struct RecomputeSession<M> {
+    method: M,
+    spec: SessionSpec,
+    k_data: Vec<f32>,
+    v_data: Vec<f32>,
+    len: usize,
+}
+
+impl<M: AttentionMethod + Send + 'static> RecomputeSession<M> {
+    pub fn new(method: M, spec: SessionSpec) -> Self {
+        let reserve = spec.capacity_hint * spec.head_dim;
+        Self {
+            method,
+            spec,
+            k_data: Vec::with_capacity(reserve),
+            v_data: Vec::with_capacity(reserve),
+            len: 0,
+        }
+    }
+
+    pub fn boxed(method: M, spec: SessionSpec) -> Box<dyn AttentionSession> {
+        Box::new(Self::new(method, spec))
+    }
+}
+
+impl<M: AttentionMethod + Send + 'static> AttentionSession for RecomputeSession<M> {
+    fn head_dim(&self) -> usize {
+        self.spec.head_dim
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        let p = self.spec.head_dim;
+        assert_eq!(k_row.len(), p, "k_row length != head_dim");
+        assert_eq!(v_row.len(), p, "v_row length != head_dim");
+        self.k_data.extend_from_slice(k_row);
+        self.v_data.extend_from_slice(v_row);
+        self.len += 1;
+    }
+
+    fn query_into(&mut self, q: &Matrix, out: &mut Matrix, scratch: &mut AttnScratch) {
+        assert!(self.len > 0, "query on an empty session");
+        assert_eq!(q.cols(), self.spec.head_dim, "query head_dim mismatch");
+        let p = self.spec.head_dim;
+        // wrap the owned buffers as matrices without copying, and put
+        // them back afterwards
+        let k = Matrix::from_vec(self.len, p, std::mem::take(&mut self.k_data));
+        let v = Matrix::from_vec(self.len, p, std::mem::take(&mut self.v_data));
+        let seed = session_seed(self.spec.seed, session_epoch(self.len, self.spec.stride()));
+        let inputs = AttnInputs::new(q, &k, &v).with_seed(seed);
+        self.method.compute_into(&inputs, out, scratch);
+        self.k_data = k.into_vec();
+        self.v_data = v.into_vec();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// VMean: exact O(p)-per-token incremental session
+// ---------------------------------------------------------------------------
+
+/// Streaming [`VMean`](super::VMean): maintains the running column sums of
+/// V, so append is O(p) and a query fills rows with the current mean —
+/// bitwise what a full recompute produces (same additions, same order).
+pub struct VMeanSession {
+    head_dim: usize,
+    sums: Vec<f32>,
+    len: usize,
+}
+
+impl VMeanSession {
+    pub fn new(spec: SessionSpec) -> Self {
+        Self { head_dim: spec.head_dim, sums: vec![0.0; spec.head_dim], len: 0 }
+    }
+}
+
+impl AttentionSession for VMeanSession {
+    fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        assert_eq!(k_row.len(), self.head_dim, "k_row length != head_dim");
+        assert_eq!(v_row.len(), self.head_dim, "v_row length != head_dim");
+        // same accumulation masked_col_sums performs, one row at a time
+        for (o, &x) in self.sums.iter_mut().zip(v_row) {
+            *o += x;
+        }
+        self.len += 1;
+    }
+
+    fn query_into(&mut self, q: &Matrix, out: &mut Matrix, _scratch: &mut AttnScratch) {
+        assert!(self.len > 0, "query on an empty session");
+        assert_eq!(q.cols(), self.head_dim, "query head_dim mismatch");
+        assert_eq!(out.shape(), (q.rows(), self.head_dim), "output shape mismatch");
+        let m = self.len as f32;
+        for i in 0..out.rows() {
+            for (o, &s) in out.row_mut(i).iter_mut().zip(&self.sums) {
+                *o = s / m;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Linformer: exact O(d·p)-per-token incremental session
+// ---------------------------------------------------------------------------
+
+/// Streaming [`Linformer`](super::Linformer): the sketch projections
+/// `Kₚ = SᵀK` and `Vₚ = SᵀV` are maintained incrementally — appending
+/// token `i` draws sketch row `S_(i)` from the session's RNG (the same
+/// stream position the batch `gaussian_sketch` would use) and adds the
+/// rank-1 updates `S_(i)ᵀ k_i` / `S_(i)ᵀ v_i`.  Queries then cost
+/// O(m·d·p) regardless of context length, and the result is bitwise what
+/// `Linformer::compute` at `Rng::new(spec.seed)` over the full K/V
+/// produces: the per-accumulator addition order matches `matmul_tn`
+/// exactly.
+pub struct LinformerSession {
+    head_dim: usize,
+    d: usize,
+    std: f32,
+    rng: Rng,
+    k_proj: Matrix,
+    v_proj: Matrix,
+    srow: Vec<f32>,
+    len: usize,
+}
+
+impl LinformerSession {
+    pub fn new(d: usize, spec: SessionSpec) -> Self {
+        Self {
+            head_dim: spec.head_dim,
+            d,
+            std: 1.0 / (d as f32).sqrt(),
+            rng: Rng::new(spec.seed),
+            k_proj: Matrix::zeros(d, spec.head_dim),
+            v_proj: Matrix::zeros(d, spec.head_dim),
+            srow: vec![0.0; d],
+            len: 0,
+        }
+    }
+}
+
+impl AttentionSession for LinformerSession {
+    fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        assert_eq!(k_row.len(), self.head_dim, "k_row length != head_dim");
+        assert_eq!(v_row.len(), self.head_dim, "v_row length != head_dim");
+        // sketch row i, drawn at the same stream position the batch
+        // gaussian_sketch uses for row i
+        for x in self.srow.iter_mut() {
+            *x = self.rng.normal() * self.std;
+        }
+        // rank-1 updates in matmul_tn's accumulation order (including its
+        // zero-coefficient skip), so the projections stay bitwise equal
+        // to the batch path's
+        for (c, &sc) in self.srow.iter().enumerate() {
+            if sc == 0.0 {
+                continue;
+            }
+            for (o, &x) in self.k_proj.row_mut(c).iter_mut().zip(k_row) {
+                *o += sc * x;
+            }
+        }
+        for (c, &sc) in self.srow.iter().enumerate() {
+            if sc == 0.0 {
+                continue;
+            }
+            for (o, &x) in self.v_proj.row_mut(c).iter_mut().zip(v_row) {
+                *o += sc * x;
+            }
+        }
+        self.len += 1;
+    }
+
+    fn query_into(&mut self, q: &Matrix, out: &mut Matrix, scratch: &mut AttnScratch) {
+        assert!(self.len > 0, "query on an empty session");
+        assert_eq!(q.cols(), self.head_dim, "query head_dim mismatch");
+        assert_eq!(out.shape(), (q.rows(), self.head_dim), "output shape mismatch");
+        let p = self.head_dim as f32;
+        let mut scores = scratch.matrix(q.rows(), self.d);
+        matmul_nt_into(q, &self.k_proj, &mut scores);
+        scale_inplace(&mut scores, 1.0 / p.sqrt());
+        softmax_rows(&mut scores);
+        matmul_into(&scores, &self.v_proj, out);
+        scratch.recycle(scores);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{Linformer, Standard, VMean};
+
+    fn token_rows(n: usize, p: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let mut mk = || {
+            let mut m = Matrix::zeros(n, p);
+            rng.fill_normal(m.data_mut());
+            m
+        };
+        (mk(), mk(), mk())
+    }
+
+    #[test]
+    fn standard_session_matches_exact_rows() {
+        // decode shape: after appending i+1 tokens, querying with q row i
+        // must reproduce row i of the square exact attention
+        let (q, k, v) = token_rows(24, 8, 1);
+        let exact = Standard::exact(&q, &k, &v, None);
+        let mut session = Standard.begin_session(SessionSpec::new(8));
+        let mut scratch = AttnScratch::new();
+        for i in 0..24 {
+            session.append(k.row(i), v.row(i));
+            let qi = Matrix::from_vec(1, 8, q.row(i).to_vec());
+            let mut out = Matrix::zeros(1, 8);
+            session.query_into(&qi, &mut out, &mut scratch);
+            for j in 0..8 {
+                assert!(
+                    (out.get(0, j) - exact.get(i, j)).abs() < 1e-5,
+                    "token {i} col {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vmean_session_is_bitwise_running_mean() {
+        let (q, k, v) = token_rows(16, 4, 2);
+        let mut session = VMean.begin_session(SessionSpec::new(4));
+        for i in 0..16 {
+            session.append(k.row(i), v.row(i));
+        }
+        let got = session.query(&q);
+        let want = VMean.compute(&q, &k, &v, None, &mut Rng::new(0));
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn linformer_session_matches_batch_sketch_bitwise() {
+        let (q, k, v) = token_rows(32, 8, 3);
+        let seed = 11u64;
+        let lin = Linformer::new(6);
+        let mut session = lin.begin_session(SessionSpec::new(8).with_seed(seed));
+        for i in 0..32 {
+            session.append(k.row(i), v.row(i));
+        }
+        let got = session.query(&q);
+        let want = lin.compute(&q, &k, &v, None, &mut Rng::new(seed));
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn recompute_session_uses_epoch_seed() {
+        use crate::attention::Skeinformer;
+        let (q, k, v) = token_rows(20, 8, 4);
+        let skein = Skeinformer::new(8);
+        let spec = SessionSpec::new(8).with_seed(5).with_repilot_stride(4);
+        let mut session = skein.begin_session(spec);
+        for i in 0..20 {
+            session.append(k.row(i), v.row(i));
+        }
+        let got = session.query(&q);
+        let seed = session_seed(5, session_epoch(20, 4));
+        let want = skein.compute(&q, &k, &v, None, &mut Rng::new(seed));
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn epoch_advances_on_stride() {
+        assert_eq!(session_epoch(0, 4), 0);
+        assert_eq!(session_epoch(3, 4), 0);
+        assert_eq!(session_epoch(4, 4), 1);
+        assert_eq!(session_epoch(8, 1), 8);
+        // stride 0 clamps to 1 instead of dividing by zero
+        assert_eq!(session_epoch(8, 0), 8);
+        assert_ne!(session_seed(5, 0), session_seed(5, 1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_session_query_panics() {
+        let mut s = Standard.begin_session(SessionSpec::new(4));
+        let q = Matrix::zeros(1, 4);
+        let _ = s.query(&q);
+    }
+}

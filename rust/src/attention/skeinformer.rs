@@ -5,12 +5,21 @@
 //! O(n²)-shaped object the exact method needs — the full score matrix —
 //! never materialises: the pilot strip is (d, n) and the sampled strip is
 //! (n, d).
+//!
+//! Cross-shape (`m×p` decode queries against `n×p` cached keys) is
+//! supported: pilot queries are then drawn uniformly from the `m` query
+//! rows (queries carry no padding mask), while sub-sampling probabilities
+//! and the mask still range over the `n` key positions.  With `m == n`
+//! the draws reduce bit-for-bit to the classic square path.
 
-use super::{check_inputs, masking, AttentionMethod};
+use super::{
+    check_inputs, masking, AttentionMethod, AttentionSession, AttnInputs, AttnScratch,
+    RecomputeSession, SessionSpec,
+};
 use crate::rng::Rng;
 use crate::tensor::{
-    col_norms, matmul, matmul_nt, row_geometric_means, row_norms, scale_inplace, softmax_rows,
-    Matrix,
+    col_norms_into, col_sums_into, matmul_into, matmul_nt_into, row_geometric_means_into,
+    row_norms_into, scale_inplace, scale_rows_inplace, softmax_rows, Matrix,
 };
 
 /// Row-normalization strategy (§4.2 + ablations).
@@ -68,142 +77,224 @@ impl Skeinformer {
         mask: Option<&[f32]>,
         rng: &mut Rng,
     ) -> (Vec<usize>, Matrix) {
-        let n = q.rows();
-        let d = self.d.min(n);
-        let valid = masking::valid_indices(mask, n);
-        let pilot_idx: Vec<usize> =
-            (0..d).map(|_| valid[rng.below(valid.len())]).collect();
-        let qj = q.gather_rows(&pilot_idx);
-        let mut bj = matmul_nt(&qj, k); // (d, n)
-        scale_inplace(&mut bj, 1.0 / (q.cols() as f32).sqrt());
-        masking::mask_score_columns(&mut bj, mask);
-        softmax_rows(&mut bj);
-        masking::zero_masked_columns(&mut bj, mask);
+        let mut pilot_idx = Vec::new();
+        let pilot_d = self.d.min(q.rows());
+        let mut bj = Matrix::zeros(pilot_d, k.rows());
+        let mut scratch = AttnScratch::new();
+        self.pilot_into(q, k, mask, rng, &mut pilot_idx, &mut bj, &mut scratch);
         (pilot_idx, bj)
+    }
+
+    /// [`pilot`](Self::pilot) into caller-provided storage (`pilot_idx`
+    /// cleared and refilled; `bj` must be `(d.min(q.rows()), k.rows())`,
+    /// fully overwritten).  Draws exactly the stream [`pilot`] draws.
+    fn pilot_into(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        mask: Option<&[f32]>,
+        rng: &mut Rng,
+        pilot_idx: &mut Vec<usize>,
+        bj: &mut Matrix,
+        scratch: &mut AttnScratch,
+    ) {
+        let m = q.rows();
+        let pilot_d = self.d.min(m);
+        pilot_idx.clear();
+        if m == k.rows() {
+            // square self-attention: pilot queries sampled over the valid
+            // (un-padded) positions, exactly as in Algorithm 1
+            let mut valid = scratch.idx_buf();
+            masking::valid_indices_into(mask, m, &mut valid);
+            pilot_idx.extend((0..pilot_d).map(|_| valid[rng.below(valid.len())]));
+            scratch.recycle_idx(valid);
+        } else {
+            // cross-shape decode: queries carry no mask; sample uniformly
+            pilot_idx.extend((0..pilot_d).map(|_| rng.below(m)));
+        }
+        let mut qj = scratch.matrix(pilot_d, q.cols());
+        q.gather_rows_into(pilot_idx, &mut qj);
+        matmul_nt_into(&qj, k, bj); // (d, n)
+        scratch.recycle(qj);
+        scale_inplace(bj, 1.0 / (q.cols() as f32).sqrt());
+        masking::mask_score_columns(bj, mask);
+        softmax_rows(bj);
+        masking::zero_masked_columns(bj, mask);
     }
 
     /// Equation (5): estimated sub-sampling probabilities
     /// `p̂_i ∝ (Σ_k b²_{j_k i})^{1/2} ‖V_(i)‖` (un-normalised weights —
     /// the sampler normalises internally).
     pub fn probabilities(bj: &Matrix, v: &Matrix, mask: Option<&[f32]>) -> Vec<f32> {
-        let col = col_norms(bj);
-        let vn = row_norms(v);
-        let mut w: Vec<f32> = col.iter().zip(&vn).map(|(c, r)| c * r).collect();
-        masking::mask_weights(&mut w, mask);
+        let mut w = vec![0.0f32; bj.cols()];
+        let mut vn = vec![0.0f32; v.rows()];
+        Self::probabilities_into(bj, v, mask, &mut w, &mut vn);
+        w
+    }
+
+    /// [`probabilities`](Self::probabilities) into reused buffers: `w`
+    /// (length `n`, the result) and `vn` (length `n`, row-norm workspace).
+    fn probabilities_into(
+        bj: &Matrix,
+        v: &Matrix,
+        mask: Option<&[f32]>,
+        w: &mut [f32],
+        vn: &mut [f32],
+    ) {
+        col_norms_into(bj, w);
+        row_norms_into(v, vn);
+        for (wi, &r) in w.iter_mut().zip(vn.iter()) {
+            *wi *= r;
+        }
+        masking::mask_weights(w, mask);
         if w.iter().all(|x| *x <= 0.0) {
             // degenerate pilot — fall back to uniform over valid positions
             for (i, wi) in w.iter_mut().enumerate() {
                 *wi = mask.map_or(1.0, |m| m[i]);
             }
         }
-        w
     }
 
     fn compute_impl(
         &self,
-        q: &Matrix,
-        k: &Matrix,
-        v: &Matrix,
-        mask: Option<&[f32]>,
+        inputs: &AttnInputs<'_>,
         rng: &mut Rng,
-    ) -> Matrix {
-        check_inputs(q, k, v, mask);
-        let n = q.rows();
+        out: &mut Matrix,
+        scratch: &mut AttnScratch,
+    ) {
+        let (q, k, v) = (inputs.q, inputs.k, inputs.v);
+        let mask = inputs.mask;
+        check_inputs(self.name(), self.supports_cross_shape(), q, k, v, mask);
+        let m = q.rows(); // query rows
+        let n = k.rows(); // key/value rows
         let p = q.cols() as f32;
+        let pilot_d = self.d.min(m);
         let d = self.d.min(n);
         let m_valid = masking::valid_count(mask, n);
 
         // Lines 1-4: pilot sampling + probabilities.
-        let (pilot_idx, bj) = self.pilot(q, k, mask, rng);
-        let weights = if self.uniform_sampling {
-            let mut w = vec![1.0f32; n];
-            masking::mask_weights(&mut w, mask);
-            w
+        let mut pilot_idx = scratch.idx_buf();
+        let mut bj = scratch.matrix(pilot_d, n);
+        self.pilot_into(q, k, mask, rng, &mut pilot_idx, &mut bj, scratch);
+        let mut weights = scratch.buf(n);
+        if self.uniform_sampling {
+            weights.iter_mut().for_each(|x| *x = 1.0);
+            masking::mask_weights(&mut weights, mask);
         } else {
-            Self::probabilities(&bj, v, mask)
-        };
+            let mut vn = scratch.buf(n);
+            Self::probabilities_into(&bj, v, mask, &mut weights, &mut vn);
+            scratch.recycle_buf(vn);
+        }
 
         // Line 5: importance sampling without replacement (Gumbel top-k).
         let sel_idx = rng.weighted_without_replacement(&weights, d);
         let d_eff = sel_idx.len();
 
         // Lines 6-7: gather K_{J'}, V_{J'}, compute A^{J'} = exp(Q K_{J'}ᵀ/√p).
-        let k_sel = k.gather_rows(&sel_idx);
-        let v_sel = v.gather_rows(&sel_idx);
-        let mut a_sel = matmul_nt(q, &k_sel); // (n, d)
+        let mut k_sel = scratch.matrix(d_eff, k.cols());
+        let mut v_sel = scratch.matrix(d_eff, v.cols());
+        k.gather_rows_into(&sel_idx, &mut k_sel);
+        v.gather_rows_into(&sel_idx, &mut v_sel);
+        let mut a_sel = scratch.matrix(m, d_eff); // (m, d)
+        matmul_nt_into(q, &k_sel, &mut a_sel);
+        scratch.recycle(k_sel);
         scale_inplace(&mut a_sel, 1.0 / p.sqrt());
         // clip logits to ±30 before exp (f32 overflow guard — mirrors the
         // pallas kernel and jnp reference exactly)
         a_sel.data_mut().iter_mut().for_each(|x| *x = x.clamp(-30.0, 30.0).exp());
-        let r_sel = matmul(&a_sel, &v_sel); // (n, p) — R_{J'}
 
-        let mut r = match self.row_norm {
+        match self.row_norm {
             RowNorm::Adaptive => {
+                let mut r_sel = scratch.matrix(m, v.cols()); // (m, p) — R_{J'}
+                matmul_into(&a_sel, &v_sel, &mut r_sel);
                 // Line 8: geometric-mean fill g.
-                let g = row_geometric_means(&a_sel);
+                let mut g = scratch.buf(m);
+                row_geometric_means_into(&a_sel, &mut g);
                 // Line 9: d̂_i = Σ_k a_{ij'_k} + (m - d) g_i  (mask-aware count)
                 let n_unsel = (m_valid - d_eff as f32).max(0.0);
-                let row_sum: Vec<f32> = (0..n)
-                    .map(|i| a_sel.row(i).iter().sum::<f32>() + n_unsel * g[i])
-                    .collect();
+                let mut row_sum = scratch.buf(m);
+                for (i, rs) in row_sum.iter_mut().enumerate() {
+                    *rs = a_sel.row(i).iter().sum::<f32>() + n_unsel * g[i];
+                }
                 // Line 10: v = V_{(J')ᶜ}ᵀ 1
-                let total = masking::masked_col_sums(v, mask);
-                let sel_sum = crate::tensor::col_sums(&v_sel);
-                let v_unsel: Vec<f32> =
-                    total.iter().zip(&sel_sum).map(|(t, s)| t - s).collect();
-                // Line 11: R = diag(d̂)⁻¹ (R_{J'} + g vᵀ)
-                Matrix::from_fn(n, v.cols(), |i, j| {
-                    (r_sel.get(i, j) + g[i] * v_unsel[j]) / row_sum[i].max(1e-30)
-                })
+                let mut v_unsel = scratch.buf(v.cols());
+                masking::masked_col_sums_into(v, mask, &mut v_unsel);
+                let mut sel_sum = scratch.buf(v.cols());
+                col_sums_into(&v_sel, &mut sel_sum);
+                for (t, &s) in v_unsel.iter_mut().zip(&sel_sum) {
+                    *t -= s;
+                }
+                scratch.recycle_buf(sel_sum);
+                // Line 11: R = diag(d̂)⁻¹ (R_{J'} + g vᵀ) — per-element
+                // division, matching the allocating path bit-for-bit
+                for i in 0..m {
+                    let gi = g[i];
+                    let denom = row_sum[i].max(1e-30);
+                    for (o, (&r, &vu)) in
+                        out.row_mut(i).iter_mut().zip(r_sel.row(i).iter().zip(&v_unsel))
+                    {
+                        *o = (r + gi * vu) / denom;
+                    }
+                }
+                scratch.recycle_buf(v_unsel);
+                scratch.recycle_buf(row_sum);
+                scratch.recycle_buf(g);
+                scratch.recycle(r_sel);
             }
             RowNorm::Simple => {
-                let mut out = r_sel;
-                let inv: Vec<f32> = (0..n)
-                    .map(|i| 1.0 / a_sel.row(i).iter().sum::<f32>().max(1e-30))
-                    .collect();
-                crate::tensor::scale_rows_inplace(&mut out, &inv);
-                out
+                matmul_into(&a_sel, &v_sel, out);
+                let mut inv = scratch.buf(m);
+                for (i, x) in inv.iter_mut().enumerate() {
+                    *x = 1.0 / a_sel.row(i).iter().sum::<f32>().max(1e-30);
+                }
+                scale_rows_inplace(out, &inv);
+                scratch.recycle_buf(inv);
             }
             RowNorm::None => {
                 // Plain AMM estimator of Prop. 1: rescale each sampled
                 // column by 1/(d p̂_i), estimate the softmax row sum from
                 // the same sample.
                 let total_w: f32 = weights.iter().sum();
-                let inv_dp: Vec<f32> = sel_idx
-                    .iter()
-                    .map(|&i| {
-                        let p_i = (weights[i] / total_w).max(1e-30);
-                        1.0 / (d_eff as f32 * p_i)
-                    })
-                    .collect();
-                let mut out = Matrix::zeros(n, v.cols());
-                for i in 0..n {
+                let mut inv_dp = scratch.buf(d_eff);
+                for (x, &i) in inv_dp.iter_mut().zip(&sel_idx) {
+                    let p_i = (weights[i] / total_w).max(1e-30);
+                    *x = 1.0 / (d_eff as f32 * p_i);
+                }
+                out.data_mut().iter_mut().for_each(|x| *x = 0.0);
+                for i in 0..m {
                     let arow = a_sel.row(i);
                     let mut est_row_sum = 0.0f32;
-                    for (s, &w) in arow.iter().zip(&inv_dp) {
+                    for (s, &w) in arow.iter().zip(inv_dp.iter()) {
                         est_row_sum += s * w;
                     }
                     let inv = 1.0 / est_row_sum.max(1e-30);
                     let orow = out.row_mut(i);
-                    for (jj, (&a, &w)) in arow.iter().zip(&inv_dp).enumerate() {
+                    for (jj, (&a, &w)) in arow.iter().zip(inv_dp.iter()).enumerate() {
                         let coeff = a * w * inv;
                         for (o, &vv) in orow.iter_mut().zip(v_sel.row(jj)) {
                             *o += coeff * vv;
                         }
                     }
                 }
-                out
+                scratch.recycle_buf(inv_dp);
             }
         };
+        scratch.recycle(a_sel);
+        scratch.recycle(v_sel);
+        scratch.recycle_buf(weights);
 
         // Line 12: pilot sampling reutilization — exact rows B_J V.
         if self.psr {
-            let exact = matmul(&bj, v); // (d, p)
+            let mut exact = scratch.matrix(pilot_d, v.cols()); // (d, p)
+            matmul_into(&bj, v, &mut exact);
             for (row, &i) in pilot_idx.iter().enumerate() {
-                r.set_row(i, exact.row(row));
+                out.set_row(i, exact.row(row));
             }
+            scratch.recycle(exact);
         }
-        r
+        scratch.recycle(bj);
+        scratch.recycle_idx(pilot_idx);
+        scratch.recycle_idx(sel_idx);
     }
 }
 
@@ -222,15 +313,25 @@ impl AttentionMethod for Skeinformer {
         }
     }
 
-    fn compute(
+    fn compute_rng_into(
         &self,
-        q: &Matrix,
-        k: &Matrix,
-        v: &Matrix,
-        mask: Option<&[f32]>,
+        inputs: &AttnInputs<'_>,
         rng: &mut Rng,
-    ) -> Matrix {
-        self.compute_impl(q, k, v, mask, rng)
+        out: &mut Matrix,
+        scratch: &mut AttnScratch,
+    ) {
+        self.compute_impl(inputs, rng, out, scratch);
+    }
+
+    fn supports_cross_shape(&self) -> bool {
+        true
+    }
+
+    fn begin_session(&self, spec: SessionSpec) -> Box<dyn AttentionSession> {
+        // re-pilot on the spec stride: each query runs Algorithm 1 over
+        // the full KV state (O(n·d), the method's own complexity) with
+        // the current epoch's seed
+        RecomputeSession::boxed(*self, spec)
     }
 }
 
@@ -386,5 +487,17 @@ mod tests {
         for &x in out.data() {
             assert!(x.abs() <= vmax * 3.0, "unnormalized output {x}");
         }
+    }
+
+    #[test]
+    fn cross_shape_decode_queries_work() {
+        // 4 decode queries against a 64-token KV cache: right shape,
+        // finite, and reasonably close to the exact cross attention.
+        let (q, k, v) = peaked_qkv(64, 8, 19);
+        let q_dec = q.gather_rows(&[60, 61, 62, 63]);
+        let skein = Skeinformer::new(48);
+        let out = skein.compute(&q_dec, &k, &v, None, &mut Rng::new(4));
+        assert_eq!(out.shape(), (4, 8));
+        assert!(out.all_finite());
     }
 }

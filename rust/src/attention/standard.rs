@@ -1,11 +1,16 @@
 //! Exact O(n²) softmax attention — the baseline every approximation is
 //! measured against (the paper's "Standard" row).
 
-use super::{check_inputs, masking, AttentionMethod};
+use super::{
+    check_inputs, masking, AttentionMethod, AttentionSession, AttnInputs, AttnScratch,
+    RecomputeSession, SessionSpec,
+};
 use crate::rng::Rng;
-use crate::tensor::{matmul, matmul_nt, softmax_rows, Matrix};
+use crate::tensor::{matmul_into, matmul_nt_into, softmax_rows, Matrix};
 
-/// `softmax(QKᵀ/√p) V`, computed exactly.
+/// `softmax(QKᵀ/√p) V`, computed exactly.  Cross-shape (`m×p` queries
+/// against `n×p` keys) works out of the box — the softmax is per query
+/// row — which is what makes the streaming-decode session exact.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Standard;
 
@@ -13,13 +18,23 @@ impl Standard {
     /// The exact attention as a free function (used by benches/tests that
     /// don't want trait dispatch).
     pub fn exact(q: &Matrix, k: &Matrix, v: &Matrix, mask: Option<&[f32]>) -> Matrix {
-        check_inputs(q, k, v, mask);
-        let p = q.cols() as f32;
-        let mut scores = matmul_nt(q, k);
+        let mut out = Matrix::zeros(q.rows(), v.cols());
+        Self::exact_into(&AttnInputs::new(q, k, v).with_mask(mask), &mut out, &mut AttnScratch::new());
+        out
+    }
+
+    /// [`exact`](Self::exact) into a caller-provided output with recycled
+    /// temporaries — the zero-allocation form.
+    pub fn exact_into(inputs: &AttnInputs<'_>, out: &mut Matrix, scratch: &mut AttnScratch) {
+        check_inputs("standard", true, inputs.q, inputs.k, inputs.v, inputs.mask);
+        let p = inputs.q.cols() as f32;
+        let mut scores = scratch.matrix(inputs.q.rows(), inputs.k.rows());
+        matmul_nt_into(inputs.q, inputs.k, &mut scores);
         crate::tensor::scale_inplace(&mut scores, 1.0 / p.sqrt());
-        masking::mask_score_columns(&mut scores, mask);
+        masking::mask_score_columns(&mut scores, inputs.mask);
         softmax_rows(&mut scores);
-        matmul(&scores, v)
+        matmul_into(&scores, inputs.v, out);
+        scratch.recycle(scores);
     }
 }
 
@@ -28,19 +43,28 @@ impl AttentionMethod for Standard {
         "standard"
     }
 
-    fn compute(
+    fn compute_rng_into(
         &self,
-        q: &Matrix,
-        k: &Matrix,
-        v: &Matrix,
-        mask: Option<&[f32]>,
+        inputs: &AttnInputs<'_>,
         _rng: &mut Rng,
-    ) -> Matrix {
-        Self::exact(q, k, v, mask)
+        out: &mut Matrix,
+        scratch: &mut AttnScratch,
+    ) {
+        Self::exact_into(inputs, out, scratch);
     }
 
     fn is_exact(&self) -> bool {
         true
+    }
+
+    fn supports_cross_shape(&self) -> bool {
+        true
+    }
+
+    fn begin_session(&self, spec: SessionSpec) -> Box<dyn AttentionSession> {
+        // recompute *is* the exact streaming softmax here: a query costs
+        // O(m·n·p) against the stored KV state — O(n·p) per decoded token
+        RecomputeSession::boxed(*self, spec)
     }
 }
 

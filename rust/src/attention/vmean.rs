@@ -5,7 +5,10 @@
 //! strength on some LRA tasks (Table 1: best Text score) is one of the
 //! paper's observations.
 
-use super::{check_inputs, masking, AttentionMethod};
+use super::{
+    check_inputs, masking, AttentionMethod, AttentionSession, AttnInputs, AttnScratch,
+    SessionSpec, VMeanSession,
+};
 use crate::rng::Rng;
 use crate::tensor::Matrix;
 
@@ -17,20 +20,32 @@ impl AttentionMethod for VMean {
         "vmean"
     }
 
-    fn compute(
+    fn compute_rng_into(
         &self,
-        q: &Matrix,
-        k: &Matrix,
-        v: &Matrix,
-        mask: Option<&[f32]>,
+        inputs: &AttnInputs<'_>,
         _rng: &mut Rng,
-    ) -> Matrix {
-        check_inputs(q, k, v, mask);
-        let n = v.rows();
-        let m = masking::valid_count(mask, n);
-        let sums = masking::masked_col_sums(v, mask);
-        let mean: Vec<f32> = sums.iter().map(|s| s / m).collect();
-        Matrix::from_fn(n, v.cols(), |_, j| mean[j])
+        out: &mut Matrix,
+        scratch: &mut AttnScratch,
+    ) {
+        check_inputs(self.name(), self.supports_cross_shape(), inputs.q, inputs.k, inputs.v, inputs.mask);
+        let v = inputs.v;
+        let m = masking::valid_count(inputs.mask, v.rows());
+        let mut sums = scratch.buf(v.cols());
+        masking::masked_col_sums_into(v, inputs.mask, &mut sums);
+        for i in 0..out.rows() {
+            for (o, &s) in out.row_mut(i).iter_mut().zip(&sums) {
+                *o = s / m;
+            }
+        }
+        scratch.recycle_buf(sums);
+    }
+
+    fn supports_cross_shape(&self) -> bool {
+        true
+    }
+
+    fn begin_session(&self, spec: SessionSpec) -> Box<dyn AttentionSession> {
+        Box::new(VMeanSession::new(spec))
     }
 }
 

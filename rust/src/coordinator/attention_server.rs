@@ -30,6 +30,20 @@
 //! so a given arrival order reproduces exactly while distinct batches get
 //! disjoint per-head streams.
 //!
+//! **Streaming decode.**  Alongside the batched one-shot path, a client
+//! can [`open_stream`](AttentionServerHandle::open_stream) a stateful
+//! decode stream: the server keeps one
+//! [`AttentionSession`](crate::attention::AttentionSession) per head
+//! (seeded [`stream_seed`]`(cfg.seed, stream, head)`), and the stream's
+//! [`append`](StreamHandle::append) / [`query`](StreamHandle::query) ops
+//! ride the same channel — and the same zero-copy `Arc<[f32]>` slab
+//! convention — as batched requests, preserving per-stream op order.
+//! Appends are O(heads · head_dim) bookkeeping; queries run on the serve
+//! thread against the per-stream session state (per-token cost is the
+//! session's — exact-incremental for standard/vmean/linformer, the
+//! method's own linear cost otherwise), instead of re-uploading and
+//! recomputing the whole prefix each token.
+//!
 //! # Examples
 //!
 //! ```
@@ -54,10 +68,11 @@
 //! handle.shutdown().unwrap();
 //! ```
 
-use crate::attention::{self, BatchedAttention};
+use crate::attention::{self, AttentionSession, AttnScratch, BatchedAttention, SessionSpec};
 use crate::rng::Rng;
 use crate::tensor::{BatchTensor, Matrix};
 use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -67,6 +82,13 @@ use std::time::{Duration, Instant};
 /// would reuse the same stream set.  [`crate::rng::mix`] instead.
 pub fn batch_seed(base: u64, batch: u64) -> u64 {
     crate::rng::mix(base, batch)
+}
+
+/// Session seed for head `h` of stream `s`: a double
+/// [`mix`](crate::rng::mix) so streams are decorrelated from each other
+/// and from the batch path's `batch_seed(base, i) ^ g` family.
+pub fn stream_seed(base: u64, stream: u64, head: u64) -> u64 {
+    crate::rng::mix(crate::rng::mix(base, stream), head)
 }
 
 /// Server configuration: workload shape + batching policy.
@@ -165,10 +187,85 @@ struct Pending {
     enqueued: Instant,
 }
 
+/// One operation on a decode stream.  Payloads ride the same zero-copy
+/// `Arc<[f32]>` slab path as [`HeadsRequest`]: the server reads them in
+/// place and only the reply is an owned copy.
+pub enum StreamOp {
+    /// Create the stream's per-head sessions (one per configured head).
+    Open {
+        /// Re-pilot stride for approximating methods (see
+        /// [`SessionSpec::repilot_stride`]).
+        repilot_stride: usize,
+    },
+    /// Append one token: `k`/`v` are `[heads, head_dim]` row-major slabs.
+    Append { k: Arc<[f32]>, v: Arc<[f32]> },
+    /// Query `rows` query rows per head: `q` is `[heads, rows, head_dim]`;
+    /// the reply is the `[heads, rows, head_dim]` output slab.
+    Query { q: Arc<[f32]>, rows: usize, reply: mpsc::Sender<Vec<f32>> },
+    /// Drop the stream's state.
+    Close,
+}
+
+/// A message to the serve loop: a batched request, a stream operation,
+/// or the explicit shutdown sentinel (needed because cloned stream
+/// senders may outlive the handle — channel disconnect alone can no
+/// longer signal shutdown).
+enum ServerMsg {
+    Batch(Pending),
+    Stream { stream: u64, op: StreamOp },
+    Shutdown,
+}
+
 /// Client handle to a running attention server.
 pub struct AttentionServerHandle {
-    tx: mpsc::Sender<Pending>,
+    tx: mpsc::Sender<ServerMsg>,
+    next_stream: AtomicU64,
+    heads: usize,
+    head_dim: usize,
     join: Option<std::thread::JoinHandle<AttentionServerStats>>,
+}
+
+/// Client handle to one decode stream on a running server.  Ops sent
+/// through one handle arrive in order (the channel preserves per-sender
+/// order), so `append` → `query` sequences behave like local sessions.
+pub struct StreamHandle {
+    id: u64,
+    heads: usize,
+    head_dim: usize,
+    tx: mpsc::Sender<ServerMsg>,
+}
+
+impl StreamHandle {
+    /// Elements per `[heads, head_dim]` token slab.
+    pub fn token_elems(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Append one token (each slab `[heads, head_dim]`, read in place).
+    pub fn append(&self, k: Arc<[f32]>, v: Arc<[f32]>) {
+        let _ = self.tx.send(ServerMsg::Stream {
+            stream: self.id,
+            op: StreamOp::Append { k, v },
+        });
+    }
+
+    /// Query `rows` query rows per head (`q` is `[heads, rows, head_dim]`,
+    /// read in place); returns a receiver for the output slab.  The
+    /// receiver errors if the op is rejected (bad shape, unknown stream,
+    /// empty stream, or a cross-shape query against a square-only method).
+    pub fn query(&self, q: Arc<[f32]>, rows: usize) -> mpsc::Receiver<Vec<f32>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let _ = self.tx.send(ServerMsg::Stream {
+            stream: self.id,
+            op: StreamOp::Query { q, rows, reply: reply_tx },
+        });
+        reply_rx
+    }
+
+    /// Drop the stream's server-side state.
+    pub fn close(self) {
+        let _ = self.tx.send(ServerMsg::Stream { stream: self.id, op: StreamOp::Close });
+    }
 }
 
 /// Aggregate serving statistics, reported on shutdown.
@@ -176,8 +273,13 @@ pub struct AttentionServerHandle {
 pub struct AttentionServerStats {
     pub requests: u64,
     pub batches: u64,
-    /// Requests dropped for malformed payloads (wrong slab/mask length).
+    /// Requests or stream ops dropped for malformed payloads (wrong
+    /// slab/mask length, unknown stream, invalid query shape).
     pub rejected: u64,
+    /// Stream tokens appended across all streams.
+    pub stream_appends: u64,
+    /// Stream queries answered across all streams.
+    pub stream_queries: u64,
     /// Mean queueing delay (ms) — time from submit to batch formation.
     pub mean_queue_ms: f64,
     /// Mean executed batch occupancy (filled slots / max_batch).
@@ -191,12 +293,28 @@ impl AttentionServerHandle {
     /// receiver errors if the request is rejected (malformed payload).
     pub fn submit(&self, req: HeadsRequest) -> mpsc::Receiver<Vec<f32>> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        let _ = self.tx.send(Pending { req, reply: reply_tx, enqueued: Instant::now() });
+        let _ = self.tx.send(ServerMsg::Batch(Pending {
+            req,
+            reply: reply_tx,
+            enqueued: Instant::now(),
+        }));
         reply_rx
     }
 
-    /// Stop the server and collect stats.
+    /// Open a streaming decode session set (one [`AttentionSession`] per
+    /// configured head, server-side) and return its handle.
+    pub fn open_stream(&self, repilot_stride: usize) -> StreamHandle {
+        let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
+        let _ = self.tx.send(ServerMsg::Stream { stream: id, op: StreamOp::Open { repilot_stride } });
+        StreamHandle { id, heads: self.heads, head_dim: self.head_dim, tx: self.tx.clone() }
+    }
+
+    /// Stop the server and collect stats.  Live [`StreamHandle`]s do not
+    /// block shutdown (an explicit sentinel ends the serve loop); their
+    /// later ops simply error out client-side.  Ops already queued ahead
+    /// of the shutdown are still processed.
     pub fn shutdown(mut self) -> Result<AttentionServerStats> {
+        let _ = self.tx.send(ServerMsg::Shutdown);
         drop(self.tx);
         self.join
             .take()
@@ -207,6 +325,8 @@ impl AttentionServerHandle {
 }
 
 /// Start the engine-backed server; validates the method name up front.
+/// [`AttentionServerHandle::shutdown`] stops it even while
+/// [`StreamHandle`]s are still alive.
 pub fn start(cfg: AttentionServerConfig) -> Result<AttentionServerHandle> {
     anyhow::ensure!(
         attention::by_name(&cfg.method, cfg.d).is_some(),
@@ -214,12 +334,27 @@ pub fn start(cfg: AttentionServerConfig) -> Result<AttentionServerHandle> {
         cfg.method
     );
     anyhow::ensure!(cfg.max_batch > 0, "max_batch must be positive");
-    let (tx, rx) = mpsc::channel::<Pending>();
+    let (tx, rx) = mpsc::channel::<ServerMsg>();
+    let heads = cfg.heads;
+    let head_dim = cfg.head_dim;
     let join = std::thread::spawn(move || serve_loop(cfg, rx));
-    Ok(AttentionServerHandle { tx, join: Some(join) })
+    Ok(AttentionServerHandle {
+        tx,
+        next_stream: AtomicU64::new(0),
+        heads,
+        head_dim,
+        join: Some(join),
+    })
 }
 
-fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<Pending>) -> AttentionServerStats {
+/// Per-stream server-side state: one session per head plus the recycled
+/// scratch their queries draw temporaries from.
+struct StreamState {
+    sessions: Vec<Box<dyn AttentionSession>>,
+    scratch: AttnScratch,
+}
+
+fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<ServerMsg>) -> AttentionServerStats {
     let method = attention::by_name(&cfg.method, cfg.d).expect("method validated in start()");
     let mut engine = BatchedAttention::new();
     if let Some(w) = cfg.workers {
@@ -231,11 +366,32 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<Pending>) -> Attent
     let mut queue_ms_sum = 0.0f64;
     let mut occupancy_sum = 0.0f64;
     let mut batch_ms_sum = 0.0f64;
+    let mut streams: std::collections::HashMap<u64, StreamState> = Default::default();
+    let mut out_cache: Option<BatchTensor> = None;
 
     loop {
-        let Some(mut pending) = super::collect_batch(&rx, cfg.max_batch, cfg.max_wait) else {
+        let Some(msgs) = collect_msgs(&rx, cfg.max_batch, cfg.max_wait) else {
             break; // all senders dropped -> shutdown
         };
+        // stream ops apply immediately, in arrival order; batched
+        // requests accumulate and flush as engine grids below
+        let mut shutting_down = false;
+        let mut pending = Vec::new();
+        for msg in msgs {
+            match msg {
+                ServerMsg::Batch(p) => pending.push(p),
+                ServerMsg::Stream { stream, op } => {
+                    handle_stream_op(&cfg, method.as_ref(), &mut streams, stream, op, &mut stats)
+                }
+                ServerMsg::Shutdown => shutting_down = true,
+            }
+        }
+        if pending.is_empty() {
+            if shutting_down {
+                break;
+            }
+            continue;
+        }
 
         // drop malformed payloads (their reply sender closes -> client
         // recv errors); keep the rest
@@ -251,46 +407,65 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<Pending>) -> Attent
             ok
         });
         if pending.is_empty() {
+            // the sentinel must survive an all-malformed drain too
+            if shutting_down {
+                break;
+            }
             continue;
         }
 
-        // pack the grid zero-copy: batch = sequences in this flush, each
-        // request's slabs wrapped in place (Arc clones, no element copies)
-        let slab_views = |get: fn(&HeadsRequest) -> &Arc<[f32]>| {
-            BatchTensor::from_slabs(
-                cfg.heads,
-                cfg.seq,
-                cfg.head_dim,
-                pending.iter().map(|p| Arc::clone(get(&p.req))).collect(),
-            )
-        };
-        let q = slab_views(|r| &r.q);
-        let k = slab_views(|r| &r.k);
-        let v = slab_views(|r| &r.v);
-        let any_mask = pending.iter().any(|p| p.req.mask.is_some());
-        let mut masks = if any_mask {
-            Some(Matrix::full(pending.len(), cfg.seq, 1.0))
-        } else {
-            None
-        };
-        for (b, p) in pending.iter().enumerate() {
-            if let (Some(mm), Some(req_mask)) = (masks.as_mut(), p.req.mask.as_ref()) {
-                mm.set_row(b, req_mask);
+        // execute in max_batch-sized chunks (the urgent stream-query
+        // drain in collect_msgs may have pulled in more than one batch's
+        // worth), packing each grid zero-copy: the requests' slabs are
+        // wrapped in place (Arc clones, no element copies)
+        for chunk in pending.chunks(cfg.max_batch) {
+            let slab_views = |get: fn(&HeadsRequest) -> &Arc<[f32]>| {
+                BatchTensor::from_slabs(
+                    cfg.heads,
+                    cfg.seq,
+                    cfg.head_dim,
+                    chunk.iter().map(|p| Arc::clone(get(&p.req))).collect(),
+                )
+            };
+            let q = slab_views(|r| &r.q);
+            let k = slab_views(|r| &r.k);
+            let v = slab_views(|r| &r.v);
+            let any_mask = chunk.iter().any(|p| p.req.mask.is_some());
+            let mut masks = if any_mask {
+                Some(Matrix::full(chunk.len(), cfg.seq, 1.0))
+            } else {
+                None
+            };
+            for (b, p) in chunk.iter().enumerate() {
+                if let (Some(mm), Some(req_mask)) = (masks.as_mut(), p.req.mask.as_ref()) {
+                    mm.set_row(b, req_mask);
+                }
+                queue_ms_sum += p.enqueued.elapsed().as_secs_f64() * 1e3;
             }
-            queue_ms_sum += p.enqueued.elapsed().as_secs_f64() * 1e3;
-        }
 
-        let t0 = Instant::now();
-        let seed = batch_seed(cfg.seed, stats.batches);
-        let out = engine.run(method.as_ref(), &q, &k, &v, masks.as_ref(), seed);
-        batch_ms_sum += t0.elapsed().as_secs_f64() * 1e3;
+            let t0 = Instant::now();
+            let seed = batch_seed(cfg.seed, stats.batches);
+            // reuse the output tensor across equal-occupancy batches —
+            // with the engine's in-place head writes the steady-state
+            // request path allocates only the per-request reply copies
+            let mut out = match out_cache.take() {
+                Some(t) if t.batch() == chunk.len() => t,
+                _ => BatchTensor::zeros(chunk.len(), cfg.heads, cfg.seq, cfg.head_dim),
+            };
+            engine.run_into(method.as_ref(), &q, &k, &v, masks.as_ref(), seed, &mut out);
+            batch_ms_sum += t0.elapsed().as_secs_f64() * 1e3;
 
-        for (b, p) in pending.iter().enumerate() {
-            let _ = p.reply.send(out.sequence(b).to_vec());
+            for (b, p) in chunk.iter().enumerate() {
+                let _ = p.reply.send(out.sequence(b).to_vec());
+            }
+            out_cache = Some(out);
+            stats.requests += chunk.len() as u64;
+            stats.batches += 1;
+            occupancy_sum += chunk.len() as f64 / cfg.max_batch as f64;
         }
-        stats.requests += pending.len() as u64;
-        stats.batches += 1;
-        occupancy_sum += pending.len() as f64 / cfg.max_batch as f64;
+        if shutting_down {
+            break;
+        }
     }
 
     if stats.requests > 0 {
@@ -301,6 +476,132 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<Pending>) -> Attent
         stats.mean_batch_ms = batch_ms_sum / stats.batches as f64;
     }
     stats
+}
+
+/// Stream-aware dynamic batching: like
+/// [`collect_batch`](super::collect_batch), but only *batched* requests
+/// count toward `max`, and a pending stream **query** short-circuits the
+/// wait — a decode client is blocked on that reply, so making it sit out
+/// the `max_wait` batch-formation deadline would put a ~`max_wait` floor
+/// under every decoded token.  When a query is seen, whatever is already
+/// queued is drained without blocking and the flush happens immediately.
+/// Appends and opens carry no reply and batch freely.
+fn collect_msgs(
+    rx: &mpsc::Receiver<ServerMsg>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Option<Vec<ServerMsg>> {
+    // queries (a client is blocked on the reply) and the shutdown
+    // sentinel both short-circuit the batching wait
+    let is_query = |m: &ServerMsg| {
+        matches!(
+            m,
+            ServerMsg::Stream { op: StreamOp::Query { .. }, .. } | ServerMsg::Shutdown
+        )
+    };
+    let first = rx.recv().ok()?;
+    let mut urgent = is_query(&first);
+    let mut batch_count = usize::from(matches!(first, ServerMsg::Batch(_)));
+    let mut pending = vec![first];
+    let deadline = Instant::now() + max_wait;
+    while batch_count < max_batch && !urgent {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(m) => {
+                urgent = is_query(&m);
+                batch_count += usize::from(matches!(m, ServerMsg::Batch(_)));
+                pending.push(m);
+            }
+            Err(_) => break, // timeout or disconnect: flush what we have
+        }
+    }
+    if urgent {
+        // drain only what is already queued (no blocking), then flush so
+        // the query's reply is not delayed behind batch formation
+        while let Ok(m) = rx.try_recv() {
+            pending.push(m);
+        }
+    }
+    Some(pending)
+}
+
+/// Apply one stream op to the server's stream table.  Malformed ops are
+/// rejected (counted, reply channel dropped) rather than allowed to panic
+/// the serve thread: shape checks here mirror the capability checks the
+/// attention layer enforces.
+fn handle_stream_op(
+    cfg: &AttentionServerConfig,
+    method: &dyn attention::AttentionMethod,
+    streams: &mut std::collections::HashMap<u64, StreamState>,
+    stream: u64,
+    op: StreamOp,
+    stats: &mut AttentionServerStats,
+) {
+    let token_elems = cfg.heads * cfg.head_dim;
+    match op {
+        StreamOp::Open { repilot_stride } => {
+            let sessions = (0..cfg.heads)
+                .map(|h| {
+                    method.begin_session(
+                        SessionSpec::new(cfg.head_dim)
+                            .with_seed(stream_seed(cfg.seed, stream, h as u64))
+                            .with_repilot_stride(repilot_stride)
+                            .with_capacity_hint(cfg.seq),
+                    )
+                })
+                .collect();
+            streams.insert(stream, StreamState { sessions, scratch: AttnScratch::new() });
+        }
+        StreamOp::Append { k, v } => {
+            let Some(state) = streams.get_mut(&stream) else {
+                stats.rejected += 1;
+                return;
+            };
+            if k.len() != token_elems || v.len() != token_elems {
+                stats.rejected += 1;
+                return;
+            }
+            for (h, session) in state.sessions.iter_mut().enumerate() {
+                let o = h * cfg.head_dim;
+                session.append(&k[o..o + cfg.head_dim], &v[o..o + cfg.head_dim]);
+            }
+            stats.stream_appends += 1;
+        }
+        StreamOp::Query { q, rows, reply } => {
+            let Some(state) = streams.get_mut(&stream) else {
+                stats.rejected += 1;
+                return;
+            };
+            let StreamState { sessions, scratch } = state;
+            let len = sessions.first().map_or(0, |s| s.len());
+            let shape_ok = rows > 0 && q.len() == cfg.heads * rows * cfg.head_dim;
+            // square-only methods can only answer full-state queries
+            let cross_ok = method.supports_cross_shape() || rows == len;
+            if len == 0 || !shape_ok || !cross_ok {
+                stats.rejected += 1;
+                return; // dropping `reply` signals the rejection
+            }
+            let head_elems = rows * cfg.head_dim;
+            let mut out_slab = vec![0.0f32; cfg.heads * head_elems];
+            for (h, session) in sessions.iter_mut().enumerate() {
+                let qbuf = scratch.buf_from(&q[h * head_elems..(h + 1) * head_elems]);
+                let q_head = Matrix::from_vec(rows, cfg.head_dim, qbuf);
+                let mut out = scratch.matrix(rows, cfg.head_dim);
+                session.query_into(&q_head, &mut out, scratch);
+                out_slab[h * head_elems..(h + 1) * head_elems].copy_from_slice(out.data());
+                scratch.recycle(out);
+                scratch.recycle_buf(q_head.into_vec());
+            }
+            let _ = reply.send(out_slab);
+            stats.stream_queries += 1;
+        }
+        StreamOp::Close => {
+            streams.remove(&stream);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -421,6 +722,113 @@ mod tests {
         let got_owned = handle.submit(owned).recv().unwrap();
         handle.shutdown().unwrap();
         assert_eq!(got, got_owned);
+    }
+
+    #[test]
+    fn stream_decode_matches_direct_session_math() {
+        // standard-method stream: a one-row query after t appends must
+        // equal exact cross attention of that query against the appended
+        // keys, per head
+        let c = cfg("standard", 2);
+        let handle = start(c.clone()).unwrap();
+        let stream = handle.open_stream(1);
+        let mut rng = Rng::new(3);
+        let token_elems = c.heads * c.head_dim;
+        let mut ks: Vec<Arc<[f32]>> = Vec::new();
+        let mut vs: Vec<Arc<[f32]>> = Vec::new();
+        for _ in 0..6 {
+            let mut k = vec![0.0f32; token_elems];
+            let mut v = vec![0.0f32; token_elems];
+            rng.fill_normal(&mut k);
+            rng.fill_normal(&mut v);
+            let (k, v): (Arc<[f32]>, Arc<[f32]>) = (k.into(), v.into());
+            stream.append(k.clone(), v.clone());
+            ks.push(k);
+            vs.push(v);
+        }
+        let mut q = vec![0.0f32; token_elems]; // one query row per head
+        rng.fill_normal(&mut q);
+        let got = stream.query(q.clone().into(), 1).recv().expect("stream reply");
+        assert_eq!(got.len(), token_elems);
+
+        for h in 0..c.heads {
+            let o = h * c.head_dim;
+            let k_mat = crate::tensor::Matrix::from_rows(
+                &ks.iter().map(|t| t[o..o + c.head_dim].to_vec()).collect::<Vec<_>>(),
+            );
+            let v_mat = crate::tensor::Matrix::from_rows(
+                &vs.iter().map(|t| t[o..o + c.head_dim].to_vec()).collect::<Vec<_>>(),
+            );
+            let q_mat = crate::tensor::Matrix::from_vec(1, c.head_dim, q[o..o + c.head_dim].to_vec());
+            let want = Standard::exact(&q_mat, &k_mat, &v_mat, None);
+            for j in 0..c.head_dim {
+                assert!(
+                    (got[o + j] - want.get(0, j)).abs() < 1e-5,
+                    "head {h} col {j}: {} vs {}",
+                    got[o + j],
+                    want.get(0, j)
+                );
+            }
+        }
+
+        stream.close();
+        let stats = handle.shutdown().unwrap();
+        assert_eq!(stats.stream_appends, 6);
+        assert_eq!(stats.stream_queries, 1);
+        assert_eq!(stats.rejected, 0);
+    }
+
+    #[test]
+    fn stream_rejections_do_not_wedge_the_server() {
+        let c = cfg("standard", 2);
+        let handle = start(c.clone()).unwrap();
+        let stream = handle.open_stream(1);
+        // query before any append -> rejected, reply channel closes
+        let early = stream.query(vec![0.0f32; c.heads * c.head_dim].into(), 1);
+        assert!(early.recv().is_err());
+        // malformed append (wrong slab size) -> rejected
+        let bad: Arc<[f32]> = vec![0.0f32; 3].into();
+        stream.append(bad.clone(), bad);
+        // a good request still flows
+        let ok = handle.submit(random_request(&c, 1));
+        assert!(ok.recv().is_ok());
+        stream.close();
+        let stats = handle.shutdown().unwrap();
+        assert_eq!(stats.rejected, 2);
+        assert_eq!(stats.stream_appends, 0);
+    }
+
+    #[test]
+    fn shutdown_completes_with_a_live_stream_handle() {
+        // the stream handle's cloned sender must not wedge shutdown
+        let c = cfg("standard", 2);
+        let handle = start(c.clone()).unwrap();
+        let stream = handle.open_stream(1);
+        let token_elems = c.heads * c.head_dim;
+        stream.append(vec![0.5f32; token_elems].into(), vec![0.5f32; token_elems].into());
+        let stats = handle.shutdown().expect("shutdown must not hang");
+        assert_eq!(stats.stream_appends, 1);
+        // late ops on the dead server are silently dropped client-side
+        let late = stream.query(vec![0.0f32; token_elems].into(), 1);
+        assert!(late.recv().is_err());
+    }
+
+    #[test]
+    fn stream_and_batch_seed_families_are_disjoint_enough() {
+        let mut seen = std::collections::HashSet::new();
+        for s in 0..32u64 {
+            for h in 0..8u64 {
+                assert!(seen.insert(stream_seed(0, s, h)), "stream seed reuse at ({s},{h})");
+            }
+        }
+        for b in 0..32u64 {
+            for g in 0..8u64 {
+                assert!(
+                    seen.insert(batch_seed(0, b) ^ g),
+                    "stream/batch seed collision at batch {b} head {g}"
+                );
+            }
+        }
     }
 
     #[test]

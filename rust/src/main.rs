@@ -60,6 +60,8 @@ fn print_help() {
            serve    --method skeinformer [--engine cpu|pjrt] [--requests N] [--max-wait-ms N]\n\
                     cpu engine (default; batched attention, no artifacts needed):\n\
                     [--batch B] [--heads H] [--seq N] [--head-dim P] [--d D] [--workers W]\n\
+                    --stream runs a streaming-decode demo instead (one token\n\
+                    appended + queried per step): [--tokens N] [--repilot-stride S]\n\
            inspect  <artifacts/..._manifest.json>\n\n\
          GLOBAL FLAGS\n\
            --pool-size N   worker threads in the persistent pool (default:\n\
@@ -210,10 +212,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 /// Serve raw Q/K/V head slabs through the batched attention engine: the
 /// B×H workload shape (`--batch`, `--heads`) the throughput benches use.
+/// `--stream` switches to the autoregressive-decode demo instead.
 fn cmd_serve_cpu(args: &Args) -> Result<()> {
     use skeinformer::coordinator::attention_server::{self, AttentionServerConfig, HeadsRequest};
 
     let cfg = AttentionServerConfig::from_args(args)?;
+    if args.switch("stream") {
+        return cmd_serve_stream(args, cfg);
+    }
     let n_requests = args.get_usize("requests", 64)?;
     eprintln!(
         "batched attention service: method={} B<={} H={} n={} p={} d={}",
@@ -254,6 +260,65 @@ fn cmd_serve_cpu(args: &Args) -> Result<()> {
         latency.percentile(95.0),
         latency.percentile(99.0),
         stats.mean_queue_ms
+    );
+    Ok(())
+}
+
+/// Streaming-decode demo: open one stream per configured batch slot,
+/// append a token and issue a one-row query per step, report tokens/s and
+/// per-step latency percentiles.
+fn cmd_serve_stream(
+    args: &Args,
+    cfg: skeinformer::coordinator::attention_server::AttentionServerConfig,
+) -> Result<()> {
+    use skeinformer::coordinator::attention_server;
+    use std::sync::Arc;
+
+    let tokens = args.get_usize("tokens", cfg.seq)?;
+    let stride = args.get_usize("repilot-stride", 1)?;
+    eprintln!(
+        "streaming decode demo: method={} H={} p={} tokens={} repilot-stride={}",
+        cfg.method, cfg.heads, cfg.head_dim, tokens, stride
+    );
+
+    let handle = attention_server::start(cfg.clone())?;
+    let stream = handle.open_stream(stride);
+    let token_elems = stream.token_elems();
+    let mut rng = Rng::new(11);
+    let mut latency = Percentiles::default();
+    let t0 = std::time::Instant::now();
+    for _ in 0..tokens {
+        let mut mk = || {
+            let mut buf = vec![0.0f32; token_elems];
+            rng.fill_normal(&mut buf);
+            let slab: Arc<[f32]> = buf.into();
+            slab
+        };
+        let (k, v, q) = (mk(), mk(), mk());
+        let step = std::time::Instant::now();
+        stream.append(k, v);
+        let out = stream.query(q, 1).recv().context("stream query dropped")?;
+        latency.push(step.elapsed().as_secs_f64() * 1e3);
+        anyhow::ensure!(out.len() == token_elems);
+        anyhow::ensure!(out.iter().all(|x| x.is_finite()));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    stream.close();
+    let stats = handle.shutdown()?;
+    println!(
+        "decoded {} tokens in {:.2}s ({:.1} tok/s) — appends={} queries={} rejected={}",
+        tokens,
+        wall,
+        tokens as f64 / wall,
+        stats.stream_appends,
+        stats.stream_queries,
+        stats.rejected
+    );
+    println!(
+        "per-step ms: p50={:.2} p95={:.2} p99={:.2}",
+        latency.percentile(50.0),
+        latency.percentile(95.0),
+        latency.percentile(99.0)
     );
     Ok(())
 }

@@ -451,9 +451,11 @@ unsafe impl<T> Sync for SendPtr<T> {}
 // Per-worker scratch buffers
 // ---------------------------------------------------------------------------
 
-/// How many recycled buffers each thread keeps. The batched engine uses 3
-/// per in-flight head (Q/K/V); a little headroom covers nested use.
-const SCRATCH_KEEP: usize = 8;
+/// How many recycled buffers each thread keeps. The batched engine uses 4
+/// per in-flight head (Q/K/V extraction + output staging) and the v2
+/// attention methods route up to ~6 concurrent temporaries through
+/// `AttnScratch` on top; headroom covers nested use.
+const SCRATCH_KEEP: usize = 16;
 
 thread_local! {
     static SCRATCH: std::cell::RefCell<Vec<Vec<f32>>> =

@@ -79,12 +79,11 @@ mod tests {
         let mut rng = Rng::new(1);
         let s = sk.draw(&mut rng);
         for c in 0..6 {
-            let col = s.col(c);
-            let nonzero: Vec<(usize, f32)> = col
-                .iter()
+            // borrowed column iterator: no per-column allocation
+            let nonzero: Vec<(usize, f32)> = s
+                .col_iter(c)
                 .enumerate()
-                .filter(|(_, x)| **x != 0.0)
-                .map(|(i, &x)| (i, x))
+                .filter(|(_, x)| *x != 0.0)
                 .collect();
             assert_eq!(nonzero.len(), 1, "column {c} not a basis vector");
             let expect = 1.0 / (6.0f32 * 0.25).sqrt();

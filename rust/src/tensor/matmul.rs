@@ -83,10 +83,31 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 }
 
 pub fn matmul_plan(a: &Matrix, b: &Matrix, plan: MatmulPlan) -> Matrix {
+    let mut out = Matrix::zeros(a.rows(), b.cols());
+    matmul_into_plan(a, b, &mut out, plan);
+    out
+}
+
+/// `matmul` writing into a caller-provided output (overwrites `out`
+/// completely) — the zero-allocation variant the v2 attention API uses.
+/// Bitwise identical to [`matmul`] for every input.
+///
+/// # Panics
+///
+/// Panics if `out.shape() != (a.rows(), b.cols())` or the inner dims
+/// mismatch.
+pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    matmul_into_plan(a, b, out, MatmulPlan::Auto);
+}
+
+fn matmul_into_plan(a: &Matrix, b: &Matrix, out: &mut Matrix, plan: MatmulPlan) {
     let (m, ka) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(ka, kb, "matmul inner-dim mismatch: {ka} vs {kb}");
-    let mut out = Matrix::zeros(m, n);
+    assert_eq!(out.shape(), (m, n), "matmul_into output shape mismatch");
+    // the kernel accumulates, so start from zero exactly like the
+    // allocating path does
+    out.data_mut().iter_mut().for_each(|x| *x = 0.0);
     let bd = b.data();
     let run = |rows: std::ops::Range<usize>, out_rows: &mut [f32]| {
         // ikj order: C[i,:] += A[i,k] * B[k,:] — unit-stride on both C and B,
@@ -110,7 +131,6 @@ pub fn matmul_plan(a: &Matrix, b: &Matrix, plan: MatmulPlan) -> Matrix {
     } else {
         run(0..m, out.data_mut());
     }
-    out
 }
 
 /// `C = A · Bᵀ` with `A: (m,k)`, `B: (n,k)` — the `Q Kᵀ` shape.
@@ -119,11 +139,28 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
 }
 
 pub fn matmul_nt_plan(a: &Matrix, b: &Matrix, plan: MatmulPlan) -> Matrix {
+    let mut out = Matrix::zeros(a.rows(), b.rows());
+    matmul_nt_into_plan(a, b, &mut out, plan);
+    out
+}
+
+/// `matmul_nt` writing into a caller-provided output (overwrites `out`
+/// completely).  Bitwise identical to [`matmul_nt`] for every input.
+///
+/// # Panics
+///
+/// Panics if `out.shape() != (a.rows(), b.rows())` or the inner dims
+/// mismatch.
+pub fn matmul_nt_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    matmul_nt_into_plan(a, b, out, MatmulPlan::Auto);
+}
+
+fn matmul_nt_into_plan(a: &Matrix, b: &Matrix, out: &mut Matrix, plan: MatmulPlan) {
     let (m, ka) = a.shape();
     let (n, kb) = b.shape();
     assert_eq!(ka, kb, "matmul_nt inner-dim mismatch: {ka} vs {kb}");
+    assert_eq!(out.shape(), (m, n), "matmul_nt_into output shape mismatch");
     let k = ka;
-    let mut out = Matrix::zeros(m, n);
     let run = |rows: std::ops::Range<usize>, out_rows: &mut [f32]| {
         for (ri, i) in rows.enumerate() {
             let arow = a.row(i);
@@ -156,15 +193,28 @@ pub fn matmul_nt_plan(a: &Matrix, b: &Matrix, plan: MatmulPlan) -> Matrix {
     } else {
         run(0..m, out.data_mut());
     }
-    out
 }
 
 /// `C = Aᵀ · B` with `A: (k,m)`, `B: (k,n)` — the `Sᵀ V` / pilot-norm shape.
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(a.cols(), b.cols());
+    matmul_tn_into(a, b, &mut out);
+    out
+}
+
+/// `matmul_tn` writing into a caller-provided output (overwrites `out`
+/// completely).  Bitwise identical to [`matmul_tn`] for every input.
+///
+/// # Panics
+///
+/// Panics if `out.shape() != (a.cols(), b.cols())` or the inner dims
+/// mismatch.
+pub fn matmul_tn_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
     let (ka, m) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(ka, kb, "matmul_tn inner-dim mismatch: {ka} vs {kb}");
-    let mut out = Matrix::zeros(m, n);
+    assert_eq!(out.shape(), (m, n), "matmul_tn_into output shape mismatch");
+    out.data_mut().iter_mut().for_each(|x| *x = 0.0);
     // Accumulate rank-1 updates: C += A[k,:]ᵀ ⊗ B[k,:]. Single-threaded —
     // every k touches the whole output, and the m×n outputs here are small
     // (d×p) in all call sites.
@@ -181,7 +231,6 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
             }
         }
     }
-    out
 }
 
 /// `y = A · x` with `A: (m,k)`, `x: (k,)`.
@@ -280,5 +329,35 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(4, 2);
         let _ = matmul(&a, &b);
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_outputs_bitwise() {
+        // the _into kernels must fully overwrite whatever the reused
+        // buffer held — stale values from a previous call must not leak
+        let a = Matrix::from_fn(9, 6, |i, j| ((i * 3 + j) as f32 * 0.2).sin());
+        let b = Matrix::from_fn(6, 7, |i, j| ((i + j * 5) as f32 * 0.1).cos());
+        let mut dirty = Matrix::full(9, 7, f32::NAN);
+        matmul_into(&a, &b, &mut dirty);
+        assert_eq!(dirty.max_abs_diff(&matmul(&a, &b)), 0.0);
+
+        let bt = b.transpose(); // (7, 6)
+        let mut dirty = Matrix::full(9, 7, -1e30);
+        matmul_nt_into(&a, &bt, &mut dirty);
+        assert_eq!(dirty.max_abs_diff(&matmul_nt(&a, &bt)), 0.0);
+
+        let ab = matmul(&a, &b); // (9, 7)
+        let mut dirty = Matrix::full(6, 7, 42.0);
+        matmul_tn_into(&a, &ab, &mut dirty);
+        assert_eq!(dirty.max_abs_diff(&matmul_tn(&a, &ab)), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn into_variant_rejects_wrong_output_shape() {
+        let a = Matrix::zeros(3, 4);
+        let b = Matrix::zeros(4, 5);
+        let mut out = Matrix::zeros(3, 4);
+        matmul_into(&a, &b, &mut out);
     }
 }

@@ -18,8 +18,8 @@ mod ops;
 
 pub use batch::BatchTensor;
 pub use matmul::{
-    matmul, matmul_nt, matmul_nt_plan, matmul_plan, matmul_tn, matvec, with_default_plan,
-    MatmulPlan,
+    matmul, matmul_into, matmul_nt, matmul_nt_into, matmul_nt_plan, matmul_plan, matmul_tn,
+    matmul_tn_into, matvec, with_default_plan, MatmulPlan,
 };
 pub use norms::{frobenius_norm, power_iteration, spectral_norm, spectral_norm_diff};
 pub use ops::*;
@@ -139,9 +139,19 @@ impl Matrix {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// Copy column `j` out (columns are strided; this allocates).
+    /// Borrowed iterator over column `j` — columns are strided, so there
+    /// is no slice to hand out, but iterating allocates nothing.  Hot
+    /// paths use this; [`col`](Self::col) is the allocating convenience.
+    #[inline]
+    pub fn col_iter(&self, j: usize) -> impl Iterator<Item = f32> + '_ {
+        debug_assert!(j < self.cols);
+        self.data.iter().skip(j).step_by(self.cols.max(1)).copied()
+    }
+
+    /// Copy column `j` out (columns are strided; this allocates — prefer
+    /// [`col_iter`](Self::col_iter) on hot paths).
     pub fn col(&self, j: usize) -> Vec<f32> {
-        (0..self.rows).map(|i| self.get(i, j)).collect()
+        self.col_iter(j).collect()
     }
 
     /// New matrix containing the given rows, in order (the paper's
@@ -152,6 +162,19 @@ impl Matrix {
             data.extend_from_slice(self.row(i));
         }
         Self { rows: idx.len(), cols: self.cols, data }
+    }
+
+    /// [`gather_rows`](Self::gather_rows) into a caller-provided matrix —
+    /// the scratch-friendly variant the v2 attention hot paths use.
+    ///
+    /// # Panics
+    ///
+    /// Panics unless `out.shape() == (idx.len(), self.cols())`.
+    pub fn gather_rows_into(&self, idx: &[usize], out: &mut Self) {
+        assert_eq!(out.shape(), (idx.len(), self.cols), "gather_rows_into shape mismatch");
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
     }
 
     /// Overwrite row `i` from a slice.
@@ -219,6 +242,25 @@ mod tests {
         let a = Matrix::from_fn(5, 7, |i, j| (i * 7 + j) as f32);
         assert_eq!(a.transpose().transpose(), a);
         assert_eq!(a.transpose().get(3, 2), a.get(2, 3));
+    }
+
+    #[test]
+    fn col_iter_matches_col() {
+        let m = Matrix::from_fn(5, 3, |i, j| (i * 3 + j) as f32);
+        for j in 0..3 {
+            let it: Vec<f32> = m.col_iter(j).collect();
+            assert_eq!(it, m.col(j));
+            assert_eq!(it.len(), 5);
+        }
+    }
+
+    #[test]
+    fn gather_rows_into_matches_allocating() {
+        let a = Matrix::from_fn(6, 3, |i, j| (i * 3 + j) as f32);
+        let idx = [4, 0, 4, 2];
+        let mut out = Matrix::full(4, 3, f32::NAN);
+        a.gather_rows_into(&idx, &mut out);
+        assert_eq!(out, a.gather_rows(&idx));
     }
 
     #[test]

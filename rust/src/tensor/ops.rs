@@ -64,46 +64,73 @@ pub fn row_means(m: &Matrix) -> Vec<f32> {
 
 /// ℓ2 norm of each row — the paper's `‖V_(i)‖`.
 pub fn row_norms(m: &Matrix) -> Vec<f32> {
-    (0..m.rows())
-        .map(|i| m.row(i).iter().map(|x| x * x).sum::<f32>().sqrt())
-        .collect()
+    let mut out = vec![0.0f32; m.rows()];
+    row_norms_into(m, &mut out);
+    out
+}
+
+/// [`row_norms`] into a reused buffer (fully overwritten).
+pub fn row_norms_into(m: &Matrix, out: &mut [f32]) {
+    assert_eq!(out.len(), m.rows(), "row_norms_into length mismatch");
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = m.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+    }
 }
 
 /// ℓ2 norm of each column — the paper's `‖B^(i)‖` (strided; used on small
 /// pilot strips only, where the strip fits cache).
 pub fn col_norms(m: &Matrix) -> Vec<f32> {
     let mut out = vec![0.0f32; m.cols()];
+    col_norms_into(m, &mut out);
+    out
+}
+
+/// [`col_norms`] into a reused buffer (fully overwritten).
+pub fn col_norms_into(m: &Matrix, out: &mut [f32]) {
+    assert_eq!(out.len(), m.cols(), "col_norms_into length mismatch");
+    out.iter_mut().for_each(|x| *x = 0.0);
     for i in 0..m.rows() {
         for (o, &x) in out.iter_mut().zip(m.row(i)) {
             *o += x * x;
         }
     }
     out.iter_mut().for_each(|x| *x = x.sqrt());
-    out
 }
 
 /// Column sums: `1ᵀ M`.
 pub fn col_sums(m: &Matrix) -> Vec<f32> {
     let mut out = vec![0.0f32; m.cols()];
+    col_sums_into(m, &mut out);
+    out
+}
+
+/// [`col_sums`] into a reused buffer (fully overwritten).
+pub fn col_sums_into(m: &Matrix, out: &mut [f32]) {
+    assert_eq!(out.len(), m.cols(), "col_sums_into length mismatch");
+    out.iter_mut().for_each(|x| *x = 0.0);
     for i in 0..m.rows() {
         for (o, &x) in out.iter_mut().zip(m.row(i)) {
             *o += x;
         }
     }
-    out
 }
 
 /// Row-wise geometric mean computed in log space (Eq. 6's `g`); every
 /// element must be > 0 (exp scores are).
 pub fn row_geometric_means(m: &Matrix) -> Vec<f32> {
-    (0..m.rows())
-        .map(|i| {
-            let row = m.row(i);
-            let mean_log: f32 =
-                row.iter().map(|x| x.max(1e-30).ln()).sum::<f32>() / row.len() as f32;
-            mean_log.exp()
-        })
-        .collect()
+    let mut out = vec![0.0f32; m.rows()];
+    row_geometric_means_into(m, &mut out);
+    out
+}
+
+/// [`row_geometric_means`] into a reused buffer (fully overwritten).
+pub fn row_geometric_means_into(m: &Matrix, out: &mut [f32]) {
+    assert_eq!(out.len(), m.rows(), "row_geometric_means_into length mismatch");
+    for (i, o) in out.iter_mut().enumerate() {
+        let row = m.row(i);
+        let mean_log: f32 = row.iter().map(|x| x.max(1e-30).ln()).sum::<f32>() / row.len() as f32;
+        *o = mean_log.exp();
+    }
 }
 
 /// Divide each row by the matching scalar (`diag(d)⁻¹ M`).

@@ -1,0 +1,244 @@
+//! Attention API v2 equivalence suite.
+//!
+//! Pins the two contracts the redesign promises:
+//!
+//! 1. **`compute_into` ≡ legacy `compute`** — for every registry method
+//!    and every mask class, the zero-allocation path produces bitwise the
+//!    bytes the allocating path produces at the same seed, including into
+//!    dirty reused outputs and with a shared long-lived scratch.
+//! 2. **Sessions ≡ full recompute** — a session fed one token at a time
+//!    matches a from-scratch computation over the same K/V: bitwise for
+//!    the exact incremental sessions (standard / vmean / linformer), and
+//!    bitwise-at-the-epoch-seed for the recompute sessions of
+//!    approximating methods (re-pilot stride 1 → the epoch seed is
+//!    `session_seed(seed, n)`).
+
+use skeinformer::attention::{
+    self, session_epoch, session_seed, AttentionMethod, AttnInputs, AttnScratch, Linformer,
+    SessionSpec, Standard, VMean,
+};
+use skeinformer::rng::Rng;
+use skeinformer::tensor::Matrix;
+
+const N: usize = 48;
+const P: usize = 8;
+const D: usize = 16;
+
+fn toy(seed: u64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let mut mk = || {
+        let mut m = Matrix::zeros(N, P);
+        rng.fill_normal(m.data_mut());
+        m
+    };
+    (mk(), mk(), mk())
+}
+
+/// The mask classes every contract is checked under: unmasked, padded
+/// tail, and a sparse interior mask.
+fn mask_classes() -> Vec<Option<Vec<f32>>> {
+    let padded: Vec<f32> = (0..N).map(|i| if i < N - 12 { 1.0 } else { 0.0 }).collect();
+    let sparse: Vec<f32> = (0..N).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+    vec![None, Some(padded), Some(sparse)]
+}
+
+#[test]
+fn compute_into_is_bitwise_identical_to_compute_for_every_method_and_mask() {
+    let (q, k, v) = toy(1);
+    // one scratch shared across every method and mask class: buffer reuse
+    // must never leak state between calls
+    let mut scratch = AttnScratch::new();
+    for mask in mask_classes() {
+        let mask = mask.as_deref();
+        for method in attention::registry(D) {
+            for seed in [0u64, 7, 991] {
+                let legacy = method.compute(&q, &k, &v, mask, &mut Rng::new(seed));
+                let mut out = Matrix::full(N, P, f32::NAN); // dirty reuse
+                method.compute_into(
+                    &AttnInputs::new(&q, &k, &v).with_mask(mask).with_seed(seed),
+                    &mut out,
+                    &mut scratch,
+                );
+                assert_eq!(
+                    out.max_abs_diff(&legacy),
+                    0.0,
+                    "{} diverged (seed {seed}, mask {:?})",
+                    method.name(),
+                    mask.map(|m| m.iter().filter(|x| **x == 0.0).count())
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_compute_into_with_one_scratch_is_stable() {
+    // the same call through the same scratch twice in a row must not be
+    // perturbed by recycled buffer contents
+    let (q, k, v) = toy(2);
+    let mut scratch = AttnScratch::new();
+    for method in attention::registry(D) {
+        let inputs = AttnInputs::new(&q, &k, &v).with_seed(4);
+        let mut a = Matrix::zeros(N, P);
+        method.compute_into(&inputs, &mut a, &mut scratch);
+        let mut b = Matrix::full(N, P, -3.25);
+        method.compute_into(&inputs, &mut b, &mut scratch);
+        assert_eq!(a.max_abs_diff(&b), 0.0, "{} unstable under scratch reuse", method.name());
+    }
+}
+
+#[test]
+fn session_one_token_at_a_time_matches_full_recompute_for_every_method() {
+    // stride 1: every append re-pilots, so querying with the full square
+    // Q equals a from-scratch compute at the derived epoch seed — exactly
+    // (diff 0.0) for every registry method.  Exact incremental sessions
+    // are additionally pinned against their *base*-seed recompute below.
+    let (q, k, v) = toy(3);
+    let base_seed = 21u64;
+    for method in attention::registry(D) {
+        let mut session = method.begin_session(
+            SessionSpec::new(P).with_seed(base_seed).with_repilot_stride(1),
+        );
+        for i in 0..N {
+            session.append(k.row(i), v.row(i));
+        }
+        assert_eq!(session.len(), N, "{}", method.name());
+        let got = session.query(&q);
+        let want = match method.name() {
+            // exact incremental sessions: seed-independent (vmean) or
+            // tied to the base seed's sketch stream (linformer)
+            "vmean" => method.compute(&q, &k, &v, None, &mut Rng::new(0)),
+            "linformer" => method.compute(&q, &k, &v, None, &mut Rng::new(base_seed)),
+            _ => {
+                let epoch = session_epoch(N, 1);
+                method.compute(&q, &k, &v, None, &mut Rng::new(session_seed(base_seed, epoch)))
+            }
+        };
+        assert_eq!(
+            got.max_abs_diff(&want),
+            0.0,
+            "{} session deviates from full recompute",
+            method.name()
+        );
+    }
+}
+
+#[test]
+fn exact_sessions_decode_token_by_token() {
+    // the decode loop proper: one query row per appended token, checked
+    // against the growing-prefix recompute
+    let (q, k, v) = toy(4);
+    let mut scratch = AttnScratch::new();
+
+    // standard: exact streaming softmax
+    let mut std_sess = Standard.begin_session(SessionSpec::new(P));
+    // vmean: running mean
+    let mut vm_sess = VMean.begin_session(SessionSpec::new(P));
+    // linformer: incremental sketch projections
+    let lin = Linformer::new(6);
+    let mut lin_sess = lin.begin_session(SessionSpec::new(P).with_seed(17));
+
+    for t in 0..N {
+        std_sess.append(k.row(t), v.row(t));
+        vm_sess.append(k.row(t), v.row(t));
+        lin_sess.append(k.row(t), v.row(t));
+        if t % 7 != 3 {
+            continue; // query a few prefixes, not all (keeps the test fast)
+        }
+        let prefix: Vec<usize> = (0..=t).collect();
+        let kp = k.gather_rows(&prefix);
+        let vp = v.gather_rows(&prefix);
+        let qt = Matrix::from_vec(1, P, q.row(t).to_vec());
+        let mut out = Matrix::zeros(1, P);
+
+        std_sess.query_into(&qt, &mut out, &mut scratch);
+        let want = Standard::exact(&qt, &kp, &vp, None);
+        assert_eq!(out.max_abs_diff(&want), 0.0, "standard decode at t={t}");
+
+        vm_sess.query_into(&qt, &mut out, &mut scratch);
+        let want = VMean.compute(&qt, &kp, &vp, None, &mut Rng::new(0));
+        assert_eq!(out.max_abs_diff(&want), 0.0, "vmean decode at t={t}");
+
+        lin_sess.query_into(&qt, &mut out, &mut scratch);
+        let want = lin.compute(&qt, &kp, &vp, None, &mut Rng::new(17));
+        assert_eq!(out.max_abs_diff(&want), 0.0, "linformer decode at t={t}");
+    }
+}
+
+#[test]
+fn repilot_stride_freezes_randomness_within_an_epoch() {
+    let (q, k, v) = toy(5);
+    let skein = attention::by_name("skeinformer", D).unwrap();
+    // stride >= n: appending all n tokens stays in epoch 1 territory only
+    // after n/stride rolls over — pick stride so two lengths share an epoch
+    let spec = SessionSpec::new(P).with_seed(9).with_repilot_stride(N);
+    let mut session = skein.begin_session(spec);
+    for i in 0..N / 2 {
+        session.append(k.row(i), v.row(i));
+    }
+    // both queries happen at the same length -> same epoch -> same bytes
+    let a = session.query(&q.gather_rows(&(0..N / 2).collect::<Vec<_>>()));
+    let b = session.query(&q.gather_rows(&(0..N / 2).collect::<Vec<_>>()));
+    assert_eq!(a.max_abs_diff(&b), 0.0, "same-epoch queries must reproduce");
+}
+
+#[test]
+fn cross_shape_decode_works_for_capable_methods_and_panics_for_square_only() {
+    let (q, k, v) = toy(6);
+    let q_dec = q.gather_rows(&[N - 2, N - 1]); // 2 decode queries
+    for method in attention::registry(D) {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            method.compute(&q_dec, &k, &v, None, &mut Rng::new(1))
+        }));
+        if method.supports_cross_shape() {
+            let out = result.unwrap_or_else(|_| {
+                panic!("{} claims cross-shape support but panicked", method.name())
+            });
+            assert_eq!(out.shape(), (2, P), "{}", method.name());
+            assert!(out.all_finite(), "{}", method.name());
+        } else {
+            assert!(
+                result.is_err(),
+                "{} must reject cross-shape inputs loudly",
+                method.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_engine_matches_legacy_per_head_compute() {
+    // the engine now routes through compute_into + pool scratch; outputs
+    // must still be bitwise the documented per-head derivation
+    use skeinformer::attention::{BatchedAttention, HeadSpec};
+    use skeinformer::tensor::BatchTensor;
+    let spec = HeadSpec::new(2, 3, 24, P);
+    let mk = |salt: u64| {
+        let mut t = BatchTensor::zeros(spec.batch, spec.heads, spec.seq, spec.head_dim);
+        Rng::new(50 + salt).fill_normal(t.data_mut());
+        t
+    };
+    let (q, k, v) = (mk(0), mk(1), mk(2));
+    let seed = 13u64;
+    for method in attention::registry(D) {
+        let out = BatchedAttention::new().run(method.as_ref(), &q, &k, &v, None, seed);
+        for b in 0..spec.batch {
+            for h in 0..spec.heads {
+                let mut rng = Rng::new(seed ^ spec.head_index(b, h));
+                let want = method.compute(
+                    &q.head_matrix(b, h),
+                    &k.head_matrix(b, h),
+                    &v.head_matrix(b, h),
+                    None,
+                    &mut rng,
+                );
+                assert_eq!(
+                    out.head_matrix(b, h).max_abs_diff(&want),
+                    0.0,
+                    "{} head ({b},{h})",
+                    method.name()
+                );
+            }
+        }
+    }
+}
