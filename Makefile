@@ -3,7 +3,7 @@
 # `make artifacts` needs a python environment with jax installed (the L2
 # lowering path); everything else is pure rust and works offline.
 
-.PHONY: artifacts build test test-doc bench stream-bench fmt clippy doc
+.PHONY: artifacts build test test-doc bench stream-bench cache-bench fmt clippy doc
 
 artifacts:
 	python3 python/compile/aot.py --out artifacts
@@ -24,6 +24,11 @@ bench:
 # streaming decode probe: session append-one-token vs full recompute
 stream-bench:
 	cargo bench --bench streaming_decode
+
+# paged KV cache probe: tok/s + resident KV bytes, shared vs disjoint
+# prefixes, window in {512, 2048, inf}
+cache-bench:
+	cargo bench --bench kv_cache
 
 fmt:
 	cargo fmt --check

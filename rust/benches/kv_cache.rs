@@ -1,0 +1,161 @@
+//! KV-cache probe: decode throughput and resident KV bytes with the
+//! paged cache on vs off, shared-prefix vs disjoint stream workloads,
+//! window ∈ {512, 2048, ∞}.
+//!
+//! Each run decodes `--tokens` tokens per stream (append + one-row query
+//! per token) over `--streams` server streams:
+//!
+//! * **shared** — every stream replays the same token sequence (the
+//!   resubmitted-prompt / common-system-prompt shape).  With the cache
+//!   on, streams 2..S allocate zero new blocks for the shared region.
+//! * **disjoint** — every stream gets its own sequence: the worst case
+//!   for prefix sharing, isolating pure cache overhead.
+//!
+//! Reported per row: tokens/s, resident KV KiB at shutdown, and the
+//! hit/alloc block counters.  The cache-off baseline's "resident" column
+//! is the analytic per-session KV footprint (streams × tokens ×
+//! heads × head_dim × 2 × 4 bytes) for comparison — sessions hold K/V
+//! per stream, the cache dedupes it across streams and windows bound it.
+//!
+//! Emits `reports/kv_cache.csv`
+//! (`workload,window,method,streams,tokens,tok_s,resident_kv_bytes,hit_blocks,alloc_blocks`).
+//!
+//! `make cache-bench`; `--full` extends tokens 512 → 2048.
+
+use skeinformer::bench_util::{ascii_table, write_csv};
+use skeinformer::coordinator::attention_server::{self, AttentionServerConfig};
+use skeinformer::kvcache::KvCacheConfig;
+use skeinformer::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+const BLOCK_SIZE: usize = 16;
+
+fn cfg(method: &str, kv: Option<KvCacheConfig>) -> AttentionServerConfig {
+    AttentionServerConfig {
+        method: method.to_string(),
+        d: 64,
+        heads: 4,
+        seq: 512,
+        head_dim: 32,
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        seed: 0,
+        workers: None,
+        kv,
+    }
+}
+
+/// Decode `tokens` tokens on each of `streams` streams; returns
+/// (tok/s, resident KV bytes, hit blocks, alloc blocks).
+fn run(
+    c: &AttentionServerConfig,
+    streams: usize,
+    tokens: usize,
+    shared_prefix: bool,
+) -> (f64, u64, u64, u64) {
+    let token_elems = c.heads * c.head_dim;
+    let handle = attention_server::start(c.clone()).expect("server start");
+    let t0 = std::time::Instant::now();
+    for s in 0..streams {
+        let stream = handle.open_stream(1);
+        // shared workload: identical data seed per stream → identical
+        // prompt → the cache dedupes; disjoint: per-stream seed
+        let data_seed = if shared_prefix { 1 } else { 1 + s as u64 };
+        let mut rng = Rng::new(data_seed);
+        for _ in 0..tokens {
+            let mut mk = || {
+                let mut b = vec![0.0f32; token_elems];
+                rng.fill_normal(&mut b);
+                let slab: Arc<[f32]> = b.into();
+                slab
+            };
+            let (k, v, q) = (mk(), mk(), mk());
+            stream.append(k, v);
+            let out = stream.query(q, 1).recv().expect("stream reply");
+            std::hint::black_box(out[0]);
+        }
+        stream.close();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = handle.shutdown().expect("server shutdown");
+    let resident_bytes = match &c.kv {
+        Some(_) => stats.kv_resident_bytes,
+        // cache off: sessions hold K/V per stream — the analytic footprint
+        None => (streams * tokens * token_elems * 2 * std::mem::size_of::<f32>()) as u64,
+    };
+    (
+        (streams * tokens) as f64 / wall,
+        resident_bytes,
+        stats.kv_hit_blocks,
+        stats.kv_alloc_blocks,
+    )
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let tokens = if full { 2048 } else { 512 };
+    let streams = 4;
+    let method = "skeinformer";
+    println!(
+        "kv-cache probe: method={method} streams={streams} tokens={tokens} \
+         block-size={BLOCK_SIZE}{}",
+        if full { " (--full)" } else { "" }
+    );
+
+    // (label, kv config): ∞ = cache on, no window
+    let windows: [(&str, Option<usize>); 3] =
+        [("512", Some(512)), ("2048", Some(2048)), ("inf", None)];
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    let mut record = |workload: &str, window: &str, kv: Option<KvCacheConfig>| {
+        let c = cfg(method, kv);
+        let shared = workload == "shared";
+        let (tok_s, bytes, hits, allocs) = run(&c, streams, tokens, shared);
+        println!(
+            "  {workload:<9} window={window:<5} {tok_s:>9.1} tok/s  {:>9.1} KiB KV  \
+             hits={hits} allocs={allocs}",
+            bytes as f64 / 1024.0
+        );
+        rows.push(vec![
+            workload.to_string(),
+            window.to_string(),
+            format!("{tok_s:.1}"),
+            format!("{:.1}", bytes as f64 / 1024.0),
+            hits.to_string(),
+            allocs.to_string(),
+        ]);
+        csv.push(format!(
+            "{workload},{window},{method},{streams},{tokens},{tok_s:.2},{bytes},{hits},{allocs}"
+        ));
+    };
+
+    for workload in ["shared", "disjoint"] {
+        // cache-off baseline (window label "off")
+        record(workload, "off", None);
+        for (label, window) in windows {
+            let mut kv = KvCacheConfig::new(BLOCK_SIZE);
+            if let Some(w) = window {
+                kv = kv.with_window(w);
+            }
+            record(workload, label, Some(kv));
+        }
+    }
+
+    println!(
+        "\n{}",
+        ascii_table(
+            &["workload", "window", "tok/s", "resident KiB", "hits", "allocs"],
+            &rows
+        )
+    );
+    if let Err(e) = write_csv(
+        "reports/kv_cache.csv",
+        "workload,window,method,streams,tokens,tok_s,resident_kv_bytes,hit_blocks,alloc_blocks",
+        &csv,
+    ) {
+        eprintln!("csv write failed: {e}");
+    } else {
+        eprintln!("rows written to reports/kv_cache.csv");
+    }
+}

@@ -22,9 +22,10 @@
 //! stash, and each head's result is written directly into the output
 //! tensor's slice ([`BatchedAttention::run_into`]).  After the first
 //! batch warms each worker, the per-head loop performs no
-//! `seq × head_dim`-scaled heap allocation; what remains is O(B·H)
-//! dispatch bookkeeping per *call* (task boxes, the grid list) and the
-//! O(d) keyed vector inside the Gumbel sampler for sampling methods.
+//! `seq × head_dim`-scaled heap allocation; the O(d) index/key draws
+//! inside the Gumbel sampler are scratch-recycled too
+//! (`Rng::weighted_without_replacement_into`), so what remains is O(B·H)
+//! dispatch bookkeeping per *call* (task boxes, the grid list).
 //!
 //! **RNG-stream derivation rule.** Head `(b, h)` draws its randomness from
 //! `Rng::new(seed ^ head_index)` with `head_index = b * heads + h`.  The
@@ -205,7 +206,7 @@ impl BatchedAttention {
         // entry appears once, and parallel_map_workers does not return
         // until every task completed — so writes never alias and never
         // outlive the borrow.
-        let out_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        let out_ptr = pool::SendPtr(out.data_mut().as_mut_ptr());
         pool::parallel_map_workers(&grid, workers, |&(b, h)| {
             let out_ptr = out_ptr; // force whole-struct capture
             let head_seed = seed ^ spec.head_index(b, h);
@@ -243,13 +244,6 @@ impl BatchedAttention {
         });
     }
 }
-
-/// Raw-pointer wrapper for the disjoint head-slice writes in
-/// [`BatchedAttention::run_into`]; see the SAFETY note there.
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
 
 #[cfg(test)]
 mod tests {

@@ -87,6 +87,10 @@ impl AttentionMethod for Linformer {
         true
     }
 
+    fn session_is_exact_incremental(&self) -> bool {
+        true // incremental SᵀK/SᵀV projections: O(d·p) state, no stored K/V
+    }
+
     fn begin_session(&self, spec: SessionSpec) -> Box<dyn AttentionSession> {
         // exact incremental projections: O(d·p) per appended token
         Box::new(LinformerSession::new(self.d, spec))

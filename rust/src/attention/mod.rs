@@ -63,8 +63,8 @@ pub use performer::Performer;
 pub use reformer::Reformer;
 pub use scratch::AttnScratch;
 pub use session::{
-    session_epoch, session_seed, AttentionSession, LinformerSession, RecomputeSession,
-    SessionSpec, VMeanSession,
+    session_epoch, session_seed, AttentionSession, BoundedSession, LinformerSession,
+    RecomputeSession, SessionSpec, VMeanSession,
 };
 pub use skeinformer::{RowNorm, Skeinformer};
 pub use standard::Standard;
@@ -153,7 +153,11 @@ impl<'a> AttnInputs<'a> {
 /// [`compute_into`](Self::compute_into) are derived wrappers, guaranteed
 /// bitwise-consistent with each other: `compute` with `Rng::new(s)`
 /// produces exactly the bytes `compute_into` produces with `seed = s`.
-pub trait AttentionMethod: Sync {
+///
+/// `Send + Sync` are supertraits so boxed methods can move into session
+/// wrappers ([`BoundedSession`]) and be shared across the worker pool —
+/// every registry method is plain configuration data.
+pub trait AttentionMethod: Send + Sync {
     /// Registry name (matches `python/compile/attention.py`).
     fn name(&self) -> &'static str;
 
@@ -234,6 +238,18 @@ pub trait AttentionMethod: Sync {
     /// `i` (Reformer's shared QK projection, BigBird's window pattern)
     /// return false and panic with a clear message on cross-shape inputs.
     fn supports_cross_shape(&self) -> bool {
+        false
+    }
+
+    /// Whether [`begin_session`](Self::begin_session) returns an *exact
+    /// incremental* session (O(1)-per-token state, no stored K/V, queries
+    /// independent of the re-pilot stride) — true for `vmean` and
+    /// `linformer` only.  The serving layer uses this to decide whether a
+    /// cache-backed stream still benefits from a live session: recompute
+    /// sessions duplicate the KV cache's storage and are replaced by
+    /// cache reads, while exact-incremental sessions keep their O(p) /
+    /// O(d·p) state alongside the cache.
+    fn session_is_exact_incremental(&self) -> bool {
         false
     }
 

@@ -40,6 +40,10 @@ use crate::tensor::Matrix;
 /// the pool's own per-thread stash instead).
 const IDX_KEEP: usize = 8;
 
+/// How many Gumbel-key workspaces each thread keeps (one is enough for
+/// every current caller; headroom for nesting).
+const PAIR_KEEP: usize = 4;
+
 thread_local! {
     /// Per-thread recycled `Vec<usize>` buffers — thread-local for the
     /// same reason the pool's f32 stash is: an `AttnScratch` handle is
@@ -47,6 +51,10 @@ thread_local! {
     /// persistent, so index buffers must outlive the handle to be
     /// allocation-free across heads.
     static IDX_STASH: std::cell::RefCell<Vec<Vec<usize>>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+    /// Per-thread recycled `(key, index)` workspaces for the Gumbel
+    /// sampler (`Rng::weighted_without_replacement_into`).
+    static PAIR_STASH: std::cell::RefCell<Vec<Vec<(f32, usize)>>> =
         const { std::cell::RefCell::new(Vec::new()) };
 }
 
@@ -126,6 +134,29 @@ impl AttnScratch {
             }
         });
     }
+
+    /// A cleared `(key, index)` workspace for the Gumbel top-k sampler
+    /// ([`Rng::weighted_without_replacement_into`](crate::rng::Rng::weighted_without_replacement_into)),
+    /// recycled through this thread's stash.
+    pub fn pair_buf(&mut self) -> Vec<(f32, usize)> {
+        match PAIR_STASH.with(|s| s.borrow_mut().pop()) {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Return a Gumbel workspace to this thread's stash.
+    pub fn recycle_pair(&mut self, b: Vec<(f32, usize)>) {
+        PAIR_STASH.with(|s| {
+            let mut stash = s.borrow_mut();
+            if stash.len() < PAIR_KEEP {
+                stash.push(b);
+            }
+        });
+    }
 }
 
 #[cfg(test)]
@@ -171,5 +202,18 @@ mod tests {
         let again = s.idx_buf();
         assert!(again.is_empty());
         assert!(again.capacity() >= cap.min(3));
+    }
+
+    #[test]
+    fn pair_buffers_recycle_locally() {
+        let mut s = AttnScratch::new();
+        let mut p = s.pair_buf();
+        p.extend_from_slice(&[(1.0, 1), (2.0, 2)]);
+        let cap = p.capacity();
+        s.recycle_pair(p);
+        let again = s.pair_buf();
+        assert!(again.is_empty(), "recycled pair workspace must come back cleared");
+        assert!(again.capacity() >= cap.min(2));
+        s.recycle_pair(again);
     }
 }

@@ -186,8 +186,13 @@ impl Skeinformer {
             scratch.recycle_buf(vn);
         }
 
-        // Line 5: importance sampling without replacement (Gumbel top-k).
-        let sel_idx = rng.weighted_without_replacement(&weights, d);
+        // Line 5: importance sampling without replacement (Gumbel top-k),
+        // keys and indices drawn through recycled scratch — same stream
+        // and selection as the allocating sampler, no per-call Vecs.
+        let mut sel_idx = scratch.idx_buf();
+        let mut keyed = scratch.pair_buf();
+        rng.weighted_without_replacement_into(&weights, d, &mut keyed, &mut sel_idx);
+        scratch.recycle_pair(keyed);
         let d_eff = sel_idx.len();
 
         // Lines 6-7: gather K_{J'}, V_{J'}, compute A^{J'} = exp(Q K_{J'}ᵀ/√p).

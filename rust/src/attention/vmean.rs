@@ -44,6 +44,10 @@ impl AttentionMethod for VMean {
         true
     }
 
+    fn session_is_exact_incremental(&self) -> bool {
+        true // running column sums: O(p) state, no stored K/V
+    }
+
     fn begin_session(&self, spec: SessionSpec) -> Box<dyn AttentionSession> {
         Box::new(VMeanSession::new(spec))
     }

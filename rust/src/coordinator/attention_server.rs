@@ -32,17 +32,39 @@
 //!
 //! **Streaming decode.**  Alongside the batched one-shot path, a client
 //! can [`open_stream`](AttentionServerHandle::open_stream) a stateful
-//! decode stream: the server keeps one
-//! [`AttentionSession`](crate::attention::AttentionSession) per head
-//! (seeded [`stream_seed`]`(cfg.seed, stream, head)`), and the stream's
-//! [`append`](StreamHandle::append) / [`query`](StreamHandle::query) ops
-//! ride the same channel — and the same zero-copy `Arc<[f32]>` slab
-//! convention — as batched requests, preserving per-stream op order.
-//! Appends are O(heads · head_dim) bookkeeping; queries run on the serve
-//! thread against the per-stream session state (per-token cost is the
-//! session's — exact-incremental for standard/vmean/linformer, the
-//! method's own linear cost otherwise), instead of re-uploading and
-//! recomputing the whole prefix each token.
+//! decode stream whose [`append`](StreamHandle::append) /
+//! [`query`](StreamHandle::query) ops ride the same channel — and the
+//! same zero-copy `Arc<[f32]>` slab convention — as batched requests,
+//! preserving per-stream op order.  The stream request path:
+//!
+//! 1. **Open** creates the stream's server-side KV state: with the KV
+//!    cache off ([`AttentionServerConfig::kv`]` = None`), one
+//!    [`AttentionSession`](crate::attention::AttentionSession) per head
+//!    (seeded [`stream_seed`]`(cfg.seed, stream, head)`); with the cache
+//!    on, a shared block chain in the paged
+//!    [`KvCache`](crate::kvcache::KvCache) — plus live sessions only for
+//!    methods whose sessions are exact-incremental (`vmean`,
+//!    `linformer`: O(p)/O(d·p) state, no stored K/V).
+//! 2. **Append** is O(heads · head_dim): one write into the stream's
+//!    tail block (sealed blocks dedupe against the prefix index, so a
+//!    replayed prompt allocates nothing) and/or one fold into each
+//!    exact-incremental session.
+//! 3. **Query** fans out per head across the persistent worker pool:
+//!    each head answers from its session, or — cache-backed — gathers
+//!    its K/V view from the block chain and recomputes at the epoch seed
+//!    [`session_seed`](crate::attention::session_seed)`(`[`stream_seed`]`(cfg.seed,
+//!    stream, h), epoch)`, bitwise what the equivalent session produces.
+//!    Head results are a pure function of grid position, so the fan-out
+//!    is worker-count invariant.
+//!
+//! Serving with the cache enabled is **bitwise identical** to serving
+//! without it at the same seeds (`rust/tests/kv_cache.rs` pins this per
+//! registry method): blocks deduplicate storage, never change the token
+//! sequence a query observes.  Under
+//! [`EvictionPolicy::SlidingWindow`](crate::kvcache::EvictionPolicy)
+//! streams are additionally bounded to their last `window` tokens, with
+//! epoch seeds still derived from the total appended count (the
+//! [`BoundedSession`](crate::attention::BoundedSession) semantics).
 //!
 //! # Examples
 //!
@@ -61,6 +83,7 @@
 //!     max_wait: Duration::from_millis(1),
 //!     seed: 0,
 //!     workers: None,
+//!     kv: None,
 //! };
 //! let handle = attention_server::start(cfg.clone()).unwrap();
 //! let reply = handle.submit(HeadsRequest::random(cfg.request_elems(), &mut Rng::new(1)));
@@ -68,9 +91,14 @@
 //! handle.shutdown().unwrap();
 //! ```
 
-use crate::attention::{self, AttentionSession, AttnScratch, BatchedAttention, SessionSpec};
+use crate::attention::{
+    self, session_epoch, session_seed, AttentionSession, AttnInputs, AttnScratch,
+    BatchedAttention, SessionSpec,
+};
+use crate::kvcache::{KvCache, KvCacheConfig, StreamChain};
+use crate::pool;
 use crate::rng::Rng;
-use crate::tensor::{BatchTensor, Matrix};
+use crate::tensor::{with_default_plan, BatchTensor, MatmulPlan, Matrix};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -112,6 +140,11 @@ pub struct AttentionServerConfig {
     pub seed: u64,
     /// Worker cap for head dispatch (None = pool default).
     pub workers: Option<usize>,
+    /// Paged KV cache for decode streams: block-shared storage with
+    /// prefix dedup and (optionally) sliding-window eviction.  `None`
+    /// keeps per-stream session state only.  Enabling the cache never
+    /// changes served bytes — see the [module docs](self).
+    pub kv: Option<KvCacheConfig>,
 }
 
 impl AttentionServerConfig {
@@ -123,11 +156,26 @@ impl AttentionServerConfig {
     /// Build from CLI flags — the one place the flag names and defaults
     /// live (`skein serve --engine cpu` and the serving example share it):
     /// `--method --d --heads --seq --head-dim --batch --max-wait-ms
-    /// --seed --workers` (workers 0 = pool default).  The global
-    /// `--pool-size` flag sizes the process-wide worker pool itself and
-    /// is handled by the binaries via [`crate::pool::set_pool_size`].
+    /// --seed --workers` (workers 0 = pool default), plus the KV-cache
+    /// flags `--kv-blocks N` (pool capacity in blocks; 0 with no
+    /// `--kv-window` = cache disabled), `--kv-window W` (sliding window
+    /// in tokens; 0 = keep full history) and `--kv-block-size B` (tokens
+    /// per block, default 16).  The global `--pool-size` flag sizes the
+    /// process-wide worker pool itself and is handled by the binaries via
+    /// [`crate::pool::set_pool_size`].
     pub fn from_args(args: &crate::cli::Args) -> Result<Self, crate::cli::CliError> {
         let workers = args.get_usize("workers", 0)?;
+        let kv_blocks = args.get_usize("kv-blocks", 0)?;
+        let kv_window = args.get_usize("kv-window", 0)?;
+        let kv_block_size = args.get_usize("kv-block-size", 16)?;
+        let kv = (kv_blocks > 0 || kv_window > 0).then(|| {
+            let cfg = KvCacheConfig::new(kv_block_size).with_capacity_blocks(kv_blocks);
+            if kv_window > 0 {
+                cfg.with_window(kv_window)
+            } else {
+                cfg
+            }
+        });
         Ok(Self {
             method: args.get_or("method", "skeinformer").to_string(),
             d: args.get_usize("d", 64)?,
@@ -138,6 +186,7 @@ impl AttentionServerConfig {
             max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 4)?),
             seed: args.get_u64("seed", 0)?,
             workers: if workers == 0 { None } else { Some(workers) },
+            kv,
         })
     }
 }
@@ -280,6 +329,21 @@ pub struct AttentionServerStats {
     pub stream_appends: u64,
     /// Stream queries answered across all streams.
     pub stream_queries: u64,
+    /// KV cache: sealed blocks deduplicated against the prefix index
+    /// (zero for the cache-off configuration).
+    pub kv_hit_blocks: u64,
+    /// KV cache: sealed blocks newly inserted into the index.
+    pub kv_alloc_blocks: u64,
+    /// KV cache: blocks evicted from the prefix index — under capacity
+    /// pressure, or as sliding-window drops when no capacity bound is
+    /// configured.
+    pub kv_evicted_blocks: u64,
+    /// KV cache: distinct blocks resident at shutdown.
+    pub kv_resident_blocks: u64,
+    /// KV cache: resident KV bytes at shutdown
+    /// ([`KvCache::resident_kv_bytes`] — the one place the block-geometry
+    /// byte accounting lives).
+    pub kv_resident_bytes: u64,
     /// Mean queueing delay (ms) — time from submit to batch formation.
     pub mean_queue_ms: f64,
     /// Mean executed batch occupancy (filled slots / max_batch).
@@ -347,11 +411,34 @@ pub fn start(cfg: AttentionServerConfig) -> Result<AttentionServerHandle> {
     })
 }
 
-/// Per-stream server-side state: one session per head plus the recycled
-/// scratch their queries draw temporaries from.
+/// Per-stream server-side state.  At least one of the two KV holders is
+/// present:
+///
+/// * `sessions` — one [`AttentionSession`] per head.  Present when the
+///   cache is off, and when the method's session is exact-incremental
+///   (`vmean`/`linformer`) on an unwindowed cached stream — their state
+///   is O(p)/O(d·p) and duplicates nothing.
+/// * `chain` — the stream's block chain in the shared [`KvCache`].
+///   Present whenever the cache is on; the sole KV holder for
+///   recompute-backed methods (their sessions would duplicate the
+///   blocks' storage) and for every method under a sliding window.
 struct StreamState {
-    sessions: Vec<Box<dyn AttentionSession>>,
-    scratch: AttnScratch,
+    sessions: Option<Vec<Box<dyn AttentionSession>>>,
+    chain: Option<StreamChain>,
+    /// Effective re-pilot stride (clamped ≥ 1) — the epoch basis for
+    /// cache-backed queries.
+    repilot_stride: usize,
+}
+
+impl StreamState {
+    /// Tokens a query computes over (window-clamped for cached streams).
+    fn len(&self) -> usize {
+        match (&self.sessions, &self.chain) {
+            (Some(sessions), _) => sessions.first().map_or(0, |s| s.len()),
+            (None, Some(chain)) => chain.visible_len(),
+            (None, None) => 0,
+        }
+    }
 }
 
 fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<ServerMsg>) -> AttentionServerStats {
@@ -367,6 +454,7 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<ServerMsg>) -> Atte
     let mut occupancy_sum = 0.0f64;
     let mut batch_ms_sum = 0.0f64;
     let mut streams: std::collections::HashMap<u64, StreamState> = Default::default();
+    let mut kv_cache: Option<KvCache> = cfg.kv.map(|kv| KvCache::new(kv, cfg.heads * cfg.head_dim));
     let mut out_cache: Option<BatchTensor> = None;
 
     loop {
@@ -380,9 +468,15 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<ServerMsg>) -> Atte
         for msg in msgs {
             match msg {
                 ServerMsg::Batch(p) => pending.push(p),
-                ServerMsg::Stream { stream, op } => {
-                    handle_stream_op(&cfg, method.as_ref(), &mut streams, stream, op, &mut stats)
-                }
+                ServerMsg::Stream { stream, op } => handle_stream_op(
+                    &cfg,
+                    method.as_ref(),
+                    &mut kv_cache,
+                    &mut streams,
+                    stream,
+                    op,
+                    &mut stats,
+                ),
                 ServerMsg::Shutdown => shutting_down = true,
             }
         }
@@ -475,6 +569,14 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<ServerMsg>) -> Atte
         stats.mean_occupancy = occupancy_sum / stats.batches as f64;
         stats.mean_batch_ms = batch_ms_sum / stats.batches as f64;
     }
+    if let Some(cache) = &kv_cache {
+        let kv = cache.stats();
+        stats.kv_hit_blocks = kv.hit_blocks;
+        stats.kv_alloc_blocks = kv.alloc_blocks;
+        stats.kv_evicted_blocks = kv.evicted_blocks;
+        stats.kv_resident_blocks = kv.resident_blocks;
+        stats.kv_resident_bytes = cache.resident_kv_bytes();
+    }
     stats
 }
 
@@ -532,9 +634,11 @@ fn collect_msgs(
 /// rejected (counted, reply channel dropped) rather than allowed to panic
 /// the serve thread: shape checks here mirror the capability checks the
 /// attention layer enforces.
+#[allow(clippy::too_many_arguments)]
 fn handle_stream_op(
     cfg: &AttentionServerConfig,
     method: &dyn attention::AttentionMethod,
+    kv_cache: &mut Option<KvCache>,
     streams: &mut std::collections::HashMap<u64, StreamState>,
     stream: u64,
     op: StreamOp,
@@ -543,17 +647,37 @@ fn handle_stream_op(
     let token_elems = cfg.heads * cfg.head_dim;
     match op {
         StreamOp::Open { repilot_stride } => {
-            let sessions = (0..cfg.heads)
-                .map(|h| {
-                    method.begin_session(
-                        SessionSpec::new(cfg.head_dim)
-                            .with_seed(stream_seed(cfg.seed, stream, h as u64))
-                            .with_repilot_stride(repilot_stride)
-                            .with_capacity_hint(cfg.seq),
-                    )
-                })
-                .collect();
-            streams.insert(stream, StreamState { sessions, scratch: AttnScratch::new() });
+            let chain = kv_cache.as_mut().map(|c| c.open_stream());
+            // live sessions hold the KV state when the cache is off; with
+            // the cache on, only exact-incremental sessions survive (tiny
+            // state, no stored K/V) — and only without a window, which
+            // incremental accumulators cannot evict from
+            let windowed = cfg.kv.is_some_and(|kv| kv.window().is_some());
+            let use_sessions =
+                chain.is_none() || (method.session_is_exact_incremental() && !windowed);
+            let sessions = use_sessions.then(|| {
+                (0..cfg.heads)
+                    .map(|h| {
+                        method.begin_session(
+                            SessionSpec::new(cfg.head_dim)
+                                .with_seed(stream_seed(cfg.seed, stream, h as u64))
+                                .with_repilot_stride(repilot_stride)
+                                .with_capacity_hint(cfg.seq),
+                        )
+                    })
+                    .collect()
+            });
+            let old = streams.insert(
+                stream,
+                StreamState { sessions, chain, repilot_stride: repilot_stride.max(1) },
+            );
+            // re-opened id (only possible with a misbehaving client):
+            // release the displaced state's blocks instead of leaking them
+            if let Some(old) = old {
+                if let (Some(old_chain), Some(cache)) = (old.chain, kv_cache.as_mut()) {
+                    cache.close_stream(old_chain);
+                }
+            }
         }
         StreamOp::Append { k, v } => {
             let Some(state) = streams.get_mut(&stream) else {
@@ -564,9 +688,15 @@ fn handle_stream_op(
                 stats.rejected += 1;
                 return;
             }
-            for (h, session) in state.sessions.iter_mut().enumerate() {
-                let o = h * cfg.head_dim;
-                session.append(&k[o..o + cfg.head_dim], &v[o..o + cfg.head_dim]);
+            if let Some(chain) = &mut state.chain {
+                let cache = kv_cache.as_mut().expect("stream chain implies a cache");
+                cache.append(chain, &k, &v);
+            }
+            if let Some(sessions) = &mut state.sessions {
+                for (h, session) in sessions.iter_mut().enumerate() {
+                    let o = h * cfg.head_dim;
+                    session.append(&k[o..o + cfg.head_dim], &v[o..o + cfg.head_dim]);
+                }
             }
             stats.stream_appends += 1;
         }
@@ -575,8 +705,7 @@ fn handle_stream_op(
                 stats.rejected += 1;
                 return;
             };
-            let StreamState { sessions, scratch } = state;
-            let len = sessions.first().map_or(0, |s| s.len());
+            let len = state.len();
             let shape_ok = rows > 0 && q.len() == cfg.heads * rows * cfg.head_dim;
             // square-only methods can only answer full-state queries
             let cross_ok = method.supports_cross_shape() || rows == len;
@@ -584,25 +713,108 @@ fn handle_stream_op(
                 stats.rejected += 1;
                 return; // dropping `reply` signals the rejection
             }
-            let head_elems = rows * cfg.head_dim;
-            let mut out_slab = vec![0.0f32; cfg.heads * head_elems];
-            for (h, session) in sessions.iter_mut().enumerate() {
-                let qbuf = scratch.buf_from(&q[h * head_elems..(h + 1) * head_elems]);
-                let q_head = Matrix::from_vec(rows, cfg.head_dim, qbuf);
-                let mut out = scratch.matrix(rows, cfg.head_dim);
-                session.query_into(&q_head, &mut out, scratch);
-                out_slab[h * head_elems..(h + 1) * head_elems].copy_from_slice(out.data());
-                scratch.recycle(out);
-                scratch.recycle_buf(q_head.into_vec());
-            }
+            let mut out_slab = vec![0.0f32; cfg.heads * rows * cfg.head_dim];
+            run_head_queries(cfg, method, state, stream, &q, rows, &mut out_slab);
             let _ = reply.send(out_slab);
             stats.stream_queries += 1;
         }
         StreamOp::Close => {
-            streams.remove(&stream);
+            if let Some(state) = streams.remove(&stream) {
+                if let (Some(chain), Some(cache)) = (state.chain, kv_cache.as_mut()) {
+                    cache.close_stream(chain);
+                }
+            }
         }
     }
 }
+
+/// Answer one stream query by fanning the per-head work across the
+/// persistent worker pool.  Head `h` touches only its own session (or its
+/// own read-only chain view) and writes only its own span of `out_slab`,
+/// so tasks are disjoint; each head's bytes are a pure function of its
+/// inputs and seed, so the result is bitwise invariant to the worker
+/// count — the same contract [`BatchedAttention`] holds for the batch
+/// path.
+fn run_head_queries(
+    cfg: &AttentionServerConfig,
+    method: &dyn attention::AttentionMethod,
+    state: &mut StreamState,
+    stream: u64,
+    q: &[f32],
+    rows: usize,
+    out_slab: &mut [f32],
+) {
+    let head_dim = cfg.head_dim;
+    let head_elems = rows * head_dim;
+    let workers = cfg.workers.unwrap_or_else(pool::pool_size).max(1);
+    // mirror the engine's oversubscription policy: when the head grid
+    // alone saturates the pool, inner matmuls go single-threaded
+    let inner_plan = if cfg.heads.min(workers) >= pool::pool_size() {
+        MatmulPlan::SingleThread
+    } else {
+        MatmulPlan::Auto
+    };
+    let heads: Vec<usize> = (0..cfg.heads).collect();
+    let out_ptr = pool::SendPtr(out_slab.as_mut_ptr());
+    let StreamState { sessions, chain, repilot_stride } = state;
+    let stride = *repilot_stride;
+    if let Some(sessions) = sessions {
+        let sess_ptr = pool::SendPtr(sessions.as_mut_ptr());
+        pool::parallel_map_workers(&heads, workers, |&h| {
+            // force whole-struct capture of the raw-ptr wrappers
+            let sess_ptr = sess_ptr;
+            let out_ptr = out_ptr;
+            // SAFETY: each head index is claimed by exactly one task
+            // (parallel_map_workers' disjoint-index contract), head h
+            // touches only sessions[h] and out_slab[h * head_elems ..],
+            // and the call does not return until every task completed —
+            // so accesses never alias and never outlive the borrows.
+            let session = unsafe { &mut *sess_ptr.0.add(h) };
+            let mut scratch = AttnScratch::new();
+            let qbuf = scratch.buf_from(&q[h * head_elems..(h + 1) * head_elems]);
+            let q_head = Matrix::from_vec(rows, head_dim, qbuf);
+            let mut out = scratch.matrix(rows, head_dim);
+            with_default_plan(inner_plan, || {
+                session.query_into(&q_head, &mut out, &mut scratch)
+            });
+            unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.0.add(h * head_elems), head_elems)
+                    .copy_from_slice(out.data());
+            }
+            scratch.recycle(out);
+            scratch.recycle_buf(q_head.into_vec());
+        });
+    } else {
+        let chain: &StreamChain = chain.as_ref().expect("stream holds sessions or a chain");
+        let n = chain.visible_len();
+        // the seed rule RecomputeSession (and BoundedSession, under a
+        // window) applies: epoch over the TOTAL appended count
+        let epoch = session_epoch(chain.appended(), stride);
+        pool::parallel_map_workers(&heads, workers, |&h| {
+            let out_ptr = out_ptr;
+            let mut scratch = AttnScratch::new();
+            let mut k = scratch.matrix(n, head_dim);
+            let mut v = scratch.matrix(n, head_dim);
+            chain.gather_head_into(h, head_dim, &mut k, &mut v);
+            let qbuf = scratch.buf_from(&q[h * head_elems..(h + 1) * head_elems]);
+            let q_head = Matrix::from_vec(rows, head_dim, qbuf);
+            let mut out = scratch.matrix(rows, head_dim);
+            let seed = session_seed(stream_seed(cfg.seed, stream, h as u64), epoch);
+            let inputs = AttnInputs::new(&q_head, &k, &v).with_seed(seed);
+            with_default_plan(inner_plan, || method.compute_into(&inputs, &mut out, &mut scratch));
+            // SAFETY: disjoint spans, see the session branch above.
+            unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.0.add(h * head_elems), head_elems)
+                    .copy_from_slice(out.data());
+            }
+            scratch.recycle(out);
+            scratch.recycle_buf(q_head.into_vec());
+            scratch.recycle(v);
+            scratch.recycle(k);
+        });
+    }
+}
+
 
 #[cfg(test)]
 mod tests {
@@ -621,6 +833,7 @@ mod tests {
             max_wait: Duration::from_millis(2),
             seed: 0,
             workers: None,
+            kv: None,
         }
     }
 
@@ -829,6 +1042,128 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Decode `tokens` tokens through one stream (append + 1-row query
+    /// per token) and return the concatenated query outputs.
+    fn decode_stream(c: &AttentionServerConfig, tokens: usize, data_seed: u64) -> Vec<f32> {
+        let handle = start(c.clone()).unwrap();
+        let stream = handle.open_stream(1);
+        let token_elems = c.heads * c.head_dim;
+        let mut rng = Rng::new(data_seed);
+        let mut outs = Vec::new();
+        for _ in 0..tokens {
+            let mut mk = || {
+                let mut b = vec![0.0f32; token_elems];
+                rng.fill_normal(&mut b);
+                let slab: Arc<[f32]> = b.into();
+                slab
+            };
+            let (k, v, q) = (mk(), mk(), mk());
+            stream.append(k, v);
+            outs.extend(stream.query(q, 1).recv().expect("stream reply"));
+        }
+        stream.close();
+        handle.shutdown().unwrap();
+        outs
+    }
+
+    #[test]
+    fn cached_streams_are_bitwise_identical_to_uncached() {
+        // block size 2 so the 7-token stream seals blocks mid-run; the
+        // full per-registry-method sweep lives in rust/tests/kv_cache.rs
+        for method in ["standard", "skeinformer", "vmean", "linformer"] {
+            let base = cfg(method, 2);
+            let mut cached = base.clone();
+            cached.kv = Some(crate::kvcache::KvCacheConfig::new(2));
+            let want = decode_stream(&base, 7, 42);
+            let got = decode_stream(&cached, 7, 42);
+            assert_eq!(got, want, "{method}: cache changed served bytes");
+        }
+    }
+
+    #[test]
+    fn kv_stats_count_prefix_sharing() {
+        let mut c = cfg("standard", 2);
+        c.kv = Some(crate::kvcache::KvCacheConfig::new(2));
+        let handle = start(c.clone()).unwrap();
+        let token_elems = c.heads * c.head_dim;
+        let mut rng = Rng::new(9);
+        let tokens: Vec<(Arc<[f32]>, Arc<[f32]>)> = (0..6)
+            .map(|_| {
+                let mut mk = || {
+                    let mut b = vec![0.0f32; token_elems];
+                    rng.fill_normal(&mut b);
+                    let slab: Arc<[f32]> = b.into();
+                    slab
+                };
+                (mk(), mk())
+            })
+            .collect();
+        // two streams replaying the same prompt: the second allocates
+        // zero new blocks for the shared region
+        let s0 = handle.open_stream(1);
+        for (k, v) in &tokens {
+            s0.append(k.clone(), v.clone());
+        }
+        let s1 = handle.open_stream(1);
+        for (k, v) in &tokens {
+            s1.append(k.clone(), v.clone());
+        }
+        s0.close();
+        s1.close();
+        let stats = handle.shutdown().unwrap();
+        assert_eq!(stats.kv_alloc_blocks, 3, "first stream's sealed blocks only");
+        assert_eq!(stats.kv_hit_blocks, 3, "second stream shares every sealed block");
+        assert_eq!(stats.kv_evicted_blocks, 0);
+        assert_eq!(stats.kv_resident_blocks, 3, "index retains the shared blocks");
+    }
+
+    #[test]
+    fn sliding_window_stream_matches_bounded_session() {
+        let mut c = cfg("skeinformer", 2);
+        c.kv = Some(crate::kvcache::KvCacheConfig::new(2).with_window(4));
+        let stride = 3usize;
+        let handle = start(c.clone()).unwrap();
+        let stream = handle.open_stream(stride);
+        let token_elems = c.heads * c.head_dim;
+        let mut rng = Rng::new(17);
+        let mut mk = |rng: &mut Rng| {
+            let mut b = vec![0.0f32; token_elems];
+            rng.fill_normal(&mut b);
+            let slab: Arc<[f32]> = b.into();
+            slab
+        };
+        // reference: one BoundedSession per head at the stream's seeds
+        let mut reference: Vec<crate::attention::BoundedSession> = (0..c.heads)
+            .map(|h| {
+                crate::attention::BoundedSession::new(
+                    crate::attention::by_name(&c.method, c.d).unwrap(),
+                    SessionSpec::new(c.head_dim)
+                        .with_seed(stream_seed(c.seed, 0, h as u64))
+                        .with_repilot_stride(stride),
+                    4,
+                )
+            })
+            .collect();
+        for _ in 0..9 {
+            let (k, v, q) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+            stream.append(k.clone(), v.clone());
+            let got = stream.query(q.clone(), 1).recv().expect("windowed stream reply");
+            for (h, session) in reference.iter_mut().enumerate() {
+                let o = h * c.head_dim;
+                session.append(&k[o..o + c.head_dim], &v[o..o + c.head_dim]);
+                let q_head = Matrix::from_vec(1, c.head_dim, q[o..o + c.head_dim].to_vec());
+                let want = session.query(&q_head);
+                assert_eq!(
+                    &got[o..o + c.head_dim],
+                    want.data(),
+                    "head {h} diverged from BoundedSession"
+                );
+            }
+        }
+        stream.close();
+        handle.shutdown().unwrap();
     }
 
     #[test]

@@ -1,0 +1,220 @@
+//! The unit of paged KV storage: a fixed-capacity block of streamed
+//! tokens.
+//!
+//! A [`KvBlock`] holds up to `block_size` tokens, each token one K row and
+//! one V row of `token_elems` f32s (the stream's `[heads, head_dim]`
+//! slab, heads contiguous).  Blocks are handed out by
+//! [`BlockPool`](super::BlockPool) and shared between streams as
+//! `Arc<KvBlock>`:
+//!
+//! * a **sealed** block (full) is immutable — once its content hash is
+//!   registered in the [`PrefixIndex`](super::PrefixIndex) the bytes never
+//!   change, so any number of streams may hold clones of the `Arc`;
+//! * the **tail** block of a stream (partially filled) is mutable only
+//!   while uniquely owned — a forked stream that shares a tail must
+//!   copy-on-write before appending (`Arc::get_mut` fails, the chain
+//!   clones; see [`StreamChain`](super::StreamChain)).
+//!
+//! Content hashing is [FNV-1a] over the filled K then V bit patterns — a
+//! pure function of the token contents, so two streams that append the
+//! same tokens produce the same hash sequence and land on the same trie
+//! path.  Hash hits are always verified by full content comparison
+//! ([`KvBlock::content_eq`]) before a block is shared: a collision
+//! degrades to a cache miss, never to wrong bytes.
+//!
+//! [FNV-1a]: https://en.wikipedia.org/wiki/Fowler%E2%80%93Noll%E2%80%93Vo_hash_function
+
+/// One fixed-capacity block of streamed tokens (see the [module
+/// docs](self) for the sharing/mutability contract).
+#[derive(Clone, Debug)]
+pub struct KvBlock {
+    /// `block_size * token_elems` backing storage (fully allocated up
+    /// front so recycled blocks never reallocate); only the first
+    /// `len * token_elems` elements are meaningful.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    token_elems: usize,
+    len: usize,
+}
+
+impl KvBlock {
+    /// Wrap (recycled or fresh) backing storage as an empty block.
+    /// `k`/`v` must each hold exactly `block_size * token_elems` elements.
+    pub(super) fn from_storage(k: Vec<f32>, v: Vec<f32>, token_elems: usize) -> Self {
+        assert_eq!(k.len(), v.len(), "K/V storage sizes differ");
+        assert!(token_elems > 0, "token_elems must be positive");
+        assert_eq!(k.len() % token_elems, 0, "storage not a whole number of tokens");
+        Self { k, v, token_elems, len: 0 }
+    }
+
+    /// Reclaim the backing storage (pool recycling).
+    pub(super) fn into_storage(self) -> (Vec<f32>, Vec<f32>) {
+        (self.k, self.v)
+    }
+
+    /// Token capacity of the block.
+    pub fn block_size(&self) -> usize {
+        self.k.len() / self.token_elems
+    }
+
+    /// Elements per token row (the stream's `heads * head_dim`).
+    pub fn token_elems(&self) -> usize {
+        self.token_elems
+    }
+
+    /// Tokens currently stored.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True once every slot is filled — the block is sealed and must not
+    /// be mutated again.
+    pub fn is_full(&self) -> bool {
+        self.len == self.block_size()
+    }
+
+    /// Append one token's K and V rows (each `token_elems` long).
+    ///
+    /// # Panics
+    ///
+    /// Panics if the block is full or the row lengths are wrong.
+    pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
+        assert!(!self.is_full(), "push into a sealed (full) block");
+        assert_eq!(k_row.len(), self.token_elems, "k_row length != token_elems");
+        assert_eq!(v_row.len(), self.token_elems, "v_row length != token_elems");
+        let o = self.len * self.token_elems;
+        self.k[o..o + self.token_elems].copy_from_slice(k_row);
+        self.v[o..o + self.token_elems].copy_from_slice(v_row);
+        self.len += 1;
+    }
+
+    /// The K row of token `slot` (`slot < len`).
+    pub fn k_token(&self, slot: usize) -> &[f32] {
+        assert!(slot < self.len, "token slot {slot} out of range (len {})", self.len);
+        &self.k[slot * self.token_elems..(slot + 1) * self.token_elems]
+    }
+
+    /// The V row of token `slot` (`slot < len`).
+    pub fn v_token(&self, slot: usize) -> &[f32] {
+        assert!(slot < self.len, "token slot {slot} out of range (len {})", self.len);
+        &self.v[slot * self.token_elems..(slot + 1) * self.token_elems]
+    }
+
+    /// FNV-1a over the filled K then V bit patterns (plus the length).
+    /// Deterministic across runs and processes — equal contents always
+    /// hash equal, so identical prompt prefixes land on identical trie
+    /// paths.
+    pub fn content_hash(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        // 4 bytes per element (f32 bit patterns), not a widened u64 —
+        // this runs on the append hot path at every block seal
+        let mut mix = |word: u32| {
+            for byte in word.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        mix(self.len as u32);
+        let filled = self.len * self.token_elems;
+        for &x in &self.k[..filled] {
+            mix(x.to_bits());
+        }
+        for &x in &self.v[..filled] {
+            mix(x.to_bits());
+        }
+        h
+    }
+
+    /// Bitwise content equality over the filled region — the collision
+    /// guard behind every hash hit.
+    pub fn content_eq(&self, other: &Self) -> bool {
+        let filled = self.len * self.token_elems;
+        self.len == other.len
+            && self.token_elems == other.token_elems
+            && bits_eq(&self.k[..filled], &other.k[..filled])
+            && bits_eq(&self.v[..filled], &other.v[..filled])
+    }
+}
+
+/// Bit-pattern slice equality (`-0.0 != 0.0`, `NaN == NaN` at equal bits —
+/// the identity the dedup cache needs, not IEEE semantics).
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(block_size: usize, token_elems: usize) -> KvBlock {
+        KvBlock::from_storage(
+            vec![0.0; block_size * token_elems],
+            vec![0.0; block_size * token_elems],
+            token_elems,
+        )
+    }
+
+    #[test]
+    fn push_and_read_back_tokens() {
+        let mut b = block(3, 2);
+        assert!(b.is_empty() && !b.is_full());
+        b.push(&[1.0, 2.0], &[3.0, 4.0]);
+        b.push(&[5.0, 6.0], &[7.0, 8.0]);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.k_token(0), &[1.0, 2.0]);
+        assert_eq!(b.v_token(1), &[7.0, 8.0]);
+        b.push(&[0.0, 0.0], &[0.0, 0.0]);
+        assert!(b.is_full());
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_into_full_block_panics() {
+        let mut b = block(1, 2);
+        b.push(&[1.0, 2.0], &[3.0, 4.0]);
+        b.push(&[5.0, 6.0], &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn hash_depends_on_content_and_length() {
+        let mut a = block(2, 2);
+        let mut b = block(2, 2);
+        a.push(&[1.0, 2.0], &[3.0, 4.0]);
+        b.push(&[1.0, 2.0], &[3.0, 4.0]);
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert!(a.content_eq(&b));
+        b.push(&[9.0, 9.0], &[9.0, 9.0]);
+        assert_ne!(a.content_hash(), b.content_hash());
+        assert!(!a.content_eq(&b));
+        // same length, different bytes
+        let mut c = block(2, 2);
+        c.push(&[1.0, 2.5], &[3.0, 4.0]);
+        assert_ne!(a.content_hash(), c.content_hash());
+        assert!(!a.content_eq(&c));
+    }
+
+    #[test]
+    fn hash_ignores_unfilled_slots() {
+        let mut dirty = KvBlock::from_storage(vec![7.0; 4], vec![7.0; 4], 2);
+        let mut clean = block(2, 2);
+        dirty.push(&[1.0, 2.0], &[3.0, 4.0]);
+        clean.push(&[1.0, 2.0], &[3.0, 4.0]);
+        assert_eq!(dirty.content_hash(), clean.content_hash());
+        assert!(dirty.content_eq(&clean));
+    }
+
+    #[test]
+    fn negative_zero_is_distinct() {
+        let mut a = block(1, 1);
+        let mut b = block(1, 1);
+        a.push(&[0.0], &[0.0]);
+        b.push(&[-0.0], &[0.0]);
+        assert!(!a.content_eq(&b), "-0.0 must not dedupe against 0.0");
+    }
+}

@@ -1,0 +1,92 @@
+//! Cache configuration: block geometry, capacity, and the eviction
+//! policy.
+
+/// What happens to blocks as streams grow and the pool fills.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Streams keep their whole history; sealed blocks are retained in
+    /// the prefix index after streams close and evicted
+    /// least-recently-used (and only when unreferenced) once the pool
+    /// hits capacity.
+    Lru,
+    /// Unbounded-stream mode: each stream keeps only its last `window`
+    /// tokens (queries compute over the window; front blocks are released
+    /// as they fall fully outside it).  Sealed blocks still dedupe
+    /// through the prefix index, with the same LRU capacity eviction.
+    SlidingWindow {
+        /// Window length in tokens (clamped to ≥ 1).
+        window: usize,
+    },
+}
+
+impl EvictionPolicy {
+    /// The sliding-window length, if this policy has one.
+    pub fn window(&self) -> Option<usize> {
+        match self {
+            Self::Lru => None,
+            Self::SlidingWindow { window } => Some((*window).max(1)),
+        }
+    }
+}
+
+/// Configuration for a [`KvCache`](super::KvCache).
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    /// Tokens per block.  Smaller blocks share finer-grained prefixes but
+    /// carry more per-block bookkeeping; 16 is a reasonable default.
+    pub block_size: usize,
+    /// Max resident blocks across all streams + the prefix index
+    /// (0 = unbounded).  A soft cap: live streams always get a block, and
+    /// LRU eviction of unreferenced index entries brings the count back
+    /// down.
+    pub capacity_blocks: usize,
+    /// Eviction policy.
+    pub policy: EvictionPolicy,
+}
+
+impl KvCacheConfig {
+    /// `block_size`-token blocks, unbounded capacity, [`EvictionPolicy::Lru`].
+    pub fn new(block_size: usize) -> Self {
+        Self { block_size: block_size.max(1), capacity_blocks: 0, policy: EvictionPolicy::Lru }
+    }
+
+    pub fn with_capacity_blocks(mut self, capacity: usize) -> Self {
+        self.capacity_blocks = capacity;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: EvictionPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Convenience: switch to [`EvictionPolicy::SlidingWindow`].
+    pub fn with_window(self, window: usize) -> Self {
+        self.with_policy(EvictionPolicy::SlidingWindow { window })
+    }
+
+    /// The per-stream sliding window, if the policy has one.
+    pub fn window(&self) -> Option<usize> {
+        self.policy.window()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_compose() {
+        let cfg = KvCacheConfig::new(8).with_capacity_blocks(64).with_window(512);
+        assert_eq!(cfg.block_size, 8);
+        assert_eq!(cfg.capacity_blocks, 64);
+        assert_eq!(cfg.window(), Some(512));
+        assert_eq!(KvCacheConfig::new(8).window(), None);
+    }
+
+    #[test]
+    fn degenerate_values_clamp() {
+        assert_eq!(KvCacheConfig::new(0).block_size, 1);
+        assert_eq!(EvictionPolicy::SlidingWindow { window: 0 }.window(), Some(1));
+    }
+}

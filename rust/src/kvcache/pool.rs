@@ -1,0 +1,175 @@
+//! The block allocator: hands out [`KvBlock`]s, recycles their storage,
+//! and tracks residency against a configurable capacity.
+//!
+//! All block lifetimes flow through the pool: [`BlockPool::alloc`] hands
+//! out a block (recycled storage when available, so steady-state serving
+//! stops allocating), and every `Arc<KvBlock>` a chain or the prefix
+//! index lets go of comes back through [`BlockPool::release`] — when the
+//! released clone is the *last* reference the storage returns to the free
+//! list and the resident count drops.  Dropping an `Arc` without telling
+//! the pool is safe (the memory is freed) but leaks the residency
+//! accounting, so the cache layer never does it.
+//!
+//! The pool does not decide *what* to evict — that is the
+//! [`PrefixIndex`](super::PrefixIndex) + policy's job — it only answers
+//! [`at_capacity`](BlockPool::at_capacity), which the cache consults
+//! before allocating.  Capacity is a bound on cache *retention*, not on
+//! live streams: a stream that legitimately needs one more block always
+//! gets it, and eviction of unreferenced index entries brings the count
+//! back down.
+
+use super::block::KvBlock;
+use std::sync::Arc;
+
+/// How many freed (K, V) storage pairs the pool keeps for reuse.
+const FREE_KEEP: usize = 64;
+
+/// Allocator + residency accounting for fixed-size KV blocks.
+#[derive(Debug)]
+pub struct BlockPool {
+    block_size: usize,
+    token_elems: usize,
+    /// Max resident blocks; 0 = unbounded.
+    capacity: usize,
+    /// Recycled (K, V) storage pairs.
+    free: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Blocks currently handed out and not yet reclaimed.
+    resident: usize,
+    /// Lifetime allocations (monotonic, for stats).
+    total_allocs: u64,
+}
+
+impl BlockPool {
+    /// A pool of `block_size`-token blocks at `token_elems` f32s per token
+    /// row.  `capacity` bounds resident blocks (0 = unbounded).
+    pub fn new(block_size: usize, token_elems: usize, capacity: usize) -> Self {
+        assert!(block_size > 0, "block_size must be positive");
+        assert!(token_elems > 0, "token_elems must be positive");
+        Self { block_size, token_elems, capacity, free: Vec::new(), resident: 0, total_allocs: 0 }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn token_elems(&self) -> usize {
+        self.token_elems
+    }
+
+    /// Blocks currently alive (streams + prefix index).
+    pub fn resident(&self) -> usize {
+        self.resident
+    }
+
+    /// Lifetime [`alloc`](Self::alloc) count.
+    pub fn total_allocs(&self) -> u64 {
+        self.total_allocs
+    }
+
+    /// True when the resident count has reached the configured capacity —
+    /// the cache should evict unreferenced index entries before (or right
+    /// after) the next alloc.
+    pub fn at_capacity(&self) -> bool {
+        self.capacity > 0 && self.resident >= self.capacity
+    }
+
+    /// Hand out an empty block, reusing freed storage when available.
+    pub fn alloc(&mut self) -> KvBlock {
+        let elems = self.block_size * self.token_elems;
+        let (mut k, mut v) = self.free.pop().unwrap_or_default();
+        k.clear();
+        k.resize(elems, 0.0);
+        v.clear();
+        v.resize(elems, 0.0);
+        self.resident += 1;
+        self.total_allocs += 1;
+        KvBlock::from_storage(k, v, self.token_elems)
+    }
+
+    /// A copy-on-write duplicate of `block` — a fresh block with the same
+    /// filled contents, counted as a new allocation (the fork path uses
+    /// this when a shared tail must diverge).
+    pub fn cow_clone(&mut self, block: &KvBlock) -> KvBlock {
+        let mut fresh = self.alloc();
+        for slot in 0..block.len() {
+            fresh.push(block.k_token(slot), block.v_token(slot));
+        }
+        fresh
+    }
+
+    /// Release one `Arc` clone of a block.  If it was the last reference
+    /// the block's storage returns to the free list and the resident
+    /// count drops; otherwise the block stays alive for its remaining
+    /// holders and only this clone goes away.
+    pub fn release(&mut self, block: Arc<KvBlock>) {
+        if let Ok(owned) = Arc::try_unwrap(block) {
+            self.resident = self.resident.saturating_sub(1);
+            if self.free.len() < FREE_KEEP {
+                self.free.push(owned.into_storage());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_recycles_storage() {
+        let mut pool = BlockPool::new(4, 2, 0);
+        let mut b = pool.alloc();
+        assert_eq!(pool.resident(), 1);
+        b.push(&[1.0, 2.0], &[3.0, 4.0]);
+        let ptr = b.k_token(0).as_ptr();
+        pool.release(Arc::new(b));
+        assert_eq!(pool.resident(), 0);
+        let again = pool.alloc();
+        assert_eq!(pool.resident(), 1);
+        assert!(again.is_empty(), "recycled block must come back empty");
+        // same backing allocation, reused
+        let mut again = again;
+        again.push(&[0.0, 0.0], &[0.0, 0.0]);
+        assert_eq!(again.k_token(0).as_ptr(), ptr);
+        assert_eq!(pool.total_allocs(), 2);
+    }
+
+    #[test]
+    fn shared_blocks_survive_partial_release() {
+        let mut pool = BlockPool::new(2, 1, 0);
+        let block = Arc::new(pool.alloc());
+        let clone = Arc::clone(&block);
+        pool.release(clone); // one of two refs: block stays resident
+        assert_eq!(pool.resident(), 1);
+        pool.release(block); // last ref: reclaimed
+        assert_eq!(pool.resident(), 0);
+    }
+
+    #[test]
+    fn capacity_reports_but_never_blocks_allocation() {
+        let mut pool = BlockPool::new(2, 1, 2);
+        let a = Arc::new(pool.alloc());
+        assert!(!pool.at_capacity());
+        let b = Arc::new(pool.alloc());
+        assert!(pool.at_capacity());
+        let c = Arc::new(pool.alloc()); // soft cap: live streams always get a block
+        assert_eq!(pool.resident(), 3);
+        pool.release(a);
+        pool.release(b);
+        assert!(!pool.at_capacity());
+        pool.release(c);
+    }
+
+    #[test]
+    fn cow_clone_copies_contents() {
+        let mut pool = BlockPool::new(3, 2, 0);
+        let mut orig = pool.alloc();
+        orig.push(&[1.0, 2.0], &[3.0, 4.0]);
+        let copy = pool.cow_clone(&orig);
+        assert_eq!(copy.len(), 1);
+        assert_eq!(copy.k_token(0), orig.k_token(0));
+        assert_eq!(copy.v_token(0), orig.v_token(0));
+        assert!(copy.content_eq(&orig));
+        assert_eq!(pool.resident(), 2);
+    }
+}

@@ -1,0 +1,380 @@
+//! The prefix-sharing index: a radix trie over sealed block content
+//! hashes.
+//!
+//! A stream's sealed blocks form a path of content hashes `h₀ h₁ h₂ …`
+//! from the trie root; the node at depth `i` holds the shared
+//! `Arc<KvBlock>` for the stream's `i`-th block.  Two streams whose
+//! prompts share a prefix walk the same hash path and receive the same
+//! physical blocks — [`PrefixIndex::lookup`] verifies every hash hit by
+//! full content comparison ([`KvBlock::content_eq`]), so a hash collision
+//! degrades to a miss, never to shared wrong bytes.
+//!
+//! **Invariants.**
+//!
+//! * A node's position encodes its *absolute* prefix path — blocks are
+//!   only ever shared between streams whose entire preceding token
+//!   sequences were bitwise identical.
+//! * Eviction ([`PrefixIndex::evict_lru`]) only ever removes a block with
+//!   no holder outside the index (`Arc` strong count 1): a block a live
+//!   stream still references is never dropped.
+//! * An evicted interior node leaves a block-less *tombstone* so its
+//!   descendants stay addressable (a sliding-window stream may drop its
+//!   front blocks — unpinning them — while it keeps sealing deeper ones
+//!   on the same path); evicted leaves are removed and empty tombstone
+//!   chains pruned.
+//! * Every insert and every hit stamps a unique logical-clock value, so
+//!   LRU selection has no ties and is deterministic regardless of hash-map
+//!   iteration order.
+
+use super::block::KvBlock;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+#[derive(Debug)]
+struct TrieNode {
+    /// The shared block, or `None` for a tombstone (evicted interior
+    /// node kept only to keep descendants addressable).
+    block: Option<Arc<KvBlock>>,
+    children: HashMap<u64, TrieNode>,
+    /// Logical-clock stamp of the last insert/hit (unique per node).
+    last_touch: u64,
+}
+
+/// Radix trie mapping sealed-block hash paths to shared blocks.  See the
+/// [module docs](self) for the invariants.
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    children: HashMap<u64, TrieNode>,
+    clock: u64,
+    /// Nodes currently holding a block (tombstones excluded).
+    entries: usize,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Blocks currently held by the index.
+    pub fn len(&self) -> usize {
+        self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+
+    fn node(&self, path: &[u64]) -> Option<&TrieNode> {
+        let (&first, rest) = path.split_first()?;
+        let mut node = self.children.get(&first)?;
+        for h in rest {
+            node = node.children.get(h)?;
+        }
+        Some(node)
+    }
+
+    fn node_mut(&mut self, path: &[u64]) -> Option<&mut TrieNode> {
+        let (&first, rest) = path.split_first()?;
+        let mut node = self.children.get_mut(&first)?;
+        for h in rest {
+            node = node.children.get_mut(h)?;
+        }
+        Some(node)
+    }
+
+    /// Look up a just-sealed block: does a stream whose previous sealed
+    /// blocks hashed to `path` already have a shared block with
+    /// `candidate`'s contents?  On a verified hit the node is touched
+    /// (LRU) and its `Arc` cloned out; hash matches with different
+    /// contents are misses.
+    pub fn lookup(&mut self, path: &[u64], hash: u64, candidate: &KvBlock) -> Option<Arc<KvBlock>> {
+        self.clock += 1;
+        let stamp = self.clock;
+        let children = match path.is_empty() {
+            true => &mut self.children,
+            false => &mut self.node_mut(path)?.children,
+        };
+        let node = children.get_mut(&hash)?;
+        let block = node.block.as_ref()?;
+        if !block.content_eq(candidate) {
+            return None; // hash collision: treat as a miss, never share
+        }
+        node.last_touch = stamp;
+        Some(Arc::clone(node.block.as_ref().expect("checked above")))
+    }
+
+    /// Register a freshly sealed block at `path` + `hash`.  Missing
+    /// intermediate nodes (evicted ancestors of a sliding-window stream)
+    /// are recreated as tombstones; an existing tombstone at the target
+    /// is re-armed with the block.  The displaced block, if any (a hash
+    /// collision overwriting a different-content entry), is returned so
+    /// the caller can release it back to the pool — the index never
+    /// drops an `Arc` the pool's residency ledger is tracking.
+    pub fn insert(&mut self, path: &[u64], hash: u64, block: Arc<KvBlock>) -> Option<Arc<KvBlock>> {
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut children = &mut self.children;
+        for h in path {
+            children = &mut children
+                .entry(*h)
+                .or_insert_with(|| TrieNode {
+                    block: None,
+                    children: HashMap::new(),
+                    last_touch: 0,
+                })
+                .children;
+        }
+        let node = children.entry(hash).or_insert_with(|| TrieNode {
+            block: None,
+            children: HashMap::new(),
+            last_touch: 0,
+        });
+        let displaced = node.block.take();
+        if displaced.is_none() {
+            self.entries += 1;
+        }
+        node.block = Some(block);
+        node.last_touch = stamp;
+        displaced
+    }
+
+    /// Remove the entry at `path` + `hash` if its block is exactly the
+    /// one `holder` shares and nothing else references it (`Arc` strong
+    /// count ≤ 2: the index plus `holder`).  Used by the sliding-window
+    /// path when no capacity bound exists to reclaim retention later.
+    /// Returns the removed `Arc` for the caller to release.
+    pub fn remove_if_unshared(
+        &mut self,
+        path: &[u64],
+        hash: u64,
+        holder: &Arc<KvBlock>,
+    ) -> Option<Arc<KvBlock>> {
+        let children = match path.is_empty() {
+            true => &mut self.children,
+            false => &mut self.node_mut(path)?.children,
+        };
+        let node = children.get_mut(&hash)?;
+        let block = node.block.as_ref()?;
+        if !Arc::ptr_eq(block, holder) || Arc::strong_count(block) > 2 {
+            return None; // another stream still shares it: keep
+        }
+        let removed = node.block.take().expect("checked above");
+        self.entries -= 1;
+        let mut full_path = path.to_vec();
+        full_path.push(hash);
+        prune(&mut self.children, &full_path);
+        Some(removed)
+    }
+
+    /// Evict the least-recently-touched block that nothing outside the
+    /// index references (`Arc` strong count 1), or `None` when every
+    /// held block is still referenced elsewhere.
+    pub fn evict_lru(&mut self) -> Option<Arc<KvBlock>> {
+        self.evict_lru_batch(1).pop()
+    }
+
+    /// Evict up to `max` least-recently-touched unreferenced blocks in
+    /// **one** trie pass (the capacity catch-up path would otherwise pay
+    /// a full DFS per block).  Interior nodes tombstone (descendants
+    /// stay addressable); leaves are removed and empty tombstone chains
+    /// pruned.  Returns the evicted `Arc`s for the caller to release
+    /// back to the pool, oldest first — possibly fewer than `max`.
+    pub fn evict_lru_batch(&mut self, max: usize) -> Vec<Arc<KvBlock>> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let mut candidates = Vec::new();
+        let mut path = Vec::new();
+        find_evictable(&self.children, &mut path, &mut candidates);
+        // unique stamps make the order (and the evicted set) deterministic
+        candidates.sort_unstable_by_key(|(stamp, _)| *stamp);
+        candidates.truncate(max);
+        let mut evicted = Vec::with_capacity(candidates.len());
+        for (_, path) in candidates {
+            let node = self.node_mut(&path).expect("evictable path just found");
+            let block = node.block.take().expect("evictable node holds a block");
+            self.entries -= 1;
+            prune(&mut self.children, &path);
+            evicted.push(block);
+        }
+        evicted
+    }
+}
+
+/// DFS collecting `(last_touch, path)` of every evictable node (block
+/// held, strong count 1).
+fn find_evictable(
+    children: &HashMap<u64, TrieNode>,
+    path: &mut Vec<u64>,
+    out: &mut Vec<(u64, Vec<u64>)>,
+) {
+    for (&h, node) in children {
+        path.push(h);
+        if let Some(block) = &node.block {
+            if Arc::strong_count(block) == 1 {
+                out.push((node.last_touch, path.clone()));
+            }
+        }
+        find_evictable(&node.children, path, out);
+        path.pop();
+    }
+}
+
+/// Remove the node at `path` if it is an empty tombstone, cascading up
+/// through ancestors that become empty tombstones themselves.
+fn prune(children: &mut HashMap<u64, TrieNode>, path: &[u64]) {
+    let Some((&first, rest)) = path.split_first() else {
+        return;
+    };
+    if let Some(node) = children.get_mut(&first) {
+        prune(&mut node.children, rest);
+        if node.block.is_none() && node.children.is_empty() {
+            children.remove(&first);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sealed(token_elems: usize, fill: f32) -> Arc<KvBlock> {
+        let mut b = KvBlock::from_storage(vec![0.0; token_elems], vec![0.0; token_elems], token_elems);
+        b.push(&vec![fill; token_elems], &vec![fill * 2.0; token_elems]);
+        Arc::new(b)
+    }
+
+    #[test]
+    fn lookup_hits_only_verified_content_at_the_same_path() {
+        let mut idx = PrefixIndex::new();
+        let b0 = sealed(2, 1.0);
+        let h0 = b0.content_hash();
+        assert!(idx.insert(&[], h0, Arc::clone(&b0)).is_none());
+        assert_eq!(idx.len(), 1);
+        // same path, same content: hit
+        let probe = sealed(2, 1.0);
+        let hit = idx.lookup(&[], probe.content_hash(), &probe).expect("hit");
+        assert!(Arc::ptr_eq(&hit, &b0));
+        // different path (depth 1): miss even with equal content
+        assert!(idx.lookup(&[h0], probe.content_hash(), &probe).is_none());
+        // unknown hash: miss
+        assert!(idx.lookup(&[], h0 ^ 1, &probe).is_none());
+    }
+
+    #[test]
+    fn eviction_skips_referenced_blocks() {
+        let mut idx = PrefixIndex::new();
+        let held = sealed(2, 1.0);
+        let loose = sealed(2, 2.0);
+        let _ = idx.insert(&[], held.content_hash(), Arc::clone(&held)); // 2 refs
+        let _ = idx.insert(&[], loose.content_hash(), loose); // 1 ref (index only)
+        let evicted = idx.evict_lru().expect("loose block evictable");
+        assert_eq!(evicted.k_token(0)[0], 2.0, "must evict the unreferenced block");
+        assert_eq!(idx.len(), 1);
+        assert!(idx.evict_lru().is_none(), "held block must never be evicted");
+        drop(held);
+        assert!(idx.evict_lru().is_some(), "released block becomes evictable");
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn lru_order_follows_touches() {
+        let mut idx = PrefixIndex::new();
+        let a = sealed(2, 1.0);
+        let b = sealed(2, 2.0);
+        let _ = idx.insert(&[], a.content_hash(), Arc::clone(&a));
+        let _ = idx.insert(&[], b.content_hash(), Arc::clone(&b));
+        // touch a, making b the LRU
+        let probe = sealed(2, 1.0);
+        idx.lookup(&[], probe.content_hash(), &probe).expect("hit a");
+        drop(a);
+        drop(b);
+        let evicted = idx.evict_lru().expect("evictable");
+        assert_eq!(evicted.k_token(0)[0], 2.0, "least-recently-touched first");
+    }
+
+    #[test]
+    fn interior_eviction_tombstones_and_reinsert_rearms() {
+        let mut idx = PrefixIndex::new();
+        let parent = sealed(2, 1.0);
+        let child = sealed(2, 2.0);
+        let hp = parent.content_hash();
+        let hc = child.content_hash();
+        let _ = idx.insert(&[], hp, Arc::clone(&parent));
+        let _ = idx.insert(&[hp], hc, Arc::clone(&child));
+        drop(parent); // only the index holds the parent now
+        let evicted = idx.evict_lru().expect("parent evictable");
+        assert_eq!(evicted.k_token(0)[0], 1.0);
+        assert_eq!(idx.len(), 1);
+        // the child stays addressable through the tombstone
+        let probe = sealed(2, 2.0);
+        let hit = idx.lookup(&[hp], probe.content_hash(), &probe).expect("child survives");
+        assert!(Arc::ptr_eq(&hit, &child));
+        // re-arming the tombstone counts as one entry again
+        let parent2 = sealed(2, 1.0);
+        assert!(idx.insert(&[], hp, parent2).is_none(), "tombstone re-arm displaces nothing");
+        assert_eq!(idx.len(), 2);
+    }
+
+    #[test]
+    fn insert_returns_the_displaced_block() {
+        let mut idx = PrefixIndex::new();
+        let a = sealed(2, 1.0);
+        let b = sealed(2, 2.0);
+        let h = a.content_hash();
+        assert!(idx.insert(&[], h, Arc::clone(&a)).is_none());
+        // simulated hash collision: different content forced onto the
+        // same key must hand the old block back, not drop it
+        let displaced = idx.insert(&[], h, Arc::clone(&b)).expect("displaced block returned");
+        assert!(Arc::ptr_eq(&displaced, &a));
+        assert_eq!(idx.len(), 1);
+    }
+
+    #[test]
+    fn remove_if_unshared_respects_other_holders() {
+        let mut idx = PrefixIndex::new();
+        let block = sealed(2, 1.0);
+        let h = block.content_hash();
+        let _ = idx.insert(&[], h, Arc::clone(&block)); // index + `block` = 2 refs
+        let outside = Arc::clone(&block); // a third holder (another stream)
+        assert!(idx.remove_if_unshared(&[], h, &block).is_none(), "shared: must keep");
+        drop(outside);
+        let removed = idx.remove_if_unshared(&[], h, &block).expect("unshared: removed");
+        assert!(Arc::ptr_eq(&removed, &block));
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn batch_eviction_takes_oldest_first_in_one_pass() {
+        let mut idx = PrefixIndex::new();
+        let blocks: Vec<_> = (0..4).map(|i| sealed(2, i as f32 + 1.0)).collect();
+        for b in &blocks {
+            let _ = idx.insert(&[], b.content_hash(), Arc::clone(b));
+        }
+        let keep = Arc::clone(&blocks[0]); // oldest stamp, but referenced
+        drop(blocks);
+        let evicted = idx.evict_lru_batch(2);
+        assert_eq!(evicted.len(), 2);
+        assert_eq!(evicted[0].k_token(0)[0], 2.0, "oldest unreferenced first");
+        assert_eq!(evicted[1].k_token(0)[0], 3.0);
+        assert_eq!(idx.len(), 2);
+        drop(keep);
+        assert_eq!(idx.evict_lru_batch(10).len(), 2, "remainder evictable once released");
+    }
+
+    #[test]
+    fn leaf_eviction_prunes_empty_tombstone_chains() {
+        let mut idx = PrefixIndex::new();
+        let parent = sealed(2, 1.0);
+        let child = sealed(2, 2.0);
+        let hp = parent.content_hash();
+        let hc = child.content_hash();
+        let _ = idx.insert(&[], hp, parent);
+        let _ = idx.insert(&[hp], hc, child);
+        // evict both (insertion order: parent is older)
+        assert!(idx.evict_lru().is_some());
+        assert!(idx.evict_lru().is_some());
+        assert!(idx.is_empty());
+        assert!(idx.children.is_empty(), "tombstone chain must be pruned");
+    }
+}

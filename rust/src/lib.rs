@@ -30,6 +30,7 @@ pub mod coordinator;
 pub mod data;
 pub mod flops;
 pub mod json;
+pub mod kvcache;
 pub mod metrics;
 pub mod pool;
 pub mod prop;

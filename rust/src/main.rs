@@ -62,6 +62,9 @@ fn print_help() {
                     [--batch B] [--heads H] [--seq N] [--head-dim P] [--d D] [--workers W]\n\
                     --stream runs a streaming-decode demo instead (one token\n\
                     appended + queried per step): [--tokens N] [--repilot-stride S]\n\
+                    [--streams S] paged KV cache: [--kv-blocks N] (capacity;\n\
+                    enables the cache) [--kv-window W] (sliding window, tokens)\n\
+                    [--kv-block-size B] (tokens/block, default 16)\n\
            inspect  <artifacts/..._manifest.json>\n\n\
          GLOBAL FLAGS\n\
            --pool-size N   worker threads in the persistent pool (default:\n\
@@ -264,9 +267,11 @@ fn cmd_serve_cpu(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Streaming-decode demo: open one stream per configured batch slot,
-/// append a token and issue a one-row query per step, report tokens/s and
-/// per-step latency percentiles.
+/// Streaming-decode demo: decode `--tokens` tokens per stream (append +
+/// one-row query per step), report tokens/s and per-step latency
+/// percentiles.  With `--streams S > 1` every stream replays the same
+/// token sequence, so a KV-cache-enabled run (`--kv-blocks`) shows prefix
+/// sharing: stream 1 allocates blocks, streams 2..S hit them.
 fn cmd_serve_stream(
     args: &Args,
     cfg: skeinformer::coordinator::attention_server::AttentionServerConfig,
@@ -276,40 +281,54 @@ fn cmd_serve_stream(
 
     let tokens = args.get_usize("tokens", cfg.seq)?;
     let stride = args.get_usize("repilot-stride", 1)?;
+    let n_streams = args.get_usize("streams", 1)?.max(1);
     eprintln!(
-        "streaming decode demo: method={} H={} p={} tokens={} repilot-stride={}",
-        cfg.method, cfg.heads, cfg.head_dim, tokens, stride
+        "streaming decode demo: method={} H={} p={} tokens={} repilot-stride={} streams={}{}",
+        cfg.method,
+        cfg.heads,
+        cfg.head_dim,
+        tokens,
+        stride,
+        n_streams,
+        match &cfg.kv {
+            Some(kv) => format!(" kv-cache={kv:?}"),
+            None => " kv-cache=off".to_string(),
+        }
     );
 
     let handle = attention_server::start(cfg.clone())?;
-    let stream = handle.open_stream(stride);
-    let token_elems = stream.token_elems();
-    let mut rng = Rng::new(11);
     let mut latency = Percentiles::default();
     let t0 = std::time::Instant::now();
-    for _ in 0..tokens {
-        let mut mk = || {
-            let mut buf = vec![0.0f32; token_elems];
-            rng.fill_normal(&mut buf);
-            let slab: Arc<[f32]> = buf.into();
-            slab
-        };
-        let (k, v, q) = (mk(), mk(), mk());
-        let step = std::time::Instant::now();
-        stream.append(k, v);
-        let out = stream.query(q, 1).recv().context("stream query dropped")?;
-        latency.push(step.elapsed().as_secs_f64() * 1e3);
-        anyhow::ensure!(out.len() == token_elems);
-        anyhow::ensure!(out.iter().all(|x| x.is_finite()));
+    for _ in 0..n_streams {
+        let stream = handle.open_stream(stride);
+        let token_elems = stream.token_elems();
+        // same data seed per stream: replayed prompts exercise the cache
+        let mut rng = Rng::new(11);
+        for _ in 0..tokens {
+            let mut mk = || {
+                let mut buf = vec![0.0f32; token_elems];
+                rng.fill_normal(&mut buf);
+                let slab: Arc<[f32]> = buf.into();
+                slab
+            };
+            let (k, v, q) = (mk(), mk(), mk());
+            let step = std::time::Instant::now();
+            stream.append(k, v);
+            let out = stream.query(q, 1).recv().context("stream query dropped")?;
+            latency.push(step.elapsed().as_secs_f64() * 1e3);
+            anyhow::ensure!(out.len() == token_elems);
+            anyhow::ensure!(out.iter().all(|x| x.is_finite()));
+        }
+        stream.close();
     }
     let wall = t0.elapsed().as_secs_f64();
-    stream.close();
     let stats = handle.shutdown()?;
+    let decoded = tokens * n_streams;
     println!(
         "decoded {} tokens in {:.2}s ({:.1} tok/s) — appends={} queries={} rejected={}",
-        tokens,
+        decoded,
         wall,
-        tokens as f64 / wall,
+        decoded as f64 / wall,
         stats.stream_appends,
         stats.stream_queries,
         stats.rejected
@@ -320,6 +339,16 @@ fn cmd_serve_stream(
         latency.percentile(95.0),
         latency.percentile(99.0)
     );
+    if cfg.kv.is_some() {
+        println!(
+            "kv cache: hit-blocks={} alloc-blocks={} evicted={} resident={} ({:.1} KiB KV)",
+            stats.kv_hit_blocks,
+            stats.kv_alloc_blocks,
+            stats.kv_evicted_blocks,
+            stats.kv_resident_blocks,
+            stats.kv_resident_bytes as f64 / 1024.0
+        );
+    }
     Ok(())
 }
 

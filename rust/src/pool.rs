@@ -436,14 +436,22 @@ pub fn parallel_map_workers<T: Sync, R: Send>(
     slots.into_iter().map(|x| x.expect("runner filled slot")).collect()
 }
 
-struct SendPtr<T>(*mut T);
+/// Raw-pointer wrapper that crosses task boundaries for *disjoint-index*
+/// writes: each cooperating task derives a distinct element (or distinct
+/// span) from the pointer, claims it exactly once, and the submitting
+/// call does not return until every task completed — so writes never
+/// alias and never outlive the borrow.  Shared by the crate's parallel
+/// fan-out sites ([`parallel_map_workers`] here, the batched engine's
+/// head writes, the server's per-head stream queries); every use site
+/// carries its own SAFETY note restating the disjointness argument.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 impl<T> Copy for SendPtr<T> {}
 impl<T> Clone for SendPtr<T> {
     fn clone(&self) -> Self {
-        Self(self.0)
+        *self
     }
 }
-// SAFETY: see parallel_map_workers — disjoint index ownership.
+// SAFETY: disjoint index ownership, see the struct docs.
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 

@@ -33,23 +33,47 @@ impl Rng {
     /// Sample `d` distinct indices without replacement, with probability
     /// proportional to `weights`, via the Gumbel-top-k trick.  Zero-weight
     /// indices are never selected (padding masks rely on this).
+    ///
+    /// Allocating wrapper over
+    /// [`weighted_without_replacement_into`](Self::weighted_without_replacement_into)
+    /// — both draw the same RNG stream and select the same indices.
     pub fn weighted_without_replacement(&mut self, weights: &[f32], d: usize) -> Vec<usize> {
-        let n = weights.len();
+        let mut keyed = Vec::new();
+        let mut out = Vec::new();
+        self.weighted_without_replacement_into(weights, d, &mut keyed, &mut out);
+        out
+    }
+
+    /// [`weighted_without_replacement`](Self::weighted_without_replacement)
+    /// into caller-provided storage: `keyed` is the Gumbel-key workspace
+    /// and `out` receives the selected indices (both cleared first), so a
+    /// hot loop recycling the buffers (e.g. through
+    /// `attention::AttnScratch`) draws O(d) samples with zero heap
+    /// allocation in steady state.
+    pub fn weighted_without_replacement_into(
+        &mut self,
+        weights: &[f32],
+        d: usize,
+        keyed: &mut Vec<(f32, usize)>,
+        out: &mut Vec<usize>,
+    ) {
         let d = d.min(weights.iter().filter(|w| **w > 0.0).count());
-        let mut keyed: Vec<(f32, usize)> = weights
-            .iter()
-            .enumerate()
-            .filter(|(_, w)| **w > 0.0)
-            .map(|(i, &w)| (w.max(1e-30).ln() + self.gumbel(), i))
-            .collect();
-        debug_assert!(keyed.len() <= n);
+        keyed.clear();
+        keyed.extend(
+            weights
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| **w > 0.0)
+                .map(|(i, &w)| (w.max(1e-30).ln() + self.gumbel(), i)),
+        );
         // partial selection of the top d keys
         if d < keyed.len() {
             keyed.select_nth_unstable_by(d, |a, b| b.0.partial_cmp(&a.0).unwrap());
             keyed.truncate(d);
         }
         keyed.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        keyed.into_iter().map(|(_, i)| i).collect()
+        out.clear();
+        out.extend(keyed.iter().map(|&(_, i)| i));
     }
 
     /// Uniform sample of `d` distinct indices (Floyd's algorithm).
@@ -180,6 +204,21 @@ mod tests {
             let sel = rng.weighted_without_replacement(&w, 10);
             assert!(sel.iter().all(|&i| i < 20), "picked padded index: {sel:?}");
         }
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_exactly() {
+        // includes zero weights, so the zero-skip path is exercised too
+        let w: Vec<f32> = (0..40).map(|i| ((i * 7 + 3) % 11) as f32).collect();
+        let mut a = Rng::new(12);
+        let mut b = Rng::new(12);
+        let want = a.weighted_without_replacement(&w, 10);
+        // dirty reused workspaces must not affect the result
+        let mut keyed = vec![(0.5f32, 99usize); 3];
+        let mut got = vec![5usize; 7];
+        b.weighted_without_replacement_into(&w, 10, &mut keyed, &mut got);
+        assert_eq!(got, want);
+        assert_eq!(a.next_u64(), b.next_u64(), "streams must stay in lockstep");
     }
 
     #[test]

@@ -31,14 +31,24 @@ impl SubSampleSketch {
     }
 
     /// Draw the index/scale representation: `(indices, scales)` where
-    /// column k of S is `scales[k] * e_{indices[k]}`.
+    /// column k of S is `scales[k] * e_{indices[k]}`.  Allocating wrapper
+    /// over [`draw_indices_into`](Self::draw_indices_into).
     pub fn draw_indices(&self, rng: &mut Rng) -> (Vec<usize>, Vec<f32>) {
-        let idx: Vec<usize> = (0..self.d).map(|_| self.table.draw(rng)).collect();
-        let scales: Vec<f32> = idx
-            .iter()
-            .map(|&i| 1.0 / (self.d as f32 * self.probs[i]).sqrt())
-            .collect();
+        let mut idx = Vec::new();
+        let mut scales = Vec::new();
+        self.draw_indices_into(rng, &mut idx, &mut scales);
         (idx, scales)
+    }
+
+    /// [`draw_indices`](Self::draw_indices) into caller-provided buffers
+    /// (cleared first) — hot loops recycle `idx`/`scales` (e.g. through
+    /// `attention::AttnScratch`) and pay no per-draw allocation.  Same
+    /// RNG stream, same draws as the allocating version.
+    pub fn draw_indices_into(&self, rng: &mut Rng, idx: &mut Vec<usize>, scales: &mut Vec<f32>) {
+        idx.clear();
+        idx.extend((0..self.d).map(|_| self.table.draw(rng)));
+        scales.clear();
+        scales.extend(idx.iter().map(|&i| 1.0 / (self.d as f32 * self.probs[i]).sqrt()));
     }
 }
 
@@ -52,7 +62,9 @@ impl Sketch for SubSampleSketch {
     }
 
     fn draw(&self, rng: &mut Rng) -> Matrix {
-        let (idx, scales) = self.draw_indices(rng);
+        let mut idx = Vec::with_capacity(self.d);
+        let mut scales = Vec::with_capacity(self.d);
+        self.draw_indices_into(rng, &mut idx, &mut scales);
         let mut s = Matrix::zeros(self.n(), self.d);
         for (col, (&i, &sc)) in idx.iter().zip(&scales).enumerate() {
             s.set(i, col, sc);
@@ -61,9 +73,13 @@ impl Sketch for SubSampleSketch {
     }
 
     /// Fast path: `B S` is a scaled column gather — O(n_B · d) instead of
-    /// O(n_B · n · d).
+    /// O(n_B · n · d).  Callers that draw repeatedly can hold `idx`/`scales`
+    /// buffers and use [`SubSampleSketch::draw_indices_into`] +
+    /// [`Matrix::from_fn`] themselves to skip the per-draw Vecs.
     fn sketch_right(&self, b: &Matrix, rng: &mut Rng) -> Matrix {
-        let (idx, scales) = self.draw_indices(rng);
+        let mut idx = Vec::with_capacity(self.d);
+        let mut scales = Vec::with_capacity(self.d);
+        self.draw_indices_into(rng, &mut idx, &mut scales);
         Matrix::from_fn(b.rows(), self.d, |r, c| b.get(r, idx[c]) * scales[c])
     }
 }
@@ -125,5 +141,16 @@ mod tests {
     #[should_panic]
     fn all_zero_mass_panics() {
         let _ = SubSampleSketch::new(vec![0.0; 4], 2);
+    }
+
+    #[test]
+    fn draw_indices_into_matches_allocating_exactly() {
+        let sk = SubSampleSketch::new((1..=9).map(|i| i as f32).collect(), 5);
+        let (want_idx, want_scales) = sk.draw_indices(&mut Rng::new(13));
+        let mut idx = vec![7usize; 2]; // dirty reused buffers
+        let mut scales = vec![0.5f32; 9];
+        sk.draw_indices_into(&mut Rng::new(13), &mut idx, &mut scales);
+        assert_eq!(idx, want_idx);
+        assert_eq!(scales, want_scales);
     }
 }

@@ -1,0 +1,316 @@
+//! KV-cache subsystem conformance: the paged block cache must change
+//! *where bytes live*, never *which bytes are served*.
+//!
+//! * Bitwise cached-vs-uncached stream equivalence for every registry
+//!   method (the acceptance criterion of the subsystem).
+//! * Prefix sharing: a replayed prompt allocates zero new blocks for the
+//!   shared region, asserted through `AttentionServerStats`.
+//! * Refcount / copy-on-write correctness under fork + close.
+//! * Eviction never drops a block a live stream still references.
+//! * Sliding-window sessions match a full recompute over the window at
+//!   the same epoch seed, and the server's windowed streams match
+//!   `BoundedSession` exactly.
+
+use skeinformer::attention::{
+    self, session_epoch, session_seed, AttentionSession, BoundedSession, SessionSpec,
+};
+use skeinformer::coordinator::attention_server::{
+    self, stream_seed, AttentionServerConfig, AttentionServerStats,
+};
+use skeinformer::kvcache::{KvCache, KvCacheConfig};
+use skeinformer::rng::Rng;
+use skeinformer::tensor::Matrix;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn server_cfg(method: &str, kv: Option<KvCacheConfig>) -> AttentionServerConfig {
+    AttentionServerConfig {
+        method: method.to_string(),
+        d: 8,
+        heads: 2,
+        seq: 16,
+        head_dim: 4,
+        max_batch: 2,
+        max_wait: Duration::from_millis(1),
+        seed: 0,
+        workers: None,
+        kv,
+    }
+}
+
+fn token_slabs(count: usize, token_elems: usize, seed: u64) -> Vec<(Arc<[f32]>, Arc<[f32]>)> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let mut mk = || {
+                let mut b = vec![0.0f32; token_elems];
+                rng.fill_normal(&mut b);
+                let slab: Arc<[f32]> = b.into();
+                slab
+            };
+            (mk(), mk())
+        })
+        .collect()
+}
+
+/// Run one decode stream against a fresh server: append all `tokens`,
+/// querying at every step for cross-shape methods or once at the end
+/// (`rows == len`) for square-only ones.  Returns the concatenated query
+/// outputs plus the shutdown stats.
+fn run_stream(
+    cfg: &AttentionServerConfig,
+    tokens: &[(Arc<[f32]>, Arc<[f32]>)],
+    repilot_stride: usize,
+) -> (Vec<f32>, AttentionServerStats) {
+    let method = attention::by_name(&cfg.method, cfg.d).expect("registry method");
+    let cross = method.supports_cross_shape();
+    let token_elems = cfg.heads * cfg.head_dim;
+    let handle = attention_server::start(cfg.clone()).unwrap();
+    let stream = handle.open_stream(repilot_stride);
+    let mut outs = Vec::new();
+    let mut qrng = Rng::new(777);
+    for (t, (k, v)) in tokens.iter().enumerate() {
+        stream.append(k.clone(), v.clone());
+        if cross {
+            let mut q = vec![0.0f32; token_elems];
+            qrng.fill_normal(&mut q);
+            outs.extend(stream.query(q.into(), 1).recv().expect("stream reply"));
+        } else if t + 1 == tokens.len() {
+            // square-only methods answer one full-state query at the end
+            let mut q = vec![0.0f32; cfg.heads * tokens.len() * cfg.head_dim];
+            qrng.fill_normal(&mut q);
+            outs.extend(stream.query(q.into(), tokens.len()).recv().expect("square reply"));
+        }
+    }
+    stream.close();
+    (outs, handle.shutdown().unwrap())
+}
+
+#[test]
+fn cached_stream_is_bitwise_identical_to_uncached_for_every_method() {
+    // 7 tokens at block size 2: sealed blocks + a partial tail mid-stream
+    for method in attention::registry(8) {
+        let name = method.name();
+        let base = server_cfg(name, None);
+        let cached = server_cfg(name, Some(KvCacheConfig::new(2)));
+        let tokens = token_slabs(7, base.heads * base.head_dim, 21);
+        let (want, _) = run_stream(&base, &tokens, 2);
+        let (got, stats) = run_stream(&cached, &tokens, 2);
+        assert!(!want.is_empty(), "{name}: no outputs collected");
+        assert_eq!(got, want, "{name}: KV cache changed served bytes");
+        assert_eq!(stats.kv_alloc_blocks, 3, "{name}: 7 tokens / block size 2");
+    }
+}
+
+#[test]
+fn replayed_prefix_allocates_zero_new_blocks() {
+    let cfg = server_cfg("standard", Some(KvCacheConfig::new(2)));
+    let token_elems = cfg.heads * cfg.head_dim;
+    let tokens = token_slabs(8, token_elems, 5);
+    let handle = attention_server::start(cfg.clone()).unwrap();
+
+    let first = handle.open_stream(1);
+    for (k, v) in &tokens {
+        first.append(k.clone(), v.clone());
+    }
+    let mut q = vec![0.0f32; token_elems];
+    Rng::new(3).fill_normal(&mut q);
+    let q: Arc<[f32]> = q.into();
+    let out_first = first.query(q.clone(), 1).recv().expect("first stream reply");
+    first.close();
+
+    // a resubmitted request replays the identical prompt
+    let second = handle.open_stream(1);
+    for (k, v) in &tokens {
+        second.append(k.clone(), v.clone());
+    }
+    let out_second = second.query(q, 1).recv().expect("second stream reply");
+    second.close();
+
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.kv_alloc_blocks, 4, "only the first stream allocates");
+    assert_eq!(stats.kv_hit_blocks, 4, "the replay shares every sealed block");
+    assert_eq!(stats.kv_evicted_blocks, 0);
+    // standard attention is seedless: the shared-prefix replay must also
+    // reproduce the first stream's bytes
+    assert_eq!(out_first, out_second);
+}
+
+#[test]
+fn fork_refcounts_and_copy_on_write() {
+    let mut cache = KvCache::new(KvCacheConfig::new(2), 2);
+    let mut parent = cache.open_stream();
+    for t in 0..5 {
+        let row = [t as f32, t as f32 + 0.5];
+        cache.append(&mut parent, &row, &row);
+    }
+    // 2 sealed + 1 tail block resident; fork shares all of them
+    assert_eq!(cache.stats().resident_blocks, 3);
+    let mut child = parent.fork();
+    assert_eq!(cache.stats().resident_blocks, 3, "fork must not allocate");
+
+    // diverge the child: the shared tail is copied, the parent unchanged
+    cache.append(&mut child, &[9.0, 9.0], &[9.0, 9.0]);
+    assert_eq!(cache.stats().resident_blocks, 4, "CoW copies exactly one block");
+    let gather = |chain: &skeinformer::kvcache::StreamChain, n: usize| {
+        let mut k = Matrix::zeros(n, 2);
+        let mut v = Matrix::zeros(n, 2);
+        chain.gather_head_into(0, 2, &mut k, &mut v);
+        k
+    };
+    let pk = gather(&parent, 5);
+    assert_eq!(pk.get(4, 0), 4.0, "parent tail must not see the child's token");
+    let ck = gather(&child, 6);
+    assert_eq!(ck.get(4, 0), 4.0, "shared prefix preserved");
+    assert_eq!(ck.get(5, 0), 9.0, "child sees its divergent token");
+
+    // the parent can keep appending without disturbing the child
+    cache.append(&mut parent, &[7.0, 7.0], &[7.0, 7.0]);
+    let ck = gather(&child, 6);
+    assert_eq!(ck.get(5, 0), 9.0);
+
+    // after both close, only the index holds blocks: the 2 shared prefix
+    // blocks plus the divergent sealed block of each branch
+    cache.close_stream(parent);
+    cache.close_stream(child);
+    assert_eq!(cache.stats().resident_blocks, 4);
+}
+
+#[test]
+fn eviction_never_drops_a_block_still_referenced() {
+    // capacity 2 blocks, but a live stream holds 3: the cap is exceeded
+    // softly rather than evicting referenced blocks
+    let mut cache = KvCache::new(KvCacheConfig::new(2).with_capacity_blocks(2), 1);
+    let mut live = cache.open_stream();
+    for t in 0..6 {
+        cache.append(&mut live, &[t as f32], &[t as f32]);
+    }
+    assert_eq!(cache.stats().alloc_blocks, 3);
+    assert_eq!(cache.stats().evicted_blocks, 0, "live blocks are never evicted");
+
+    // the live stream's data must still be fully readable
+    let mut k = Matrix::zeros(6, 1);
+    let mut v = Matrix::zeros(6, 1);
+    live.gather_head_into(0, 1, &mut k, &mut v);
+    for t in 0..6 {
+        assert_eq!(k.get(t, 0), t as f32);
+    }
+
+    // once the stream closes, new allocations evict its (now
+    // unreferenced) index entries down to capacity
+    cache.close_stream(live);
+    let mut fresh = cache.open_stream();
+    for t in 100..106 {
+        cache.append(&mut fresh, &[t as f32], &[t as f32]);
+    }
+    assert!(cache.stats().evicted_blocks > 0, "unreferenced entries evict under pressure");
+    let mut k = Matrix::zeros(6, 1);
+    let mut v = Matrix::zeros(6, 1);
+    fresh.gather_head_into(0, 1, &mut k, &mut v);
+    for (i, t) in (100..106).enumerate() {
+        assert_eq!(k.get(i, 0), t as f32, "fresh stream unaffected by eviction");
+    }
+    cache.close_stream(fresh);
+}
+
+#[test]
+fn sliding_window_session_matches_window_recompute_at_epoch_seed() {
+    let window = 6;
+    let stride = 4;
+    let total = 17;
+    let p = 8;
+    let mut rng = Rng::new(33);
+    let mut mk = |rows: usize| {
+        let mut m = Matrix::zeros(rows, p);
+        rng.fill_normal(m.data_mut());
+        m
+    };
+    let (k, v, q1) = (mk(total), mk(total), mk(1));
+    for name in ["standard", "skeinformer", "linformer", "vmean"] {
+        let method = attention::by_name(name, 4).expect("registry method");
+        let spec = SessionSpec::new(p).with_seed(11).with_repilot_stride(stride);
+        let mut session = BoundedSession::new(method, spec, window);
+        for i in 0..total {
+            session.append(k.row(i), v.row(i));
+        }
+        let got = session.query(&q1);
+        // reference: the method over exactly the window rows, seeded by
+        // the epoch of the TOTAL appended count
+        let idx: Vec<usize> = (total - window..total).collect();
+        let kw = k.gather_rows(&idx);
+        let vw = v.gather_rows(&idx);
+        let seed = session_seed(11, session_epoch(total, stride));
+        let want = attention::by_name(name, 4)
+            .unwrap()
+            .compute(&q1, &kw, &vw, None, &mut Rng::new(seed));
+        assert_eq!(got.max_abs_diff(&want), 0.0, "{name}: window recompute diverged");
+    }
+}
+
+#[test]
+fn server_windowed_stream_matches_bounded_sessions_per_head() {
+    let cfg = server_cfg("skeinformer", Some(KvCacheConfig::new(2).with_window(5)));
+    let stride = 2;
+    let token_elems = cfg.heads * cfg.head_dim;
+    let tokens = token_slabs(11, token_elems, 8);
+    let handle = attention_server::start(cfg.clone()).unwrap();
+    let stream = handle.open_stream(stride);
+    let mut reference: Vec<BoundedSession> = (0..cfg.heads)
+        .map(|h| {
+            BoundedSession::new(
+                attention::by_name(&cfg.method, cfg.d).unwrap(),
+                SessionSpec::new(cfg.head_dim)
+                    .with_seed(stream_seed(cfg.seed, 0, h as u64))
+                    .with_repilot_stride(stride),
+                5,
+            )
+        })
+        .collect();
+    let mut qrng = Rng::new(2);
+    for (k, v) in &tokens {
+        stream.append(k.clone(), v.clone());
+        let mut q = vec![0.0f32; token_elems];
+        qrng.fill_normal(&mut q);
+        let got = stream.query(q.clone().into(), 1).recv().expect("windowed reply");
+        for (h, session) in reference.iter_mut().enumerate() {
+            let o = h * cfg.head_dim;
+            session.append(&k[o..o + cfg.head_dim], &v[o..o + cfg.head_dim]);
+            let q_head = Matrix::from_vec(1, cfg.head_dim, q[o..o + cfg.head_dim].to_vec());
+            let want = session.query(&q_head);
+            assert_eq!(&got[o..o + cfg.head_dim], want.data(), "head {h}");
+        }
+    }
+    stream.close();
+    let stats = handle.shutdown().unwrap();
+    assert!(stats.kv_alloc_blocks >= 5, "11 tokens at block size 2 seal 5 blocks");
+}
+
+#[test]
+fn windowed_streams_bound_resident_blocks() {
+    // an unbounded stream grows its chain forever; a windowed one holds
+    // O(window / block_size) blocks no matter how long it runs
+    let mut cache = KvCache::new(KvCacheConfig::new(2).with_window(4), 1);
+    let mut chain = cache.open_stream();
+    for t in 0..50 {
+        cache.append(&mut chain, &[t as f32], &[t as f32]);
+    }
+    assert_eq!(chain.appended(), 50);
+    assert_eq!(chain.visible_len(), 4);
+    assert!(
+        chain.block_count() <= 4 / 2 + 1,
+        "chain must hold only window-covering blocks, got {}",
+        chain.block_count()
+    );
+    // with no capacity bound, window-dropped unshared blocks leave the
+    // prefix index too: resident KV is O(window), not O(total tokens)
+    assert_eq!(cache.stats().resident_blocks, 2);
+    assert_eq!(cache.stats().evicted_blocks, 23);
+    // gather sees exactly the last `window` tokens, in order
+    let mut k = Matrix::zeros(4, 1);
+    let mut v = Matrix::zeros(4, 1);
+    chain.gather_head_into(0, 1, &mut k, &mut v);
+    for (i, t) in (46..50).enumerate() {
+        assert_eq!(k.get(i, 0), t as f32);
+    }
+    cache.close_stream(chain);
+}
