@@ -3,7 +3,7 @@
 # `make artifacts` needs a python environment with jax installed (the L2
 # lowering path); everything else is pure rust and works offline.
 
-.PHONY: artifacts build test test-doc bench stream-bench cache-bench fmt clippy doc
+.PHONY: artifacts build test test-doc bench stream-bench cache-bench prefill-bench fmt clippy doc
 
 artifacts:
 	python3 python/compile/aot.py --out artifacts
@@ -26,9 +26,14 @@ stream-bench:
 	cargo bench --bench streaming_decode
 
 # paged KV cache probe: tok/s + resident KV bytes, shared vs disjoint
-# prefixes, window in {512, 2048, inf}
+# prefixes, window in {512, 2048, inf} (also runs the prefill suite)
 cache-bench:
 	cargo bench --bench kv_cache
+
+# chunked-prefill ingest sweep (chunk in {1, block, 4xblock}) +
+# batch-slab dedupe hit-rate probe only
+prefill-bench:
+	cargo bench --bench kv_cache -- --prefill
 
 fmt:
 	cargo fmt --check

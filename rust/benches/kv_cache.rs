@@ -20,10 +20,26 @@
 //! Emits `reports/kv_cache.csv`
 //! (`workload,window,method,streams,tokens,tok_s,resident_kv_bytes,hit_blocks,alloc_blocks`).
 //!
+//! **Prefill sweep + batch-dedupe probe** (`make prefill-bench` →
+//! `--prefill` runs only these):
+//!
+//! * **prefill** — ingest `--tokens` tokens into one cached stream at
+//!   chunk ∈ {1 (per-token `Append` ops), block, 4×block} (`Prefill`
+//!   ops), one final query.  Chunk 1 pays one channel message and one
+//!   cache op per token; block-sized chunks amortise sealing, hashing,
+//!   and prefix lookup per block — the tok/s gap is the chunked-prefill
+//!   win.
+//! * **dedupe** — submit one batched `HeadsRequest` 8 times with
+//!   `batch_dedupe` on: submission 1 allocates `seq / block` blocks,
+//!   submissions 2..8 hit them all (hit rate → 7/8).
+//!
+//! Emits `reports/kv_prefill.csv`
+//! (`mode,chunk,method,tokens,tok_s,hit_blocks,alloc_blocks`).
+//!
 //! `make cache-bench`; `--full` extends tokens 512 → 2048.
 
 use skeinformer::bench_util::{ascii_table, write_csv};
-use skeinformer::coordinator::attention_server::{self, AttentionServerConfig};
+use skeinformer::coordinator::attention_server::{self, AttentionServerConfig, HeadsRequest};
 use skeinformer::kvcache::KvCacheConfig;
 use skeinformer::rng::Rng;
 use std::sync::Arc;
@@ -92,11 +108,135 @@ fn run(
     )
 }
 
+/// Ingest `tokens` tokens into one cached stream at the given chunk size
+/// (1 = per-token `Append` ops; otherwise `Prefill` ops), then one final
+/// 1-row query.  Returns (tok/s, hit blocks, alloc blocks).
+fn run_prefill(c: &AttentionServerConfig, tokens: usize, chunk: usize) -> (f64, u64, u64) {
+    let token_elems = c.heads * c.head_dim;
+    let handle = attention_server::start(c.clone()).expect("server start");
+    let stream = handle.open_stream(1);
+    let mut rng = Rng::new(1);
+    let t0 = std::time::Instant::now();
+    if chunk <= 1 {
+        for _ in 0..tokens {
+            let mut mk = || {
+                let mut b = vec![0.0f32; token_elems];
+                rng.fill_normal(&mut b);
+                let slab: Arc<[f32]> = b.into();
+                slab
+            };
+            let (k, v) = (mk(), mk());
+            stream.append(k, v);
+        }
+    } else {
+        let mut remaining = tokens;
+        while remaining > 0 {
+            let n = chunk.min(remaining);
+            let mut mk = || {
+                let mut b = vec![0.0f32; n * token_elems];
+                rng.fill_normal(&mut b);
+                let slab: Arc<[f32]> = b.into();
+                slab
+            };
+            let (k, v) = (mk(), mk());
+            stream.prefill(k, v, n);
+            remaining -= n;
+        }
+    }
+    // the query synchronises: it waits behind the whole ingest
+    let mut q = vec![0.0f32; token_elems];
+    rng.fill_normal(&mut q);
+    let out = stream.query(q.into(), 1).recv().expect("prefill query reply");
+    std::hint::black_box(out[0]);
+    let wall = t0.elapsed().as_secs_f64();
+    stream.close();
+    let stats = handle.shutdown().expect("server shutdown");
+    (tokens as f64 / wall, stats.kv_hit_blocks, stats.kv_alloc_blocks)
+}
+
+/// Submit one batched request `submissions` times with batch-dedupe on.
+/// Returns (requests/s, hit blocks, alloc blocks).
+fn run_dedupe_probe(c: &AttentionServerConfig, submissions: usize) -> (f64, u64, u64) {
+    let handle = attention_server::start(c.clone()).expect("server start");
+    let req = HeadsRequest::random(c.request_elems(), &mut Rng::new(2));
+    let t0 = std::time::Instant::now();
+    for _ in 0..submissions {
+        let out = handle.submit(req.clone()).recv().expect("batch reply");
+        std::hint::black_box(out[0]);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = handle.shutdown().expect("server shutdown");
+    (submissions as f64 / wall, stats.kv_hit_blocks, stats.kv_alloc_blocks)
+}
+
+/// The prefill-chunk sweep + batch-dedupe hit-rate probe
+/// (`make prefill-bench`).
+fn run_prefill_suite(method: &str, tokens: usize) {
+    println!(
+        "prefill probe: method={method} tokens={tokens} block-size={BLOCK_SIZE} \
+         chunk in {{1, {BLOCK_SIZE}, {}}}",
+        4 * BLOCK_SIZE
+    );
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for chunk in [1, BLOCK_SIZE, 4 * BLOCK_SIZE] {
+        let c = cfg(method, Some(KvCacheConfig::new(BLOCK_SIZE)));
+        let (tok_s, hits, allocs) = run_prefill(&c, tokens, chunk);
+        let label = if chunk == 1 { "1 (per-token)".to_string() } else { chunk.to_string() };
+        println!("  prefill chunk={label:<14} {tok_s:>10.1} tok/s  hits={hits} allocs={allocs}");
+        rows.push(vec![
+            "prefill".into(),
+            label,
+            format!("{tok_s:.1}"),
+            hits.to_string(),
+            allocs.to_string(),
+        ]);
+        csv.push(format!("prefill,{chunk},{method},{tokens},{tok_s:.2},{hits},{allocs}"));
+    }
+
+    let submissions = 8;
+    let c = cfg(method, Some(KvCacheConfig::new(BLOCK_SIZE).with_batch_dedupe(true)));
+    let (req_s, hits, allocs) = run_dedupe_probe(&c, submissions);
+    let rate = hits as f64 / (hits + allocs).max(1) as f64;
+    println!(
+        "  dedupe  {submissions} submissions    {req_s:>10.1} req/s  hits={hits} \
+         allocs={allocs} (hit rate {:.0}%)",
+        rate * 100.0
+    );
+    rows.push(vec![
+        "dedupe".into(),
+        format!("{submissions} subs"),
+        format!("{req_s:.1}"),
+        hits.to_string(),
+        allocs.to_string(),
+    ]);
+    csv.push(format!("dedupe,{submissions},{method},{},{req_s:.2},{hits},{allocs}", c.seq));
+
+    println!(
+        "\n{}",
+        ascii_table(&["mode", "chunk", "tok/s (req/s)", "hits", "allocs"], &rows)
+    );
+    if let Err(e) = write_csv(
+        "reports/kv_prefill.csv",
+        "mode,chunk,method,tokens,tok_s,hit_blocks,alloc_blocks",
+        &csv,
+    ) {
+        eprintln!("csv write failed: {e}");
+    } else {
+        eprintln!("rows written to reports/kv_prefill.csv");
+    }
+}
+
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
+    let prefill_only = std::env::args().any(|a| a == "--prefill");
     let tokens = if full { 2048 } else { 512 };
     let streams = 4;
     let method = "skeinformer";
+    if prefill_only {
+        run_prefill_suite(method, tokens);
+        return;
+    }
     println!(
         "kv-cache probe: method={method} streams={streams} tokens={tokens} \
          block-size={BLOCK_SIZE}{}",
@@ -158,4 +298,7 @@ fn main() {
     } else {
         eprintln!("rows written to reports/kv_cache.csv");
     }
+
+    println!();
+    run_prefill_suite(method, tokens);
 }

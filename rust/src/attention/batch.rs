@@ -178,12 +178,62 @@ impl BatchedAttention {
         let spec = HeadSpec::of(q);
         assert!(spec.matches(k), "Q/K batch shapes differ: {:?} vs {:?}", q, k);
         assert!(spec.matches(v), "Q/V batch shapes differ: {:?} vs {:?}", q, v);
+        // tensor-backed K/V: one contiguous memcpy per head slice
+        let fill = |b: usize, h: usize, km: &mut Matrix, vm: &mut Matrix| {
+            km.data_mut().copy_from_slice(k.head(b, h));
+            vm.data_mut().copy_from_slice(v.head(b, h));
+        };
+        self.dispatch_heads(method, q, spec.seq, &fill, masks, seed, out);
+    }
+
+    /// [`run_into`](Self::run_into) with the K/V bytes *gathered* per
+    /// head instead of read from tensors: `fill_kv(b, h, k_out, v_out)`
+    /// must fully overwrite the two pre-shaped `(kv_rows, head_dim)`
+    /// scratch matrices with sequence `b`, head `h`'s keys and values
+    /// (e.g. `StreamChain::gather_head_into` from shared KV-cache
+    /// blocks — the batch-dedupe serving path).  Everything else — seed
+    /// derivation, per-worker scratch, inner-plan policy, in-place head
+    /// writes — is the tensor path, so when `fill_kv` writes the same
+    /// bytes a tensor would hold, the output is **bitwise identical** to
+    /// [`run_into`](Self::run_into).  `fill_kv` runs concurrently across
+    /// heads and must only read shared state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_gather_into(
+        &self,
+        method: &dyn AttentionMethod,
+        q: &BatchTensor,
+        kv_rows: usize,
+        fill_kv: &(dyn Fn(usize, usize, &mut Matrix, &mut Matrix) + Sync),
+        masks: Option<&Matrix>,
+        seed: u64,
+        out: &mut BatchTensor,
+    ) {
+        assert!(kv_rows > 0, "gathered K/V must have rows");
+        self.dispatch_heads(method, q, kv_rows, fill_kv, masks, seed, out);
+    }
+
+    /// The shared B×H dispatcher behind [`run_into`](Self::run_into) and
+    /// [`run_gather_into`](Self::run_gather_into): fan heads over the
+    /// pool, extract Q from the tensor and K/V through `fill_kv`, and
+    /// write each head's result in place.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_heads(
+        &self,
+        method: &dyn AttentionMethod,
+        q: &BatchTensor,
+        kv_rows: usize,
+        fill_kv: &(dyn Fn(usize, usize, &mut Matrix, &mut Matrix) + Sync),
+        masks: Option<&Matrix>,
+        seed: u64,
+        out: &mut BatchTensor,
+    ) {
+        let spec = HeadSpec::of(q);
         assert!(spec.matches(out), "output shape differs: {:?} vs {:?}", q, out);
         if let Some(m) = masks {
             assert_eq!(
                 m.shape(),
-                (spec.batch, spec.seq),
-                "mask must be (batch, seq)"
+                (spec.batch, kv_rows),
+                "mask must be (batch, kv_rows)"
             );
         }
 
@@ -200,6 +250,7 @@ impl BatchedAttention {
             MatmulPlan::Auto
         };
         let head_elems = spec.seq * spec.head_dim;
+        let kv_elems = kv_rows * spec.head_dim;
         // Workers write disjoint head slices of `out` in place.  SAFETY:
         // head (b, h) owns exactly out[head_index * head_elems ..][..head_elems]
         // (owned storage is one contiguous [b][h][n][d] buffer), each grid
@@ -210,23 +261,24 @@ impl BatchedAttention {
         pool::parallel_map_workers(&grid, workers, |&(b, h)| {
             let out_ptr = out_ptr; // force whole-struct capture
             let head_seed = seed ^ spec.head_index(b, h);
-            // Head extraction copies into per-worker scratch reused across
+            // Per-head buffers come from per-worker scratch reused across
             // heads (and across engine calls, since the pool threads are
             // persistent) — no steady-state allocation.
-            let extract = |t: &BatchTensor| {
+            let shaped = |rows: usize, elems: usize| {
+                let mut buf = pool::take_scratch(elems);
+                buf.resize(elems, 0.0);
+                Matrix::from_vec(rows, spec.head_dim, buf)
+            };
+            let qm = {
                 let mut buf = pool::take_scratch(head_elems);
-                buf.extend_from_slice(t.head(b, h));
+                buf.extend_from_slice(q.head(b, h));
                 Matrix::from_vec(spec.seq, spec.head_dim, buf)
             };
-            let qm = extract(q);
-            let km = extract(k);
-            let vm = extract(v);
+            let mut km = shaped(kv_rows, kv_elems);
+            let mut vm = shaped(kv_rows, kv_elems);
+            fill_kv(b, h, &mut km, &mut vm);
             let mask_row = masks.map(|m| m.row(b));
-            let mut head_out = {
-                let mut buf = pool::take_scratch(head_elems);
-                buf.resize(head_elems, 0.0);
-                Matrix::from_vec(spec.seq, spec.head_dim, buf)
-            };
+            let mut head_out = shaped(spec.seq, head_elems);
             let mut scratch = AttnScratch::new();
             let inputs = AttnInputs::new(&qm, &km, &vm).with_mask(mask_row).with_seed(head_seed);
             with_default_plan(inner_plan, || {
@@ -385,6 +437,25 @@ mod tests {
         assert_eq!(out.max_abs_diff(&want), 0.0);
         // reusing the same output tensor again must also be clean
         engine.run_into(&skein, &q, &k, &v, None, 3, &mut out);
+        assert_eq!(out.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn run_gather_into_matches_tensor_path_bitwise() {
+        // a fill_kv that writes the tensor bytes must reproduce run_into
+        // exactly — the contract the batch-dedupe serving path relies on
+        let spec = HeadSpec::new(3, 2, 16, 4);
+        let (q, k, v) = toy_qkv(spec);
+        let skein = Skeinformer::new(8);
+        let engine = BatchedAttention::new();
+        let want = engine.run(&skein, &q, &k, &v, None, 13);
+        let fill = |b: usize, h: usize, km: &mut Matrix, vm: &mut Matrix| {
+            km.data_mut().copy_from_slice(k.head(b, h));
+            vm.data_mut().copy_from_slice(v.head(b, h));
+        };
+        let mut out = spec.zeros();
+        out.data_mut().iter_mut().for_each(|x| *x = f32::NAN);
+        engine.run_gather_into(&skein, &q, spec.seq, &fill, None, 13, &mut out);
         assert_eq!(out.max_abs_diff(&want), 0.0);
     }
 

@@ -12,13 +12,29 @@
 //! **Zero-copy request path.**  Batch formation wraps the pending
 //! requests' slabs in a slab-backed [`BatchTensor`]
 //! ([`BatchTensor::from_slabs`]) — `Arc` clones, no element copies — so
-//! the engine reads each client's memory in place.  The `Arc` ownership
+//! the engine reads each client's memory in place (the optional padding
+//! mask rides the same `Arc<[f32]>` convention).  The `Arc` ownership
 //! rule: the client keeps its clone (requests are reusable), the server
 //! holds one only for the duration of the batch, and the slab is freed
 //! when the last clone drops.  Slab contents must stay immutable after
 //! submission — `Arc<[f32]>` enforces this in the type.  The one
 //! remaining copy on the request path is the reply (the output slab is
 //! handed to the client as an owned `Vec<f32>`).
+//!
+//! **Batch-slab dedupe** ([`KvCacheConfig::batch_dedupe`],
+//! `--kv-batch-dedupe`).  With the KV cache on, one-shot requests can be
+//! routed *through* the cache: each request's K/V slabs are ingested
+//! chunked ([`KvCache::append_chunk`]) into a per-request chain, so
+//! their blocks content-hash into the same prefix-index paths decode
+//! streams use.  A resubmitted request — or any request sharing a
+//! prompt prefix with an earlier request or stream — materialises its
+//! head views from shared blocks and allocates nothing new
+//! (`kv_hit_blocks` counts the shares); the engine gathers each head's
+//! K/V from the chain ([`StreamChain::gather_head_into`] via
+//! [`BatchedAttention::run_gather_into`]) instead of reading the client
+//! slab, which is bitwise the same bytes by the cache's verified-dedupe
+//! contract.  The chain closes when its batch completes; sealed blocks
+//! stay index-retained for future replays until capacity evicts them.
 //!
 //! **Invariants** (checked per request at batch formation; violators are
 //! rejected and their reply channel closed): each of `q`/`k`/`v` holds
@@ -48,7 +64,11 @@
 //! 2. **Append** is O(heads · head_dim): one write into the stream's
 //!    tail block (sealed blocks dedupe against the prefix index, so a
 //!    replayed prompt allocates nothing) and/or one fold into each
-//!    exact-incremental session.
+//!    exact-incremental session.  **Prefill**
+//!    ([`StreamHandle::prefill`]) bulk-appends a whole
+//!    `[heads, tokens, head_dim]` chunk in one op — one channel message
+//!    and per-*block* cache bookkeeping instead of per-token, bitwise
+//!    identical to the equivalent append sequence.
 //! 3. **Query** fans out per head across the persistent worker pool:
 //!    each head answers from its session, or — cache-backed — gathers
 //!    its K/V view from the block chain and recomputes at the epoch seed
@@ -104,6 +124,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
+/// Resident-block cap applied when `--kv-batch-dedupe` is set without an
+/// explicit `--kv-blocks`: batch-chain retention has no window-reclaim
+/// path, so it must be bounded by LRU capacity pressure.  4096 blocks at
+/// the default 16-token block size ≈ 64k cached tokens.
+pub const DEFAULT_DEDUPE_CAPACITY_BLOCKS: usize = 4096;
+
 /// Engine seed for batch `i` of a server's lifetime.  The engine XORs
 /// small head indices into its seed, so deriving batch seeds by XOR too
 /// (`base ^ i`) would collide: with `H` heads, batches `i` and `i ^ 1`
@@ -141,7 +167,9 @@ pub struct AttentionServerConfig {
     /// Worker cap for head dispatch (None = pool default).
     pub workers: Option<usize>,
     /// Paged KV cache for decode streams: block-shared storage with
-    /// prefix dedup and (optionally) sliding-window eviction.  `None`
+    /// prefix dedup and (optionally) sliding-window eviction.  With
+    /// [`KvCacheConfig::batch_dedupe`] set, one-shot batched requests
+    /// are routed through the same cache (batch-slab dedupe).  `None`
     /// keeps per-stream session state only.  Enabling the cache never
     /// changes served bytes — see the [module docs](self).
     pub kv: Option<KvCacheConfig>,
@@ -158,18 +186,35 @@ impl AttentionServerConfig {
     /// `--method --d --heads --seq --head-dim --batch --max-wait-ms
     /// --seed --workers` (workers 0 = pool default), plus the KV-cache
     /// flags `--kv-blocks N` (pool capacity in blocks; 0 with no
-    /// `--kv-window` = cache disabled), `--kv-window W` (sliding window
-    /// in tokens; 0 = keep full history) and `--kv-block-size B` (tokens
-    /// per block, default 16).  The global `--pool-size` flag sizes the
-    /// process-wide worker pool itself and is handled by the binaries via
-    /// [`crate::pool::set_pool_size`].
+    /// `--kv-window` / `--kv-batch-dedupe` = cache disabled),
+    /// `--kv-window W` (sliding window in tokens; 0 = keep full
+    /// history), `--kv-block-size B` (tokens per block, default 16) and
+    /// `--kv-batch-dedupe` (route one-shot batched request slabs through
+    /// the cache too; enables the cache when set alone, with
+    /// [`DEFAULT_DEDUPE_CAPACITY_BLOCKS`] as the capacity unless
+    /// `--kv-blocks` says otherwise).  The global
+    /// `--pool-size` flag sizes the process-wide worker pool itself and
+    /// is handled by the binaries via [`crate::pool::set_pool_size`].
     pub fn from_args(args: &crate::cli::Args) -> Result<Self, crate::cli::CliError> {
         let workers = args.get_usize("workers", 0)?;
         let kv_blocks = args.get_usize("kv-blocks", 0)?;
         let kv_window = args.get_usize("kv-window", 0)?;
         let kv_block_size = args.get_usize("kv-block-size", 16)?;
-        let kv = (kv_blocks > 0 || kv_window > 0).then(|| {
-            let cfg = KvCacheConfig::new(kv_block_size).with_capacity_blocks(kv_blocks);
+        let kv_batch_dedupe = args.switch("kv-batch-dedupe");
+        // batch-dedupe retention is reclaimed only by LRU capacity
+        // pressure (batch chains have no sliding window), so an
+        // unbounded cache would grow forever on non-repeating request
+        // traffic — give dedupe a finite default capacity when the
+        // operator didn't pick one
+        let kv_blocks = if kv_batch_dedupe && kv_blocks == 0 {
+            DEFAULT_DEDUPE_CAPACITY_BLOCKS
+        } else {
+            kv_blocks
+        };
+        let kv = (kv_blocks > 0 || kv_window > 0 || kv_batch_dedupe).then(|| {
+            let cfg = KvCacheConfig::new(kv_block_size)
+                .with_capacity_blocks(kv_blocks)
+                .with_batch_dedupe(kv_batch_dedupe);
             if kv_window > 0 {
                 cfg.with_window(kv_window)
             } else {
@@ -194,21 +239,22 @@ impl AttentionServerConfig {
 /// One sequence's attention inputs: shared `[heads, seq, head_dim]`
 /// row-major slabs, plus an optional length-`seq` 0/1 padding mask.
 ///
-/// The slabs are `Arc<[f32]>` so batch formation is zero-copy: the server
-/// reads the client's memory in place and never copies the payload
-/// (`Clone` bumps three reference counts; only the optional `mask`, a
-/// plain `Vec`, is deep-copied).  A client that keeps its payload in
-/// `Arc<[f32]>` slabs (e.g. resubmitting or fanning one slab into many
-/// requests) submits with no element copies at all.
-/// [`HeadsRequest::from_vecs`] is the convenience for owned buffers — note
-/// `Vec → Arc<[f32]>` allocates and copies once per slab, so hot-path
-/// clients should build `Arc` slabs up front and reuse them.
+/// Every payload — the three slabs *and* the mask — is `Arc<[f32]>`, so
+/// batch formation is fully zero-copy: the server reads the client's
+/// memory in place and `Clone` only bumps reference counts, deep-copying
+/// nothing.  A client that keeps its payload in `Arc<[f32]>` slabs
+/// (e.g. resubmitting or fanning one slab into many requests) submits
+/// with no element copies at all.  [`HeadsRequest::from_vecs`] (and
+/// [`with_mask`](Self::with_mask)) are the conveniences for owned
+/// buffers — note `Vec → Arc<[f32]>` allocates and copies once per
+/// buffer, so hot-path clients should build `Arc` slabs up front and
+/// reuse them.
 #[derive(Clone, Debug)]
 pub struct HeadsRequest {
     pub q: Arc<[f32]>,
     pub k: Arc<[f32]>,
     pub v: Arc<[f32]>,
-    pub mask: Option<Vec<f32>>,
+    pub mask: Option<Arc<[f32]>>,
 }
 
 impl HeadsRequest {
@@ -216,6 +262,13 @@ impl HeadsRequest {
     /// row-major `[heads, seq, head_dim]`).
     pub fn from_vecs(q: Vec<f32>, k: Vec<f32>, v: Vec<f32>) -> Self {
         Self { q: q.into(), k: k.into(), v: v.into(), mask: None }
+    }
+
+    /// Attach a length-`seq` 0/1 padding mask (owned-buffer convenience;
+    /// an `Arc<[f32]>` can be assigned to `mask` directly).
+    pub fn with_mask(mut self, mask: Vec<f32>) -> Self {
+        self.mask = Some(mask.into());
+        self
     }
 
     /// Dense standard-normal request of `elems = heads * seq * head_dim`
@@ -248,6 +301,13 @@ pub enum StreamOp {
     },
     /// Append one token: `k`/`v` are `[heads, head_dim]` row-major slabs.
     Append { k: Arc<[f32]>, v: Arc<[f32]> },
+    /// Bulk-append `tokens` tokens in one op — the chunked-prefill
+    /// ingest path.  `k`/`v` are `[heads, tokens, head_dim]` row-major
+    /// slabs (the same layout as a [`HeadsRequest`] payload).  Exactly
+    /// equivalent to `tokens` consecutive [`Append`](Self::Append)s of
+    /// the gathered per-token rows, but with one channel message per
+    /// chunk and per-*block* (not per-token) cache bookkeeping.
+    Prefill { k: Arc<[f32]>, v: Arc<[f32]>, tokens: usize },
     /// Query `rows` query rows per head: `q` is `[heads, rows, head_dim]`;
     /// the reply is the `[heads, rows, head_dim]` output slab.
     Query { q: Arc<[f32]>, rows: usize, reply: mpsc::Sender<Vec<f32>> },
@@ -295,6 +355,17 @@ impl StreamHandle {
         let _ = self.tx.send(ServerMsg::Stream {
             stream: self.id,
             op: StreamOp::Append { k, v },
+        });
+    }
+
+    /// Bulk-append `tokens` tokens in one op (each slab
+    /// `[heads, tokens, head_dim]`, read in place) — the chunked-prefill
+    /// path for ingesting a whole prompt.  Bitwise equivalent to
+    /// [`append`](Self::append)ing each token's rows in order.
+    pub fn prefill(&self, k: Arc<[f32]>, v: Arc<[f32]>, tokens: usize) {
+        let _ = self.tx.send(ServerMsg::Stream {
+            stream: self.id,
+            op: StreamOp::Prefill { k, v, tokens },
         });
     }
 
@@ -522,8 +593,32 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<ServerMsg>) -> Atte
                 )
             };
             let q = slab_views(|r| &r.q);
-            let k = slab_views(|r| &r.k);
-            let v = slab_views(|r| &r.v);
+            // batch-slab dedupe: ingest each request's K/V through the
+            // shared cache (chunked, per-request chain) so a resubmitted
+            // or prompt-shared request materialises its head views from
+            // shared blocks; otherwise wrap the client slabs in place
+            let chains: Option<Vec<StreamChain>> = match kv_cache.as_mut() {
+                Some(cache) if cache.cfg().batch_dedupe => Some(
+                    chunk
+                        .iter()
+                        .map(|p| {
+                            let mut chain = cache.open_batch_stream();
+                            cache.append_chunk(
+                                &mut chain,
+                                &p.req.k,
+                                &p.req.v,
+                                cfg.seq,
+                                cfg.head_dim,
+                            );
+                            chain
+                        })
+                        .collect(),
+                ),
+                _ => None,
+            };
+            let kv = chains
+                .is_none()
+                .then(|| (slab_views(|r| &r.k), slab_views(|r| &r.v)));
             let any_mask = chunk.iter().any(|p| p.req.mask.is_some());
             let mut masks = if any_mask {
                 Some(Matrix::full(chunk.len(), cfg.seq, 1.0))
@@ -532,7 +627,7 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<ServerMsg>) -> Atte
             };
             for (b, p) in chunk.iter().enumerate() {
                 if let (Some(mm), Some(req_mask)) = (masks.as_mut(), p.req.mask.as_ref()) {
-                    mm.set_row(b, req_mask);
+                    mm.set_row(b, &req_mask[..]);
                 }
                 queue_ms_sum += p.enqueued.elapsed().as_secs_f64() * 1e3;
             }
@@ -546,7 +641,38 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<ServerMsg>) -> Atte
                 Some(t) if t.batch() == chunk.len() => t,
                 _ => BatchTensor::zeros(chunk.len(), cfg.heads, cfg.seq, cfg.head_dim),
             };
-            engine.run_into(method.as_ref(), &q, &k, &v, masks.as_ref(), seed, &mut out);
+            match (&chains, &kv) {
+                (Some(chains), _) => {
+                    // cache-backed K/V: the engine gathers each head's
+                    // rows from the (possibly shared) blocks — bitwise
+                    // what the slab tensors hold, per the verified-dedupe
+                    // contract
+                    let fill = |b: usize, h: usize, km: &mut Matrix, vm: &mut Matrix| {
+                        chains[b].gather_head_into(h, cfg.head_dim, km, vm);
+                    };
+                    engine.run_gather_into(
+                        method.as_ref(),
+                        &q,
+                        cfg.seq,
+                        &fill,
+                        masks.as_ref(),
+                        seed,
+                        &mut out,
+                    );
+                }
+                (None, Some((k, v))) => {
+                    engine.run_into(method.as_ref(), &q, k, v, masks.as_ref(), seed, &mut out)
+                }
+                (None, None) => unreachable!("kv tensors built whenever chains are absent"),
+            }
+            if let (Some(chains), Some(cache)) = (chains, kv_cache.as_mut()) {
+                // sealed blocks stay index-retained for future replays
+                // (until capacity pressure evicts them); tails and chain
+                // refcounts are returned to the pool
+                for chain in chains {
+                    cache.close_stream(chain);
+                }
+            }
             batch_ms_sum += t0.elapsed().as_secs_f64() * 1e3;
 
             for (b, p) in chunk.iter().enumerate() {
@@ -699,6 +825,34 @@ fn handle_stream_op(
                 }
             }
             stats.stream_appends += 1;
+        }
+        StreamOp::Prefill { k, v, tokens } => {
+            let Some(state) = streams.get_mut(&stream) else {
+                stats.rejected += 1;
+                return;
+            };
+            if tokens == 0 || k.len() != tokens * token_elems || v.len() != tokens * token_elems {
+                stats.rejected += 1;
+                return;
+            }
+            if let Some(chain) = &mut state.chain {
+                let cache = kv_cache.as_mut().expect("stream chain implies a cache");
+                cache.append_chunk(chain, &k, &v, tokens, cfg.head_dim);
+            }
+            if let Some(sessions) = &mut state.sessions {
+                // head h's rows are contiguous in the [heads, tokens,
+                // head_dim] slab; sessions are independent per head, so
+                // folding all of one head's tokens before the next head's
+                // leaves every per-head state identical to per-token order
+                for (h, session) in sessions.iter_mut().enumerate() {
+                    let base = h * tokens * cfg.head_dim;
+                    for t in 0..tokens {
+                        let o = base + t * cfg.head_dim;
+                        session.append(&k[o..o + cfg.head_dim], &v[o..o + cfg.head_dim]);
+                    }
+                }
+            }
+            stats.stream_appends += tokens as u64;
         }
         StreamOp::Query { q, rows, reply } => {
             let Some(state) = streams.get_mut(&stream) else {
@@ -1176,10 +1330,87 @@ mod tests {
         for m in mask.iter_mut().skip(12) {
             *m = 0.0;
         }
-        req.mask = Some(mask);
+        req.mask = Some(mask.into());
         let out = handle.submit(req).recv().unwrap();
         assert_eq!(out.len(), c.request_elems());
         assert!(out.iter().all(|x| x.is_finite()));
         handle.shutdown().unwrap();
+    }
+
+    #[test]
+    fn prefill_matches_per_token_appends_bitwise() {
+        // the full per-registry-method sweep lives in rust/tests/kv_cache.rs
+        let mut c = cfg("skeinformer", 2);
+        c.kv = Some(crate::kvcache::KvCacheConfig::new(2));
+        let token_elems = c.heads * c.head_dim;
+        let tokens = 7usize;
+        let mut rng = Rng::new(31);
+        let mut k_rows = Vec::new();
+        let mut v_rows = Vec::new();
+        for _ in 0..tokens {
+            let mut mk = || {
+                let mut b = vec![0.0f32; token_elems];
+                rng.fill_normal(&mut b);
+                b
+            };
+            k_rows.push(mk());
+            v_rows.push(mk());
+        }
+        let mut q = vec![0.0f32; token_elems];
+        rng.fill_normal(&mut q);
+        let q: Arc<[f32]> = q.into();
+
+        // reference: per-token appends, one final 1-row query
+        let handle = start(c.clone()).unwrap();
+        let s = handle.open_stream(2);
+        for t in 0..tokens {
+            s.append(k_rows[t].clone().into(), v_rows[t].clone().into());
+        }
+        let want = s.query(q.clone(), 1).recv().expect("per-token reply");
+        s.close();
+        let want_stats = handle.shutdown().unwrap();
+
+        // chunked: the same tokens through Prefill ops of {4, 3}
+        let to_chunk = |rows: &[Vec<f32>], lo: usize, hi: usize| -> Arc<[f32]> {
+            let n = hi - lo;
+            let mut slab = vec![0.0f32; n * token_elems];
+            for (i, row) in rows[lo..hi].iter().enumerate() {
+                for h in 0..c.heads {
+                    let dst = (h * n + i) * c.head_dim;
+                    slab[dst..dst + c.head_dim]
+                        .copy_from_slice(&row[h * c.head_dim..(h + 1) * c.head_dim]);
+                }
+            }
+            slab.into()
+        };
+        let handle = start(c.clone()).unwrap();
+        let s = handle.open_stream(2);
+        for (lo, hi) in [(0usize, 4usize), (4, 7)] {
+            s.prefill(to_chunk(&k_rows, lo, hi), to_chunk(&v_rows, lo, hi), hi - lo);
+        }
+        let got = s.query(q, 1).recv().expect("prefill reply");
+        s.close();
+        let got_stats = handle.shutdown().unwrap();
+
+        assert_eq!(got, want, "prefill changed served bytes");
+        assert_eq!(got_stats.stream_appends, want_stats.stream_appends);
+        assert_eq!(got_stats.kv_alloc_blocks, want_stats.kv_alloc_blocks);
+        assert_eq!(got_stats.kv_hit_blocks, want_stats.kv_hit_blocks);
+    }
+
+    #[test]
+    fn batch_dedupe_replay_hits_every_block() {
+        let mut c = cfg("standard", 1); // batch size 1: one batch per submit
+        c.kv = Some(crate::kvcache::KvCacheConfig::new(2).with_batch_dedupe(true));
+        let handle = start(c.clone()).unwrap();
+        let req = random_request(&c, 4);
+        let first = handle.submit(req.clone()).recv().expect("first reply");
+        let second = handle.submit(req).recv().expect("resubmitted reply");
+        // standard attention is seedless: the replay reproduces the bytes
+        assert_eq!(first, second);
+        let stats = handle.shutdown().unwrap();
+        let blocks = (c.seq / 2) as u64; // seq 16 at block size 2
+        assert_eq!(stats.kv_alloc_blocks, blocks, "only the first submission allocates");
+        assert_eq!(stats.kv_hit_blocks, blocks, "the replay shares every sealed block");
     }
 }

@@ -92,6 +92,46 @@ impl KvBlock {
         self.len += 1;
     }
 
+    /// Append token `t` of a `[heads, tokens, head_dim]` chunk-slab pair
+    /// directly into block storage — the bulk-ingest counterpart of
+    /// [`push`](Self::push).  Head `h`'s row slice lives at
+    /// `h * tokens * head_dim + t * head_dim` in each slab; the block
+    /// stores it at the same `[heads, head_dim]` per-token layout `push`
+    /// writes, so chunked ingest is bitwise identical to gathering the
+    /// token's row first and pushing it.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the block is full, `head_dim` does not divide
+    /// `token_elems`, or the slabs are not `tokens` tokens long.
+    pub fn push_strided(
+        &mut self,
+        k_slab: &[f32],
+        v_slab: &[f32],
+        t: usize,
+        tokens: usize,
+        head_dim: usize,
+    ) {
+        assert!(!self.is_full(), "push into a sealed (full) block");
+        assert!(
+            head_dim > 0 && self.token_elems % head_dim == 0,
+            "head_dim {head_dim} does not divide token_elems {}",
+            self.token_elems
+        );
+        assert_eq!(k_slab.len(), tokens * self.token_elems, "k_slab length mismatch");
+        assert_eq!(v_slab.len(), tokens * self.token_elems, "v_slab length mismatch");
+        assert!(t < tokens, "token {t} out of chunk range {tokens}");
+        let heads = self.token_elems / head_dim;
+        let o = self.len * self.token_elems;
+        for h in 0..heads {
+            let src = h * tokens * head_dim + t * head_dim;
+            let dst = o + h * head_dim;
+            self.k[dst..dst + head_dim].copy_from_slice(&k_slab[src..src + head_dim]);
+            self.v[dst..dst + head_dim].copy_from_slice(&v_slab[src..src + head_dim]);
+        }
+        self.len += 1;
+    }
+
     /// The K row of token `slot` (`slot < len`).
     pub fn k_token(&self, slot: usize) -> &[f32] {
         assert!(slot < self.len, "token slot {slot} out of range (len {})", self.len);
@@ -207,6 +247,32 @@ mod tests {
         clean.push(&[1.0, 2.0], &[3.0, 4.0]);
         assert_eq!(dirty.content_hash(), clean.content_hash());
         assert!(dirty.content_eq(&clean));
+    }
+
+    #[test]
+    fn push_strided_matches_gathered_push_bitwise() {
+        // 2 heads × head_dim 2, a 3-token chunk in [heads, tokens,
+        // head_dim] layout vs pushing each token's gathered row
+        let tokens = 3;
+        let head_dim = 2;
+        let k_slab: Vec<f32> = (0..tokens * 4).map(|x| x as f32 * 0.5).collect();
+        let v_slab: Vec<f32> = (0..tokens * 4).map(|x| -(x as f32)).collect();
+        let mut strided = block(3, 4);
+        let mut pushed = block(3, 4);
+        for t in 0..tokens {
+            strided.push_strided(&k_slab, &v_slab, t, tokens, head_dim);
+            let gather = |slab: &[f32]| -> Vec<f32> {
+                (0..2)
+                    .flat_map(|h| {
+                        let o = h * tokens * head_dim + t * head_dim;
+                        slab[o..o + head_dim].to_vec()
+                    })
+                    .collect()
+            };
+            pushed.push(&gather(&k_slab), &gather(&v_slab));
+        }
+        assert!(strided.content_eq(&pushed));
+        assert_eq!(strided.content_hash(), pushed.content_hash());
     }
 
     #[test]

@@ -7,20 +7,32 @@
 //! fixed-size [`KvBlock`]s handed out by a [`BlockPool`] and chained into
 //! a per-stream [`StreamChain`]:
 //!
+//! * **Unified ingest.** Every K/V byte enters through one tail-write →
+//!   seal → dedupe path, at three granularities: per-token
+//!   ([`KvCache::append`]), chunked ([`KvCache::append_chunk`] —
+//!   block-sized strides, so sealing/hashing/prefix-lookup amortise per
+//!   block; the prefill path), and one-shot batch slabs (the server
+//!   opens a [`KvCache::open_batch_stream`] chain per request when
+//!   [`KvCacheConfig::batch_dedupe`] is on).  All three are bitwise
+//!   interchangeable: the same tokens produce the same blocks, hashes,
+//!   and trie paths regardless of ingest granularity.
 //! * **Prefix sharing.** When a block fills, its content hash is looked
 //!   up in the [`PrefixIndex`] — a radix trie over sealed-block hashes —
 //!   and an identical block at the same prefix path is *shared*
 //!   (refcounted `Arc`, storage recycled) instead of stored twice.  Two
-//!   streams serving the same prompt, or a resubmitted request, keep one
-//!   physical copy of the common prefix.
+//!   streams serving the same prompt, a resubmitted decode stream, or a
+//!   replayed batched request keep one physical copy of the common
+//!   prefix.
 //! * **Copy-on-write forks.** [`StreamChain::fork`] clones a chain by
 //!   bumping refcounts only; the partially-filled tail block is copied
 //!   lazily on the first diverging append.
 //! * **Eviction.** [`KvCacheConfig::capacity_blocks`] bounds resident
 //!   blocks: at capacity, least-recently-used index entries that no live
-//!   stream references are evicted ([`EvictionPolicy::Lru`]).
-//!   [`EvictionPolicy::SlidingWindow`] additionally bounds each stream to
-//!   its last `window` tokens, releasing front blocks as they fall out.
+//!   stream references are evicted ([`EvictionPolicy::Lru`]) — an
+//!   O(log N) heap pop per victim, never a trie walk (see
+//!   [`PrefixIndex`]).  [`EvictionPolicy::SlidingWindow`] additionally
+//!   bounds each stream to its last `window` tokens, releasing front
+//!   blocks as they fall out.
 //!
 //! **Determinism contract.** The cache deduplicates *storage*, never
 //! content: a hash hit is verified by bitwise comparison before sharing,
@@ -220,11 +232,92 @@ impl KvCache {
         }
     }
 
+    /// Open a chain for a one-shot batch-request slab: identical to
+    /// [`open_stream`](Self::open_stream) except the sliding window (if
+    /// the policy has one) is *not* applied — a batched request has a
+    /// fixed `seq` and every token must stay visible for the duration of
+    /// its batch.  Retention of its sealed blocks is still governed by
+    /// LRU capacity pressure after the chain closes.
+    pub fn open_batch_stream(&mut self) -> StreamChain {
+        let mut chain = self.open_stream();
+        chain.window = None;
+        chain
+    }
+
     /// Append one token's K and V rows (each `token_elems` long) to a
     /// stream: write into the tail block (copy-on-write if the tail is
     /// shared with a fork), seal + dedupe the block when it fills, and
     /// enforce the sliding window.
     pub fn append(&mut self, chain: &mut StreamChain, k_row: &[f32], v_row: &[f32]) {
+        self.ensure_writable_tail(chain);
+        let tail = chain.tail.as_mut().expect("tail just ensured");
+        Arc::get_mut(tail).expect("tail uniquely owned after CoW").push(k_row, v_row);
+        chain.appended += 1;
+        if tail.is_full() {
+            self.seal_tail(chain);
+        }
+        self.enforce_window(chain);
+    }
+
+    /// Bulk-append a whole chunk of tokens — the chunked-prefill ingest
+    /// path.  `k`/`v` are `[heads, tokens, head_dim]` row-major slabs
+    /// (the server's request/prefill layout; `heads = token_elems /
+    /// head_dim`), written in block-sized strides: the tail
+    /// allocation/CoW check runs once per stride and sealing, hashing,
+    /// prefix lookup, and window enforcement run once per *block*
+    /// instead of once per token.
+    ///
+    /// **Bitwise identical to the per-token loop**: the block bytes,
+    /// hash paths, dedupe hits, LRU stamp order, and window drops are
+    /// exactly those of calling [`append`](Self::append) with each
+    /// token's gathered `[heads, head_dim]` row in order (pinned in
+    /// `rust/tests/kv_cache.rs`, including across window-eviction
+    /// boundaries).
+    ///
+    /// # Panics
+    ///
+    /// Panics if `head_dim` does not divide the cache's `token_elems` or
+    /// the slabs are not exactly `tokens * token_elems` long.
+    pub fn append_chunk(
+        &mut self,
+        chain: &mut StreamChain,
+        k: &[f32],
+        v: &[f32],
+        tokens: usize,
+        head_dim: usize,
+    ) {
+        let te = chain.token_elems;
+        assert!(
+            head_dim > 0 && te % head_dim == 0,
+            "head_dim {head_dim} does not divide token_elems {te}"
+        );
+        assert_eq!(k.len(), tokens * te, "k chunk slab length mismatch");
+        assert_eq!(v.len(), tokens * te, "v chunk slab length mismatch");
+        let mut t = 0;
+        while t < tokens {
+            self.ensure_writable_tail(chain);
+            let tail_arc = chain.tail.as_mut().expect("tail just ensured");
+            let tail = Arc::get_mut(tail_arc).expect("tail uniquely owned after CoW");
+            let take = (tail.block_size() - tail.len()).min(tokens - t);
+            for i in t..t + take {
+                tail.push_strided(k, v, i, tokens, head_dim);
+            }
+            chain.appended += take;
+            t += take;
+            if chain.tail.as_ref().is_some_and(|b| b.is_full()) {
+                self.seal_tail(chain);
+            }
+            // window drops are a pure function of the appended count, so
+            // enforcing once per stride lands on the same final state as
+            // the per-token loop (no seal/lookup happens in between)
+            self.enforce_window(chain);
+        }
+    }
+
+    /// Make the chain's tail block writable: allocate it if absent, and
+    /// copy-on-write if a fork still shares it.  Afterwards
+    /// `Arc::get_mut(chain.tail)` is guaranteed to succeed.
+    fn ensure_writable_tail(&mut self, chain: &mut StreamChain) {
         if chain.tail.is_none() {
             chain.tail = Some(Arc::new(self.pool.alloc()));
         }
@@ -235,12 +328,6 @@ impl KvCache {
             let shared = std::mem::replace(tail, copy);
             self.pool.release(shared);
         }
-        Arc::get_mut(tail).expect("tail uniquely owned after CoW").push(k_row, v_row);
-        chain.appended += 1;
-        if tail.is_full() {
-            self.seal_tail(chain);
-        }
-        self.enforce_window(chain);
     }
 
     /// Seal the (full) tail: dedupe it against the prefix index or insert
@@ -254,8 +341,8 @@ impl KvCache {
             self.pool.release(tail); // staging storage recycled
             self.hits += 1;
         } else {
-            // make room for the newly retained block first — one trie
-            // pass for however many evictions the deficit needs
+            // make room for the newly retained block first — O(log N)
+            // heap pops for however many evictions the deficit needs
             if self.pool.at_capacity() {
                 let over = self.pool.resident() + 1 - self.cfg.capacity_blocks;
                 for block in self.index.evict_lru_batch(over) {
@@ -324,6 +411,13 @@ impl KvCache {
             evicted_blocks: self.evictions,
             resident_blocks: self.pool.resident() as u64,
         }
+    }
+
+    /// Lifetime block allocations that touched the heap (the pool's free
+    /// list was empty) — see [`BlockPool::fresh_allocs`].  A replayed
+    /// prompt or resubmitted batch slab leaves this flat.
+    pub fn fresh_allocs(&self) -> u64 {
+        self.pool.fresh_allocs()
     }
 
     /// Resident KV bytes: blocks × block_size × token_elems × (K + V) × 4.
@@ -485,6 +579,102 @@ mod tests {
         fill(&mut c, &mut b, 52..56);
         assert!(c.stats().evicted_blocks > 0);
         c.close_stream(b);
+    }
+
+    /// Build `[heads, tokens, head_dim]` chunk slabs whose token rows
+    /// are `fill(t)` — the gathered per-token row of token `t`.
+    fn chunk_slabs(
+        range: std::ops::Range<usize>,
+        heads: usize,
+        head_dim: usize,
+        fill: impl Fn(usize) -> Vec<f32>,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let tokens = range.len();
+        let mut k = vec![0.0f32; tokens * heads * head_dim];
+        for (i, t) in range.enumerate() {
+            let row = fill(t);
+            for h in 0..heads {
+                let dst = h * tokens * head_dim + i * head_dim;
+                k[dst..dst + head_dim].copy_from_slice(&row[h * head_dim..(h + 1) * head_dim]);
+            }
+        }
+        (k.clone(), k)
+    }
+
+    #[test]
+    fn append_chunk_is_bitwise_identical_to_per_token_appends() {
+        // 13 tokens through chunks {4, 6, 3} vs one-at-a-time, sliding
+        // window 5 at block size 2: strides cross both block seals and
+        // window-eviction boundaries
+        let row = |t: usize| vec![t as f32, -(t as f32)];
+        let mut per_tok = KvCache::new(KvCacheConfig::new(2).with_window(5), 2);
+        let mut chunked = KvCache::new(KvCacheConfig::new(2).with_window(5), 2);
+        let mut a = per_tok.open_stream();
+        let mut b = chunked.open_stream();
+        for t in 0..13 {
+            let r = row(t);
+            per_tok.append(&mut a, &r, &r);
+        }
+        for range in [0..4, 4..10, 10..13] {
+            // heads = 2, head_dim = 1 (token_elems = 2)
+            let (k, v) = chunk_slabs(range.clone(), 2, 1, row);
+            chunked.append_chunk(&mut b, &k, &v, range.len(), 1);
+        }
+        assert_eq!(a.appended(), b.appended());
+        assert_eq!(a.visible_len(), b.visible_len());
+        assert_eq!(a.block_count(), b.block_count());
+        let gather = |chain: &StreamChain| {
+            let n = chain.visible_len();
+            let mut k = Matrix::zeros(n, 2);
+            let mut v = Matrix::zeros(n, 2);
+            chain.gather_head_into(0, 2, &mut k, &mut v);
+            (k, v)
+        };
+        let (ka, va) = gather(&a);
+        let (kb, vb) = gather(&b);
+        assert_eq!(ka.max_abs_diff(&kb), 0.0, "chunked K diverged from per-token");
+        assert_eq!(va.max_abs_diff(&vb), 0.0, "chunked V diverged from per-token");
+        let (sa, sb) = (per_tok.stats(), chunked.stats());
+        assert_eq!(sa.alloc_blocks, sb.alloc_blocks);
+        assert_eq!(sa.hit_blocks, sb.hit_blocks);
+        assert_eq!(sa.evicted_blocks, sb.evicted_blocks);
+        assert_eq!(sa.resident_blocks, sb.resident_blocks);
+        per_tok.close_stream(a);
+        chunked.close_stream(b);
+    }
+
+    #[test]
+    fn append_chunk_dedupes_against_per_token_ingest() {
+        // a chunked replay of a per-token-ingested prompt must hit every
+        // sealed block — the two granularities share one hash path
+        let row = |t: usize| vec![t as f32, t as f32 + 0.5];
+        let mut c = cache(2);
+        let mut a = c.open_stream();
+        for t in 0..6 {
+            let r = row(t);
+            c.append(&mut a, &r, &r);
+        }
+        assert_eq!(c.stats().alloc_blocks, 3);
+        let mut b = c.open_stream();
+        let (k, v) = chunk_slabs(0..6, 1, 2, row);
+        c.append_chunk(&mut b, &k, &v, 6, 2);
+        let s = c.stats();
+        assert_eq!(s.alloc_blocks, 3, "chunked replay must not allocate");
+        assert_eq!(s.hit_blocks, 3, "chunked replay shares every sealed block");
+        c.close_stream(a);
+        c.close_stream(b);
+    }
+
+    #[test]
+    fn batch_stream_ignores_the_window() {
+        let mut c = KvCache::new(KvCacheConfig::new(2).with_window(4), 1);
+        let mut chain = c.open_batch_stream();
+        for t in 0..10 {
+            c.append(&mut chain, &[t as f32], &[t as f32]);
+        }
+        assert_eq!(chain.visible_len(), 10, "batch chains keep the full request");
+        assert_eq!(c.stats().evicted_blocks, 0);
+        c.close_stream(chain);
     }
 
     #[test]

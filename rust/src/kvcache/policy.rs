@@ -42,12 +42,33 @@ pub struct KvCacheConfig {
     pub capacity_blocks: usize,
     /// Eviction policy.
     pub policy: EvictionPolicy,
+    /// Route one-shot batched requests (`HeadsRequest` K/V slabs)
+    /// through the cache too: each request's slabs are content-hashed
+    /// into the same prefix-index paths streams use, so a resubmitted or
+    /// prompt-shared batched request materialises its head views from
+    /// shared blocks instead of storing the payload again.  Batch chains
+    /// always keep the request's full `seq` tokens (the sliding window,
+    /// if any, applies to decode streams only — a one-shot request has a
+    /// fixed length, so truncating it would change served bytes).
+    ///
+    /// **Pair this with a finite [`capacity_blocks`](Self::capacity_blocks).**
+    /// Batch-ingested blocks are retained by the index for future replays
+    /// and have no window-reclaim path, so LRU capacity pressure is the
+    /// only thing bounding them; with capacity 0 (unbounded) a stream of
+    /// non-repeating requests grows the cache without limit.  The CLI
+    /// applies a default cap when `--kv-batch-dedupe` is set alone.
+    pub batch_dedupe: bool,
 }
 
 impl KvCacheConfig {
     /// `block_size`-token blocks, unbounded capacity, [`EvictionPolicy::Lru`].
     pub fn new(block_size: usize) -> Self {
-        Self { block_size: block_size.max(1), capacity_blocks: 0, policy: EvictionPolicy::Lru }
+        Self {
+            block_size: block_size.max(1),
+            capacity_blocks: 0,
+            policy: EvictionPolicy::Lru,
+            batch_dedupe: false,
+        }
     }
 
     pub fn with_capacity_blocks(mut self, capacity: usize) -> Self {
@@ -65,6 +86,13 @@ impl KvCacheConfig {
         self.with_policy(EvictionPolicy::SlidingWindow { window })
     }
 
+    /// Enable [`batch_dedupe`](Self::batch_dedupe) — batch-path prefix
+    /// sharing for one-shot request slabs.
+    pub fn with_batch_dedupe(mut self, on: bool) -> Self {
+        self.batch_dedupe = on;
+        self
+    }
+
     /// The per-stream sliding window, if the policy has one.
     pub fn window(&self) -> Option<usize> {
         self.policy.window()
@@ -77,11 +105,16 @@ mod tests {
 
     #[test]
     fn builders_compose() {
-        let cfg = KvCacheConfig::new(8).with_capacity_blocks(64).with_window(512);
+        let cfg = KvCacheConfig::new(8)
+            .with_capacity_blocks(64)
+            .with_window(512)
+            .with_batch_dedupe(true);
         assert_eq!(cfg.block_size, 8);
         assert_eq!(cfg.capacity_blocks, 64);
         assert_eq!(cfg.window(), Some(512));
+        assert!(cfg.batch_dedupe);
         assert_eq!(KvCacheConfig::new(8).window(), None);
+        assert!(!KvCacheConfig::new(8).batch_dedupe);
     }
 
     #[test]

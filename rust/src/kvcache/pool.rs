@@ -37,6 +37,9 @@ pub struct BlockPool {
     resident: usize,
     /// Lifetime allocations (monotonic, for stats).
     total_allocs: u64,
+    /// Lifetime allocations that had to touch the heap (no recycled
+    /// storage available) — steady-state serving keeps this flat.
+    fresh_allocs: u64,
 }
 
 impl BlockPool {
@@ -45,7 +48,15 @@ impl BlockPool {
     pub fn new(block_size: usize, token_elems: usize, capacity: usize) -> Self {
         assert!(block_size > 0, "block_size must be positive");
         assert!(token_elems > 0, "token_elems must be positive");
-        Self { block_size, token_elems, capacity, free: Vec::new(), resident: 0, total_allocs: 0 }
+        Self {
+            block_size,
+            token_elems,
+            capacity,
+            free: Vec::new(),
+            resident: 0,
+            total_allocs: 0,
+            fresh_allocs: 0,
+        }
     }
 
     pub fn block_size(&self) -> usize {
@@ -66,6 +77,13 @@ impl BlockPool {
         self.total_allocs
     }
 
+    /// Lifetime allocs that touched the heap (the free list was empty).
+    /// A replayed prompt or resubmitted batch slab leaves this flat —
+    /// its working blocks come back recycled.
+    pub fn fresh_allocs(&self) -> u64 {
+        self.fresh_allocs
+    }
+
     /// True when the resident count has reached the configured capacity —
     /// the cache should evict unreferenced index entries before (or right
     /// after) the next alloc.
@@ -76,7 +94,13 @@ impl BlockPool {
     /// Hand out an empty block, reusing freed storage when available.
     pub fn alloc(&mut self) -> KvBlock {
         let elems = self.block_size * self.token_elems;
-        let (mut k, mut v) = self.free.pop().unwrap_or_default();
+        let (mut k, mut v) = match self.free.pop() {
+            Some(pair) => pair,
+            None => {
+                self.fresh_allocs += 1;
+                Default::default()
+            }
+        };
         k.clear();
         k.resize(elems, 0.0);
         v.clear();
@@ -132,6 +156,7 @@ mod tests {
         again.push(&[0.0, 0.0], &[0.0, 0.0]);
         assert_eq!(again.k_token(0).as_ptr(), ptr);
         assert_eq!(pool.total_allocs(), 2);
+        assert_eq!(pool.fresh_allocs(), 1, "second alloc must reuse recycled storage");
     }
 
     #[test]

@@ -25,10 +25,26 @@
 //! * Every insert and every hit stamps a unique logical-clock value, so
 //!   LRU selection has no ties and is deterministic regardless of hash-map
 //!   iteration order.
+//! * **LRU selection is O(log N), not a trie walk.**  Every stamp
+//!   assignment also pushes a `(stamp, path)` snapshot onto a min-heap;
+//!   the node's `last_touch` stays the single source of truth, and a
+//!   popped snapshot whose stamp no longer matches (the node was
+//!   re-touched, evicted, or removed) is simply discarded — *lazy
+//!   invalidation*.  A popped entry whose block is still referenced by a
+//!   live stream is pushed back and retried on a later eviction pass.
+//!   Because stamps are unique, the heap's pop order is a total order,
+//!   and the evicted sequence is exactly what a full-trie DFS sorted by
+//!   stamp would produce (pinned against the `#[cfg(test)]` DFS oracle
+//!   under randomized interleavings).
 
 use super::block::KvBlock;
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 use std::sync::Arc;
+
+/// One lazy LRU snapshot: the stamp a node carried when it was touched,
+/// plus the node's full trie path (prefix hashes + own hash).
+type LruEntry = Reverse<(u64, Vec<u64>)>;
 
 #[derive(Debug)]
 struct TrieNode {
@@ -48,6 +64,14 @@ pub struct PrefixIndex {
     clock: u64,
     /// Nodes currently holding a block (tombstones excluded).
     entries: usize,
+    /// Min-heap of `(last_touch, path)` snapshots — the O(log N) LRU.
+    /// May hold stale entries (lazy invalidation; see the module docs);
+    /// compacted when stale entries dominate.  Each snapshot owns its
+    /// full path, so heap memory is O(Σ depth) — proportional to total
+    /// trie path length, not node count; an arena of node ids would make
+    /// snapshots O(1) each (ROADMAP follow-up) at the cost of an
+    /// indirection on every trie op.
+    lru: BinaryHeap<LruEntry>,
 }
 
 impl PrefixIndex {
@@ -100,7 +124,9 @@ impl PrefixIndex {
             return None; // hash collision: treat as a miss, never share
         }
         node.last_touch = stamp;
-        Some(Arc::clone(node.block.as_ref().expect("checked above")))
+        let shared = Arc::clone(node.block.as_ref().expect("checked above"));
+        self.push_lru(stamp, path, hash);
+        Some(shared)
     }
 
     /// Register a freshly sealed block at `path` + `hash`.  Missing
@@ -135,7 +161,28 @@ impl PrefixIndex {
         }
         node.block = Some(block);
         node.last_touch = stamp;
+        self.push_lru(stamp, path, hash);
         displaced
+    }
+
+    /// Record a fresh `(stamp, full path)` LRU snapshot for the node at
+    /// `path` + `hash`, compacting the heap when stale snapshots dominate
+    /// the live entry count (a long run of hits with no eviction would
+    /// otherwise grow it without bound).
+    fn push_lru(&mut self, stamp: u64, path: &[u64], hash: u64) {
+        let mut full = Vec::with_capacity(path.len() + 1);
+        full.extend_from_slice(path);
+        full.push(hash);
+        self.lru.push(Reverse((stamp, full)));
+        if self.lru.len() > 64 && self.lru.len() > 4 * self.entries.max(1) {
+            // rebuild from the trie's current stamps: one snapshot per
+            // block-holding node.  Heap pops depend only on the (unique)
+            // stamps, so a rebuild never changes the eviction order.
+            let mut rebuilt = BinaryHeap::with_capacity(self.entries);
+            let mut walk = Vec::new();
+            collect_lru_snapshots(&self.children, &mut walk, &mut rebuilt);
+            self.lru = rebuilt;
+        }
     }
 
     /// Remove the entry at `path` + `hash` if its block is exactly the
@@ -173,13 +220,54 @@ impl PrefixIndex {
         self.evict_lru_batch(1).pop()
     }
 
-    /// Evict up to `max` least-recently-touched unreferenced blocks in
-    /// **one** trie pass (the capacity catch-up path would otherwise pay
-    /// a full DFS per block).  Interior nodes tombstone (descendants
-    /// stay addressable); leaves are removed and empty tombstone chains
-    /// pruned.  Returns the evicted `Arc`s for the caller to release
-    /// back to the pool, oldest first — possibly fewer than `max`.
+    /// Evict up to `max` least-recently-touched unreferenced blocks —
+    /// O(log N) heap pops per victim instead of a full trie DFS per
+    /// sealed block (the steady-state capacity-pressure cost this
+    /// replaces).  Snapshots are popped in global stamp order: stale ones
+    /// (node gone, tombstoned, or re-touched under a newer stamp) are
+    /// discarded, and snapshots of blocks a live stream still references
+    /// are set aside and pushed back for a later pass.  Interior nodes
+    /// tombstone (descendants stay addressable); leaves are removed and
+    /// empty tombstone chains pruned.  Returns the evicted `Arc`s for the
+    /// caller to release back to the pool, oldest first — possibly fewer
+    /// than `max`.  The order matches the `#[cfg(test)]` DFS oracle
+    /// exactly (unique stamps leave no ties).
     pub fn evict_lru_batch(&mut self, max: usize) -> Vec<Arc<KvBlock>> {
+        let mut evicted = Vec::new();
+        let mut still_referenced: Vec<LruEntry> = Vec::new();
+        while evicted.len() < max {
+            let Some(Reverse((stamp, path))) = self.lru.pop() else {
+                break; // heap drained: nothing held is evictable
+            };
+            let Some(node) = self.node_mut(&path) else {
+                continue; // stale: the node was evicted and pruned
+            };
+            let Some(block) = node.block.as_ref() else {
+                continue; // stale: tombstoned or removed since the snapshot
+            };
+            if node.last_touch != stamp {
+                continue; // stale: re-touched — a newer snapshot exists
+            }
+            if Arc::strong_count(block) > 1 {
+                // live-referenced: not evictable *now*, but this snapshot
+                // is the node's current one — keep it for later passes
+                still_referenced.push(Reverse((stamp, path)));
+                continue;
+            }
+            let block = node.block.take().expect("checked above");
+            self.entries -= 1;
+            prune(&mut self.children, &path);
+            evicted.push(block);
+        }
+        self.lru.extend(still_referenced);
+        evicted
+    }
+
+    /// The retired full-trie implementation, kept as the test oracle for
+    /// the heap path: collect every evictable node in one DFS, sort by
+    /// the unique stamps, take the oldest `max`.
+    #[cfg(test)]
+    fn evict_lru_batch_dfs(&mut self, max: usize) -> Vec<Arc<KvBlock>> {
         if max == 0 {
             return Vec::new();
         }
@@ -201,8 +289,26 @@ impl PrefixIndex {
     }
 }
 
+/// DFS collecting one `(last_touch, path)` snapshot per block-holding
+/// node — the heap-compaction rebuild walk.
+fn collect_lru_snapshots(
+    children: &HashMap<u64, TrieNode>,
+    path: &mut Vec<u64>,
+    out: &mut BinaryHeap<LruEntry>,
+) {
+    for (&h, node) in children {
+        path.push(h);
+        if node.block.is_some() {
+            out.push(Reverse((node.last_touch, path.clone())));
+        }
+        collect_lru_snapshots(&node.children, path, out);
+        path.pop();
+    }
+}
+
 /// DFS collecting `(last_touch, path)` of every evictable node (block
-/// held, strong count 1).
+/// held, strong count 1) — oracle support only.
+#[cfg(test)]
 fn find_evictable(
     children: &HashMap<u64, TrieNode>,
     path: &mut Vec<u64>,
@@ -345,7 +451,7 @@ mod tests {
     }
 
     #[test]
-    fn batch_eviction_takes_oldest_first_in_one_pass() {
+    fn batch_eviction_takes_oldest_first_and_retries_referenced() {
         let mut idx = PrefixIndex::new();
         let blocks: Vec<_> = (0..4).map(|i| sealed(2, i as f32 + 1.0)).collect();
         for b in &blocks {
@@ -360,6 +466,88 @@ mod tests {
         assert_eq!(idx.len(), 2);
         drop(keep);
         assert_eq!(idx.evict_lru_batch(10).len(), 2, "remainder evictable once released");
+    }
+
+    #[test]
+    fn heap_eviction_matches_dfs_oracle_under_random_interleavings() {
+        use crate::rng::Rng;
+        // two indexes fed the identical op sequence: one evicts through
+        // the lazy heap, the other through the retired full-trie DFS.
+        // Unique stamps mean there is exactly one correct eviction order,
+        // so the two must stay in lockstep through arbitrary
+        // insert/touch/release/evict interleavings.
+        for trial in 0..8u64 {
+            let mut rng = Rng::new(1000 + trial);
+            let mut heap_idx = PrefixIndex::new();
+            let mut dfs_idx = PrefixIndex::new();
+            // parallel holders: same pin/release decisions, separate Arcs
+            // per index (so strong counts evolve identically)
+            let mut held: Vec<(Arc<KvBlock>, Arc<KvBlock>)> = Vec::new();
+            // every insert's (prefix path, hash, fill) — touch targets
+            let mut inserted: Vec<(Vec<u64>, u64, f32)> = Vec::new();
+            let mut paths: Vec<Vec<u64>> = vec![Vec::new()];
+            let mut fill = 0.0f32;
+            for _ in 0..300 {
+                match rng.below(10) {
+                    0..=3 => {
+                        // insert a fresh block at a random known prefix
+                        fill += 1.0;
+                        let path = paths[rng.below(paths.len())].clone();
+                        let a = sealed(2, fill);
+                        let b = sealed(2, fill);
+                        let hash = a.content_hash();
+                        let da = heap_idx.insert(&path, hash, Arc::clone(&a));
+                        let db = dfs_idx.insert(&path, hash, Arc::clone(&b));
+                        assert_eq!(da.is_some(), db.is_some());
+                        if rng.below(2) == 0 {
+                            held.push((a, b)); // a "live stream" pins it
+                        }
+                        let mut full = path.clone();
+                        full.push(hash);
+                        inserted.push((path, hash, fill));
+                        paths.push(full);
+                    }
+                    4..=5 if !inserted.is_empty() => {
+                        // touch: re-look-up a previously inserted block
+                        let (path, hash, f) = inserted[rng.below(inserted.len())].clone();
+                        let probe = sealed(2, f);
+                        let ha = heap_idx.lookup(&path, hash, &probe);
+                        let hb = dfs_idx.lookup(&path, hash, &probe);
+                        assert_eq!(ha.is_some(), hb.is_some(), "hit status diverged");
+                    }
+                    6 if !held.is_empty() => {
+                        // release a held pair: the block becomes evictable
+                        let i = rng.below(held.len());
+                        held.swap_remove(i);
+                    }
+                    _ => {
+                        let k = 1 + rng.below(3);
+                        let got = heap_idx.evict_lru_batch(k);
+                        let want = dfs_idx.evict_lru_batch_dfs(k);
+                        assert_eq!(got.len(), want.len(), "evicted counts diverged");
+                        for (g, w) in got.iter().zip(&want) {
+                            assert!(g.content_eq(w), "eviction order diverged");
+                        }
+                    }
+                }
+                assert_eq!(heap_idx.len(), dfs_idx.len(), "entry counts diverged");
+            }
+            // drain: everything released, the remainders must evict in
+            // the same order
+            held.clear();
+            loop {
+                let got = heap_idx.evict_lru_batch(4);
+                let want = dfs_idx.evict_lru_batch_dfs(4);
+                assert_eq!(got.len(), want.len());
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(g.content_eq(w));
+                }
+                if got.is_empty() {
+                    break;
+                }
+            }
+            assert!(heap_idx.is_empty() && dfs_idx.is_empty());
+        }
     }
 
     #[test]

@@ -60,11 +60,15 @@ fn print_help() {
            serve    --method skeinformer [--engine cpu|pjrt] [--requests N] [--max-wait-ms N]\n\
                     cpu engine (default; batched attention, no artifacts needed):\n\
                     [--batch B] [--heads H] [--seq N] [--head-dim P] [--d D] [--workers W]\n\
+                    [--kv-batch-dedupe] (route one-shot request K/V slabs through\n\
+                    the paged cache: resubmitted/prompt-shared batches dedupe)\n\
                     --stream runs a streaming-decode demo instead (one token\n\
                     appended + queried per step): [--tokens N] [--repilot-stride S]\n\
-                    [--streams S] paged KV cache: [--kv-blocks N] (capacity;\n\
-                    enables the cache) [--kv-window W] (sliding window, tokens)\n\
-                    [--kv-block-size B] (tokens/block, default 16)\n\
+                    [--streams S] [--prefill-chunk C] (ingest the prompt via\n\
+                    chunked Prefill ops of C tokens + one final query, instead\n\
+                    of per-token decode; 0 = off) paged KV cache: [--kv-blocks N]\n\
+                    (capacity; enables the cache) [--kv-window W] (sliding\n\
+                    window, tokens) [--kv-block-size B] (tokens/block, default 16)\n\
            inspect  <artifacts/..._manifest.json>\n\n\
          GLOBAL FLAGS\n\
            --pool-size N   worker threads in the persistent pool (default:\n\
@@ -271,7 +275,11 @@ fn cmd_serve_cpu(args: &Args) -> Result<()> {
 /// one-row query per step), report tokens/s and per-step latency
 /// percentiles.  With `--streams S > 1` every stream replays the same
 /// token sequence, so a KV-cache-enabled run (`--kv-blocks`) shows prefix
-/// sharing: stream 1 allocates blocks, streams 2..S hit them.
+/// sharing: stream 1 allocates blocks, streams 2..S hit them.  With
+/// `--prefill-chunk C > 0` the demo measures prompt *ingest* instead:
+/// each stream's tokens go in as chunked `Prefill` ops of C tokens
+/// (one channel message + per-block cache bookkeeping per chunk) followed
+/// by a single one-row query.
 fn cmd_serve_stream(
     args: &Args,
     cfg: skeinformer::coordinator::attention_server::AttentionServerConfig,
@@ -282,14 +290,20 @@ fn cmd_serve_stream(
     let tokens = args.get_usize("tokens", cfg.seq)?;
     let stride = args.get_usize("repilot-stride", 1)?;
     let n_streams = args.get_usize("streams", 1)?.max(1);
+    let prefill_chunk = args.get_usize("prefill-chunk", 0)?;
     eprintln!(
-        "streaming decode demo: method={} H={} p={} tokens={} repilot-stride={} streams={}{}",
+        "streaming decode demo: method={} H={} p={} tokens={} repilot-stride={} streams={}{}{}",
         cfg.method,
         cfg.heads,
         cfg.head_dim,
         tokens,
         stride,
         n_streams,
+        if prefill_chunk > 0 {
+            format!(" prefill-chunk={prefill_chunk}")
+        } else {
+            String::new()
+        },
         match &cfg.kv {
             Some(kv) => format!(" kv-cache={kv:?}"),
             None => " kv-cache=off".to_string(),
@@ -304,20 +318,45 @@ fn cmd_serve_stream(
         let token_elems = stream.token_elems();
         // same data seed per stream: replayed prompts exercise the cache
         let mut rng = Rng::new(11);
-        for _ in 0..tokens {
-            let mut mk = || {
-                let mut buf = vec![0.0f32; token_elems];
-                rng.fill_normal(&mut buf);
-                let slab: Arc<[f32]> = buf.into();
-                slab
-            };
-            let (k, v, q) = (mk(), mk(), mk());
+        if prefill_chunk > 0 {
+            // prefill-throughput shape: chunked ingest, one final query
+            let mut remaining = tokens;
+            while remaining > 0 {
+                let c = prefill_chunk.min(remaining);
+                let mut mk = || {
+                    let mut buf = vec![0.0f32; c * token_elems];
+                    rng.fill_normal(&mut buf);
+                    let slab: Arc<[f32]> = buf.into();
+                    slab
+                };
+                let (k, v) = (mk(), mk());
+                stream.prefill(k, v, c);
+                remaining -= c;
+            }
+            let mut q = vec![0.0f32; token_elems];
+            rng.fill_normal(&mut q);
             let step = std::time::Instant::now();
-            stream.append(k, v);
-            let out = stream.query(q, 1).recv().context("stream query dropped")?;
+            let out = stream.query(q.into(), 1).recv().context("prefill query dropped")?;
+            // drain latency: the query waits behind the whole ingest
             latency.push(step.elapsed().as_secs_f64() * 1e3);
             anyhow::ensure!(out.len() == token_elems);
             anyhow::ensure!(out.iter().all(|x| x.is_finite()));
+        } else {
+            for _ in 0..tokens {
+                let mut mk = || {
+                    let mut buf = vec![0.0f32; token_elems];
+                    rng.fill_normal(&mut buf);
+                    let slab: Arc<[f32]> = buf.into();
+                    slab
+                };
+                let (k, v, q) = (mk(), mk(), mk());
+                let step = std::time::Instant::now();
+                stream.append(k, v);
+                let out = stream.query(q, 1).recv().context("stream query dropped")?;
+                latency.push(step.elapsed().as_secs_f64() * 1e3);
+                anyhow::ensure!(out.len() == token_elems);
+                anyhow::ensure!(out.iter().all(|x| x.is_finite()));
+            }
         }
         stream.close();
     }
@@ -325,7 +364,8 @@ fn cmd_serve_stream(
     let stats = handle.shutdown()?;
     let decoded = tokens * n_streams;
     println!(
-        "decoded {} tokens in {:.2}s ({:.1} tok/s) — appends={} queries={} rejected={}",
+        "{} {} tokens in {:.2}s ({:.1} tok/s) — appends={} queries={} rejected={}",
+        if prefill_chunk > 0 { "prefilled" } else { "decoded" },
         decoded,
         wall,
         decoded as f64 / wall,

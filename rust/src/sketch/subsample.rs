@@ -131,8 +131,12 @@ mod tests {
         probs[7] = 0.0;
         let sk = SubSampleSketch::new(probs, 16);
         let mut rng = Rng::new(5);
+        // reused draw buffers: the repeated-draw loop pays no per-draw
+        // allocation (the pattern hot call sites follow)
+        let mut idx = Vec::new();
+        let mut scales = Vec::new();
         for _ in 0..100 {
-            let (idx, _) = sk.draw_indices(&mut rng);
+            sk.draw_indices_into(&mut rng, &mut idx, &mut scales);
             assert!(idx.iter().all(|&i| i != 3 && i != 7));
         }
     }

@@ -5,8 +5,16 @@
 //!   method (the acceptance criterion of the subsystem).
 //! * Prefix sharing: a replayed prompt allocates zero new blocks for the
 //!   shared region, asserted through `AttentionServerStats`.
+//! * Chunked prefill ≡ per-token append: bitwise outputs and identical
+//!   cache stats for every registry method, with and without a sliding
+//!   window (strides crossing window-eviction boundaries).
+//! * Batch-slab dedupe: a resubmitted one-shot `HeadsRequest` allocates
+//!   zero new blocks (server stats) and serves bitwise the bytes the
+//!   undeduped path serves; stream and batch ingest share one hash path.
 //! * Refcount / copy-on-write correctness under fork + close.
-//! * Eviction never drops a block a live stream still references.
+//! * Eviction never drops a block a live stream still references (the
+//!   heap-LRU ≡ DFS-oracle order equivalence itself is pinned in
+//!   `kvcache::prefix`'s unit suite, where the oracle lives).
 //! * Sliding-window sessions match a full recompute over the window at
 //!   the same epoch seed, and the server's windowed streams match
 //!   `BoundedSession` exactly.
@@ -15,7 +23,7 @@ use skeinformer::attention::{
     self, session_epoch, session_seed, AttentionSession, BoundedSession, SessionSpec,
 };
 use skeinformer::coordinator::attention_server::{
-    self, stream_seed, AttentionServerConfig, AttentionServerStats,
+    self, stream_seed, AttentionServerConfig, AttentionServerStats, HeadsRequest,
 };
 use skeinformer::kvcache::{KvCache, KvCacheConfig};
 use skeinformer::rng::Rng;
@@ -100,6 +108,162 @@ fn cached_stream_is_bitwise_identical_to_uncached_for_every_method() {
         assert_eq!(got, want, "{name}: KV cache changed served bytes");
         assert_eq!(stats.kv_alloc_blocks, 3, "{name}: 7 tokens / block size 2");
     }
+}
+
+/// Repack per-token `[heads, head_dim]` rows `lo..hi` as one
+/// `[heads, tokens, head_dim]` chunk slab (the Prefill/request layout).
+fn chunk_slab(rows: &[Arc<[f32]>], lo: usize, hi: usize, heads: usize, head_dim: usize) -> Arc<[f32]> {
+    let n = hi - lo;
+    let mut slab = vec![0.0f32; n * heads * head_dim];
+    for (i, row) in rows[lo..hi].iter().enumerate() {
+        for h in 0..heads {
+            let dst = (h * n + i) * head_dim;
+            slab[dst..dst + head_dim].copy_from_slice(&row[h * head_dim..(h + 1) * head_dim]);
+        }
+    }
+    slab.into()
+}
+
+/// Append `tokens` to a fresh server stream — per-token when
+/// `chunks` is `None`, else via `Prefill` ops covering the given spans —
+/// then issue one query (`rows = visible len` so square-only methods
+/// answer too) and return (output bytes, shutdown stats).
+fn run_ingest(
+    cfg: &AttentionServerConfig,
+    tokens: &[(Arc<[f32]>, Arc<[f32]>)],
+    chunks: Option<&[(usize, usize)]>,
+    query_rows: usize,
+) -> (Vec<f32>, AttentionServerStats) {
+    let handle = attention_server::start(cfg.clone()).unwrap();
+    let stream = handle.open_stream(2);
+    match chunks {
+        None => {
+            for (k, v) in tokens {
+                stream.append(k.clone(), v.clone());
+            }
+        }
+        Some(spans) => {
+            let ks: Vec<Arc<[f32]>> = tokens.iter().map(|(k, _)| k.clone()).collect();
+            let vs: Vec<Arc<[f32]>> = tokens.iter().map(|(_, v)| v.clone()).collect();
+            for &(lo, hi) in spans {
+                stream.prefill(
+                    chunk_slab(&ks, lo, hi, cfg.heads, cfg.head_dim),
+                    chunk_slab(&vs, lo, hi, cfg.heads, cfg.head_dim),
+                    hi - lo,
+                );
+            }
+        }
+    }
+    let mut q = vec![0.0f32; cfg.heads * query_rows * cfg.head_dim];
+    Rng::new(555).fill_normal(&mut q);
+    let out = stream.query(q.into(), query_rows).recv().expect("ingest query reply");
+    stream.close();
+    (out, handle.shutdown().unwrap())
+}
+
+#[test]
+fn chunked_prefill_is_bitwise_identical_to_per_token_append_for_every_method() {
+    // 7 tokens at block size 2 through chunks {3, 3, 1}: strides start
+    // and end mid-block, so the tail survives across Prefill ops
+    for method in attention::registry(8) {
+        let name = method.name();
+        let cfg = server_cfg(name, Some(KvCacheConfig::new(2)));
+        let tokens = token_slabs(7, cfg.heads * cfg.head_dim, 77);
+        let (want, want_stats) = run_ingest(&cfg, &tokens, None, 7);
+        let (got, got_stats) = run_ingest(&cfg, &tokens, Some(&[(0, 3), (3, 6), (6, 7)]), 7);
+        assert!(!want.is_empty(), "{name}: no output collected");
+        assert_eq!(got, want, "{name}: chunked prefill changed served bytes");
+        assert_eq!(got_stats.stream_appends, want_stats.stream_appends, "{name}");
+        assert_eq!(got_stats.kv_alloc_blocks, want_stats.kv_alloc_blocks, "{name}");
+        assert_eq!(got_stats.kv_hit_blocks, want_stats.kv_hit_blocks, "{name}");
+        assert_eq!(got_stats.kv_evicted_blocks, want_stats.kv_evicted_blocks, "{name}");
+    }
+}
+
+#[test]
+fn chunked_prefill_matches_per_token_across_window_eviction_boundary() {
+    // sliding window 8 over 13 tokens: front blocks are released while
+    // the prefill strides are still appending — the window drops must
+    // land on the same final state either way
+    for method in attention::registry(8) {
+        let name = method.name();
+        let cfg = server_cfg(name, Some(KvCacheConfig::new(2).with_window(8)));
+        let tokens = token_slabs(13, cfg.heads * cfg.head_dim, 91);
+        // query rows = visible (window) length so square-only methods work
+        let (want, want_stats) = run_ingest(&cfg, &tokens, None, 8);
+        let (got, got_stats) = run_ingest(&cfg, &tokens, Some(&[(0, 5), (5, 11), (11, 13)]), 8);
+        assert_eq!(got, want, "{name}: windowed prefill changed served bytes");
+        assert_eq!(got_stats.kv_evicted_blocks, want_stats.kv_evicted_blocks, "{name}");
+        assert_eq!(got_stats.kv_resident_blocks, want_stats.kv_resident_blocks, "{name}");
+    }
+}
+
+#[test]
+fn batch_dedupe_replay_is_zero_alloc_and_bitwise_identical_to_undeduped() {
+    // seq 16 at block size 2: the request seals 8 blocks, no tail.
+    // max_batch stays 2, but each submit is recv'd before the next, so
+    // every request forms its own batch: batch seeds 0 and 1 on both
+    // servers, making the outputs comparable bitwise per submission.
+    let submissions = 2;
+    for (name, masked) in [("standard", false), ("skeinformer", true)] {
+        let plain_cfg = server_cfg(name, None);
+        let dedupe_cfg =
+            server_cfg(name, Some(KvCacheConfig::new(2).with_batch_dedupe(true)));
+        let mut req = HeadsRequest::random(plain_cfg.request_elems(), &mut Rng::new(63));
+        if masked {
+            let mut mask = vec![1.0f32; plain_cfg.seq];
+            for m in mask.iter_mut().skip(10) {
+                *m = 0.0;
+            }
+            req = req.with_mask(mask);
+        }
+        let run = |cfg: &AttentionServerConfig| {
+            let handle = attention_server::start(cfg.clone()).unwrap();
+            let outs: Vec<Vec<f32>> = (0..submissions)
+                .map(|_| handle.submit(req.clone()).recv().expect("batch reply"))
+                .collect();
+            (outs, handle.shutdown().unwrap())
+        };
+        let (want, _) = run(&plain_cfg);
+        let (got, stats) = run(&dedupe_cfg);
+        assert_eq!(got, want, "{name}: batch dedupe changed served bytes");
+        assert_eq!(stats.kv_alloc_blocks, 8, "{name}: only the first submission allocates");
+        assert_eq!(stats.kv_hit_blocks, 8, "{name}: the replay shares every sealed block");
+        assert_eq!(stats.kv_evicted_blocks, 0, "{name}");
+    }
+}
+
+#[test]
+fn stream_and_batch_ingest_share_one_hash_path() {
+    // a decode stream appends a prompt per-token; a batched request then
+    // submits the same prompt as [heads, seq, head_dim] slabs — the
+    // batch path must hit every block the stream sealed
+    let cfg = server_cfg("standard", Some(KvCacheConfig::new(2).with_batch_dedupe(true)));
+    let token_elems = cfg.heads * cfg.head_dim;
+    let tokens = token_slabs(cfg.seq, token_elems, 44);
+    let handle = attention_server::start(cfg.clone()).unwrap();
+    let stream = handle.open_stream(1);
+    for (k, v) in &tokens {
+        stream.append(k.clone(), v.clone());
+    }
+    stream.close();
+
+    let ks: Vec<Arc<[f32]>> = tokens.iter().map(|(k, _)| k.clone()).collect();
+    let vs: Vec<Arc<[f32]>> = tokens.iter().map(|(_, v)| v.clone()).collect();
+    let mut q = vec![0.0f32; cfg.request_elems()];
+    Rng::new(7).fill_normal(&mut q);
+    let req = HeadsRequest {
+        q: q.into(),
+        k: chunk_slab(&ks, 0, cfg.seq, cfg.heads, cfg.head_dim),
+        v: chunk_slab(&vs, 0, cfg.seq, cfg.heads, cfg.head_dim),
+        mask: None,
+    };
+    let out = handle.submit(req).recv().expect("batch reply");
+    assert!(out.iter().all(|x| x.is_finite()));
+    let stats = handle.shutdown().unwrap();
+    let blocks = (cfg.seq / 2) as u64;
+    assert_eq!(stats.kv_alloc_blocks, blocks, "only the stream allocates");
+    assert_eq!(stats.kv_hit_blocks, blocks, "the batch slab hits the stream's blocks");
 }
 
 #[test]

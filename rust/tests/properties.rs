@@ -216,8 +216,12 @@ fn prop_subsample_amm_unbiased_for_matrix_product() {
         let trials = 4000;
         let mut acc = vec![0.0f64; p1 * p2];
         let mut rng = Rng::new(g.int(0, 1 << 30) as u64);
+        // reused draw buffers across the 4000 trials (same RNG stream and
+        // draws as the allocating wrapper, no per-draw Vecs)
+        let mut idx = Vec::new();
+        let mut scales = Vec::new();
         for _ in 0..trials {
-            let (idx, scales) = sk.draw_indices(&mut rng);
+            sk.draw_indices_into(&mut rng, &mut idx, &mut scales);
             // Sᵀ A: (d, p1) and Sᵀ B: (d, p2) are scaled row gathers
             let sa = Matrix::from_fn(d, p1, |r, c| a.get(idx[r], c) * scales[r]);
             let sb = Matrix::from_fn(d, p2, |r, c| b.get(idx[r], c) * scales[r]);
