@@ -21,7 +21,9 @@
 //! [`BatchedAttention`]: skeinformer::attention::BatchedAttention
 
 use skeinformer::cli::Args;
-use skeinformer::coordinator::attention_server::{self, AttentionServerConfig, HeadsRequest};
+use skeinformer::coordinator::attention_server::{
+    self, AttentionServerConfig, HeadsRequest, ServeError,
+};
 use skeinformer::metrics::Percentiles;
 use skeinformer::rng::Rng;
 use std::sync::mpsc;
@@ -75,8 +77,9 @@ fn run_cpu(args: &Args) -> anyhow::Result<()> {
         let handle = attention_server::start(cfg.clone())?;
         let mut rng = Rng::new(123);
         let gap = Duration::from_secs_f64(1.0 / rate_per_s);
-        let (pipe, collector) =
-            spawn_latency_collector(|out: &Vec<f32>| out.iter().all(|x| x.is_finite()));
+        let (pipe, collector) = spawn_latency_collector(|out: &Result<Vec<f32>, ServeError>| {
+            matches!(out, Ok(o) if o.iter().all(|x| x.is_finite()))
+        });
         let t0 = Instant::now();
         for i in 0..total {
             // absolute-deadline pacing: payload generation time must not
@@ -87,7 +90,7 @@ fn run_cpu(args: &Args) -> anyhow::Result<()> {
                 std::thread::sleep(target - now);
             }
             let req = HeadsRequest::random(cfg.request_elems(), &mut rng);
-            let _ = pipe.send((handle.submit(req), Instant::now()));
+            let _ = pipe.send((handle.submit(req).into_inner(), Instant::now()));
         }
         drop(pipe);
         let collected = collector

@@ -58,6 +58,7 @@ fn cfg(method: &str, kv: Option<KvCacheConfig>) -> AttentionServerConfig {
         max_wait: Duration::from_millis(1),
         seed: 0,
         workers: None,
+        queue_depth: 0,
         kv,
     }
 }

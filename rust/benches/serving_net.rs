@@ -1,0 +1,189 @@
+//! Serving-throughput probe for the TCP front end: requests/s and
+//! per-step scheduler occupancy over the socket vs the in-process
+//! handle (`make net-bench`).
+//!
+//! Three rows per run, all submitting the same one-shot workload with a
+//! bounded in-flight window per lane:
+//!
+//! * **in-process** — `AttentionServerHandle::submit` straight into the
+//!   serve thread: the transport-free ceiling.
+//! * **net-1** — one `NetClient` connection: adds frame encode/decode,
+//!   two socket hops, and the per-connection reader/writer threads.
+//! * **net-4** — four concurrent connections, each its own round-robin
+//!   admission lane: continuous batching fills steps from multiple
+//!   lanes, so `step-occ` here is the multi-tenant packing the
+//!   in-process single-lane rows cannot show.
+//!
+//! The engine work is identical in every row (same shape, same seeds by
+//! lifetime batch index), so the req/s gap is pure transport overhead
+//! and the occupancy column shows what admission does with more lanes.
+//!
+//! Emits `reports/serving_net.csv`
+//! (`mode,method,clients,requests,req_s,p50_ms,p95_ms,steps,step_occupancy`).
+//!
+//! Flags: `--method M` (default skeinformer), `--requests N` (default
+//! 64), `--window W` in-flight per lane (default 8), `--full` (256
+//! requests).
+
+use skeinformer::bench_util::{ascii_table, write_csv};
+use skeinformer::cli::Args;
+use skeinformer::coordinator::attention_server::{self, AttentionServerConfig, HeadsRequest};
+use skeinformer::coordinator::net::{self, NetClient};
+use skeinformer::metrics::Percentiles;
+use skeinformer::rng::Rng;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+fn cfg(method: &str) -> AttentionServerConfig {
+    AttentionServerConfig {
+        method: method.to_string(),
+        d: 64,
+        heads: 4,
+        seq: 256,
+        head_dim: 32,
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        seed: 0,
+        workers: None,
+        queue_depth: 0,
+        kv: None,
+    }
+}
+
+struct Run {
+    wall: f64,
+    latency_ms: Vec<f64>,
+    steps: u64,
+    step_occupancy: f64,
+}
+
+fn run_in_process(c: &AttentionServerConfig, total: usize, window: usize) -> anyhow::Result<Run> {
+    let handle = attention_server::start(c.clone())?;
+    let mut rng = Rng::new(100);
+    let mut latency_ms = Vec::new();
+    let mut inflight = VecDeque::new();
+    let t0 = Instant::now();
+    for _ in 0..total {
+        let req = HeadsRequest::random(c.request_elems(), &mut rng);
+        inflight.push_back((handle.submit(req), Instant::now()));
+        if inflight.len() >= window {
+            let (rx, sent) = inflight.pop_front().expect("non-empty window");
+            rx.recv()?;
+            latency_ms.push(sent.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+    while let Some((rx, sent)) = inflight.pop_front() {
+        rx.recv()?;
+        latency_ms.push(sent.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = handle.shutdown()?;
+    Ok(Run { wall, latency_ms, steps: stats.steps, step_occupancy: stats.mean_step_occupancy })
+}
+
+fn run_net(
+    c: &AttentionServerConfig,
+    total: usize,
+    clients: usize,
+    window: usize,
+) -> anyhow::Result<Run> {
+    let handle = attention_server::start(c.clone())?;
+    let server = net::serve(&handle, "127.0.0.1:0")?;
+    let addr = server.local_addr();
+    let per = total / clients;
+    let elems = c.request_elems();
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..clients)
+        .map(|ci| {
+            std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+                let mut client = NetClient::connect(addr)?;
+                let mut rng = Rng::new(100 + ci as u64);
+                let mut latency_ms = Vec::new();
+                let mut inflight = VecDeque::new();
+                for _ in 0..per {
+                    let req = HeadsRequest::random(elems, &mut rng);
+                    inflight.push_back((client.submit_async(&req)?, Instant::now()));
+                    if inflight.len() >= window {
+                        let (id, sent) = inflight.pop_front().expect("non-empty window");
+                        client.wait_output(id)?;
+                        latency_ms.push(sent.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+                while let Some((id, sent)) = inflight.pop_front() {
+                    client.wait_output(id)?;
+                    latency_ms.push(sent.elapsed().as_secs_f64() * 1e3);
+                }
+                Ok(latency_ms)
+            })
+        })
+        .collect();
+    let mut latency_ms = Vec::new();
+    for j in joins {
+        latency_ms.extend(j.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    server.stop();
+    let stats = handle.shutdown()?;
+    Ok(Run { wall, latency_ms, steps: stats.steps, step_occupancy: stats.mean_step_occupancy })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let method = args.get_or("method", "skeinformer").to_string();
+    let total = if args.switch("full") { 256 } else { args.get_usize("requests", 64)? };
+    let window = args.get_usize("window", 8)?;
+    let c = cfg(&method);
+    eprintln!(
+        "serving-net bench: method={method} requests={total} window={window} \
+         shape B<={} H={} n={} p={}",
+        c.max_batch, c.heads, c.seq, c.head_dim
+    );
+
+    let mut table = Vec::new();
+    let mut csv = Vec::new();
+    for (mode, clients) in [("in-process", 0usize), ("net", 1), ("net", 4)] {
+        let run = if clients == 0 {
+            run_in_process(&c, total, window)?
+        } else {
+            run_net(&c, total, clients, window)?
+        };
+        let served = run.latency_ms.len();
+        let mut lat = Percentiles::default();
+        for &ms in &run.latency_ms {
+            lat.push(ms);
+        }
+        let req_s = served as f64 / run.wall;
+        let label =
+            if clients == 0 { mode.to_string() } else { format!("{mode}-{clients}") };
+        table.push(vec![
+            label.clone(),
+            format!("{served}"),
+            format!("{req_s:.1}"),
+            format!("{:.2}", lat.percentile(50.0)),
+            format!("{:.2}", lat.percentile(95.0)),
+            format!("{}", run.steps),
+            format!("{:.3}", run.step_occupancy),
+        ]);
+        csv.push(format!(
+            "{label},{method},{clients},{served},{req_s:.2},{:.3},{:.3},{},{:.4}",
+            lat.percentile(50.0),
+            lat.percentile(95.0),
+            run.steps,
+            run.step_occupancy
+        ));
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &["mode", "served", "req/s", "p50 ms", "p95 ms", "steps", "step-occ"],
+            &table
+        )
+    );
+    write_csv(
+        "reports/serving_net.csv",
+        "mode,method,clients,requests,req_s,p50_ms,p95_ms,steps,step_occupancy",
+        &csv,
+    )?;
+    eprintln!("rows written to reports/serving_net.csv");
+    Ok(())
+}

@@ -3,19 +3,55 @@
 //!
 //! Clients submit one sequence per request — `Arc<[f32]>` Q/K/V slabs of
 //! shape `[heads, seq, head_dim]` (plus an optional padding mask) — and a
-//! dedicated engine thread groups pending requests into a `B × H` grid,
-//! runs [`BatchedAttention`] across the worker pool, and answers each
-//! request with its sequence's output slab.  Dynamic batching policy
-//! matches the PJRT server: wait up to `max_wait` for a full batch, then
-//! flush whatever is pending.
+//! dedicated engine thread admits pending work into per-step `B × H`
+//! grids, runs [`BatchedAttention`] across the worker pool, and answers
+//! each request with its sequence's output slab.
 //!
-//! **Zero-copy request path.**  Batch formation wraps the pending
+//! **Continuous batching.**  The scheduler admits work per *step* rather
+//! than per collected batch: every queued unit — a one-shot request or a
+//! decode stream's pending query — counts one slot, and each step admits
+//! up to `max_batch` slots, so decode streams join and leave the
+//! executed grid between steps instead of waiting for a fixed batch to
+//! form.  Batch formation waits at most `max_wait` for extra slots, and
+//! never while a stream query is pending (a decode client is blocked on
+//! that reply, so making it sit out the formation deadline would put a
+//! ~`max_wait` floor under every decoded token).  Admission is
+//! round-robin across client connections
+//! ([`AttentionServerHandle::connection`]), so one chatty connection
+//! cannot starve the rest; ops from one connection stay in submission
+//! order.  Backpressure: the server inbox is a *bounded* channel
+//! ([`AttentionServerConfig::queue_depth`] slots), so a client that
+//! outruns the serve thread blocks in `submit` instead of growing an
+//! unbounded queue — the wire front end ([`super::net`]) converts that
+//! into TCP backpressure.
+//!
+//! **Determinism.**  Seeds never depend on grid placement: batch `i` of
+//! a server's lifetime computes with [`batch_seed`]`(cfg.seed, i)` (each
+//! head inside follows the engine's derivation rule), and a stream query
+//! computes head `h` at
+//! [`session_seed`](crate::attention::session_seed)`(`[`stream_seed`]`(cfg.seed,
+//! stream, h), epoch)` where the epoch counts the stream's appended
+//! tokens.  Head results are pure functions of (inputs, seed), so the
+//! continuous-batching scheduler — whatever mix of streams shares a step
+//! — serves bitwise the bytes the fixed-batch path served, and the TCP
+//! path is bitwise the in-process path (`rust/tests/serving_net.rs` pins
+//! both).
+//!
+//! **Typed rejections.**  Every malformed op answers
+//! `Err(`[`ServeError`]`)` through its [`ReplyRx`] (the wire path maps
+//! the same error to an explicit error frame): wrong slab/mask lengths,
+//! unknown streams, empty-stream queries, and cross-shape queries
+//! against square-only methods all name their failure instead of
+//! silently closing the reply channel.  Rejections count in
+//! [`AttentionServerStats::rejected`].
+//!
+//! **Zero-copy request path.**  Batch formation wraps the admitted
 //! requests' slabs in a slab-backed [`BatchTensor`]
 //! ([`BatchTensor::from_slabs`]) — `Arc` clones, no element copies — so
 //! the engine reads each client's memory in place (the optional padding
 //! mask rides the same `Arc<[f32]>` convention).  The `Arc` ownership
 //! rule: the client keeps its clone (requests are reusable), the server
-//! holds one only for the duration of the batch, and the slab is freed
+//! holds one only for the duration of the step, and the slab is freed
 //! when the last clone drops.  Slab contents must stay immutable after
 //! submission — `Arc<[f32]>` enforces this in the type.  The one
 //! remaining copy on the request path is the reply (the output slab is
@@ -33,25 +69,21 @@
 //! K/V from the chain ([`StreamChain::gather_head_into`] via
 //! [`BatchedAttention::run_gather_into`]) instead of reading the client
 //! slab, which is bitwise the same bytes by the cache's verified-dedupe
-//! contract.  The chain closes when its batch completes; sealed blocks
-//! stay index-retained for future replays until capacity evicts them.
-//!
-//! **Invariants** (checked per request at batch formation; violators are
-//! rejected and their reply channel closed): each of `q`/`k`/`v` holds
-//! exactly `heads * seq * head_dim` elements, and `mask`, when present,
-//! holds `seq`.
-//!
-//! Batch `i` of a server's lifetime computes with [`batch_seed`]`(cfg.seed,
-//! i)`, and each head inside a batch follows the engine's derivation rule,
-//! so a given arrival order reproduces exactly while distinct batches get
-//! disjoint per-head streams.
+//! contract.  The chain closes when its batch completes; under a pure
+//! LRU policy sealed blocks stay index-retained for future replays until
+//! capacity evicts them, while a sliding-window config releases a batch
+//! chain's non-shared blocks immediately (a burst of one-shots must not
+//! pin the pool against windowed streams — see
+//! [`KvCache::close_stream`]).
 //!
 //! **Streaming decode.**  Alongside the batched one-shot path, a client
 //! can [`open_stream`](AttentionServerHandle::open_stream) a stateful
 //! decode stream whose [`append`](StreamHandle::append) /
 //! [`query`](StreamHandle::query) ops ride the same channel — and the
 //! same zero-copy `Arc<[f32]>` slab convention — as batched requests,
-//! preserving per-stream op order.  The stream request path:
+//! preserving per-stream op order (ops that arrive while a query is in
+//! flight are deferred and applied, in order, when it completes).  The
+//! stream request path:
 //!
 //! 1. **Open** creates the stream's server-side KV state: with the KV
 //!    cache off ([`AttentionServerConfig::kv`]` = None`), one
@@ -69,13 +101,12 @@
 //!    `[heads, tokens, head_dim]` chunk in one op — one channel message
 //!    and per-*block* cache bookkeeping instead of per-token, bitwise
 //!    identical to the equivalent append sequence.
-//! 3. **Query** fans out per head across the persistent worker pool:
-//!    each head answers from its session, or — cache-backed — gathers
-//!    its K/V view from the block chain and recomputes at the epoch seed
-//!    [`session_seed`](crate::attention::session_seed)`(`[`stream_seed`]`(cfg.seed,
-//!    stream, h), epoch)`, bitwise what the equivalent session produces.
-//!    Head results are a pure function of grid position, so the fan-out
-//!    is worker-count invariant.
+//! 3. **Query** joins the next step's grid and fans out per head across
+//!    the persistent worker pool: each head answers from its session, or
+//!    — cache-backed — gathers its K/V view from the block chain and
+//!    recomputes at the epoch seed, bitwise what the equivalent session
+//!    produces.  Multiple streams' queries admitted into one step
+//!    compute in the same fan-out, one task per (stream, head).
 //!
 //! Serving with the cache enabled is **bitwise identical** to serving
 //! without it at the same seeds (`rust/tests/kv_cache.rs` pins this per
@@ -103,6 +134,7 @@
 //!     max_wait: Duration::from_millis(1),
 //!     seed: 0,
 //!     workers: None,
+//!     queue_depth: 0,
 //!     kv: None,
 //! };
 //! let handle = attention_server::start(cfg.clone()).unwrap();
@@ -120,15 +152,23 @@ use crate::pool;
 use crate::rng::Rng;
 use crate::tensor::{with_default_plan, BatchTensor, MatmulPlan, Matrix};
 use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Resident-block cap applied when `--kv-batch-dedupe` is set without an
-/// explicit `--kv-blocks`: batch-chain retention has no window-reclaim
-/// path, so it must be bounded by LRU capacity pressure.  4096 blocks at
-/// the default 16-token block size ≈ 64k cached tokens.
+/// explicit `--kv-blocks`: batch-chain retention under a pure LRU policy
+/// has no window-reclaim path, so it must be bounded by capacity
+/// pressure.  4096 blocks at the default 16-token block size ≈ 64k
+/// cached tokens.
 pub const DEFAULT_DEDUPE_CAPACITY_BLOCKS: usize = 4096;
+
+/// Server inbox depth used when [`AttentionServerConfig::queue_depth`]
+/// is 0: enough to keep a busy step pipeline fed, small enough that a
+/// stalled serve thread pushes back on clients within ~one step's worth
+/// of traffic rather than buffering slabs without bound.
+pub const DEFAULT_QUEUE_DEPTH: usize = 1024;
 
 /// Engine seed for batch `i` of a server's lifetime.  The engine XORs
 /// small head indices into its seed, so deriving batch seeds by XOR too
@@ -145,7 +185,161 @@ pub fn stream_seed(base: u64, stream: u64, head: u64) -> u64 {
     crate::rng::mix(crate::rng::mix(base, stream), head)
 }
 
-/// Server configuration: workload shape + batching policy.
+/// Why the server rejected (or failed to answer) a request or stream op.
+///
+/// Every rejection reaches the client as `Err(ServeError)` through its
+/// [`ReplyRx`] — the reply channel is never silently dropped — and the
+/// wire front end maps [`code`](Self::code) into an explicit error
+/// frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// A payload slab or mask had the wrong length for the server shape.
+    BadShape {
+        /// Which payload failed the length check.
+        what: &'static str,
+    },
+    /// The op named a stream id with no server-side state (never opened,
+    /// already closed, or displaced by a re-open).
+    UnknownStream(u64),
+    /// A query against a stream with no appended tokens.
+    EmptyStream(u64),
+    /// A `rows != len` query against a method that only answers square
+    /// (full-state) queries.
+    CrossShapeUnsupported {
+        /// Query rows requested.
+        rows: usize,
+        /// Tokens the stream holds.
+        len: usize,
+    },
+    /// The server shut down (or the op was sent after shutdown) before
+    /// this op was answered.
+    Shutdown,
+    /// The reply channel disconnected without a verdict — only seen if
+    /// the serve thread died abnormally.
+    Disconnected,
+}
+
+impl ServeError {
+    /// Stable one-byte code for the wire error frame (see
+    /// [`super::net`]).  0 is reserved for wire-level (framing) errors.
+    pub fn code(&self) -> u8 {
+        match self {
+            ServeError::BadShape { .. } => 1,
+            ServeError::UnknownStream(_) => 2,
+            ServeError::EmptyStream(_) => 3,
+            ServeError::CrossShapeUnsupported { .. } => 4,
+            ServeError::Shutdown => 5,
+            ServeError::Disconnected => 6,
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::BadShape { what } => write!(f, "malformed payload: bad {what} length"),
+            ServeError::UnknownStream(id) => write!(f, "unknown stream {id}"),
+            ServeError::EmptyStream(id) => write!(f, "query on empty stream {id}"),
+            ServeError::CrossShapeUnsupported { rows, len } => write!(
+                f,
+                "method answers square queries only ({rows} query rows vs {len} stream tokens)"
+            ),
+            ServeError::Shutdown => write!(f, "server shut down before answering"),
+            ServeError::Disconnected => write!(f, "reply channel disconnected"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// The server's side of one reply: a single-shot callback fired with the
+/// output slab or a typed [`ServeError`].  Dropping an unfired `ReplyTo`
+/// built by [`channel`](Self::channel) (e.g. the op died in a channel on
+/// shutdown) fires `Err(ServeError::Shutdown)` so the client always gets
+/// a verdict.
+pub struct ReplyTo {
+    f: Option<Box<dyn FnOnce(Result<Vec<f32>, ServeError>) + Send>>,
+    /// Fire `Err(Shutdown)` on unfired drop.  Error sinks (wire-path
+    /// append/prefill error reporters) set this false: on success they
+    /// are dropped unfired by design.
+    reply_expected: bool,
+}
+
+impl ReplyTo {
+    /// An in-process reply pair: the server fires the `ReplyTo`, the
+    /// client blocks on the [`ReplyRx`].
+    pub fn channel() -> (ReplyTo, ReplyRx) {
+        let (tx, rx) = mpsc::channel();
+        (
+            ReplyTo {
+                f: Some(Box::new(move |r| {
+                    let _ = tx.send(r);
+                })),
+                reply_expected: true,
+            },
+            ReplyRx(rx),
+        )
+    }
+
+    /// A reply that runs `f` with the verdict (the wire path encodes a
+    /// frame here).  Unfired drop still reports `Err(Shutdown)` to `f`.
+    pub(crate) fn from_fn(f: impl FnOnce(Result<Vec<f32>, ServeError>) + Send + 'static) -> Self {
+        ReplyTo { f: Some(Box::new(f)), reply_expected: true }
+    }
+
+    /// An error-only sink: `f` runs if the op *fails*; success (and
+    /// shutdown-drop) are silent.  Used for ops with no success payload
+    /// (append/prefill) on the wire path.
+    pub(crate) fn error_sink(
+        f: impl FnOnce(Result<Vec<f32>, ServeError>) + Send + 'static,
+    ) -> Self {
+        ReplyTo { f: Some(Box::new(f)), reply_expected: false }
+    }
+
+    /// Fire the reply (single-shot; consumes the handle).
+    pub(crate) fn send(mut self, r: Result<Vec<f32>, ServeError>) {
+        if let Some(f) = self.f.take() {
+            f(r);
+        }
+    }
+}
+
+impl Drop for ReplyTo {
+    fn drop(&mut self) {
+        if self.reply_expected {
+            if let Some(f) = self.f.take() {
+                f(Err(ServeError::Shutdown));
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for ReplyTo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReplyTo").field("fired", &self.f.is_none()).finish()
+    }
+}
+
+/// Client side of one reply: yields the output slab or the typed
+/// rejection.  [`recv`](Self::recv) never panics — a dead server
+/// surfaces as `Err(ServeError::Shutdown)` (fired by the op's
+/// [`ReplyTo`] drop) or `Err(ServeError::Disconnected)`.
+pub struct ReplyRx(mpsc::Receiver<Result<Vec<f32>, ServeError>>);
+
+impl ReplyRx {
+    /// Block for the verdict.
+    pub fn recv(&self) -> Result<Vec<f32>, ServeError> {
+        self.0.recv().unwrap_or(Err(ServeError::Disconnected))
+    }
+
+    /// The underlying receiver, for `select`-style loops that want the
+    /// raw channel (e.g. the serving example's latency collector).
+    pub fn into_inner(self) -> mpsc::Receiver<Result<Vec<f32>, ServeError>> {
+        self.0
+    }
+}
+
+/// Server configuration: workload shape + scheduling policy.
 #[derive(Clone, Debug)]
 pub struct AttentionServerConfig {
     /// Registry name of the attention method (see `attention::by_name`).
@@ -158,14 +352,20 @@ pub struct AttentionServerConfig {
     pub seq: usize,
     /// Per-head feature dimension p.
     pub head_dim: usize,
-    /// Max sequences per executed batch.
+    /// Max admitted slots per scheduler step (one-shot requests and
+    /// stream queries each count one slot).
     pub max_batch: usize,
-    /// Max time to wait for a full batch before flushing.
+    /// Max time to wait for extra one-shot slots before running a
+    /// partial step (stream queries never wait).
     pub max_wait: Duration,
     /// Base RNG seed (batch `i` computes with [`batch_seed`]`(seed, i)`).
     pub seed: u64,
     /// Worker cap for head dispatch (None = pool default).
     pub workers: Option<usize>,
+    /// Server inbox depth in messages — the backpressure bound on
+    /// in-flight work (clients block in `submit` once it fills).
+    /// 0 = [`DEFAULT_QUEUE_DEPTH`].
+    pub queue_depth: usize,
     /// Paged KV cache for decode streams: block-shared storage with
     /// prefix dedup and (optionally) sliding-window eviction.  With
     /// [`KvCacheConfig::batch_dedupe`] set, one-shot batched requests
@@ -184,7 +384,8 @@ impl AttentionServerConfig {
     /// Build from CLI flags — the one place the flag names and defaults
     /// live (`skein serve --engine cpu` and the serving example share it):
     /// `--method --d --heads --seq --head-dim --batch --max-wait-ms
-    /// --seed --workers` (workers 0 = pool default), plus the KV-cache
+    /// --seed --workers --queue-depth` (workers 0 = pool default,
+    /// queue-depth 0 = [`DEFAULT_QUEUE_DEPTH`]), plus the KV-cache
     /// flags `--kv-blocks N` (pool capacity in blocks; 0 with no
     /// `--kv-window` / `--kv-batch-dedupe` = cache disabled),
     /// `--kv-window W` (sliding window in tokens; 0 = keep full
@@ -231,6 +432,7 @@ impl AttentionServerConfig {
             max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 4)?),
             seed: args.get_u64("seed", 0)?,
             workers: if workers == 0 { None } else { Some(workers) },
+            queue_depth: args.get_usize("queue-depth", 0)?,
             kv,
         })
     }
@@ -285,8 +487,9 @@ impl HeadsRequest {
 
 struct Pending {
     req: HeadsRequest,
-    reply: mpsc::Sender<Vec<f32>>,
+    reply: ReplyTo,
     enqueued: Instant,
+    conn: u64,
 }
 
 /// One operation on a decode stream.  Payloads ride the same zero-copy
@@ -310,7 +513,7 @@ pub enum StreamOp {
     Prefill { k: Arc<[f32]>, v: Arc<[f32]>, tokens: usize },
     /// Query `rows` query rows per head: `q` is `[heads, rows, head_dim]`;
     /// the reply is the `[heads, rows, head_dim]` output slab.
-    Query { q: Arc<[f32]>, rows: usize, reply: mpsc::Sender<Vec<f32>> },
+    Query { q: Arc<[f32]>, rows: usize, reply: ReplyTo },
     /// Drop the stream's state.
     Close,
 }
@@ -318,44 +521,135 @@ pub enum StreamOp {
 /// A message to the serve loop: a batched request, a stream operation,
 /// or the explicit shutdown sentinel (needed because cloned stream
 /// senders may outlive the handle — channel disconnect alone can no
-/// longer signal shutdown).
+/// longer signal shutdown).  `err` is an optional error reporter for
+/// ops with no success reply of their own (wire-path append/prefill).
 enum ServerMsg {
     Batch(Pending),
-    Stream { stream: u64, op: StreamOp },
+    Stream { conn: u64, stream: u64, op: StreamOp, err: Option<ReplyTo> },
     Shutdown,
+}
+
+/// State shared by the handle, its connections, and stream handles.
+struct HandleShared {
+    tx: mpsc::SyncSender<ServerMsg>,
+    next_stream: AtomicU64,
+    next_conn: AtomicU64,
+    cfg: AttentionServerConfig,
+}
+
+impl HandleShared {
+    /// Send with backpressure: a full inbox blocks the caller; a dead
+    /// server drops the message, firing each carried [`ReplyTo`] with
+    /// `Err(Shutdown)` so clients still get verdicts.
+    fn send(&self, msg: ServerMsg) {
+        let _ = self.tx.send(msg);
+    }
 }
 
 /// Client handle to a running attention server.
 pub struct AttentionServerHandle {
-    tx: mpsc::Sender<ServerMsg>,
-    next_stream: AtomicU64,
-    heads: usize,
-    head_dim: usize,
+    shared: Arc<HandleShared>,
     join: Option<std::thread::JoinHandle<AttentionServerStats>>,
+}
+
+/// One client connection's sender: ops sent through one connection stay
+/// in submission order and share one round-robin admission lane, so a
+/// chatty connection cannot starve the others.  The handle's own
+/// [`submit`](AttentionServerHandle::submit) /
+/// [`open_stream`](AttentionServerHandle::open_stream) ride the
+/// implicit connection 0.
+#[derive(Clone)]
+pub struct ServerConnection {
+    shared: Arc<HandleShared>,
+    conn: u64,
+}
+
+impl ServerConnection {
+    /// Submit a request; returns the reply receiver.
+    pub fn submit(&self, req: HeadsRequest) -> ReplyRx {
+        let (reply, rx) = ReplyTo::channel();
+        self.submit_with(req, reply);
+        rx
+    }
+
+    /// Submit with an explicit reply target (the wire path passes a
+    /// frame-encoding [`ReplyTo`] here).
+    pub(crate) fn submit_with(&self, req: HeadsRequest, reply: ReplyTo) {
+        self.shared.send(ServerMsg::Batch(Pending {
+            req,
+            reply,
+            enqueued: Instant::now(),
+            conn: self.conn,
+        }));
+    }
+
+    /// Open a decode stream on this connection and return its handle.
+    pub fn open_stream(&self, repilot_stride: usize) -> StreamHandle {
+        let id = self.open_stream_id(repilot_stride);
+        StreamHandle { id, conn: self.conn, shared: Arc::clone(&self.shared) }
+    }
+
+    /// Open a decode stream and return only its id (the wire path keeps
+    /// ids, not handles).
+    pub(crate) fn open_stream_id(&self, repilot_stride: usize) -> u64 {
+        let id = self.shared.next_stream.fetch_add(1, Ordering::Relaxed);
+        self.stream_op(id, StreamOp::Open { repilot_stride }, None);
+        id
+    }
+
+    /// Send one raw stream op, with an optional error reporter for ops
+    /// that have no success reply of their own.
+    pub(crate) fn stream_op(&self, stream: u64, op: StreamOp, err: Option<ReplyTo>) {
+        self.shared.send(ServerMsg::Stream { conn: self.conn, stream, op, err });
+    }
+
+    /// A sibling connection with its own fairness lane — the TCP accept
+    /// loop mints one per socket without holding the server handle.
+    pub(crate) fn sibling(&self) -> ServerConnection {
+        ServerConnection {
+            shared: Arc::clone(&self.shared),
+            conn: self.shared.next_conn.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// The server's configuration (the wire handshake advertises the
+    /// shape from here).
+    pub(crate) fn cfg(&self) -> &AttentionServerConfig {
+        &self.shared.cfg
+    }
 }
 
 /// Client handle to one decode stream on a running server.  Ops sent
 /// through one handle arrive in order (the channel preserves per-sender
-/// order), so `append` → `query` sequences behave like local sessions.
+/// order) and apply in order even when pipelined past an in-flight
+/// query, so `append` → `query` sequences behave like local sessions.
 pub struct StreamHandle {
     id: u64,
-    heads: usize,
-    head_dim: usize,
-    tx: mpsc::Sender<ServerMsg>,
+    conn: u64,
+    shared: Arc<HandleShared>,
 }
 
 impl StreamHandle {
+    /// The server-side stream id (what the wire protocol carries).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
     /// Elements per `[heads, head_dim]` token slab.
     pub fn token_elems(&self) -> usize {
-        self.heads * self.head_dim
+        self.shared.cfg.heads * self.shared.cfg.head_dim
+    }
+
+    fn conn(&self) -> ServerConnection {
+        ServerConnection { shared: Arc::clone(&self.shared), conn: self.conn }
     }
 
     /// Append one token (each slab `[heads, head_dim]`, read in place).
+    /// A malformed append is rejected server-side (counted in
+    /// [`AttentionServerStats::rejected`]); the next query surfaces the
+    /// stream's true state.
     pub fn append(&self, k: Arc<[f32]>, v: Arc<[f32]>) {
-        let _ = self.tx.send(ServerMsg::Stream {
-            stream: self.id,
-            op: StreamOp::Append { k, v },
-        });
+        self.conn().stream_op(self.id, StreamOp::Append { k, v }, None);
     }
 
     /// Bulk-append `tokens` tokens in one op (each slab
@@ -363,28 +657,23 @@ impl StreamHandle {
     /// path for ingesting a whole prompt.  Bitwise equivalent to
     /// [`append`](Self::append)ing each token's rows in order.
     pub fn prefill(&self, k: Arc<[f32]>, v: Arc<[f32]>, tokens: usize) {
-        let _ = self.tx.send(ServerMsg::Stream {
-            stream: self.id,
-            op: StreamOp::Prefill { k, v, tokens },
-        });
+        self.conn().stream_op(self.id, StreamOp::Prefill { k, v, tokens }, None);
     }
 
     /// Query `rows` query rows per head (`q` is `[heads, rows, head_dim]`,
-    /// read in place); returns a receiver for the output slab.  The
-    /// receiver errors if the op is rejected (bad shape, unknown stream,
-    /// empty stream, or a cross-shape query against a square-only method).
-    pub fn query(&self, q: Arc<[f32]>, rows: usize) -> mpsc::Receiver<Vec<f32>> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let _ = self.tx.send(ServerMsg::Stream {
-            stream: self.id,
-            op: StreamOp::Query { q, rows, reply: reply_tx },
-        });
-        reply_rx
+    /// read in place); returns the reply receiver.  Rejections (bad
+    /// shape, unknown stream, empty stream, or a cross-shape query
+    /// against a square-only method) arrive as typed
+    /// `Err(`[`ServeError`]`)` values.
+    pub fn query(&self, q: Arc<[f32]>, rows: usize) -> ReplyRx {
+        let (reply, rx) = ReplyTo::channel();
+        self.conn().stream_op(self.id, StreamOp::Query { q, rows, reply }, None);
+        rx
     }
 
     /// Drop the stream's server-side state.
     pub fn close(self) {
-        let _ = self.tx.send(ServerMsg::Stream { stream: self.id, op: StreamOp::Close });
+        self.conn().stream_op(self.id, StreamOp::Close, None);
     }
 }
 
@@ -393,8 +682,13 @@ impl StreamHandle {
 pub struct AttentionServerStats {
     pub requests: u64,
     pub batches: u64,
-    /// Requests or stream ops dropped for malformed payloads (wrong
-    /// slab/mask length, unknown stream, invalid query shape).
+    /// Scheduler steps executed.  Each step admits up to `max_batch`
+    /// slots — one-shot requests and stream queries combined — so with
+    /// decode streams in play `steps >= batches`.
+    pub steps: u64,
+    /// Requests or stream ops rejected for malformed payloads (wrong
+    /// slab/mask length, unknown stream, invalid query shape).  Every
+    /// rejection also answers its client with a typed [`ServeError`].
     pub rejected: u64,
     /// Stream tokens appended across all streams.
     pub stream_appends: u64,
@@ -406,8 +700,9 @@ pub struct AttentionServerStats {
     /// KV cache: sealed blocks newly inserted into the index.
     pub kv_alloc_blocks: u64,
     /// KV cache: blocks evicted from the prefix index — under capacity
-    /// pressure, or as sliding-window drops when no capacity bound is
-    /// configured.
+    /// pressure, as sliding-window drops when no capacity bound is
+    /// configured, or as batch-chain releases at request completion
+    /// under a window policy.
     pub kv_evicted_blocks: u64,
     /// KV cache: distinct blocks resident at shutdown.
     pub kv_resident_blocks: u64,
@@ -415,42 +710,60 @@ pub struct AttentionServerStats {
     /// ([`KvCache::resident_kv_bytes`] — the one place the block-geometry
     /// byte accounting lives).
     pub kv_resident_bytes: u64,
-    /// Mean queueing delay (ms) — time from submit to batch formation.
+    /// Mean queueing delay (ms) — time from submit to batch execution.
     pub mean_queue_ms: f64,
-    /// Mean executed batch occupancy (filled slots / max_batch).
+    /// Mean executed one-shot batch occupancy (filled slots / max_batch,
+    /// over executed batches).
     pub mean_occupancy: f64,
+    /// Mean per-step admission occupancy (admitted slots / max_batch,
+    /// over all executed steps; one-shots and stream queries each count
+    /// one slot).
+    pub mean_step_occupancy: f64,
     /// Mean engine time per executed batch (ms).
     pub mean_batch_ms: f64,
 }
 
 impl AttentionServerHandle {
-    /// Submit a request; returns a receiver for the output slab.  The
-    /// receiver errors if the request is rejected (malformed payload).
-    pub fn submit(&self, req: HeadsRequest) -> mpsc::Receiver<Vec<f32>> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let _ = self.tx.send(ServerMsg::Batch(Pending {
-            req,
-            reply: reply_tx,
-            enqueued: Instant::now(),
-        }));
-        reply_rx
+    /// The configuration the server was started with (the wire front
+    /// end advertises the shape from here).
+    pub fn config(&self) -> &AttentionServerConfig {
+        &self.shared.cfg
+    }
+
+    /// A new client connection: its ops get their own round-robin
+    /// admission lane.  The wire front end opens one per TCP socket.
+    pub fn connection(&self) -> ServerConnection {
+        ServerConnection {
+            shared: Arc::clone(&self.shared),
+            conn: self.shared.next_conn.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// The handle's implicit connection 0 (in-process convenience).
+    fn conn0(&self) -> ServerConnection {
+        ServerConnection { shared: Arc::clone(&self.shared), conn: 0 }
+    }
+
+    /// Submit a request on the implicit connection; returns the reply
+    /// receiver.  Rejections arrive as typed `Err(`[`ServeError`]`)`.
+    pub fn submit(&self, req: HeadsRequest) -> ReplyRx {
+        self.conn0().submit(req)
     }
 
     /// Open a streaming decode session set (one [`AttentionSession`] per
-    /// configured head, server-side) and return its handle.
+    /// configured head, server-side) on the implicit connection and
+    /// return its handle.
     pub fn open_stream(&self, repilot_stride: usize) -> StreamHandle {
-        let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
-        let _ = self.tx.send(ServerMsg::Stream { stream: id, op: StreamOp::Open { repilot_stride } });
-        StreamHandle { id, heads: self.heads, head_dim: self.head_dim, tx: self.tx.clone() }
+        self.conn0().open_stream(repilot_stride)
     }
 
-    /// Stop the server and collect stats.  Live [`StreamHandle`]s do not
-    /// block shutdown (an explicit sentinel ends the serve loop); their
-    /// later ops simply error out client-side.  Ops already queued ahead
-    /// of the shutdown are still processed.
+    /// Stop the server and collect stats.  Live [`StreamHandle`]s and
+    /// [`ServerConnection`]s do not block shutdown (an explicit sentinel
+    /// ends the serve loop); their later ops answer
+    /// `Err(ServeError::Shutdown)` client-side.  Ops already queued
+    /// ahead of the shutdown are still processed.
     pub fn shutdown(mut self) -> Result<AttentionServerStats> {
-        let _ = self.tx.send(ServerMsg::Shutdown);
-        drop(self.tx);
+        let _ = self.shared.tx.send(ServerMsg::Shutdown);
         self.join
             .take()
             .expect("server already joined")
@@ -469,17 +782,16 @@ pub fn start(cfg: AttentionServerConfig) -> Result<AttentionServerHandle> {
         cfg.method
     );
     anyhow::ensure!(cfg.max_batch > 0, "max_batch must be positive");
-    let (tx, rx) = mpsc::channel::<ServerMsg>();
-    let heads = cfg.heads;
-    let head_dim = cfg.head_dim;
-    let join = std::thread::spawn(move || serve_loop(cfg, rx));
-    Ok(AttentionServerHandle {
+    let depth = if cfg.queue_depth == 0 { DEFAULT_QUEUE_DEPTH } else { cfg.queue_depth };
+    let (tx, rx) = mpsc::sync_channel::<ServerMsg>(depth);
+    let shared = Arc::new(HandleShared {
         tx,
         next_stream: AtomicU64::new(0),
-        heads,
-        head_dim,
-        join: Some(join),
-    })
+        next_conn: AtomicU64::new(1),
+        cfg: cfg.clone(),
+    });
+    let join = std::thread::spawn(move || serve_loop(cfg, rx));
+    Ok(AttentionServerHandle { shared, join: Some(join) })
 }
 
 /// Per-stream server-side state.  At least one of the two KV holders is
@@ -499,6 +811,13 @@ struct StreamState {
     /// Effective re-pilot stride (clamped ≥ 1) — the epoch basis for
     /// cache-backed queries.
     repilot_stride: usize,
+    /// The connection that opened the stream (its admission lane).
+    conn: u64,
+    /// A query is admitted or executing: later ops wait in `deferred`
+    /// so per-stream order holds even under pipelined clients.
+    blocked: bool,
+    /// Ops that arrived while `blocked`, applied in order on unblock.
+    deferred: VecDeque<(StreamOp, Option<ReplyTo>)>,
 }
 
 impl StreamState {
@@ -512,463 +831,750 @@ impl StreamState {
     }
 }
 
+/// A unit of admitted work: one slot in a scheduler step.
+enum Work {
+    OneShot(Pending),
+    Query(QueryTask),
+}
+
+/// A stream query waiting for (or in) a step.
+struct QueryTask {
+    stream: u64,
+    q: Arc<[f32]>,
+    rows: usize,
+    reply: ReplyTo,
+}
+
+/// Round-robin admission across connections: each connection keeps a
+/// FIFO lane, and [`admit`](Self::admit) takes one slot per lane in
+/// rotation until the step is full.  Per-connection order is preserved;
+/// no lane can starve another.
+#[derive(Default)]
+struct Admission {
+    queues: HashMap<u64, VecDeque<Work>>,
+    /// Rotation of connections with non-empty lanes.
+    rr: VecDeque<u64>,
+    ready: usize,
+    queries: usize,
+}
+
+impl Admission {
+    /// Queued slots awaiting admission.
+    fn ready(&self) -> usize {
+        self.ready
+    }
+
+    /// Queued stream queries (each has a client blocked on its reply —
+    /// their presence short-circuits batch-formation waits).
+    fn queries(&self) -> usize {
+        self.queries
+    }
+
+    fn push(&mut self, conn: u64, work: Work) {
+        if matches!(work, Work::Query(_)) {
+            self.queries += 1;
+        }
+        let lane = self.queues.entry(conn).or_default();
+        if lane.is_empty() {
+            self.rr.push_back(conn);
+        }
+        lane.push_back(work);
+        self.ready += 1;
+    }
+
+    /// Take up to `max` slots round-robin across lanes.
+    fn admit(&mut self, max: usize) -> Vec<Work> {
+        let mut out = Vec::new();
+        while out.len() < max {
+            let Some(conn) = self.rr.pop_front() else { break };
+            let lane = self.queues.get_mut(&conn).expect("rotated lane exists");
+            let work = lane.pop_front().expect("rotated lane is non-empty");
+            if matches!(work, Work::Query(_)) {
+                self.queries -= 1;
+            }
+            self.ready -= 1;
+            if lane.is_empty() {
+                self.queues.remove(&conn);
+            } else {
+                self.rr.push_back(conn);
+            }
+            out.push(work);
+        }
+        out
+    }
+}
+
+/// Running sums behind the mean stats.
+#[derive(Default)]
+struct Sums {
+    queue_ms: f64,
+    occupancy: f64,
+    step_occupancy: f64,
+    batch_ms: f64,
+}
+
+/// The serve thread's state: engine, stream table, admission queue, and
+/// stats.  One instance lives for the thread's lifetime.
+struct Serve<'a> {
+    cfg: &'a AttentionServerConfig,
+    method: Box<dyn attention::AttentionMethod>,
+    engine: BatchedAttention,
+    kv_cache: Option<KvCache>,
+    streams: HashMap<u64, StreamState>,
+    adm: Admission,
+    stats: AttentionServerStats,
+    sums: Sums,
+    out_cache: Option<BatchTensor>,
+}
+
 fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<ServerMsg>) -> AttentionServerStats {
     let method = attention::by_name(&cfg.method, cfg.d).expect("method validated in start()");
     let mut engine = BatchedAttention::new();
     if let Some(w) = cfg.workers {
         engine = engine.with_workers(w);
     }
-    let elems = cfg.request_elems();
+    let kv_cache = cfg.kv.map(|kv| KvCache::new(kv, cfg.heads * cfg.head_dim));
+    let mut srv = Serve {
+        cfg: &cfg,
+        method,
+        engine,
+        kv_cache,
+        streams: HashMap::new(),
+        adm: Admission::default(),
+        stats: AttentionServerStats::default(),
+        sums: Sums::default(),
+        out_cache: None,
+    };
 
-    let mut stats = AttentionServerStats::default();
-    let mut queue_ms_sum = 0.0f64;
-    let mut occupancy_sum = 0.0f64;
-    let mut batch_ms_sum = 0.0f64;
-    let mut streams: std::collections::HashMap<u64, StreamState> = Default::default();
-    let mut kv_cache: Option<KvCache> = cfg.kv.map(|kv| KvCache::new(kv, cfg.heads * cfg.head_dim));
-    let mut out_cache: Option<BatchTensor> = None;
-
+    let mut shutting_down = false;
     loop {
-        let Some(msgs) = collect_msgs(&rx, cfg.max_batch, cfg.max_wait) else {
-            break; // all senders dropped -> shutdown
-        };
-        // stream ops apply immediately, in arrival order; batched
-        // requests accumulate and flush as engine grids below
-        let mut shutting_down = false;
-        let mut pending = Vec::new();
-        for msg in msgs {
-            match msg {
-                ServerMsg::Batch(p) => pending.push(p),
-                ServerMsg::Stream { stream, op } => handle_stream_op(
-                    &cfg,
-                    method.as_ref(),
-                    &mut kv_cache,
-                    &mut streams,
-                    stream,
-                    op,
-                    &mut stats,
-                ),
-                ServerMsg::Shutdown => shutting_down = true,
+        if !shutting_down {
+            // nothing admitted and nothing queued: block for traffic
+            if srv.adm.ready() == 0 {
+                match rx.recv() {
+                    Ok(msg) => shutting_down = srv.ingest(msg),
+                    Err(_) => shutting_down = true, // all senders gone
+                }
+            }
+            // drain whatever else is already queued without blocking
+            while !shutting_down {
+                match rx.try_recv() {
+                    Ok(msg) => shutting_down = srv.ingest(msg),
+                    Err(_) => break,
+                }
+            }
+            // batch formation: wait for extra slots only when no stream
+            // query is pending (a decode client is blocked on that
+            // reply) and the step is not yet full
+            if !shutting_down
+                && srv.adm.queries() == 0
+                && srv.adm.ready() > 0
+                && srv.adm.ready() < cfg.max_batch
+            {
+                let deadline = Instant::now() + cfg.max_wait;
+                while srv.adm.queries() == 0 && srv.adm.ready() < cfg.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(msg) => {
+                            if srv.ingest(msg) {
+                                shutting_down = true;
+                                break;
+                            }
+                        }
+                        Err(_) => break, // timeout or disconnect: run what we have
+                    }
+                }
             }
         }
-        if pending.is_empty() {
-            if shutting_down {
-                break;
-            }
+        if srv.adm.ready() > 0 {
+            srv.run_step();
             continue;
-        }
-
-        // drop malformed payloads (their reply sender closes -> client
-        // recv errors); keep the rest
-        pending.retain(|p| {
-            let r = &p.req;
-            let ok = r.q.len() == elems
-                && r.k.len() == elems
-                && r.v.len() == elems
-                && r.mask.as_ref().is_none_or(|m| m.len() == cfg.seq);
-            if !ok {
-                stats.rejected += 1;
-            }
-            ok
-        });
-        if pending.is_empty() {
-            // the sentinel must survive an all-malformed drain too
-            if shutting_down {
-                break;
-            }
-            continue;
-        }
-
-        // execute in max_batch-sized chunks (the urgent stream-query
-        // drain in collect_msgs may have pulled in more than one batch's
-        // worth), packing each grid zero-copy: the requests' slabs are
-        // wrapped in place (Arc clones, no element copies)
-        for chunk in pending.chunks(cfg.max_batch) {
-            let slab_views = |get: fn(&HeadsRequest) -> &Arc<[f32]>| {
-                BatchTensor::from_slabs(
-                    cfg.heads,
-                    cfg.seq,
-                    cfg.head_dim,
-                    chunk.iter().map(|p| Arc::clone(get(&p.req))).collect(),
-                )
-            };
-            let q = slab_views(|r| &r.q);
-            // batch-slab dedupe: ingest each request's K/V through the
-            // shared cache (chunked, per-request chain) so a resubmitted
-            // or prompt-shared request materialises its head views from
-            // shared blocks; otherwise wrap the client slabs in place
-            let chains: Option<Vec<StreamChain>> = match kv_cache.as_mut() {
-                Some(cache) if cache.cfg().batch_dedupe => Some(
-                    chunk
-                        .iter()
-                        .map(|p| {
-                            let mut chain = cache.open_batch_stream();
-                            cache.append_chunk(
-                                &mut chain,
-                                &p.req.k,
-                                &p.req.v,
-                                cfg.seq,
-                                cfg.head_dim,
-                            );
-                            chain
-                        })
-                        .collect(),
-                ),
-                _ => None,
-            };
-            let kv = chains
-                .is_none()
-                .then(|| (slab_views(|r| &r.k), slab_views(|r| &r.v)));
-            let any_mask = chunk.iter().any(|p| p.req.mask.is_some());
-            let mut masks = if any_mask {
-                Some(Matrix::full(chunk.len(), cfg.seq, 1.0))
-            } else {
-                None
-            };
-            for (b, p) in chunk.iter().enumerate() {
-                if let (Some(mm), Some(req_mask)) = (masks.as_mut(), p.req.mask.as_ref()) {
-                    mm.set_row(b, &req_mask[..]);
-                }
-                queue_ms_sum += p.enqueued.elapsed().as_secs_f64() * 1e3;
-            }
-
-            let t0 = Instant::now();
-            let seed = batch_seed(cfg.seed, stats.batches);
-            // reuse the output tensor across equal-occupancy batches —
-            // with the engine's in-place head writes the steady-state
-            // request path allocates only the per-request reply copies
-            let mut out = match out_cache.take() {
-                Some(t) if t.batch() == chunk.len() => t,
-                _ => BatchTensor::zeros(chunk.len(), cfg.heads, cfg.seq, cfg.head_dim),
-            };
-            match (&chains, &kv) {
-                (Some(chains), _) => {
-                    // cache-backed K/V: the engine gathers each head's
-                    // rows from the (possibly shared) blocks — bitwise
-                    // what the slab tensors hold, per the verified-dedupe
-                    // contract
-                    let fill = |b: usize, h: usize, km: &mut Matrix, vm: &mut Matrix| {
-                        chains[b].gather_head_into(h, cfg.head_dim, km, vm);
-                    };
-                    engine.run_gather_into(
-                        method.as_ref(),
-                        &q,
-                        cfg.seq,
-                        &fill,
-                        masks.as_ref(),
-                        seed,
-                        &mut out,
-                    );
-                }
-                (None, Some((k, v))) => {
-                    engine.run_into(method.as_ref(), &q, k, v, masks.as_ref(), seed, &mut out)
-                }
-                (None, None) => unreachable!("kv tensors built whenever chains are absent"),
-            }
-            if let (Some(chains), Some(cache)) = (chains, kv_cache.as_mut()) {
-                // sealed blocks stay index-retained for future replays
-                // (until capacity pressure evicts them); tails and chain
-                // refcounts are returned to the pool
-                for chain in chains {
-                    cache.close_stream(chain);
-                }
-            }
-            batch_ms_sum += t0.elapsed().as_secs_f64() * 1e3;
-
-            for (b, p) in chunk.iter().enumerate() {
-                let _ = p.reply.send(out.sequence(b).to_vec());
-            }
-            out_cache = Some(out);
-            stats.requests += chunk.len() as u64;
-            stats.batches += 1;
-            occupancy_sum += chunk.len() as f64 / cfg.max_batch as f64;
         }
         if shutting_down {
             break;
         }
     }
-
-    if stats.requests > 0 {
-        stats.mean_queue_ms = queue_ms_sum / stats.requests as f64;
-    }
-    if stats.batches > 0 {
-        stats.mean_occupancy = occupancy_sum / stats.batches as f64;
-        stats.mean_batch_ms = batch_ms_sum / stats.batches as f64;
-    }
-    if let Some(cache) = &kv_cache {
-        let kv = cache.stats();
-        stats.kv_hit_blocks = kv.hit_blocks;
-        stats.kv_alloc_blocks = kv.alloc_blocks;
-        stats.kv_evicted_blocks = kv.evicted_blocks;
-        stats.kv_resident_blocks = kv.resident_blocks;
-        stats.kv_resident_bytes = cache.resident_kv_bytes();
-    }
-    stats
+    srv.finish()
 }
 
-/// Stream-aware dynamic batching: like
-/// [`collect_batch`](super::collect_batch), but only *batched* requests
-/// count toward `max`, and a pending stream **query** short-circuits the
-/// wait — a decode client is blocked on that reply, so making it sit out
-/// the `max_wait` batch-formation deadline would put a ~`max_wait` floor
-/// under every decoded token.  When a query is seen, whatever is already
-/// queued is drained without blocking and the flush happens immediately.
-/// Appends and opens carry no reply and batch freely.
-fn collect_msgs(
-    rx: &mpsc::Receiver<ServerMsg>,
-    max_batch: usize,
-    max_wait: Duration,
-) -> Option<Vec<ServerMsg>> {
-    // queries (a client is blocked on the reply) and the shutdown
-    // sentinel both short-circuit the batching wait
-    let is_query = |m: &ServerMsg| {
-        matches!(
-            m,
-            ServerMsg::Stream { op: StreamOp::Query { .. }, .. } | ServerMsg::Shutdown
-        )
-    };
-    let first = rx.recv().ok()?;
-    let mut urgent = is_query(&first);
-    let mut batch_count = usize::from(matches!(first, ServerMsg::Batch(_)));
-    let mut pending = vec![first];
-    let deadline = Instant::now() + max_wait;
-    while batch_count < max_batch && !urgent {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(m) => {
-                urgent = is_query(&m);
-                batch_count += usize::from(matches!(m, ServerMsg::Batch(_)));
-                pending.push(m);
+impl Serve<'_> {
+    /// Apply one inbox message; returns true on the shutdown sentinel.
+    fn ingest(&mut self, msg: ServerMsg) -> bool {
+        match msg {
+            ServerMsg::Batch(p) => {
+                if let Err(e) = validate_request(self.cfg, &p.req) {
+                    self.stats.rejected += 1;
+                    p.reply.send(Err(e));
+                } else {
+                    let conn = p.conn;
+                    self.adm.push(conn, Work::OneShot(p));
+                }
+                false
             }
-            Err(_) => break, // timeout or disconnect: flush what we have
+            ServerMsg::Stream { conn, stream, op, err } => {
+                self.ingest_stream_op(conn, stream, op, err);
+                false
+            }
+            ServerMsg::Shutdown => true,
         }
     }
-    if urgent {
-        // drain only what is already queued (no blocking), then flush so
-        // the query's reply is not delayed behind batch formation
-        while let Ok(m) = rx.try_recv() {
-            pending.push(m);
-        }
-    }
-    Some(pending)
-}
 
-/// Apply one stream op to the server's stream table.  Malformed ops are
-/// rejected (counted, reply channel dropped) rather than allowed to panic
-/// the serve thread: shape checks here mirror the capability checks the
-/// attention layer enforces.
-#[allow(clippy::too_many_arguments)]
-fn handle_stream_op(
-    cfg: &AttentionServerConfig,
-    method: &dyn attention::AttentionMethod,
-    kv_cache: &mut Option<KvCache>,
-    streams: &mut std::collections::HashMap<u64, StreamState>,
-    stream: u64,
-    op: StreamOp,
-    stats: &mut AttentionServerStats,
-) {
-    let token_elems = cfg.heads * cfg.head_dim;
-    match op {
-        StreamOp::Open { repilot_stride } => {
-            let chain = kv_cache.as_mut().map(|c| c.open_stream());
-            // live sessions hold the KV state when the cache is off; with
-            // the cache on, only exact-incremental sessions survive (tiny
-            // state, no stored K/V) — and only without a window, which
-            // incremental accumulators cannot evict from
-            let windowed = cfg.kv.is_some_and(|kv| kv.window().is_some());
-            let use_sessions =
-                chain.is_none() || (method.session_is_exact_incremental() && !windowed);
-            let sessions = use_sessions.then(|| {
-                (0..cfg.heads)
-                    .map(|h| {
-                        method.begin_session(
-                            SessionSpec::new(cfg.head_dim)
-                                .with_seed(stream_seed(cfg.seed, stream, h as u64))
-                                .with_repilot_stride(repilot_stride)
-                                .with_capacity_hint(cfg.seq),
-                        )
-                    })
-                    .collect()
-            });
-            let old = streams.insert(
-                stream,
-                StreamState { sessions, chain, repilot_stride: repilot_stride.max(1) },
-            );
-            // re-opened id (only possible with a misbehaving client):
-            // release the displaced state's blocks instead of leaking them
-            if let Some(old) = old {
-                if let (Some(old_chain), Some(cache)) = (old.chain, kv_cache.as_mut()) {
-                    cache.close_stream(old_chain);
-                }
+    /// Route one stream op: apply it now, defer it behind an in-flight
+    /// query, or reject it typed.
+    fn ingest_stream_op(&mut self, conn: u64, stream: u64, op: StreamOp, err: Option<ReplyTo>) {
+        // Open applies immediately, even over an existing (possibly
+        // blocked) stream — a re-opened id is a misbehaving client, and
+        // the displaced state's blocks must not leak
+        if let StreamOp::Open { repilot_stride } = op {
+            let state = self.open_stream_state(conn, stream, repilot_stride);
+            if let Some(old) = self.streams.insert(stream, state) {
+                self.discard_stream_state(stream, old);
             }
+            return;
         }
-        StreamOp::Append { k, v } => {
-            let Some(state) = streams.get_mut(&stream) else {
-                stats.rejected += 1;
-                return;
-            };
-            if k.len() != token_elems || v.len() != token_elems {
-                stats.rejected += 1;
-                return;
+        let Some(state) = self.streams.get_mut(&stream) else {
+            self.stats.rejected += 1;
+            let e = ServeError::UnknownStream(stream);
+            if let StreamOp::Query { reply, .. } = op {
+                reply.send(Err(e));
+            } else if let Some(err) = err {
+                err.send(Err(e));
             }
-            if let Some(chain) = &mut state.chain {
-                let cache = kv_cache.as_mut().expect("stream chain implies a cache");
-                cache.append(chain, &k, &v);
-            }
-            if let Some(sessions) = &mut state.sessions {
-                for (h, session) in sessions.iter_mut().enumerate() {
-                    let o = h * cfg.head_dim;
-                    session.append(&k[o..o + cfg.head_dim], &v[o..o + cfg.head_dim]);
-                }
-            }
-            stats.stream_appends += 1;
+            return;
+        };
+        if state.blocked {
+            state.deferred.push_back((op, err));
+            return;
         }
-        StreamOp::Prefill { k, v, tokens } => {
-            let Some(state) = streams.get_mut(&stream) else {
-                stats.rejected += 1;
-                return;
-            };
-            if tokens == 0 || k.len() != tokens * token_elems || v.len() != tokens * token_elems {
-                stats.rejected += 1;
-                return;
+        match op {
+            StreamOp::Open { .. } => unreachable!("open handled above"),
+            StreamOp::Query { q, rows, reply } => {
+                state.blocked = true;
+                let lane = state.conn;
+                self.adm.push(lane, Work::Query(QueryTask { stream, q, rows, reply }));
             }
-            if let Some(chain) = &mut state.chain {
-                let cache = kv_cache.as_mut().expect("stream chain implies a cache");
-                cache.append_chunk(chain, &k, &v, tokens, cfg.head_dim);
-            }
-            if let Some(sessions) = &mut state.sessions {
-                // head h's rows are contiguous in the [heads, tokens,
-                // head_dim] slab; sessions are independent per head, so
-                // folding all of one head's tokens before the next head's
-                // leaves every per-head state identical to per-token order
-                for (h, session) in sessions.iter_mut().enumerate() {
-                    let base = h * tokens * cfg.head_dim;
-                    for t in 0..tokens {
-                        let o = base + t * cfg.head_dim;
-                        session.append(&k[o..o + cfg.head_dim], &v[o..o + cfg.head_dim]);
+            StreamOp::Append { k, v } => {
+                if let Err(e) = self.apply_append(stream, &k, &v) {
+                    self.stats.rejected += 1;
+                    if let Some(err) = err {
+                        err.send(Err(e));
                     }
                 }
             }
-            stats.stream_appends += tokens as u64;
-        }
-        StreamOp::Query { q, rows, reply } => {
-            let Some(state) = streams.get_mut(&stream) else {
-                stats.rejected += 1;
-                return;
-            };
-            let len = state.len();
-            let shape_ok = rows > 0 && q.len() == cfg.heads * rows * cfg.head_dim;
-            // square-only methods can only answer full-state queries
-            let cross_ok = method.supports_cross_shape() || rows == len;
-            if len == 0 || !shape_ok || !cross_ok {
-                stats.rejected += 1;
-                return; // dropping `reply` signals the rejection
+            StreamOp::Prefill { k, v, tokens } => {
+                if let Err(e) = self.apply_prefill(stream, &k, &v, tokens) {
+                    self.stats.rejected += 1;
+                    if let Some(err) = err {
+                        err.send(Err(e));
+                    }
+                }
             }
-            let mut out_slab = vec![0.0f32; cfg.heads * rows * cfg.head_dim];
-            run_head_queries(cfg, method, state, stream, &q, rows, &mut out_slab);
-            let _ = reply.send(out_slab);
-            stats.stream_queries += 1;
-        }
-        StreamOp::Close => {
-            if let Some(state) = streams.remove(&stream) {
-                if let (Some(chain), Some(cache)) = (state.chain, kv_cache.as_mut()) {
-                    cache.close_stream(chain);
+            StreamOp::Close => {
+                if let Some(state) = self.streams.remove(&stream) {
+                    self.discard_stream_state(stream, state);
                 }
             }
         }
     }
-}
 
-/// Answer one stream query by fanning the per-head work across the
-/// persistent worker pool.  Head `h` touches only its own session (or its
-/// own read-only chain view) and writes only its own span of `out_slab`,
-/// so tasks are disjoint; each head's bytes are a pure function of its
-/// inputs and seed, so the result is bitwise invariant to the worker
-/// count — the same contract [`BatchedAttention`] holds for the batch
-/// path.
-fn run_head_queries(
-    cfg: &AttentionServerConfig,
-    method: &dyn attention::AttentionMethod,
-    state: &mut StreamState,
-    stream: u64,
-    q: &[f32],
-    rows: usize,
-    out_slab: &mut [f32],
-) {
-    let head_dim = cfg.head_dim;
-    let head_elems = rows * head_dim;
-    let workers = cfg.workers.unwrap_or_else(pool::pool_size).max(1);
-    // mirror the engine's oversubscription policy: when the head grid
-    // alone saturates the pool, inner matmuls go single-threaded
-    let inner_plan = if cfg.heads.min(workers) >= pool::pool_size() {
-        MatmulPlan::SingleThread
-    } else {
-        MatmulPlan::Auto
-    };
-    let heads: Vec<usize> = (0..cfg.heads).collect();
-    let out_ptr = pool::SendPtr(out_slab.as_mut_ptr());
-    let StreamState { sessions, chain, repilot_stride } = state;
-    let stride = *repilot_stride;
-    if let Some(sessions) = sessions {
-        let sess_ptr = pool::SendPtr(sessions.as_mut_ptr());
-        pool::parallel_map_workers(&heads, workers, |&h| {
-            // force whole-struct capture of the raw-ptr wrappers
-            let sess_ptr = sess_ptr;
-            let out_ptr = out_ptr;
-            // SAFETY: each head index is claimed by exactly one task
-            // (parallel_map_workers' disjoint-index contract), head h
-            // touches only sessions[h] and out_slab[h * head_elems ..],
-            // and the call does not return until every task completed —
-            // so accesses never alias and never outlive the borrows.
-            let session = unsafe { &mut *sess_ptr.0.add(h) };
-            let mut scratch = AttnScratch::new();
-            let qbuf = scratch.buf_from(&q[h * head_elems..(h + 1) * head_elems]);
-            let q_head = Matrix::from_vec(rows, head_dim, qbuf);
-            let mut out = scratch.matrix(rows, head_dim);
-            with_default_plan(inner_plan, || {
-                session.query_into(&q_head, &mut out, &mut scratch)
+    /// Build a fresh stream's server-side KV state.
+    fn open_stream_state(&mut self, conn: u64, stream: u64, repilot_stride: usize) -> StreamState {
+        let cfg = self.cfg;
+        let chain = self.kv_cache.as_mut().map(|c| c.open_stream());
+        // live sessions hold the KV state when the cache is off; with
+        // the cache on, only exact-incremental sessions survive (tiny
+        // state, no stored K/V) — and only without a window, which
+        // incremental accumulators cannot evict from
+        let windowed = cfg.kv.is_some_and(|kv| kv.window().is_some());
+        let use_sessions =
+            chain.is_none() || (self.method.session_is_exact_incremental() && !windowed);
+        let sessions = use_sessions.then(|| {
+            (0..cfg.heads)
+                .map(|h| {
+                    self.method.begin_session(
+                        SessionSpec::new(cfg.head_dim)
+                            .with_seed(stream_seed(cfg.seed, stream, h as u64))
+                            .with_repilot_stride(repilot_stride)
+                            .with_capacity_hint(cfg.seq),
+                    )
+                })
+                .collect()
+        });
+        StreamState {
+            sessions,
+            chain,
+            repilot_stride: repilot_stride.max(1),
+            conn,
+            blocked: false,
+            deferred: VecDeque::new(),
+        }
+    }
+
+    /// Release a removed/displaced stream's blocks and answer its
+    /// deferred ops with typed rejections.
+    fn discard_stream_state(&mut self, stream: u64, mut state: StreamState) {
+        while let Some((op, err)) = state.deferred.pop_front() {
+            self.stats.rejected += 1;
+            let e = ServeError::UnknownStream(stream);
+            if let StreamOp::Query { reply, .. } = op {
+                reply.send(Err(e));
+            } else if let Some(err) = err {
+                err.send(Err(e));
+            }
+        }
+        if let (Some(chain), Some(cache)) = (state.chain.take(), self.kv_cache.as_mut()) {
+            cache.close_stream(chain);
+        }
+    }
+
+    /// Append one token to a live stream (shape-checked).
+    fn apply_append(&mut self, stream: u64, k: &Arc<[f32]>, v: &Arc<[f32]>) -> Result<(), ServeError> {
+        let cfg = self.cfg;
+        let token_elems = cfg.heads * cfg.head_dim;
+        if k.len() != token_elems || v.len() != token_elems {
+            return Err(ServeError::BadShape { what: "append token slab" });
+        }
+        let state = self.streams.get_mut(&stream).expect("caller verified the stream");
+        if let Some(chain) = &mut state.chain {
+            let cache = self.kv_cache.as_mut().expect("stream chain implies a cache");
+            cache.append(chain, k, v);
+        }
+        if let Some(sessions) = &mut state.sessions {
+            for (h, session) in sessions.iter_mut().enumerate() {
+                let o = h * cfg.head_dim;
+                session.append(&k[o..o + cfg.head_dim], &v[o..o + cfg.head_dim]);
+            }
+        }
+        self.stats.stream_appends += 1;
+        Ok(())
+    }
+
+    /// Bulk-append `tokens` tokens to a live stream (shape-checked).
+    fn apply_prefill(
+        &mut self,
+        stream: u64,
+        k: &Arc<[f32]>,
+        v: &Arc<[f32]>,
+        tokens: usize,
+    ) -> Result<(), ServeError> {
+        let cfg = self.cfg;
+        let token_elems = cfg.heads * cfg.head_dim;
+        if tokens == 0 || k.len() != tokens * token_elems || v.len() != tokens * token_elems {
+            return Err(ServeError::BadShape { what: "prefill chunk slab" });
+        }
+        let state = self.streams.get_mut(&stream).expect("caller verified the stream");
+        if let Some(chain) = &mut state.chain {
+            let cache = self.kv_cache.as_mut().expect("stream chain implies a cache");
+            cache.append_chunk(chain, k, v, tokens, cfg.head_dim);
+        }
+        if let Some(sessions) = &mut state.sessions {
+            // head h's rows are contiguous in the [heads, tokens,
+            // head_dim] slab; sessions are independent per head, so
+            // folding all of one head's tokens before the next head's
+            // leaves every per-head state identical to per-token order
+            for (h, session) in sessions.iter_mut().enumerate() {
+                let base = h * tokens * cfg.head_dim;
+                for t in 0..tokens {
+                    let o = base + t * cfg.head_dim;
+                    session.append(&k[o..o + cfg.head_dim], &v[o..o + cfg.head_dim]);
+                }
+            }
+        }
+        self.stats.stream_appends += tokens as u64;
+        Ok(())
+    }
+
+    /// Re-insert a stream after its query completed, applying deferred
+    /// ops in order.  A deferred query re-blocks the stream (joining the
+    /// admission queue); a deferred close discards the rest.
+    fn unblock_stream(&mut self, stream: u64, mut state: StreamState) {
+        state.blocked = false;
+        self.streams.insert(stream, state);
+        loop {
+            let state = self.streams.get_mut(&stream).expect("just inserted");
+            let Some((op, err)) = state.deferred.pop_front() else { break };
+            match op {
+                StreamOp::Open { .. } => unreachable!("open is never deferred"),
+                StreamOp::Query { q, rows, reply } => {
+                    state.blocked = true;
+                    let lane = state.conn;
+                    self.adm.push(lane, Work::Query(QueryTask { stream, q, rows, reply }));
+                    break; // remaining deferred ops stay behind this query
+                }
+                StreamOp::Append { k, v } => {
+                    if let Err(e) = self.apply_append(stream, &k, &v) {
+                        self.stats.rejected += 1;
+                        if let Some(err) = err {
+                            err.send(Err(e));
+                        }
+                    }
+                }
+                StreamOp::Prefill { k, v, tokens } => {
+                    if let Err(e) = self.apply_prefill(stream, &k, &v, tokens) {
+                        self.stats.rejected += 1;
+                        if let Some(err) = err {
+                            err.send(Err(e));
+                        }
+                    }
+                }
+                StreamOp::Close => {
+                    let state = self.streams.remove(&stream).expect("just inserted");
+                    self.discard_stream_state(stream, state);
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Execute one scheduler step: admit up to `max_batch` slots
+    /// round-robin, run the one-shot grid and the stream-query grid.
+    fn run_step(&mut self) {
+        let admitted = self.adm.admit(self.cfg.max_batch);
+        debug_assert!(!admitted.is_empty(), "run_step called with an empty queue");
+        self.stats.steps += 1;
+        self.sums.step_occupancy += admitted.len() as f64 / self.cfg.max_batch as f64;
+        let mut oneshots = Vec::new();
+        let mut qtasks = Vec::new();
+        for work in admitted {
+            match work {
+                Work::OneShot(p) => oneshots.push(p),
+                Work::Query(t) => qtasks.push(t),
+            }
+        }
+        if !oneshots.is_empty() {
+            self.execute_batch(oneshots);
+        }
+        if !qtasks.is_empty() {
+            self.execute_queries(qtasks);
+        }
+    }
+
+    /// Run one admitted group of one-shot requests as a `B × H` engine
+    /// grid, packing each request's slabs zero-copy.
+    fn execute_batch(&mut self, group: Vec<Pending>) {
+        let cfg = self.cfg;
+        let slab_views = |get: fn(&HeadsRequest) -> &Arc<[f32]>| {
+            BatchTensor::from_slabs(
+                cfg.heads,
+                cfg.seq,
+                cfg.head_dim,
+                group.iter().map(|p| Arc::clone(get(&p.req))).collect(),
+            )
+        };
+        let q = slab_views(|r| &r.q);
+        // batch-slab dedupe: ingest each request's K/V through the
+        // shared cache (chunked, per-request chain) so a resubmitted
+        // or prompt-shared request materialises its head views from
+        // shared blocks; otherwise wrap the client slabs in place
+        let chains: Option<Vec<StreamChain>> = match self.kv_cache.as_mut() {
+            Some(cache) if cache.cfg().batch_dedupe => Some(
+                group
+                    .iter()
+                    .map(|p| {
+                        let mut chain = cache.open_batch_stream();
+                        cache.append_chunk(&mut chain, &p.req.k, &p.req.v, cfg.seq, cfg.head_dim);
+                        chain
+                    })
+                    .collect(),
+            ),
+            _ => None,
+        };
+        let kv = chains.is_none().then(|| (slab_views(|r| &r.k), slab_views(|r| &r.v)));
+        let any_mask = group.iter().any(|p| p.req.mask.is_some());
+        let mut masks =
+            if any_mask { Some(Matrix::full(group.len(), cfg.seq, 1.0)) } else { None };
+        for (b, p) in group.iter().enumerate() {
+            if let (Some(mm), Some(req_mask)) = (masks.as_mut(), p.req.mask.as_ref()) {
+                mm.set_row(b, &req_mask[..]);
+            }
+            self.sums.queue_ms += p.enqueued.elapsed().as_secs_f64() * 1e3;
+        }
+
+        let t0 = Instant::now();
+        let seed = batch_seed(cfg.seed, self.stats.batches);
+        // reuse the output tensor across equal-occupancy batches —
+        // with the engine's in-place head writes the steady-state
+        // request path allocates only the per-request reply copies
+        let mut out = match self.out_cache.take() {
+            Some(t) if t.batch() == group.len() => t,
+            _ => BatchTensor::zeros(group.len(), cfg.heads, cfg.seq, cfg.head_dim),
+        };
+        match (&chains, &kv) {
+            (Some(chains), _) => {
+                // cache-backed K/V: the engine gathers each head's
+                // rows from the (possibly shared) blocks — bitwise
+                // what the slab tensors hold, per the verified-dedupe
+                // contract
+                let fill = |b: usize, h: usize, km: &mut Matrix, vm: &mut Matrix| {
+                    chains[b].gather_head_into(h, cfg.head_dim, km, vm);
+                };
+                self.engine.run_gather_into(
+                    self.method.as_ref(),
+                    &q,
+                    cfg.seq,
+                    &fill,
+                    masks.as_ref(),
+                    seed,
+                    &mut out,
+                );
+            }
+            (None, Some((k, v))) => {
+                self.engine
+                    .run_into(self.method.as_ref(), &q, k, v, masks.as_ref(), seed, &mut out)
+            }
+            (None, None) => unreachable!("kv tensors built whenever chains are absent"),
+        }
+        if let (Some(chains), Some(cache)) = (chains, self.kv_cache.as_mut()) {
+            // shared sealed blocks stay index-retained for future
+            // replays (until capacity pressure evicts them); under a
+            // window policy close_stream also releases the chain's
+            // non-shared blocks so a one-shot burst cannot pin the pool
+            for chain in chains {
+                cache.close_stream(chain);
+            }
+        }
+        self.sums.batch_ms += t0.elapsed().as_secs_f64() * 1e3;
+
+        let n = group.len();
+        for (b, p) in group.into_iter().enumerate() {
+            p.reply.send(Ok(out.sequence(b).to_vec()));
+        }
+        self.out_cache = Some(out);
+        self.stats.requests += n as u64;
+        self.stats.batches += 1;
+        self.sums.occupancy += n as f64 / cfg.max_batch as f64;
+    }
+
+    /// Answer one admitted group of stream queries: validate each
+    /// against its stream's state, fan the survivors out as one
+    /// (stream × head) grid, reply, and unblock the streams.
+    fn execute_queries(&mut self, tasks: Vec<QueryTask>) {
+        let mut jobs: Vec<QueryJob> = Vec::with_capacity(tasks.len());
+        for t in tasks {
+            let Some(state) = self.streams.remove(&t.stream) else {
+                // displaced by a re-open between admission and execution
+                // (misbehaving client): reject
+                self.stats.rejected += 1;
+                t.reply.send(Err(ServeError::UnknownStream(t.stream)));
+                continue;
+            };
+            let len = state.len();
+            let want = self.cfg.heads * t.rows * self.cfg.head_dim;
+            let fail = if len == 0 {
+                Some(ServeError::EmptyStream(t.stream))
+            } else if t.rows == 0 || t.q.len() != want {
+                Some(ServeError::BadShape { what: "query q slab" })
+            } else if !self.method.supports_cross_shape() && t.rows != len {
+                // square-only methods can only answer full-state queries
+                Some(ServeError::CrossShapeUnsupported { rows: t.rows, len })
+            } else {
+                None
+            };
+            if let Some(e) = fail {
+                self.stats.rejected += 1;
+                t.reply.send(Err(e));
+                self.unblock_stream(t.stream, state);
+                continue;
+            }
+            jobs.push(QueryJob {
+                stream: t.stream,
+                state,
+                q: t.q,
+                rows: t.rows,
+                reply: t.reply,
+                out: vec![0.0f32; want],
             });
-            unsafe {
-                std::slice::from_raw_parts_mut(out_ptr.0.add(h * head_elems), head_elems)
-                    .copy_from_slice(out.data());
-            }
-            scratch.recycle(out);
-            scratch.recycle_buf(q_head.into_vec());
-        });
-    } else {
-        let chain: &StreamChain = chain.as_ref().expect("stream holds sessions or a chain");
-        let n = chain.visible_len();
-        // the seed rule RecomputeSession (and BoundedSession, under a
-        // window) applies: epoch over the TOTAL appended count
-        let epoch = session_epoch(chain.appended(), stride);
-        pool::parallel_map_workers(&heads, workers, |&h| {
-            let out_ptr = out_ptr;
+        }
+        if !jobs.is_empty() {
+            self.run_query_grid(&mut jobs);
+        }
+        for job in jobs {
+            self.stats.stream_queries += 1;
+            job.reply.send(Ok(job.out));
+            self.unblock_stream(job.stream, job.state);
+        }
+    }
+
+    /// Fan a step's stream queries out as one (stream × head) task grid
+    /// across the persistent worker pool.  Task (j, h) touches only job
+    /// j's head-h session (or its read-only chain view) and writes only
+    /// its own span of job j's output slab, so tasks are disjoint; each
+    /// head's bytes are a pure function of its inputs and seed, so the
+    /// result is bitwise invariant to worker count *and* to which other
+    /// streams share the step — the contract that makes continuous
+    /// batching transparent.
+    fn run_query_grid(&mut self, jobs: &mut [QueryJob]) {
+        let cfg = self.cfg;
+        let head_dim = cfg.head_dim;
+        let method = self.method.as_ref();
+        let workers = cfg.workers.unwrap_or_else(pool::pool_size).max(1);
+        // mirror the engine's oversubscription policy: when the task
+        // grid alone saturates the pool, inner matmuls go single-threaded
+        let grid = jobs.len() * cfg.heads;
+        let inner_plan = if grid.min(workers) >= pool::pool_size() {
+            MatmulPlan::SingleThread
+        } else {
+            MatmulPlan::Auto
+        };
+
+        // decompose each job into a raw-pointer context so the parallel
+        // region borrows only the context table (SendPtr is Send + Sync)
+        let ctxs: Vec<Ctx> = jobs
+            .iter_mut()
+            .map(|job| {
+                let (kv, epoch) = match (&mut job.state.sessions, &job.state.chain) {
+                    (Some(sessions), _) => (KvSrc::Sessions(pool::SendPtr(sessions.as_mut_ptr())), 0),
+                    (None, Some(chain)) => {
+                        // the seed rule RecomputeSession (and
+                        // BoundedSession, under a window) applies: epoch
+                        // over the TOTAL appended count
+                        let epoch = session_epoch(chain.appended(), job.state.repilot_stride);
+                        let chain: *const StreamChain = chain;
+                        (KvSrc::Chain(pool::SendPtr(chain.cast_mut())), epoch)
+                    }
+                    (None, None) => unreachable!("stream holds sessions or a chain"),
+                };
+                Ctx {
+                    stream: job.stream,
+                    rows: job.rows,
+                    head_elems: job.rows * head_dim,
+                    q: pool::SendPtr(job.q.as_ptr().cast_mut()),
+                    out: pool::SendPtr(job.out.as_mut_ptr()),
+                    kv,
+                    epoch,
+                }
+            })
+            .collect();
+        let tasks: Vec<(usize, usize)> =
+            (0..ctxs.len()).flat_map(|j| (0..cfg.heads).map(move |h| (j, h))).collect();
+        pool::parallel_map_workers(&tasks, workers, |&(j, h)| {
+            let ctx = &ctxs[j];
             let mut scratch = AttnScratch::new();
-            let mut k = scratch.matrix(n, head_dim);
-            let mut v = scratch.matrix(n, head_dim);
-            chain.gather_head_into(h, head_dim, &mut k, &mut v);
-            let qbuf = scratch.buf_from(&q[h * head_elems..(h + 1) * head_elems]);
-            let q_head = Matrix::from_vec(rows, head_dim, qbuf);
-            let mut out = scratch.matrix(rows, head_dim);
-            let seed = session_seed(stream_seed(cfg.seed, stream, h as u64), epoch);
-            let inputs = AttnInputs::new(&q_head, &k, &v).with_seed(seed);
-            with_default_plan(inner_plan, || method.compute_into(&inputs, &mut out, &mut scratch));
-            // SAFETY: disjoint spans, see the session branch above.
+            // SAFETY: ctx.q points at job j's live Arc<[f32]> slab of
+            // heads * head_elems elements; reads only.
+            let q_all =
+                unsafe { std::slice::from_raw_parts(ctx.q.0, cfg.heads * ctx.head_elems) };
+            let qbuf = scratch.buf_from(&q_all[h * ctx.head_elems..(h + 1) * ctx.head_elems]);
+            let q_head = Matrix::from_vec(ctx.rows, head_dim, qbuf);
+            let mut out = scratch.matrix(ctx.rows, head_dim);
+            match ctx.kv {
+                KvSrc::Sessions(sess) => {
+                    // SAFETY: each (j, h) pair is claimed by exactly one
+                    // task (parallel_map_workers' disjoint-index
+                    // contract), task (j, h) touches only job j's
+                    // sessions[h], and the call does not return until
+                    // every task completed — so the &mut never aliases
+                    // and never outlives the jobs borrow.
+                    let session = unsafe { &mut *sess.0.add(h) };
+                    with_default_plan(inner_plan, || {
+                        session.query_into(&q_head, &mut out, &mut scratch)
+                    });
+                }
+                KvSrc::Chain(chain) => {
+                    // SAFETY: shared read-only view of job j's chain; no
+                    // task mutates any chain during the grid.
+                    let chain: &StreamChain = unsafe { &*chain.0 };
+                    let n = chain.visible_len();
+                    let mut k = scratch.matrix(n, head_dim);
+                    let mut v = scratch.matrix(n, head_dim);
+                    chain.gather_head_into(h, head_dim, &mut k, &mut v);
+                    let seed = session_seed(stream_seed(cfg.seed, ctx.stream, h as u64), ctx.epoch);
+                    let inputs = AttnInputs::new(&q_head, &k, &v).with_seed(seed);
+                    with_default_plan(inner_plan, || {
+                        method.compute_into(&inputs, &mut out, &mut scratch)
+                    });
+                    scratch.recycle(v);
+                    scratch.recycle(k);
+                }
+            }
+            // SAFETY: disjoint output spans — task (j, h) writes only
+            // job j's [h * head_elems, (h + 1) * head_elems) span.
             unsafe {
-                std::slice::from_raw_parts_mut(out_ptr.0.add(h * head_elems), head_elems)
+                std::slice::from_raw_parts_mut(ctx.out.0.add(h * ctx.head_elems), ctx.head_elems)
                     .copy_from_slice(out.data());
             }
             scratch.recycle(out);
             scratch.recycle_buf(q_head.into_vec());
-            scratch.recycle(v);
-            scratch.recycle(k);
         });
+    }
+
+    /// Finalize the mean stats and surface the KV cache counters.
+    fn finish(self) -> AttentionServerStats {
+        let mut stats = self.stats;
+        if stats.requests > 0 {
+            stats.mean_queue_ms = self.sums.queue_ms / stats.requests as f64;
+        }
+        if stats.batches > 0 {
+            stats.mean_occupancy = self.sums.occupancy / stats.batches as f64;
+            stats.mean_batch_ms = self.sums.batch_ms / stats.batches as f64;
+        }
+        if stats.steps > 0 {
+            stats.mean_step_occupancy = self.sums.step_occupancy / stats.steps as f64;
+        }
+        if let Some(cache) = &self.kv_cache {
+            let kv = cache.stats();
+            stats.kv_hit_blocks = kv.hit_blocks;
+            stats.kv_alloc_blocks = kv.alloc_blocks;
+            stats.kv_evicted_blocks = kv.evicted_blocks;
+            stats.kv_resident_blocks = kv.resident_blocks;
+            stats.kv_resident_bytes = cache.resident_kv_bytes();
+        }
+        stats
     }
 }
 
+/// One validated stream query in a step's grid.
+struct QueryJob {
+    stream: u64,
+    state: StreamState,
+    q: Arc<[f32]>,
+    rows: usize,
+    reply: ReplyTo,
+    out: Vec<f32>,
+}
+
+/// Per-job raw-pointer context for the (stream × head) fan-out; see the
+/// SAFETY comments in [`Serve::run_query_grid`].
+struct Ctx {
+    stream: u64,
+    rows: usize,
+    head_elems: usize,
+    q: pool::SendPtr<f32>,
+    out: pool::SendPtr<f32>,
+    kv: KvSrc,
+    /// Epoch for the chain seed rule (0 for session-backed jobs).
+    epoch: u64,
+}
+
+/// Where a query job's KV state lives.
+enum KvSrc {
+    /// Base pointer into the job's per-head session vec; task h takes
+    /// `&mut sessions[h]`.
+    Sessions(pool::SendPtr<Box<dyn AttentionSession>>),
+    /// Shared read-only chain view (all heads gather from it).
+    Chain(pool::SendPtr<StreamChain>),
+}
+
+/// Shape-check one one-shot request against the server shape.
+fn validate_request(cfg: &AttentionServerConfig, req: &HeadsRequest) -> Result<(), ServeError> {
+    let elems = cfg.request_elems();
+    if req.q.len() != elems {
+        return Err(ServeError::BadShape { what: "q slab" });
+    }
+    if req.k.len() != elems {
+        return Err(ServeError::BadShape { what: "k slab" });
+    }
+    if req.v.len() != elems {
+        return Err(ServeError::BadShape { what: "v slab" });
+    }
+    if req.mask.as_ref().is_some_and(|m| m.len() != cfg.seq) {
+        return Err(ServeError::BadShape { what: "mask" });
+    }
+    Ok(())
+}
 
 #[cfg(test)]
 mod tests {
@@ -987,6 +1593,7 @@ mod tests {
             max_wait: Duration::from_millis(2),
             seed: 0,
             workers: None,
+            queue_depth: 0,
             kv: None,
         }
     }
@@ -1027,6 +1634,23 @@ mod tests {
     }
 
     #[test]
+    fn scheduler_reports_step_occupancy() {
+        let c = cfg("standard", 4);
+        let handle = start(c.clone()).unwrap();
+        let rxs: Vec<_> = (0..8).map(|i| handle.submit(random_request(&c, i))).collect();
+        for rx in rxs {
+            rx.recv().expect("reply");
+        }
+        let stats = handle.shutdown().unwrap();
+        assert!(stats.steps >= stats.batches, "every batch runs inside a step");
+        assert!(
+            stats.mean_step_occupancy > 0.0 && stats.mean_step_occupancy <= 1.0,
+            "occupancy must be a (0, 1] fraction, got {}",
+            stats.mean_step_occupancy
+        );
+    }
+
+    #[test]
     fn single_sequence_batch_matches_direct_engine_call() {
         let c = cfg("standard", 1); // batch size 1: deterministic packing
         let handle = start(c.clone()).unwrap();
@@ -1058,6 +1682,46 @@ mod tests {
         let stats = handle.shutdown().unwrap();
         assert_eq!(stats.rejected, 1);
         assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn typed_rejections_name_the_failure() {
+        let c = cfg("standard", 2);
+        let handle = start(c.clone()).unwrap();
+        // malformed one-shot: BadShape
+        let bad = HeadsRequest::from_vecs(vec![0.0; 3], vec![0.0; 3], vec![0.0; 3]);
+        assert!(matches!(
+            handle.submit(bad).recv(),
+            Err(ServeError::BadShape { .. })
+        ));
+        // query before any append: EmptyStream
+        let s = handle.open_stream(1);
+        let q: Arc<[f32]> = vec![0.0f32; c.heads * c.head_dim].into();
+        let sid = s.id();
+        assert_eq!(s.query(q.clone(), 1).recv(), Err(ServeError::EmptyStream(sid)));
+        // a query for an id that was never opened: UnknownStream
+        let conn = handle.connection();
+        let (reply, rx) = ReplyTo::channel();
+        conn.stream_op(999, StreamOp::Query { q: q.clone(), rows: 1, reply }, None);
+        assert_eq!(rx.recv(), Err(ServeError::UnknownStream(999)));
+        // malformed query slab against a live stream: BadShape
+        s.append(q.clone(), q.clone());
+        let short: Arc<[f32]> = vec![0.0f32; 3].into();
+        assert!(matches!(s.query(short, 1).recv(), Err(ServeError::BadShape { .. })));
+        let stats = handle.shutdown().unwrap();
+        assert_eq!(stats.rejected, 4);
+        // distinct wire codes per variant
+        let codes: std::collections::HashSet<u8> = [
+            ServeError::BadShape { what: "q slab" }.code(),
+            ServeError::UnknownStream(0).code(),
+            ServeError::EmptyStream(0).code(),
+            ServeError::CrossShapeUnsupported { rows: 1, len: 2 }.code(),
+            ServeError::Shutdown.code(),
+            ServeError::Disconnected.code(),
+        ]
+        .into();
+        assert_eq!(codes.len(), 6);
+        assert!(!codes.contains(&0), "0 is reserved for wire-level errors");
     }
 
     #[test]
@@ -1146,11 +1810,59 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_queries_preserve_per_stream_order() {
+        // fire a query, then — without waiting for its reply — append a
+        // second token and fire a second query.  Ops behind the in-flight
+        // query are deferred and applied in order, so query 1 must see
+        // exactly one token and query 2 exactly two.
+        let c = cfg("standard", 2);
+        let handle = start(c.clone()).unwrap();
+        let s = handle.open_stream(1);
+        let token_elems = c.heads * c.head_dim;
+        let mut rng = Rng::new(11);
+        let mut mk = |rng: &mut Rng| {
+            let mut b = vec![0.0f32; token_elems];
+            rng.fill_normal(&mut b);
+            let slab: Arc<[f32]> = b.into();
+            slab
+        };
+        let (k0, v0) = (mk(&mut rng), mk(&mut rng));
+        let (k1, v1) = (mk(&mut rng), mk(&mut rng));
+        let q = mk(&mut rng);
+        s.append(k0.clone(), v0.clone());
+        let rx1 = s.query(q.clone(), 1);
+        s.append(k1.clone(), v1.clone());
+        let rx2 = s.query(q.clone(), 1);
+        let got1 = rx1.recv().expect("first pipelined reply");
+        let got2 = rx2.recv().expect("second pipelined reply");
+
+        for h in 0..c.heads {
+            let o = h * c.head_dim;
+            let q_mat = crate::tensor::Matrix::from_vec(1, c.head_dim, q[o..o + c.head_dim].to_vec());
+            let rows = |ts: &[&Arc<[f32]>]| {
+                crate::tensor::Matrix::from_rows(
+                    &ts.iter().map(|t| t[o..o + c.head_dim].to_vec()).collect::<Vec<_>>(),
+                )
+            };
+            let want1 = Standard::exact(&q_mat, &rows(&[&k0]), &rows(&[&v0]), None);
+            let want2 =
+                Standard::exact(&q_mat, &rows(&[&k0, &k1]), &rows(&[&v0, &v1]), None);
+            assert_eq!(&got1[o..o + c.head_dim], want1.data(), "query 1 must see 1 token");
+            assert_eq!(&got2[o..o + c.head_dim], want2.data(), "query 2 must see 2 tokens");
+        }
+        s.close();
+        let stats = handle.shutdown().unwrap();
+        assert_eq!(stats.stream_queries, 2);
+        assert_eq!(stats.stream_appends, 2);
+        assert_eq!(stats.rejected, 0);
+    }
+
+    #[test]
     fn stream_rejections_do_not_wedge_the_server() {
         let c = cfg("standard", 2);
         let handle = start(c.clone()).unwrap();
         let stream = handle.open_stream(1);
-        // query before any append -> rejected, reply channel closes
+        // query before any append -> typed EmptyStream rejection
         let early = stream.query(vec![0.0f32; c.heads * c.head_dim].into(), 1);
         assert!(early.recv().is_err());
         // malformed append (wrong slab size) -> rejected
@@ -1175,9 +1887,9 @@ mod tests {
         stream.append(vec![0.5f32; token_elems].into(), vec![0.5f32; token_elems].into());
         let stats = handle.shutdown().expect("shutdown must not hang");
         assert_eq!(stats.stream_appends, 1);
-        // late ops on the dead server are silently dropped client-side
+        // late ops on the dead server answer Err(Shutdown) client-side
         let late = stream.query(vec![0.0f32; token_elems].into(), 1);
-        assert!(late.recv().is_err());
+        assert_eq!(late.recv(), Err(ServeError::Shutdown));
     }
 
     #[test]
@@ -1412,5 +2124,72 @@ mod tests {
         let blocks = (c.seq / 2) as u64; // seq 16 at block size 2
         assert_eq!(stats.kv_alloc_blocks, blocks, "only the first submission allocates");
         assert_eq!(stats.kv_hit_blocks, blocks, "the replay shares every sealed block");
+    }
+
+    #[test]
+    fn multi_stream_step_matches_solo_streams() {
+        // two streams queried back-to-back (sharing steps when the
+        // scheduler packs them) must produce exactly what each produces
+        // decoding alone — grid placement never leaks into the bytes
+        let c = cfg("skeinformer", 4);
+        // solo reference for stream i burns i ids first so the measured
+        // stream gets the same server-side id (= the same seeds) it gets
+        // in the joint run
+        let solo: Vec<Vec<f32>> = (0..2usize)
+            .map(|i| {
+                let handle = start(c.clone()).unwrap();
+                let _burned: Vec<StreamHandle> =
+                    (0..i).map(|_| handle.open_stream(1)).collect();
+                let s = handle.open_stream(1);
+                let token_elems = c.heads * c.head_dim;
+                let mut rng = Rng::new(100 + i as u64);
+                let mut outs = Vec::new();
+                for _ in 0..5 {
+                    let mut mk = || {
+                        let mut b = vec![0.0f32; token_elems];
+                        rng.fill_normal(&mut b);
+                        let slab: Arc<[f32]> = b.into();
+                        slab
+                    };
+                    let (k, v, q) = (mk(), mk(), mk());
+                    s.append(k, v);
+                    outs.extend(s.query(q, 1).recv().expect("solo stream reply"));
+                }
+                s.close();
+                handle.shutdown().unwrap();
+                outs
+            })
+            .collect();
+
+        let handle = start(c.clone()).unwrap();
+        let streams: Vec<StreamHandle> = (0..2).map(|_| handle.open_stream(1)).collect();
+        let token_elems = c.heads * c.head_dim;
+        let mut rngs: Vec<Rng> = (0..2).map(|i| Rng::new(100 + i as u64)).collect();
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); 2];
+        for _ in 0..5 {
+            let mut rxs = Vec::new();
+            for (i, s) in streams.iter().enumerate() {
+                let mut mk = || {
+                    let mut b = vec![0.0f32; token_elems];
+                    rngs[i].fill_normal(&mut b);
+                    let slab: Arc<[f32]> = b.into();
+                    slab
+                };
+                let (k, v, q) = (mk(), mk(), mk());
+                s.append(k, v);
+                rxs.push(s.query(q, 1));
+            }
+            for (i, rx) in rxs.into_iter().enumerate() {
+                outs[i].extend(rx.recv().expect("joint stream reply"));
+            }
+        }
+        for s in streams {
+            s.close();
+        }
+        let stats = handle.shutdown().unwrap();
+        assert_eq!(stats.stream_queries, 10);
+        // stream ids 0 and 1 in both runs -> identical seeds -> identical bytes
+        assert_eq!(outs[0], solo[0], "stream 0 diverged when sharing steps");
+        assert_eq!(outs[1], solo[1], "stream 1 diverged when sharing steps");
     }
 }

@@ -5,9 +5,13 @@
 //! Two serving paths live here: [`server`] (token sequences through the
 //! AOT/PJRT artifacts) and [`attention_server`] (raw Q/K/V head slabs
 //! through the pure-rust [`crate::attention::BatchedAttention`] engine —
-//! no artifacts required).
+//! no artifacts required).  [`net`] puts a TCP front end on the latter:
+//! a length-prefixed binary wire protocol whose f32 payloads land
+//! directly in `Arc<[f32]>` slabs, preserving the zero-copy path end to
+//! end (`skein serve --listen` / `skein client`).
 
 pub mod attention_server;
+pub mod net;
 pub mod server;
 
 use crate::config::ExperimentConfig;

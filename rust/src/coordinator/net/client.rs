@@ -1,0 +1,212 @@
+//! Small blocking TCP client for the wire protocol — what `skein
+//! client` and the socket round-trip tests/benches use.
+//!
+//! One [`NetClient`] owns one connection.  Ops map one-to-one onto
+//! [`ClientFrame`](super::wire::ClientFrame)s; replies are matched by
+//! request id.  Because one connection is one server-side fairness lane
+//! and the scheduler preserves per-lane order, replies for pipelined
+//! requests arrive in submission order — [`NetClient::submit_async`] /
+//! [`NetClient::wait_output`] exploit that for throughput benching,
+//! while the plain methods are strictly call-and-wait.
+//!
+//! Server-side rejections surface as [`ClientError::Rejected`] carrying
+//! the wire error code: 0 is a framing error, `1..` are
+//! [`ServeError::code`](crate::coordinator::attention_server::ServeError::code)
+//! values — never a hang or an opaque `RecvError` panic.
+
+use super::wire::{
+    encode_append, encode_close, encode_open, encode_prefill, encode_query, encode_submit,
+    read_hello, read_server_frame, write_hello, FrameError, ServerFrame, ServerInfo,
+};
+use crate::coordinator::attention_server::HeadsRequest;
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// Client-side failure modes.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Socket-level failure (includes the server disconnecting).
+    Io(io::Error),
+    /// The byte stream violated the protocol (bad magic/version, unknown
+    /// frame kind, reply for a request we never made…).
+    Protocol(String),
+    /// The server answered with a typed error frame: `code` 0 is a
+    /// wire-level framing error, `1..` are `ServeError::code` values.
+    Rejected { code: u8, message: String },
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io error: {e}"),
+            ClientError::Protocol(s) => write!(f, "protocol error: {s}"),
+            ClientError::Rejected { code, message } => {
+                write!(f, "rejected (code {code}): {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<io::Error> for ClientError {
+    fn from(e: io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+impl From<FrameError> for ClientError {
+    fn from(e: FrameError) -> Self {
+        ClientError::Protocol(e.to_string())
+    }
+}
+
+/// A blocking connection to a `skein serve --listen` front end.
+pub struct NetClient {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+    info: ServerInfo,
+    next_id: u64,
+}
+
+impl NetClient {
+    /// Connect and handshake; returns once the server's config frame
+    /// (its served shape) has been received.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self, ClientError> {
+        let sock = TcpStream::connect(addr)?;
+        let _ = sock.set_nodelay(true);
+        let mut w = BufWriter::new(sock.try_clone()?);
+        write_hello(&mut w)?;
+        w.flush()?;
+        let mut r = BufReader::new(sock);
+        read_hello(&mut r)?;
+        let info = match read_server_frame(&mut r)? {
+            ServerFrame::Config(info) => info,
+            other => {
+                return Err(ClientError::Protocol(format!(
+                    "expected config frame after hello, got {other:?}"
+                )))
+            }
+        };
+        Ok(NetClient { r, w, info, next_id: 0 })
+    }
+
+    /// The served shape advertised in the handshake.
+    pub fn info(&self) -> &ServerInfo {
+        &self.info
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn send(&mut self, frame: Vec<u8>) -> Result<(), ClientError> {
+        self.w.write_all(&frame)?;
+        self.w.flush()?;
+        Ok(())
+    }
+
+    /// Read replies until `want`'s arrives.  An error frame for an
+    /// *earlier* pipelined op (e.g. a rejected fire-and-forget append)
+    /// also surfaces here as [`ClientError::Rejected`] — failures are
+    /// reported, never swallowed.
+    fn read_reply(&mut self, want: u64) -> Result<ServerFrame, ClientError> {
+        match read_server_frame(&mut self.r)? {
+            ServerFrame::Error { id, code, message } => {
+                let prefix = if id == want { String::new() } else { format!("op {id}: ") };
+                Err(ClientError::Rejected { code, message: format!("{prefix}{message}") })
+            }
+            frame @ (ServerFrame::Output { .. } | ServerFrame::OpenOk { .. }) => {
+                let id = match &frame {
+                    ServerFrame::Output { id, .. } | ServerFrame::OpenOk { id, .. } => *id,
+                    ServerFrame::Config(_) => unreachable!(),
+                };
+                if id == want {
+                    Ok(frame)
+                } else {
+                    Err(ClientError::Protocol(format!(
+                        "reply for request {id} while awaiting {want}"
+                    )))
+                }
+            }
+            ServerFrame::Config(_) => {
+                Err(ClientError::Protocol("unexpected config frame".into()))
+            }
+        }
+    }
+
+    fn expect_output(&mut self, want: u64) -> Result<Vec<f32>, ClientError> {
+        match self.read_reply(want)? {
+            ServerFrame::Output { out, .. } => Ok(out),
+            other => Err(ClientError::Protocol(format!("expected output frame, got {other:?}"))),
+        }
+    }
+
+    /// Send a one-shot request and block for its output slab.
+    pub fn submit(&mut self, req: &HeadsRequest) -> Result<Vec<f32>, ClientError> {
+        let id = self.submit_async(req)?;
+        self.wait_output(id)
+    }
+
+    /// Pipeline a one-shot request; pair with [`wait_output`]
+    /// (awaited in submission order) for throughput benching.
+    ///
+    /// [`wait_output`]: Self::wait_output
+    pub fn submit_async(&mut self, req: &HeadsRequest) -> Result<u64, ClientError> {
+        let id = self.fresh_id();
+        self.send(encode_submit(id, req))?;
+        Ok(id)
+    }
+
+    /// Block for a pipelined request's output slab.
+    pub fn wait_output(&mut self, id: u64) -> Result<Vec<f32>, ClientError> {
+        self.expect_output(id)
+    }
+
+    /// Open a decode stream; returns the server-assigned stream id.
+    pub fn open_stream(&mut self, repilot_stride: u32) -> Result<u64, ClientError> {
+        let id = self.fresh_id();
+        self.send(encode_open(id, repilot_stride))?;
+        match self.read_reply(id)? {
+            ServerFrame::OpenOk { stream, .. } => Ok(stream),
+            other => Err(ClientError::Protocol(format!("expected open-ok frame, got {other:?}"))),
+        }
+    }
+
+    /// Append one token (`k`/`v` are `[heads, head_dim]` rows).
+    /// Fire-and-forget: a server-side rejection surfaces on the next
+    /// reply-bearing op.
+    pub fn append(&mut self, stream: u64, k: &[f32], v: &[f32]) -> Result<(), ClientError> {
+        let id = self.fresh_id();
+        self.send(encode_append(id, stream, k, v))
+    }
+
+    /// Bulk-append `tokens` tokens (`k`/`v` are `[heads, tokens,
+    /// head_dim]` slabs).  Fire-and-forget like [`append`](Self::append).
+    pub fn prefill(
+        &mut self,
+        stream: u64,
+        tokens: u32,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<(), ClientError> {
+        let id = self.fresh_id();
+        self.send(encode_prefill(id, stream, tokens, k, v))
+    }
+
+    /// Query `rows` rows per head (`q` is `[heads, rows, head_dim]`);
+    /// blocks for the `[heads, rows, head_dim]` output slab.
+    pub fn query(&mut self, stream: u64, rows: u32, q: &[f32]) -> Result<Vec<f32>, ClientError> {
+        let id = self.fresh_id();
+        self.send(encode_query(id, stream, rows, q))?;
+        self.expect_output(id)
+    }
+
+    /// Drop a stream's server-side state (fire-and-forget).
+    pub fn close_stream(&mut self, stream: u64) -> Result<(), ClientError> {
+        let id = self.fresh_id();
+        self.send(encode_close(id, stream))
+    }
+}

@@ -1,0 +1,24 @@
+//! TCP front end for the engine-backed
+//! [`attention_server`](crate::coordinator::attention_server): a
+//! length-prefixed binary wire protocol ([`wire`]), an accept loop
+//! feeding the serve thread ([`server`]), and a small blocking client
+//! ([`client`]) — the plumbing behind `skein serve --listen ADDR` and
+//! `skein client`.
+//!
+//! Layering: [`wire`] owns bytes (framing, zero-copy `Arc<[f32]>` slab
+//! ingest, recoverable-vs-fatal decode errors), [`server`] owns threads
+//! (one reader + one writer per connection, bounded queues both ways so
+//! a slow client cannot OOM or stall the serve thread), and the serve
+//! loop itself is untouched transport-wise — wire connections are just
+//! more [`ServerConnection`](crate::coordinator::attention_server::ServerConnection)s,
+//! so the continuous-batching scheduler, per-connection fairness, and
+//! seed derivation are identical to the in-process path and served
+//! bytes are bitwise identical (pinned by `rust/tests/serving_net.rs`).
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{ClientError, NetClient};
+pub use server::{serve, NetServer, WRITER_QUEUE_FRAMES};
+pub use wire::{ServerInfo, MAGIC, MAX_FRAME_BYTES, VERSION};

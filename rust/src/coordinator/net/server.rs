@@ -1,0 +1,284 @@
+//! TCP accept loop feeding a running
+//! [`attention_server`](crate::coordinator::attention_server).
+//!
+//! One OS thread per connection reads frames and dispatches them into
+//! the serve thread through a per-socket
+//! [`ServerConnection`] (its own round-robin fairness lane); replies are
+//! encoded *on the serve thread* by [`ReplyTo`] closures and pushed into
+//! a bounded per-connection writer queue drained by a companion writer
+//! thread.  The serve thread therefore never blocks on a socket: if a
+//! client stops reading and its writer queue fills
+//! ([`WRITER_QUEUE_FRAMES`] frames), the connection is killed rather
+//! than letting replies pile up in memory — combined with the bounded
+//! server inbox (`queue_depth`) this is the protocol's backpressure
+//! story end to end.
+//!
+//! Error discipline follows [`wire`](super::wire): structurally
+//! malformed frames answer with an error frame (code
+//! [`WIRE_ERROR_CODE`](super::wire::WIRE_ERROR_CODE)) and the
+//! connection lives on; desynchronizing input closes the connection.
+//! Nothing a client sends can panic the accept loop or the serve
+//! thread — semantically bad ops come back as typed
+//! [`ServeError`] frames.  When a connection ends (client close, kill,
+//! or [`NetServer::stop`]), any decode streams it opened and never
+//! closed are closed server-side so their KV state is released.
+
+use super::wire::{
+    encode_config, encode_error, encode_open_ok, encode_output, read_client_frame, read_hello,
+    write_hello, ClientFrame, FrameError, ServerInfo, WIRE_ERROR_CODE,
+};
+use crate::coordinator::attention_server::{
+    AttentionServerHandle, ReplyTo, ServeError, ServerConnection, StreamOp,
+};
+use std::collections::HashSet;
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Bound on per-connection queued reply frames before the client is
+/// considered too slow and its connection is killed.
+pub const WRITER_QUEUE_FRAMES: usize = 256;
+
+/// A running TCP front end.  Dropping it (or calling
+/// [`stop`](Self::stop)) stops accepting and disconnects live clients;
+/// the underlying [`AttentionServerHandle`] stays up and is shut down
+/// separately.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept_join: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// The bound listen address (with the OS-assigned port when the
+    /// caller bound port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and disconnect live clients.  In-flight ops
+    /// already handed to the serve thread still complete server-side.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        let Some(join) = self.accept_join.take() else { return };
+        self.stop.store(true, Ordering::SeqCst);
+        // self-connect to unblock the blocking accept(); the accepted
+        // socket is discarded once the loop sees the stop flag
+        let _ = TcpStream::connect(self.addr);
+        let _ = join.join();
+        for sock in self.conns.lock().unwrap().drain(..) {
+            let _ = sock.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+/// Bind `addr` (e.g. `"127.0.0.1:7878"`, or port 0 for OS-assigned) and
+/// start serving `handle` over TCP.  Returns once the listener is bound;
+/// accepting runs on a background thread.
+pub fn serve(handle: &AttentionServerHandle, addr: &str) -> io::Result<NetServer> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+    let base = handle.connection();
+    let cfg = handle.config();
+    let info = ServerInfo {
+        method: cfg.method.clone(),
+        d: cfg.d as u32,
+        heads: cfg.heads as u32,
+        seq: cfg.seq as u32,
+        head_dim: cfg.head_dim as u32,
+        max_batch: cfg.max_batch as u32,
+    };
+    let accept_join = {
+        let stop = Arc::clone(&stop);
+        let conns = Arc::clone(&conns);
+        std::thread::spawn(move || accept_loop(listener, base, info, stop, conns))
+    };
+    Ok(NetServer { addr: local, stop, conns, accept_join: Some(accept_join) })
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    base: ServerConnection,
+    info: ServerInfo,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+) {
+    loop {
+        let sock = match listener.accept() {
+            Ok((sock, _)) => sock,
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let _ = sock.set_nodelay(true);
+        if let Ok(clone) = sock.try_clone() {
+            conns.lock().unwrap().push(clone);
+        }
+        let conn = base.sibling();
+        let info = info.clone();
+        std::thread::spawn(move || {
+            let _ = serve_connection(sock, conn, info);
+        });
+    }
+}
+
+/// The serve thread's side of one reply: encoded frames go through a
+/// bounded queue to the writer thread.  A full queue means the client
+/// is not draining replies — kill the connection instead of blocking
+/// the serve thread or buffering unboundedly.
+#[derive(Clone)]
+struct ReplyPipe {
+    tx: mpsc::SyncSender<Vec<u8>>,
+    sock: Arc<TcpStream>,
+}
+
+impl ReplyPipe {
+    fn push(&self, frame: Vec<u8>) {
+        if self.tx.try_send(frame).is_err() {
+            let _ = self.sock.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+fn verdict_frame(id: u64, r: Result<Vec<f32>, ServeError>) -> Vec<u8> {
+    match r {
+        Ok(out) => encode_output(id, &out),
+        Err(e) => encode_error(id, e.code(), &e.to_string()),
+    }
+}
+
+fn serve_connection(sock: TcpStream, conn: ServerConnection, info: ServerInfo) -> io::Result<()> {
+    let mut r = BufReader::new(sock.try_clone()?);
+    // handshake: verify the client's hello, answer with ours plus the
+    // config frame advertising the served shape
+    {
+        let mut hw = BufWriter::new(sock.try_clone()?);
+        if read_hello(&mut r).is_err() {
+            let _ = sock.shutdown(Shutdown::Both);
+            return Ok(());
+        }
+        write_hello(&mut hw)?;
+        hw.write_all(&encode_config(&info))?;
+        hw.flush()?;
+    }
+    let (wtx, wrx) = mpsc::sync_channel::<Vec<u8>>(WRITER_QUEUE_FRAMES);
+    let writer = {
+        let sock = sock.try_clone()?;
+        std::thread::spawn(move || writer_loop(sock, wrx))
+    };
+    let pipe = ReplyPipe { tx: wtx, sock: Arc::new(sock.try_clone()?) };
+    // streams this connection opened and has not closed — released when
+    // the connection ends so abandoned decode state cannot leak
+    let mut open: HashSet<u64> = HashSet::new();
+    loop {
+        match read_client_frame(&mut r) {
+            Ok(frame) => dispatch(frame, &conn, &pipe, &mut open),
+            Err(FrameError::Malformed { id, reason }) => {
+                pipe.push(encode_error(id, WIRE_ERROR_CODE, &reason));
+            }
+            Err(FrameError::Fatal(_)) => break,
+        }
+    }
+    for sid in open.drain() {
+        conn.stream_op(sid, StreamOp::Close, None);
+    }
+    drop(pipe); // last writer sender: the writer thread drains and exits
+    let _ = writer.join();
+    let _ = sock.shutdown(Shutdown::Both);
+    Ok(())
+}
+
+fn dispatch(
+    frame: ClientFrame,
+    conn: &ServerConnection,
+    pipe: &ReplyPipe,
+    open: &mut HashSet<u64>,
+) {
+    match frame {
+        ClientFrame::Submit { id, req } => {
+            let p = pipe.clone();
+            conn.submit_with(req, ReplyTo::from_fn(move |r| p.push(verdict_frame(id, r))));
+        }
+        ClientFrame::Open { id, repilot_stride } => {
+            let sid = conn.open_stream_id(repilot_stride as usize);
+            open.insert(sid);
+            pipe.push(encode_open_ok(id, sid));
+        }
+        ClientFrame::Append { id, stream, k, v } => {
+            let p = pipe.clone();
+            let err = ReplyTo::error_sink(move |r| {
+                if let Err(e) = r {
+                    p.push(encode_error(id, e.code(), &e.to_string()));
+                }
+            });
+            conn.stream_op(stream, StreamOp::Append { k, v }, Some(err));
+        }
+        ClientFrame::Prefill { id, stream, tokens, k, v } => {
+            let p = pipe.clone();
+            let err = ReplyTo::error_sink(move |r| {
+                if let Err(e) = r {
+                    p.push(encode_error(id, e.code(), &e.to_string()));
+                }
+            });
+            conn.stream_op(
+                stream,
+                StreamOp::Prefill { k, v, tokens: tokens as usize },
+                Some(err),
+            );
+        }
+        ClientFrame::Query { id, stream, rows, q } => {
+            let p = pipe.clone();
+            let reply = ReplyTo::from_fn(move |r| p.push(verdict_frame(id, r)));
+            conn.stream_op(stream, StreamOp::Query { q, rows: rows as usize, reply }, None);
+        }
+        ClientFrame::Close { id: _, stream } => {
+            open.remove(&stream);
+            conn.stream_op(stream, StreamOp::Close, None);
+        }
+    }
+}
+
+/// Drain encoded frames to the socket, batching everything already
+/// queued into one flush.
+fn writer_loop(sock: TcpStream, rx: mpsc::Receiver<Vec<u8>>) {
+    let mut w = BufWriter::new(sock);
+    'outer: while let Ok(frame) = rx.recv() {
+        if w.write_all(&frame).is_err() {
+            break;
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(f) => {
+                    if w.write_all(&f).is_err() {
+                        break 'outer;
+                    }
+                }
+                Err(_) => break, // empty or disconnected: flush what we have
+            }
+        }
+        if w.flush().is_err() {
+            break;
+        }
+    }
+    let _ = w.flush();
+}

@@ -1,0 +1,726 @@
+//! The length-prefixed binary wire protocol shared by the TCP server
+//! and the blocking client.
+//!
+//! # Framing
+//!
+//! A connection opens with a 6-byte hello in each direction — [`MAGIC`]
+//! (u32) then [`VERSION`] (u16), all little-endian like every integer on
+//! the wire — after which both directions speak *frames*:
+//!
+//! ```text
+//! [len: u32][kind: u8][body: len-1 bytes]
+//! ```
+//!
+//! `len` counts the kind byte plus the body and is capped at
+//! [`MAX_FRAME_BYTES`].  Client→server kinds are `0x01..=0x06`
+//! ([`ClientFrame`]); server→client kinds are `0x80..=0x83`
+//! ([`ServerFrame`]).  Every f32 slab inside a body is a `u32` element
+//! count followed by that many little-endian f32s, and every request
+//! frame carries a client-chosen `id: u64` echoed by the reply frame so
+//! pipelined requests can be matched up.
+//!
+//! # Error discipline
+//!
+//! Because frames are length-delimited, a *structurally* malformed body
+//! (fields don't add up to `len`) leaves the byte stream in sync: the
+//! decoder skips the remainder of the frame and reports
+//! [`FrameError::Malformed`], which the server answers with an error
+//! frame (code [`WIRE_ERROR_CODE`]) and the connection continues — the
+//! fuzz tests in `rust/tests/serving_net.rs` pin that the serve thread
+//! survives arbitrary bytes.  Only desynchronizing conditions are fatal
+//! ([`FrameError::Fatal`]): a bad magic/version, an unknown frame kind,
+//! an oversized `len`, or the stream ending mid-frame.  *Semantically*
+//! malformed ops (wrong slab length for the server's shape, unknown
+//! stream ids…) are not the wire layer's business: they flow through to
+//! the engine, which rejects them with a typed
+//! [`ServeError`](crate::coordinator::attention_server::ServeError)
+//! that comes back as an error frame carrying
+//! [`ServeError::code`](crate::coordinator::attention_server::ServeError::code).
+//!
+//! # Zero-copy ingest
+//!
+//! [`read_f32_slab`] reads payload bytes directly into a freshly
+//! allocated `Arc<[f32]>` — the same slab the engine then reads in
+//! place via [`HeadsRequest`] — so a request's K/V/Q payloads are
+//! copied exactly once off the socket, with no intermediate buffer.
+
+use crate::coordinator::attention_server::HeadsRequest;
+use std::io::{self, Read, Write};
+use std::sync::Arc;
+
+/// `"SKNF"` — the protocol magic.
+pub const MAGIC: u32 = 0x534B_4E46;
+/// Protocol version (bumped on any frame-layout change).
+pub const VERSION: u16 = 1;
+/// Upper bound on one frame's `len` field (256 MiB): anything larger is
+/// a corrupt or hostile length prefix, not a payload this server shapes.
+pub const MAX_FRAME_BYTES: u32 = 1 << 28;
+
+/// Error-frame code for wire-level (framing) errors; engine rejections
+/// use their [`ServeError::code`] values `1..`.
+///
+/// [`ServeError::code`]: crate::coordinator::attention_server::ServeError::code
+pub const WIRE_ERROR_CODE: u8 = 0;
+
+// client→server frame kinds
+pub const KIND_SUBMIT: u8 = 0x01;
+pub const KIND_OPEN: u8 = 0x02;
+pub const KIND_APPEND: u8 = 0x03;
+pub const KIND_PREFILL: u8 = 0x04;
+pub const KIND_QUERY: u8 = 0x05;
+pub const KIND_CLOSE: u8 = 0x06;
+// server→client frame kinds
+pub const KIND_CONFIG: u8 = 0x80;
+pub const KIND_OUTPUT: u8 = 0x81;
+pub const KIND_ERROR: u8 = 0x82;
+pub const KIND_OPEN_OK: u8 = 0x83;
+
+/// The server shape a connection learns from the handshake's config
+/// frame — everything a client needs to build well-formed payloads.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServerInfo {
+    pub method: String,
+    pub d: u32,
+    pub heads: u32,
+    pub seq: u32,
+    pub head_dim: u32,
+    pub max_batch: u32,
+}
+
+impl ServerInfo {
+    /// Elements per request slab (`heads * seq * head_dim`).
+    pub fn request_elems(&self) -> usize {
+        self.heads as usize * self.seq as usize * self.head_dim as usize
+    }
+
+    /// Elements per stream token slab (`heads * head_dim`).
+    pub fn token_elems(&self) -> usize {
+        self.heads as usize * self.head_dim as usize
+    }
+}
+
+/// One decoded client→server frame.
+#[derive(Debug)]
+pub enum ClientFrame {
+    /// A one-shot batched request (`id` echoed by the output frame).
+    Submit { id: u64, req: HeadsRequest },
+    /// Open a decode stream; answered by an open-ok frame carrying the
+    /// server-assigned stream id.
+    Open { id: u64, repilot_stride: u32 },
+    /// Append one token to a stream (no success reply; failures answer
+    /// with an error frame).
+    Append { id: u64, stream: u64, k: Arc<[f32]>, v: Arc<[f32]> },
+    /// Bulk-append `tokens` tokens to a stream.
+    Prefill { id: u64, stream: u64, tokens: u32, k: Arc<[f32]>, v: Arc<[f32]> },
+    /// Query a stream; answered by an output frame.
+    Query { id: u64, stream: u64, rows: u32, q: Arc<[f32]> },
+    /// Drop a stream's server-side state (no reply).
+    Close { id: u64, stream: u64 },
+}
+
+/// One decoded server→client frame.
+#[derive(Debug)]
+pub enum ServerFrame {
+    /// The handshake's shape advertisement.
+    Config(ServerInfo),
+    /// A request's output slab.
+    Output { id: u64, out: Vec<f32> },
+    /// A typed rejection: `code` 0 is a wire-level error, `1..` are
+    /// [`ServeError::code`](crate::coordinator::attention_server::ServeError::code)s.
+    Error { id: u64, code: u8, message: String },
+    /// A stream was opened; `stream` is the server-assigned id.
+    OpenOk { id: u64, stream: u64 },
+}
+
+/// Decode failure modes; see the [module docs](self) for the
+/// recoverable/fatal split.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The stream is desynchronized or gone: close the connection.
+    Fatal(String),
+    /// This frame was structurally malformed but fully consumed — the
+    /// stream is still in sync.  `id` is the frame's request id when it
+    /// could be parsed (0 otherwise).
+    Malformed { id: u64, reason: String },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Fatal(s) => write!(f, "fatal wire error: {s}"),
+            FrameError::Malformed { id, reason } => {
+                write!(f, "malformed frame (id {id}): {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+fn fatal_io(what: &str, e: io::Error) -> FrameError {
+    FrameError::Fatal(format!("{what}: {e}"))
+}
+
+// ---------------------------------------------------------------------
+// primitive readers/writers
+// ---------------------------------------------------------------------
+
+fn read_u8(r: &mut impl Read) -> io::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_u16(r: &mut impl Read) -> io::Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read `n` little-endian f32s straight into a fresh `Arc<[f32]>` —
+/// the zero-copy ingest path (the engine reads this slab in place).
+pub fn read_f32_slab(r: &mut impl Read, n: usize) -> io::Result<Arc<[f32]>> {
+    let mut slab: Arc<[f32]> = vec![0.0f32; n].into();
+    {
+        let dst = Arc::get_mut(&mut slab).expect("fresh arc is uniquely owned");
+        // SAFETY: a [f32] of n elements is exactly 4n bytes with no
+        // padding; every byte is overwritten by read_exact before any
+        // f32 is read back.
+        let bytes =
+            unsafe { std::slice::from_raw_parts_mut(dst.as_mut_ptr().cast::<u8>(), n * 4) };
+        r.read_exact(bytes)?;
+        if cfg!(target_endian = "big") {
+            // the wire is little-endian; swap in place on BE hosts
+            for x in dst.iter_mut() {
+                *x = f32::from_bits(x.to_bits().swap_bytes());
+            }
+        }
+    }
+    Ok(slab)
+}
+
+/// Append `xs` to `buf` as little-endian f32 bytes.
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.reserve(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+/// A length-counted slab: `u32` element count + payload.
+fn put_slab(buf: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(buf, xs.len() as u32);
+    put_f32s(buf, xs);
+}
+
+fn read_slab(r: &mut impl Read, cap_elems: u32) -> io::Result<Arc<[f32]>> {
+    let n = read_u32(r)?;
+    if n > cap_elems {
+        // a count that alone exceeds the frame cap cannot be honest;
+        // surface as a body-overrun (the Take limiter EOFs)
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "slab count exceeds frame"));
+    }
+    read_f32_slab(r, n as usize)
+}
+
+// ---------------------------------------------------------------------
+// handshake
+// ---------------------------------------------------------------------
+
+/// Write the 6-byte hello (both directions use the same bytes).
+pub fn write_hello(w: &mut impl Write) -> io::Result<()> {
+    w.write_all(&MAGIC.to_le_bytes())?;
+    w.write_all(&VERSION.to_le_bytes())
+}
+
+/// Read and verify the peer's hello.
+pub fn read_hello(r: &mut impl Read) -> Result<(), FrameError> {
+    let magic = read_u32(r).map_err(|e| fatal_io("reading magic", e))?;
+    if magic != MAGIC {
+        return Err(FrameError::Fatal(format!("bad magic {magic:#010x}")));
+    }
+    let version = read_u16(r).map_err(|e| fatal_io("reading version", e))?;
+    if version != VERSION {
+        return Err(FrameError::Fatal(format!(
+            "protocol version mismatch: peer {version}, ours {VERSION}"
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// frame encoders (full frame bytes, header included)
+// ---------------------------------------------------------------------
+
+/// Finish a frame: prepend `[len][kind]` to an encoded body.
+fn frame(kind: u8, body: Vec<u8>) -> Vec<u8> {
+    let len = (body.len() + 1) as u32;
+    let mut out = Vec::with_capacity(body.len() + 5);
+    out.extend_from_slice(&len.to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(&body);
+    out
+}
+
+pub fn encode_submit(id: u64, req: &HeadsRequest) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    body.push(u8::from(req.mask.is_some()));
+    put_slab(&mut body, &req.q);
+    put_slab(&mut body, &req.k);
+    put_slab(&mut body, &req.v);
+    if let Some(mask) = &req.mask {
+        put_slab(&mut body, mask);
+    }
+    frame(KIND_SUBMIT, body)
+}
+
+pub fn encode_open(id: u64, repilot_stride: u32) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_u32(&mut body, repilot_stride);
+    frame(KIND_OPEN, body)
+}
+
+pub fn encode_append(id: u64, stream: u64, k: &[f32], v: &[f32]) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_u64(&mut body, stream);
+    put_slab(&mut body, k);
+    put_slab(&mut body, v);
+    frame(KIND_APPEND, body)
+}
+
+pub fn encode_prefill(id: u64, stream: u64, tokens: u32, k: &[f32], v: &[f32]) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_u64(&mut body, stream);
+    put_u32(&mut body, tokens);
+    put_slab(&mut body, k);
+    put_slab(&mut body, v);
+    frame(KIND_PREFILL, body)
+}
+
+pub fn encode_query(id: u64, stream: u64, rows: u32, q: &[f32]) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_u64(&mut body, stream);
+    put_u32(&mut body, rows);
+    put_slab(&mut body, q);
+    frame(KIND_QUERY, body)
+}
+
+pub fn encode_close(id: u64, stream: u64) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_u64(&mut body, stream);
+    frame(KIND_CLOSE, body)
+}
+
+pub fn encode_config(info: &ServerInfo) -> Vec<u8> {
+    let mut body = Vec::new();
+    let name = info.method.as_bytes();
+    body.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    body.extend_from_slice(name);
+    put_u32(&mut body, info.d);
+    put_u32(&mut body, info.heads);
+    put_u32(&mut body, info.seq);
+    put_u32(&mut body, info.head_dim);
+    put_u32(&mut body, info.max_batch);
+    frame(KIND_CONFIG, body)
+}
+
+pub fn encode_output(id: u64, out: &[f32]) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_slab(&mut body, out);
+    frame(KIND_OUTPUT, body)
+}
+
+pub fn encode_error(id: u64, code: u8, message: &str) -> Vec<u8> {
+    let msg = message.as_bytes();
+    let msg = &msg[..msg.len().min(u16::MAX as usize)];
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    body.push(code);
+    body.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+    body.extend_from_slice(msg);
+    frame(KIND_ERROR, body)
+}
+
+pub fn encode_open_ok(id: u64, stream: u64) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_u64(&mut body, stream);
+    frame(KIND_OPEN_OK, body)
+}
+
+// ---------------------------------------------------------------------
+// frame decoders
+// ---------------------------------------------------------------------
+
+/// Read one frame header; `Ok((kind, body_len))`.
+fn read_header(r: &mut impl Read) -> Result<(u8, u32), FrameError> {
+    let len = read_u32(r).map_err(|e| fatal_io("reading frame length", e))?;
+    if len == 0 {
+        return Err(FrameError::Fatal("zero-length frame".into()));
+    }
+    if len > MAX_FRAME_BYTES {
+        return Err(FrameError::Fatal(format!(
+            "frame length {len} exceeds cap {MAX_FRAME_BYTES}"
+        )));
+    }
+    let kind = read_u8(r).map_err(|e| fatal_io("reading frame kind", e))?;
+    Ok((kind, len - 1))
+}
+
+/// Run `parse` against exactly `body_len` bytes of `r`.  A structurally
+/// short or long body is drained and reported [`FrameError::Malformed`]
+/// (the stream stays in sync); a body the underlying stream cannot
+/// supply is [`FrameError::Fatal`].
+fn with_body<R: Read, T>(
+    r: &mut R,
+    body_len: u32,
+    parse: impl FnOnce(&mut io::Take<&mut R>) -> io::Result<(u64, T)>,
+) -> Result<T, FrameError> {
+    let mut body = r.take(u64::from(body_len));
+    match parse(&mut body) {
+        Ok((id, value)) => {
+            if body.limit() == 0 {
+                Ok(value)
+            } else {
+                drain(&mut body, id, "trailing bytes after frame body")
+            }
+        }
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof && body.limit() == 0 => {
+            // the Take limiter ran dry: the frame was short but fully
+            // consumed — recoverable
+            Err(FrameError::Malformed { id: 0, reason: "frame body too short".into() })
+        }
+        Err(e) if e.kind() == io::ErrorKind::InvalidData => drain(&mut body, 0, "bad slab count"),
+        Err(e) => Err(fatal_io("reading frame body", e)),
+    }
+}
+
+/// Discard the rest of a malformed body; fatal if the stream ends first.
+fn drain<R: Read, T>(body: &mut io::Take<&mut R>, id: u64, reason: &str) -> Result<T, FrameError> {
+    match io::copy(body, &mut io::sink()) {
+        Ok(_) if body.limit() == 0 => {
+            Err(FrameError::Malformed { id, reason: reason.to_string() })
+        }
+        _ => Err(FrameError::Fatal("stream ended inside a frame body".into())),
+    }
+}
+
+/// Decode one client→server frame.
+pub fn read_client_frame(r: &mut impl Read) -> Result<ClientFrame, FrameError> {
+    let (kind, body_len) = read_header(r)?;
+    match kind {
+        KIND_SUBMIT => with_body(r, body_len, |b| {
+            let id = read_u64(b)?;
+            let has_mask = read_u8(b)? != 0;
+            let q = read_slab(b, MAX_FRAME_BYTES / 4)?;
+            let k = read_slab(b, MAX_FRAME_BYTES / 4)?;
+            let v = read_slab(b, MAX_FRAME_BYTES / 4)?;
+            let mask = if has_mask { Some(read_slab(b, MAX_FRAME_BYTES / 4)?) } else { None };
+            Ok((id, ClientFrame::Submit { id, req: HeadsRequest { q, k, v, mask } }))
+        }),
+        KIND_OPEN => with_body(r, body_len, |b| {
+            let id = read_u64(b)?;
+            let repilot_stride = read_u32(b)?;
+            Ok((id, ClientFrame::Open { id, repilot_stride }))
+        }),
+        KIND_APPEND => with_body(r, body_len, |b| {
+            let id = read_u64(b)?;
+            let stream = read_u64(b)?;
+            let k = read_slab(b, MAX_FRAME_BYTES / 4)?;
+            let v = read_slab(b, MAX_FRAME_BYTES / 4)?;
+            Ok((id, ClientFrame::Append { id, stream, k, v }))
+        }),
+        KIND_PREFILL => with_body(r, body_len, |b| {
+            let id = read_u64(b)?;
+            let stream = read_u64(b)?;
+            let tokens = read_u32(b)?;
+            let k = read_slab(b, MAX_FRAME_BYTES / 4)?;
+            let v = read_slab(b, MAX_FRAME_BYTES / 4)?;
+            Ok((id, ClientFrame::Prefill { id, stream, tokens, k, v }))
+        }),
+        KIND_QUERY => with_body(r, body_len, |b| {
+            let id = read_u64(b)?;
+            let stream = read_u64(b)?;
+            let rows = read_u32(b)?;
+            let q = read_slab(b, MAX_FRAME_BYTES / 4)?;
+            Ok((id, ClientFrame::Query { id, stream, rows, q }))
+        }),
+        KIND_CLOSE => with_body(r, body_len, |b| {
+            let id = read_u64(b)?;
+            let stream = read_u64(b)?;
+            Ok((id, ClientFrame::Close { id, stream }))
+        }),
+        other => Err(FrameError::Fatal(format!("unknown client frame kind {other:#04x}"))),
+    }
+}
+
+/// Decode one server→client frame.
+pub fn read_server_frame(r: &mut impl Read) -> Result<ServerFrame, FrameError> {
+    let (kind, body_len) = read_header(r)?;
+    match kind {
+        KIND_CONFIG => with_body(r, body_len, |b| {
+            let name_len = read_u16(b)? as usize;
+            let mut name = vec![0u8; name_len];
+            b.read_exact(&mut name)?;
+            let method = String::from_utf8(name)
+                .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "bad method utf8"))?;
+            let d = read_u32(b)?;
+            let heads = read_u32(b)?;
+            let seq = read_u32(b)?;
+            let head_dim = read_u32(b)?;
+            let max_batch = read_u32(b)?;
+            Ok((0, ServerFrame::Config(ServerInfo { method, d, heads, seq, head_dim, max_batch })))
+        }),
+        KIND_OUTPUT => with_body(r, body_len, |b| {
+            let id = read_u64(b)?;
+            let out = read_slab(b, MAX_FRAME_BYTES / 4)?;
+            Ok((id, ServerFrame::Output { id, out: out.to_vec() }))
+        }),
+        KIND_ERROR => with_body(r, body_len, |b| {
+            let id = read_u64(b)?;
+            let code = read_u8(b)?;
+            let msg_len = read_u16(b)? as usize;
+            let mut msg = vec![0u8; msg_len];
+            b.read_exact(&mut msg)?;
+            let message = String::from_utf8_lossy(&msg).into_owned();
+            Ok((id, ServerFrame::Error { id, code, message }))
+        }),
+        KIND_OPEN_OK => with_body(r, body_len, |b| {
+            let id = read_u64(b)?;
+            let stream = read_u64(b)?;
+            Ok((id, ServerFrame::OpenOk { id, stream }))
+        }),
+        other => Err(FrameError::Fatal(format!("unknown server frame kind {other:#04x}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip_client(bytes: Vec<u8>) -> Result<ClientFrame, FrameError> {
+        read_client_frame(&mut Cursor::new(bytes))
+    }
+
+    #[test]
+    fn submit_roundtrips_with_and_without_mask() {
+        let req = HeadsRequest::from_vecs(vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]);
+        match roundtrip_client(encode_submit(7, &req)).unwrap() {
+            ClientFrame::Submit { id, req: got } => {
+                assert_eq!(id, 7);
+                assert_eq!(&got.q[..], &[1.0, 2.0]);
+                assert_eq!(&got.k[..], &[3.0, 4.0]);
+                assert_eq!(&got.v[..], &[5.0, 6.0]);
+                assert!(got.mask.is_none());
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        let masked = req.with_mask(vec![1.0, 0.0]);
+        match roundtrip_client(encode_submit(8, &masked)).unwrap() {
+            ClientFrame::Submit { req: got, .. } => {
+                assert_eq!(&got.mask.unwrap()[..], &[1.0, 0.0]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stream_frames_roundtrip() {
+        match roundtrip_client(encode_open(1, 3)).unwrap() {
+            ClientFrame::Open { id, repilot_stride } => {
+                assert_eq!((id, repilot_stride), (1, 3));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match roundtrip_client(encode_append(2, 9, &[1.0], &[2.0])).unwrap() {
+            ClientFrame::Append { id, stream, k, v } => {
+                assert_eq!((id, stream), (2, 9));
+                assert_eq!((&k[..], &v[..]), (&[1.0f32][..], &[2.0f32][..]));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match roundtrip_client(encode_prefill(3, 9, 2, &[1.0, 2.0], &[3.0, 4.0])).unwrap() {
+            ClientFrame::Prefill { tokens, k, .. } => {
+                assert_eq!(tokens, 2);
+                assert_eq!(&k[..], &[1.0, 2.0]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match roundtrip_client(encode_query(4, 9, 1, &[0.5])).unwrap() {
+            ClientFrame::Query { rows, q, .. } => {
+                assert_eq!(rows, 1);
+                assert_eq!(&q[..], &[0.5]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match roundtrip_client(encode_close(5, 9)).unwrap() {
+            ClientFrame::Close { id, stream } => assert_eq!((id, stream), (5, 9)),
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn server_frames_roundtrip() {
+        let info = ServerInfo {
+            method: "skeinformer".into(),
+            d: 64,
+            heads: 4,
+            seq: 512,
+            head_dim: 32,
+            max_batch: 8,
+        };
+        match read_server_frame(&mut Cursor::new(encode_config(&info))).unwrap() {
+            ServerFrame::Config(got) => assert_eq!(got, info),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match read_server_frame(&mut Cursor::new(encode_output(11, &[1.5, -2.5]))).unwrap() {
+            ServerFrame::Output { id, out } => {
+                assert_eq!(id, 11);
+                assert_eq!(out, vec![1.5, -2.5]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match read_server_frame(&mut Cursor::new(encode_error(12, 2, "unknown stream 9"))).unwrap()
+        {
+            ServerFrame::Error { id, code, message } => {
+                assert_eq!((id, code), (12, 2));
+                assert_eq!(message, "unknown stream 9");
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match read_server_frame(&mut Cursor::new(encode_open_ok(13, 4))).unwrap() {
+            ServerFrame::OpenOk { id, stream } => assert_eq!((id, stream), (13, 4)),
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hello_verifies_magic_and_version() {
+        let mut buf = Vec::new();
+        write_hello(&mut buf).unwrap();
+        assert!(read_hello(&mut Cursor::new(buf.clone())).is_ok());
+        let mut bad_magic = buf.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(matches!(
+            read_hello(&mut Cursor::new(bad_magic)),
+            Err(FrameError::Fatal(_))
+        ));
+        let mut bad_version = buf;
+        bad_version[4] ^= 0xFF;
+        assert!(matches!(
+            read_hello(&mut Cursor::new(bad_version)),
+            Err(FrameError::Fatal(_))
+        ));
+    }
+
+    #[test]
+    fn short_body_is_recoverable_and_leaves_the_stream_in_sync() {
+        // an append frame whose body claims more slab elements than the
+        // frame holds: malformed, but the next frame must still decode
+        let mut bytes = encode_append(1, 2, &[1.0, 2.0], &[3.0, 4.0]);
+        // corrupt the k-slab count (body offset: 8 id + 8 stream)
+        let count_at = 4 + 1 + 8 + 8;
+        bytes[count_at..count_at + 4].copy_from_slice(&100u32.to_le_bytes());
+        bytes.extend_from_slice(&encode_close(9, 2));
+        let mut cur = Cursor::new(bytes);
+        assert!(matches!(
+            read_client_frame(&mut cur),
+            Err(FrameError::Malformed { .. })
+        ));
+        match read_client_frame(&mut cur).unwrap() {
+            ClientFrame::Close { id, stream } => assert_eq!((id, stream), (9, 2)),
+            other => panic!("stream out of sync after malformed frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_recoverable() {
+        // a close frame with 3 junk bytes appended inside its length
+        let inner = encode_close(5, 6);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&((inner.len() - 4 + 3) as u32).to_le_bytes());
+        bytes.extend_from_slice(&inner[4..]);
+        bytes.extend_from_slice(&[0xAA, 0xBB, 0xCC]);
+        bytes.extend_from_slice(&encode_close(7, 8));
+        let mut cur = Cursor::new(bytes);
+        assert!(matches!(
+            read_client_frame(&mut cur),
+            Err(FrameError::Malformed { id: 5, .. })
+        ));
+        match read_client_frame(&mut cur).unwrap() {
+            ClientFrame::Close { id, .. } => assert_eq!(id, 7),
+            other => panic!("stream out of sync: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fatal_conditions_close_the_connection() {
+        // unknown kind
+        let mut bytes = vec![0u8; 0];
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.push(0x7F);
+        bytes.push(0);
+        assert!(matches!(
+            read_client_frame(&mut Cursor::new(bytes)),
+            Err(FrameError::Fatal(_))
+        ));
+        // oversized length prefix
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        bytes.push(KIND_CLOSE);
+        assert!(matches!(
+            read_client_frame(&mut Cursor::new(bytes)),
+            Err(FrameError::Fatal(_))
+        ));
+        // truncated mid-frame: header promises more than the stream holds
+        let full = encode_close(1, 2);
+        let truncated = full[..full.len() - 4].to_vec();
+        assert!(matches!(
+            read_client_frame(&mut Cursor::new(truncated)),
+            Err(FrameError::Fatal(_))
+        ));
+        // zero-length frame
+        let bytes = 0u32.to_le_bytes().to_vec();
+        assert!(matches!(
+            read_client_frame(&mut Cursor::new(bytes)),
+            Err(FrameError::Fatal(_))
+        ));
+    }
+
+    #[test]
+    fn slab_ingest_is_bitwise() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
+        let mut buf = Vec::new();
+        put_f32s(&mut buf, &xs);
+        let slab = read_f32_slab(&mut Cursor::new(buf), xs.len()).unwrap();
+        assert_eq!(&slab[..], &xs[..]);
+    }
+}

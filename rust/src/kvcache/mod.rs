@@ -112,6 +112,11 @@ pub struct StreamChain {
     appended: usize,
     /// Per-stream copy of the policy window (None = keep everything).
     window: Option<usize>,
+    /// Opened by [`KvCache::open_batch_stream`] for a one-shot batch
+    /// request: window-exempt while open, and under a window policy its
+    /// non-shared blocks are released when the chain closes (see
+    /// [`KvCache::close_stream`]).
+    is_batch: bool,
     block_size: usize,
     token_elems: usize,
 }
@@ -148,6 +153,7 @@ impl StreamChain {
             dropped_blocks: self.dropped_blocks,
             appended: self.appended,
             window: self.window,
+            is_batch: self.is_batch,
             block_size: self.block_size,
             token_elems: self.token_elems,
         }
@@ -227,6 +233,7 @@ impl KvCache {
             dropped_blocks: 0,
             appended: 0,
             window: self.cfg.window(),
+            is_batch: false,
             block_size: self.cfg.block_size,
             token_elems: self.pool.token_elems(),
         }
@@ -236,11 +243,16 @@ impl KvCache {
     /// [`open_stream`](Self::open_stream) except the sliding window (if
     /// the policy has one) is *not* applied — a batched request has a
     /// fixed `seq` and every token must stay visible for the duration of
-    /// its batch.  Retention of its sealed blocks is still governed by
-    /// LRU capacity pressure after the chain closes.
+    /// its batch.  Under a pure LRU policy, retention of its sealed
+    /// blocks after the chain closes is governed by capacity pressure as
+    /// usual; under a *window* policy [`close_stream`](Self::close_stream)
+    /// releases the chain's non-shared blocks at request completion, so
+    /// a burst of one-shot requests cannot pin the pool against windowed
+    /// streams.
     pub fn open_batch_stream(&mut self) -> StreamChain {
         let mut chain = self.open_stream();
         chain.window = None;
+        chain.is_batch = true;
         chain
     }
 
@@ -393,8 +405,29 @@ impl KvCache {
 
     /// Close a stream, releasing its blocks.  Sealed blocks the prefix
     /// index retains stay resident (a resubmitted prompt still hits) until
-    /// capacity pressure evicts them.
+    /// capacity pressure evicts them — except for a *batch* chain under a
+    /// *window* policy: batch chains are window-exempt while open and a
+    /// window policy may have no capacity bound (so no later LRU pass),
+    /// which would let a burst of one-shot batch requests pin the pool
+    /// indefinitely.  For that combination the chain's sealed blocks that
+    /// no other live stream shares are removed from the index and
+    /// released here, at request completion (counted in
+    /// [`KvCacheStats::evicted_blocks`]); blocks a live stream still
+    /// shares are kept.
     pub fn close_stream(&mut self, chain: StreamChain) {
+        if chain.is_batch && self.cfg.window().is_some() {
+            // batch chains never drop front blocks (window-exempt), so
+            // sealed[i]'s trie position is exactly path[..i] + path[i]
+            debug_assert_eq!(chain.dropped_blocks, 0);
+            for (i, block) in chain.sealed.iter().enumerate() {
+                if let Some(evicted) =
+                    self.index.remove_if_unshared(&chain.path[..i], chain.path[i], block)
+                {
+                    self.pool.release(evicted);
+                    self.evictions += 1;
+                }
+            }
+        }
         for block in chain.sealed {
             self.pool.release(block);
         }
@@ -675,6 +708,49 @@ mod tests {
         assert_eq!(chain.visible_len(), 10, "batch chains keep the full request");
         assert_eq!(c.stats().evicted_blocks, 0);
         c.close_stream(chain);
+    }
+
+    #[test]
+    fn batch_chain_close_returns_residency_to_baseline_under_a_window() {
+        // --kv-batch-dedupe + --kv-window: batch chains are window-exempt
+        // while open, and the window policy has no capacity bound, so
+        // without release-at-completion a burst of one-shot requests
+        // would pin the pool indefinitely
+        let mut c = KvCache::new(KvCacheConfig::new(2).with_window(4).with_batch_dedupe(true), 1);
+        let baseline = c.stats().resident_blocks;
+        for burst in 0..5 {
+            let mut chain = c.open_batch_stream();
+            for t in 0..8 {
+                let x = (burst * 8 + t) as f32; // distinct content per request
+                c.append(&mut chain, &[x], &[x]);
+            }
+            assert_eq!(chain.visible_len(), 8, "batch chains stay window-exempt");
+            c.close_stream(chain);
+        }
+        assert_eq!(
+            c.stats().resident_blocks,
+            baseline,
+            "batch burst must not pin the pool"
+        );
+        assert_eq!(c.stats().evicted_blocks, 20, "4 sealed blocks released per request");
+
+        // a block shared with a live stream survives the batch close
+        let mut live = c.open_stream();
+        for t in 0..2 {
+            c.append(&mut live, &[t as f32], &[t as f32]);
+        }
+        let mut batch = c.open_batch_stream();
+        for t in 0..2 {
+            c.append(&mut batch, &[t as f32], &[t as f32]);
+        }
+        assert_eq!(c.stats().hit_blocks, 1, "batch chain shares the live stream's block");
+        c.close_stream(batch);
+        let mut k = Matrix::zeros(2, 1);
+        let mut v = Matrix::zeros(2, 1);
+        live.gather_head_into(0, 1, &mut k, &mut v);
+        assert_eq!(k.get(0, 0), 0.0, "shared block must survive the batch close");
+        assert_eq!(k.get(1, 0), 1.0);
+        c.close_stream(live);
     }
 
     #[test]

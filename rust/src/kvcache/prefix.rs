@@ -26,9 +26,9 @@
 //!   LRU selection has no ties and is deterministic regardless of hash-map
 //!   iteration order.
 //! * **LRU selection is O(log N), not a trie walk.**  Every stamp
-//!   assignment also pushes a `(stamp, path)` snapshot onto a min-heap;
-//!   the node's `last_touch` stays the single source of truth, and a
-//!   popped snapshot whose stamp no longer matches (the node was
+//!   assignment also pushes a `(stamp, node id)` snapshot onto a
+//!   min-heap; the node's `last_touch` stays the single source of truth,
+//!   and a popped snapshot whose stamp no longer matches (the node was
 //!   re-touched, evicted, or removed) is simply discarded — *lazy
 //!   invalidation*.  A popped entry whose block is still referenced by a
 //!   live stream is pushed back and retried on a later eviction pass.
@@ -36,47 +36,85 @@
 //!   and the evicted sequence is exactly what a full-trie DFS sorted by
 //!   stamp would produce (pinned against the `#[cfg(test)]` DFS oracle
 //!   under randomized interleavings).
+//! * **Nodes live in an arena of stable ids.**  Trie edges are
+//!   `hash → NodeId` and each LRU snapshot is a two-word
+//!   `(stamp, NodeId)` — O(1) per snapshot, instead of the retired
+//!   owned-path snapshots whose memory was O(Σ depth), quadratic for one
+//!   deep chain.  Pruned nodes return their ids to a free list for
+//!   reuse; a stale snapshot aimed at a reused id is inert because the
+//!   new tenant carries a strictly newer stamp (or no block yet), so the
+//!   stamp check rejects it.
 
 use super::block::KvBlock;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::Arc;
 
+/// Stable arena index of one trie node.
+type NodeId = usize;
+
+/// The arena slot of the (block-less, unprunable) root node.
+const ROOT: NodeId = 0;
+
 /// One lazy LRU snapshot: the stamp a node carried when it was touched,
-/// plus the node's full trie path (prefix hashes + own hash).
-type LruEntry = Reverse<(u64, Vec<u64>)>;
+/// plus the node's stable arena id — two words, O(1) regardless of trie
+/// depth.
+type LruEntry = Reverse<(u64, NodeId)>;
 
 #[derive(Debug)]
 struct TrieNode {
     /// The shared block, or `None` for a tombstone (evicted interior
-    /// node kept only to keep descendants addressable).
+    /// node kept only to keep descendants addressable) and for the root.
     block: Option<Arc<KvBlock>>,
-    children: HashMap<u64, TrieNode>,
+    children: HashMap<u64, NodeId>,
     /// Logical-clock stamp of the last insert/hit (unique per node).
     last_touch: u64,
+    /// Arena id of the parent (`ROOT` points at itself) — what lets
+    /// pruning cascade upward without re-walking a path.
+    parent: NodeId,
+    /// The hash this node hangs under in its parent's `children`.
+    key: u64,
 }
 
 /// Radix trie mapping sealed-block hash paths to shared blocks.  See the
 /// [module docs](self) for the invariants.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct PrefixIndex {
-    children: HashMap<u64, TrieNode>,
+    /// Node arena; slot 0 is the root, `None` slots are on `free`.
+    arena: Vec<Option<TrieNode>>,
+    /// Freed arena slots awaiting reuse.
+    free: Vec<NodeId>,
     clock: u64,
     /// Nodes currently holding a block (tombstones excluded).
     entries: usize,
-    /// Min-heap of `(last_touch, path)` snapshots — the O(log N) LRU.
+    /// Min-heap of `(last_touch, node id)` snapshots — the O(log N) LRU.
     /// May hold stale entries (lazy invalidation; see the module docs);
-    /// compacted when stale entries dominate.  Each snapshot owns its
-    /// full path, so heap memory is O(Σ depth) — proportional to total
-    /// trie path length, not node count; an arena of node ids would make
-    /// snapshots O(1) each (ROADMAP follow-up) at the cost of an
-    /// indirection on every trie op.
+    /// compacted by an arena scan when stale entries dominate.
     lru: BinaryHeap<LruEntry>,
+}
+
+impl Default for PrefixIndex {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl PrefixIndex {
     pub fn new() -> Self {
-        Self::default()
+        let root = TrieNode {
+            block: None,
+            children: HashMap::new(),
+            last_touch: 0,
+            parent: ROOT,
+            key: 0,
+        };
+        Self {
+            arena: vec![Some(root)],
+            free: Vec::new(),
+            clock: 0,
+            entries: 0,
+            lru: BinaryHeap::new(),
+        }
     }
 
     /// Blocks currently held by the index.
@@ -88,22 +126,45 @@ impl PrefixIndex {
         self.entries == 0
     }
 
-    fn node(&self, path: &[u64]) -> Option<&TrieNode> {
-        let (&first, rest) = path.split_first()?;
-        let mut node = self.children.get(&first)?;
-        for h in rest {
-            node = node.children.get(h)?;
-        }
-        Some(node)
+    fn node(&self, id: NodeId) -> &TrieNode {
+        self.arena[id].as_ref().expect("live node id")
     }
 
-    fn node_mut(&mut self, path: &[u64]) -> Option<&mut TrieNode> {
-        let (&first, rest) = path.split_first()?;
-        let mut node = self.children.get_mut(&first)?;
-        for h in rest {
-            node = node.children.get_mut(h)?;
+    fn node_mut(&mut self, id: NodeId) -> &mut TrieNode {
+        self.arena[id].as_mut().expect("live node id")
+    }
+
+    /// Follow `path` from the root; `None` if any edge is missing.
+    fn walk(&self, path: &[u64]) -> Option<NodeId> {
+        let mut at = ROOT;
+        for h in path {
+            at = *self.node(at).children.get(h)?;
         }
-        Some(node)
+        Some(at)
+    }
+
+    /// Allocate a fresh tombstone node under `parent`, reusing a freed
+    /// arena slot when one exists.
+    fn alloc_child(&mut self, parent: NodeId, key: u64) -> NodeId {
+        let node = TrieNode {
+            block: None,
+            children: HashMap::new(),
+            last_touch: 0,
+            parent,
+            key,
+        };
+        let id = match self.free.pop() {
+            Some(id) => {
+                self.arena[id] = Some(node);
+                id
+            }
+            None => {
+                self.arena.push(Some(node));
+                self.arena.len() - 1
+            }
+        };
+        self.node_mut(parent).children.insert(key, id);
+        id
     }
 
     /// Look up a just-sealed block: does a stream whose previous sealed
@@ -114,18 +175,16 @@ impl PrefixIndex {
     pub fn lookup(&mut self, path: &[u64], hash: u64, candidate: &KvBlock) -> Option<Arc<KvBlock>> {
         self.clock += 1;
         let stamp = self.clock;
-        let children = match path.is_empty() {
-            true => &mut self.children,
-            false => &mut self.node_mut(path)?.children,
-        };
-        let node = children.get_mut(&hash)?;
+        let at = self.walk(path)?;
+        let id = *self.node(at).children.get(&hash)?;
+        let node = self.node_mut(id);
         let block = node.block.as_ref()?;
         if !block.content_eq(candidate) {
             return None; // hash collision: treat as a miss, never share
         }
+        let shared = Arc::clone(block);
         node.last_touch = stamp;
-        let shared = Arc::clone(node.block.as_ref().expect("checked above"));
-        self.push_lru(stamp, path, hash);
+        self.push_lru(stamp, id);
         Some(shared)
     }
 
@@ -139,48 +198,46 @@ impl PrefixIndex {
     pub fn insert(&mut self, path: &[u64], hash: u64, block: Arc<KvBlock>) -> Option<Arc<KvBlock>> {
         self.clock += 1;
         let stamp = self.clock;
-        let mut children = &mut self.children;
-        for h in path {
-            children = &mut children
-                .entry(*h)
-                .or_insert_with(|| TrieNode {
-                    block: None,
-                    children: HashMap::new(),
-                    last_touch: 0,
-                })
-                .children;
+        let mut at = ROOT;
+        for &h in path {
+            at = match self.node(at).children.get(&h) {
+                Some(&id) => id,
+                None => self.alloc_child(at, h),
+            };
         }
-        let node = children.entry(hash).or_insert_with(|| TrieNode {
-            block: None,
-            children: HashMap::new(),
-            last_touch: 0,
-        });
+        let target = match self.node(at).children.get(&hash) {
+            Some(&id) => id,
+            None => self.alloc_child(at, hash),
+        };
+        let node = self.node_mut(target);
         let displaced = node.block.take();
+        node.block = Some(block);
+        node.last_touch = stamp;
         if displaced.is_none() {
             self.entries += 1;
         }
-        node.block = Some(block);
-        node.last_touch = stamp;
-        self.push_lru(stamp, path, hash);
+        self.push_lru(stamp, target);
         displaced
     }
 
-    /// Record a fresh `(stamp, full path)` LRU snapshot for the node at
-    /// `path` + `hash`, compacting the heap when stale snapshots dominate
-    /// the live entry count (a long run of hits with no eviction would
-    /// otherwise grow it without bound).
-    fn push_lru(&mut self, stamp: u64, path: &[u64], hash: u64) {
-        let mut full = Vec::with_capacity(path.len() + 1);
-        full.extend_from_slice(path);
-        full.push(hash);
-        self.lru.push(Reverse((stamp, full)));
+    /// Record a fresh `(stamp, node id)` LRU snapshot, compacting the
+    /// heap when stale snapshots dominate the live entry count (a long
+    /// run of hits with no eviction would otherwise grow it without
+    /// bound).
+    fn push_lru(&mut self, stamp: u64, id: NodeId) {
+        self.lru.push(Reverse((stamp, id)));
         if self.lru.len() > 64 && self.lru.len() > 4 * self.entries.max(1) {
-            // rebuild from the trie's current stamps: one snapshot per
+            // rebuild from the arena's current stamps: one snapshot per
             // block-holding node.  Heap pops depend only on the (unique)
             // stamps, so a rebuild never changes the eviction order.
             let mut rebuilt = BinaryHeap::with_capacity(self.entries);
-            let mut walk = Vec::new();
-            collect_lru_snapshots(&self.children, &mut walk, &mut rebuilt);
+            for (id, slot) in self.arena.iter().enumerate() {
+                if let Some(node) = slot {
+                    if node.block.is_some() {
+                        rebuilt.push(Reverse((node.last_touch, id)));
+                    }
+                }
+            }
             self.lru = rebuilt;
         }
     }
@@ -188,28 +245,25 @@ impl PrefixIndex {
     /// Remove the entry at `path` + `hash` if its block is exactly the
     /// one `holder` shares and nothing else references it (`Arc` strong
     /// count ≤ 2: the index plus `holder`).  Used by the sliding-window
-    /// path when no capacity bound exists to reclaim retention later.
-    /// Returns the removed `Arc` for the caller to release.
+    /// path when no capacity bound exists to reclaim retention later,
+    /// and by batch-chain release at request completion.  Returns the
+    /// removed `Arc` for the caller to release.
     pub fn remove_if_unshared(
         &mut self,
         path: &[u64],
         hash: u64,
         holder: &Arc<KvBlock>,
     ) -> Option<Arc<KvBlock>> {
-        let children = match path.is_empty() {
-            true => &mut self.children,
-            false => &mut self.node_mut(path)?.children,
-        };
-        let node = children.get_mut(&hash)?;
+        let at = self.walk(path)?;
+        let id = *self.node(at).children.get(&hash)?;
+        let node = self.node_mut(id);
         let block = node.block.as_ref()?;
         if !Arc::ptr_eq(block, holder) || Arc::strong_count(block) > 2 {
             return None; // another stream still shares it: keep
         }
         let removed = node.block.take().expect("checked above");
         self.entries -= 1;
-        let mut full_path = path.to_vec();
-        full_path.push(hash);
-        prune(&mut self.children, &full_path);
+        self.prune_up(id);
         Some(removed)
     }
 
@@ -224,22 +278,23 @@ impl PrefixIndex {
     /// O(log N) heap pops per victim instead of a full trie DFS per
     /// sealed block (the steady-state capacity-pressure cost this
     /// replaces).  Snapshots are popped in global stamp order: stale ones
-    /// (node gone, tombstoned, or re-touched under a newer stamp) are
-    /// discarded, and snapshots of blocks a live stream still references
-    /// are set aside and pushed back for a later pass.  Interior nodes
-    /// tombstone (descendants stay addressable); leaves are removed and
-    /// empty tombstone chains pruned.  Returns the evicted `Arc`s for the
-    /// caller to release back to the pool, oldest first — possibly fewer
-    /// than `max`.  The order matches the `#[cfg(test)]` DFS oracle
-    /// exactly (unique stamps leave no ties).
+    /// (node gone, tombstoned, re-touched under a newer stamp, or a
+    /// freed id's new tenant) are discarded, and snapshots of blocks a
+    /// live stream still references are set aside and pushed back for a
+    /// later pass.  Interior nodes tombstone (descendants stay
+    /// addressable); leaves are removed and empty tombstone chains
+    /// pruned.  Returns the evicted `Arc`s for the caller to release
+    /// back to the pool, oldest first — possibly fewer than `max`.  The
+    /// order matches the `#[cfg(test)]` DFS oracle exactly (unique
+    /// stamps leave no ties).
     pub fn evict_lru_batch(&mut self, max: usize) -> Vec<Arc<KvBlock>> {
         let mut evicted = Vec::new();
         let mut still_referenced: Vec<LruEntry> = Vec::new();
         while evicted.len() < max {
-            let Some(Reverse((stamp, path))) = self.lru.pop() else {
+            let Some(Reverse((stamp, id))) = self.lru.pop() else {
                 break; // heap drained: nothing held is evictable
             };
-            let Some(node) = self.node_mut(&path) else {
+            let Some(node) = self.arena[id].as_mut() else {
                 continue; // stale: the node was evicted and pruned
             };
             let Some(block) = node.block.as_ref() else {
@@ -251,91 +306,71 @@ impl PrefixIndex {
             if Arc::strong_count(block) > 1 {
                 // live-referenced: not evictable *now*, but this snapshot
                 // is the node's current one — keep it for later passes
-                still_referenced.push(Reverse((stamp, path)));
+                still_referenced.push(Reverse((stamp, id)));
                 continue;
             }
             let block = node.block.take().expect("checked above");
             self.entries -= 1;
-            prune(&mut self.children, &path);
+            self.prune_up(id);
             evicted.push(block);
         }
         self.lru.extend(still_referenced);
         evicted
     }
 
+    /// Remove `id` if it is an empty tombstone, cascading up through
+    /// ancestors that become empty tombstones themselves.  Freed slots
+    /// go to the free list for reuse.
+    fn prune_up(&mut self, mut id: NodeId) {
+        while id != ROOT {
+            let node = self.node(id);
+            if node.block.is_some() || !node.children.is_empty() {
+                break;
+            }
+            let (parent, key) = (node.parent, node.key);
+            self.node_mut(parent).children.remove(&key);
+            self.arena[id] = None;
+            self.free.push(id);
+            id = parent;
+        }
+    }
+
     /// The retired full-trie implementation, kept as the test oracle for
-    /// the heap path: collect every evictable node in one DFS, sort by
-    /// the unique stamps, take the oldest `max`.
+    /// the heap path: collect every evictable node in one DFS from the
+    /// root, sort by the unique stamps, take the oldest `max`.
     #[cfg(test)]
     fn evict_lru_batch_dfs(&mut self, max: usize) -> Vec<Arc<KvBlock>> {
         if max == 0 {
             return Vec::new();
         }
         let mut candidates = Vec::new();
-        let mut path = Vec::new();
-        find_evictable(&self.children, &mut path, &mut candidates);
+        self.find_evictable(ROOT, &mut candidates);
         // unique stamps make the order (and the evicted set) deterministic
         candidates.sort_unstable_by_key(|(stamp, _)| *stamp);
         candidates.truncate(max);
         let mut evicted = Vec::with_capacity(candidates.len());
-        for (_, path) in candidates {
-            let node = self.node_mut(&path).expect("evictable path just found");
+        for (_, id) in candidates {
+            let node = self.node_mut(id);
             let block = node.block.take().expect("evictable node holds a block");
             self.entries -= 1;
-            prune(&mut self.children, &path);
+            self.prune_up(id);
             evicted.push(block);
         }
         evicted
     }
-}
 
-/// DFS collecting one `(last_touch, path)` snapshot per block-holding
-/// node — the heap-compaction rebuild walk.
-fn collect_lru_snapshots(
-    children: &HashMap<u64, TrieNode>,
-    path: &mut Vec<u64>,
-    out: &mut BinaryHeap<LruEntry>,
-) {
-    for (&h, node) in children {
-        path.push(h);
-        if node.block.is_some() {
-            out.push(Reverse((node.last_touch, path.clone())));
-        }
-        collect_lru_snapshots(&node.children, path, out);
-        path.pop();
-    }
-}
-
-/// DFS collecting `(last_touch, path)` of every evictable node (block
-/// held, strong count 1) — oracle support only.
-#[cfg(test)]
-fn find_evictable(
-    children: &HashMap<u64, TrieNode>,
-    path: &mut Vec<u64>,
-    out: &mut Vec<(u64, Vec<u64>)>,
-) {
-    for (&h, node) in children {
-        path.push(h);
-        if let Some(block) = &node.block {
-            if Arc::strong_count(block) == 1 {
-                out.push((node.last_touch, path.clone()));
+    /// DFS collecting `(last_touch, id)` of every evictable node (block
+    /// held, strong count 1) — oracle support only.
+    #[cfg(test)]
+    fn find_evictable(&self, id: NodeId, out: &mut Vec<(u64, NodeId)>) {
+        for &child in self.node(id).children.values() {
+            let node = self.node(child);
+            if let Some(block) = &node.block {
+                if Arc::strong_count(block) == 1 {
+                    out.push((node.last_touch, child));
+                }
             }
-        }
-        find_evictable(&node.children, path, out);
-        path.pop();
-    }
-}
-
-/// Remove the node at `path` if it is an empty tombstone, cascading up
-/// through ancestors that become empty tombstones themselves.
-fn prune(children: &mut HashMap<u64, TrieNode>, path: &[u64]) {
-    let Some((&first, rest)) = path.split_first() else {
-        return;
-    };
-    if let Some(node) = children.get_mut(&first) {
-        prune(&mut node.children, rest);
-        if node.block.is_none() && node.children.is_empty() {
-            children.remove(&first);
+            self.find_evictable(child, out);
         }
     }
 }
@@ -563,6 +598,32 @@ mod tests {
         assert!(idx.evict_lru().is_some());
         assert!(idx.evict_lru().is_some());
         assert!(idx.is_empty());
-        assert!(idx.children.is_empty(), "tombstone chain must be pruned");
+        assert!(idx.node(ROOT).children.is_empty(), "tombstone chain must be pruned");
+        assert_eq!(idx.free.len(), 2, "pruned nodes return their arena slots");
+    }
+
+    #[test]
+    fn freed_ids_are_reused_and_stale_snapshots_stay_inert() {
+        let mut idx = PrefixIndex::new();
+        let a = sealed(2, 1.0);
+        let ha = a.content_hash();
+        let _ = idx.insert(&[], ha, a);
+        assert!(idx.evict_lru().is_some());
+        let slots_after_evict = idx.arena.len();
+        // the freed slot is reused by the next insert — the arena does
+        // not grow...
+        let b = sealed(2, 2.0);
+        let hb = b.content_hash();
+        let _ = idx.insert(&[], hb, Arc::clone(&b));
+        assert_eq!(idx.arena.len(), slots_after_evict, "freed slot must be reused");
+        assert!(idx.free.is_empty());
+        // ...and any stale snapshot aimed at the recycled id must not
+        // evict (or double-count) the new tenant while it is referenced
+        assert!(idx.evict_lru().is_none(), "b is still referenced");
+        assert_eq!(idx.len(), 1);
+        drop(b);
+        let evicted = idx.evict_lru().expect("b evictable after release");
+        assert_eq!(evicted.k_token(0)[0], 2.0);
+        assert!(idx.is_empty());
     }
 }

@@ -5,7 +5,9 @@
 //!   sweep    — run a method × task sweep and print Tables 1-3
 //!   fig1     — the Figure-1 spectral-norm approximation study
 //!   flops    — print the Table-5 FLOPs model
-//!   serve    — run the batched inference service demo
+//!   serve    — run the batched inference service demo (or, with
+//!              --listen ADDR, a TCP serving front end)
+//!   client   — drive a `serve --listen` front end over TCP
 //!   inspect  — dump an artifact manifest summary
 //!
 //! Run `skein help` for flags.
@@ -39,6 +41,7 @@ fn run() -> Result<()> {
         Some("fig1") => cmd_fig1(&args),
         Some("flops") => cmd_flops(&args),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("help") | None => {
             print_help();
@@ -69,6 +72,14 @@ fn print_help() {
                     of per-token decode; 0 = off) paged KV cache: [--kv-blocks N]\n\
                     (capacity; enables the cache) [--kv-window W] (sliding\n\
                     window, tokens) [--kv-block-size B] (tokens/block, default 16)\n\
+                    --listen ADDR serves the same engine over TCP instead of\n\
+                    running the demo loop (e.g. --listen 127.0.0.1:7878;\n\
+                    [--serve-secs N] stops after N seconds, default: forever;\n\
+                    [--queue-depth N] bounds in-flight work)\n\
+           client   --addr HOST:PORT [--requests N] [--window W] (pipelined\n\
+                    one-shot submits, W in flight), or\n\
+                    --stream [--tokens N] [--repilot-stride S] (decode loop);\n\
+                    workload shape comes from the server's handshake\n\
            inspect  <artifacts/..._manifest.json>\n\n\
          GLOBAL FLAGS\n\
            --pool-size N   worker threads in the persistent pool (default:\n\
@@ -224,6 +235,9 @@ fn cmd_serve_cpu(args: &Args) -> Result<()> {
     use skeinformer::coordinator::attention_server::{self, AttentionServerConfig, HeadsRequest};
 
     let cfg = AttentionServerConfig::from_args(args)?;
+    if let Some(listen) = args.get("listen") {
+        return cmd_serve_listen(args, cfg, listen);
+    }
     if args.switch("stream") {
         return cmd_serve_stream(args, cfg);
     }
@@ -267,6 +281,143 @@ fn cmd_serve_cpu(args: &Args) -> Result<()> {
         latency.percentile(95.0),
         latency.percentile(99.0),
         stats.mean_queue_ms
+    );
+    Ok(())
+}
+
+/// `serve --listen ADDR`: expose the batched attention engine over TCP
+/// instead of running the in-process demo loop.  Wire connections are
+/// just more scheduler lanes, so serving is bitwise identical to the
+/// in-process path; `--serve-secs N` stops after N seconds (0 = run
+/// until killed).
+fn cmd_serve_listen(
+    args: &Args,
+    cfg: skeinformer::coordinator::attention_server::AttentionServerConfig,
+    addr: &str,
+) -> Result<()> {
+    use skeinformer::coordinator::{attention_server, net};
+
+    let serve_secs = args.get_u64("serve-secs", 0)?;
+    let handle = attention_server::start(cfg.clone())?;
+    let server = net::serve(&handle, addr).with_context(|| format!("bind {addr}"))?;
+    eprintln!(
+        "serving method={} B<={} H={} n={} p={} on {}{}",
+        cfg.method,
+        cfg.max_batch,
+        cfg.heads,
+        cfg.seq,
+        cfg.head_dim,
+        server.local_addr(),
+        if serve_secs > 0 { format!(" for {serve_secs}s") } else { " until killed".into() }
+    );
+    if serve_secs == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(serve_secs));
+    server.stop();
+    let stats = handle.shutdown()?;
+    println!(
+        "served {} requests — steps={} step-occupancy={:.2} rejected={} \
+         appends={} queries={} engine {:.1} ms/batch",
+        stats.requests,
+        stats.steps,
+        stats.mean_step_occupancy,
+        stats.rejected,
+        stats.stream_appends,
+        stats.stream_queries,
+        stats.mean_batch_ms
+    );
+    Ok(())
+}
+
+/// `skein client --addr HOST:PORT`: drive a `serve --listen` front end.
+/// The workload shape comes from the server's handshake.  Default mode
+/// pipelines `--requests` one-shot submits with a bounded in-flight
+/// `--window`; `--stream` runs a per-token decode loop instead
+/// (`--tokens` append + one-row query steps).
+fn cmd_client(args: &Args) -> Result<()> {
+    use skeinformer::coordinator::attention_server::HeadsRequest;
+    use skeinformer::coordinator::net::NetClient;
+
+    let addr = args.get("addr").context("usage: skein client --addr HOST:PORT")?;
+    let mut client = NetClient::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let info = client.info().clone();
+    eprintln!(
+        "connected to {addr}: method={} B<={} H={} n={} p={}",
+        info.method, info.max_batch, info.heads, info.seq, info.head_dim
+    );
+    let mut rng = Rng::new(args.get_u64("seed", 7)?);
+    let mut latency = Percentiles::default();
+
+    if args.switch("stream") {
+        let tokens = args.get_usize("tokens", info.seq as usize)?;
+        let stride = args.get_usize("repilot-stride", 1)? as u32;
+        let token_elems = info.token_elems();
+        let mut mk = |rng: &mut Rng| {
+            let mut buf = vec![0.0f32; token_elems];
+            rng.fill_normal(&mut buf);
+            buf
+        };
+        let stream = client.open_stream(stride)?;
+        let t0 = std::time::Instant::now();
+        for _ in 0..tokens {
+            let (k, v, q) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+            let step = std::time::Instant::now();
+            client.append(stream, &k, &v)?;
+            let out = client.query(stream, 1, &q)?;
+            latency.push(step.elapsed().as_secs_f64() * 1e3);
+            anyhow::ensure!(out.len() == token_elems);
+            anyhow::ensure!(out.iter().all(|x| x.is_finite()));
+        }
+        client.close_stream(stream)?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!("decoded {} tokens in {:.2}s ({:.1} tok/s)", tokens, wall, tokens as f64 / wall);
+    } else {
+        let n_requests = args.get_usize("requests", 64)?;
+        let window = args.get_usize("window", 16)?.max(1);
+        let elems = info.request_elems();
+        let mut inflight = std::collections::VecDeque::new();
+        let mut settle = |client: &mut NetClient,
+                          inflight: &mut std::collections::VecDeque<(u64, std::time::Instant)>,
+                          latency: &mut Percentiles|
+         -> Result<()> {
+            let (id, sent) = inflight.pop_front().expect("settle on empty window");
+            let out = client.wait_output(id)?;
+            latency.push(sent.elapsed().as_secs_f64() * 1e3);
+            anyhow::ensure!(out.len() == elems);
+            anyhow::ensure!(out.iter().all(|x| x.is_finite()));
+            Ok(())
+        };
+        let t0 = std::time::Instant::now();
+        for _ in 0..n_requests {
+            let req = HeadsRequest::random(elems, &mut rng);
+            inflight.push_back((client.submit_async(&req)?, std::time::Instant::now()));
+            // bounded pipeline: replies arrive in submission order on this
+            // connection's lane, so draining the oldest keeps `window`
+            // requests in flight without the server ever buffering more
+            if inflight.len() >= window {
+                settle(&mut client, &mut inflight, &mut latency)?;
+            }
+        }
+        while !inflight.is_empty() {
+            settle(&mut client, &mut inflight, &mut latency)?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "submitted {} requests in {:.2}s ({:.1} seq/s, window {})",
+            n_requests,
+            wall,
+            n_requests as f64 / wall,
+            window
+        );
+    }
+    println!(
+        "latency ms: p50={:.2} p95={:.2} p99={:.2}",
+        latency.percentile(50.0),
+        latency.percentile(95.0),
+        latency.percentile(99.0)
     );
     Ok(())
 }

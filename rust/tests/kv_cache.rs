@@ -42,6 +42,7 @@ fn server_cfg(method: &str, kv: Option<KvCacheConfig>) -> AttentionServerConfig 
         max_wait: Duration::from_millis(1),
         seed: 0,
         workers: None,
+        queue_depth: 0,
         kv,
     }
 }

@@ -1,0 +1,389 @@
+//! Socket serving front end: the TCP path must be a transparent
+//! transport over the in-process attention server.
+//!
+//! * **Bitwise transparency** — one-shot submits, per-token decode, and
+//!   chunked prefill round-tripped through `net::serve` + [`NetClient`]
+//!   produce byte-identical outputs to the in-process handle, for every
+//!   registry method (seeds derive from batch index / stream id, never
+//!   from transport or grid placement).
+//! * **Continuous batching** — streams that join and leave the executed
+//!   grid mid-run get the same bytes as streams served solo, and the
+//!   scheduler reports per-step occupancy.
+//! * **Robustness** — malformed, truncated, or hostile bytes never kill
+//!   the accept loop or the serve thread: structurally recoverable
+//!   frames answer a typed wire error on the same connection,
+//!   desynchronizing input closes only that connection, and rejections
+//!   carry `ServeError` codes instead of dropping reply channels.
+
+use skeinformer::attention;
+use skeinformer::coordinator::attention_server::{
+    self, AttentionServerConfig, AttentionServerStats, HeadsRequest,
+};
+use skeinformer::coordinator::net::{self, wire, ClientError, NetClient};
+use skeinformer::rng::Rng;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn cfg(method: &str) -> AttentionServerConfig {
+    AttentionServerConfig {
+        method: method.to_string(),
+        d: 8,
+        heads: 2,
+        seq: 16,
+        head_dim: 4,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        seed: 0,
+        workers: None,
+        queue_depth: 0,
+        kv: None,
+    }
+}
+
+fn requests(cfg: &AttentionServerConfig, n: usize, seed: u64) -> Vec<HeadsRequest> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| HeadsRequest::random(cfg.request_elems(), &mut rng)).collect()
+}
+
+/// Per-token (k, v, q) slabs of `[heads, head_dim]` rows.
+fn token_triples(
+    token_elems: usize,
+    n: usize,
+    seed: u64,
+) -> Vec<(Arc<[f32]>, Arc<[f32]>, Arc<[f32]>)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut mk = || {
+                let mut b = vec![0.0f32; token_elems];
+                rng.fill_normal(&mut b);
+                let s: Arc<[f32]> = b.into();
+                s
+            };
+            (mk(), mk(), mk())
+        })
+        .collect()
+}
+
+/// Repack per-token `[heads, head_dim]` rows `lo..hi` as one
+/// `[heads, tokens, head_dim]` chunk slab (the Prefill layout).
+fn chunk_slab(rows: &[Arc<[f32]>], lo: usize, hi: usize, heads: usize, head_dim: usize) -> Vec<f32> {
+    let n = hi - lo;
+    let mut slab = vec![0.0f32; n * heads * head_dim];
+    for (i, row) in rows[lo..hi].iter().enumerate() {
+        for h in 0..heads {
+            let dst = (h * n + i) * head_dim;
+            slab[dst..dst + head_dim].copy_from_slice(&row[h * head_dim..(h + 1) * head_dim]);
+        }
+    }
+    slab
+}
+
+#[test]
+fn socket_submit_is_bitwise_identical_to_in_process() {
+    for method in attention::registry(8) {
+        let name = method.name();
+        let c = cfg(name);
+        let reqs = requests(&c, 5, 42);
+
+        // in-process: submit-and-wait, so batch i of the server lifetime
+        // serves request i
+        let handle = attention_server::start(c.clone()).unwrap();
+        let want: Vec<Vec<f32>> =
+            reqs.iter().map(|r| handle.submit(r.clone()).recv().expect("reply")).collect();
+        handle.shutdown().unwrap();
+
+        // over the wire: same lifetime batch indices, same seeds
+        let handle = attention_server::start(c.clone()).unwrap();
+        let server = net::serve(&handle, "127.0.0.1:0").expect("bind");
+        let mut client = NetClient::connect(server.local_addr()).expect("connect");
+        assert_eq!(client.info().method, name);
+        assert_eq!(client.info().request_elems(), c.request_elems());
+        let got: Vec<Vec<f32>> =
+            reqs.iter().map(|r| client.submit(r).expect("wire reply")).collect();
+        drop(client);
+        server.stop();
+        let stats = handle.shutdown().unwrap();
+
+        assert_eq!(got, want, "{name}: TCP transport changed served bytes");
+        assert_eq!(stats.requests, 5, "{name}");
+        assert!(stats.steps >= stats.batches && stats.steps > 0, "{name}: no steps recorded");
+        assert!(stats.mean_step_occupancy > 0.0, "{name}: occupancy not reported");
+    }
+}
+
+fn decode_in_process(
+    c: &AttentionServerConfig,
+    toks: &[(Arc<[f32]>, Arc<[f32]>, Arc<[f32]>)],
+    cross: bool,
+    q_full: &[f32],
+) -> Vec<f32> {
+    let handle = attention_server::start(c.clone()).unwrap();
+    let stream = handle.open_stream(1);
+    let mut outs = Vec::new();
+    for (k, v, q) in toks {
+        stream.append(k.clone(), v.clone());
+        if cross {
+            outs.extend(stream.query(q.clone(), 1).recv().expect("stream reply"));
+        }
+    }
+    if !cross {
+        let q: Arc<[f32]> = q_full.to_vec().into();
+        outs.extend(stream.query(q, toks.len()).recv().expect("square reply"));
+    }
+    stream.close();
+    handle.shutdown().unwrap();
+    outs
+}
+
+#[test]
+fn socket_stream_decode_is_bitwise_identical_to_in_process() {
+    for method in attention::registry(8) {
+        let name = method.name();
+        let c = cfg(name);
+        let cross = attention::by_name(name, c.d).expect("registry").supports_cross_shape();
+        let toks = token_triples(c.heads * c.head_dim, 6, 21);
+        let mut q_full = vec![0.0f32; c.heads * toks.len() * c.head_dim];
+        Rng::new(555).fill_normal(&mut q_full);
+
+        let want = decode_in_process(&c, &toks, cross, &q_full);
+
+        let handle = attention_server::start(c.clone()).unwrap();
+        let server = net::serve(&handle, "127.0.0.1:0").expect("bind");
+        let mut client = NetClient::connect(server.local_addr()).expect("connect");
+        let sid = client.open_stream(1).expect("open");
+        let mut got = Vec::new();
+        for (k, v, q) in &toks {
+            client.append(sid, k, v).expect("append");
+            if cross {
+                got.extend(client.query(sid, 1, q).expect("wire stream reply"));
+            }
+        }
+        if !cross {
+            got.extend(client.query(sid, toks.len() as u32, &q_full).expect("wire square reply"));
+        }
+        client.close_stream(sid).expect("close");
+        drop(client);
+        server.stop();
+        let stats = handle.shutdown().unwrap();
+
+        assert!(!want.is_empty(), "{name}: no outputs collected");
+        assert_eq!(got, want, "{name}: TCP transport changed decoded bytes");
+        assert_eq!(stats.stream_appends, 6, "{name}");
+    }
+}
+
+#[test]
+fn socket_prefill_is_bitwise_identical_to_in_process_append() {
+    let c = cfg("skeinformer");
+    let toks = token_triples(c.heads * c.head_dim, 7, 77);
+    let mut q_full = vec![0.0f32; c.heads * toks.len() * c.head_dim];
+    Rng::new(999).fill_normal(&mut q_full);
+    // in-process per-token appends, one square query (cross=false path)
+    let want = decode_in_process(&c, &toks, false, &q_full);
+
+    let handle = attention_server::start(c.clone()).unwrap();
+    let server = net::serve(&handle, "127.0.0.1:0").expect("bind");
+    let mut client = NetClient::connect(server.local_addr()).expect("connect");
+    let sid = client.open_stream(1).expect("open");
+    let ks: Vec<Arc<[f32]>> = toks.iter().map(|(k, _, _)| k.clone()).collect();
+    let vs: Vec<Arc<[f32]>> = toks.iter().map(|(_, v, _)| v.clone()).collect();
+    // chunk boundaries that start and end mid-stream
+    for &(lo, hi) in &[(0usize, 3usize), (3, 6), (6, 7)] {
+        let kc = chunk_slab(&ks, lo, hi, c.heads, c.head_dim);
+        let vc = chunk_slab(&vs, lo, hi, c.heads, c.head_dim);
+        client.prefill(sid, (hi - lo) as u32, &kc, &vc).expect("prefill");
+    }
+    let got = client.query(sid, toks.len() as u32, &q_full).expect("wire prefill reply");
+    client.close_stream(sid).expect("close");
+    drop(client);
+    server.stop();
+    handle.shutdown().unwrap();
+
+    assert_eq!(got, want, "wire chunked prefill changed served bytes");
+}
+
+/// Decode `toks` on a fresh server after burning `burn` stream ids, so
+/// the stream under test gets the same id it had in the combined run.
+fn solo_decode(
+    c: &AttentionServerConfig,
+    toks: &[(Arc<[f32]>, Arc<[f32]>, Arc<[f32]>)],
+    burn: usize,
+) -> Vec<f32> {
+    let handle = attention_server::start(c.clone()).unwrap();
+    for _ in 0..burn {
+        handle.open_stream(1).close();
+    }
+    let stream = handle.open_stream(1);
+    let mut outs = Vec::new();
+    for (k, v, q) in toks {
+        stream.append(k.clone(), v.clone());
+        outs.extend(stream.query(q.clone(), 1).recv().expect("solo reply"));
+    }
+    stream.close();
+    handle.shutdown().unwrap();
+    outs
+}
+
+#[test]
+fn continuous_batching_join_and_leave_match_solo_streams() {
+    // stream A decodes 6 tokens; stream B joins after A's 3rd token and
+    // keeps decoding after A leaves.  During the overlap both queries are
+    // in flight together, so the scheduler may co-admit them into one
+    // step — served bytes must not depend on that placement.
+    let c = cfg("skeinformer");
+    let te = c.heads * c.head_dim;
+    let toks_a = token_triples(te, 6, 21);
+    let toks_b = token_triples(te, 6, 22);
+    let want_a = solo_decode(&c, &toks_a, 0); // stream id 0
+    let want_b = solo_decode(&c, &toks_b, 1); // stream id 1
+
+    let handle = attention_server::start(c.clone()).unwrap();
+    let a = handle.open_stream(1);
+    let mut outs_a = Vec::new();
+    let mut outs_b = Vec::new();
+    for (k, v, q) in &toks_a[..3] {
+        a.append(k.clone(), v.clone());
+        outs_a.extend(a.query(q.clone(), 1).recv().expect("a solo phase"));
+    }
+    let b = handle.open_stream(1);
+    for t in 0..3 {
+        let (ka, va, qa) = &toks_a[3 + t];
+        let (kb, vb, qb) = &toks_b[t];
+        a.append(ka.clone(), va.clone());
+        b.append(kb.clone(), vb.clone());
+        // both queries pending before either reply is drained: the step
+        // scheduler is free to run them side by side
+        let rx_a = a.query(qa.clone(), 1);
+        let rx_b = b.query(qb.clone(), 1);
+        outs_a.extend(rx_a.recv().expect("a overlap"));
+        outs_b.extend(rx_b.recv().expect("b overlap"));
+    }
+    a.close();
+    for (k, v, q) in &toks_b[3..] {
+        b.append(k.clone(), v.clone());
+        outs_b.extend(b.query(q.clone(), 1).recv().expect("b solo phase"));
+    }
+    b.close();
+    let stats = handle.shutdown().unwrap();
+
+    assert_eq!(outs_a, want_a, "stream A changed bytes when sharing the grid");
+    assert_eq!(outs_b, want_b, "stream B changed bytes when joining mid-run");
+    assert_eq!(stats.stream_queries, 12);
+    assert!(stats.steps > 0 && stats.mean_step_occupancy > 0.0);
+}
+
+#[test]
+fn malformed_and_truncated_frames_never_kill_the_server() {
+    let c = cfg("skeinformer");
+    let handle = attention_server::start(c.clone()).unwrap();
+    let server = net::serve(&handle, "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+    let req = requests(&c, 1, 1).remove(0);
+
+    // (a) bad magic: the connection dies without a handshake
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&[0xDE, 0xAD, 0xBE, 0xEF, 1, 0]).unwrap();
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+    }
+    // (b) valid hello, then hostile bytes (0xFF length prefix blows the
+    // frame cap): fatal for this connection only
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        wire::write_hello(&mut s).unwrap();
+        s.write_all(&[0xFF; 64]).unwrap();
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+    }
+    // (c) a frame truncated mid-body, then EOF: fatal, no panic
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        wire::write_hello(&mut s).unwrap();
+        let frame = wire::encode_submit(1, &req);
+        s.write_all(&frame[..frame.len() / 2]).unwrap();
+        let _ = s.shutdown(std::net::Shutdown::Write);
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+    }
+    // (d) a structurally malformed frame answers a typed wire error and
+    // the SAME connection then serves a valid round-trip
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        wire::write_hello(&mut s).unwrap();
+        wire::read_hello(&mut s).expect("server hello");
+        match wire::read_server_frame(&mut s).expect("config frame") {
+            wire::ServerFrame::Config(info) => assert_eq!(info.method, c.method),
+            other => panic!("expected config frame, got {other:?}"),
+        }
+        // a close frame with 3 junk bytes inside its declared length
+        let inner = wire::encode_close(5, 0);
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&((inner.len() - 4 + 3) as u32).to_le_bytes());
+        bad.extend_from_slice(&inner[4..]);
+        bad.extend_from_slice(&[0xAA, 0xBB, 0xCC]);
+        s.write_all(&bad).unwrap();
+        match wire::read_server_frame(&mut s).expect("error frame") {
+            wire::ServerFrame::Error { id, code, .. } => {
+                assert_eq!((id, code), (5, wire::WIRE_ERROR_CODE));
+            }
+            other => panic!("expected wire error frame, got {other:?}"),
+        }
+        s.write_all(&wire::encode_submit(7, &req)).unwrap();
+        match wire::read_server_frame(&mut s).expect("output frame") {
+            wire::ServerFrame::Output { id, out } => {
+                assert_eq!(id, 7);
+                assert_eq!(out.len(), c.request_elems());
+            }
+            other => panic!("expected output frame, got {other:?}"),
+        }
+    }
+    // the accept loop survived all of it: a fresh client still round-trips
+    let mut client = NetClient::connect(addr).expect("accept loop died");
+    let out = client.submit(&req).expect("post-fuzz round trip");
+    assert_eq!(out.len(), c.request_elems());
+    drop(client);
+    server.stop();
+    let stats: AttentionServerStats = handle.shutdown().unwrap();
+    assert_eq!(stats.requests, 2, "only the two well-formed submits reached the engine");
+}
+
+#[test]
+fn wire_rejections_carry_typed_serve_error_codes() {
+    let c = cfg("skeinformer");
+    let handle = attention_server::start(c.clone()).unwrap();
+    let server = net::serve(&handle, "127.0.0.1:0").expect("bind");
+    let mut client = NetClient::connect(server.local_addr()).expect("connect");
+    let zero_q = vec![0.0f32; c.heads * c.head_dim];
+
+    // unknown stream -> ServeError::UnknownStream (code 2)
+    match client.query(999, 1, &zero_q) {
+        Err(ClientError::Rejected { code, .. }) => assert_eq!(code, 2),
+        other => panic!("expected typed rejection, got {other:?}"),
+    }
+    // wrong slab length -> ServeError::BadShape (code 1)
+    let bad = HeadsRequest::from_vecs(vec![0.0; 3], vec![0.0; 3], vec![0.0; 3]);
+    match client.submit(&bad) {
+        Err(ClientError::Rejected { code, .. }) => assert_eq!(code, 1),
+        other => panic!("expected typed rejection, got {other:?}"),
+    }
+    // a rejected fire-and-forget append surfaces on the next reply read
+    // instead of being silently dropped
+    let sid = client.open_stream(1).expect("open");
+    client.append(sid, &[0.0], &[0.0]).expect("send");
+    match client.query(sid, 1, &zero_q) {
+        Err(ClientError::Rejected { code, message }) => {
+            assert_eq!(code, 1, "append rejection should be BadShape: {message}");
+        }
+        other => panic!("expected append rejection to surface, got {other:?}"),
+    }
+    drop(client);
+    server.stop();
+    let stats = handle.shutdown().unwrap();
+    // unknown-stream query, bad submit, bad append, and the valid-shaped
+    // query against the (still empty) stream
+    assert_eq!(stats.rejected, 4);
+}
