@@ -3,7 +3,7 @@
 # `make artifacts` needs a python environment with jax installed (the L2
 # lowering path); everything else is pure rust and works offline.
 
-.PHONY: artifacts build test test-doc bench stream-bench cache-bench prefill-bench net-bench fmt clippy doc
+.PHONY: artifacts build test test-doc bench stream-bench cache-bench prefill-bench tier-bench net-bench fmt clippy doc
 
 artifacts:
 	python3 python/compile/aot.py --out artifacts
@@ -34,6 +34,11 @@ cache-bench:
 # batch-slab dedupe hit-rate probe only
 prefill-bench:
 	cargo bench --bench kv_cache -- --prefill
+
+# tier-ladder sweep only: f32-only vs f16 vs int8 vs f16+int8 vs spill
+# at one capacity, alternating shared/disjoint streams
+tier-bench:
+	cargo bench --bench kv_cache -- --tiers
 
 # TCP serving front end: req/s and per-step occupancy, socket vs
 # in-process, 1 vs 4 client connections

@@ -36,11 +36,24 @@
 //! Emits `reports/kv_prefill.csv`
 //! (`mode,chunk,method,tokens,tok_s,hit_blocks,alloc_blocks`).
 //!
+//! **Tier sweep** (`make tier-bench` → `--tiers` runs only this):
+//! alternating shared/disjoint decode streams over a capacity-bounded
+//! cache (capacity = one prompt's worth of blocks).  The disjoint
+//! streams manufacture eviction pressure; the shared replays measure
+//! how much of the common prompt each ladder retains — f32-only drops
+//! cold blocks (replays re-allocate), f16/int8 keep them resident at
+//! half/quarter bytes, spill rehydrates exact bytes from disk.
+//!
+//! Emits `reports/kv_tiers.csv`
+//! (`config,method,streams,tokens,tok_s,hit_blocks,alloc_blocks,demoted_blocks,spilled_blocks,spill_hits,resident_kv_bytes`).
+//!
 //! `make cache-bench`; `--full` extends tokens 512 → 2048.
 
 use skeinformer::bench_util::{ascii_table, write_csv};
-use skeinformer::coordinator::attention_server::{self, AttentionServerConfig, HeadsRequest};
-use skeinformer::kvcache::KvCacheConfig;
+use skeinformer::coordinator::attention_server::{
+    self, AttentionServerConfig, AttentionServerStats, HeadsRequest,
+};
+use skeinformer::kvcache::{tempdir, KvCacheConfig, TierLadder};
 use skeinformer::rng::Rng;
 use std::sync::Arc;
 use std::time::Duration;
@@ -228,14 +241,130 @@ fn run_prefill_suite(method: &str, tokens: usize) {
     }
 }
 
+/// One tier-sweep run: `rounds` sequential decode streams, even rounds
+/// replaying the shared prompt, odd rounds unique.  Returns (tok/s,
+/// shutdown stats).
+fn run_tier_workload(
+    c: &AttentionServerConfig,
+    rounds: usize,
+    tokens: usize,
+) -> (f64, AttentionServerStats) {
+    let token_elems = c.heads * c.head_dim;
+    let handle = attention_server::start(c.clone()).expect("server start");
+    let t0 = std::time::Instant::now();
+    for round in 0..rounds {
+        // K/V come from `rng` only (queries use their own stream) so
+        // every even round appends bit-identical prompt slabs
+        let data_seed = if round % 2 == 0 { 1 } else { 1000 + round as u64 };
+        let mut rng = Rng::new(data_seed);
+        let mut qrng = Rng::new(7);
+        let stream = handle.open_stream(1);
+        for _ in 0..tokens {
+            let mut mk = || {
+                let mut b = vec![0.0f32; token_elems];
+                rng.fill_normal(&mut b);
+                let slab: Arc<[f32]> = b.into();
+                slab
+            };
+            let (k, v) = (mk(), mk());
+            stream.append(k, v);
+            let mut q = vec![0.0f32; token_elems];
+            qrng.fill_normal(&mut q);
+            let out = stream.query(q.into(), 1).recv().expect("stream reply");
+            std::hint::black_box(out[0]);
+        }
+        stream.close();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = handle.shutdown().expect("server shutdown");
+    ((rounds * tokens) as f64 / wall, stats)
+}
+
+/// The tier-ladder sweep (`make tier-bench`): f32-only vs f16 vs int8 vs
+/// the full quant ladder vs spill-to-disk, all at the same capacity.
+fn run_tier_suite(method: &str, tokens: usize) {
+    let rounds = 6;
+    let cap = (tokens / BLOCK_SIZE).max(1); // one prompt's worth of blocks
+    let spill = tempdir("bench-tiers");
+    println!(
+        "kv-tier sweep: method={method} rounds={rounds} tokens={tokens} \
+         capacity={cap} blocks (block-size {BLOCK_SIZE})"
+    );
+    let ladders: Vec<(&str, TierLadder)> = vec![
+        ("f32", TierLadder::none()),
+        ("f16", TierLadder::none().with_f16(true)),
+        ("int8", TierLadder::none().with_int8(true)),
+        ("f16-int8", TierLadder::none().with_f16(true).with_int8(true)),
+        ("spill", TierLadder::none().with_spill_dir(spill.path())),
+    ];
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for (label, ladder) in ladders {
+        let kv = KvCacheConfig::new(BLOCK_SIZE).with_capacity_blocks(cap).with_tiers(ladder);
+        let c = cfg(method, Some(kv));
+        let (tok_s, s) = run_tier_workload(&c, rounds, tokens);
+        println!(
+            "  {label:<9} {tok_s:>9.1} tok/s  hits={} allocs={} demoted={} spilled={} \
+             spill-hits={} {:>9.1} KiB KV",
+            s.kv_hit_blocks,
+            s.kv_alloc_blocks,
+            s.kv_demoted_blocks,
+            s.kv_spilled_blocks,
+            s.kv_spill_hits,
+            s.kv_resident_bytes as f64 / 1024.0
+        );
+        rows.push(vec![
+            label.to_string(),
+            format!("{tok_s:.1}"),
+            s.kv_hit_blocks.to_string(),
+            s.kv_alloc_blocks.to_string(),
+            s.kv_demoted_blocks.to_string(),
+            s.kv_spilled_blocks.to_string(),
+            s.kv_spill_hits.to_string(),
+            format!("{:.1}", s.kv_resident_bytes as f64 / 1024.0),
+        ]);
+        csv.push(format!(
+            "{label},{method},{rounds},{tokens},{tok_s:.2},{},{},{},{},{},{}",
+            s.kv_hit_blocks,
+            s.kv_alloc_blocks,
+            s.kv_demoted_blocks,
+            s.kv_spilled_blocks,
+            s.kv_spill_hits,
+            s.kv_resident_bytes
+        ));
+    }
+    println!(
+        "\n{}",
+        ascii_table(
+            &["config", "tok/s", "hits", "allocs", "demoted", "spilled", "spill-hits", "resident KiB"],
+            &rows
+        )
+    );
+    if let Err(e) = write_csv(
+        "reports/kv_tiers.csv",
+        "config,method,streams,tokens,tok_s,hit_blocks,alloc_blocks,demoted_blocks,\
+         spilled_blocks,spill_hits,resident_kv_bytes",
+        &csv,
+    ) {
+        eprintln!("csv write failed: {e}");
+    } else {
+        eprintln!("rows written to reports/kv_tiers.csv");
+    }
+}
+
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let prefill_only = std::env::args().any(|a| a == "--prefill");
+    let tiers_only = std::env::args().any(|a| a == "--tiers");
     let tokens = if full { 2048 } else { 512 };
     let streams = 4;
     let method = "skeinformer";
     if prefill_only {
         run_prefill_suite(method, tokens);
+        return;
+    }
+    if tiers_only {
+        run_tier_suite(method, tokens);
         return;
     }
     println!(
@@ -302,4 +431,6 @@ fn main() {
 
     println!();
     run_prefill_suite(method, tokens);
+    println!();
+    run_tier_suite(method, tokens);
 }

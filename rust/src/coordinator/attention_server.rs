@@ -147,7 +147,7 @@ use crate::attention::{
     self, session_epoch, session_seed, AttentionSession, AttnInputs, AttnScratch,
     BatchedAttention, SessionSpec,
 };
-use crate::kvcache::{KvCache, KvCacheConfig, StreamChain};
+use crate::kvcache::{KvCache, KvCacheConfig, StreamChain, TierLadder};
 use crate::pool;
 use crate::rng::Rng;
 use crate::tensor::{with_default_plan, BatchTensor, MatmulPlan, Matrix};
@@ -393,7 +393,11 @@ impl AttentionServerConfig {
     /// `--kv-batch-dedupe` (route one-shot batched request slabs through
     /// the cache too; enables the cache when set alone, with
     /// [`DEFAULT_DEDUPE_CAPACITY_BLOCKS`] as the capacity unless
-    /// `--kv-blocks` says otherwise).  The global
+    /// `--kv-blocks` says otherwise).  The tier ladder rides two more
+    /// flags: `--kv-tiers f16,int8` (quantised demotion rungs; any
+    /// subset) and `--kv-spill-dir PATH` (content-addressed spill store
+    /// — enables warm restarts over the same directory).  Either tier
+    /// flag enables the cache when set alone.  The global
     /// `--pool-size` flag sizes the process-wide worker pool itself and
     /// is handled by the binaries via [`crate::pool::set_pool_size`].
     pub fn from_args(args: &crate::cli::Args) -> Result<Self, crate::cli::CliError> {
@@ -412,10 +416,24 @@ impl AttentionServerConfig {
         } else {
             kv_blocks
         };
-        let kv = (kv_blocks > 0 || kv_window > 0 || kv_batch_dedupe).then(|| {
+        let mut kv_tiers = match args.get("kv-tiers") {
+            Some(spec) => TierLadder::parse(spec).map_err(|_| crate::cli::CliError::BadValue {
+                flag: "kv-tiers".into(),
+                value: spec.into(),
+                expected: "comma-separated subset of f16, int8",
+            })?,
+            None => TierLadder::none(),
+        };
+        if let Some(dir) = args.get("kv-spill-dir") {
+            kv_tiers = kv_tiers.with_spill_dir(dir);
+        }
+        let enable =
+            kv_blocks > 0 || kv_window > 0 || kv_batch_dedupe || kv_tiers.enabled();
+        let kv = enable.then(|| {
             let cfg = KvCacheConfig::new(kv_block_size)
                 .with_capacity_blocks(kv_blocks)
-                .with_batch_dedupe(kv_batch_dedupe);
+                .with_batch_dedupe(kv_batch_dedupe)
+                .with_tiers(kv_tiers);
             if kv_window > 0 {
                 cfg.with_window(kv_window)
             } else {
@@ -710,6 +728,18 @@ pub struct AttentionServerStats {
     /// ([`KvCache::resident_kv_bytes`] — the one place the block-geometry
     /// byte accounting lives).
     pub kv_resident_bytes: u64,
+    /// KV cache: tier demotions performed under capacity pressure, one
+    /// per rung descended (zero with `--kv-tiers` unset).
+    pub kv_demoted_blocks: u64,
+    /// KV cache: entries demoted to the disk-only spilled rung,
+    /// including the shutdown [`KvCache::spill_index`] snapshot.
+    pub kv_spilled_blocks: u64,
+    /// KV cache: seal-time hits served by rehydrating an archived block
+    /// from the spill store.
+    pub kv_spill_hits: u64,
+    /// KV cache: spill reads that failed verification (truncation,
+    /// digest mismatch, missing file) and degraded to clean misses.
+    pub kv_spill_corrupt: u64,
     /// Mean queueing delay (ms) — time from submit to batch execution.
     pub mean_queue_ms: f64,
     /// Mean executed one-shot batch occupancy (filled slots / max_batch,
@@ -933,7 +963,7 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<ServerMsg>) -> Atte
     if let Some(w) = cfg.workers {
         engine = engine.with_workers(w);
     }
-    let kv_cache = cfg.kv.map(|kv| KvCache::new(kv, cfg.heads * cfg.head_dim));
+    let kv_cache = cfg.kv.clone().map(|kv| KvCache::new(kv, cfg.heads * cfg.head_dim));
     let mut srv = Serve {
         cfg: &cfg,
         method,
@@ -1088,7 +1118,7 @@ impl Serve<'_> {
         // the cache on, only exact-incremental sessions survive (tiny
         // state, no stored K/V) — and only without a window, which
         // incremental accumulators cannot evict from
-        let windowed = cfg.kv.is_some_and(|kv| kv.window().is_some());
+        let windowed = cfg.kv.as_ref().is_some_and(|kv| kv.window().is_some());
         let use_sessions =
             chain.is_none() || (self.method.session_is_exact_incremental() && !windowed);
         let sessions = use_sessions.then(|| {
@@ -1501,8 +1531,11 @@ impl Serve<'_> {
         });
     }
 
-    /// Finalize the mean stats and surface the KV cache counters.
-    fn finish(self) -> AttentionServerStats {
+    /// Finalize the mean stats and surface the KV cache counters.  With
+    /// a spill store configured, the index is snapshotted to it first
+    /// ([`KvCache::spill_index`]) so the next server over the same
+    /// directory warm-restarts from this one's cached prefixes.
+    fn finish(mut self) -> AttentionServerStats {
         let mut stats = self.stats;
         if stats.requests > 0 {
             stats.mean_queue_ms = self.sums.queue_ms / stats.requests as f64;
@@ -1514,13 +1547,20 @@ impl Serve<'_> {
         if stats.steps > 0 {
             stats.mean_step_occupancy = self.sums.step_occupancy / stats.steps as f64;
         }
-        if let Some(cache) = &self.kv_cache {
+        if let Some(cache) = self.kv_cache.as_mut() {
+            if cache.spill_store().is_some() {
+                cache.spill_index();
+            }
             let kv = cache.stats();
             stats.kv_hit_blocks = kv.hit_blocks;
             stats.kv_alloc_blocks = kv.alloc_blocks;
             stats.kv_evicted_blocks = kv.evicted_blocks;
             stats.kv_resident_blocks = kv.resident_blocks;
             stats.kv_resident_bytes = cache.resident_kv_bytes();
+            stats.kv_demoted_blocks = kv.demoted_blocks;
+            stats.kv_spilled_blocks = kv.spilled_blocks;
+            stats.kv_spill_hits = kv.spill_hits;
+            stats.kv_spill_corrupt = kv.spill_corrupt;
         }
         stats
     }

@@ -52,6 +52,29 @@ impl KvBlock {
         (self.k, self.v)
     }
 
+    /// Rebuild a block from already-filled K/V payloads (exactly
+    /// `len * token_elems` elements each) — the spill-store rehydration
+    /// path.  The result is outside pool accounting: it exists only to
+    /// be verified against a candidate and dropped.
+    pub(super) fn from_filled(k: Vec<f32>, v: Vec<f32>, token_elems: usize, len: usize) -> Self {
+        assert!(token_elems > 0, "token_elems must be positive");
+        assert_eq!(k.len(), len * token_elems, "K payload is not len tokens");
+        assert_eq!(v.len(), len * token_elems, "V payload is not len tokens");
+        Self { k, v, token_elems, len }
+    }
+
+    /// The filled K payload (`len * token_elems` elements, token rows
+    /// contiguous) — what the tier codecs encode and the spill store
+    /// archives.
+    pub fn k_filled(&self) -> &[f32] {
+        &self.k[..self.len * self.token_elems]
+    }
+
+    /// The filled V payload (see [`k_filled`](Self::k_filled)).
+    pub fn v_filled(&self) -> &[f32] {
+        &self.v[..self.len * self.token_elems]
+    }
+
     /// Token capacity of the block.
     pub fn block_size(&self) -> usize {
         self.k.len() / self.token_elems

@@ -33,13 +33,30 @@
 //!   [`PrefixIndex`]).  [`EvictionPolicy::SlidingWindow`] additionally
 //!   bounds each stream to its last `window` tokens, releasing front
 //!   blocks as they fall out.
+//! * **Tiered demotion.** With a [`TierLadder`] configured
+//!   ([`KvCacheConfig::tiers`]), capacity pressure demotes LRU
+//!   index-only blocks one rung at a time — f32 → f16 → int8 →
+//!   spilled-to-disk — instead of dropping them.  Exact f32 bytes are
+//!   archived to the content-addressed [`BlockStore`] at *first*
+//!   demotion, so a block that sinks to the spilled rung always
+//!   rehydrates bitwise identical; every spill read re-verifies the
+//!   content digest, and any corruption degrades to a clean miss
+//!   ([`KvCacheStats::spill_corrupt`]).  A spill directory also gives
+//!   warm restarts ([`KvCache::new`] re-registers the store's manifest)
+//!   and cross-process sharing (two caches over one directory).
 //!
 //! **Determinism contract.** The cache deduplicates *storage*, never
 //! content: a hash hit is verified by bitwise comparison before sharing,
 //! and the token sequence a query observes ([`StreamChain::gather_head_into`])
 //! is identical with and without the cache.  Serving through the cache is
 //! therefore bitwise identical to serving without it at the same seeds
-//! (pinned by `rust/tests/kv_cache.rs`).
+//! (pinned by `rust/tests/kv_cache.rs`).  With tiers *disabled* (the
+//! default) every byte, hash, stamp, and stat is bitwise identical to the
+//! pre-tier implementation; with quantised rungs enabled, a replayed
+//! prefix whose blocks were demoted is served through
+//! [`QuantBlock::dequant_head_into`] with the documented error bounds
+//! (pinned by `rust/tests/kv_tiers.rs`) — an explicitly opted-into
+//! approximation, the same trade the paper's sketched attention makes.
 //!
 //! # Examples
 //!
@@ -65,11 +82,17 @@ mod block;
 mod policy;
 mod pool;
 mod prefix;
+mod store;
+mod tier;
 
 pub use block::KvBlock;
 pub use policy::{EvictionPolicy, KvCacheConfig};
 pub use pool::BlockPool;
 pub use prefix::PrefixIndex;
+pub use store::{tempdir, BlockStore, ManifestEntry, SpillError, TempDir};
+pub use tier::{
+    f16_bits_to_f32, f32_to_f16_bits, BlockTier, CacheEntry, QuantBlock, SealedRef, TierLadder,
+};
 
 use crate::tensor::Matrix;
 use std::collections::VecDeque;
@@ -90,6 +113,22 @@ pub struct KvCacheStats {
     /// Distinct blocks currently alive (streams + index), including
     /// per-stream tail blocks.
     pub resident_blocks: u64,
+    /// Blocks currently resident in a quantised (f16/int8)
+    /// representation — counted separately from `resident_blocks`,
+    /// which tracks hot f32 blocks only.
+    pub quant_blocks: u64,
+    /// Demotions performed, one per rung descended (f32 → f16,
+    /// f16 → int8).
+    pub demoted_blocks: u64,
+    /// Entries demoted to the disk-only spilled rung (RAM payload
+    /// released; exact bytes remain in the [`BlockStore`]).
+    pub spilled_blocks: u64,
+    /// Seal-time hash hits served by rehydrating (and re-verifying) an
+    /// archived block from the spill store.
+    pub spill_hits: u64,
+    /// Spill reads that failed verification — truncated file, digest
+    /// mismatch, missing file — and degraded to clean misses.
+    pub spill_corrupt: u64,
 }
 
 /// One stream's view of the cache: retained sealed blocks (shared),
@@ -99,8 +138,11 @@ pub struct KvCacheStats {
 #[derive(Debug)]
 pub struct StreamChain {
     /// Retained sealed blocks, oldest first; the absolute block index of
-    /// `sealed[0]` is `dropped_blocks`.
-    sealed: VecDeque<Arc<KvBlock>>,
+    /// `sealed[0]` is `dropped_blocks`.  Each is hot (exact f32) or
+    /// quantised — never spilled: holding a [`SealedRef`] pins the
+    /// payload in RAM (see [`SealedRef`]), which keeps gathers free of
+    /// disk I/O.
+    sealed: VecDeque<SealedRef>,
     /// Content hashes of every sealed block since stream start — the
     /// stream's trie path, kept even for blocks the window released.
     path: Vec<u64>,
@@ -159,24 +201,24 @@ impl StreamChain {
         }
     }
 
-    /// The block holding absolute token `t` (which must be visible).
-    fn block_for(&self, t: usize) -> (&KvBlock, usize) {
-        let b = t / self.block_size;
-        let slot = t % self.block_size;
-        let rel = b - self.dropped_blocks;
-        let block: &KvBlock = if rel < self.sealed.len() {
-            &self.sealed[rel]
-        } else {
-            self.tail.as_ref().expect("visible token beyond sealed blocks lives in the tail")
-        };
-        (block, slot)
+    /// The stream's trie path: content hashes of every sealed block
+    /// since stream start (kept even for window-dropped blocks).  The
+    /// spill-store fault-injection tests use this to address block files.
+    pub fn path(&self) -> &[u64] {
+        &self.path
     }
 
     /// Copy head `head`'s K and V rows for the visible window, oldest
     /// first, into `k_out`/`v_out` (each `visible_len × head_dim`, fully
-    /// overwritten).  The row sequence is exactly what an uncached
-    /// session accumulated by per-token appends — the identity the
-    /// bitwise determinism contract rests on.
+    /// overwritten).  Hot blocks copy their exact f32 rows — with tiers
+    /// off, the row sequence is exactly what an uncached session
+    /// accumulated by per-token appends, the identity the bitwise
+    /// determinism contract rests on.  Quantised blocks (shared from a
+    /// demoted index entry at seal time) decode straight into the
+    /// caller's scratch rows via [`QuantBlock::dequant_head_into`]; the
+    /// decoded f32 view lives only as long as those scratch matrices and
+    /// is never cached or re-hashed.  Never touches disk (see
+    /// [`SealedRef`]).
     pub fn gather_head_into(
         &self,
         head: usize,
@@ -192,9 +234,27 @@ impl StreamChain {
         assert_eq!(v_out.shape(), (n, head_dim), "v_out shape mismatch");
         let start = self.appended - n;
         for i in 0..n {
-            let (block, slot) = self.block_for(start + i);
-            k_out.row_mut(i).copy_from_slice(&block.k_token(slot)[o..o + head_dim]);
-            v_out.row_mut(i).copy_from_slice(&block.v_token(slot)[o..o + head_dim]);
+            let t = start + i;
+            let slot = t % self.block_size;
+            let rel = t / self.block_size - self.dropped_blocks;
+            if rel < self.sealed.len() {
+                match &self.sealed[rel] {
+                    SealedRef::Hot(block) => {
+                        k_out.row_mut(i).copy_from_slice(&block.k_token(slot)[o..o + head_dim]);
+                        v_out.row_mut(i).copy_from_slice(&block.v_token(slot)[o..o + head_dim]);
+                    }
+                    SealedRef::Quant(q) => {
+                        q.dequant_head_into(slot, o, head_dim, k_out.row_mut(i), v_out.row_mut(i));
+                    }
+                }
+            } else {
+                let tail = self
+                    .tail
+                    .as_ref()
+                    .expect("visible token beyond sealed blocks lives in the tail");
+                k_out.row_mut(i).copy_from_slice(&tail.k_token(slot)[o..o + head_dim]);
+                v_out.row_mut(i).copy_from_slice(&tail.v_token(slot)[o..o + head_dim]);
+            }
         }
     }
 }
@@ -207,17 +267,73 @@ pub struct KvCache {
     cfg: KvCacheConfig,
     pool: BlockPool,
     index: PrefixIndex,
+    /// The spill tier's on-disk archive; `Some` iff the ladder has a
+    /// spill directory and it could be opened.
+    store: Option<BlockStore>,
     hits: u64,
     allocs: u64,
     evictions: u64,
+    demotions: u64,
+    spills: u64,
+    spill_hits: u64,
+    spill_corrupt: u64,
+    /// Spill-store writes that failed (disk full, permissions); the
+    /// block stays at its current rung instead of spilling.
+    spill_write_errors: u64,
 }
 
 impl KvCache {
     /// A cache for streams whose tokens are `token_elems` f32s per K/V
     /// row (the server's `heads * head_dim`).
+    ///
+    /// When the ladder has a spill directory, the store's manifest is
+    /// loaded and every archived entry whose geometry matches
+    /// (`token_elems`, `block_size`) is re-registered at its trie
+    /// position as a spilled entry — a **warm restart**: replaying a
+    /// previously spilled prefix rehydrates its blocks from disk instead
+    /// of re-allocating them.  Two live caches over one directory share
+    /// blocks the same way, across processes.  A store that cannot be
+    /// opened disables the spill rung (with a note on stderr) rather
+    /// than failing the cache.
     pub fn new(cfg: KvCacheConfig, token_elems: usize) -> Self {
         let pool = BlockPool::new(cfg.block_size, token_elems, cfg.capacity_blocks);
-        Self { cfg, pool, index: PrefixIndex::new(), hits: 0, allocs: 0, evictions: 0 }
+        let mut index = PrefixIndex::new();
+        let store = cfg.tiers.spill_dir.as_ref().and_then(|dir| match BlockStore::open(dir) {
+            Ok(store) => Some(store),
+            Err(e) => {
+                eprintln!(
+                    "kvcache: disabling spill tier (cannot open store at {}: {e})",
+                    dir.display()
+                );
+                None
+            }
+        });
+        if let Some(store) = &store {
+            for entry in store.load_manifest() {
+                if entry.token_elems == token_elems
+                    && entry.len == cfg.block_size
+                    && store.contains(entry.hash)
+                {
+                    // duplicates collapse: a displaced entry here can only
+                    // be another Spilled marker, which holds no payload
+                    let _ = index.insert(&entry.path, entry.hash, CacheEntry::Spilled);
+                }
+            }
+        }
+        Self {
+            cfg,
+            pool,
+            index,
+            store,
+            hits: 0,
+            allocs: 0,
+            evictions: 0,
+            demotions: 0,
+            spills: 0,
+            spill_hits: 0,
+            spill_corrupt: 0,
+            spill_write_errors: 0,
+        }
     }
 
     pub fn cfg(&self) -> &KvCacheConfig {
@@ -348,32 +464,199 @@ impl KvCache {
         let tail = chain.tail.take().expect("seal without a tail");
         debug_assert!(tail.is_full());
         let hash = tail.content_hash();
-        if let Some(shared) = self.index.lookup(&chain.path, hash, &tail) {
+        if let Some(shared) = self.dedupe_sealed(&chain.path, hash, &tail) {
             chain.sealed.push_back(shared);
-            self.pool.release(tail); // staging storage recycled
+            // staging storage recycled — except after a spilled-entry
+            // promotion, where the index adopted the tail itself and
+            // this release just drops one of its clones
+            self.pool.release(tail);
             self.hits += 1;
         } else {
             // make room for the newly retained block first — O(log N)
-            // heap pops for however many evictions the deficit needs
+            // heap pops for however many evictions (or demotions, with
+            // tiers enabled) the deficit needs
             if self.pool.at_capacity() {
                 let over = self.pool.resident() + 1 - self.cfg.capacity_blocks;
-                for block in self.index.evict_lru_batch(over) {
-                    self.pool.release(block);
-                    self.evictions += 1;
-                }
+                self.relieve_pressure(over);
                 // anything still over capacity is referenced by live
                 // streams: the cap is exceeded softly
             }
-            if let Some(displaced) = self.index.insert(&chain.path, hash, Arc::clone(&tail)) {
-                // hash-collision overwrite: route the displaced Arc
-                // through the pool so the residency ledger stays exact
-                self.pool.release(displaced);
+            let entry = CacheEntry::Hot(Arc::clone(&tail));
+            if let Some(displaced) = self.index.insert(&chain.path, hash, entry) {
+                // hash-collision overwrite (or a stale spilled marker):
+                // route the displaced payload through the pool so the
+                // residency ledgers stay exact
+                self.release_entry(displaced);
                 self.evictions += 1;
             }
-            chain.sealed.push_back(tail);
+            chain.sealed.push_back(SealedRef::Hot(tail));
             self.allocs += 1;
         }
         chain.path.push(hash);
+    }
+
+    /// The tier-aware half of a seal: resolve `path` + `hash` against the
+    /// index and verify the stored representation against the freshly
+    /// sealed `candidate`.  Hot entries verify bitwise; quantised entries
+    /// verify by re-encoding the candidate ([`QuantBlock::matches_quantised`]);
+    /// spilled entries re-read + re-verify the archived bytes and, on an
+    /// exact match, promote the node to hot by *adopting the candidate's
+    /// own block* (zero-copy — the disk read only confirms the bytes).
+    /// Any mismatch or spill corruption returns `None` — a clean miss.
+    ///
+    /// With tiers off this is exactly the old fused lookup: one clock
+    /// bump per seal (hit or miss), stamp-on-hit — the stamp sequence,
+    /// and therefore eviction order, is bitwise unchanged.
+    fn dedupe_sealed(
+        &mut self,
+        path: &[u64],
+        hash: u64,
+        candidate: &Arc<KvBlock>,
+    ) -> Option<SealedRef> {
+        let id = self.index.probe(path, hash)?;
+        match self.index.entry_cloned(id)? {
+            CacheEntry::Hot(block) => {
+                if !block.content_eq(candidate) {
+                    return None; // hash collision: never share
+                }
+                self.index.touch_probed(id);
+                Some(SealedRef::Hot(block))
+            }
+            CacheEntry::Quant(q) => {
+                if !q.matches_quantised(candidate) {
+                    return None;
+                }
+                self.index.touch_probed(id);
+                Some(SealedRef::Quant(q))
+            }
+            CacheEntry::Spilled => {
+                let store = self.store.as_ref()?;
+                match store.read(hash, self.pool.token_elems(), self.cfg.block_size) {
+                    Ok(block) if block.content_eq(candidate) => {
+                        self.spill_hits += 1;
+                        let old = self
+                            .index
+                            .replace_entry(id, CacheEntry::Hot(Arc::clone(candidate)));
+                        debug_assert!(matches!(old, Some(CacheEntry::Spilled)));
+                        self.index.touch_probed(id);
+                        Some(SealedRef::Hot(Arc::clone(candidate)))
+                    }
+                    Ok(_) => None, // hash collision with archived content
+                    Err(_) => {
+                        // truncated, flipped, or missing file: degrade to
+                        // a miss and drop the bad file so the next
+                        // demotion re-archives clean bytes
+                        self.spill_corrupt += 1;
+                        store.remove(hash);
+                        None
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bring resident hot blocks back under capacity by `need` blocks.
+    /// With tiers disabled this is plain LRU eviction (bitwise identical
+    /// to the pre-tier cache); with any rung enabled, victims are handed
+    /// to the [`TierLadder`] instead: hot blocks archive their exact
+    /// bytes to the spill store (write-once, at first demotion) and
+    /// re-encode one rung colder (f16/int8), already-quantised blocks
+    /// sink further, and a block below the last enabled rung falls to
+    /// the disk-only spilled marker (if archived) or is dropped.  Each
+    /// pressure pass sinks a given block at most one rung.
+    fn relieve_pressure(&mut self, need: usize) {
+        if !self.cfg.tiers.enabled() {
+            for entry in self.index.evict_lru_batch(need) {
+                self.release_entry(entry);
+                self.evictions += 1;
+            }
+            return;
+        }
+        let Self { cfg, pool, index, store, .. } = self;
+        let (mut demoted, mut spilled, mut evicted, mut write_errors) = (0u64, 0u64, 0u64, 0u64);
+        index.demote_lru_batch(need, |path, entry| {
+            let hash = *path.last().expect("demoted nodes carry their hash");
+            let ancestors = &path[..path.len() - 1];
+            match entry {
+                CacheEntry::Hot(block) => {
+                    // archive the exact bytes now, while they still exist
+                    // in RAM — later rungs only ever check `contains`
+                    let archived = match store {
+                        Some(s) => match s.write(ancestors, hash, &block) {
+                            Ok(_) => true,
+                            Err(_) => {
+                                write_errors += 1;
+                                false
+                            }
+                        },
+                        None => false,
+                    };
+                    match cfg.tiers.next_quant(BlockTier::F32) {
+                        Some(t) => {
+                            let q = QuantBlock::quantise(&block, t);
+                            pool.note_quant(q.payload_bytes());
+                            pool.release(block);
+                            demoted += 1;
+                            Some(CacheEntry::Quant(Arc::new(q)))
+                        }
+                        None if archived => {
+                            pool.release(block);
+                            spilled += 1;
+                            Some(CacheEntry::Spilled)
+                        }
+                        None => {
+                            pool.release(block);
+                            evicted += 1;
+                            None
+                        }
+                    }
+                }
+                CacheEntry::Quant(q) => {
+                    if let Some(t) = cfg.tiers.next_quant(q.tier()) {
+                        let colder = QuantBlock::requantise(&q, t);
+                        pool.note_quant(colder.payload_bytes());
+                        pool.release_quant(q);
+                        demoted += 1;
+                        Some(CacheEntry::Quant(Arc::new(colder)))
+                    } else if store.as_ref().is_some_and(|s| s.contains(hash)) {
+                        pool.release_quant(q);
+                        spilled += 1;
+                        Some(CacheEntry::Spilled)
+                    } else {
+                        // never archived (no spill dir, or its write
+                        // failed): the ladder ends here
+                        pool.release_quant(q);
+                        evicted += 1;
+                        None
+                    }
+                }
+                CacheEntry::Spilled => {
+                    unreachable!("demote_lru_batch never yields spilled entries")
+                }
+            }
+        });
+        self.demotions += demoted;
+        self.spills += spilled;
+        self.evictions += evicted;
+        self.spill_write_errors += write_errors;
+    }
+
+    /// Release a cache entry's payload through the pool ledgers (spilled
+    /// entries hold none).
+    fn release_entry(&mut self, entry: CacheEntry) {
+        match entry {
+            CacheEntry::Hot(b) => self.pool.release(b),
+            CacheEntry::Quant(q) => self.pool.release_quant(q),
+            CacheEntry::Spilled => {}
+        }
+    }
+
+    /// Release a chain's reference to one of its sealed blocks.
+    fn release_sealed(&mut self, sealed: SealedRef) {
+        match sealed {
+            SealedRef::Hot(b) => self.pool.release(b),
+            SealedRef::Quant(q) => self.pool.release_quant(q),
+        }
     }
 
     /// Release sealed front blocks that fell fully outside the window.
@@ -394,11 +677,11 @@ impl KvCache {
                 let path = &chain.path[..chain.dropped_blocks];
                 let hash = chain.path[chain.dropped_blocks];
                 if let Some(evicted) = self.index.remove_if_unshared(path, hash, &front) {
-                    self.pool.release(evicted);
+                    self.release_entry(evicted);
                     self.evictions += 1;
                 }
             }
-            self.pool.release(front);
+            self.release_sealed(front);
             chain.dropped_blocks += 1;
         }
     }
@@ -423,27 +706,98 @@ impl KvCache {
                 if let Some(evicted) =
                     self.index.remove_if_unshared(&chain.path[..i], chain.path[i], block)
                 {
-                    self.pool.release(evicted);
+                    self.release_entry(evicted);
                     self.evictions += 1;
                 }
             }
         }
         for block in chain.sealed {
-            self.pool.release(block);
+            self.release_sealed(block);
         }
         if let Some(tail) = chain.tail {
             self.pool.release(tail);
         }
     }
 
-    /// Aggregate counters (monotonic except `resident_blocks`).
+    /// Aggregate counters (monotonic except `resident_blocks` and
+    /// `quant_blocks`).
     pub fn stats(&self) -> KvCacheStats {
         KvCacheStats {
             hit_blocks: self.hits,
             alloc_blocks: self.allocs,
             evicted_blocks: self.evictions,
             resident_blocks: self.pool.resident() as u64,
+            quant_blocks: self.pool.quant_resident() as u64,
+            demoted_blocks: self.demotions,
+            spilled_blocks: self.spills,
+            spill_hits: self.spill_hits,
+            spill_corrupt: self.spill_corrupt,
         }
+    }
+
+    /// Snapshot the index to the spill store: every index-only entry
+    /// (nothing outside the index referencing it) archives its exact
+    /// bytes — hot blocks write them now; quantised blocks only qualify
+    /// if their first demotion already did — and is swapped for a
+    /// disk-only spilled marker, releasing its RAM.  Entries live
+    /// streams still reference, and quantised blocks that were never
+    /// archived, stay put.  Returns how many entries were spilled.
+    ///
+    /// This is the warm-restart/handoff hook: after `spill_index`, a
+    /// fresh cache opened over the same directory (see
+    /// [`new`](Self::new)) replays previously cached prefixes without
+    /// fresh block allocations, and a concurrently serving process sees
+    /// the same archive.  A no-op without a spill store.
+    pub fn spill_index(&mut self) -> usize {
+        let Self { pool, index, store, .. } = self;
+        let Some(store) = store.as_ref() else {
+            return 0;
+        };
+        let mut written = 0usize;
+        let mut write_errors = 0u64;
+        index.for_each_entry_mut(|path, slot| {
+            let hash = *path.last().expect("entry nodes carry their hash");
+            let ancestors = &path[..path.len() - 1];
+            match slot.take().expect("visited nodes hold entries") {
+                CacheEntry::Hot(block) => {
+                    if Arc::strong_count(&block) == 1 {
+                        match store.write(ancestors, hash, &block) {
+                            Ok(_) => {
+                                pool.release(block);
+                                *slot = Some(CacheEntry::Spilled);
+                                written += 1;
+                            }
+                            Err(_) => {
+                                write_errors += 1;
+                                *slot = Some(CacheEntry::Hot(block));
+                            }
+                        }
+                    } else {
+                        *slot = Some(CacheEntry::Hot(block));
+                    }
+                }
+                CacheEntry::Quant(q) => {
+                    if Arc::strong_count(&q) == 1 && store.contains(hash) {
+                        pool.release_quant(q);
+                        *slot = Some(CacheEntry::Spilled);
+                        written += 1;
+                    } else {
+                        *slot = Some(CacheEntry::Quant(q));
+                    }
+                }
+                CacheEntry::Spilled => *slot = Some(CacheEntry::Spilled),
+            }
+        });
+        self.spills += written as u64;
+        self.spill_write_errors += write_errors;
+        written
+    }
+
+    /// The spill tier's on-disk store, when one is configured and open
+    /// (test + tooling access; the fault-injection suite corrupts block
+    /// files through [`BlockStore::block_path`]).
+    pub fn spill_store(&self) -> Option<&BlockStore> {
+        self.store.as_ref()
     }
 
     /// Lifetime block allocations that touched the heap (the pool's free
@@ -453,13 +807,16 @@ impl KvCache {
         self.pool.fresh_allocs()
     }
 
-    /// Resident KV bytes: blocks × block_size × token_elems × (K + V) × 4.
+    /// Resident KV bytes: hot blocks × block_size × token_elems ×
+    /// (K + V) × 4, plus the quantised blocks' payload bytes.  Spilled
+    /// entries contribute nothing — their bytes live on disk.
     pub fn resident_kv_bytes(&self) -> u64 {
         self.pool.resident() as u64
             * self.cfg.block_size as u64
             * self.pool.token_elems() as u64
             * 2
             * std::mem::size_of::<f32>() as u64
+            + self.pool.quant_bytes() as u64
     }
 }
 
@@ -751,6 +1108,72 @@ mod tests {
         assert_eq!(k.get(0, 0), 0.0, "shared block must survive the batch close");
         assert_eq!(k.get(1, 0), 1.0);
         c.close_stream(live);
+    }
+
+    #[test]
+    fn pressure_demotes_to_f16_and_replay_hits_quant() {
+        let tiers = TierLadder::none().with_f16(true);
+        let mut c =
+            KvCache::new(KvCacheConfig::new(2).with_capacity_blocks(2).with_tiers(tiers), 2);
+        let mut a = c.open_stream();
+        fill(&mut c, &mut a, 0..4); // 2 sealed blocks: exactly at capacity
+        c.close_stream(a); // index-only now: demotable
+        let mut b = c.open_stream();
+        fill(&mut c, &mut b, 50..52); // one sealing miss forces pressure
+        let s = c.stats();
+        assert_eq!(s.demoted_blocks, 2, "pressure must demote, not drop");
+        assert_eq!(s.evicted_blocks, 0, "the f16 rung absorbs the pressure");
+        assert_eq!(s.quant_blocks, 2);
+        assert!(c.resident_kv_bytes() > 0);
+        c.close_stream(b);
+        // replaying the demoted prompt dedupes against the quantised
+        // entries (verified by re-encoding) and gathers decode in place
+        let mut r = c.open_stream();
+        fill(&mut c, &mut r, 0..4);
+        assert_eq!(c.stats().hit_blocks, 2, "quantised entries still dedupe");
+        assert_eq!(c.stats().demoted_blocks, 2, "hits never demote further");
+        let mut k = Matrix::zeros(4, 2);
+        let mut v = Matrix::zeros(4, 2);
+        r.gather_head_into(0, 2, &mut k, &mut v);
+        for t in 0..4 {
+            // small integers are f16-exact, so the decode is lossless here
+            assert_eq!(k.get(t, 0), t as f32, "f16-exact value must round trip");
+            assert_eq!(k.get(t, 1), -(t as f32));
+        }
+        c.close_stream(r);
+    }
+
+    #[test]
+    fn spill_only_ladder_archives_and_rehydrates_bitwise() {
+        let dir = tempdir("mod-spill");
+        let tiers = TierLadder::none().with_spill_dir(dir.path());
+        let mut c =
+            KvCache::new(KvCacheConfig::new(2).with_capacity_blocks(1).with_tiers(tiers), 2);
+        let mut a = c.open_stream();
+        fill(&mut c, &mut a, 0..2); // 1 sealed block: at capacity
+        c.close_stream(a);
+        let mut b = c.open_stream();
+        fill(&mut c, &mut b, 50..52); // pressure: a's block archives + spills
+        let s = c.stats();
+        assert_eq!(s.spilled_blocks, 1, "no quant rung: hot spills directly");
+        assert_eq!(s.evicted_blocks, 0);
+        assert_eq!(s.resident_blocks, 1, "spilled entry holds no RAM");
+        c.close_stream(b);
+        // replaying the spilled prompt re-reads + re-verifies the archive
+        // and promotes the entry back to hot, adopting the new tail
+        let mut r = c.open_stream();
+        fill(&mut c, &mut r, 0..2);
+        let s = c.stats();
+        assert_eq!(s.spill_hits, 1, "replay rehydrates from the archive");
+        assert_eq!(s.hit_blocks, 1);
+        assert_eq!(s.spill_corrupt, 0);
+        let mut k = Matrix::zeros(2, 2);
+        let mut v = Matrix::zeros(2, 2);
+        r.gather_head_into(0, 2, &mut k, &mut v);
+        for t in 0..2 {
+            assert_eq!(k.get(t, 0), t as f32, "rehydrated bytes must be exact");
+        }
+        c.close_stream(r);
     }
 
     #[test]

@@ -1,5 +1,8 @@
-//! Cache configuration: block geometry, capacity, and the eviction
-//! policy.
+//! Cache configuration: block geometry, capacity, the eviction policy,
+//! and the demotion tier ladder.
+
+use super::tier::TierLadder;
+use std::path::PathBuf;
 
 /// What happens to blocks as streams grow and the pool fills.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -30,7 +33,7 @@ impl EvictionPolicy {
 }
 
 /// Configuration for a [`KvCache`](super::KvCache).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct KvCacheConfig {
     /// Tokens per block.  Smaller blocks share finer-grained prefixes but
     /// carry more per-block bookkeeping; 16 is a reasonable default.
@@ -58,6 +61,16 @@ pub struct KvCacheConfig {
     /// non-repeating requests grows the cache without limit.  The CLI
     /// applies a default cap when `--kv-batch-dedupe` is set alone.
     pub batch_dedupe: bool,
+    /// Demotion rungs below hot (all off by default).  With any rung
+    /// enabled, capacity pressure demotes LRU index-only blocks one tier
+    /// at a time (f32 → f16 → int8 → spilled, skipping disabled rungs)
+    /// instead of dropping them; with all rungs off the cache is bitwise
+    /// identical to the pre-tier implementation.  Only meaningful
+    /// together with a finite [`capacity_blocks`](Self::capacity_blocks)
+    /// (no pressure, no demotion), except that a spill directory also
+    /// enables explicit [`KvCache::spill_index`](super::KvCache::spill_index)
+    /// snapshots and warm restarts.
+    pub tiers: TierLadder,
 }
 
 impl KvCacheConfig {
@@ -68,6 +81,7 @@ impl KvCacheConfig {
             capacity_blocks: 0,
             policy: EvictionPolicy::Lru,
             batch_dedupe: false,
+            tiers: TierLadder::none(),
         }
     }
 
@@ -93,6 +107,19 @@ impl KvCacheConfig {
         self
     }
 
+    /// Set the demotion [`TierLadder`].
+    pub fn with_tiers(mut self, tiers: TierLadder) -> Self {
+        self.tiers = tiers;
+        self
+    }
+
+    /// Convenience: enable the spill rung at `dir` (keeping any
+    /// already-configured quantised rungs).
+    pub fn with_spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.tiers.spill_dir = Some(dir.into());
+        self
+    }
+
     /// The per-stream sliding window, if the policy has one.
     pub fn window(&self) -> Option<usize> {
         self.policy.window()
@@ -115,6 +142,11 @@ mod tests {
         assert!(cfg.batch_dedupe);
         assert_eq!(KvCacheConfig::new(8).window(), None);
         assert!(!KvCacheConfig::new(8).batch_dedupe);
+        assert!(!KvCacheConfig::new(8).tiers.enabled(), "tiers default off");
+        let tiered = KvCacheConfig::new(8)
+            .with_tiers(TierLadder::none().with_f16(true))
+            .with_spill_dir("/tmp/spill");
+        assert!(tiered.tiers.f16 && tiered.tiers.spill_dir.is_some());
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! back down.
 
 use super::block::KvBlock;
+use super::tier::QuantBlock;
 use std::sync::Arc;
 
 /// How many freed (K, V) storage pairs the pool keeps for reuse.
@@ -40,6 +41,14 @@ pub struct BlockPool {
     /// Lifetime allocations that had to touch the heap (no recycled
     /// storage available) — steady-state serving keeps this flat.
     fresh_allocs: u64,
+    /// Quantised (f16/int8) blocks currently alive.  Tracked separately
+    /// from `resident`: [`at_capacity`](Self::at_capacity) bounds *hot*
+    /// blocks only, so the tiers-off pressure behaviour is untouched and
+    /// demoting a hot block relieves pressure exactly like evicting it.
+    quant_resident: usize,
+    /// Payload bytes of the live quantised blocks (for the resident-KV
+    /// footprint stat).
+    quant_bytes: usize,
 }
 
 impl BlockPool {
@@ -56,6 +65,8 @@ impl BlockPool {
             resident: 0,
             total_allocs: 0,
             fresh_allocs: 0,
+            quant_resident: 0,
+            quant_bytes: 0,
         }
     }
 
@@ -131,6 +142,35 @@ impl BlockPool {
             if self.free.len() < FREE_KEEP {
                 self.free.push(owned.into_storage());
             }
+        }
+    }
+
+    /// Quantised blocks currently alive (index + chains).
+    pub fn quant_resident(&self) -> usize {
+        self.quant_resident
+    }
+
+    /// Payload bytes held by live quantised blocks.
+    pub fn quant_bytes(&self) -> usize {
+        self.quant_bytes
+    }
+
+    /// Record a freshly created quantised block (`bytes` =
+    /// [`QuantBlock::payload_bytes`]).  Quantised storage is plain heap
+    /// memory — no free-list recycling, no capacity pressure — so the
+    /// ledger only tracks counts and bytes.
+    pub fn note_quant(&mut self, bytes: usize) {
+        self.quant_resident += 1;
+        self.quant_bytes += bytes;
+    }
+
+    /// Release one `Arc` clone of a quantised block; the ledger drops
+    /// when this was the last reference (mirror of
+    /// [`release`](Self::release)).
+    pub fn release_quant(&mut self, block: Arc<QuantBlock>) {
+        if let Ok(owned) = Arc::try_unwrap(block) {
+            self.quant_resident = self.quant_resident.saturating_sub(1);
+            self.quant_bytes = self.quant_bytes.saturating_sub(owned.payload_bytes());
         }
     }
 }

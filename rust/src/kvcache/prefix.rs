@@ -3,57 +3,80 @@
 //!
 //! A stream's sealed blocks form a path of content hashes `h₀ h₁ h₂ …`
 //! from the trie root; the node at depth `i` holds the shared
-//! `Arc<KvBlock>` for the stream's `i`-th block.  Two streams whose
-//! prompts share a prefix walk the same hash path and receive the same
-//! physical blocks — [`PrefixIndex::lookup`] verifies every hash hit by
-//! full content comparison ([`KvBlock::content_eq`]), so a hash collision
-//! degrades to a miss, never to shared wrong bytes.
+//! [`CacheEntry`] for the stream's `i`-th block — a hot `Arc<KvBlock>`,
+//! a quantised [`QuantBlock`](super::QuantBlock), or a disk-only
+//! `Spilled` marker (see the [`TierLadder`](super::TierLadder)).
+//! Two streams whose prompts share a prefix walk the same hash path and
+//! receive the same physical blocks — every hash hit is verified against
+//! the freshly sealed candidate before sharing (bitwise
+//! [`KvBlock::content_eq`] for hot entries; the cache layer re-encodes or
+//! re-reads for quantised/spilled ones), so a hash collision degrades to
+//! a miss, never to shared wrong bytes.
 //!
 //! **Invariants.**
 //!
 //! * A node's position encodes its *absolute* prefix path — blocks are
 //!   only ever shared between streams whose entire preceding token
 //!   sequences were bitwise identical.
-//! * Eviction ([`PrefixIndex::evict_lru`]) only ever removes a block with
-//!   no holder outside the index (`Arc` strong count 1): a block a live
-//!   stream still references is never dropped.
-//! * An evicted interior node leaves a block-less *tombstone* so its
+//! * Eviction and demotion only ever touch an entry with no holder
+//!   outside the index ([`CacheEntry::ram_unreferenced`]): a block a
+//!   live stream still references is never dropped or quantised under
+//!   it.  That is also what keeps chain gathers free of disk reads — a
+//!   chain-held block can never become `Spilled`.
+//! * An evicted interior node leaves an entry-less *tombstone* so its
 //!   descendants stay addressable (a sliding-window stream may drop its
 //!   front blocks — unpinning them — while it keeps sealing deeper ones
 //!   on the same path); evicted leaves are removed and empty tombstone
 //!   chains pruned.
 //! * Every insert and every hit stamps a unique logical-clock value, so
 //!   LRU selection has no ties and is deterministic regardless of hash-map
-//!   iteration order.
+//!   iteration order.  The hit path is split into [`PrefixIndex::probe`]
+//!   (one clock bump, hit or miss — exactly what the old fused lookup
+//!   did) and [`PrefixIndex::touch_probed`] (stamp on a confirmed hit),
+//!   so the cache layer can interpose tier-specific verification without
+//!   perturbing the stamp sequence tiers-off serving produces.
 //! * **LRU selection is O(log N), not a trie walk.**  Every stamp
 //!   assignment also pushes a `(stamp, node id)` snapshot onto a
 //!   min-heap; the node's `last_touch` stays the single source of truth,
 //!   and a popped snapshot whose stamp no longer matches (the node was
 //!   re-touched, evicted, or removed) is simply discarded — *lazy
-//!   invalidation*.  A popped entry whose block is still referenced by a
-//!   live stream is pushed back and retried on a later eviction pass.
+//!   invalidation*.  A popped entry whose payload a live stream still
+//!   references is pushed back and retried on a later eviction pass; a
+//!   popped `Spilled` entry's snapshot is discarded outright (nothing
+//!   resident remains to reclaim, and a later promotion re-stamps it).
 //!   Because stamps are unique, the heap's pop order is a total order,
 //!   and the evicted sequence is exactly what a full-trie DFS sorted by
 //!   stamp would produce (pinned against the `#[cfg(test)]` DFS oracle
 //!   under randomized interleavings).
+//! * **Demotion rides the same heap.**  [`PrefixIndex::demote_lru_batch`]
+//!   pops snapshots in stamp order like eviction, but instead of
+//!   dropping a victim it hands the owned entry to a caller closure that
+//!   returns the next-rung replacement (or `None` to drop).  A re-armed
+//!   node keeps its stamp — its LRU position is unchanged, so it keeps
+//!   sinking one rung per pressure pass — and its snapshot is deferred
+//!   until the pass ends, so one pass never sinks the same block twice.
 //! * **Nodes live in an arena of stable ids.**  Trie edges are
 //!   `hash → NodeId` and each LRU snapshot is a two-word
 //!   `(stamp, NodeId)` — O(1) per snapshot, instead of the retired
 //!   owned-path snapshots whose memory was O(Σ depth), quadratic for one
 //!   deep chain.  Pruned nodes return their ids to a free list for
 //!   reuse; a stale snapshot aimed at a reused id is inert because the
-//!   new tenant carries a strictly newer stamp (or no block yet), so the
+//!   new tenant carries a strictly newer stamp (or no entry yet), so the
 //!   stamp check rejects it.
 
 use super::block::KvBlock;
+use super::tier::{CacheEntry, SealedRef};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::Arc;
 
-/// Stable arena index of one trie node.
-type NodeId = usize;
+/// Stable arena index of one trie node.  Valid only until the next
+/// operation that can prune or reuse nodes (eviction, demotion,
+/// removal) — the cache layer only holds one across a probe → touch /
+/// replace sequence, which does neither.
+pub type NodeId = usize;
 
-/// The arena slot of the (block-less, unprunable) root node.
+/// The arena slot of the (entry-less, unprunable) root node.
 const ROOT: NodeId = 0;
 
 /// One lazy LRU snapshot: the stamp a node carried when it was touched,
@@ -63,9 +86,10 @@ type LruEntry = Reverse<(u64, NodeId)>;
 
 #[derive(Debug)]
 struct TrieNode {
-    /// The shared block, or `None` for a tombstone (evicted interior
-    /// node kept only to keep descendants addressable) and for the root.
-    block: Option<Arc<KvBlock>>,
+    /// The shared cache entry, or `None` for a tombstone (evicted
+    /// interior node kept only to keep descendants addressable) and for
+    /// the root.
+    entry: Option<CacheEntry>,
     children: HashMap<u64, NodeId>,
     /// Logical-clock stamp of the last insert/hit (unique per node).
     last_touch: u64,
@@ -76,8 +100,8 @@ struct TrieNode {
     key: u64,
 }
 
-/// Radix trie mapping sealed-block hash paths to shared blocks.  See the
-/// [module docs](self) for the invariants.
+/// Radix trie mapping sealed-block hash paths to shared cache entries.
+/// See the [module docs](self) for the invariants.
 #[derive(Debug)]
 pub struct PrefixIndex {
     /// Node arena; slot 0 is the root, `None` slots are on `free`.
@@ -85,7 +109,8 @@ pub struct PrefixIndex {
     /// Freed arena slots awaiting reuse.
     free: Vec<NodeId>,
     clock: u64,
-    /// Nodes currently holding a block (tombstones excluded).
+    /// Nodes currently holding an entry (tombstones excluded; spilled
+    /// entries included — they are addressable cache state).
     entries: usize,
     /// Min-heap of `(last_touch, node id)` snapshots — the O(log N) LRU.
     /// May hold stale entries (lazy invalidation; see the module docs);
@@ -102,7 +127,7 @@ impl Default for PrefixIndex {
 impl PrefixIndex {
     pub fn new() -> Self {
         let root = TrieNode {
-            block: None,
+            entry: None,
             children: HashMap::new(),
             last_touch: 0,
             parent: ROOT,
@@ -117,7 +142,7 @@ impl PrefixIndex {
         }
     }
 
-    /// Blocks currently held by the index.
+    /// Entries currently held by the index (all tiers, spilled included).
     pub fn len(&self) -> usize {
         self.entries
     }
@@ -143,11 +168,26 @@ impl PrefixIndex {
         Some(at)
     }
 
+    /// Reconstruct a node's full hash path (ancestor hashes + its own
+    /// key, root-first) by walking parent links — O(depth), used on the
+    /// cold demotion/spill paths where the chain's path is not at hand.
+    fn path_of(&self, id: NodeId) -> Vec<u64> {
+        let mut path = Vec::new();
+        let mut at = id;
+        while at != ROOT {
+            let node = self.node(at);
+            path.push(node.key);
+            at = node.parent;
+        }
+        path.reverse();
+        path
+    }
+
     /// Allocate a fresh tombstone node under `parent`, reusing a freed
     /// arena slot when one exists.
     fn alloc_child(&mut self, parent: NodeId, key: u64) -> NodeId {
         let node = TrieNode {
-            block: None,
+            entry: None,
             children: HashMap::new(),
             last_touch: 0,
             parent,
@@ -167,35 +207,79 @@ impl PrefixIndex {
         id
     }
 
+    /// First half of a seal-time lookup: advance the clock (hit or miss,
+    /// exactly like the old fused lookup) and resolve `path` + `hash` to
+    /// its live node.  The caller inspects the node's entry
+    /// ([`entry_cloned`](Self::entry_cloned)), runs its tier-specific
+    /// verification, and either confirms the hit with
+    /// [`touch_probed`](Self::touch_probed) / swaps the representation
+    /// with [`replace_entry`](Self::replace_entry), or treats it as a
+    /// miss and falls back to [`insert`](Self::insert).  The returned id
+    /// stays valid across that sequence because none of it can prune or
+    /// reuse nodes.
+    pub fn probe(&mut self, path: &[u64], hash: u64) -> Option<NodeId> {
+        self.clock += 1;
+        let at = self.walk(path)?;
+        self.node(at).children.get(&hash).copied()
+    }
+
+    /// The probed node's entry, cloned out (Arc clones — cheap) so the
+    /// caller can verify it without holding a borrow on the index.
+    pub fn entry_cloned(&self, id: NodeId) -> Option<CacheEntry> {
+        self.arena.get(id)?.as_ref()?.entry.clone()
+    }
+
+    /// Stamp a just-probed node with the probe's clock value — the
+    /// LRU-touch half of a confirmed hit.
+    pub fn touch_probed(&mut self, id: NodeId) {
+        let stamp = self.clock;
+        self.node_mut(id).last_touch = stamp;
+        self.push_lru(stamp, id);
+    }
+
+    /// Swap a just-probed node's entry for a different representation of
+    /// the *same content* (spilled→hot promotion on a verified rehydrate;
+    /// corrupt-spill refresh).  No clock or stamp change — pair with
+    /// [`touch_probed`](Self::touch_probed) when the swap is a hit.
+    /// Returns the previous entry (the node must hold one: promotion
+    /// never creates or destroys entries, so `entries` stays exact).
+    pub fn replace_entry(&mut self, id: NodeId, entry: CacheEntry) -> Option<CacheEntry> {
+        let node = self.node_mut(id);
+        debug_assert!(node.entry.is_some(), "replace_entry on a tombstone");
+        node.entry.replace(entry)
+    }
+
     /// Look up a just-sealed block: does a stream whose previous sealed
-    /// blocks hashed to `path` already have a shared block with
+    /// blocks hashed to `path` already have a shared *hot* block with
     /// `candidate`'s contents?  On a verified hit the node is touched
     /// (LRU) and its `Arc` cloned out; hash matches with different
-    /// contents are misses.
+    /// contents — and entries at colder tiers, which need the cache
+    /// layer's codec/store verification — are misses.  (The cache layer
+    /// uses the [`probe`](Self::probe) flow directly; this fused form
+    /// serves the hot-only callers and the tests.)
     pub fn lookup(&mut self, path: &[u64], hash: u64, candidate: &KvBlock) -> Option<Arc<KvBlock>> {
-        self.clock += 1;
-        let stamp = self.clock;
-        let at = self.walk(path)?;
-        let id = *self.node(at).children.get(&hash)?;
+        let id = self.probe(path, hash)?;
         let node = self.node_mut(id);
-        let block = node.block.as_ref()?;
+        let Some(CacheEntry::Hot(block)) = node.entry.as_ref() else {
+            return None;
+        };
         if !block.content_eq(candidate) {
             return None; // hash collision: treat as a miss, never share
         }
         let shared = Arc::clone(block);
-        node.last_touch = stamp;
-        self.push_lru(stamp, id);
+        self.touch_probed(id);
         Some(shared)
     }
 
-    /// Register a freshly sealed block at `path` + `hash`.  Missing
+    /// Register a freshly sealed entry at `path` + `hash`.  Missing
     /// intermediate nodes (evicted ancestors of a sliding-window stream)
     /// are recreated as tombstones; an existing tombstone at the target
-    /// is re-armed with the block.  The displaced block, if any (a hash
-    /// collision overwriting a different-content entry), is returned so
-    /// the caller can release it back to the pool — the index never
-    /// drops an `Arc` the pool's residency ledger is tracking.
-    pub fn insert(&mut self, path: &[u64], hash: u64, block: Arc<KvBlock>) -> Option<Arc<KvBlock>> {
+    /// is re-armed.  The displaced entry, if any (a hash collision
+    /// overwriting different content, or a corrupt spilled entry being
+    /// replaced), is returned so the caller can release its payload —
+    /// the index never drops an `Arc` the pool's residency ledger is
+    /// tracking.
+    pub fn insert(&mut self, path: &[u64], hash: u64, entry: CacheEntry) -> Option<CacheEntry> {
         self.clock += 1;
         let stamp = self.clock;
         let mut at = ROOT;
@@ -210,8 +294,8 @@ impl PrefixIndex {
             None => self.alloc_child(at, hash),
         };
         let node = self.node_mut(target);
-        let displaced = node.block.take();
-        node.block = Some(block);
+        let displaced = node.entry.take();
+        node.entry = Some(entry);
         node.last_touch = stamp;
         if displaced.is_none() {
             self.entries += 1;
@@ -228,12 +312,12 @@ impl PrefixIndex {
         self.lru.push(Reverse((stamp, id)));
         if self.lru.len() > 64 && self.lru.len() > 4 * self.entries.max(1) {
             // rebuild from the arena's current stamps: one snapshot per
-            // block-holding node.  Heap pops depend only on the (unique)
+            // entry-holding node.  Heap pops depend only on the (unique)
             // stamps, so a rebuild never changes the eviction order.
             let mut rebuilt = BinaryHeap::with_capacity(self.entries);
             for (id, slot) in self.arena.iter().enumerate() {
                 if let Some(node) = slot {
-                    if node.block.is_some() {
+                    if node.entry.is_some() {
                         rebuilt.push(Reverse((node.last_touch, id)));
                     }
                 }
@@ -242,52 +326,63 @@ impl PrefixIndex {
         }
     }
 
-    /// Remove the entry at `path` + `hash` if its block is exactly the
+    /// Remove the entry at `path` + `hash` if its payload is exactly the
     /// one `holder` shares and nothing else references it (`Arc` strong
     /// count ≤ 2: the index plus `holder`).  Used by the sliding-window
     /// path when no capacity bound exists to reclaim retention later,
-    /// and by batch-chain release at request completion.  Returns the
-    /// removed `Arc` for the caller to release.
+    /// and by batch-chain release at request completion.  An entry at a
+    /// different tier than the holder (the chain kept a hot ref while
+    /// the index entry was displaced and re-inserted) never matches.
+    /// Returns the removed entry for the caller to release.
     pub fn remove_if_unshared(
         &mut self,
         path: &[u64],
         hash: u64,
-        holder: &Arc<KvBlock>,
-    ) -> Option<Arc<KvBlock>> {
+        holder: &SealedRef,
+    ) -> Option<CacheEntry> {
         let at = self.walk(path)?;
         let id = *self.node(at).children.get(&hash)?;
         let node = self.node_mut(id);
-        let block = node.block.as_ref()?;
-        if !Arc::ptr_eq(block, holder) || Arc::strong_count(block) > 2 {
-            return None; // another stream still shares it: keep
+        let unshared = match (node.entry.as_ref()?, holder) {
+            (CacheEntry::Hot(b), SealedRef::Hot(h)) => {
+                Arc::ptr_eq(b, h) && Arc::strong_count(b) <= 2
+            }
+            (CacheEntry::Quant(q), SealedRef::Quant(h)) => {
+                Arc::ptr_eq(q, h) && Arc::strong_count(q) <= 2
+            }
+            _ => false,
+        };
+        if !unshared {
+            return None; // another stream still shares it (or tier mismatch): keep
         }
-        let removed = node.block.take().expect("checked above");
+        let removed = node.entry.take().expect("checked above");
         self.entries -= 1;
         self.prune_up(id);
         Some(removed)
     }
 
-    /// Evict the least-recently-touched block that nothing outside the
-    /// index references (`Arc` strong count 1), or `None` when every
-    /// held block is still referenced elsewhere.
-    pub fn evict_lru(&mut self) -> Option<Arc<KvBlock>> {
+    /// Evict the least-recently-touched RAM entry that nothing outside
+    /// the index references, or `None` when every held payload is still
+    /// referenced elsewhere.
+    pub fn evict_lru(&mut self) -> Option<CacheEntry> {
         self.evict_lru_batch(1).pop()
     }
 
-    /// Evict up to `max` least-recently-touched unreferenced blocks —
-    /// O(log N) heap pops per victim instead of a full trie DFS per
+    /// Evict up to `max` least-recently-touched unreferenced RAM entries
+    /// — O(log N) heap pops per victim instead of a full trie DFS per
     /// sealed block (the steady-state capacity-pressure cost this
     /// replaces).  Snapshots are popped in global stamp order: stale ones
     /// (node gone, tombstoned, re-touched under a newer stamp, or a
-    /// freed id's new tenant) are discarded, and snapshots of blocks a
+    /// freed id's new tenant) are discarded, snapshots of payloads a
     /// live stream still references are set aside and pushed back for a
-    /// later pass.  Interior nodes tombstone (descendants stay
-    /// addressable); leaves are removed and empty tombstone chains
-    /// pruned.  Returns the evicted `Arc`s for the caller to release
-    /// back to the pool, oldest first — possibly fewer than `max`.  The
-    /// order matches the `#[cfg(test)]` DFS oracle exactly (unique
-    /// stamps leave no ties).
-    pub fn evict_lru_batch(&mut self, max: usize) -> Vec<Arc<KvBlock>> {
+    /// later pass, and `Spilled` snapshots are discarded outright
+    /// (nothing resident to reclaim).  Interior nodes tombstone
+    /// (descendants stay addressable); leaves are removed and empty
+    /// tombstone chains pruned.  Returns the evicted entries for the
+    /// caller to release back to the pool, oldest first — possibly fewer
+    /// than `max`.  The order matches the `#[cfg(test)]` DFS oracle
+    /// exactly (unique stamps leave no ties).
+    pub fn evict_lru_batch(&mut self, max: usize) -> Vec<CacheEntry> {
         let mut evicted = Vec::new();
         let mut still_referenced: Vec<LruEntry> = Vec::new();
         while evicted.len() < max {
@@ -297,25 +392,116 @@ impl PrefixIndex {
             let Some(node) = self.arena[id].as_mut() else {
                 continue; // stale: the node was evicted and pruned
             };
-            let Some(block) = node.block.as_ref() else {
+            let Some(entry) = node.entry.as_ref() else {
                 continue; // stale: tombstoned or removed since the snapshot
             };
             if node.last_touch != stamp {
                 continue; // stale: re-touched — a newer snapshot exists
             }
-            if Arc::strong_count(block) > 1 {
+            if matches!(entry, CacheEntry::Spilled) {
+                continue; // disk-only: no RAM to reclaim — drop the snapshot
+            }
+            if !entry.ram_unreferenced() {
                 // live-referenced: not evictable *now*, but this snapshot
                 // is the node's current one — keep it for later passes
                 still_referenced.push(Reverse((stamp, id)));
                 continue;
             }
-            let block = node.block.take().expect("checked above");
+            let entry = node.entry.take().expect("checked above");
             self.entries -= 1;
             self.prune_up(id);
-            evicted.push(block);
+            evicted.push(entry);
         }
         self.lru.extend(still_referenced);
         evicted
+    }
+
+    /// Demote LRU entries one rung at a time until `need_hot` hot blocks
+    /// have left the hot tier (or nothing more is demotable).  Pops ride
+    /// the same lazy heap as eviction, with the same staleness and
+    /// still-referenced rules; a demotable snapshot's entry is handed
+    /// *owned* to `demote` along with the node's full hash path (ancestor
+    /// hashes + own hash — what the spill manifest records), and the
+    /// closure returns the next-rung replacement or `None` to drop the
+    /// node (ladder exhausted).  A re-armed node keeps its stamp — its
+    /// LRU position is unchanged, so later pressure passes keep sinking
+    /// it — and is deferred for the rest of *this* pass, so one call
+    /// never demotes the same entry twice.  Returns how many hot blocks
+    /// were freed (the closure releases their `Arc`s itself).
+    pub fn demote_lru_batch<F>(&mut self, need_hot: usize, mut demote: F) -> usize
+    where
+        F: FnMut(&[u64], CacheEntry) -> Option<CacheEntry>,
+    {
+        let mut freed_hot = 0;
+        let mut deferred: Vec<LruEntry> = Vec::new();
+        while freed_hot < need_hot {
+            let Some(Reverse((stamp, id))) = self.lru.pop() else {
+                break;
+            };
+            let (was_hot, demotable) = {
+                let Some(node) = self.arena[id].as_ref() else {
+                    continue; // stale: pruned
+                };
+                let Some(entry) = node.entry.as_ref() else {
+                    continue; // stale: tombstoned
+                };
+                if node.last_touch != stamp {
+                    continue; // stale: re-touched
+                }
+                if matches!(entry, CacheEntry::Spilled) {
+                    continue; // already at the bottom rung: drop the snapshot
+                }
+                (entry.is_hot(), entry.ram_unreferenced())
+            };
+            if !demotable {
+                deferred.push(Reverse((stamp, id)));
+                continue;
+            }
+            let path = self.path_of(id);
+            let owned = self.node_mut(id).entry.take().expect("validated above");
+            match demote(&path, owned) {
+                Some(colder) => {
+                    self.node_mut(id).entry = Some(colder);
+                    deferred.push(Reverse((stamp, id)));
+                }
+                None => {
+                    self.entries -= 1;
+                    self.prune_up(id);
+                }
+            }
+            if was_hot {
+                freed_hot += 1;
+            }
+        }
+        self.lru.extend(deferred);
+        freed_hot
+    }
+
+    /// Visit every entry-holding node with its full hash path and a
+    /// mutable slot — the spill-snapshot walk
+    /// ([`KvCache::spill_index`](super::KvCache::spill_index)) swaps
+    /// RAM entries for `Spilled` markers in place.  Stamps and the LRU
+    /// heap are untouched (a representation swap is not a use).  If the
+    /// closure empties a slot the node is dropped and pruned like an
+    /// eviction.
+    pub fn for_each_entry_mut<F>(&mut self, mut f: F)
+    where
+        F: FnMut(&[u64], &mut Option<CacheEntry>),
+    {
+        let ids: Vec<NodeId> = (0..self.arena.len())
+            .filter(|&id| {
+                id != ROOT && self.arena[id].as_ref().is_some_and(|n| n.entry.is_some())
+            })
+            .collect();
+        for id in ids {
+            let path = self.path_of(id);
+            let node = self.arena[id].as_mut().expect("listed live above");
+            f(&path, &mut node.entry);
+            if self.arena[id].as_ref().expect("listed live above").entry.is_none() {
+                self.entries -= 1;
+                self.prune_up(id);
+            }
+        }
     }
 
     /// Remove `id` if it is an empty tombstone, cascading up through
@@ -324,7 +510,7 @@ impl PrefixIndex {
     fn prune_up(&mut self, mut id: NodeId) {
         while id != ROOT {
             let node = self.node(id);
-            if node.block.is_some() || !node.children.is_empty() {
+            if node.entry.is_some() || !node.children.is_empty() {
                 break;
             }
             let (parent, key) = (node.parent, node.key);
@@ -339,7 +525,7 @@ impl PrefixIndex {
     /// the heap path: collect every evictable node in one DFS from the
     /// root, sort by the unique stamps, take the oldest `max`.
     #[cfg(test)]
-    fn evict_lru_batch_dfs(&mut self, max: usize) -> Vec<Arc<KvBlock>> {
+    fn evict_lru_batch_dfs(&mut self, max: usize) -> Vec<CacheEntry> {
         if max == 0 {
             return Vec::new();
         }
@@ -351,22 +537,23 @@ impl PrefixIndex {
         let mut evicted = Vec::with_capacity(candidates.len());
         for (_, id) in candidates {
             let node = self.node_mut(id);
-            let block = node.block.take().expect("evictable node holds a block");
+            let entry = node.entry.take().expect("evictable node holds an entry");
             self.entries -= 1;
             self.prune_up(id);
-            evicted.push(block);
+            evicted.push(entry);
         }
         evicted
     }
 
-    /// DFS collecting `(last_touch, id)` of every evictable node (block
-    /// held, strong count 1) — oracle support only.
+    /// DFS collecting `(last_touch, id)` of every evictable node (RAM
+    /// entry held, nothing outside the index referencing it) — oracle
+    /// support only.
     #[cfg(test)]
     fn find_evictable(&self, id: NodeId, out: &mut Vec<(u64, NodeId)>) {
         for &child in self.node(id).children.values() {
             let node = self.node(child);
-            if let Some(block) = &node.block {
-                if Arc::strong_count(block) == 1 {
+            if let Some(entry) = &node.entry {
+                if !matches!(entry, CacheEntry::Spilled) && entry.ram_unreferenced() {
                     out.push((node.last_touch, child));
                 }
             }
@@ -378,6 +565,7 @@ impl PrefixIndex {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::tier::{BlockTier, QuantBlock};
 
     fn sealed(token_elems: usize, fill: f32) -> Arc<KvBlock> {
         let mut b = KvBlock::from_storage(vec![0.0; token_elems], vec![0.0; token_elems], token_elems);
@@ -385,12 +573,19 @@ mod tests {
         Arc::new(b)
     }
 
+    fn hot(entry: &CacheEntry) -> &Arc<KvBlock> {
+        match entry {
+            CacheEntry::Hot(b) => b,
+            other => panic!("expected a hot entry, got {other:?}"),
+        }
+    }
+
     #[test]
     fn lookup_hits_only_verified_content_at_the_same_path() {
         let mut idx = PrefixIndex::new();
         let b0 = sealed(2, 1.0);
         let h0 = b0.content_hash();
-        assert!(idx.insert(&[], h0, Arc::clone(&b0)).is_none());
+        assert!(idx.insert(&[], h0, CacheEntry::Hot(Arc::clone(&b0))).is_none());
         assert_eq!(idx.len(), 1);
         // same path, same content: hit
         let probe = sealed(2, 1.0);
@@ -403,14 +598,42 @@ mod tests {
     }
 
     #[test]
+    fn probe_then_touch_matches_fused_lookup_stamps() {
+        // two indexes given the same op sequence, one through lookup and
+        // one through the split probe/touch flow, must evict identically
+        let mut fused = PrefixIndex::new();
+        let mut split = PrefixIndex::new();
+        let blocks: Vec<_> = (0..3).map(|i| sealed(2, i as f32 + 1.0)).collect();
+        for b in &blocks {
+            let _ = fused.insert(&[], b.content_hash(), CacheEntry::Hot(Arc::clone(b)));
+            let _ = split.insert(&[], b.content_hash(), CacheEntry::Hot(Arc::clone(b)));
+        }
+        // touch block 0 in both (and a miss probe in both, which must
+        // also advance the clock identically)
+        let probe = sealed(2, 1.0);
+        fused.lookup(&[], probe.content_hash(), &probe).expect("fused hit");
+        assert!(fused.lookup(&[], 12345, &probe).is_none());
+        let id = split.probe(&[], probe.content_hash()).expect("probed");
+        assert!(matches!(split.entry_cloned(id), Some(CacheEntry::Hot(_))));
+        split.touch_probed(id);
+        assert!(split.probe(&[], 12345).is_none());
+        drop(blocks);
+        for _ in 0..3 {
+            let a = fused.evict_lru().expect("fused evictable");
+            let b = split.evict_lru().expect("split evictable");
+            assert!(hot(&a).content_eq(hot(&b)), "eviction order diverged");
+        }
+    }
+
+    #[test]
     fn eviction_skips_referenced_blocks() {
         let mut idx = PrefixIndex::new();
         let held = sealed(2, 1.0);
         let loose = sealed(2, 2.0);
-        let _ = idx.insert(&[], held.content_hash(), Arc::clone(&held)); // 2 refs
-        let _ = idx.insert(&[], loose.content_hash(), loose); // 1 ref (index only)
+        let _ = idx.insert(&[], held.content_hash(), CacheEntry::Hot(Arc::clone(&held))); // 2 refs
+        let _ = idx.insert(&[], loose.content_hash(), CacheEntry::Hot(loose)); // 1 ref (index only)
         let evicted = idx.evict_lru().expect("loose block evictable");
-        assert_eq!(evicted.k_token(0)[0], 2.0, "must evict the unreferenced block");
+        assert_eq!(hot(&evicted).k_token(0)[0], 2.0, "must evict the unreferenced block");
         assert_eq!(idx.len(), 1);
         assert!(idx.evict_lru().is_none(), "held block must never be evicted");
         drop(held);
@@ -423,15 +646,15 @@ mod tests {
         let mut idx = PrefixIndex::new();
         let a = sealed(2, 1.0);
         let b = sealed(2, 2.0);
-        let _ = idx.insert(&[], a.content_hash(), Arc::clone(&a));
-        let _ = idx.insert(&[], b.content_hash(), Arc::clone(&b));
+        let _ = idx.insert(&[], a.content_hash(), CacheEntry::Hot(Arc::clone(&a)));
+        let _ = idx.insert(&[], b.content_hash(), CacheEntry::Hot(Arc::clone(&b)));
         // touch a, making b the LRU
         let probe = sealed(2, 1.0);
         idx.lookup(&[], probe.content_hash(), &probe).expect("hit a");
         drop(a);
         drop(b);
         let evicted = idx.evict_lru().expect("evictable");
-        assert_eq!(evicted.k_token(0)[0], 2.0, "least-recently-touched first");
+        assert_eq!(hot(&evicted).k_token(0)[0], 2.0, "least-recently-touched first");
     }
 
     #[test]
@@ -441,11 +664,11 @@ mod tests {
         let child = sealed(2, 2.0);
         let hp = parent.content_hash();
         let hc = child.content_hash();
-        let _ = idx.insert(&[], hp, Arc::clone(&parent));
-        let _ = idx.insert(&[hp], hc, Arc::clone(&child));
+        let _ = idx.insert(&[], hp, CacheEntry::Hot(Arc::clone(&parent)));
+        let _ = idx.insert(&[hp], hc, CacheEntry::Hot(Arc::clone(&child)));
         drop(parent); // only the index holds the parent now
         let evicted = idx.evict_lru().expect("parent evictable");
-        assert_eq!(evicted.k_token(0)[0], 1.0);
+        assert_eq!(hot(&evicted).k_token(0)[0], 1.0);
         assert_eq!(idx.len(), 1);
         // the child stays addressable through the tombstone
         let probe = sealed(2, 2.0);
@@ -453,21 +676,25 @@ mod tests {
         assert!(Arc::ptr_eq(&hit, &child));
         // re-arming the tombstone counts as one entry again
         let parent2 = sealed(2, 1.0);
-        assert!(idx.insert(&[], hp, parent2).is_none(), "tombstone re-arm displaces nothing");
+        assert!(
+            idx.insert(&[], hp, CacheEntry::Hot(parent2)).is_none(),
+            "tombstone re-arm displaces nothing"
+        );
         assert_eq!(idx.len(), 2);
     }
 
     #[test]
-    fn insert_returns_the_displaced_block() {
+    fn insert_returns_the_displaced_entry() {
         let mut idx = PrefixIndex::new();
         let a = sealed(2, 1.0);
         let b = sealed(2, 2.0);
         let h = a.content_hash();
-        assert!(idx.insert(&[], h, Arc::clone(&a)).is_none());
+        assert!(idx.insert(&[], h, CacheEntry::Hot(Arc::clone(&a))).is_none());
         // simulated hash collision: different content forced onto the
-        // same key must hand the old block back, not drop it
-        let displaced = idx.insert(&[], h, Arc::clone(&b)).expect("displaced block returned");
-        assert!(Arc::ptr_eq(&displaced, &a));
+        // same key must hand the old entry back, not drop it
+        let displaced =
+            idx.insert(&[], h, CacheEntry::Hot(Arc::clone(&b))).expect("displaced entry returned");
+        assert!(Arc::ptr_eq(hot(&displaced), &a));
         assert_eq!(idx.len(), 1);
     }
 
@@ -476,12 +703,13 @@ mod tests {
         let mut idx = PrefixIndex::new();
         let block = sealed(2, 1.0);
         let h = block.content_hash();
-        let _ = idx.insert(&[], h, Arc::clone(&block)); // index + `block` = 2 refs
-        let outside = Arc::clone(&block); // a third holder (another stream)
-        assert!(idx.remove_if_unshared(&[], h, &block).is_none(), "shared: must keep");
-        drop(outside);
-        let removed = idx.remove_if_unshared(&[], h, &block).expect("unshared: removed");
-        assert!(Arc::ptr_eq(&removed, &block));
+        let _ = idx.insert(&[], h, CacheEntry::Hot(Arc::clone(&block))); // index + `block` = 2 refs
+        let holder = SealedRef::Hot(Arc::clone(&block)); // the chain's ref (3 refs now)
+        assert!(idx.remove_if_unshared(&[], h, &holder).is_none(), "shared: must keep");
+        drop(block);
+        let removed = idx.remove_if_unshared(&[], h, &holder).expect("unshared: removed");
+        let SealedRef::Hot(held) = &holder else { unreachable!() };
+        assert!(Arc::ptr_eq(hot(&removed), held));
         assert!(idx.is_empty());
     }
 
@@ -490,14 +718,14 @@ mod tests {
         let mut idx = PrefixIndex::new();
         let blocks: Vec<_> = (0..4).map(|i| sealed(2, i as f32 + 1.0)).collect();
         for b in &blocks {
-            let _ = idx.insert(&[], b.content_hash(), Arc::clone(b));
+            let _ = idx.insert(&[], b.content_hash(), CacheEntry::Hot(Arc::clone(b)));
         }
         let keep = Arc::clone(&blocks[0]); // oldest stamp, but referenced
         drop(blocks);
         let evicted = idx.evict_lru_batch(2);
         assert_eq!(evicted.len(), 2);
-        assert_eq!(evicted[0].k_token(0)[0], 2.0, "oldest unreferenced first");
-        assert_eq!(evicted[1].k_token(0)[0], 3.0);
+        assert_eq!(hot(&evicted[0]).k_token(0)[0], 2.0, "oldest unreferenced first");
+        assert_eq!(hot(&evicted[1]).k_token(0)[0], 3.0);
         assert_eq!(idx.len(), 2);
         drop(keep);
         assert_eq!(idx.evict_lru_batch(10).len(), 2, "remainder evictable once released");
@@ -531,8 +759,8 @@ mod tests {
                         let a = sealed(2, fill);
                         let b = sealed(2, fill);
                         let hash = a.content_hash();
-                        let da = heap_idx.insert(&path, hash, Arc::clone(&a));
-                        let db = dfs_idx.insert(&path, hash, Arc::clone(&b));
+                        let da = heap_idx.insert(&path, hash, CacheEntry::Hot(Arc::clone(&a)));
+                        let db = dfs_idx.insert(&path, hash, CacheEntry::Hot(Arc::clone(&b)));
                         assert_eq!(da.is_some(), db.is_some());
                         if rng.below(2) == 0 {
                             held.push((a, b)); // a "live stream" pins it
@@ -561,7 +789,7 @@ mod tests {
                         let want = dfs_idx.evict_lru_batch_dfs(k);
                         assert_eq!(got.len(), want.len(), "evicted counts diverged");
                         for (g, w) in got.iter().zip(&want) {
-                            assert!(g.content_eq(w), "eviction order diverged");
+                            assert!(hot(g).content_eq(hot(w)), "eviction order diverged");
                         }
                     }
                 }
@@ -575,7 +803,7 @@ mod tests {
                 let want = dfs_idx.evict_lru_batch_dfs(4);
                 assert_eq!(got.len(), want.len());
                 for (g, w) in got.iter().zip(&want) {
-                    assert!(g.content_eq(w));
+                    assert!(hot(g).content_eq(hot(w)));
                 }
                 if got.is_empty() {
                     break;
@@ -592,8 +820,8 @@ mod tests {
         let child = sealed(2, 2.0);
         let hp = parent.content_hash();
         let hc = child.content_hash();
-        let _ = idx.insert(&[], hp, parent);
-        let _ = idx.insert(&[hp], hc, child);
+        let _ = idx.insert(&[], hp, CacheEntry::Hot(parent));
+        let _ = idx.insert(&[hp], hc, CacheEntry::Hot(child));
         // evict both (insertion order: parent is older)
         assert!(idx.evict_lru().is_some());
         assert!(idx.evict_lru().is_some());
@@ -607,14 +835,14 @@ mod tests {
         let mut idx = PrefixIndex::new();
         let a = sealed(2, 1.0);
         let ha = a.content_hash();
-        let _ = idx.insert(&[], ha, a);
+        let _ = idx.insert(&[], ha, CacheEntry::Hot(a));
         assert!(idx.evict_lru().is_some());
         let slots_after_evict = idx.arena.len();
         // the freed slot is reused by the next insert — the arena does
         // not grow...
         let b = sealed(2, 2.0);
         let hb = b.content_hash();
-        let _ = idx.insert(&[], hb, Arc::clone(&b));
+        let _ = idx.insert(&[], hb, CacheEntry::Hot(Arc::clone(&b)));
         assert_eq!(idx.arena.len(), slots_after_evict, "freed slot must be reused");
         assert!(idx.free.is_empty());
         // ...and any stale snapshot aimed at the recycled id must not
@@ -623,7 +851,96 @@ mod tests {
         assert_eq!(idx.len(), 1);
         drop(b);
         let evicted = idx.evict_lru().expect("b evictable after release");
-        assert_eq!(evicted.k_token(0)[0], 2.0);
+        assert_eq!(hot(&evicted).k_token(0)[0], 2.0);
         assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn demote_sinks_one_rung_per_pass_and_reports_paths() {
+        let mut idx = PrefixIndex::new();
+        let a = sealed(2, 1.0);
+        let b = sealed(2, 2.0);
+        let ha = a.content_hash();
+        let hb = b.content_hash();
+        let _ = idx.insert(&[], ha, CacheEntry::Hot(a)); // index-only
+        let _ = idx.insert(&[ha], hb, CacheEntry::Hot(b)); // index-only, child of a
+        // pass 1: both hot entries demote exactly one rung, oldest first,
+        // with full paths reported
+        let mut seen: Vec<Vec<u64>> = Vec::new();
+        let freed = idx.demote_lru_batch(2, |path, entry| {
+            seen.push(path.to_vec());
+            let CacheEntry::Hot(block) = entry else {
+                panic!("pass 1 must only see hot entries")
+            };
+            Some(CacheEntry::Quant(Arc::new(QuantBlock::quantise(&block, BlockTier::F16))))
+        });
+        assert_eq!(freed, 2);
+        assert_eq!(seen, vec![vec![ha], vec![ha, hb]], "oldest first, full paths");
+        assert_eq!(idx.len(), 2, "re-armed entries stay counted");
+        // pass 2: asking for more hot frees finds none — the quant
+        // entries each sink one more rung (here: dropped)
+        let freed = idx.demote_lru_batch(1, |_, entry| {
+            assert!(matches!(entry, CacheEntry::Quant(_)), "pass 2 sees the quant rung");
+            None
+        });
+        assert_eq!(freed, 0, "no hot blocks left to free");
+        assert!(idx.is_empty(), "ladder exhausted: entries dropped and pruned");
+    }
+
+    #[test]
+    fn demote_skips_referenced_and_spilled_entries() {
+        let mut idx = PrefixIndex::new();
+        let pinned = sealed(2, 1.0);
+        let hp = pinned.content_hash();
+        let _ = idx.insert(&[], hp, CacheEntry::Hot(Arc::clone(&pinned))); // 2 refs
+        let _ = idx.insert(&[], 0xdead, CacheEntry::Spilled);
+        let freed = idx.demote_lru_batch(1, |_, _| panic!("nothing is demotable"));
+        assert_eq!(freed, 0);
+        assert_eq!(idx.len(), 2, "skipped entries stay");
+        // the pinned block stays demotable later (its snapshot was deferred)
+        drop(pinned);
+        let freed = idx.demote_lru_batch(1, |_, entry| {
+            assert!(entry.is_hot());
+            None
+        });
+        assert_eq!(freed, 1);
+    }
+
+    #[test]
+    fn replace_entry_swaps_representation_in_place() {
+        let mut idx = PrefixIndex::new();
+        let _ = idx.insert(&[], 0x42, CacheEntry::Spilled);
+        let id = idx.probe(&[], 0x42).expect("probed");
+        assert!(matches!(idx.entry_cloned(id), Some(CacheEntry::Spilled)));
+        let fresh = sealed(2, 3.0);
+        let old = idx.replace_entry(id, CacheEntry::Hot(Arc::clone(&fresh)));
+        assert!(matches!(old, Some(CacheEntry::Spilled)));
+        idx.touch_probed(id);
+        assert_eq!(idx.len(), 1, "promotion neither creates nor destroys entries");
+        let probe = sealed(2, 3.0);
+        let hit = idx.lookup(&[], 0x42, &probe);
+        assert!(hit.is_some_and(|h| Arc::ptr_eq(&h, &fresh)), "promoted entry serves hot hits");
+    }
+
+    #[test]
+    fn for_each_entry_mut_visits_full_paths_and_swaps() {
+        let mut idx = PrefixIndex::new();
+        let a = sealed(2, 1.0);
+        let b = sealed(2, 2.0);
+        let ha = a.content_hash();
+        let hb = b.content_hash();
+        let _ = idx.insert(&[], ha, CacheEntry::Hot(a));
+        let _ = idx.insert(&[ha], hb, CacheEntry::Hot(b));
+        let mut paths = Vec::new();
+        idx.for_each_entry_mut(|path, slot| {
+            paths.push(path.to_vec());
+            *slot = Some(CacheEntry::Spilled); // drop the Arc, keep the entry
+        });
+        paths.sort();
+        assert_eq!(paths, vec![vec![ha], vec![ha, hb]]);
+        assert_eq!(idx.len(), 2, "swapped entries stay counted");
+        // both are Spilled now: the probe path still resolves them
+        let id = idx.probe(&[ha], hb).expect("spilled entries stay addressable");
+        assert!(matches!(idx.entry_cloned(id), Some(CacheEntry::Spilled)));
     }
 }

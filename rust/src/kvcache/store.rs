@@ -1,0 +1,360 @@
+//! The spill tier: a content-addressed on-disk block store.
+//!
+//! Exact f32 block bytes are archived under their FNV-1a content hash —
+//! the same digest the [`PrefixIndex`](super::PrefixIndex) keys on, and
+//! the same digest-addressing OCI registries use for blobs: the address
+//! *is* the checksum, so a read can always re-verify what it got.  Layout
+//! under the store directory:
+//!
+//! ```text
+//! spill_dir/
+//!   MANIFEST            # append-only text: one line per spilled entry
+//!   blocks/
+//!     <hash:016x>.kvb   # magic + geometry header + raw K then V f32 LE
+//! ```
+//!
+//! **Write-once exact archive.** A block's file is written at its *first*
+//! demotion, while the exact f32 bytes still exist in RAM.  Later rungs
+//! (f16/int8) never write — they only check [`BlockStore::contains`] —
+//! so a block that sinks all the way to the spilled rung always
+//! rehydrates bitwise-identical to what was sealed, no matter how lossy
+//! its in-RAM representation got in between.  Writes go through a `.tmp` + atomic rename, so concurrent
+//! writers (two processes sharing a store) race benignly: same hash,
+//! same bytes.
+//!
+//! **Digest re-verified on read.** [`BlockStore::read`] validates the
+//! header, the byte length, and finally recomputes the decoded block's
+//! content hash against the address it was fetched under.  A truncated
+//! file, a flipped byte, or a missing file all surface as
+//! [`SpillError`] — the cache maps that to a *miss* (and a
+//! `spill_corrupt` stat bump), never a panic, never silent wrong bytes.
+//!
+//! The manifest records each spilled entry's full trie path (ancestor
+//! hashes + own hash) so a fresh [`KvCache`](super::KvCache) over the
+//! same directory can re-register every entry at the right prefix
+//! position — warm restart — and two live caches over one directory
+//! share blocks across processes.  Lines are self-describing and
+//! independently parseable; unreadable lines are skipped (a torn
+//! append degrades to a forgotten entry, which is just a miss).
+
+use super::block::KvBlock;
+use std::fs;
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+
+/// File magic for block files (`.kvb`).
+const BLOCK_MAGIC: &[u8; 4] = b"KVB1";
+/// First line of a fresh manifest.
+const MANIFEST_HEADER: &str = "KVMANIFEST v1";
+
+/// Why a spill-store read could not produce a verified block.  Every
+/// variant degrades to a cache miss at the call site.
+#[derive(Debug)]
+pub enum SpillError {
+    /// The file is missing or unreadable (I/O level).
+    Io(io::Error),
+    /// The file was read but failed validation (bad magic, wrong
+    /// geometry, truncation, or digest mismatch).
+    Corrupt(&'static str),
+}
+
+impl std::fmt::Display for SpillError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "spill read failed: {e}"),
+            Self::Corrupt(why) => write!(f, "spill block corrupt: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for SpillError {}
+
+impl From<io::Error> for SpillError {
+    fn from(e: io::Error) -> Self {
+        Self::Io(e)
+    }
+}
+
+/// One manifest line: a spilled entry's identity and trie position.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Content hash — the block file's address and expected digest.
+    pub hash: u64,
+    /// Tokens in the block (always the sealing cache's `block_size`).
+    pub len: usize,
+    /// f32 elements per token row.
+    pub token_elems: usize,
+    /// Ancestor content hashes from the trie root (excluding `hash`).
+    pub path: Vec<u64>,
+}
+
+/// Handle on one spill directory.  Cheap to construct; all state lives
+/// on disk, which is what makes warm restarts and cross-process sharing
+/// work without coordination.
+#[derive(Debug)]
+pub struct BlockStore {
+    blocks_dir: PathBuf,
+    manifest_path: PathBuf,
+}
+
+impl BlockStore {
+    /// Open (creating if needed) the store at `dir`.
+    pub fn open(dir: &Path) -> io::Result<Self> {
+        let blocks_dir = dir.join("blocks");
+        fs::create_dir_all(&blocks_dir)?;
+        let manifest_path = dir.join("MANIFEST");
+        if !manifest_path.exists() {
+            fs::write(&manifest_path, format!("{MANIFEST_HEADER}\n"))?;
+        }
+        Ok(Self { blocks_dir, manifest_path })
+    }
+
+    /// The on-disk path of `hash`'s block file (exposed so the
+    /// fault-injection tests can corrupt it in place).
+    pub fn block_path(&self, hash: u64) -> PathBuf {
+        self.blocks_dir.join(format!("{hash:016x}.kvb"))
+    }
+
+    /// Whether `hash`'s exact bytes are archived — the gate for
+    /// demoting a quantised block to the spilled rung (which holds no
+    /// RAM payload at all).
+    pub fn contains(&self, hash: u64) -> bool {
+        self.block_path(hash).exists()
+    }
+
+    /// Archive `block`'s exact bytes under `hash` and append a manifest
+    /// line recording its trie position (`path` = ancestor hashes).  The
+    /// block file is written only if absent (content-addressed: equal
+    /// hash ⇒ equal verified bytes); the manifest line is appended
+    /// unconditionally so the same content spilled at a new prefix
+    /// position is restorable at both.  Returns whether a new block
+    /// file was written.
+    pub fn write(&self, path: &[u64], hash: u64, block: &KvBlock) -> io::Result<bool> {
+        let target = self.block_path(hash);
+        let mut wrote = false;
+        if !target.exists() {
+            let tmp = self.blocks_dir.join(format!("{hash:016x}.tmp"));
+            let mut buf = Vec::with_capacity(12 + block.len() * block.token_elems() * 8);
+            buf.extend_from_slice(BLOCK_MAGIC);
+            buf.extend_from_slice(&(block.token_elems() as u32).to_le_bytes());
+            buf.extend_from_slice(&(block.len() as u32).to_le_bytes());
+            for &x in block.k_filled() {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            for &x in block.v_filled() {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            fs::write(&tmp, &buf)?;
+            fs::rename(&tmp, &target)?; // atomic: readers never see a torn file
+            wrote = true;
+        }
+        let mut line = format!("block {hash:016x} {} {}", block.len(), block.token_elems());
+        for h in path {
+            line.push_str(&format!(" {h:016x}"));
+        }
+        line.push('\n');
+        let mut manifest =
+            fs::OpenOptions::new().create(true).append(true).open(&self.manifest_path)?;
+        manifest.write_all(line.as_bytes())?;
+        Ok(wrote)
+    }
+
+    /// Read and fully verify the block archived under `hash`: header,
+    /// geometry (`token_elems`, `block_size`), byte length, and finally
+    /// the recomputed content hash against the address.  Any failure is
+    /// a [`SpillError`] for the caller to turn into a miss.
+    pub fn read(
+        &self,
+        hash: u64,
+        token_elems: usize,
+        block_size: usize,
+    ) -> Result<KvBlock, SpillError> {
+        let mut file = fs::File::open(self.block_path(hash))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        if bytes.len() < 12 {
+            return Err(SpillError::Corrupt("truncated header"));
+        }
+        if &bytes[..4] != BLOCK_MAGIC {
+            return Err(SpillError::Corrupt("bad magic"));
+        }
+        let te = u32::from_le_bytes(bytes[4..8].try_into().expect("4 bytes")) as usize;
+        let len = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes")) as usize;
+        if te != token_elems || len != block_size {
+            return Err(SpillError::Corrupt("geometry mismatch"));
+        }
+        let elems = len * te;
+        if bytes.len() != 12 + elems * 8 {
+            return Err(SpillError::Corrupt("payload length mismatch"));
+        }
+        let decode = |at: usize| -> Vec<f32> {
+            bytes[at..at + elems * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+                .collect()
+        };
+        let block = KvBlock::from_filled(decode(12), decode(12 + elems * 4), te, len);
+        if block.content_hash() != hash {
+            return Err(SpillError::Corrupt("digest mismatch"));
+        }
+        Ok(block)
+    }
+
+    /// Best-effort removal of `hash`'s block file (corrupt-entry
+    /// cleanup, so the next miss re-archives clean bytes).
+    pub fn remove(&self, hash: u64) {
+        let _ = fs::remove_file(self.block_path(hash));
+    }
+
+    /// Parse the manifest into restorable entries, newest line last.
+    /// Duplicate `(path, hash)` lines collapse to one; unparseable lines
+    /// (torn appends, foreign headers) are skipped — a lost line is just
+    /// a future miss, consistent with every other corruption here.
+    pub fn load_manifest(&self) -> Vec<ManifestEntry> {
+        let Ok(text) = fs::read_to_string(&self.manifest_path) else {
+            return Vec::new();
+        };
+        let mut entries: Vec<ManifestEntry> = Vec::new();
+        for line in text.lines() {
+            let mut fields = line.split_whitespace();
+            if fields.next() != Some("block") {
+                continue;
+            }
+            let Some(hash) = fields.next().and_then(|f| u64::from_str_radix(f, 16).ok()) else {
+                continue;
+            };
+            let Some(len) = fields.next().and_then(|f| f.parse::<usize>().ok()) else {
+                continue;
+            };
+            let Some(token_elems) = fields.next().and_then(|f| f.parse::<usize>().ok()) else {
+                continue;
+            };
+            let path: Option<Vec<u64>> =
+                fields.map(|f| u64::from_str_radix(f, 16).ok()).collect();
+            let Some(path) = path else {
+                continue;
+            };
+            let entry = ManifestEntry { hash, len, token_elems, path };
+            if !entries.contains(&entry) {
+                entries.push(entry);
+            }
+        }
+        entries
+    }
+}
+
+/// A dependency-free stand-in for the `tempfile` crate (the build is
+/// offline): a unique directory under [`std::env::temp_dir`], removed
+/// recursively on drop.  Shared by the spill unit tests, the
+/// `kv_tiers` integration suite, and the `--tiers` bench sweep.
+#[doc(hidden)]
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Create a fresh uniquely-named directory (`<tag>-<pid>-<seq>` under
+/// the system temp dir) that cleans itself up on drop.
+#[doc(hidden)]
+pub fn tempdir(tag: &str) -> TempDir {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let pid = std::process::id();
+    let path = std::env::temp_dir().join(format!("skein-{tag}-{pid}-{seq}"));
+    fs::create_dir_all(&path).expect("create temp dir");
+    TempDir { path }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sealed_block(fill: impl Fn(usize) -> f32, len: usize, token_elems: usize) -> KvBlock {
+        let mut b = KvBlock::from_storage(
+            vec![0.0; len * token_elems],
+            vec![0.0; len * token_elems],
+            token_elems,
+        );
+        for t in 0..len {
+            let k: Vec<f32> = (0..token_elems).map(|e| fill(t * token_elems + e)).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            b.push(&k, &v);
+        }
+        b
+    }
+
+    #[test]
+    fn write_read_round_trips_bitwise() {
+        let dir = tempdir("store-rt");
+        let store = BlockStore::open(dir.path()).unwrap();
+        let block = sealed_block(|i| i as f32 * 0.25 - 3.0, 4, 2);
+        let hash = block.content_hash();
+        assert!(store.write(&[7, 9], hash, &block).unwrap(), "first write creates the file");
+        assert!(!store.write(&[7, 9], hash, &block).unwrap(), "re-write is a no-op");
+        assert!(store.contains(hash));
+        let back = store.read(hash, 2, 4).unwrap();
+        assert!(back.content_eq(&block), "rehydrated block must be bitwise identical");
+    }
+
+    #[test]
+    fn read_rejects_wrong_geometry_and_digest() {
+        let dir = tempdir("store-bad");
+        let store = BlockStore::open(dir.path()).unwrap();
+        let block = sealed_block(|i| i as f32, 2, 3);
+        let hash = block.content_hash();
+        store.write(&[], hash, &block).unwrap();
+        assert!(matches!(store.read(hash, 4, 2), Err(SpillError::Corrupt(_))), "geometry");
+        assert!(matches!(store.read(hash ^ 1, 3, 2), Err(SpillError::Io(_))), "missing file");
+        // flip one payload byte: digest check must catch it
+        let path = store.block_path(hash);
+        let mut bytes = fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        fs::write(&path, &bytes).unwrap();
+        assert!(matches!(store.read(hash, 3, 2), Err(SpillError::Corrupt("digest mismatch"))));
+    }
+
+    #[test]
+    fn manifest_records_paths_and_dedupes() {
+        let dir = tempdir("store-man");
+        let store = BlockStore::open(dir.path()).unwrap();
+        let a = sealed_block(|i| i as f32 + 1.0, 2, 2);
+        let b = sealed_block(|i| i as f32 * 2.0, 2, 2);
+        store.write(&[], a.content_hash(), &a).unwrap();
+        store.write(&[a.content_hash()], b.content_hash(), &b).unwrap();
+        store.write(&[], a.content_hash(), &a).unwrap(); // duplicate line
+        let entries = store.load_manifest();
+        assert_eq!(entries.len(), 2, "duplicate manifest lines collapse");
+        assert_eq!(entries[0].path, Vec::<u64>::new());
+        assert_eq!(entries[1].path, vec![a.content_hash()]);
+        assert_eq!(entries[1].hash, b.content_hash());
+        assert_eq!(entries[1].token_elems, 2);
+        // a second store over the same dir sees the same manifest
+        let other = BlockStore::open(dir.path()).unwrap();
+        assert_eq!(other.load_manifest().len(), 2);
+    }
+
+    #[test]
+    fn tempdir_is_unique_and_cleaned_up() {
+        let a = tempdir("t");
+        let b = tempdir("t");
+        assert_ne!(a.path(), b.path());
+        let kept = a.path().to_path_buf();
+        assert!(kept.is_dir());
+        drop(a);
+        assert!(!kept.exists(), "dropped tempdir must be removed");
+    }
+}

@@ -1,0 +1,573 @@
+//! The tier ladder: lossy in-RAM representations of cold sealed blocks.
+//!
+//! A sealed [`KvBlock`] starts **hot** (exact f32).  Under capacity
+//! pressure the cache demotes index-only blocks one rung at a time
+//! instead of dropping them — f32 → f16 → int8 → spilled-to-disk —
+//! trading bounded dequantisation error (or a disk read) for resident
+//! bytes, the same controlled-approximation trade the paper's sketched
+//! score matrices make one layer up.  [`TierLadder`] says which rungs are
+//! enabled; [`QuantBlock`] is the in-RAM payload of the f16/int8 rungs;
+//! the spilled rung lives in [`BlockStore`](super::store::BlockStore).
+//!
+//! **Codec contracts** (pinned by `rust/tests/kv_tiers.rs`):
+//!
+//! * f16 is IEEE binary16 with round-to-nearest-even: exactly-representable
+//!   values round-trip bitwise, everything else within `2^-11` relative
+//!   error (half the 10-bit mantissa ulp).
+//! * int8 uses a per-payload absmax-derived scale snapped **up** to a
+//!   power of two (`scale = 2^⌈log2(absmax/127)⌉`), so `x/scale` and
+//!   `q*scale` are exact f32 operations: element-wise error is ≤ scale/2,
+//!   and quantise→dequantise→quantise is *exactly* idempotent (data and
+//!   scale bitwise stable) — an already-cold block never drifts further.
+//! * Dequantised views are written straight into the caller's scratch
+//!   matrices by [`QuantBlock::dequant_head_into`]; nothing lossy is ever
+//!   re-inserted into the prefix index, so a quantised block can still be
+//!   *verified* against a freshly sealed candidate
+//!   ([`QuantBlock::matches_quantised`]) by re-encoding the candidate —
+//!   deterministic codecs make that comparison exact.
+
+use super::block::KvBlock;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// The representation rung a cached block currently occupies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockTier {
+    /// Exact f32 — the only tier chains read from without decoding.
+    F32,
+    /// IEEE binary16 payload, half the bytes.
+    F16,
+    /// Per-payload absmax int8, a quarter of the bytes.
+    Int8,
+    /// Exact bytes on disk only (content-addressed; see
+    /// [`BlockStore`](super::store::BlockStore)).
+    Spilled,
+}
+
+/// Which demotion rungs are enabled (all off by default — the tiers-off
+/// cache is bitwise identical to one built before tiers existed).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TierLadder {
+    /// Demote hot index-only blocks to f16 under capacity pressure.
+    pub f16: bool,
+    /// Demote to int8 (from f16 when both are enabled, else from hot).
+    pub int8: bool,
+    /// Spill exact f32 bytes to this content-addressed directory and
+    /// keep demoting quantised blocks down to disk-only entries.
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl TierLadder {
+    /// The all-off ladder (same as `Default`).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn with_f16(mut self, on: bool) -> Self {
+        self.f16 = on;
+        self
+    }
+
+    pub fn with_int8(mut self, on: bool) -> Self {
+        self.int8 = on;
+        self
+    }
+
+    pub fn with_spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.spill_dir = Some(dir.into());
+        self
+    }
+
+    /// True when any rung below hot is enabled — the cache only takes
+    /// the tiered pressure path (and pays its bookkeeping) when this is.
+    pub fn enabled(&self) -> bool {
+        self.f16 || self.int8 || self.spill_dir.is_some()
+    }
+
+    /// The next *quantised* rung below `from`, or `None` when the block
+    /// should fall through to the spill store (or be dropped).
+    pub fn next_quant(&self, from: BlockTier) -> Option<BlockTier> {
+        match from {
+            BlockTier::F32 if self.f16 => Some(BlockTier::F16),
+            BlockTier::F32 | BlockTier::F16 if self.int8 => Some(BlockTier::Int8),
+            _ => None,
+        }
+    }
+
+    /// Parse a `--kv-tiers` value: comma-separated rung names out of
+    /// `f16`, `int8` (e.g. `"f16,int8"`).  The spill rung is a separate
+    /// flag (`--kv-spill-dir`) because it needs a path.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut ladder = Self::none();
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            match tok {
+                "f16" => ladder.f16 = true,
+                "int8" => ladder.int8 = true,
+                other => return Err(format!("unknown KV tier {other:?} (expected f16 or int8)")),
+            }
+        }
+        Ok(ladder)
+    }
+}
+
+/// Convert an f32 to IEEE binary16 bits, round-to-nearest-even (the
+/// hardware conversion semantics; carries propagate into the exponent,
+/// overflow saturates to ±inf, NaN stays NaN).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN — keep a quiet bit so a NaN payload never collapses
+        // to the inf encoding
+        let nan = if man != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | nan | ((man >> 13) as u16 & 0x01ff);
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow: ±inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflows past the smallest subnormal: ±0
+        }
+        // subnormal: shift the implicit-1 significand into place
+        let sig = man | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let mut out = sig >> shift;
+        let dropped = sig & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if dropped > half || (dropped == half && (out & 1) == 1) {
+            out += 1; // may round up into the smallest normal — encoding stays valid
+        }
+        return sign | out as u16;
+    }
+    let mut out = ((e as u32) << 10) | (man >> 13);
+    let dropped = man & 0x1fff;
+    if dropped > 0x1000 || (dropped == 0x1000 && (out & 1) == 1) {
+        out += 1; // mantissa carry may bump the exponent; 0x7c00 (inf) is then correct
+    }
+    sign | out as u16
+}
+
+/// Convert IEEE binary16 bits back to f32 (exact — every f16 value is
+/// representable in f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13) // inf / NaN
+    } else if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal: normalise into an f32 normal
+            let mut e = 113u32; // would-be exponent field of 2^-14 * 1.x
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x03ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Smallest power of two ≥ `absmax / 127` (0 for an all-zero payload).
+/// A power-of-two scale makes `x / scale` and `q * scale` exact f32
+/// operations — the property the idempotence contract rests on.
+fn po2_scale(absmax: f32) -> f32 {
+    // all-zero payloads (and out-of-contract non-finite ones) encode as
+    // scale 0: every element quantises and dequantises to exactly 0
+    if !(absmax > 0.0) || !absmax.is_finite() {
+        return 0.0;
+    }
+    let target = absmax / 127.0;
+    let mut scale = 1.0f32;
+    while scale < target {
+        scale *= 2.0;
+    }
+    while scale * 0.5 >= target {
+        scale *= 0.5;
+    }
+    scale
+}
+
+/// One quantised K or V payload.
+#[derive(Debug, PartialEq)]
+enum QuantPayload {
+    F16(Vec<u16>),
+    Int8 {
+        data: Vec<i8>,
+        /// Power-of-two absmax-derived scale (see [`po2_scale`]); 0 for
+        /// an all-zero payload.
+        scale: f32,
+    },
+}
+
+impl QuantPayload {
+    fn encode(xs: &[f32], tier: BlockTier) -> Self {
+        match tier {
+            BlockTier::F16 => Self::F16(xs.iter().map(|&x| f32_to_f16_bits(x)).collect()),
+            BlockTier::Int8 => {
+                let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                let scale = po2_scale(absmax);
+                if scale == 0.0 {
+                    return Self::Int8 { data: vec![0; xs.len()], scale: 0.0 };
+                }
+                let inv = 1.0 / scale; // power of two: exact
+                let data = xs.iter().map(|&x| (x * inv).round() as i8).collect();
+                Self::Int8 { data, scale }
+            }
+            other => unreachable!("no quantised payload for tier {other:?}"),
+        }
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> f32 {
+        match self {
+            Self::F16(data) => f16_bits_to_f32(data[i]),
+            Self::Int8 { data, scale } => data[i] as f32 * scale,
+        }
+    }
+
+    fn decode_into(&self, range: std::ops::Range<usize>, out: &mut [f32]) {
+        debug_assert_eq!(range.len(), out.len());
+        match self {
+            Self::F16(data) => {
+                for (dst, &h) in out.iter_mut().zip(&data[range]) {
+                    *dst = f16_bits_to_f32(h);
+                }
+            }
+            Self::Int8 { data, scale } => {
+                for (dst, &q) in out.iter_mut().zip(&data[range]) {
+                    *dst = q as f32 * scale;
+                }
+            }
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            Self::F16(data) => data.len() * 2,
+            Self::Int8 { data, .. } => data.len() + std::mem::size_of::<f32>(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Self::F16(data) => data.len(),
+            Self::Int8 { data, .. } => data.len(),
+        }
+    }
+}
+
+/// A sealed block demoted to a lossy in-RAM representation (f16 or
+/// int8).  Immutable like every sealed block; shared as
+/// `Arc<QuantBlock>` between the prefix index and any chains that hit
+/// it.  Reads decode into caller scratch via
+/// [`Self::dequant_head_into`] — the decoded f32 view lives only as
+/// long as the query's scratch buffers and is never cached or
+/// re-hashed.
+#[derive(Debug)]
+pub struct QuantBlock {
+    k: QuantPayload,
+    v: QuantPayload,
+    len: usize,
+    token_elems: usize,
+}
+
+impl QuantBlock {
+    /// Quantise a sealed (full) block's filled K/V payloads to `tier`
+    /// (must be [`BlockTier::F16`] or [`BlockTier::Int8`]).
+    pub fn quantise(block: &KvBlock, tier: BlockTier) -> Self {
+        Self {
+            k: QuantPayload::encode(block.k_filled(), tier),
+            v: QuantPayload::encode(block.v_filled(), tier),
+            len: block.len(),
+            token_elems: block.token_elems(),
+        }
+    }
+
+    /// Re-encode this block one rung colder (f16 → int8): decode, then
+    /// quantise the decoded values.  The int8 scale is derived from the
+    /// *decoded* absmax, so error stays ≤ scale/2 of what this block
+    /// already holds.
+    pub fn requantise(&self, tier: BlockTier) -> Self {
+        let (k, v) = self.dequantise();
+        Self {
+            k: QuantPayload::encode(&k, tier),
+            v: QuantPayload::encode(&v, tier),
+            len: self.len,
+            token_elems: self.token_elems,
+        }
+    }
+
+    /// The rung this payload occupies ([`BlockTier::F16`] or
+    /// [`BlockTier::Int8`]).
+    pub fn tier(&self) -> BlockTier {
+        match self.k {
+            QuantPayload::F16(_) => BlockTier::F16,
+            QuantPayload::Int8 { .. } => BlockTier::Int8,
+        }
+    }
+
+    /// Tokens stored (always the full block size — only sealed blocks
+    /// are demoted).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn token_elems(&self) -> usize {
+        self.token_elems
+    }
+
+    /// Resident payload bytes (K + V + scales) — what the pool's
+    /// quantised-bytes ledger tracks.
+    pub fn payload_bytes(&self) -> usize {
+        self.k.bytes() + self.v.bytes()
+    }
+
+    /// Decode head columns `[offset, offset + head_dim)` of token `slot`
+    /// into `k_out` / `v_out` (each `head_dim` long) — the gather-path
+    /// read.  The decoded values exist only in the caller's scratch.
+    pub fn dequant_head_into(
+        &self,
+        slot: usize,
+        offset: usize,
+        head_dim: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) {
+        assert!(slot < self.len, "token slot {slot} out of range (len {})", self.len);
+        assert!(offset + head_dim <= self.token_elems, "head columns out of range");
+        let start = slot * self.token_elems + offset;
+        self.k.decode_into(start..start + head_dim, k_out);
+        self.v.decode_into(start..start + head_dim, v_out);
+    }
+
+    /// Decode the full K and V payloads (requantisation and tests).
+    pub fn dequantise(&self) -> (Vec<f32>, Vec<f32>) {
+        let n = self.k.len();
+        let mut k = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        self.k.decode_into(0..n, &mut k);
+        self.v.decode_into(0..n, &mut v);
+        (k, v)
+    }
+
+    /// Would `candidate` quantise to exactly this payload?  The
+    /// collision/verification guard for hash hits on a quantised entry:
+    /// the codecs are deterministic, so re-encoding the freshly sealed
+    /// candidate and comparing payloads bitwise is an exact test — a
+    /// hash collision (or content drift) degrades to a miss, never to a
+    /// silently shared wrong block.
+    pub fn matches_quantised(&self, candidate: &KvBlock) -> bool {
+        self.len == candidate.len()
+            && self.token_elems == candidate.token_elems()
+            && self.k == QuantPayload::encode(candidate.k_filled(), self.tier())
+            && self.v == QuantPayload::encode(candidate.v_filled(), self.tier())
+    }
+}
+
+/// What a trie node holds: the rung its block currently occupies.
+/// `Spilled` carries no payload — the exact bytes live in the
+/// [`BlockStore`](super::store::BlockStore) under the node's content
+/// hash, and a hit re-reads + re-verifies them from disk.
+#[derive(Clone, Debug)]
+pub enum CacheEntry {
+    Hot(Arc<KvBlock>),
+    Quant(Arc<QuantBlock>),
+    Spilled,
+}
+
+impl CacheEntry {
+    pub fn tier(&self) -> BlockTier {
+        match self {
+            Self::Hot(_) => BlockTier::F32,
+            Self::Quant(q) => q.tier(),
+            Self::Spilled => BlockTier::Spilled,
+        }
+    }
+
+    pub fn is_hot(&self) -> bool {
+        matches!(self, Self::Hot(_))
+    }
+
+    /// True when nothing outside the index references the payload (a
+    /// disk-only entry trivially qualifies) — the demotion/eviction
+    /// precondition.
+    pub fn ram_unreferenced(&self) -> bool {
+        match self {
+            Self::Hot(b) => Arc::strong_count(b) == 1,
+            Self::Quant(q) => Arc::strong_count(q) == 1,
+            Self::Spilled => true,
+        }
+    }
+
+    /// The hot block, if that is what this entry holds (test + release
+    /// plumbing).
+    pub fn into_hot(self) -> Option<Arc<KvBlock>> {
+        match self {
+            Self::Hot(b) => Some(b),
+            _ => None,
+        }
+    }
+}
+
+/// A chain's reference to one of its sealed blocks: exact (hot) or
+/// quantised.  Never `Spilled` — a chain holding a reference means the
+/// payload has ≥ 2 strong refs, and demotion requires RAM-unreferenced
+/// entries, so anything a live chain can see stays in RAM.  That is the
+/// invariant that keeps
+/// [`StreamChain::gather_head_into`](super::StreamChain::gather_head_into)
+/// infallible and free of disk I/O.
+#[derive(Clone, Debug)]
+pub enum SealedRef {
+    Hot(Arc<KvBlock>),
+    Quant(Arc<QuantBlock>),
+}
+
+impl SealedRef {
+    /// Tokens stored in the referenced block.
+    pub fn len(&self) -> usize {
+        match self {
+            Self::Hot(b) => b.len(),
+            Self::Quant(q) => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block_from(k: &[f32], v: &[f32], token_elems: usize) -> KvBlock {
+        let mut b = KvBlock::from_storage(vec![0.0; k.len()], vec![0.0; v.len()], token_elems);
+        for t in 0..k.len() / token_elems {
+            b.push(
+                &k[t * token_elems..(t + 1) * token_elems],
+                &v[t * token_elems..(t + 1) * token_elems],
+            );
+        }
+        b
+    }
+
+    #[test]
+    fn f16_round_trips_exactly_representable_values() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 1024.0, 65504.0, 0.0009765625, 2.0f32.powi(-24)] {
+            let rt = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert_eq!(rt.to_bits(), x.to_bits(), "f16 round trip of {x}");
+        }
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e9)), f32::INFINITY, "overflow saturates");
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-9)), 0.0, "underflow flushes");
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 2049 is exactly halfway between the f16-representable 2048 and
+        // 2050 → ties to even (2048); 2051 is halfway to 2052 → 2052
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(2049.0)), 2048.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(2051.0)), 2052.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(2049.1)), 2050.0, "above the tie rounds up");
+    }
+
+    #[test]
+    fn int8_scale_is_a_power_of_two_covering_absmax() {
+        for &absmax in &[1.0f32, 127.0, 3.7, 1e-3, 1e6] {
+            let s = po2_scale(absmax);
+            assert!(s > 0.0);
+            assert_eq!(s.to_bits() & 0x007f_ffff, 0, "scale must be a power of two");
+            assert!(absmax / s <= 127.0, "absmax {absmax} must fit in ±127 steps");
+            assert!(absmax / s > 63.5, "scale must be the smallest covering power of two");
+        }
+        assert_eq!(po2_scale(0.0), 0.0);
+    }
+
+    #[test]
+    fn quantise_error_within_half_scale_and_idempotent() {
+        let k: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin() * 5.0).collect();
+        let v: Vec<f32> = (0..16).map(|i| (i as f32 * 0.91).cos() * -3.0).collect();
+        let block = block_from(&k, &v, 4);
+        for tier in [BlockTier::F16, BlockTier::Int8] {
+            let q = QuantBlock::quantise(&block, tier);
+            assert_eq!(q.tier(), tier);
+            let (dk, dv) = q.dequantise();
+            match tier {
+                BlockTier::Int8 => {
+                    let QuantPayload::Int8 { scale, .. } = &q.k else { unreachable!() };
+                    for (x, y) in k.iter().zip(&dk) {
+                        assert!((x - y).abs() <= *scale / 2.0, "int8 error bound: {x} vs {y}");
+                    }
+                }
+                _ => {
+                    for (x, y) in k.iter().zip(&dk) {
+                        assert!((x - y).abs() <= x.abs() * 2.0f32.powi(-11), "f16 bound");
+                    }
+                }
+            }
+            // idempotence: re-quantising the dequantised block is bitwise
+            // stable (payloads AND scales)
+            let again = QuantBlock::quantise(&block_from(&dk, &dv, 4), tier);
+            assert_eq!(q.k, again.k, "{tier:?} K payload must be idempotent");
+            assert_eq!(q.v, again.v, "{tier:?} V payload must be idempotent");
+        }
+    }
+
+    #[test]
+    fn matches_quantised_verifies_and_rejects() {
+        let k: Vec<f32> = (0..8).map(|i| i as f32 * 0.3).collect();
+        let block = block_from(&k, &k, 2);
+        for tier in [BlockTier::F16, BlockTier::Int8] {
+            let q = QuantBlock::quantise(&block, tier);
+            assert!(q.matches_quantised(&block), "{tier:?} must match its source");
+            let mut other = k.clone();
+            other[3] += 1.0; // well beyond any quantisation step
+            let perturbed = block_from(&other, &k, 2);
+            assert!(!q.matches_quantised(&perturbed), "{tier:?} must reject different content");
+        }
+    }
+
+    #[test]
+    fn dequant_head_into_matches_full_decode() {
+        let k: Vec<f32> = (0..12).map(|i| i as f32 * 1.1).collect();
+        let v: Vec<f32> = (0..12).map(|i| -(i as f32) * 0.7).collect();
+        let block = block_from(&k, &v, 4); // 3 tokens × (2 heads × head_dim 2)
+        let q = QuantBlock::quantise(&block, BlockTier::F16);
+        let (dk, dv) = q.dequantise();
+        let mut kh = [0.0f32; 2];
+        let mut vh = [0.0f32; 2];
+        q.dequant_head_into(1, 2, 2, &mut kh, &mut vh); // token 1, head 1
+        assert_eq!(kh, dk[6..8], "head view must slice the same decode");
+        assert_eq!(vh, dv[6..8]);
+    }
+
+    #[test]
+    fn ladder_rungs_and_parse() {
+        let l = TierLadder::parse("f16,int8").unwrap();
+        assert!(l.f16 && l.int8 && l.enabled());
+        assert_eq!(l.next_quant(BlockTier::F32), Some(BlockTier::F16));
+        assert_eq!(l.next_quant(BlockTier::F16), Some(BlockTier::Int8));
+        assert_eq!(l.next_quant(BlockTier::Int8), None);
+        let int8_only = TierLadder::parse(" int8 ").unwrap();
+        assert_eq!(int8_only.next_quant(BlockTier::F32), Some(BlockTier::Int8));
+        assert!(TierLadder::parse("f8").is_err());
+        assert!(!TierLadder::none().enabled());
+        assert!(TierLadder::none().with_spill_dir("/tmp/x").enabled());
+    }
+}

@@ -72,6 +72,9 @@ fn print_help() {
                     of per-token decode; 0 = off) paged KV cache: [--kv-blocks N]\n\
                     (capacity; enables the cache) [--kv-window W] (sliding\n\
                     window, tokens) [--kv-block-size B] (tokens/block, default 16)\n\
+                    [--kv-tiers f16,int8] (demote cold blocks under pressure\n\
+                    instead of dropping them) [--kv-spill-dir PATH] (spill\n\
+                    exact bytes to a content-addressed store; warm restarts)\n\
                     --listen ADDR serves the same engine over TCP instead of\n\
                     running the demo loop (e.g. --listen 127.0.0.1:7878;\n\
                     [--serve-secs N] stops after N seconds, default: forever;\n\
@@ -539,6 +542,15 @@ fn cmd_serve_stream(
             stats.kv_resident_blocks,
             stats.kv_resident_bytes as f64 / 1024.0
         );
+        if cfg.kv.as_ref().is_some_and(|kv| kv.tiers.enabled()) {
+            println!(
+                "kv tiers: demoted={} spilled={} spill-hits={} spill-corrupt={}",
+                stats.kv_demoted_blocks,
+                stats.kv_spilled_blocks,
+                stats.kv_spill_hits,
+                stats.kv_spill_corrupt
+            );
+        }
     }
     Ok(())
 }

@@ -1,0 +1,484 @@
+//! Tier-ladder conformance: quantised cold blocks, the content-addressed
+//! spill store, and the failure modes between them.
+//!
+//! * Codec properties: f16 round-trips exactly-representable values
+//!   bitwise and bounds everything else by `2^-11` relative error; int8
+//!   error is ≤ half the per-payload power-of-two scale (asserted through
+//!   the conservative `absmax/127` bound); decode→re-ingest→decode is a
+//!   fixed point (idempotence, observed end to end).
+//! * Demotion under pressure serves *bounded-error* bytes through the
+//!   same `gather_head_into` seam hot blocks use — and with headroom (or
+//!   tiers off) the cache stays bitwise identical to the pre-tier one.
+//! * Spilled blocks rehydrate bitwise: the archive is written from exact
+//!   f32 bytes at first demotion, re-verified by digest on every read.
+//! * Fault injection: a truncated file, a flipped byte, and a missing
+//!   file under a live manifest entry each degrade to a clean miss
+//!   (`spill_corrupt` bumped, block re-ingested) — never a panic, never
+//!   silent wrong bytes.
+//! * Warm restart: a fresh cache over a spilled directory replays the
+//!   whole prefix with zero index allocations, and steady-state replays
+//!   stop touching the heap (`fresh_allocs` flat).
+//! * Cross-process sharing: two caches over one store directory serve
+//!   bitwise-identical gathers from the same archived blocks.
+
+use skeinformer::kvcache::{
+    f16_bits_to_f32, f32_to_f16_bits, tempdir, KvCache, KvCacheConfig, StreamChain, TierLadder,
+};
+use skeinformer::rng::Rng;
+use skeinformer::tensor::Matrix;
+use std::ops::Range;
+
+/// token_elems: 1 head × head_dim 2.
+const TE: usize = 2;
+/// Tokens per block.
+const BS: usize = 2;
+
+/// Deterministic per-token rows, deliberately *not* f16- or int8-exact.
+fn krow(t: usize) -> [f32; TE] {
+    let x = t as f32 * 0.37 + 0.123;
+    [x, -x * 1.9]
+}
+
+fn vrow(t: usize) -> [f32; TE] {
+    let x = t as f32 * 0.53 - 0.217;
+    [x * 1.3, x]
+}
+
+fn fill(cache: &mut KvCache, chain: &mut StreamChain, tokens: Range<usize>) {
+    for t in tokens {
+        cache.append(chain, &krow(t), &vrow(t));
+    }
+}
+
+fn rng_rows(n: usize, seed: u64) -> Vec<([f32; TE], [f32; TE])> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut k = [0.0f32; TE];
+            let mut v = [0.0f32; TE];
+            rng.fill_normal(&mut k);
+            rng.fill_normal(&mut v);
+            (k, v)
+        })
+        .collect()
+}
+
+fn fill_rows(cache: &mut KvCache, chain: &mut StreamChain, rows: &[([f32; TE], [f32; TE])]) {
+    for (k, v) in rows {
+        cache.append(chain, k, v);
+    }
+}
+
+/// Gather head 0's full visible K/V for a chain.
+fn gather(chain: &StreamChain) -> (Matrix, Matrix) {
+    let n = chain.visible_len();
+    let mut k = Matrix::zeros(n, TE);
+    let mut v = Matrix::zeros(n, TE);
+    chain.gather_head_into(0, TE, &mut k, &mut v);
+    (k, v)
+}
+
+fn assert_bitwise_eq(got: &Matrix, want: &Matrix, what: &str) {
+    assert_eq!(got.shape(), want.shape(), "{what}: shape mismatch");
+    for (g, w) in got.data().iter().zip(want.data()) {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: bitwise mismatch ({g} vs {w})");
+    }
+}
+
+// ---------------------------------------------------------------- codecs
+
+#[test]
+fn f16_round_trips_exact_values_bitwise_and_bounds_the_rest() {
+    // integers < 2^11, powers of two, halves, the f16 extremes: all have
+    // ≤ 10 mantissa bits, so the round trip must be the identity
+    for v in [
+        0.0f32, -0.0, 1.0, -1.0, 0.5, -0.25, 1.5, 333.0, -2047.0, 2048.0, 65504.0, -65504.0,
+        6.103_515_625e-5, // smallest f16 normal, 2^-14
+    ] {
+        let rt = f16_bits_to_f32(f32_to_f16_bits(v));
+        assert_eq!(rt.to_bits(), v.to_bits(), "{v} is f16-exact and must round-trip bitwise");
+    }
+    // everything else in the normal range: round-to-nearest-even keeps
+    // the relative error within half a 10-bit-mantissa ulp, 2^-11
+    let mut vals = vec![0.0f32; 4096];
+    Rng::new(9).fill_normal(&mut vals);
+    vals.extend([0.1, -0.3, 2049.0, 1.0e4, -7.7e-3, std::f32::consts::PI]);
+    for &x in &vals {
+        if x.abs() < 6.103_515_625e-5 {
+            continue; // subnormal f16 range: absolute, not relative, error
+        }
+        let rt = f16_bits_to_f32(f32_to_f16_bits(x));
+        let bound = x.abs() * (1.0 / 2048.0) * 1.0001;
+        assert!((rt - x).abs() <= bound, "{x} decoded to {rt}: outside 2^-11 relative error");
+    }
+}
+
+#[test]
+fn f16_demoted_blocks_gather_within_relative_error_bound() {
+    let tiers = TierLadder::none().with_f16(true);
+    let mut c = KvCache::new(KvCacheConfig::new(BS).with_capacity_blocks(2).with_tiers(tiers), TE);
+    let mut a = c.open_stream();
+    fill(&mut c, &mut a, 0..4); // 2 sealed blocks: exactly at capacity
+    let (k_exact, v_exact) = gather(&a);
+    c.close_stream(a);
+    let mut b = c.open_stream();
+    fill(&mut c, &mut b, 50..52); // one sealing miss forces pressure
+    c.close_stream(b);
+    let s = c.stats();
+    assert_eq!(s.demoted_blocks, 2, "pressure must demote, not drop");
+    assert_eq!(s.evicted_blocks, 0);
+    assert_eq!(s.quant_blocks, 2);
+
+    // the replay verifies against the quantised entries by re-encoding,
+    // and its gathers decode into scratch with bounded error
+    let mut r = c.open_stream();
+    fill(&mut c, &mut r, 0..4);
+    assert_eq!(c.stats().hit_blocks, 2, "quantised entries still dedupe");
+    assert_eq!(c.stats().demoted_blocks, 2, "hits never demote further");
+    let (k_q, v_q) = gather(&r);
+    let mut lossy = 0usize;
+    for (got, want) in k_q
+        .data()
+        .iter()
+        .chain(v_q.data())
+        .zip(k_exact.data().iter().chain(v_exact.data()))
+    {
+        let bound = want.abs() * (1.0 / 2048.0) * 1.0001;
+        assert!((got - want).abs() <= bound, "f16 decode {got} vs {want}: outside 2^-11");
+        lossy += usize::from(got.to_bits() != want.to_bits());
+    }
+    assert!(lossy > 0, "rows were chosen to not be f16-exact: some bits must differ");
+    c.close_stream(r);
+}
+
+#[test]
+fn int8_demoted_blocks_gather_within_half_scale_bound() {
+    let tiers = TierLadder::none().with_int8(true); // f32 demotes straight to int8
+    let mut c = KvCache::new(KvCacheConfig::new(BS).with_capacity_blocks(2).with_tiers(tiers), TE);
+    let mut a = c.open_stream();
+    fill(&mut c, &mut a, 0..4);
+    let (k_exact, v_exact) = gather(&a);
+    c.close_stream(a);
+    let mut b = c.open_stream();
+    fill(&mut c, &mut b, 50..52);
+    c.close_stream(b);
+    assert_eq!(c.stats().demoted_blocks, 2);
+    assert_eq!(c.stats().evicted_blocks, 0);
+
+    let mut r = c.open_stream();
+    fill(&mut c, &mut r, 0..4);
+    assert_eq!(c.stats().hit_blocks, 2, "re-encoding the candidate matches the stored int8");
+    let (k_q, v_q) = gather(&r);
+    // the codec guarantees error ≤ scale/2 with scale the smallest power
+    // of two ≥ absmax/127, so absmax/127 is a safe per-payload bound;
+    // K and V are separate payloads, each spanning one whole block
+    let payload_bound = |exact: &Matrix, block: usize| {
+        let mut absmax = 0.0f32;
+        for t in block * BS..(block + 1) * BS {
+            for e in 0..TE {
+                absmax = absmax.max(exact.get(t, e).abs());
+            }
+        }
+        absmax / 127.0 * 1.0001
+    };
+    let mut lossy = 0usize;
+    for block in 0..2 {
+        let (bk, bv) = (payload_bound(&k_exact, block), payload_bound(&v_exact, block));
+        for t in block * BS..(block + 1) * BS {
+            for e in 0..TE {
+                let (gk, wk) = (k_q.get(t, e), k_exact.get(t, e));
+                let (gv, wv) = (v_q.get(t, e), v_exact.get(t, e));
+                assert!((gk - wk).abs() <= bk, "int8 K {gk} vs {wk}: outside scale/2 ({bk})");
+                assert!((gv - wv).abs() <= bv, "int8 V {gv} vs {wv}: outside scale/2 ({bv})");
+                lossy += usize::from(gk.to_bits() != wk.to_bits());
+            }
+        }
+    }
+    assert!(lossy > 0, "rows were chosen to not be int8-exact");
+    c.close_stream(r);
+}
+
+#[test]
+fn int8_decode_reingested_is_a_fixed_point() {
+    // quantise→dequantise→quantise idempotence, observed end to end:
+    // ingest the *decoded* values into a second cache, demote them again,
+    // and the second decode must equal the first bitwise
+    let decode_through_cache = |rows: &[([f32; TE], [f32; TE])]| {
+        let tiers = TierLadder::none().with_int8(true);
+        let cfg = KvCacheConfig::new(BS).with_capacity_blocks(2).with_tiers(tiers);
+        let mut c = KvCache::new(cfg, TE);
+        let mut a = c.open_stream();
+        fill_rows(&mut c, &mut a, rows);
+        c.close_stream(a);
+        let mut b = c.open_stream();
+        fill(&mut c, &mut b, 50..52); // pressure: demote the ingested blocks
+        c.close_stream(b);
+        assert_eq!(c.stats().demoted_blocks, 2);
+        let mut r = c.open_stream();
+        fill_rows(&mut c, &mut r, rows);
+        let out = gather(&r);
+        c.close_stream(r);
+        out
+    };
+    let rows = rng_rows(4, 17);
+    let (k1, v1) = decode_through_cache(&rows);
+    // re-ingest the lossy decode verbatim
+    let decoded: Vec<([f32; TE], [f32; TE])> = (0..rows.len())
+        .map(|t| {
+            ([k1.get(t, 0), k1.get(t, 1)], [v1.get(t, 0), v1.get(t, 1)])
+        })
+        .collect();
+    let (k2, v2) = decode_through_cache(&decoded);
+    assert_bitwise_eq(&k2, &k1, "int8 K fixed point");
+    assert_bitwise_eq(&v2, &v1, "int8 V fixed point");
+}
+
+// ----------------------------------------------------------- spill store
+
+#[test]
+fn spilled_blocks_rehydrate_bitwise_identical() {
+    let dir = tempdir("tiers-rehydrate");
+    let tiers = TierLadder::none().with_spill_dir(dir.path());
+    let mut c = KvCache::new(KvCacheConfig::new(BS).with_capacity_blocks(1).with_tiers(tiers), TE);
+    let rows = rng_rows(4, 3);
+    let mut a = c.open_stream();
+    fill_rows(&mut c, &mut a, &rows);
+    let (k_exact, v_exact) = gather(&a);
+    c.close_stream(a);
+    let mut b = c.open_stream();
+    fill(&mut c, &mut b, 50..52); // pressure: no quant rung, so archive + spill
+    c.close_stream(b);
+    let s = c.stats();
+    assert_eq!(s.spilled_blocks, 2, "both cold blocks spill");
+    assert_eq!(s.evicted_blocks, 0);
+
+    let mut r = c.open_stream();
+    fill_rows(&mut c, &mut r, &rows);
+    let s = c.stats();
+    assert_eq!(s.spill_hits, 2, "replay re-reads + re-verifies the archive");
+    assert_eq!(s.spill_corrupt, 0);
+    assert_eq!(s.hit_blocks, 2);
+    let (k_r, v_r) = gather(&r);
+    assert_bitwise_eq(&k_r, &k_exact, "rehydrated K");
+    assert_bitwise_eq(&v_r, &v_exact, "rehydrated V");
+    c.close_stream(r);
+}
+
+#[test]
+fn corrupted_spill_files_degrade_to_clean_misses() {
+    let dir = tempdir("tiers-faults");
+    let tiers = TierLadder::none().with_spill_dir(dir.path());
+    // unbounded capacity: blocks reach disk via the explicit snapshot hook
+    let mut c = KvCache::new(KvCacheConfig::new(BS).with_tiers(tiers), TE);
+    let rows = rng_rows(8, 5); // 4 sealed blocks, no tail
+    let mut a = c.open_stream();
+    fill_rows(&mut c, &mut a, &rows);
+    let hashes = a.path().to_vec();
+    let (k_exact, v_exact) = gather(&a);
+    c.close_stream(a);
+    assert_eq!(c.spill_index(), 4, "every index-only block archives");
+    assert_eq!(c.stats().spilled_blocks, 4);
+    assert_eq!(c.stats().resident_blocks, 0, "spilled markers hold no RAM");
+    let paths: Vec<_> =
+        hashes.iter().map(|&h| c.spill_store().expect("store open").block_path(h)).collect();
+
+    // fault 0: truncated file (short read)
+    let bytes = std::fs::read(&paths[0]).unwrap();
+    std::fs::write(&paths[0], &bytes[..bytes.len() / 2]).unwrap();
+    // fault 1: one flipped payload byte (digest mismatch on re-read)
+    let mut bytes = std::fs::read(&paths[1]).unwrap();
+    *bytes.last_mut().unwrap() ^= 0x55;
+    std::fs::write(&paths[1], &bytes).unwrap();
+    // fault 2: file missing under a live manifest entry
+    std::fs::remove_file(&paths[2]).unwrap();
+    // block 3 stays intact: the one clean rehydrate in the replay
+
+    let mut r = c.open_stream();
+    fill_rows(&mut c, &mut r, &rows);
+    let s = c.stats();
+    assert_eq!(s.spill_corrupt, 3, "each corruption is a counted clean miss");
+    assert_eq!(s.spill_hits, 1, "the intact block still rehydrates");
+    // every byte served is exact: corrupt blocks were re-ingested from
+    // the replayed tokens, never decoded from the bad files
+    let (k_r, v_r) = gather(&r);
+    assert_bitwise_eq(&k_r, &k_exact, "post-fault K");
+    assert_bitwise_eq(&v_r, &v_exact, "post-fault V");
+    c.close_stream(r);
+
+    // the bad files were dropped at detection, so a second snapshot
+    // re-archives clean bytes and the next replay hits disk for all four
+    assert_eq!(c.spill_index(), 4, "re-ingested blocks re-archive");
+    let mut r2 = c.open_stream();
+    fill_rows(&mut c, &mut r2, &rows);
+    let s = c.stats();
+    assert_eq!(s.spill_corrupt, 3, "no corruption left after re-archiving");
+    assert_eq!(s.spill_hits, 1 + 4);
+    let (k_r2, v_r2) = gather(&r2);
+    assert_bitwise_eq(&k_r2, &k_exact, "re-archived K");
+    assert_bitwise_eq(&v_r2, &v_exact, "re-archived V");
+    c.close_stream(r2);
+}
+
+#[test]
+fn warm_restart_replays_spilled_prefix_without_index_allocations() {
+    let dir = tempdir("tiers-warm");
+    let cfg = KvCacheConfig::new(BS).with_tiers(TierLadder::none().with_spill_dir(dir.path()));
+    let rows = rng_rows(6, 11); // 3 sealed blocks
+    let (k_exact, v_exact) = {
+        let mut c = KvCache::new(cfg.clone(), TE);
+        let mut a = c.open_stream();
+        fill_rows(&mut c, &mut a, &rows);
+        let exact = gather(&a);
+        c.close_stream(a);
+        assert_eq!(c.spill_index(), 3);
+        exact
+    }; // cache dropped: only the spill directory survives
+
+    let mut c = KvCache::new(cfg, TE);
+    let mut r1 = c.open_stream();
+    fill_rows(&mut c, &mut r1, &rows);
+    let s = c.stats();
+    assert_eq!(s.alloc_blocks, 0, "warm restart: every sealed block rehydrates");
+    assert_eq!(s.spill_hits, 3);
+    assert_eq!(s.hit_blocks, 3);
+    assert_eq!(s.spill_corrupt, 0);
+    let (k_r, v_r) = gather(&r1);
+    assert_bitwise_eq(&k_r, &k_exact, "warm-restart K");
+    assert_bitwise_eq(&v_r, &v_exact, "warm-restart V");
+    c.close_stream(r1);
+
+    // steady state: once the pool has a recycled staging block, replays
+    // stop touching the heap entirely
+    let mut r2 = c.open_stream();
+    fill_rows(&mut c, &mut r2, &rows);
+    c.close_stream(r2);
+    let fresh = c.fresh_allocs();
+    let mut r3 = c.open_stream();
+    fill_rows(&mut c, &mut r3, &rows);
+    let (k_r3, _) = gather(&r3);
+    assert_bitwise_eq(&k_r3, &k_exact, "steady-state K");
+    c.close_stream(r3);
+    assert_eq!(c.fresh_allocs(), fresh, "replay must recycle pooled blocks only");
+}
+
+#[test]
+fn two_caches_share_one_spill_store() {
+    let dir = tempdir("tiers-shared");
+    let cfg = KvCacheConfig::new(BS).with_tiers(TierLadder::none().with_spill_dir(dir.path()));
+    let rows = rng_rows(6, 23);
+    let mut producer = KvCache::new(cfg.clone(), TE);
+    let mut a = producer.open_stream();
+    fill_rows(&mut producer, &mut a, &rows);
+    let (k_exact, v_exact) = gather(&a);
+    producer.close_stream(a);
+    assert_eq!(producer.spill_index(), 3);
+
+    // a second cache — standing in for a second serving process — opens
+    // over the same directory while the first stays live
+    let mut consumer = KvCache::new(cfg, TE);
+    let mut r = consumer.open_stream();
+    fill_rows(&mut consumer, &mut r, &rows);
+    let s = consumer.stats();
+    assert_eq!(s.spill_hits, 3, "the consumer shares the producer's archive");
+    assert_eq!(s.alloc_blocks, 0);
+    let (k_c, v_c) = gather(&r);
+    assert_bitwise_eq(&k_c, &k_exact, "cross-process K");
+    assert_bitwise_eq(&v_c, &v_exact, "cross-process V");
+    consumer.close_stream(r);
+
+    // reads are non-destructive: the producer can still replay its own
+    // archive afterwards
+    let mut p = producer.open_stream();
+    fill_rows(&mut producer, &mut p, &rows);
+    assert_eq!(producer.stats().spill_hits, 3);
+    let (k_p, _) = gather(&p);
+    assert_bitwise_eq(&k_p, &k_exact, "producer replay K");
+    producer.close_stream(p);
+}
+
+// -------------------------------------------------- determinism contract
+
+#[test]
+fn tiers_with_headroom_change_nothing() {
+    // identical op sequence on a tiers-off cache and a full-ladder cache
+    // with unbounded capacity: no pressure ever fires, so stats and
+    // gathered bytes must match exactly — the tiers-off bitwise contract
+    // extends to "tiers on but idle"
+    let dir = tempdir("tiers-idle");
+    let run = |cfg: KvCacheConfig| {
+        let mut c = KvCache::new(cfg, TE);
+        let mut a = c.open_stream();
+        fill(&mut c, &mut a, 0..6);
+        c.close_stream(a);
+        let mut b = c.open_stream();
+        fill(&mut c, &mut b, 0..8); // replays the prefix, then extends it
+        let out = gather(&b);
+        c.close_stream(b);
+        (format!("{:?}", c.stats()), out)
+    };
+    let ladder = TierLadder::none().with_f16(true).with_int8(true).with_spill_dir(dir.path());
+    let (base_stats, (k_base, v_base)) = run(KvCacheConfig::new(BS));
+    let (tier_stats, (k_tier, v_tier)) = run(KvCacheConfig::new(BS).with_tiers(ladder));
+    assert_bitwise_eq(&k_tier, &k_base, "idle-tier K");
+    assert_bitwise_eq(&v_tier, &v_base, "idle-tier V");
+    assert_eq!(tier_stats, base_stats, "an idle ladder must not perturb a single counter");
+}
+
+// ------------------------------------------------------- server plumbing
+
+#[test]
+fn server_streams_demote_under_pressure_and_report_tier_counters() {
+    use skeinformer::coordinator::attention_server::{self, AttentionServerConfig};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let ladder = TierLadder::none().with_f16(true).with_int8(true);
+    let cfg = AttentionServerConfig {
+        method: "standard".to_string(),
+        d: 8,
+        heads: 2,
+        seq: 16,
+        head_dim: 4,
+        max_batch: 2,
+        max_wait: Duration::from_millis(1),
+        seed: 0,
+        workers: None,
+        queue_depth: 0,
+        kv: Some(KvCacheConfig::new(2).with_capacity_blocks(2).with_tiers(ladder)),
+    };
+    let token_elems = cfg.heads * cfg.head_dim;
+    let mut rng = Rng::new(41);
+    let mut slab = || {
+        let mut b = vec![0.0f32; token_elems];
+        rng.fill_normal(&mut b);
+        let s: Arc<[f32]> = b.into();
+        s
+    };
+    let prompt: Vec<(Arc<[f32]>, Arc<[f32]>)> = (0..8).map(|_| (slab(), slab())).collect();
+    let handle = attention_server::start(cfg.clone()).unwrap();
+
+    let run = |tokens: &[(Arc<[f32]>, Arc<[f32]>)]| {
+        let stream = handle.open_stream(2);
+        for (k, v) in tokens {
+            stream.append(k.clone(), v.clone());
+        }
+        let mut q = vec![0.0f32; cfg.heads * tokens.len() * cfg.head_dim];
+        Rng::new(6).fill_normal(&mut q);
+        let out = stream.query(q.into(), tokens.len()).recv().expect("stream reply");
+        stream.close();
+        out
+    };
+    run(&prompt); // seals 4 blocks, then leaves them index-only
+    let other: Vec<(Arc<[f32]>, Arc<[f32]>)> = (0..2).map(|_| (slab(), slab())).collect();
+    run(&other); // a different prompt pressures them down the ladder
+    let replay = run(&prompt); // served through the quantised entries
+    assert!(replay.iter().all(|x| x.is_finite()), "dequantised gathers must stay finite");
+
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.kv_demoted_blocks, 4, "all four cold blocks demote f32 → f16");
+    assert_eq!(stats.kv_hit_blocks, 4, "the replay dedupes against them");
+    assert_eq!(stats.kv_evicted_blocks, 0, "the ladder absorbs the pressure");
+    assert_eq!(stats.kv_spilled_blocks, 0, "no spill rung configured");
+    assert_eq!(stats.kv_spill_hits, 0);
+    assert_eq!(stats.kv_spill_corrupt, 0);
+}
