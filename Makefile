@@ -3,7 +3,7 @@
 # `make artifacts` needs a python environment with jax installed (the L2
 # lowering path); everything else is pure rust and works offline.
 
-.PHONY: artifacts build test test-doc bench stream-bench cache-bench prefill-bench tier-bench net-bench fmt clippy doc
+.PHONY: artifacts build test test-doc bench stream-bench cache-bench prefill-bench tier-bench net-bench shard-bench shard-smoke fmt clippy doc
 
 artifacts:
 	python3 python/compile/aot.py --out artifacts
@@ -44,6 +44,24 @@ tier-bench:
 # in-process, 1 vs 4 client connections
 net-bench:
 	cargo bench --bench serving_net
+
+# shard coordinator sweep: req/s and per-shard occupancy through a
+# coordinator over {1, 2, 4} engine shards -> reports/sharding.csv
+shard-bench:
+	cargo bench --bench sharding
+
+# quick cluster smoke for CI: two engine shards + a coordinator on
+# loopback, driven by the stock client (one-shots and a decode stream)
+shard-smoke: build
+	target/release/skein serve --listen 127.0.0.1:7971 --shard-of 2 --shard-index 0 --serve-secs 25 & \
+	target/release/skein serve --listen 127.0.0.1:7972 --shard-of 2 --shard-index 1 --serve-secs 25 & \
+	sleep 1; \
+	target/release/skein coordinator --shards 127.0.0.1:7971,127.0.0.1:7972 \
+	  --listen 127.0.0.1:7970 --serve-secs 20 & \
+	sleep 1; \
+	target/release/skein client --addr 127.0.0.1:7970 --requests 32 --window 8 && \
+	target/release/skein client --addr 127.0.0.1:7970 --stream --tokens 32; \
+	wait
 
 fmt:
 	cargo fmt --check

@@ -1,0 +1,179 @@
+//! Shard-coordinator scaling probe: req/s and per-shard scheduler
+//! occupancy as the cluster grows (`make shard-bench`).
+//!
+//! One row per cluster size in {1, 2, 4}: each run spins N engine
+//! shards (each a real `net::serve`d process-in-a-thread), a
+//! coordinator over them, and `--clients` concurrent connections
+//! pushing the same windowed one-shot workload through the
+//! coordinator's TCP front.  Heads scatter `H / N` per shard, so the
+//! per-request engine work drops with N while framing/gather overhead
+//! grows — the table shows where that trade crosses over for this
+//! shape.  `shard-occ` is the step occupancy each shard's scheduler
+//! reports, aggregated by the coordinator (weighted by steps), and
+//! `shard-req` the per-shard fragment count (requests × N / N shards).
+//!
+//! Emits `reports/sharding.csv`
+//! (`shards,method,clients,requests,req_s,p50_ms,p95_ms,shard_req,shard_occupancy`).
+//!
+//! Flags: `--method M` (default skeinformer), `--requests N` (default
+//! 64), `--window W` in-flight per client (default 8), `--clients C`
+//! (default 2), `--full` (256 requests).
+
+use skeinformer::bench_util::{ascii_table, write_csv};
+use skeinformer::cli::Args;
+use skeinformer::coordinator::attention_server::{self, AttentionServerConfig, HeadsRequest};
+use skeinformer::coordinator::net::{self, NetClient};
+use skeinformer::coordinator::shard::Coordinator;
+use skeinformer::metrics::Percentiles;
+use skeinformer::rng::Rng;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn cfg(method: &str) -> AttentionServerConfig {
+    AttentionServerConfig {
+        method: method.to_string(),
+        d: 64,
+        heads: 4,
+        seq: 256,
+        head_dim: 32,
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        seed: 0,
+        workers: None,
+        queue_depth: 0,
+        kv: None,
+    }
+}
+
+struct Run {
+    wall: f64,
+    latency_ms: Vec<f64>,
+    shard_requests: u64,
+    shard_occupancy: f64,
+}
+
+fn run_cluster(
+    c: &AttentionServerConfig,
+    n_shards: usize,
+    total: usize,
+    clients: usize,
+    window: usize,
+) -> anyhow::Result<Run> {
+    let shards: Vec<_> = (0..n_shards)
+        .map(|i| -> anyhow::Result<_> {
+            let handle = attention_server::start(c.clone())?;
+            let backend =
+                Arc::new(net::EngineBackend::new(&handle, i as u32, n_shards as u32));
+            let server = net::serve_backend(backend, "127.0.0.1:0")?;
+            let addr = server.local_addr().to_string();
+            Ok((handle, server, addr))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let addrs: Vec<String> = shards.iter().map(|(_, _, a)| a.clone()).collect();
+    let coord = Coordinator::start(&addrs, Duration::from_millis(500))?;
+    let front = net::serve_backend(coord.backend(), "127.0.0.1:0")?;
+    let addr = front.local_addr();
+
+    let per = total / clients;
+    let elems = c.request_elems();
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..clients)
+        .map(|ci| {
+            std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+                let mut client = NetClient::connect(addr)?;
+                let mut rng = Rng::new(100 + ci as u64);
+                let mut latency_ms = Vec::new();
+                let mut inflight = VecDeque::new();
+                for _ in 0..per {
+                    let req = HeadsRequest::random(elems, &mut rng);
+                    inflight.push_back((client.submit_async(&req)?, Instant::now()));
+                    if inflight.len() >= window {
+                        let (id, sent) = inflight.pop_front().expect("non-empty window");
+                        client.wait_output(id)?;
+                        latency_ms.push(sent.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+                while let Some((id, sent)) = inflight.pop_front() {
+                    client.wait_output(id)?;
+                    latency_ms.push(sent.elapsed().as_secs_f64() * 1e3);
+                }
+                Ok(latency_ms)
+            })
+        })
+        .collect();
+    let mut latency_ms = Vec::new();
+    for j in joins {
+        latency_ms.extend(j.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // cluster-aggregated counters before teardown: per-shard fragment
+    // load and the steps-weighted mean step occupancy
+    let stats = coord.stats();
+    let shard_requests = stats.requests / n_shards as u64;
+    let shard_occupancy = stats.mean_step_occupancy;
+    front.stop();
+    coord.shutdown();
+    for (handle, server, _) in shards {
+        server.stop();
+        handle.shutdown()?;
+    }
+    Ok(Run { wall, latency_ms, shard_requests, shard_occupancy })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let method = args.get_or("method", "skeinformer").to_string();
+    let total = if args.switch("full") { 256 } else { args.get_usize("requests", 64)? };
+    let window = args.get_usize("window", 8)?;
+    let clients = args.get_usize("clients", 2)?.max(1);
+    let c = cfg(&method);
+    eprintln!(
+        "sharding bench: method={method} requests={total} clients={clients} window={window} \
+         shape B<={} H={} n={} p={}",
+        c.max_batch, c.heads, c.seq, c.head_dim
+    );
+
+    let mut table = Vec::new();
+    let mut csv = Vec::new();
+    for n_shards in [1usize, 2, 4] {
+        let run = run_cluster(&c, n_shards, total, clients, window)?;
+        let served = run.latency_ms.len();
+        let mut lat = Percentiles::default();
+        for &ms in &run.latency_ms {
+            lat.push(ms);
+        }
+        let req_s = served as f64 / run.wall;
+        table.push(vec![
+            format!("{n_shards}"),
+            format!("{served}"),
+            format!("{req_s:.1}"),
+            format!("{:.2}", lat.percentile(50.0)),
+            format!("{:.2}", lat.percentile(95.0)),
+            format!("{}", run.shard_requests),
+            format!("{:.3}", run.shard_occupancy),
+        ]);
+        csv.push(format!(
+            "{n_shards},{method},{clients},{served},{req_s:.2},{:.3},{:.3},{},{:.4}",
+            lat.percentile(50.0),
+            lat.percentile(95.0),
+            run.shard_requests,
+            run.shard_occupancy
+        ));
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &["shards", "served", "req/s", "p50 ms", "p95 ms", "shard-req", "shard-occ"],
+            &table
+        )
+    );
+    write_csv(
+        "reports/sharding.csv",
+        "shards,method,clients,requests,req_s,p50_ms,p95_ms,shard_req,shard_occupancy",
+        &csv,
+    )?;
+    eprintln!("rows written to reports/sharding.csv");
+    Ok(())
+}

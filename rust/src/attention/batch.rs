@@ -183,7 +183,8 @@ impl BatchedAttention {
             km.data_mut().copy_from_slice(k.head(b, h));
             vm.data_mut().copy_from_slice(v.head(b, h));
         };
-        self.dispatch_heads(method, q, spec.seq, &fill, masks, seed, out);
+        let seed_of = move |b: usize, h: usize| seed ^ spec.head_index(b, h);
+        self.dispatch_heads(method, q, spec.seq, &fill, masks, &seed_of, out);
     }
 
     /// [`run_into`](Self::run_into) with the K/V bytes *gathered* per
@@ -209,13 +210,71 @@ impl BatchedAttention {
         out: &mut BatchTensor,
     ) {
         assert!(kv_rows > 0, "gathered K/V must have rows");
-        self.dispatch_heads(method, q, kv_rows, fill_kv, masks, seed, out);
+        let spec = HeadSpec::of(q);
+        let seed_of = move |b: usize, h: usize| seed ^ spec.head_index(b, h);
+        self.dispatch_heads(method, q, kv_rows, fill_kv, masks, &seed_of, out);
+    }
+
+    /// [`run_into`](Self::run_into) with **explicit per-sequence seeds
+    /// and a head offset** — the shard scatter path.  Head `(b, h)`
+    /// draws from `Rng::new(seeds[b] ^ (head_offset + h))`: the batch
+    /// position `b` does not participate, so how requests are packed
+    /// into shard-side batches never changes a head's RNG stream, and a
+    /// shard computing the head slice `[lo, lo + heads)` of a request
+    /// whose single-sequence seed is `s` reproduces exactly the streams
+    /// the full-width engine derives for those heads (`s ^ (lo + h)` at
+    /// batch position 0) — the placement-invariance the coordinator's
+    /// bitwise gather rests on.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_seeded_into(
+        &self,
+        method: &dyn AttentionMethod,
+        q: &BatchTensor,
+        k: &BatchTensor,
+        v: &BatchTensor,
+        masks: Option<&Matrix>,
+        seeds: &[u64],
+        head_offset: usize,
+        out: &mut BatchTensor,
+    ) {
+        let spec = HeadSpec::of(q);
+        assert!(spec.matches(k), "Q/K batch shapes differ: {:?} vs {:?}", q, k);
+        assert!(spec.matches(v), "Q/V batch shapes differ: {:?} vs {:?}", q, v);
+        assert_eq!(seeds.len(), spec.batch, "one seed per sequence");
+        let fill = |b: usize, h: usize, km: &mut Matrix, vm: &mut Matrix| {
+            km.data_mut().copy_from_slice(k.head(b, h));
+            vm.data_mut().copy_from_slice(v.head(b, h));
+        };
+        let seed_of = move |b: usize, h: usize| seeds[b] ^ (head_offset + h) as u64;
+        self.dispatch_heads(method, q, spec.seq, &fill, masks, &seed_of, out);
+    }
+
+    /// [`run_seeded_into`](Self::run_seeded_into) with gathered K/V —
+    /// the seeded twin of [`run_gather_into`](Self::run_gather_into).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_gather_seeded_into(
+        &self,
+        method: &dyn AttentionMethod,
+        q: &BatchTensor,
+        kv_rows: usize,
+        fill_kv: &(dyn Fn(usize, usize, &mut Matrix, &mut Matrix) + Sync),
+        masks: Option<&Matrix>,
+        seeds: &[u64],
+        head_offset: usize,
+        out: &mut BatchTensor,
+    ) {
+        assert!(kv_rows > 0, "gathered K/V must have rows");
+        let spec = HeadSpec::of(q);
+        assert_eq!(seeds.len(), spec.batch, "one seed per sequence");
+        let seed_of = move |b: usize, h: usize| seeds[b] ^ (head_offset + h) as u64;
+        self.dispatch_heads(method, q, kv_rows, fill_kv, masks, &seed_of, out);
     }
 
     /// The shared B×H dispatcher behind [`run_into`](Self::run_into) and
     /// [`run_gather_into`](Self::run_gather_into): fan heads over the
-    /// pool, extract Q from the tensor and K/V through `fill_kv`, and
-    /// write each head's result in place.
+    /// pool, extract Q from the tensor and K/V through `fill_kv`, derive
+    /// head `(b, h)`'s RNG stream through `seed_of`, and write each
+    /// head's result in place.
     #[allow(clippy::too_many_arguments)]
     fn dispatch_heads(
         &self,
@@ -224,7 +283,7 @@ impl BatchedAttention {
         kv_rows: usize,
         fill_kv: &(dyn Fn(usize, usize, &mut Matrix, &mut Matrix) + Sync),
         masks: Option<&Matrix>,
-        seed: u64,
+        seed_of: &(dyn Fn(usize, usize) -> u64 + Sync),
         out: &mut BatchTensor,
     ) {
         let spec = HeadSpec::of(q);
@@ -260,7 +319,7 @@ impl BatchedAttention {
         let out_ptr = pool::SendPtr(out.data_mut().as_mut_ptr());
         pool::parallel_map_workers(&grid, workers, |&(b, h)| {
             let out_ptr = out_ptr; // force whole-struct capture
-            let head_seed = seed ^ spec.head_index(b, h);
+            let head_seed = seed_of(b, h);
             // Per-head buffers come from per-worker scratch reused across
             // heads (and across engine calls, since the pool threads are
             // persistent) — no steady-state allocation.
@@ -457,6 +516,68 @@ mod tests {
         out.data_mut().iter_mut().for_each(|x| *x = f32::NAN);
         engine.run_gather_into(&skein, &q, spec.seq, &fill, None, 13, &mut out);
         assert_eq!(out.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn seeded_head_slice_matches_full_run_bitwise() {
+        // the shard placement-invariance contract: computing only heads
+        // [lo, hi) of a single sequence with run_seeded_into(seeds=[s],
+        // head_offset=lo) must reproduce the full-width run at seed s
+        // exactly, because batch position 0 contributes nothing to the
+        // derived streams
+        let spec = HeadSpec::new(1, 4, 16, 4);
+        let (q, k, v) = toy_qkv(spec);
+        let skein = Skeinformer::new(8);
+        let engine = BatchedAttention::new();
+        let seed = 0xAB5E_u64;
+        let full = engine.run(&skein, &q, &k, &v, None, seed);
+        let (lo, hi) = (1, 3);
+        let slice = |t: &BatchTensor| {
+            let mut s = BatchTensor::zeros(1, hi - lo, spec.seq, spec.head_dim);
+            for h in lo..hi {
+                let src = t.head(0, h).to_vec();
+                s.head_mut(0, h - lo).copy_from_slice(&src);
+            }
+            s
+        };
+        let (qs, ks, vs) = (slice(&q), slice(&k), slice(&v));
+        let mut out = BatchTensor::zeros(1, hi - lo, spec.seq, spec.head_dim);
+        engine.run_seeded_into(&skein, &qs, &ks, &vs, None, &[seed], lo, &mut out);
+        for h in lo..hi {
+            assert_eq!(
+                out.head_matrix(0, h - lo).max_abs_diff(&full.head_matrix(0, h)),
+                0.0,
+                "sliced head {h} deviates from the full-width run"
+            );
+        }
+    }
+
+    #[test]
+    fn seeded_batch_packing_does_not_change_results() {
+        // two routed requests packed into one shard batch must equal
+        // the two singleton runs — `b` never enters seed derivation
+        let spec = HeadSpec::new(2, 3, 12, 4);
+        let (q, k, v) = toy_qkv(spec);
+        let skein = Skeinformer::new(8);
+        let engine = BatchedAttention::new();
+        let seeds = [11u64, 77u64];
+        let mut packed = spec.zeros();
+        engine.run_seeded_into(&skein, &q, &k, &v, None, &seeds, 1, &mut packed);
+        for b in 0..2 {
+            let single = |t: &BatchTensor| {
+                let mut s = BatchTensor::zeros(1, spec.heads, spec.seq, spec.head_dim);
+                s.data_mut().copy_from_slice(t.sequence(b));
+                s
+            };
+            let (qs, ks, vs) = (single(&q), single(&k), single(&v));
+            let mut solo = BatchTensor::zeros(1, spec.heads, spec.seq, spec.head_dim);
+            engine.run_seeded_into(&skein, &qs, &ks, &vs, None, &seeds[b..=b], 1, &mut solo);
+            assert_eq!(
+                solo.data(),
+                packed.sequence(b),
+                "sequence {b} changed under batch packing"
+            );
+        }
     }
 
     #[test]

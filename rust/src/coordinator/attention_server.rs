@@ -152,7 +152,7 @@ use crate::pool;
 use crate::rng::Rng;
 use crate::tensor::{with_default_plan, BatchTensor, MatmulPlan, Matrix};
 use anyhow::Result;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -217,6 +217,27 @@ pub enum ServeError {
     /// The reply channel disconnected without a verdict — only seen if
     /// the serve thread died abnormally.
     Disconnected,
+    /// The engine shard holding this request's or stream's state died
+    /// (missed heartbeats or a broken connection).  Emitted by the
+    /// shard coordinator ([`crate::coordinator::shard`]) — a typed
+    /// degradation, never a hang: in-flight work on the dead shard is
+    /// answered with this, streams homed there stay rejected until
+    /// reopened, and fresh one-shots re-scatter across the survivors.
+    ShardDown {
+        /// The dead shard's address.
+        shard: String,
+    },
+    /// A typed error relayed verbatim from an engine shard by the
+    /// coordinator: `code` is the shard's original wire code and
+    /// `message` its original rendering, so a client behind a
+    /// one-shard coordinator sees byte-identical error frames to one
+    /// talking to the engine directly.
+    Remote {
+        /// The shard's original [`ServeError::code`] value.
+        code: u8,
+        /// The shard's original `Display` rendering.
+        message: String,
+    },
 }
 
 impl ServeError {
@@ -230,6 +251,8 @@ impl ServeError {
             ServeError::CrossShapeUnsupported { .. } => 4,
             ServeError::Shutdown => 5,
             ServeError::Disconnected => 6,
+            ServeError::ShardDown { .. } => 7,
+            ServeError::Remote { code, .. } => *code,
         }
     }
 }
@@ -246,6 +269,8 @@ impl std::fmt::Display for ServeError {
             ),
             ServeError::Shutdown => write!(f, "server shut down before answering"),
             ServeError::Disconnected => write!(f, "reply channel disconnected"),
+            ServeError::ShardDown { shard } => write!(f, "shard unavailable: {shard}"),
+            ServeError::Remote { message, .. } => write!(f, "{message}"),
         }
     }
 }
@@ -503,8 +528,36 @@ impl HeadsRequest {
     }
 }
 
+/// Head-range routing tag on a one-shot request, set by the shard
+/// coordinator when it scatters one client request across engine
+/// processes.  `q`/`k`/`v` then carry only heads `[head_lo, head_hi)`
+/// of the global request (each slab `(head_hi - head_lo) * seq *
+/// head_dim` elements), and head `h` of the sub-request draws from
+/// `Rng::new(seed ^ (head_lo + h))` — the seed is pinned by the
+/// coordinator (`batch_seed(coordinator_seed, request_index)`), so the
+/// result is bitwise identical to the head slice a single process
+/// would have computed, no matter how shards batch the sub-requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SubmitRoute {
+    /// First global head (inclusive) carried by this sub-request.
+    pub head_lo: u32,
+    /// One past the last global head carried by this sub-request.
+    pub head_hi: u32,
+    /// Explicit base seed; replaces the shard's own
+    /// `batch_seed(cfg.seed, batches)` derivation.
+    pub seed: u64,
+}
+
+impl SubmitRoute {
+    /// Heads carried by this sub-request.
+    pub fn width(&self) -> usize {
+        (self.head_hi - self.head_lo) as usize
+    }
+}
+
 struct Pending {
     req: HeadsRequest,
+    route: Option<SubmitRoute>,
     reply: ReplyTo,
     enqueued: Instant,
     conn: u64,
@@ -544,6 +597,10 @@ pub enum StreamOp {
 enum ServerMsg {
     Batch(Pending),
     Stream { conn: u64, stream: u64, op: StreamOp, err: Option<ReplyTo> },
+    /// Live stats snapshot request (counters plus means-so-far); the
+    /// wire `Stats` frame and the shard coordinator's aggregation poll
+    /// land here.
+    Stats(mpsc::Sender<AttentionServerStats>),
     Shutdown,
 }
 
@@ -593,8 +650,19 @@ impl ServerConnection {
     /// Submit with an explicit reply target (the wire path passes a
     /// frame-encoding [`ReplyTo`] here).
     pub(crate) fn submit_with(&self, req: HeadsRequest, reply: ReplyTo) {
+        self.submit_routed(req, None, reply);
+    }
+
+    /// Submit a possibly head-range-routed request (see [`SubmitRoute`]).
+    pub(crate) fn submit_routed(
+        &self,
+        req: HeadsRequest,
+        route: Option<SubmitRoute>,
+        reply: ReplyTo,
+    ) {
         self.shared.send(ServerMsg::Batch(Pending {
             req,
+            route,
             reply,
             enqueued: Instant::now(),
             conn: self.conn,
@@ -613,6 +681,25 @@ impl ServerConnection {
         let id = self.shared.next_stream.fetch_add(1, Ordering::Relaxed);
         self.stream_op(id, StreamOp::Open { repilot_stride }, None);
         id
+    }
+
+    /// Open a decode stream under a caller-chosen id.  The shard
+    /// coordinator assigns global stream ids and pushes them down so a
+    /// stream's `stream_seed` derivation matches what a single process
+    /// would have used; `fetch_max` keeps locally minted ids from ever
+    /// colliding with adopted ones.
+    pub(crate) fn open_stream_with_id(&self, stream: u64, repilot_stride: usize) {
+        self.shared.next_stream.fetch_max(stream + 1, Ordering::Relaxed);
+        self.stream_op(stream, StreamOp::Open { repilot_stride }, None);
+    }
+
+    /// A live stats snapshot from the serve thread (counters plus
+    /// means-so-far), or `None` if the server is gone.  The shard
+    /// coordinator polls this over the wire to aggregate cluster stats.
+    pub fn stats(&self) -> Option<AttentionServerStats> {
+        let (tx, rx) = mpsc::channel();
+        self.shared.send(ServerMsg::Stats(tx));
+        rx.recv().ok()
     }
 
     /// Send one raw stream op, with an optional error reporter for ops
@@ -751,6 +838,54 @@ pub struct AttentionServerStats {
     pub mean_step_occupancy: f64,
     /// Mean engine time per executed batch (ms).
     pub mean_batch_ms: f64,
+}
+
+impl AttentionServerStats {
+    /// Merge per-shard stats into one cluster view: counters sum, and
+    /// each mean is weighted by the counter it was averaged over —
+    /// `mean_queue_ms` by requests, `mean_occupancy` and
+    /// `mean_batch_ms` by batches, `mean_step_occupancy` by steps.
+    /// The shard coordinator reports this aggregate from its stats
+    /// printer.
+    pub fn merge_weighted(shards: &[AttentionServerStats]) -> AttentionServerStats {
+        let mut out = AttentionServerStats::default();
+        let mut queue_w = 0.0;
+        let mut batch_occ_w = 0.0;
+        let mut batch_ms_w = 0.0;
+        let mut step_w = 0.0;
+        for s in shards {
+            out.requests += s.requests;
+            out.batches += s.batches;
+            out.steps += s.steps;
+            out.rejected += s.rejected;
+            out.stream_appends += s.stream_appends;
+            out.stream_queries += s.stream_queries;
+            out.kv_hit_blocks += s.kv_hit_blocks;
+            out.kv_alloc_blocks += s.kv_alloc_blocks;
+            out.kv_evicted_blocks += s.kv_evicted_blocks;
+            out.kv_resident_blocks += s.kv_resident_blocks;
+            out.kv_resident_bytes += s.kv_resident_bytes;
+            out.kv_demoted_blocks += s.kv_demoted_blocks;
+            out.kv_spilled_blocks += s.kv_spilled_blocks;
+            out.kv_spill_hits += s.kv_spill_hits;
+            out.kv_spill_corrupt += s.kv_spill_corrupt;
+            queue_w += s.mean_queue_ms * s.requests as f64;
+            batch_occ_w += s.mean_occupancy * s.batches as f64;
+            batch_ms_w += s.mean_batch_ms * s.batches as f64;
+            step_w += s.mean_step_occupancy * s.steps as f64;
+        }
+        if out.requests > 0 {
+            out.mean_queue_ms = queue_w / out.requests as f64;
+        }
+        if out.batches > 0 {
+            out.mean_occupancy = batch_occ_w / out.batches as f64;
+            out.mean_batch_ms = batch_ms_w / out.batches as f64;
+        }
+        if out.steps > 0 {
+            out.mean_step_occupancy = step_w / out.steps as f64;
+        }
+        out
+    }
 }
 
 impl AttentionServerHandle {
@@ -1035,7 +1170,7 @@ impl Serve<'_> {
     fn ingest(&mut self, msg: ServerMsg) -> bool {
         match msg {
             ServerMsg::Batch(p) => {
-                if let Err(e) = validate_request(self.cfg, &p.req) {
+                if let Err(e) = validate_request(self.cfg, &p.req, p.route.as_ref()) {
                     self.stats.rejected += 1;
                     p.reply.send(Err(e));
                 } else {
@@ -1046,6 +1181,10 @@ impl Serve<'_> {
             }
             ServerMsg::Stream { conn, stream, op, err } => {
                 self.ingest_stream_op(conn, stream, op, err);
+                false
+            }
+            ServerMsg::Stats(tx) => {
+                let _ = tx.send(self.snapshot());
                 false
             }
             ServerMsg::Shutdown => true,
@@ -1267,15 +1406,22 @@ impl Serve<'_> {
         self.stats.steps += 1;
         self.sums.step_occupancy += admitted.len() as f64 / self.cfg.max_batch as f64;
         let mut oneshots = Vec::new();
+        let mut routed: BTreeMap<(u32, u32), Vec<Pending>> = BTreeMap::new();
         let mut qtasks = Vec::new();
         for work in admitted {
             match work {
-                Work::OneShot(p) => oneshots.push(p),
+                Work::OneShot(p) => match p.route {
+                    None => oneshots.push(p),
+                    Some(r) => routed.entry((r.head_lo, r.head_hi)).or_default().push(p),
+                },
                 Work::Query(t) => qtasks.push(t),
             }
         }
         if !oneshots.is_empty() {
             self.execute_batch(oneshots);
+        }
+        for (_, group) in routed {
+            self.execute_routed_batch(group);
         }
         if !qtasks.is_empty() {
             self.execute_queries(qtasks);
@@ -1373,6 +1519,65 @@ impl Serve<'_> {
             p.reply.send(Ok(out.sequence(b).to_vec()));
         }
         self.out_cache = Some(out);
+        self.stats.requests += n as u64;
+        self.stats.batches += 1;
+        self.sums.occupancy += n as f64 / cfg.max_batch as f64;
+    }
+
+    /// Run one admitted group of head-range-routed sub-requests that
+    /// share a `(head_lo, head_hi)` window.  Seeds come from the route
+    /// (one per sub-request, pinned by the coordinator) rather than
+    /// this shard's batch counter, and the engine offsets head RNG
+    /// derivation by `head_lo` — so the output is bitwise the head
+    /// slice of the single-process result no matter how sub-requests
+    /// were packed into shard-side batches.  Batch-slab dedupe is
+    /// bypassed here: routed slabs are head-range fragments whose
+    /// geometry does not match the cache's full-width block layout.
+    fn execute_routed_batch(&mut self, group: Vec<Pending>) {
+        let cfg = self.cfg;
+        let route = group[0].route.expect("routed group");
+        let width = route.width();
+        let slab_views = |get: fn(&HeadsRequest) -> &Arc<[f32]>| {
+            BatchTensor::from_slabs(
+                width,
+                cfg.seq,
+                cfg.head_dim,
+                group.iter().map(|p| Arc::clone(get(&p.req))).collect(),
+            )
+        };
+        let q = slab_views(|r| &r.q);
+        let k = slab_views(|r| &r.k);
+        let v = slab_views(|r| &r.v);
+        let any_mask = group.iter().any(|p| p.req.mask.is_some());
+        let mut masks =
+            if any_mask { Some(Matrix::full(group.len(), cfg.seq, 1.0)) } else { None };
+        let mut seeds = Vec::with_capacity(group.len());
+        for (b, p) in group.iter().enumerate() {
+            if let (Some(mm), Some(req_mask)) = (masks.as_mut(), p.req.mask.as_ref()) {
+                mm.set_row(b, &req_mask[..]);
+            }
+            seeds.push(p.route.expect("routed group").seed);
+            self.sums.queue_ms += p.enqueued.elapsed().as_secs_f64() * 1e3;
+        }
+
+        let t0 = Instant::now();
+        let mut out = BatchTensor::zeros(group.len(), width, cfg.seq, cfg.head_dim);
+        self.engine.run_seeded_into(
+            self.method.as_ref(),
+            &q,
+            &k,
+            &v,
+            masks.as_ref(),
+            &seeds,
+            route.head_lo as usize,
+            &mut out,
+        );
+        self.sums.batch_ms += t0.elapsed().as_secs_f64() * 1e3;
+
+        let n = group.len();
+        for (b, p) in group.into_iter().enumerate() {
+            p.reply.send(Ok(out.sequence(b).to_vec()));
+        }
         self.stats.requests += n as u64;
         self.stats.batches += 1;
         self.sums.occupancy += n as f64 / cfg.max_batch as f64;
@@ -1536,6 +1741,20 @@ impl Serve<'_> {
     /// ([`KvCache::spill_index`]) so the next server over the same
     /// directory warm-restarts from this one's cached prefixes.
     fn finish(mut self) -> AttentionServerStats {
+        if let Some(cache) = self.kv_cache.as_mut() {
+            if cache.spill_store().is_some() {
+                cache.spill_index();
+            }
+        }
+        self.snapshot()
+    }
+
+    /// A point-in-time copy of the stats: the raw counters plus means
+    /// computed from the running sums and the current KV cache
+    /// counters.  Unlike [`finish`](Self::finish) this does not touch
+    /// the spill index — it is what the `Stats` wire frame and the
+    /// shard coordinator's aggregation poll observe on a live server.
+    fn snapshot(&self) -> AttentionServerStats {
         let mut stats = self.stats;
         if stats.requests > 0 {
             stats.mean_queue_ms = self.sums.queue_ms / stats.requests as f64;
@@ -1547,10 +1766,7 @@ impl Serve<'_> {
         if stats.steps > 0 {
             stats.mean_step_occupancy = self.sums.step_occupancy / stats.steps as f64;
         }
-        if let Some(cache) = self.kv_cache.as_mut() {
-            if cache.spill_store().is_some() {
-                cache.spill_index();
-            }
+        if let Some(cache) = self.kv_cache.as_ref() {
             let kv = cache.stats();
             stats.kv_hit_blocks = kv.hit_blocks;
             stats.kv_alloc_blocks = kv.alloc_blocks;
@@ -1598,9 +1814,24 @@ enum KvSrc {
     Chain(pool::SendPtr<StreamChain>),
 }
 
-/// Shape-check one one-shot request against the server shape.
-fn validate_request(cfg: &AttentionServerConfig, req: &HeadsRequest) -> Result<(), ServeError> {
-    let elems = cfg.request_elems();
+/// Shape-check one one-shot request against the server shape.  A
+/// routed request carries only its head range, so its slabs are
+/// `(head_hi - head_lo) * seq * head_dim` elements instead of the full
+/// `heads * seq * head_dim`.
+pub(crate) fn validate_request(
+    cfg: &AttentionServerConfig,
+    req: &HeadsRequest,
+    route: Option<&SubmitRoute>,
+) -> Result<(), ServeError> {
+    let elems = match route {
+        None => cfg.request_elems(),
+        Some(r) => {
+            if r.head_lo >= r.head_hi || r.head_hi as usize > cfg.heads {
+                return Err(ServeError::BadShape { what: "head range" });
+            }
+            r.width() * cfg.seq * cfg.head_dim
+        }
+    };
     if req.q.len() != elems {
         return Err(ServeError::BadShape { what: "q slab" });
     }
@@ -1711,6 +1942,125 @@ mod tests {
     }
 
     #[test]
+    fn routed_head_ranges_gather_to_the_full_result_bitwise() {
+        // split one 4-head request into [0,2) and [2,4) sub-requests
+        // with a pinned seed — the gathered halves must be bitwise the
+        // single-process result under that same seed, which is the
+        // shard coordinator's scatter/gather contract
+        let mut c = cfg("skeinformer", 2);
+        c.heads = 4;
+        let handle = start(c.clone()).unwrap();
+        let req = random_request(&c, 31);
+        let pinned = batch_seed(0xC0FF_EE00, 0);
+
+        let per_head = c.seq * c.head_dim;
+        let slice = |s: &Arc<[f32]>, lo: usize, hi: usize| -> Vec<f32> {
+            s[lo * per_head..hi * per_head].to_vec()
+        };
+        let conn = handle.connection();
+        let mut rxs = Vec::new();
+        for (lo, hi) in [(0u32, 2u32), (2, 4)] {
+            let sub = HeadsRequest::from_vecs(
+                slice(&req.q, lo as usize, hi as usize),
+                slice(&req.k, lo as usize, hi as usize),
+                slice(&req.v, lo as usize, hi as usize),
+            );
+            let (reply, rx) = ReplyTo::channel();
+            conn.submit_routed(
+                sub,
+                Some(SubmitRoute { head_lo: lo, head_hi: hi, seed: pinned }),
+                reply,
+            );
+            rxs.push((lo, rx));
+        }
+        let mut got = vec![0.0f32; c.heads * per_head];
+        for (lo, rx) in rxs {
+            let part = rx.recv().unwrap();
+            got[lo as usize * per_head..lo as usize * per_head + part.len()]
+                .copy_from_slice(&part);
+        }
+        handle.shutdown().unwrap();
+
+        let method = crate::attention::by_name(&c.method, c.d).unwrap();
+        let q = crate::tensor::BatchTensor::from_vec(1, c.heads, c.seq, c.head_dim, req.q.to_vec());
+        let k = crate::tensor::BatchTensor::from_vec(1, c.heads, c.seq, c.head_dim, req.k.to_vec());
+        let v = crate::tensor::BatchTensor::from_vec(1, c.heads, c.seq, c.head_dim, req.v.to_vec());
+        let want = BatchedAttention::new().run(method.as_ref(), &q, &k, &v, None, pinned);
+        assert_eq!(got, want.data().to_vec(), "scatter/gather must be bitwise");
+    }
+
+    #[test]
+    fn routed_requests_reject_bad_head_ranges() {
+        let c = cfg("standard", 2);
+        let handle = start(c.clone()).unwrap();
+        let conn = handle.connection();
+        let per_head = c.seq * c.head_dim;
+        // empty range, range past the head count, and a slab that does
+        // not match the claimed width must all reject typed
+        for (lo, hi, elems) in
+            [(1u32, 1u32, per_head), (0, 3, 3 * per_head), (0, 1, 2 * per_head)]
+        {
+            let sub = HeadsRequest::from_vecs(vec![0.0; elems], vec![0.0; elems], vec![0.0; elems]);
+            let (reply, rx) = ReplyTo::channel();
+            conn.submit_routed(sub, Some(SubmitRoute { head_lo: lo, head_hi: hi, seed: 7 }), reply);
+            assert!(matches!(rx.recv(), Err(ServeError::BadShape { .. })));
+        }
+        let stats = handle.shutdown().unwrap();
+        assert_eq!(stats.rejected, 3);
+    }
+
+    #[test]
+    fn live_stats_snapshot_tracks_the_running_server() {
+        let c = cfg("standard", 2);
+        let handle = start(c.clone()).unwrap();
+        let conn = handle.connection();
+        conn.submit(random_request(&c, 1)).recv().unwrap();
+        let snap = conn.stats().expect("server alive");
+        assert_eq!(snap.requests, 1);
+        assert_eq!(snap.batches, 1);
+        assert!(snap.mean_step_occupancy > 0.0, "means are live, not end-only");
+        let end = handle.shutdown().unwrap();
+        assert_eq!(end.requests, snap.requests);
+    }
+
+    #[test]
+    fn merged_stats_sum_counters_and_weight_means() {
+        let a = AttentionServerStats {
+            requests: 2,
+            steps: 1,
+            mean_queue_ms: 4.0,
+            mean_step_occupancy: 1.0,
+            ..Default::default()
+        };
+        let b = AttentionServerStats {
+            requests: 6,
+            steps: 3,
+            mean_queue_ms: 8.0,
+            mean_step_occupancy: 0.5,
+            ..Default::default()
+        };
+        let m = AttentionServerStats::merge_weighted(&[a, b]);
+        assert_eq!(m.requests, 8);
+        assert_eq!(m.steps, 4);
+        // queue: (2*4 + 6*8) / 8; step occupancy: (1*1.0 + 3*0.5) / 4
+        assert!((m.mean_queue_ms - 7.0).abs() < 1e-12);
+        assert!((m.mean_step_occupancy - 0.625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn explicit_stream_ids_pin_the_seed_derivation() {
+        // a coordinator-assigned id must not collide with locally
+        // minted ones: after adopting id 7, the next local id is 8
+        let c = cfg("standard", 2);
+        let handle = start(c.clone()).unwrap();
+        let conn = handle.connection();
+        conn.open_stream_with_id(7, 1);
+        let s = conn.open_stream(1);
+        assert_eq!(s.id(), 8);
+        handle.shutdown().unwrap();
+    }
+
+    #[test]
     fn malformed_requests_are_rejected_not_wedged() {
         let c = cfg("standard", 2);
         let handle = start(c.clone()).unwrap();
@@ -1758,9 +2108,10 @@ mod tests {
             ServeError::CrossShapeUnsupported { rows: 1, len: 2 }.code(),
             ServeError::Shutdown.code(),
             ServeError::Disconnected.code(),
+            ServeError::ShardDown { shard: "127.0.0.1:0".into() }.code(),
         ]
         .into();
-        assert_eq!(codes.len(), 6);
+        assert_eq!(codes.len(), 7);
         assert!(!codes.contains(&0), "0 is reserved for wire-level errors");
     }
 

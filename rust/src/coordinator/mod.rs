@@ -8,11 +8,15 @@
 //! no artifacts required).  [`net`] puts a TCP front end on the latter:
 //! a length-prefixed binary wire protocol whose f32 payloads land
 //! directly in `Arc<[f32]>` slabs, preserving the zero-copy path end to
-//! end (`skein serve --listen` / `skein client`).
+//! end (`skein serve --listen` / `skein client`).  [`shard`] scales
+//! that front end across processes: a coordinator scatters head ranges
+//! over N engine shards and gathers the replies, speaking the same
+//! wire protocol on both sides (`skein coordinator`).
 
 pub mod attention_server;
 pub mod net;
 pub mod server;
+pub mod shard;
 
 use crate::config::ExperimentConfig;
 use crate::runtime::Runtime;

@@ -1,5 +1,6 @@
 //! Small blocking TCP client for the wire protocol — what `skein
-//! client` and the socket round-trip tests/benches use.
+//! client`, the shard coordinator's tests, and the socket round-trip
+//! tests/benches use.
 //!
 //! One [`NetClient`] owns one connection.  Ops map one-to-one onto
 //! [`ClientFrame`](super::wire::ClientFrame)s; replies are matched by
@@ -13,14 +14,51 @@
 //! the wire error code: 0 is a framing error, `1..` are
 //! [`ServeError::code`](crate::coordinator::attention_server::ServeError::code)
 //! values — never a hang or an opaque `RecvError` panic.
+//!
+//! # Timeouts and liveness
+//!
+//! Every socket op is bounded by [`NetTimeouts`] (connect, read,
+//! write); a dead peer can never hang a blocking call forever.  A read
+//! timeout alone does not fail the op: the server may simply be deep in
+//! a batch.  The client sends one `Ping` probe instead — the server
+//! answers pongs straight from its read loop, so *any* arriving frame
+//! proves liveness and the wait continues.  Only a second silent
+//! timeout (probe unanswered) reports [`ClientError::TimedOut`].
+//! `Pong` frames can overtake compute replies for the same reason, so
+//! the reply reader skips them wherever they appear.
 
 use super::wire::{
-    encode_append, encode_close, encode_open, encode_prefill, encode_query, encode_submit,
-    read_hello, read_server_frame, write_hello, FrameError, ServerFrame, ServerInfo,
+    encode_append, encode_close, encode_open, encode_open_with_stream, encode_ping,
+    encode_prefill, encode_query, encode_stats_req, encode_submit, encode_submit_routed,
+    read_hello, read_server_frame, read_server_frame_or_idle, write_hello, FrameError,
+    ServerFrame, ServerInfo, ServerRead,
 };
-use crate::coordinator::attention_server::HeadsRequest;
+use crate::coordinator::attention_server::{AttentionServerStats, HeadsRequest, SubmitRoute};
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Socket deadlines for one [`NetClient`] connection.
+#[derive(Clone, Copy, Debug)]
+pub struct NetTimeouts {
+    /// TCP connect deadline (per resolved address).
+    pub connect: Duration,
+    /// Read deadline per wait window; a first expiry triggers a ping
+    /// probe, a second reports [`ClientError::TimedOut`].
+    pub read: Duration,
+    /// Write deadline for sending one frame.
+    pub write: Duration,
+}
+
+impl Default for NetTimeouts {
+    fn default() -> Self {
+        NetTimeouts {
+            connect: Duration::from_secs(5),
+            read: Duration::from_secs(10),
+            write: Duration::from_secs(10),
+        }
+    }
+}
 
 /// Client-side failure modes.
 #[derive(Debug)]
@@ -33,6 +71,10 @@ pub enum ClientError {
     /// The server answered with a typed error frame: `code` 0 is a
     /// wire-level framing error, `1..` are `ServeError::code` values.
     Rejected { code: u8, message: String },
+    /// The peer stayed silent past the read timeout *and* ignored a
+    /// ping probe — presumed dead (a merely busy server answers pongs
+    /// from its read loop).
+    TimedOut,
 }
 
 impl std::fmt::Display for ClientError {
@@ -42,6 +84,9 @@ impl std::fmt::Display for ClientError {
             ClientError::Protocol(s) => write!(f, "protocol error: {s}"),
             ClientError::Rejected { code, message } => {
                 write!(f, "rejected (code {code}): {message}")
+            }
+            ClientError::TimedOut => {
+                write!(f, "peer silent past the read timeout (ping probe unanswered)")
             }
         }
     }
@@ -61,7 +106,9 @@ impl From<FrameError> for ClientError {
     }
 }
 
-/// A blocking connection to a `skein serve --listen` front end.
+/// A blocking connection to a `skein serve --listen` front end (or a
+/// `skein coordinator` presenting a whole cluster behind the same
+/// protocol).
 pub struct NetClient {
     r: BufReader<TcpStream>,
     w: BufWriter<TcpStream>,
@@ -70,11 +117,45 @@ pub struct NetClient {
 }
 
 impl NetClient {
-    /// Connect and handshake; returns once the server's config frame
-    /// (its served shape) has been received.
+    /// Connect and handshake with [`NetTimeouts::default`]; returns
+    /// once the server's config frame (its served shape) has been
+    /// received.
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Self, ClientError> {
-        let sock = TcpStream::connect(addr)?;
+        Self::connect_with(addr, NetTimeouts::default())
+    }
+
+    /// [`connect`](Self::connect) with explicit deadlines.  Resolution
+    /// happens up front so the connect timeout applies per address; the
+    /// read/write deadlines stay armed on the socket for the
+    /// connection's whole life.
+    pub fn connect_with(
+        addr: impl ToSocketAddrs,
+        timeouts: NetTimeouts,
+    ) -> Result<Self, ClientError> {
+        let mut last_err: Option<io::Error> = None;
+        let mut sock = None;
+        for resolved in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&resolved, timeouts.connect) {
+                Ok(s) => {
+                    sock = Some(s);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let sock = match sock {
+            Some(s) => s,
+            None => {
+                return Err(last_err
+                    .unwrap_or_else(|| {
+                        io::Error::new(io::ErrorKind::InvalidInput, "address resolved to nothing")
+                    })
+                    .into())
+            }
+        };
         let _ = sock.set_nodelay(true);
+        sock.set_read_timeout(Some(timeouts.read))?;
+        sock.set_write_timeout(Some(timeouts.write))?;
         let mut w = BufWriter::new(sock.try_clone()?);
         write_hello(&mut w)?;
         w.flush()?;
@@ -108,31 +189,63 @@ impl NetClient {
         Ok(())
     }
 
+    /// Read one frame, absorbing read timeouts with the ping-probe
+    /// discipline (see the [module docs](self)).
+    fn read_frame(&mut self) -> Result<ServerFrame, ClientError> {
+        let mut probed = false;
+        loop {
+            match read_server_frame_or_idle(&mut self.r) {
+                Ok(ServerRead::Frame(frame)) => return Ok(frame),
+                Ok(ServerRead::Idle) => {
+                    if probed {
+                        return Err(ClientError::TimedOut);
+                    }
+                    probed = true;
+                    let id = self.fresh_id();
+                    self.send(encode_ping(id))?;
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
     /// Read replies until `want`'s arrives.  An error frame for an
     /// *earlier* pipelined op (e.g. a rejected fire-and-forget append)
     /// also surfaces here as [`ClientError::Rejected`] — failures are
-    /// reported, never swallowed.
+    /// reported, never swallowed.  Pong frames (answers to our idle
+    /// probes, delivered out of band by the server's read loop) are
+    /// skipped.
     fn read_reply(&mut self, want: u64) -> Result<ServerFrame, ClientError> {
-        match read_server_frame(&mut self.r)? {
-            ServerFrame::Error { id, code, message } => {
-                let prefix = if id == want { String::new() } else { format!("op {id}: ") };
-                Err(ClientError::Rejected { code, message: format!("{prefix}{message}") })
-            }
-            frame @ (ServerFrame::Output { .. } | ServerFrame::OpenOk { .. }) => {
-                let id = match &frame {
-                    ServerFrame::Output { id, .. } | ServerFrame::OpenOk { id, .. } => *id,
-                    ServerFrame::Config(_) => unreachable!(),
-                };
-                if id == want {
-                    Ok(frame)
-                } else {
-                    Err(ClientError::Protocol(format!(
-                        "reply for request {id} while awaiting {want}"
-                    )))
+        loop {
+            match self.read_frame()? {
+                ServerFrame::Pong { .. } => continue,
+                ServerFrame::Error { id, code, message } => {
+                    let prefix = if id == want { String::new() } else { format!("op {id}: ") };
+                    return Err(ClientError::Rejected {
+                        code,
+                        message: format!("{prefix}{message}"),
+                    });
                 }
-            }
-            ServerFrame::Config(_) => {
-                Err(ClientError::Protocol("unexpected config frame".into()))
+                frame @ (ServerFrame::Output { .. }
+                | ServerFrame::OpenOk { .. }
+                | ServerFrame::StatsOk { .. }) => {
+                    let id = match &frame {
+                        ServerFrame::Output { id, .. }
+                        | ServerFrame::OpenOk { id, .. }
+                        | ServerFrame::StatsOk { id, .. } => *id,
+                        _ => unreachable!(),
+                    };
+                    return if id == want {
+                        Ok(frame)
+                    } else {
+                        Err(ClientError::Protocol(format!(
+                            "reply for request {id} while awaiting {want}"
+                        )))
+                    };
+                }
+                ServerFrame::Config(_) => {
+                    return Err(ClientError::Protocol("unexpected config frame".into()))
+                }
             }
         }
     }
@@ -160,6 +273,29 @@ impl NetClient {
         Ok(id)
     }
 
+    /// Pipeline a head-range-routed sub-request (the shard
+    /// coordinator's scatter path; see [`SubmitRoute`]).
+    pub fn submit_routed_async(
+        &mut self,
+        req: &HeadsRequest,
+        route: SubmitRoute,
+    ) -> Result<u64, ClientError> {
+        let id = self.fresh_id();
+        self.send(encode_submit_routed(id, req, Some(route)))?;
+        Ok(id)
+    }
+
+    /// Send a head-range-routed sub-request and block for its
+    /// `[head_hi - head_lo, seq, head_dim]` output slab.
+    pub fn submit_routed(
+        &mut self,
+        req: &HeadsRequest,
+        route: SubmitRoute,
+    ) -> Result<Vec<f32>, ClientError> {
+        let id = self.submit_routed_async(req, route)?;
+        self.wait_output(id)
+    }
+
     /// Block for a pipelined request's output slab.
     pub fn wait_output(&mut self, id: u64) -> Result<Vec<f32>, ClientError> {
         self.expect_output(id)
@@ -169,6 +305,23 @@ impl NetClient {
     pub fn open_stream(&mut self, repilot_stride: u32) -> Result<u64, ClientError> {
         let id = self.fresh_id();
         self.send(encode_open(id, repilot_stride))?;
+        match self.read_reply(id)? {
+            ServerFrame::OpenOk { stream, .. } => Ok(stream),
+            other => Err(ClientError::Protocol(format!("expected open-ok frame, got {other:?}"))),
+        }
+    }
+
+    /// Open a decode stream under a caller-chosen id (the shard
+    /// coordinator pins global stream ids so per-stream seed derivation
+    /// is placement-independent).  The server adopts the id; the reply
+    /// echoes it back.
+    pub fn open_stream_with_id(
+        &mut self,
+        repilot_stride: u32,
+        stream: u64,
+    ) -> Result<u64, ClientError> {
+        let id = self.fresh_id();
+        self.send(encode_open_with_stream(id, repilot_stride, Some(stream)))?;
         match self.read_reply(id)? {
             ServerFrame::OpenOk { stream, .. } => Ok(stream),
             other => Err(ClientError::Protocol(format!("expected open-ok frame, got {other:?}"))),
@@ -208,5 +361,35 @@ impl NetClient {
     pub fn close_stream(&mut self, stream: u64) -> Result<(), ClientError> {
         let id = self.fresh_id();
         self.send(encode_close(id, stream))
+    }
+
+    /// Explicit liveness check: send a ping and block for its pong.
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        let want = self.fresh_id();
+        self.send(encode_ping(want))?;
+        loop {
+            match self.read_frame()? {
+                ServerFrame::Pong { id } if id >= want => return Ok(()),
+                ServerFrame::Pong { .. } => continue, // an older probe's answer
+                ServerFrame::Error { code, message, .. } => {
+                    return Err(ClientError::Rejected { code, message })
+                }
+                other => {
+                    return Err(ClientError::Protocol(format!(
+                        "expected pong frame, got {other:?}"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Poll the server's live [`AttentionServerStats`] snapshot.
+    pub fn stats(&mut self) -> Result<AttentionServerStats, ClientError> {
+        let id = self.fresh_id();
+        self.send(encode_stats_req(id))?;
+        match self.read_reply(id)? {
+            ServerFrame::StatsOk { stats, .. } => Ok(stats),
+            other => Err(ClientError::Protocol(format!("expected stats frame, got {other:?}"))),
+        }
     }
 }

@@ -14,11 +14,20 @@
 //! so the continuous-batching scheduler, per-connection fairness, and
 //! seed derivation are identical to the in-process path and served
 //! bytes are bitwise identical (pinned by `rust/tests/serving_net.rs`).
+//!
+//! The accept loop is generic over a [`WireBackend`]: `skein serve
+//! --listen` plugs in the in-process engine, `skein coordinator` plugs
+//! in the shard scatter/gather layer
+//! ([`crate::coordinator::shard::Coordinator`]) — same protocol, same
+//! client.
 
 pub mod client;
 pub mod server;
 pub mod wire;
 
-pub use client::{ClientError, NetClient};
-pub use server::{serve, NetServer, WRITER_QUEUE_FRAMES};
+pub use client::{ClientError, NetClient, NetTimeouts};
+pub use server::{
+    serve, serve_backend, EngineBackend, NetServer, WireBackend, WireLane, READ_IDLE_BUDGET,
+    READ_IDLE_PROBE, WRITER_QUEUE_FRAMES,
+};
 pub use wire::{ServerInfo, MAGIC, MAX_FRAME_BYTES, VERSION};

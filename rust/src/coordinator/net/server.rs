@@ -1,17 +1,19 @@
-//! TCP accept loop feeding a running
-//! [`attention_server`](crate::coordinator::attention_server).
+//! TCP accept loop feeding a [`WireBackend`] — the in-process
+//! [`attention_server`](crate::coordinator::attention_server) engine
+//! ([`serve`]) or the shard coordinator
+//! ([`crate::coordinator::shard`], via [`serve_backend`]).
 //!
 //! One OS thread per connection reads frames and dispatches them into
-//! the serve thread through a per-socket
-//! [`ServerConnection`] (its own round-robin fairness lane); replies are
-//! encoded *on the serve thread* by [`ReplyTo`] closures and pushed into
-//! a bounded per-connection writer queue drained by a companion writer
-//! thread.  The serve thread therefore never blocks on a socket: if a
-//! client stops reading and its writer queue fills
-//! ([`WRITER_QUEUE_FRAMES`] frames), the connection is killed rather
-//! than letting replies pile up in memory — combined with the bounded
-//! server inbox (`queue_depth`) this is the protocol's backpressure
-//! story end to end.
+//! the backend through a per-socket [`WireLane`] (for the engine
+//! backend, a [`ServerConnection`] with its own round-robin fairness
+//! lane); replies are encoded *on the serve thread* by [`ReplyTo`]
+//! closures and pushed into a bounded per-connection writer queue
+//! drained by a companion writer thread.  The serve thread therefore
+//! never blocks on a socket: if a client stops reading and its writer
+//! queue fills ([`WRITER_QUEUE_FRAMES`] frames), the connection is
+//! killed rather than letting replies pile up in memory — combined with
+//! the bounded server inbox (`queue_depth`) this is the protocol's
+//! backpressure story end to end.
 //!
 //! Error discipline follows [`wire`](super::wire): structurally
 //! malformed frames answer with an error frame (code
@@ -22,13 +24,28 @@
 //! [`ServeError`] frames.  When a connection ends (client close, kill,
 //! or [`NetServer::stop`]), any decode streams it opened and never
 //! closed are closed server-side so their KV state is released.
+//!
+//! # Idle discipline
+//!
+//! Each connection socket carries a read timeout of
+//! [`READ_IDLE_PROBE`].  A timeout *between* frames is recoverable
+//! ([`read_client_frame_or_idle`]): the connection stays up and an idle
+//! counter ticks; any complete frame — including a `Ping`, which is
+//! answered with `Pong` straight from the read loop, never touching the
+//! backend — resets it.  After [`READ_IDLE_BUDGET`] consecutive silent
+//! probes (~one minute by default) the peer is presumed dead and the
+//! connection is closed, releasing its streams.  A client that wants to
+//! hold a connection open across think time just pings (which
+//! [`super::NetClient`] does automatically on its own read timeouts).
 
 use super::wire::{
-    encode_config, encode_error, encode_open_ok, encode_output, read_client_frame, read_hello,
-    write_hello, ClientFrame, FrameError, ServerInfo, WIRE_ERROR_CODE,
+    encode_config, encode_error, encode_open_ok, encode_output, encode_pong, encode_stats_ok,
+    read_client_frame_or_idle, read_hello, write_hello, ClientFrame, ClientRead, FrameError,
+    ServerInfo, WIRE_ERROR_CODE,
 };
 use crate::coordinator::attention_server::{
-    AttentionServerHandle, ReplyTo, ServeError, ServerConnection, StreamOp,
+    AttentionServerHandle, AttentionServerStats, HeadsRequest, ReplyTo, ServeError,
+    ServerConnection, StreamOp, SubmitRoute,
 };
 use std::collections::HashSet;
 use std::io::{self, BufReader, BufWriter, Write};
@@ -36,15 +53,119 @@ use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// Bound on per-connection queued reply frames before the client is
 /// considered too slow and its connection is killed.
 pub const WRITER_QUEUE_FRAMES: usize = 256;
 
+/// Per-socket read timeout: how often a silent connection wakes the
+/// read loop to tick its idle counter.
+pub const READ_IDLE_PROBE: Duration = Duration::from_secs(10);
+
+/// Consecutive silent [`READ_IDLE_PROBE`] timeouts tolerated before a
+/// peer is presumed dead and its connection closed (6 × 10 s ≈ one
+/// minute of total silence; any frame, including a `Ping`, resets it).
+pub const READ_IDLE_BUDGET: u32 = 6;
+
+/// What the accept loop serves: a shape/identity advertisement for the
+/// handshake plus per-connection [`WireLane`]s.  Implemented by the
+/// in-process engine ([`serve`]) and by the shard coordinator
+/// ([`crate::coordinator::shard::Coordinator`]).
+pub trait WireBackend: Send + Sync {
+    /// The config frame advertised to every client at handshake.
+    fn info(&self) -> ServerInfo;
+    /// A fresh lane for one accepted connection.
+    fn lane(&self) -> Box<dyn WireLane>;
+}
+
+/// One connection's dispatch surface: everything a wire client can ask
+/// for, minus `Ping` (answered in the read loop without touching the
+/// backend).  Implementations must never block indefinitely — a lane
+/// that cannot answer must fail typed ([`ServeError`]) through the
+/// supplied [`ReplyTo`]s.
+pub trait WireLane: Send {
+    /// One-shot request, optionally head-range routed (see
+    /// [`SubmitRoute`]).
+    fn submit(&self, req: HeadsRequest, route: Option<SubmitRoute>, reply: ReplyTo);
+    /// Open a decode stream; `explicit` pins the stream id (the shard
+    /// coordinator pushes global ids down so seed derivations match).
+    /// Returns the stream id actually opened.
+    fn open_stream(&self, repilot_stride: usize, explicit: Option<u64>) -> u64;
+    /// One raw stream op with an optional error reporter.
+    fn stream_op(&self, stream: u64, op: StreamOp, err: Option<ReplyTo>);
+    /// Live stats snapshot, or `None` if the backend is gone.
+    fn stats(&self) -> Option<AttentionServerStats>;
+}
+
+impl WireLane for ServerConnection {
+    fn submit(&self, req: HeadsRequest, route: Option<SubmitRoute>, reply: ReplyTo) {
+        self.submit_routed(req, route, reply);
+    }
+
+    fn open_stream(&self, repilot_stride: usize, explicit: Option<u64>) -> u64 {
+        match explicit {
+            Some(id) => {
+                self.open_stream_with_id(id, repilot_stride);
+                id
+            }
+            None => self.open_stream_id(repilot_stride),
+        }
+    }
+
+    fn stream_op(&self, stream: u64, op: StreamOp, err: Option<ReplyTo>) {
+        ServerConnection::stream_op(self, stream, op, err);
+    }
+
+    fn stats(&self) -> Option<AttentionServerStats> {
+        ServerConnection::stats(self)
+    }
+}
+
+/// The in-process engine as a [`WireBackend`]: one
+/// [`ServerConnection`] sibling per accepted socket.
+pub struct EngineBackend {
+    base: ServerConnection,
+    info: ServerInfo,
+}
+
+impl EngineBackend {
+    /// Wrap a running server.  `shard_index`/`shard_count` only
+    /// annotate the handshake (`0, 0` = not a shard); the engine always
+    /// serves its full configured head range.
+    pub fn new(handle: &AttentionServerHandle, shard_index: u32, shard_count: u32) -> Self {
+        let cfg = handle.config();
+        EngineBackend {
+            base: handle.connection(),
+            info: ServerInfo {
+                method: cfg.method.clone(),
+                d: cfg.d as u32,
+                heads: cfg.heads as u32,
+                seq: cfg.seq as u32,
+                head_dim: cfg.head_dim as u32,
+                max_batch: cfg.max_batch as u32,
+                seed: cfg.seed,
+                shard_index,
+                shard_count,
+            },
+        }
+    }
+}
+
+impl WireBackend for EngineBackend {
+    fn info(&self) -> ServerInfo {
+        self.info.clone()
+    }
+
+    fn lane(&self) -> Box<dyn WireLane> {
+        Box::new(self.base.sibling())
+    }
+}
+
 /// A running TCP front end.  Dropping it (or calling
 /// [`stop`](Self::stop)) stops accepting and disconnects live clients;
-/// the underlying [`AttentionServerHandle`] stays up and is shut down
-/// separately.
+/// the underlying backend (engine handle or coordinator) stays up and
+/// is shut down separately.
 pub struct NetServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
@@ -88,32 +209,28 @@ impl Drop for NetServer {
 /// start serving `handle` over TCP.  Returns once the listener is bound;
 /// accepting runs on a background thread.
 pub fn serve(handle: &AttentionServerHandle, addr: &str) -> io::Result<NetServer> {
+    serve_backend(Arc::new(EngineBackend::new(handle, 0, 0)), addr)
+}
+
+/// [`serve`] generalized over the backend: the shard coordinator plugs
+/// in here, presenting the whole cluster behind the same wire protocol
+/// a single engine speaks.
+pub fn serve_backend(backend: Arc<dyn WireBackend>, addr: &str) -> io::Result<NetServer> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
-    let base = handle.connection();
-    let cfg = handle.config();
-    let info = ServerInfo {
-        method: cfg.method.clone(),
-        d: cfg.d as u32,
-        heads: cfg.heads as u32,
-        seq: cfg.seq as u32,
-        head_dim: cfg.head_dim as u32,
-        max_batch: cfg.max_batch as u32,
-    };
     let accept_join = {
         let stop = Arc::clone(&stop);
         let conns = Arc::clone(&conns);
-        std::thread::spawn(move || accept_loop(listener, base, info, stop, conns))
+        std::thread::spawn(move || accept_loop(listener, backend, stop, conns))
     };
     Ok(NetServer { addr: local, stop, conns, accept_join: Some(accept_join) })
 }
 
 fn accept_loop(
     listener: TcpListener,
-    base: ServerConnection,
-    info: ServerInfo,
+    backend: Arc<dyn WireBackend>,
     stop: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<TcpStream>>>,
 ) {
@@ -134,10 +251,10 @@ fn accept_loop(
         if let Ok(clone) = sock.try_clone() {
             conns.lock().unwrap().push(clone);
         }
-        let conn = base.sibling();
-        let info = info.clone();
+        let lane = backend.lane();
+        let info = backend.info();
         std::thread::spawn(move || {
-            let _ = serve_connection(sock, conn, info);
+            let _ = serve_connection(sock, lane, info);
         });
     }
 }
@@ -167,7 +284,7 @@ fn verdict_frame(id: u64, r: Result<Vec<f32>, ServeError>) -> Vec<u8> {
     }
 }
 
-fn serve_connection(sock: TcpStream, conn: ServerConnection, info: ServerInfo) -> io::Result<()> {
+fn serve_connection(sock: TcpStream, lane: Box<dyn WireLane>, info: ServerInfo) -> io::Result<()> {
     let mut r = BufReader::new(sock.try_clone()?);
     // handshake: verify the client's hello, answer with ours plus the
     // config frame advertising the served shape
@@ -181,6 +298,10 @@ fn serve_connection(sock: TcpStream, conn: ServerConnection, info: ServerInfo) -
         hw.write_all(&encode_config(&info))?;
         hw.flush()?;
     }
+    // idle discipline: wake every READ_IDLE_PROBE to tick the idle
+    // counter; READ_IDLE_BUDGET silent probes in a row ends the
+    // connection (a live-but-quiet client pings, which resets it)
+    let _ = sock.set_read_timeout(Some(READ_IDLE_PROBE));
     let (wtx, wrx) = mpsc::sync_channel::<Vec<u8>>(WRITER_QUEUE_FRAMES);
     let writer = {
         let sock = sock.try_clone()?;
@@ -190,17 +311,28 @@ fn serve_connection(sock: TcpStream, conn: ServerConnection, info: ServerInfo) -
     // streams this connection opened and has not closed — released when
     // the connection ends so abandoned decode state cannot leak
     let mut open: HashSet<u64> = HashSet::new();
+    let mut idle: u32 = 0;
     loop {
-        match read_client_frame(&mut r) {
-            Ok(frame) => dispatch(frame, &conn, &pipe, &mut open),
+        match read_client_frame_or_idle(&mut r) {
+            Ok(ClientRead::Frame(frame)) => {
+                idle = 0;
+                dispatch(frame, lane.as_ref(), &pipe, &mut open);
+            }
+            Ok(ClientRead::Idle) => {
+                idle += 1;
+                if idle >= READ_IDLE_BUDGET {
+                    break; // presumed-dead peer
+                }
+            }
             Err(FrameError::Malformed { id, reason }) => {
+                idle = 0;
                 pipe.push(encode_error(id, WIRE_ERROR_CODE, &reason));
             }
             Err(FrameError::Fatal(_)) => break,
         }
     }
     for sid in open.drain() {
-        conn.stream_op(sid, StreamOp::Close, None);
+        lane.stream_op(sid, StreamOp::Close, None);
     }
     drop(pipe); // last writer sender: the writer thread drains and exits
     let _ = writer.join();
@@ -208,19 +340,14 @@ fn serve_connection(sock: TcpStream, conn: ServerConnection, info: ServerInfo) -
     Ok(())
 }
 
-fn dispatch(
-    frame: ClientFrame,
-    conn: &ServerConnection,
-    pipe: &ReplyPipe,
-    open: &mut HashSet<u64>,
-) {
+fn dispatch(frame: ClientFrame, lane: &dyn WireLane, pipe: &ReplyPipe, open: &mut HashSet<u64>) {
     match frame {
-        ClientFrame::Submit { id, req } => {
+        ClientFrame::Submit { id, req, route } => {
             let p = pipe.clone();
-            conn.submit_with(req, ReplyTo::from_fn(move |r| p.push(verdict_frame(id, r))));
+            lane.submit(req, route, ReplyTo::from_fn(move |r| p.push(verdict_frame(id, r))));
         }
-        ClientFrame::Open { id, repilot_stride } => {
-            let sid = conn.open_stream_id(repilot_stride as usize);
+        ClientFrame::Open { id, repilot_stride, stream } => {
+            let sid = lane.open_stream(repilot_stride as usize, stream);
             open.insert(sid);
             pipe.push(encode_open_ok(id, sid));
         }
@@ -231,7 +358,7 @@ fn dispatch(
                     p.push(encode_error(id, e.code(), &e.to_string()));
                 }
             });
-            conn.stream_op(stream, StreamOp::Append { k, v }, Some(err));
+            lane.stream_op(stream, StreamOp::Append { k, v }, Some(err));
         }
         ClientFrame::Prefill { id, stream, tokens, k, v } => {
             let p = pipe.clone();
@@ -240,7 +367,7 @@ fn dispatch(
                     p.push(encode_error(id, e.code(), &e.to_string()));
                 }
             });
-            conn.stream_op(
+            lane.stream_op(
                 stream,
                 StreamOp::Prefill { k, v, tokens: tokens as usize },
                 Some(err),
@@ -249,12 +376,22 @@ fn dispatch(
         ClientFrame::Query { id, stream, rows, q } => {
             let p = pipe.clone();
             let reply = ReplyTo::from_fn(move |r| p.push(verdict_frame(id, r)));
-            conn.stream_op(stream, StreamOp::Query { q, rows: rows as usize, reply }, None);
+            lane.stream_op(stream, StreamOp::Query { q, rows: rows as usize, reply }, None);
         }
         ClientFrame::Close { id: _, stream } => {
             open.remove(&stream);
-            conn.stream_op(stream, StreamOp::Close, None);
+            lane.stream_op(stream, StreamOp::Close, None);
         }
+        // liveness: answered right here so a busy backend can never
+        // stall the heartbeat
+        ClientFrame::Ping { id } => pipe.push(encode_pong(id)),
+        ClientFrame::Stats { id } => match lane.stats() {
+            Some(stats) => pipe.push(encode_stats_ok(id, &stats)),
+            None => {
+                let e = ServeError::Shutdown;
+                pipe.push(encode_error(id, e.code(), &e.to_string()));
+            }
+        },
     }
 }
 

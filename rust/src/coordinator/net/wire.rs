@@ -12,12 +12,29 @@
 //! ```
 //!
 //! `len` counts the kind byte plus the body and is capped at
-//! [`MAX_FRAME_BYTES`].  Client→server kinds are `0x01..=0x06`
-//! ([`ClientFrame`]); server→client kinds are `0x80..=0x83`
+//! [`MAX_FRAME_BYTES`].  Client→server kinds are `0x01..=0x08`
+//! ([`ClientFrame`]); server→client kinds are `0x80..=0x85`
 //! ([`ServerFrame`]).  Every f32 slab inside a body is a `u32` element
 //! count followed by that many little-endian f32s, and every request
 //! frame carries a client-chosen `id: u64` echoed by the reply frame so
 //! pipelined requests can be matched up.
+//!
+//! # Heartbeats and idleness
+//!
+//! Version 2 adds a liveness pair: a [`ClientFrame::Ping`] is answered
+//! with a [`ServerFrame::Pong`] directly from the server's read loop
+//! (it never enters the engine queue), so any peer can distinguish "the
+//! connection is quiet" from "the peer is gone".  Servers read frames
+//! through [`read_client_frame_or_idle`] with a socket read timeout: a
+//! timeout **before the first length byte** of a frame is a recoverable
+//! [`ClientRead::Idle`] tick (the accept loop counts these and closes
+//! only after a long idle budget), while a timeout **inside** a frame
+//! means the peer died mid-write and is fatal.  Version 2 also adds a
+//! stats pair ([`ClientFrame::Stats`]/[`ServerFrame::StatsOk`]) so a
+//! shard coordinator can poll live [`AttentionServerStats`] snapshots,
+//! an optional head-range route on submit frames, and an optional
+//! caller-chosen stream id on open frames (both used by the shard
+//! scatter/gather path — see `coordinator::shard`).
 //!
 //! # Error discipline
 //!
@@ -44,14 +61,17 @@
 //! place via [`HeadsRequest`] — so a request's K/V/Q payloads are
 //! copied exactly once off the socket, with no intermediate buffer.
 
-use crate::coordinator::attention_server::HeadsRequest;
+use crate::coordinator::attention_server::{AttentionServerStats, HeadsRequest, SubmitRoute};
 use std::io::{self, Read, Write};
 use std::sync::Arc;
 
 /// `"SKNF"` — the protocol magic.
 pub const MAGIC: u32 = 0x534B_4E46;
-/// Protocol version (bumped on any frame-layout change).
-pub const VERSION: u16 = 1;
+/// Protocol version (bumped on any frame-layout change).  Version 2:
+/// submit flags byte (mask + head-range route), open flags byte
+/// (explicit stream id), ping/pong heartbeats, stats polling, and the
+/// seed/shard fields in the config frame.
+pub const VERSION: u16 = 2;
 /// Upper bound on one frame's `len` field (256 MiB): anything larger is
 /// a corrupt or hostile length prefix, not a payload this server shapes.
 pub const MAX_FRAME_BYTES: u32 = 1 << 28;
@@ -69,11 +89,21 @@ pub const KIND_APPEND: u8 = 0x03;
 pub const KIND_PREFILL: u8 = 0x04;
 pub const KIND_QUERY: u8 = 0x05;
 pub const KIND_CLOSE: u8 = 0x06;
+pub const KIND_PING: u8 = 0x07;
+pub const KIND_STATS: u8 = 0x08;
 // server→client frame kinds
 pub const KIND_CONFIG: u8 = 0x80;
 pub const KIND_OUTPUT: u8 = 0x81;
 pub const KIND_ERROR: u8 = 0x82;
 pub const KIND_OPEN_OK: u8 = 0x83;
+pub const KIND_PONG: u8 = 0x84;
+pub const KIND_STATS_OK: u8 = 0x85;
+
+// submit-frame flag bits
+const SUBMIT_FLAG_MASK: u8 = 0x01;
+const SUBMIT_FLAG_ROUTE: u8 = 0x02;
+// open-frame flag bits
+const OPEN_FLAG_STREAM: u8 = 0x01;
 
 /// The server shape a connection learns from the handshake's config
 /// frame — everything a client needs to build well-formed payloads.
@@ -85,6 +115,14 @@ pub struct ServerInfo {
     pub seq: u32,
     pub head_dim: u32,
     pub max_batch: u32,
+    /// The server's base RNG seed — the shard coordinator cross-checks
+    /// that every shard derives the same per-head streams.
+    pub seed: u64,
+    /// This server's shard index when launched with `--shard-index`
+    /// (`shard_count == 0` means "not a shard").
+    pub shard_index: u32,
+    /// Declared shard-ring size (`--shard-of`); 0 when standalone.
+    pub shard_count: u32,
 }
 
 impl ServerInfo {
@@ -103,10 +141,14 @@ impl ServerInfo {
 #[derive(Debug)]
 pub enum ClientFrame {
     /// A one-shot batched request (`id` echoed by the output frame).
-    Submit { id: u64, req: HeadsRequest },
+    /// `route`, when present, restricts computation to a head range at
+    /// an explicit seed (the shard scatter path).
+    Submit { id: u64, req: HeadsRequest, route: Option<SubmitRoute> },
     /// Open a decode stream; answered by an open-ok frame carrying the
-    /// server-assigned stream id.
-    Open { id: u64, repilot_stride: u32 },
+    /// stream id.  `stream`, when present, is a caller-chosen id the
+    /// server must adopt (the coordinator keeps shard-side stream ids
+    /// aligned with its own seed-bearing global ids).
+    Open { id: u64, repilot_stride: u32, stream: Option<u64> },
     /// Append one token to a stream (no success reply; failures answer
     /// with an error frame).
     Append { id: u64, stream: u64, k: Arc<[f32]>, v: Arc<[f32]> },
@@ -116,6 +158,11 @@ pub enum ClientFrame {
     Query { id: u64, stream: u64, rows: u32, q: Arc<[f32]> },
     /// Drop a stream's server-side state (no reply).
     Close { id: u64, stream: u64 },
+    /// Liveness probe; answered with a pong frame from the read loop
+    /// (never queued behind engine work).
+    Ping { id: u64 },
+    /// Poll a live stats snapshot; answered with a stats-ok frame.
+    Stats { id: u64 },
 }
 
 /// One decoded server→client frame.
@@ -128,8 +175,29 @@ pub enum ServerFrame {
     /// A typed rejection: `code` 0 is a wire-level error, `1..` are
     /// [`ServeError::code`](crate::coordinator::attention_server::ServeError::code)s.
     Error { id: u64, code: u8, message: String },
-    /// A stream was opened; `stream` is the server-assigned id.
+    /// A stream was opened; `stream` is the adopted id.
     OpenOk { id: u64, stream: u64 },
+    /// Reply to a ping.
+    Pong { id: u64 },
+    /// Reply to a stats poll: a live snapshot (means computed over the
+    /// work so far; counters monotone).
+    StatsOk { id: u64, stats: AttentionServerStats },
+}
+
+/// Result of [`read_client_frame_or_idle`]: a decoded frame, or a
+/// recoverable read-timeout tick that fired between frames.
+#[derive(Debug)]
+pub enum ClientRead {
+    Frame(ClientFrame),
+    Idle,
+}
+
+/// Result of [`read_server_frame_or_idle`]: the client-side mirror of
+/// [`ClientRead`].
+#[derive(Debug)]
+pub enum ServerRead {
+    Frame(ServerFrame),
+    Idle,
 }
 
 /// Decode failure modes; see the [module docs](self) for the
@@ -283,22 +351,67 @@ fn frame(kind: u8, body: Vec<u8>) -> Vec<u8> {
 }
 
 pub fn encode_submit(id: u64, req: &HeadsRequest) -> Vec<u8> {
+    encode_submit_routed(id, req, None)
+}
+
+/// [`encode_submit`] with an optional head-range route (flags bit 1):
+/// the body is `id, flags, [head_lo, head_hi, seed,] q, k, v, [mask]`.
+pub fn encode_submit_routed(id: u64, req: &HeadsRequest, route: Option<SubmitRoute>) -> Vec<u8> {
+    encode_submit_sliced(id, &req.q, &req.k, &req.v, req.mask.as_deref(), route)
+}
+
+/// [`encode_submit_routed`] over raw slices — the shard coordinator
+/// scatters a client request by slicing its `Arc<[f32]>` slabs in
+/// place (head-major layout makes every head range contiguous), so
+/// sub-request bytes go straight from the client's slabs to the shard
+/// socket with no intermediate copies.
+pub fn encode_submit_sliced(
+    id: u64,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: Option<&[f32]>,
+    route: Option<SubmitRoute>,
+) -> Vec<u8> {
     let mut body = Vec::new();
     put_u64(&mut body, id);
-    body.push(u8::from(req.mask.is_some()));
-    put_slab(&mut body, &req.q);
-    put_slab(&mut body, &req.k);
-    put_slab(&mut body, &req.v);
-    if let Some(mask) = &req.mask {
+    let mut flags = 0u8;
+    if mask.is_some() {
+        flags |= SUBMIT_FLAG_MASK;
+    }
+    if route.is_some() {
+        flags |= SUBMIT_FLAG_ROUTE;
+    }
+    body.push(flags);
+    if let Some(r) = route {
+        put_u32(&mut body, r.head_lo);
+        put_u32(&mut body, r.head_hi);
+        put_u64(&mut body, r.seed);
+    }
+    put_slab(&mut body, q);
+    put_slab(&mut body, k);
+    put_slab(&mut body, v);
+    if let Some(mask) = mask {
         put_slab(&mut body, mask);
     }
     frame(KIND_SUBMIT, body)
 }
 
 pub fn encode_open(id: u64, repilot_stride: u32) -> Vec<u8> {
+    encode_open_with_stream(id, repilot_stride, None)
+}
+
+/// [`encode_open`] with an optional caller-chosen stream id (flags
+/// bit 0): the body is `id, repilot_stride, flags, [stream]`.
+pub fn encode_open_with_stream(id: u64, repilot_stride: u32, stream: Option<u64>) -> Vec<u8> {
     let mut body = Vec::new();
     put_u64(&mut body, id);
     put_u32(&mut body, repilot_stride);
+    let flags = if stream.is_some() { OPEN_FLAG_STREAM } else { 0 };
+    body.push(flags);
+    if let Some(s) = stream {
+        put_u64(&mut body, s);
+    }
     frame(KIND_OPEN, body)
 }
 
@@ -337,6 +450,58 @@ pub fn encode_close(id: u64, stream: u64) -> Vec<u8> {
     frame(KIND_CLOSE, body)
 }
 
+pub fn encode_ping(id: u64) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    frame(KIND_PING, body)
+}
+
+pub fn encode_pong(id: u64) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    frame(KIND_PONG, body)
+}
+
+pub fn encode_stats_req(id: u64) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    frame(KIND_STATS, body)
+}
+
+/// The 15 monotone counters of a stats snapshot, in wire order.
+fn stats_counters(s: &AttentionServerStats) -> [u64; 15] {
+    [
+        s.requests,
+        s.batches,
+        s.steps,
+        s.rejected,
+        s.stream_appends,
+        s.stream_queries,
+        s.kv_hit_blocks,
+        s.kv_alloc_blocks,
+        s.kv_evicted_blocks,
+        s.kv_resident_blocks,
+        s.kv_resident_bytes,
+        s.kv_demoted_blocks,
+        s.kv_spilled_blocks,
+        s.kv_spill_hits,
+        s.kv_spill_corrupt,
+    ]
+}
+
+pub fn encode_stats_ok(id: u64, stats: &AttentionServerStats) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    for c in stats_counters(stats) {
+        put_u64(&mut body, c);
+    }
+    for m in [stats.mean_queue_ms, stats.mean_occupancy, stats.mean_step_occupancy, stats.mean_batch_ms]
+    {
+        put_u64(&mut body, m.to_bits());
+    }
+    frame(KIND_STATS_OK, body)
+}
+
 pub fn encode_config(info: &ServerInfo) -> Vec<u8> {
     let mut body = Vec::new();
     let name = info.method.as_bytes();
@@ -347,6 +512,9 @@ pub fn encode_config(info: &ServerInfo) -> Vec<u8> {
     put_u32(&mut body, info.seq);
     put_u32(&mut body, info.head_dim);
     put_u32(&mut body, info.max_batch);
+    put_u64(&mut body, info.seed);
+    put_u32(&mut body, info.shard_index);
+    put_u32(&mut body, info.shard_count);
     frame(KIND_CONFIG, body)
 }
 
@@ -435,20 +603,79 @@ fn drain<R: Read, T>(body: &mut io::Take<&mut R>, id: u64, reason: &str) -> Resu
 /// Decode one client→server frame.
 pub fn read_client_frame(r: &mut impl Read) -> Result<ClientFrame, FrameError> {
     let (kind, body_len) = read_header(r)?;
+    read_client_body(r, kind, body_len)
+}
+
+/// [`read_client_frame`] for sockets with a read timeout: a timeout (or
+/// `WouldBlock`) **before the first byte of the length prefix** is the
+/// recoverable [`ClientRead::Idle`] — the connection is quiet, not
+/// broken.  A timeout anywhere inside a frame still reports
+/// [`FrameError::Fatal`]: the peer died mid-write and the stream can
+/// never resynchronize.
+pub fn read_client_frame_or_idle(r: &mut impl Read) -> Result<ClientRead, FrameError> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                return Err(FrameError::Fatal(if got == 0 {
+                    "connection closed".into()
+                } else {
+                    "stream ended inside a frame header".into()
+                }))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e)
+                if got == 0
+                    && matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+            {
+                return Ok(ClientRead::Idle)
+            }
+            Err(e) => return Err(fatal_io("reading frame length", e)),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len == 0 {
+        return Err(FrameError::Fatal("zero-length frame".into()));
+    }
+    if len > MAX_FRAME_BYTES {
+        return Err(FrameError::Fatal(format!("frame length {len} exceeds cap {MAX_FRAME_BYTES}")));
+    }
+    let kind = read_u8(r).map_err(|e| fatal_io("reading frame kind", e))?;
+    read_client_body(r, kind, len - 1).map(ClientRead::Frame)
+}
+
+fn read_client_body(r: &mut impl Read, kind: u8, body_len: u32) -> Result<ClientFrame, FrameError> {
     match kind {
         KIND_SUBMIT => with_body(r, body_len, |b| {
             let id = read_u64(b)?;
-            let has_mask = read_u8(b)? != 0;
+            let flags = read_u8(b)?;
+            let route = if flags & SUBMIT_FLAG_ROUTE != 0 {
+                let head_lo = read_u32(b)?;
+                let head_hi = read_u32(b)?;
+                let seed = read_u64(b)?;
+                Some(SubmitRoute { head_lo, head_hi, seed })
+            } else {
+                None
+            };
             let q = read_slab(b, MAX_FRAME_BYTES / 4)?;
             let k = read_slab(b, MAX_FRAME_BYTES / 4)?;
             let v = read_slab(b, MAX_FRAME_BYTES / 4)?;
-            let mask = if has_mask { Some(read_slab(b, MAX_FRAME_BYTES / 4)?) } else { None };
-            Ok((id, ClientFrame::Submit { id, req: HeadsRequest { q, k, v, mask } }))
+            let mask = if flags & SUBMIT_FLAG_MASK != 0 {
+                Some(read_slab(b, MAX_FRAME_BYTES / 4)?)
+            } else {
+                None
+            };
+            Ok((id, ClientFrame::Submit { id, req: HeadsRequest { q, k, v, mask }, route }))
         }),
         KIND_OPEN => with_body(r, body_len, |b| {
             let id = read_u64(b)?;
             let repilot_stride = read_u32(b)?;
-            Ok((id, ClientFrame::Open { id, repilot_stride }))
+            let flags = read_u8(b)?;
+            let stream =
+                if flags & OPEN_FLAG_STREAM != 0 { Some(read_u64(b)?) } else { None };
+            Ok((id, ClientFrame::Open { id, repilot_stride, stream }))
         }),
         KIND_APPEND => with_body(r, body_len, |b| {
             let id = read_u64(b)?;
@@ -477,6 +704,14 @@ pub fn read_client_frame(r: &mut impl Read) -> Result<ClientFrame, FrameError> {
             let stream = read_u64(b)?;
             Ok((id, ClientFrame::Close { id, stream }))
         }),
+        KIND_PING => with_body(r, body_len, |b| {
+            let id = read_u64(b)?;
+            Ok((id, ClientFrame::Ping { id }))
+        }),
+        KIND_STATS => with_body(r, body_len, |b| {
+            let id = read_u64(b)?;
+            Ok((id, ClientFrame::Stats { id }))
+        }),
         other => Err(FrameError::Fatal(format!("unknown client frame kind {other:#04x}"))),
     }
 }
@@ -484,6 +719,49 @@ pub fn read_client_frame(r: &mut impl Read) -> Result<ClientFrame, FrameError> {
 /// Decode one server→client frame.
 pub fn read_server_frame(r: &mut impl Read) -> Result<ServerFrame, FrameError> {
     let (kind, body_len) = read_header(r)?;
+    read_server_body(r, kind, body_len)
+}
+
+/// [`read_server_frame`] for sockets with a read timeout — the client
+/// mirror of [`read_client_frame_or_idle`], with the same
+/// between-frames-recoverable / mid-frame-fatal split.  `NetClient`
+/// uses the idle tick to send a ping probe instead of blocking forever
+/// on a dead server.
+pub fn read_server_frame_or_idle(r: &mut impl Read) -> Result<ServerRead, FrameError> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                return Err(FrameError::Fatal(if got == 0 {
+                    "connection closed".into()
+                } else {
+                    "stream ended inside a frame header".into()
+                }))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e)
+                if got == 0
+                    && matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+            {
+                return Ok(ServerRead::Idle)
+            }
+            Err(e) => return Err(fatal_io("reading frame length", e)),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len == 0 {
+        return Err(FrameError::Fatal("zero-length frame".into()));
+    }
+    if len > MAX_FRAME_BYTES {
+        return Err(FrameError::Fatal(format!("frame length {len} exceeds cap {MAX_FRAME_BYTES}")));
+    }
+    let kind = read_u8(r).map_err(|e| fatal_io("reading frame kind", e))?;
+    read_server_body(r, kind, len - 1).map(ServerRead::Frame)
+}
+
+fn read_server_body(r: &mut impl Read, kind: u8, body_len: u32) -> Result<ServerFrame, FrameError> {
     match kind {
         KIND_CONFIG => with_body(r, body_len, |b| {
             let name_len = read_u16(b)? as usize;
@@ -496,7 +774,23 @@ pub fn read_server_frame(r: &mut impl Read) -> Result<ServerFrame, FrameError> {
             let seq = read_u32(b)?;
             let head_dim = read_u32(b)?;
             let max_batch = read_u32(b)?;
-            Ok((0, ServerFrame::Config(ServerInfo { method, d, heads, seq, head_dim, max_batch })))
+            let seed = read_u64(b)?;
+            let shard_index = read_u32(b)?;
+            let shard_count = read_u32(b)?;
+            Ok((
+                0,
+                ServerFrame::Config(ServerInfo {
+                    method,
+                    d,
+                    heads,
+                    seq,
+                    head_dim,
+                    max_batch,
+                    seed,
+                    shard_index,
+                    shard_count,
+                }),
+            ))
         }),
         KIND_OUTPUT => with_body(r, body_len, |b| {
             let id = read_u64(b)?;
@@ -517,6 +811,43 @@ pub fn read_server_frame(r: &mut impl Read) -> Result<ServerFrame, FrameError> {
             let stream = read_u64(b)?;
             Ok((id, ServerFrame::OpenOk { id, stream }))
         }),
+        KIND_PONG => with_body(r, body_len, |b| {
+            let id = read_u64(b)?;
+            Ok((id, ServerFrame::Pong { id }))
+        }),
+        KIND_STATS_OK => with_body(r, body_len, |b| {
+            let id = read_u64(b)?;
+            let mut c = [0u64; 15];
+            for slot in c.iter_mut() {
+                *slot = read_u64(b)?;
+            }
+            let mean_queue_ms = f64::from_bits(read_u64(b)?);
+            let mean_occupancy = f64::from_bits(read_u64(b)?);
+            let mean_step_occupancy = f64::from_bits(read_u64(b)?);
+            let mean_batch_ms = f64::from_bits(read_u64(b)?);
+            let stats = AttentionServerStats {
+                requests: c[0],
+                batches: c[1],
+                steps: c[2],
+                rejected: c[3],
+                stream_appends: c[4],
+                stream_queries: c[5],
+                kv_hit_blocks: c[6],
+                kv_alloc_blocks: c[7],
+                kv_evicted_blocks: c[8],
+                kv_resident_blocks: c[9],
+                kv_resident_bytes: c[10],
+                kv_demoted_blocks: c[11],
+                kv_spilled_blocks: c[12],
+                kv_spill_hits: c[13],
+                kv_spill_corrupt: c[14],
+                mean_queue_ms,
+                mean_occupancy,
+                mean_step_occupancy,
+                mean_batch_ms,
+            };
+            Ok((id, ServerFrame::StatsOk { id, stats }))
+        }),
         other => Err(FrameError::Fatal(format!("unknown server frame kind {other:#04x}"))),
     }
 }
@@ -534,12 +865,13 @@ mod tests {
     fn submit_roundtrips_with_and_without_mask() {
         let req = HeadsRequest::from_vecs(vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]);
         match roundtrip_client(encode_submit(7, &req)).unwrap() {
-            ClientFrame::Submit { id, req: got } => {
+            ClientFrame::Submit { id, req: got, route } => {
                 assert_eq!(id, 7);
                 assert_eq!(&got.q[..], &[1.0, 2.0]);
                 assert_eq!(&got.k[..], &[3.0, 4.0]);
                 assert_eq!(&got.v[..], &[5.0, 6.0]);
                 assert!(got.mask.is_none());
+                assert!(route.is_none());
             }
             other => panic!("wrong frame: {other:?}"),
         }
@@ -553,10 +885,121 @@ mod tests {
     }
 
     #[test]
+    fn routed_submit_roundtrips_with_and_without_mask() {
+        let route = SubmitRoute { head_lo: 2, head_hi: 5, seed: 0xDEAD_BEEF_u64 };
+        let req = HeadsRequest::from_vecs(vec![1.0], vec![2.0], vec![3.0]);
+        match roundtrip_client(encode_submit_routed(9, &req, Some(route))).unwrap() {
+            ClientFrame::Submit { id, req: got, route: got_route } => {
+                assert_eq!(id, 9);
+                assert_eq!(got_route, Some(route));
+                assert!(got.mask.is_none());
+                assert_eq!(&got.q[..], &[1.0]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        let masked = req.with_mask(vec![0.0]);
+        match roundtrip_client(encode_submit_routed(10, &masked, Some(route))).unwrap() {
+            ClientFrame::Submit { req: got, route: got_route, .. } => {
+                assert_eq!(got_route, Some(route));
+                assert_eq!(&got.mask.unwrap()[..], &[0.0]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn open_with_explicit_stream_roundtrips() {
+        match roundtrip_client(encode_open_with_stream(6, 4, Some(17))).unwrap() {
+            ClientFrame::Open { id, repilot_stride, stream } => {
+                assert_eq!((id, repilot_stride, stream), (6, 4, Some(17)));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn heartbeat_and_stats_frames_roundtrip() {
+        match roundtrip_client(encode_ping(21)).unwrap() {
+            ClientFrame::Ping { id } => assert_eq!(id, 21),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match roundtrip_client(encode_stats_req(22)).unwrap() {
+            ClientFrame::Stats { id } => assert_eq!(id, 22),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match read_server_frame(&mut Cursor::new(encode_pong(23))).unwrap() {
+            ServerFrame::Pong { id } => assert_eq!(id, 23),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        let stats = AttentionServerStats {
+            requests: 5,
+            batches: 3,
+            steps: 7,
+            rejected: 1,
+            stream_appends: 40,
+            stream_queries: 11,
+            kv_hit_blocks: 2,
+            kv_resident_bytes: 1 << 20,
+            mean_step_occupancy: 0.625,
+            mean_batch_ms: 1.75,
+            ..Default::default()
+        };
+        match read_server_frame(&mut Cursor::new(encode_stats_ok(24, &stats))).unwrap() {
+            ServerFrame::StatsOk { id, stats: got } => {
+                assert_eq!(id, 24);
+                assert_eq!(got.requests, 5);
+                assert_eq!(got.steps, 7);
+                assert_eq!(got.stream_appends, 40);
+                assert_eq!(got.kv_resident_bytes, 1 << 20);
+                assert_eq!(got.mean_step_occupancy.to_bits(), 0.625f64.to_bits());
+                assert_eq!(got.mean_batch_ms.to_bits(), 1.75f64.to_bits());
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    /// A reader that yields `WouldBlock` once the scripted bytes run
+    /// out — the shape of a socket with a read timeout and no traffic.
+    struct TimeoutAfter {
+        bytes: Cursor<Vec<u8>>,
+    }
+
+    impl Read for TimeoutAfter {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            match self.bytes.read(buf) {
+                Ok(0) => Err(io::Error::new(io::ErrorKind::WouldBlock, "idle")),
+                other => other,
+            }
+        }
+    }
+
+    #[test]
+    fn idle_timeout_between_frames_is_recoverable_but_mid_frame_is_fatal() {
+        // no bytes at all: Idle
+        let mut quiet = TimeoutAfter { bytes: Cursor::new(Vec::new()) };
+        assert!(matches!(read_client_frame_or_idle(&mut quiet), Ok(ClientRead::Idle)));
+        // a whole frame then silence: the frame decodes, the next read is Idle
+        let mut one = TimeoutAfter { bytes: Cursor::new(encode_close(3, 4)) };
+        match read_client_frame_or_idle(&mut one).unwrap() {
+            ClientRead::Frame(ClientFrame::Close { id, stream }) => {
+                assert_eq!((id, stream), (3, 4));
+            }
+            other => panic!("wrong read: {other:?}"),
+        }
+        assert!(matches!(read_client_frame_or_idle(&mut one), Ok(ClientRead::Idle)));
+        // silence striking inside a frame is fatal — the stream can
+        // never resynchronize
+        let full = encode_close(5, 6);
+        let mut torn = TimeoutAfter { bytes: Cursor::new(full[..full.len() - 3].to_vec()) };
+        assert!(matches!(read_client_frame_or_idle(&mut torn), Err(FrameError::Fatal(_))));
+    }
+
+    #[test]
     fn stream_frames_roundtrip() {
         match roundtrip_client(encode_open(1, 3)).unwrap() {
-            ClientFrame::Open { id, repilot_stride } => {
+            ClientFrame::Open { id, repilot_stride, stream } => {
                 assert_eq!((id, repilot_stride), (1, 3));
+                assert!(stream.is_none());
             }
             other => panic!("wrong frame: {other:?}"),
         }
@@ -596,6 +1039,9 @@ mod tests {
             seq: 512,
             head_dim: 32,
             max_batch: 8,
+            seed: 99,
+            shard_index: 1,
+            shard_count: 4,
         };
         match read_server_frame(&mut Cursor::new(encode_config(&info))).unwrap() {
             ServerFrame::Config(got) => assert_eq!(got, info),

@@ -1,0 +1,310 @@
+//! One coordinator→shard connection: a wire-protocol socket with an
+//! asynchronous reader thread and a pending-completion map.
+//!
+//! Unlike [`NetClient`](crate::coordinator::net::NetClient) (strictly
+//! call-and-wait), a [`ShardConn`] must keep many requests in flight —
+//! one scattered client request fans sub-requests across every shard —
+//! so replies are matched to completions by request id on a dedicated
+//! reader thread.  Every registered completion is guaranteed exactly
+//! one verdict: a matching reply, or `ServeError::ShardDown` when the
+//! connection dies ([`ShardConn::kill`] drains the map).  That verdict
+//! discipline is what makes coordinator failover hang-free.
+//!
+//! Liveness: any received frame stamps `last_rx`.  The coordinator's
+//! heartbeat thread sends pings and kills connections whose `last_rx`
+//! goes stale; a closed or errored socket kills the connection
+//! immediately from the reader thread.
+
+use crate::coordinator::attention_server::{AttentionServerStats, ReplyTo, ServeError, SubmitRoute};
+use crate::coordinator::net::wire::{
+    encode_append, encode_close, encode_open_with_stream, encode_ping, encode_prefill,
+    encode_query, encode_stats_req, encode_submit_sliced, read_hello, read_server_frame,
+    write_hello, ServerFrame, ServerInfo,
+};
+use crate::coordinator::net::NetTimeouts;
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// What a registered request id is waiting for.
+enum Expect {
+    /// An `Output` (or `Error`) frame — fired with the slab or the
+    /// relayed [`ServeError::Remote`].
+    Output(ReplyTo),
+    /// An `OpenOk` ack.  The receiver half may already be dropped
+    /// (fire-and-forget opens); the send then fails silently.
+    Open(mpsc::Sender<Result<u64, ServeError>>),
+    /// A `StatsOk` snapshot.
+    Stats(mpsc::Sender<Result<AttentionServerStats, ServeError>>),
+}
+
+impl Expect {
+    /// Deliver a terminal failure (connection death / drain).
+    fn fail(self, e: ServeError) {
+        match self {
+            Expect::Output(reply) => reply.send(Err(e)),
+            Expect::Open(tx) => {
+                let _ = tx.send(Err(e));
+            }
+            Expect::Stats(tx) => {
+                let _ = tx.send(Err(e));
+            }
+        }
+    }
+}
+
+/// A live (until killed) connection to one engine shard.
+pub(crate) struct ShardConn {
+    addr: String,
+    info: ServerInfo,
+    sock: TcpStream,
+    w: Mutex<BufWriter<TcpStream>>,
+    pending: Mutex<HashMap<u64, Expect>>,
+    next_id: AtomicU64,
+    last_rx: Mutex<Instant>,
+    dead: AtomicBool,
+}
+
+impl ShardConn {
+    /// Connect, handshake, and start the reader thread.
+    pub(crate) fn connect(addr: &str, timeouts: NetTimeouts) -> io::Result<Arc<ShardConn>> {
+        let mut last_err: Option<io::Error> = None;
+        let mut sock = None;
+        for resolved in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&resolved, timeouts.connect) {
+                Ok(s) => {
+                    sock = Some(s);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let Some(sock) = sock else {
+            return Err(last_err.unwrap_or_else(|| {
+                io::Error::new(io::ErrorKind::InvalidInput, "address resolved to nothing")
+            }));
+        };
+        let _ = sock.set_nodelay(true);
+        // the handshake is the one blocking read on this thread: bound it
+        sock.set_read_timeout(Some(timeouts.read))?;
+        sock.set_write_timeout(Some(timeouts.write))?;
+        let mut w = BufWriter::new(sock.try_clone()?);
+        write_hello(&mut w)?;
+        w.flush()?;
+        let mut r = BufReader::new(sock.try_clone()?);
+        read_hello(&mut r).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+        let info = match read_server_frame(&mut r) {
+            Ok(ServerFrame::Config(info)) => info,
+            other => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("expected config frame from shard, got {other:?}"),
+                ))
+            }
+        };
+        // after the handshake the reader blocks indefinitely; death is
+        // signalled by socket close (ours via kill(), theirs via EOF)
+        sock.set_read_timeout(None)?;
+        let conn = Arc::new(ShardConn {
+            addr: addr.to_string(),
+            info,
+            sock,
+            w: Mutex::new(w),
+            pending: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(0),
+            last_rx: Mutex::new(Instant::now()),
+            dead: AtomicBool::new(false),
+        });
+        {
+            let conn = Arc::clone(&conn);
+            std::thread::spawn(move || reader_loop(r, conn));
+        }
+        Ok(conn)
+    }
+
+    /// The shard's address as configured.
+    pub(crate) fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The shape the shard advertised at handshake.
+    pub(crate) fn info(&self) -> &ServerInfo {
+        &self.info
+    }
+
+    /// True once the connection has been killed (socket death, missed
+    /// heartbeats, or coordinator shutdown).
+    pub(crate) fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    /// Instant of the most recently received frame.
+    pub(crate) fn last_rx(&self) -> Instant {
+        *self.last_rx.lock().unwrap()
+    }
+
+    fn down(&self) -> ServeError {
+        ServeError::ShardDown { shard: self.addr.clone() }
+    }
+
+    /// Mark dead, close the socket, and fail every pending completion
+    /// with `ShardDown`.  Idempotent; callable from any thread.
+    pub(crate) fn kill(&self) {
+        if self.dead.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let _ = self.sock.shutdown(Shutdown::Both);
+        let drained: Vec<Expect> = {
+            let mut pending = self.pending.lock().unwrap();
+            pending.drain().map(|(_, e)| e).collect()
+        };
+        for expect in drained {
+            expect.fail(self.down());
+        }
+    }
+
+    /// Register `expect` under a fresh id and send `frame(id)`.  On a
+    /// dead connection or send failure the expectation fails with
+    /// `ShardDown` (never silently dropped).
+    fn send_expect(
+        &self,
+        expect: Option<Expect>,
+        frame: impl FnOnce(u64) -> Vec<u8>,
+    ) -> Result<(), ServeError> {
+        if self.is_dead() {
+            if let Some(e) = expect {
+                e.fail(self.down());
+            }
+            return Err(self.down());
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if let Some(e) = expect {
+            self.pending.lock().unwrap().insert(id, e);
+        }
+        let bytes = frame(id);
+        let sent = {
+            let mut w = self.w.lock().unwrap();
+            w.write_all(&bytes).and_then(|_| w.flush())
+        };
+        if sent.is_err() {
+            // kill() drains the expectation we just registered
+            self.kill();
+            return Err(self.down());
+        }
+        Ok(())
+    }
+
+    /// Scatter one sub-request: slices of the client's slabs plus the
+    /// head-range route.  `reply` gets the `[width, seq, head_dim]`
+    /// output slab or a typed error.
+    pub(crate) fn submit_sliced(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        mask: Option<&[f32]>,
+        route: SubmitRoute,
+        reply: ReplyTo,
+    ) {
+        let _ = self.send_expect(Some(Expect::Output(reply)), |id| {
+            encode_submit_sliced(id, q, k, v, mask, Some(route))
+        });
+    }
+
+    /// Open a stream under the coordinator's global id.  Fire-and-forget:
+    /// the wire preserves op order, so ops queued behind the open apply
+    /// after it; the `OpenOk` ack is consumed and discarded.
+    pub(crate) fn open_stream(&self, stream: u64, repilot_stride: u32) -> Result<(), ServeError> {
+        let (tx, _rx) = mpsc::channel();
+        self.send_expect(Some(Expect::Open(tx)), |id| {
+            encode_open_with_stream(id, repilot_stride, Some(stream))
+        })
+    }
+
+    /// Forward one single-token append.  Fire-and-forget (the engine
+    /// answers only on error, and those surface on the stream's next
+    /// query).
+    pub(crate) fn append(&self, stream: u64, k: &[f32], v: &[f32]) -> Result<(), ServeError> {
+        self.send_expect(None, |id| encode_append(id, stream, k, v))
+    }
+
+    /// Forward one bulk append.  Fire-and-forget like
+    /// [`append`](Self::append).
+    pub(crate) fn prefill(
+        &self,
+        stream: u64,
+        tokens: u32,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<(), ServeError> {
+        self.send_expect(None, |id| encode_prefill(id, stream, tokens, k, v))
+    }
+
+    /// Forward one query; `reply` gets the output slab or a typed error.
+    pub(crate) fn query(&self, stream: u64, rows: u32, q: &[f32], reply: ReplyTo) {
+        let _ = self.send_expect(Some(Expect::Output(reply)), |id| {
+            encode_query(id, stream, rows, q)
+        });
+    }
+
+    /// Forward a stream close (fire-and-forget).
+    pub(crate) fn close_stream(&self, stream: u64) -> Result<(), ServeError> {
+        self.send_expect(None, |id| encode_close(id, stream))
+    }
+
+    /// Send a heartbeat ping; the pong stamps `last_rx`.
+    pub(crate) fn ping(&self) {
+        let _ = self.send_expect(None, encode_ping);
+    }
+
+    /// Poll the shard's live stats (blocking; bounded by connection
+    /// death — a killed connection fails the wait with `ShardDown`).
+    pub(crate) fn stats(&self) -> Result<AttentionServerStats, ServeError> {
+        let (tx, rx) = mpsc::channel();
+        self.send_expect(Some(Expect::Stats(tx)), encode_stats_req)?;
+        rx.recv().unwrap_or_else(|_| Err(self.down()))
+    }
+}
+
+/// Match replies to pending completions until the connection dies.
+fn reader_loop(mut r: BufReader<TcpStream>, conn: Arc<ShardConn>) {
+    loop {
+        let frame = match read_server_frame(&mut r) {
+            Ok(f) => f,
+            Err(_) => break, // EOF, socket error, or desync: the shard is gone
+        };
+        *conn.last_rx.lock().unwrap() = Instant::now();
+        let take = |id: u64| conn.pending.lock().unwrap().remove(&id);
+        match frame {
+            ServerFrame::Output { id, out } => {
+                if let Some(Expect::Output(reply)) = take(id) {
+                    reply.send(Ok(out));
+                }
+            }
+            ServerFrame::Error { id, code, message } => match take(id) {
+                Some(expect) => expect.fail(ServeError::Remote { code, message }),
+                // an unregistered id is a fire-and-forget op's error
+                // report (append/prefill/close): the coordinator
+                // validated shapes up front, so this is a semantic race
+                // that the stream's next reply-bearing op will surface
+                None => {}
+            },
+            ServerFrame::OpenOk { id, stream } => {
+                if let Some(Expect::Open(tx)) = take(id) {
+                    let _ = tx.send(Ok(stream));
+                }
+            }
+            ServerFrame::StatsOk { id, stats } => {
+                if let Some(Expect::Stats(tx)) = take(id) {
+                    let _ = tx.send(Ok(stats));
+                }
+            }
+            ServerFrame::Pong { .. } => {} // last_rx already stamped
+            ServerFrame::Config(_) => break, // protocol violation: desync
+        }
+    }
+    conn.kill();
+}

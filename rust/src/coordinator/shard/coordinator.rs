@@ -1,0 +1,524 @@
+//! The coordinator proper: scatter/gather over one-shot head ranges,
+//! prefix-affinity stream homing, heartbeat failover, and cluster
+//! stats aggregation.  See the [module docs](super) for the invariants.
+
+use super::conn::ShardConn;
+use super::ring::{prefix_hash, HashRing};
+use crate::coordinator::attention_server::{
+    batch_seed, validate_request, AttentionServerConfig, AttentionServerStats, HeadsRequest,
+    ReplyTo, ServeError, StreamOp, SubmitRoute,
+};
+use crate::coordinator::net::{NetTimeouts, ServerInfo, WireBackend, WireLane};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Default heartbeat cadence (`skein coordinator --heartbeat-ms`).
+pub const DEFAULT_HEARTBEAT: Duration = Duration::from_millis(1000);
+
+/// Missed-heartbeat multiplier: a shard silent for `HEARTBEAT_MISSES ×
+/// heartbeat` is declared dead (its socket is also watched directly, so
+/// a *closed* shard is detected immediately — this bound only covers
+/// silent partitions).
+pub const HEARTBEAT_MISSES: u32 = 3;
+
+/// Where a decode stream lives.
+enum StreamRoute {
+    /// Opened but no tokens ingested yet — homing waits for the first
+    /// chunk so the prompt prefix can drive placement.
+    Unrouted { repilot_stride: u32 },
+    /// Homed on one shard (whole stream: per-stream KV state cannot be
+    /// split the way per-head one-shots can).
+    Homed { shard: Arc<ShardConn> },
+}
+
+/// Shared state behind every lane, the backend, and the heartbeat
+/// thread.
+struct CoordShared {
+    /// Shape/validation config assembled from the shard handshakes;
+    /// `validate_request` against this keeps coordinator rejections
+    /// byte-identical to the engine's.
+    cfg: AttentionServerConfig,
+    /// All shards ever added; dead ones stay (flagged) so ring indices
+    /// remain stable.
+    shards: RwLock<Vec<Arc<ShardConn>>>,
+    ring: RwLock<HashRing>,
+    streams: Mutex<HashMap<u64, StreamRoute>>,
+    next_stream: AtomicU64,
+    /// One-shot request counter: request `r` is pinned to
+    /// `batch_seed(cfg.seed, r)`, mirroring a single engine executing
+    /// call-and-wait submissions as singleton batches.
+    next_request: AtomicU64,
+    stop: AtomicBool,
+    timeouts: NetTimeouts,
+}
+
+impl CoordShared {
+    fn no_live(&self) -> ServeError {
+        ServeError::ShardDown { shard: "no live shards".into() }
+    }
+
+    /// Snapshot of the live connections.
+    fn live(&self) -> Vec<Arc<ShardConn>> {
+        self.shards.read().unwrap().iter().filter(|c| !c.is_dead()).cloned().collect()
+    }
+
+    /// Rebuild the ring over the currently-live shard set.
+    fn rebuild_ring(&self) {
+        let shards = self.shards.read().unwrap();
+        let ring = HashRing::build(
+            shards
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| !c.is_dead())
+                .map(|(i, c)| (i, c.addr())),
+        );
+        *self.ring.write().unwrap() = ring;
+    }
+
+    /// The live shard owning `key`, rebuilding the ring past any shard
+    /// that died since the last rebuild.
+    fn home_for(&self, key: u64) -> Result<Arc<ShardConn>, ServeError> {
+        for _ in 0..4 {
+            let Some(idx) = self.ring.read().unwrap().route(key) else {
+                return Err(self.no_live());
+            };
+            let conn = Arc::clone(&self.shards.read().unwrap()[idx]);
+            if !conn.is_dead() {
+                return Ok(conn);
+            }
+            self.rebuild_ring();
+        }
+        Err(self.no_live())
+    }
+
+    /// Scatter heads `[lo, hi)` of one request across the live shards
+    /// and gather the contiguous head-major output.  Every sub-request
+    /// carries the same pinned `seed`, so shard-side batching cannot
+    /// perturb results; any sub-failure answers `reply` with the first
+    /// typed error (never a hang: every registered completion gets
+    /// exactly one verdict, `ShardDown` included).
+    fn scatter(&self, req: &HeadsRequest, lo: usize, hi: usize, seed: u64, reply: ReplyTo) {
+        let live = self.live();
+        if live.is_empty() {
+            reply.send(Err(self.no_live()));
+            return;
+        }
+        let per_head = self.cfg.seq * self.cfg.head_dim;
+        let width = hi - lo;
+        let parts = live.len().min(width);
+        let base = width / parts;
+        let extra = width % parts;
+        struct Gather {
+            out: Vec<f32>,
+            remaining: usize,
+            reply: Option<ReplyTo>,
+        }
+        let gather = Arc::new(Mutex::new(Gather {
+            out: vec![0.0; width * per_head],
+            remaining: parts,
+            reply: Some(reply),
+        }));
+        let mut cursor = lo;
+        for (i, shard) in live.iter().take(parts).enumerate() {
+            let sub_lo = cursor;
+            let sub_hi = sub_lo + base + usize::from(i < extra);
+            cursor = sub_hi;
+            let off = (sub_lo - lo) * per_head;
+            let g = Arc::clone(&gather);
+            let cb = ReplyTo::from_fn(move |r| {
+                let mut g = g.lock().unwrap();
+                match r {
+                    Ok(part) => {
+                        let end = off + part.len();
+                        if end <= g.out.len() {
+                            g.out[off..end].copy_from_slice(&part);
+                        }
+                        g.remaining -= 1;
+                        if g.remaining == 0 {
+                            if let Some(reply) = g.reply.take() {
+                                let out = std::mem::take(&mut g.out);
+                                reply.send(Ok(out));
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        if let Some(reply) = g.reply.take() {
+                            reply.send(Err(e));
+                        }
+                    }
+                }
+            });
+            // head-major layout: a head range is one contiguous slice
+            // of each client slab — scatter slices in place, no copies
+            shard.submit_sliced(
+                &req.q[sub_lo * per_head..sub_hi * per_head],
+                &req.k[sub_lo * per_head..sub_hi * per_head],
+                &req.v[sub_lo * per_head..sub_hi * per_head],
+                req.mask.as_deref(),
+                SubmitRoute { head_lo: sub_lo as u32, head_hi: sub_hi as u32, seed },
+                cb,
+            );
+        }
+    }
+
+    /// Merge the live shards' stats snapshots (see
+    /// [`AttentionServerStats::merge_weighted`]).
+    fn merged_stats(&self) -> AttentionServerStats {
+        let mut per_shard = Vec::new();
+        for conn in self.live() {
+            if let Ok(s) = conn.stats() {
+                per_shard.push(s);
+            }
+        }
+        AttentionServerStats::merge_weighted(&per_shard)
+    }
+
+    fn open_stream_entry(&self, id: u64, repilot_stride: u32) {
+        self.streams.lock().unwrap().insert(id, StreamRoute::Unrouted { repilot_stride });
+    }
+
+    /// Home an unrouted stream on the prefix hash of its first chunk.
+    fn home_stream(
+        &self,
+        stream: u64,
+        repilot_stride: u32,
+        first_k: &[f32],
+    ) -> Result<Arc<ShardConn>, ServeError> {
+        let shard = self.home_for(prefix_hash(first_k))?;
+        shard.open_stream(stream, repilot_stride)?;
+        self.streams
+            .lock()
+            .unwrap()
+            .insert(stream, StreamRoute::Homed { shard: Arc::clone(&shard) });
+        Ok(shard)
+    }
+
+    /// The home shard for an ingest/query op, homing on first contact.
+    /// `first_k` supplies the routing key when the stream is still
+    /// unrouted (`None` for ops that cannot home, e.g. query).
+    fn stream_shard(
+        &self,
+        stream: u64,
+        first_k: Option<&[f32]>,
+    ) -> Result<Arc<ShardConn>, ServeError> {
+        let route = {
+            let streams = self.streams.lock().unwrap();
+            match streams.get(&stream) {
+                None => return Err(ServeError::UnknownStream(stream)),
+                Some(StreamRoute::Unrouted { repilot_stride }) => Err(*repilot_stride),
+                Some(StreamRoute::Homed { shard }) => Ok(Arc::clone(shard)),
+            }
+        };
+        match route {
+            Ok(shard) => {
+                if shard.is_dead() {
+                    Err(ServeError::ShardDown { shard: shard.addr().to_string() })
+                } else {
+                    Ok(shard)
+                }
+            }
+            Err(stride) => match first_k {
+                Some(k) => self.home_stream(stream, stride, k),
+                // a query against a stream with no tokens yet: the
+                // engine's verdict, answered without touching a shard
+                None => Err(ServeError::EmptyStream(stream)),
+            },
+        }
+    }
+}
+
+/// One connection's dispatch surface over the coordinator.
+struct CoordLane(Arc<CoordShared>);
+
+impl WireLane for CoordLane {
+    fn submit(&self, req: HeadsRequest, route: Option<SubmitRoute>, reply: ReplyTo) {
+        let s = &self.0;
+        if let Err(e) = validate_request(&s.cfg, &req, route.as_ref()) {
+            reply.send(Err(e));
+            return;
+        }
+        // an unrouted client submit gets the seed a single engine
+        // would have derived for it; a routed one (client chaining
+        // through coordinators) keeps its pinned seed and range
+        let (lo, hi, seed) = match route {
+            None => {
+                let r = s.next_request.fetch_add(1, Ordering::Relaxed);
+                (0, s.cfg.heads, batch_seed(s.cfg.seed, r))
+            }
+            Some(r) => (r.head_lo as usize, r.head_hi as usize, r.seed),
+        };
+        s.scatter(&req, lo, hi, seed, reply);
+    }
+
+    fn open_stream(&self, repilot_stride: usize, explicit: Option<u64>) -> u64 {
+        let s = &self.0;
+        let id = match explicit {
+            Some(id) => {
+                s.next_stream.fetch_max(id + 1, Ordering::Relaxed);
+                id
+            }
+            None => s.next_stream.fetch_add(1, Ordering::Relaxed),
+        };
+        s.open_stream_entry(id, repilot_stride as u32);
+        id
+    }
+
+    fn stream_op(&self, stream: u64, op: StreamOp, err: Option<ReplyTo>) {
+        let s = &self.0;
+        let fail = |err: Option<ReplyTo>, e: ServeError| {
+            if let Some(err) = err {
+                err.send(Err(e));
+            }
+        };
+        match op {
+            StreamOp::Open { repilot_stride } => {
+                s.next_stream.fetch_max(stream + 1, Ordering::Relaxed);
+                s.open_stream_entry(stream, repilot_stride as u32);
+            }
+            StreamOp::Append { k, v } => match s.stream_shard(stream, Some(&k)) {
+                Ok(shard) => {
+                    if let Err(e) = shard.append(stream, &k, &v) {
+                        fail(err, e);
+                    }
+                }
+                Err(e) => fail(err, e),
+            },
+            StreamOp::Prefill { k, v, tokens } => match s.stream_shard(stream, Some(&k)) {
+                Ok(shard) => {
+                    if let Err(e) = shard.prefill(stream, tokens as u32, &k, &v) {
+                        fail(err, e);
+                    }
+                }
+                Err(e) => fail(err, e),
+            },
+            StreamOp::Query { q, rows, reply } => match s.stream_shard(stream, None) {
+                Ok(shard) => shard.query(stream, rows as u32, &q, reply),
+                Err(e) => reply.send(Err(e)),
+            },
+            StreamOp::Close => {
+                let route = s.streams.lock().unwrap().remove(&stream);
+                if let Some(StreamRoute::Homed { shard }) = route {
+                    if !shard.is_dead() {
+                        let _ = shard.close_stream(stream);
+                    }
+                }
+            }
+        }
+    }
+
+    fn stats(&self) -> Option<AttentionServerStats> {
+        Some(self.0.merged_stats())
+    }
+}
+
+struct CoordBackend(Arc<CoordShared>);
+
+impl WireBackend for CoordBackend {
+    fn info(&self) -> ServerInfo {
+        let s = &self.0;
+        ServerInfo {
+            method: s.cfg.method.clone(),
+            d: s.cfg.d as u32,
+            heads: s.cfg.heads as u32,
+            seq: s.cfg.seq as u32,
+            head_dim: s.cfg.head_dim as u32,
+            max_batch: s.cfg.max_batch as u32,
+            seed: s.cfg.seed,
+            shard_index: 0,
+            shard_count: s.live().len() as u32,
+        }
+    }
+
+    fn lane(&self) -> Box<dyn WireLane> {
+        Box::new(CoordLane(Arc::clone(&self.0)))
+    }
+}
+
+/// A running shard coordinator.  Plug [`backend`](Self::backend) into
+/// [`serve_backend`](crate::coordinator::net::serve_backend) to accept
+/// client traffic, or drive [`lane`](Self::lane) in-process (tests).
+pub struct Coordinator {
+    shared: Arc<CoordShared>,
+    heartbeat: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Connect to every shard, verify they advertise one consistent
+    /// shape and seed, and start the heartbeat thread.
+    pub fn start(shard_addrs: &[String], heartbeat: Duration) -> Result<Coordinator> {
+        Self::start_with(shard_addrs, heartbeat, NetTimeouts::default())
+    }
+
+    /// [`start`](Self::start) with explicit socket deadlines.
+    pub fn start_with(
+        shard_addrs: &[String],
+        heartbeat: Duration,
+        timeouts: NetTimeouts,
+    ) -> Result<Coordinator> {
+        if shard_addrs.is_empty() {
+            bail!("a coordinator needs at least one shard address");
+        }
+        let mut conns = Vec::with_capacity(shard_addrs.len());
+        for addr in shard_addrs {
+            let conn = ShardConn::connect(addr, timeouts)
+                .with_context(|| format!("connecting to shard {addr}"))?;
+            conns.push(conn);
+        }
+        let first = conns[0].info().clone();
+        for conn in &conns[1..] {
+            let info = conn.info();
+            if info.method != first.method
+                || info.d != first.d
+                || info.heads != first.heads
+                || info.seq != first.seq
+                || info.head_dim != first.head_dim
+                || info.seed != first.seed
+            {
+                bail!(
+                    "shard {} advertises a different shape/seed than {}",
+                    conn.addr(),
+                    conns[0].addr()
+                );
+            }
+        }
+        let cfg = AttentionServerConfig {
+            method: first.method.clone(),
+            d: first.d as usize,
+            heads: first.heads as usize,
+            seq: first.seq as usize,
+            head_dim: first.head_dim as usize,
+            max_batch: first.max_batch as usize,
+            max_wait: Duration::ZERO,
+            seed: first.seed,
+            workers: None,
+            queue_depth: 0,
+            kv: None,
+        };
+        let shared = Arc::new(CoordShared {
+            cfg,
+            shards: RwLock::new(conns),
+            ring: RwLock::new(HashRing::default()),
+            streams: Mutex::new(HashMap::new()),
+            next_stream: AtomicU64::new(0),
+            next_request: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            timeouts,
+        });
+        shared.rebuild_ring();
+        let heartbeat_join = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || heartbeat_loop(shared, heartbeat))
+        };
+        Ok(Coordinator { shared, heartbeat: Some(heartbeat_join) })
+    }
+
+    /// The cluster's advertised shape (what clients see at handshake).
+    pub fn info(&self) -> ServerInfo {
+        CoordBackend(Arc::clone(&self.shared)).info()
+    }
+
+    /// A backend for [`serve_backend`](crate::coordinator::net::serve_backend).
+    pub fn backend(&self) -> Arc<dyn WireBackend> {
+        Arc::new(CoordBackend(Arc::clone(&self.shared)))
+    }
+
+    /// An in-process dispatch lane (what a wire connection would get).
+    pub fn lane(&self) -> Box<dyn WireLane> {
+        Box::new(CoordLane(Arc::clone(&self.shared)))
+    }
+
+    /// Connect one more shard and extend the ring.  Only streams whose
+    /// ring arc the newcomer takes over re-home (consistent hashing);
+    /// with a shared `--kv-spill-dir`, re-homed prompts warm-restart
+    /// from the spill manifests the previous owner archived.
+    pub fn add_shard(&self, addr: &str) -> Result<()> {
+        let conn = ShardConn::connect(addr, self.shared.timeouts)
+            .with_context(|| format!("connecting to shard {addr}"))?;
+        let info = conn.info();
+        let cfg = &self.shared.cfg;
+        if info.method != cfg.method
+            || info.heads as usize != cfg.heads
+            || info.seq as usize != cfg.seq
+            || info.head_dim as usize != cfg.head_dim
+            || info.seed != cfg.seed
+        {
+            bail!("shard {addr} advertises a different shape/seed than the cluster");
+        }
+        self.shared.shards.write().unwrap().push(conn);
+        self.shared.rebuild_ring();
+        Ok(())
+    }
+
+    /// Live (heartbeat-responsive) shard count.
+    pub fn live_shards(&self) -> usize {
+        self.shared.live().len()
+    }
+
+    /// Aggregated cluster stats (see
+    /// [`AttentionServerStats::merge_weighted`]).
+    pub fn stats(&self) -> AttentionServerStats {
+        self.shared.merged_stats()
+    }
+
+    /// Stop the heartbeat and disconnect every shard.  Pending
+    /// completions fail typed (`ShardDown`) — never a hang.
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(join) = self.heartbeat.take() {
+            let _ = join.join();
+        }
+        for conn in self.shared.shards.read().unwrap().iter() {
+            conn.kill();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+/// Ping live shards, declare silent ones dead, keep the ring fresh.
+fn heartbeat_loop(shared: Arc<CoordShared>, every: Duration) {
+    let stale_after = every * HEARTBEAT_MISSES;
+    // short sleep slices so shutdown is prompt even with long cadences
+    let slice = every.min(Duration::from_millis(50));
+    let mut elapsed = Duration::ZERO;
+    loop {
+        std::thread::sleep(slice);
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        elapsed += slice;
+        if elapsed < every {
+            continue;
+        }
+        elapsed = Duration::ZERO;
+        let shards = shared.shards.read().unwrap().clone();
+        for conn in &shards {
+            if conn.is_dead() {
+                continue;
+            }
+            if conn.last_rx().elapsed() > stale_after {
+                conn.kill(); // silent partition: missed heartbeats
+            } else {
+                conn.ping();
+            }
+        }
+        // reader threads kill closed connections on their own; re-ring
+        // whenever the live set no longer matches what the ring covers
+        let live = shards.iter().filter(|c| !c.is_dead()).count();
+        if shared.ring.read().unwrap().len() != live * super::ring::VNODES {
+            shared.rebuild_ring();
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! Shard coordinator: scale the serving layer across engine processes.
+//!
+//! A [`Coordinator`] accepts client traffic on the same wire protocol
+//! as a single `skein serve --listen` worker
+//! ([`net`](crate::coordinator::net) — clients cannot tell the
+//! difference) and spreads the work over N engine shards, each an
+//! ordinary `skein serve --listen` process:
+//!
+//! - **One-shot requests scatter by head range.**  Heads `[0, H)` are
+//!   split contiguously across the live shards; because slabs are
+//!   head-major, each sub-request is a zero-copy *slice* of the
+//!   client's `Arc<[f32]>` slabs, written straight to the shard socket
+//!   ([`wire::encode_submit_sliced`](crate::coordinator::net::wire::encode_submit_sliced)).
+//!   Every sub-request carries a
+//!   [`SubmitRoute`](crate::coordinator::attention_server::SubmitRoute)
+//!   pinning the global
+//!   head offset and the request seed
+//!   (`batch_seed(coordinator_seed, request_index)`), so head `h`
+//!   computes with `Rng::new(seed ^ h_global)` exactly as one process
+//!   would have — the gathered output is bitwise identical no matter
+//!   how the shards batch the fragments.
+//! - **Decode streams route whole, by prompt prefix.**  Per-stream KV
+//!   state cannot be split the way stateless one-shots can, so a
+//!   stream is homed on the consistent-hash [`ring`] keyed by the
+//!   FNV-1a hash of its first ingested K chunk.  Repeats of a prompt
+//!   land on the same shard, keeping that shard's `PrefixIndex` and
+//!   tiered KV cache hot; when the ring changes, only the dead/new
+//!   shard's arc re-homes.  Re-homed prompts warm-restart from the
+//!   content-addressed spill manifests when the shards share a
+//!   `--kv-spill-dir`.
+//! - **Failure degrades typed, never hangs.**  A heartbeat thread
+//!   pings every shard; a closed socket kills its connection
+//!   immediately and silence past the miss budget kills it too.
+//!   Killing a connection drains every in-flight completion with
+//!   [`ServeError::ShardDown`](crate::coordinator::attention_server::ServeError),
+//!   so scattered requests and homed streams answer with a typed error
+//!   while the ring re-forms around the survivors.
+//!
+//! Surfaced as `skein coordinator --shards H1:P1,H2:P2,... --listen
+//! ADDR`; shards advertise their placement via `skein serve --shard-of
+//! N --shard-index I`.  All shards must run the same shape and
+//! `--seed` as each other (checked at connect from the config
+//! handshake).  See `DESIGN.md` §7 and `rust/tests/sharding.rs`.
+
+mod conn;
+mod coordinator;
+pub mod ring;
+
+pub use coordinator::{Coordinator, DEFAULT_HEARTBEAT, HEARTBEAT_MISSES};

@@ -1,0 +1,140 @@
+//! Consistent-hash ring for prefix-affinity stream routing.
+//!
+//! Each live shard owns [`VNODES`] points on a 64-bit ring (FNV-1a of
+//! `"{addr}#{vnode}"`); a stream's home shard is the first point at or
+//! after its prompt-prefix hash, wrapping around.  Virtual nodes keep
+//! the load split near-uniform with few shards, and consistent hashing
+//! keeps it *stable*: when a shard joins or dies, only the streams
+//! whose arc it owned move, so the surviving shards' `PrefixIndex` and
+//! tiered KV caches stay hot for everything else.
+
+/// Virtual nodes per shard — enough to flatten the split across a
+/// handful of shards without making ring rebuilds expensive.
+pub const VNODES: usize = 64;
+
+/// 64-bit FNV-1a. Small, dependency-free, and plenty uniform for ring
+/// placement (this is a load-spreading hash, not a security boundary).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Hash a stream's first ingested K chunk — the prompt prefix — into a
+/// ring key.  Bit-exact over the f32 payload, so the same prompt
+/// always routes to the same shard while the ring holds still.
+pub fn prefix_hash(k: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in k {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// The ring itself: sorted `(point, shard index)` pairs over the live
+/// shard set.  Rebuilt from scratch on membership change (cheap at
+/// [`VNODES`] × shard-count points).
+#[derive(Clone, Debug, Default)]
+pub struct HashRing {
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    /// Build from `(shard index, address)` pairs — pass only live
+    /// shards; the index is what [`route`](Self::route) returns.
+    pub fn build<'a>(shards: impl IntoIterator<Item = (usize, &'a str)>) -> Self {
+        let mut points = Vec::new();
+        for (idx, addr) in shards {
+            for v in 0..VNODES {
+                points.push((fnv1a(format!("{addr}#{v}").as_bytes()), idx));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points }
+    }
+
+    /// The shard owning `key`: first point at or after it, wrapping.
+    /// `None` only when the ring is empty (no live shards).
+    pub fn route(&self, key: u64) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let i = self.points.partition_point(|&(p, _)| p < key);
+        let (_, shard) = self.points[if i == self.points.len() { 0 } else { i }];
+        Some(shard)
+    }
+
+    /// Number of ring points (vnodes × live shards).
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True when no live shard backs the ring.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_deterministic_and_total() {
+        let ring = HashRing::build([(0, "a:1"), (1, "b:2"), (2, "c:3")]);
+        assert_eq!(ring.len(), 3 * VNODES);
+        for key in [0u64, 1, u64::MAX, 0xDEAD_BEEF, fnv1a(b"prompt")] {
+            let first = ring.route(key).unwrap();
+            assert_eq!(ring.route(key).unwrap(), first);
+            assert!(first < 3);
+        }
+    }
+
+    #[test]
+    fn removing_a_shard_only_moves_its_own_streams() {
+        let full = HashRing::build([(0, "a:1"), (1, "b:2"), (2, "c:3")]);
+        let without_2 = HashRing::build([(0, "a:1"), (1, "b:2")]);
+        let mut moved = 0;
+        let mut kept = 0;
+        for i in 0..10_000u64 {
+            let key = fnv1a(&i.to_le_bytes());
+            let before = full.route(key).unwrap();
+            let after = without_2.route(key).unwrap();
+            if before == 2 {
+                assert!(after < 2, "shard 2's streams must land on a survivor");
+            } else if before == after {
+                kept += 1;
+            } else {
+                moved += 1;
+            }
+        }
+        // consistent hashing: streams not homed on the dead shard stay put
+        assert_eq!(moved, 0, "{moved} streams moved that were not on the dead shard ({kept} kept)");
+    }
+
+    #[test]
+    fn vnodes_spread_load_roughly_evenly() {
+        let ring = HashRing::build([(0, "a:1"), (1, "b:2"), (2, "c:3"), (3, "d:4")]);
+        let mut counts = [0usize; 4];
+        for i in 0..40_000u64 {
+            counts[ring.route(fnv1a(&i.to_le_bytes())).unwrap()] += 1;
+        }
+        for &c in &counts {
+            // 4 shards × 64 vnodes: each shard within a factor ~2 of fair share
+            assert!(c > 40_000 / 8 && c < 40_000 / 2, "skewed split: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn prefix_hash_is_bit_exact() {
+        let a = prefix_hash(&[1.0, 2.0, -0.0]);
+        assert_eq!(a, prefix_hash(&[1.0, 2.0, -0.0]));
+        assert_ne!(a, prefix_hash(&[1.0, 2.0, 0.0]), "-0.0 and 0.0 differ bitwise");
+    }
+}

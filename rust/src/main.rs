@@ -7,7 +7,9 @@
 //!   flops    — print the Table-5 FLOPs model
 //!   serve    — run the batched inference service demo (or, with
 //!              --listen ADDR, a TCP serving front end)
-//!   client   — drive a `serve --listen` front end over TCP
+//!   coordinator — front a cluster of `serve --listen` engine shards:
+//!              scatter head ranges, gather replies, same wire protocol
+//!   client   — drive a `serve --listen` (or coordinator) front end over TCP
 //!   inspect  — dump an artifact manifest summary
 //!
 //! Run `skein help` for flags.
@@ -41,6 +43,7 @@ fn run() -> Result<()> {
         Some("fig1") => cmd_fig1(&args),
         Some("flops") => cmd_flops(&args),
         Some("serve") => cmd_serve(&args),
+        Some("coordinator") => cmd_coordinator(&args),
         Some("client") => cmd_client(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("help") | None => {
@@ -78,7 +81,16 @@ fn print_help() {
                     --listen ADDR serves the same engine over TCP instead of\n\
                     running the demo loop (e.g. --listen 127.0.0.1:7878;\n\
                     [--serve-secs N] stops after N seconds, default: forever;\n\
-                    [--queue-depth N] bounds in-flight work)\n\
+                    [--queue-depth N] bounds in-flight work;\n\
+                    [--shard-of N --shard-index I] annotate this worker as\n\
+                    shard I of an N-shard ring for a coordinator)\n\
+           coordinator --shards H1:P1,H2:P2,... --listen ADDR\n\
+                    front a cluster of `serve --listen` engine shards on the\n\
+                    same wire protocol: one-shots scatter by head range and\n\
+                    gather bitwise, decode streams home by prompt-prefix\n\
+                    consistent hashing; [--heartbeat-ms N] failover cadence\n\
+                    (default 1000); [--serve-secs N] as for serve.  Shards\n\
+                    must share shape and --seed (checked at connect)\n\
            client   --addr HOST:PORT [--requests N] [--window W] (pipelined\n\
                     one-shot submits, W in flight), or\n\
                     --stream [--tokens N] [--repilot-stride S] (decode loop);\n\
@@ -299,17 +311,29 @@ fn cmd_serve_listen(
     addr: &str,
 ) -> Result<()> {
     use skeinformer::coordinator::{attention_server, net};
+    use std::sync::Arc;
 
     let serve_secs = args.get_u64("serve-secs", 0)?;
+    let shard_count = args.get_u64("shard-of", 0)? as u32;
+    let shard_index = args.get_u64("shard-index", 0)? as u32;
+    if shard_count > 0 && shard_index >= shard_count {
+        bail!("--shard-index {shard_index} out of range for --shard-of {shard_count}");
+    }
     let handle = attention_server::start(cfg.clone())?;
-    let server = net::serve(&handle, addr).with_context(|| format!("bind {addr}"))?;
+    let backend = Arc::new(net::EngineBackend::new(&handle, shard_index, shard_count));
+    let server = net::serve_backend(backend, addr).with_context(|| format!("bind {addr}"))?;
     eprintln!(
-        "serving method={} B<={} H={} n={} p={} on {}{}",
+        "serving method={} B<={} H={} n={} p={}{} on {}{}",
         cfg.method,
         cfg.max_batch,
         cfg.heads,
         cfg.seq,
         cfg.head_dim,
+        if shard_count > 0 {
+            format!(" (shard {shard_index}/{shard_count})")
+        } else {
+            String::new()
+        },
         server.local_addr(),
         if serve_secs > 0 { format!(" for {serve_secs}s") } else { " until killed".into() }
     );
@@ -332,6 +356,86 @@ fn cmd_serve_listen(
         stats.stream_queries,
         stats.mean_batch_ms
     );
+    Ok(())
+}
+
+/// `skein coordinator --shards H1:P1,... --listen ADDR`: front a cluster
+/// of `serve --listen` engine shards.  Clients connect to the
+/// coordinator exactly as they would to a single worker; one-shot
+/// requests scatter by head range (gathered bitwise), decode streams
+/// home on shards by prompt-prefix consistent hashing, and dead shards
+/// degrade to typed errors while the ring re-forms.  On a timed exit
+/// the coordinator prints cluster-aggregated stats (counters summed,
+/// means weighted per shard).
+fn cmd_coordinator(args: &Args) -> Result<()> {
+    use skeinformer::coordinator::{net, shard};
+
+    let shards = args
+        .get_list("shards")
+        .context("usage: skein coordinator --shards H1:P1,H2:P2,... --listen ADDR")?;
+    let listen = args.get("listen").context("coordinator needs --listen ADDR")?;
+    let heartbeat = Duration::from_millis(
+        args.get_u64("heartbeat-ms", shard::DEFAULT_HEARTBEAT.as_millis() as u64)?.max(1),
+    );
+    let serve_secs = args.get_u64("serve-secs", 0)?;
+    let coord = shard::Coordinator::start(&shards, heartbeat)?;
+    let info = coord.info();
+    let server = net::serve_backend(coord.backend(), listen)
+        .with_context(|| format!("bind {listen}"))?;
+    eprintln!(
+        "coordinating {} shard(s): method={} B<={} H={} n={} p={} seed={} on {}{}",
+        coord.live_shards(),
+        info.method,
+        info.max_batch,
+        info.heads,
+        info.seq,
+        info.head_dim,
+        info.seed,
+        server.local_addr(),
+        if serve_secs > 0 { format!(" for {serve_secs}s") } else { " until killed".into() }
+    );
+    if serve_secs == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(serve_secs));
+    server.stop();
+    let live = coord.live_shards();
+    let stats = coord.stats();
+    coord.shutdown();
+    println!(
+        "cluster served {} requests across {} live shard(s) — batches={} steps={} \
+         step-occupancy={:.2} rejected={} appends={} queries={} engine {:.1} ms/batch \
+         (queue {:.1} ms)",
+        stats.requests,
+        live,
+        stats.batches,
+        stats.steps,
+        stats.mean_step_occupancy,
+        stats.rejected,
+        stats.stream_appends,
+        stats.stream_queries,
+        stats.mean_batch_ms,
+        stats.mean_queue_ms
+    );
+    println!(
+        "kv cache: hit-blocks={} alloc-blocks={} evicted={} resident={} ({:.1} KiB KV)",
+        stats.kv_hit_blocks,
+        stats.kv_alloc_blocks,
+        stats.kv_evicted_blocks,
+        stats.kv_resident_blocks,
+        stats.kv_resident_bytes as f64 / 1024.0
+    );
+    if stats.kv_demoted_blocks + stats.kv_spilled_blocks + stats.kv_spill_hits > 0 {
+        println!(
+            "kv tiers: demoted={} spilled={} spill-hits={} spill-corrupt={}",
+            stats.kv_demoted_blocks,
+            stats.kv_spilled_blocks,
+            stats.kv_spill_hits,
+            stats.kv_spill_corrupt
+        );
+    }
     Ok(())
 }
 
