@@ -3,7 +3,7 @@
 # `make artifacts` needs a python environment with jax installed (the L2
 # lowering path); everything else is pure rust and works offline.
 
-.PHONY: artifacts build test test-doc bench stream-bench cache-bench prefill-bench tier-bench net-bench shard-bench shard-smoke fmt clippy doc
+.PHONY: artifacts build test test-doc bench stream-bench cache-bench prefill-bench tier-bench net-bench shard-bench shard-smoke obs-bench fmt clippy doc
 
 artifacts:
 	python3 python/compile/aot.py --out artifacts
@@ -50,17 +50,25 @@ net-bench:
 shard-bench:
 	cargo bench --bench sharding
 
+# telemetry overhead probe: req/s with telemetry off / on / on+live
+# trace+scrape consumer -> reports/telemetry.csv
+obs-bench:
+	cargo bench --bench telemetry_overhead
+
 # quick cluster smoke for CI: two engine shards + a coordinator on
-# loopback, driven by the stock client (one-shots and a decode stream)
+# loopback, driven by the stock client (one-shots and a decode stream);
+# shard 0 exposes /metrics, validated with `skein scrape`
 shard-smoke: build
-	target/release/skein serve --listen 127.0.0.1:7971 --shard-of 2 --shard-index 0 --serve-secs 25 & \
+	target/release/skein serve --listen 127.0.0.1:7971 --shard-of 2 --shard-index 0 \
+	  --metrics-addr 127.0.0.1:7981 --serve-secs 25 & \
 	target/release/skein serve --listen 127.0.0.1:7972 --shard-of 2 --shard-index 1 --serve-secs 25 & \
 	sleep 1; \
 	target/release/skein coordinator --shards 127.0.0.1:7971,127.0.0.1:7972 \
 	  --listen 127.0.0.1:7970 --serve-secs 20 & \
 	sleep 1; \
 	target/release/skein client --addr 127.0.0.1:7970 --requests 32 --window 8 && \
-	target/release/skein client --addr 127.0.0.1:7970 --stream --tokens 32; \
+	target/release/skein client --addr 127.0.0.1:7970 --stream --tokens 32 && \
+	target/release/skein scrape --addr 127.0.0.1:7981; \
 	wait
 
 fmt:

@@ -1,0 +1,180 @@
+//! Telemetry-overhead probe: what span tracing and the metrics
+//! registry cost on the serving hot path (`make obs-bench`).
+//!
+//! Three rows, all submitting the same in-process one-shot workload
+//! (transport-free, so instrumentation cost is maximally visible — any
+//! socket hop would dwarf it):
+//!
+//! * **off** — `--no-telemetry` semantics: every record site is one
+//!   untaken branch, no clock reads.
+//! * **on** — metrics + flight recorder live: two clock reads and a
+//!   ring write per span, histogram `fetch_add`s per sample.
+//! * **on+trace** — as **on**, plus a live consumer thread draining
+//!   the ring (`snapshot`) and rendering the Prometheus exposition
+//!   every 50 ms, the cost a `--metrics-addr` scraper plus
+//!   `--trace-out` drain adds while serving.
+//!
+//! The engine work is identical in every row (same shape, same seeds
+//! by lifetime batch index — telemetry never touches RNG state, pinned
+//! by `rust/tests/telemetry.rs`), so the req/s deltas are pure
+//! instrumentation overhead.
+//!
+//! Emits `reports/telemetry.csv`
+//! (`mode,method,requests,req_s,p50_ms,p95_ms,overhead_pct,spans,dropped`).
+//!
+//! Flags: `--method M` (default skeinformer), `--requests N` (default
+//! 64), `--window W` in-flight (default 8), `--full` (256 requests).
+
+use skeinformer::bench_util::{ascii_table, write_csv};
+use skeinformer::cli::Args;
+use skeinformer::coordinator::attention_server::{self, AttentionServerConfig, HeadsRequest};
+use skeinformer::metrics::Percentiles;
+use skeinformer::obs::ServeTelemetry;
+use skeinformer::rng::Rng;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn cfg(method: &str) -> AttentionServerConfig {
+    AttentionServerConfig {
+        method: method.to_string(),
+        d: 64,
+        heads: 4,
+        seq: 256,
+        head_dim: 32,
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        seed: 0,
+        workers: None,
+        queue_depth: 0,
+        kv: None,
+    }
+}
+
+struct Run {
+    wall: f64,
+    latency_ms: Vec<f64>,
+    spans: u64,
+    dropped: u64,
+}
+
+/// One serving run with the given telemetry bundle; `drain` adds the
+/// live scrape/trace consumer thread.
+fn run(
+    c: &AttentionServerConfig,
+    total: usize,
+    window: usize,
+    obs: Arc<ServeTelemetry>,
+    drain: bool,
+) -> anyhow::Result<Run> {
+    let handle = attention_server::start_with_telemetry(c.clone(), Arc::clone(&obs))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let consumer = drain.then(|| {
+        let obs = Arc::clone(&obs);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut scrapes = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                // what a Prometheus scraper + trace drain cost mid-run
+                let _ = obs.render().len();
+                let _ = obs.recorder().snapshot().len();
+                scrapes += 1;
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            scrapes
+        })
+    });
+
+    let mut rng = Rng::new(100);
+    let mut latency_ms = Vec::new();
+    let mut inflight = VecDeque::new();
+    let t0 = Instant::now();
+    for _ in 0..total {
+        let req = HeadsRequest::random(c.request_elems(), &mut rng);
+        inflight.push_back((handle.submit(req), Instant::now()));
+        if inflight.len() >= window {
+            let (rx, sent) = inflight.pop_front().expect("non-empty window");
+            rx.recv()?;
+            latency_ms.push(sent.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+    while let Some((rx, sent)) = inflight.pop_front() {
+        rx.recv()?;
+        latency_ms.push(sent.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    stop.store(true, Ordering::Relaxed);
+    if let Some(j) = consumer {
+        let scrapes = j.join().map_err(|_| anyhow::anyhow!("consumer thread panicked"))?;
+        eprintln!("  (consumer drained {scrapes} scrape+trace cycles mid-run)");
+    }
+    handle.shutdown()?;
+    Ok(Run { wall, latency_ms, spans: obs.recorder().recorded(), dropped: obs.recorder().dropped() })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let method = args.get_or("method", "skeinformer").to_string();
+    let total = if args.switch("full") { 256 } else { args.get_usize("requests", 64)? };
+    let window = args.get_usize("window", 8)?;
+    let c = cfg(&method);
+    eprintln!(
+        "telemetry-overhead bench: method={method} requests={total} window={window} \
+         shape B<={} H={} n={} p={}",
+        c.max_batch, c.heads, c.seq, c.head_dim
+    );
+
+    let mut table = Vec::new();
+    let mut csv = Vec::new();
+    let mut base_req_s = 0.0f64;
+    for (mode, enabled, drain) in
+        [("off", false, false), ("on", true, false), ("on+trace", true, true)]
+    {
+        let r = run(&c, total, window, ServeTelemetry::new(enabled), drain)?;
+        let served = r.latency_ms.len();
+        let mut lat = Percentiles::default();
+        for &ms in &r.latency_ms {
+            lat.push(ms);
+        }
+        let req_s = served as f64 / r.wall;
+        if mode == "off" {
+            base_req_s = req_s;
+        }
+        // throughput lost vs the kill-switched baseline (negative =
+        // faster than baseline, i.e. noise floor)
+        let overhead_pct = 100.0 * (base_req_s - req_s) / base_req_s;
+        table.push(vec![
+            mode.to_string(),
+            format!("{served}"),
+            format!("{req_s:.1}"),
+            format!("{:.2}", lat.percentile(50.0)),
+            format!("{:.2}", lat.percentile(95.0)),
+            format!("{overhead_pct:+.1}%"),
+            format!("{}", r.spans),
+            format!("{}", r.dropped),
+        ]);
+        csv.push(format!(
+            "{mode},{method},{served},{req_s:.2},{:.3},{:.3},{overhead_pct:.2},{},{}",
+            lat.percentile(50.0),
+            lat.percentile(95.0),
+            r.spans,
+            r.dropped
+        ));
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &["mode", "served", "req/s", "p50 ms", "p95 ms", "overhead", "spans", "dropped"],
+            &table
+        )
+    );
+    write_csv(
+        "reports/telemetry.csv",
+        "mode,method,requests,req_s,p50_ms,p95_ms,overhead_pct,spans,dropped",
+        &csv,
+    )?;
+    eprintln!("rows written to reports/telemetry.csv");
+    Ok(())
+}

@@ -148,6 +148,7 @@ use crate::attention::{
     BatchedAttention, SessionSpec,
 };
 use crate::kvcache::{KvCache, KvCacheConfig, StreamChain, TierLadder};
+use crate::obs::{self, ServeTelemetry, Span};
 use crate::pool;
 use crate::rng::Rng;
 use crate::tensor::{with_default_plan, BatchTensor, MatmulPlan, Matrix};
@@ -610,6 +611,7 @@ struct HandleShared {
     next_stream: AtomicU64,
     next_conn: AtomicU64,
     cfg: AttentionServerConfig,
+    obs: Arc<ServeTelemetry>,
 }
 
 impl HandleShared {
@@ -722,6 +724,13 @@ impl ServerConnection {
     pub(crate) fn cfg(&self) -> &AttentionServerConfig {
         &self.shared.cfg
     }
+
+    /// The server's telemetry bundle — the wire front end snapshots its
+    /// gauges and histograms into the `StatsOk` frame, and its writer
+    /// threads record reply-write spans through it.
+    pub(crate) fn telemetry(&self) -> &Arc<ServeTelemetry> {
+        &self.shared.obs
+    }
 }
 
 /// Client handle to one decode stream on a running server.  Ops sent
@@ -783,7 +792,7 @@ impl StreamHandle {
 }
 
 /// Aggregate serving statistics, reported on shutdown.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct AttentionServerStats {
     pub requests: u64,
     pub batches: u64,
@@ -922,6 +931,14 @@ impl AttentionServerHandle {
         self.conn0().open_stream(repilot_stride)
     }
 
+    /// The telemetry bundle the serve thread records into.  [`start`]
+    /// wires the disabled (no-op) bundle; [`start_with_telemetry`]
+    /// takes an operator-configured one whose registry feeds
+    /// `/metrics` and whose flight recorder feeds `--trace-out`.
+    pub fn telemetry(&self) -> &Arc<ServeTelemetry> {
+        &self.shared.obs
+    }
+
     /// Stop the server and collect stats.  Live [`StreamHandle`]s and
     /// [`ServerConnection`]s do not block shutdown (an explicit sentinel
     /// ends the serve loop); their later ops answer
@@ -941,6 +958,19 @@ impl AttentionServerHandle {
 /// [`AttentionServerHandle::shutdown`] stops it even while
 /// [`StreamHandle`]s are still alive.
 pub fn start(cfg: AttentionServerConfig) -> Result<AttentionServerHandle> {
+    start_with_telemetry(cfg, ServeTelemetry::disabled())
+}
+
+/// As [`start`] with a live telemetry bundle: every serving stage
+/// (admission wait, batch formation, KV ingest/gather, attention
+/// compute) closes spans and histogram samples into `obs` (see
+/// [`crate::obs`]).  Instrumentation reads clocks only — served bytes
+/// are bitwise identical to [`start`]'s (pinned by
+/// `rust/tests/telemetry.rs`).
+pub fn start_with_telemetry(
+    cfg: AttentionServerConfig,
+    obs: Arc<ServeTelemetry>,
+) -> Result<AttentionServerHandle> {
     anyhow::ensure!(
         attention::by_name(&cfg.method, cfg.d).is_some(),
         "unknown attention method {:?}",
@@ -954,8 +984,9 @@ pub fn start(cfg: AttentionServerConfig) -> Result<AttentionServerHandle> {
         next_stream: AtomicU64::new(0),
         next_conn: AtomicU64::new(1),
         cfg: cfg.clone(),
+        obs: Arc::clone(&obs),
     });
-    let join = std::thread::spawn(move || serve_loop(cfg, rx));
+    let join = std::thread::spawn(move || serve_loop(cfg, rx, obs));
     Ok(AttentionServerHandle { shared, join: Some(join) })
 }
 
@@ -1090,9 +1121,14 @@ struct Serve<'a> {
     stats: AttentionServerStats,
     sums: Sums,
     out_cache: Option<BatchTensor>,
+    obs: Arc<ServeTelemetry>,
 }
 
-fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<ServerMsg>) -> AttentionServerStats {
+fn serve_loop(
+    cfg: AttentionServerConfig,
+    rx: mpsc::Receiver<ServerMsg>,
+    obs: Arc<ServeTelemetry>,
+) -> AttentionServerStats {
     let method = attention::by_name(&cfg.method, cfg.d).expect("method validated in start()");
     let mut engine = BatchedAttention::new();
     if let Some(w) = cfg.workers {
@@ -1109,6 +1145,7 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<ServerMsg>) -> Atte
         stats: AttentionServerStats::default(),
         sums: Sums::default(),
         out_cache: None,
+        obs,
     };
 
     let mut shutting_down = false;
@@ -1136,6 +1173,7 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<ServerMsg>) -> Atte
                 && srv.adm.ready() > 0
                 && srv.adm.ready() < cfg.max_batch
             {
+                let t_form = srv.obs.now();
                 let deadline = Instant::now() + cfg.max_wait;
                 while srv.adm.queries() == 0 && srv.adm.ready() < cfg.max_batch {
                     let now = Instant::now();
@@ -1152,6 +1190,8 @@ fn serve_loop(cfg: AttentionServerConfig, rx: mpsc::Receiver<ServerMsg>) -> Atte
                         Err(_) => break, // timeout or disconnect: run what we have
                     }
                 }
+                // batch formation: the wait-for-extra-slots window
+                srv.obs.span(Span::BatchForm, t_form, 0, 0);
             }
         }
         if srv.adm.ready() > 0 {
@@ -1306,7 +1346,10 @@ impl Serve<'_> {
         if k.len() != token_elems || v.len() != token_elems {
             return Err(ServeError::BadShape { what: "append token slab" });
         }
+        let t0 = self.obs.now();
+        let before = (t0 != 0).then(|| self.kv_cache.as_ref().map(|c| c.stats())).flatten();
         let state = self.streams.get_mut(&stream).expect("caller verified the stream");
+        let conn = state.conn;
         if let Some(chain) = &mut state.chain {
             let cache = self.kv_cache.as_mut().expect("stream chain implies a cache");
             cache.append(chain, k, v);
@@ -1318,6 +1361,7 @@ impl Serve<'_> {
             }
         }
         self.stats.stream_appends += 1;
+        self.close_ingest_span(t0, before, conn, stream);
         Ok(())
     }
 
@@ -1334,7 +1378,10 @@ impl Serve<'_> {
         if tokens == 0 || k.len() != tokens * token_elems || v.len() != tokens * token_elems {
             return Err(ServeError::BadShape { what: "prefill chunk slab" });
         }
+        let t0 = self.obs.now();
+        let before = (t0 != 0).then(|| self.kv_cache.as_ref().map(|c| c.stats())).flatten();
         let state = self.streams.get_mut(&stream).expect("caller verified the stream");
+        let conn = state.conn;
         if let Some(chain) = &mut state.chain {
             let cache = self.kv_cache.as_mut().expect("stream chain implies a cache");
             cache.append_chunk(chain, k, v, tokens, cfg.head_dim);
@@ -1353,7 +1400,33 @@ impl Serve<'_> {
             }
         }
         self.stats.stream_appends += tokens as u64;
+        self.close_ingest_span(t0, before, conn, stream);
         Ok(())
+    }
+
+    /// Close a KV-ingest span opened before an append/prefill/dedupe
+    /// write, classifying hit vs miss by the cache counter deltas: no
+    /// fresh block inserts plus at least one dedupe hit means the
+    /// write was absorbed by shared blocks.  Session-only streams (no
+    /// cache) always classify as miss — every byte was new state.
+    fn close_ingest_span(
+        &self,
+        t0: u64,
+        before: Option<crate::kvcache::KvCacheStats>,
+        conn: u64,
+        stream: u64,
+    ) {
+        if t0 == 0 {
+            return;
+        }
+        let hit = match (before, self.kv_cache.as_ref().map(|c| c.stats())) {
+            (Some(b), Some(a)) => {
+                a.alloc_blocks == b.alloc_blocks && a.hit_blocks > b.hit_blocks
+            }
+            _ => false,
+        };
+        let span = if hit { Span::KvIngestHit } else { Span::KvIngestMiss };
+        self.obs.span(span, t0, conn, stream);
     }
 
     /// Re-insert a stream after its query completed, applying deferred
@@ -1401,6 +1474,9 @@ impl Serve<'_> {
     /// Execute one scheduler step: admit up to `max_batch` slots
     /// round-robin, run the one-shot grid and the stream-query grid.
     fn run_step(&mut self) {
+        if self.obs.enabled() {
+            self.obs.g_queue_depth.set(self.adm.ready() as u64);
+        }
         let admitted = self.adm.admit(self.cfg.max_batch);
         debug_assert!(!admitted.is_empty(), "run_step called with an empty queue");
         self.stats.steps += 1;
@@ -1445,13 +1521,26 @@ impl Serve<'_> {
         // shared cache (chunked, per-request chain) so a resubmitted
         // or prompt-shared request materialises its head views from
         // shared blocks; otherwise wrap the client slabs in place
+        let obs = Arc::clone(&self.obs);
         let chains: Option<Vec<StreamChain>> = match self.kv_cache.as_mut() {
             Some(cache) if cache.cfg().batch_dedupe => Some(
                 group
                     .iter()
                     .map(|p| {
+                        let t0 = obs.now();
+                        let before = (t0 != 0).then(|| cache.stats());
                         let mut chain = cache.open_batch_stream();
                         cache.append_chunk(&mut chain, &p.req.k, &p.req.v, cfg.seq, cfg.head_dim);
+                        if let Some(b) = before {
+                            // no fresh inserts and at least one dedupe
+                            // hit = the slab was served from shared
+                            // blocks
+                            let a = cache.stats();
+                            let hit = a.alloc_blocks == b.alloc_blocks && a.hit_blocks > b.hit_blocks;
+                            let span =
+                                if hit { Span::KvIngestHit } else { Span::KvIngestMiss };
+                            obs.span(span, t0, p.conn, 0);
+                        }
                         chain
                     })
                     .collect(),
@@ -1462,14 +1551,25 @@ impl Serve<'_> {
         let any_mask = group.iter().any(|p| p.req.mask.is_some());
         let mut masks =
             if any_mask { Some(Matrix::full(group.len(), cfg.seq, 1.0)) } else { None };
+        let t_adm = self.obs.now();
         for (b, p) in group.iter().enumerate() {
             if let (Some(mm), Some(req_mask)) = (masks.as_mut(), p.req.mask.as_ref()) {
                 mm.set_row(b, &req_mask[..]);
             }
             self.sums.queue_ms += p.enqueued.elapsed().as_secs_f64() * 1e3;
+            if t_adm != 0 {
+                self.obs.span_at(
+                    Span::QueueWait,
+                    obs::start_ns(t_adm, p.enqueued),
+                    t_adm,
+                    p.conn,
+                    0,
+                );
+            }
         }
 
         let t0 = Instant::now();
+        let t_compute = self.obs.now();
         let seed = batch_seed(cfg.seed, self.stats.batches);
         // reuse the output tensor across equal-occupancy batches —
         // with the engine's in-place head writes the steady-state
@@ -1487,6 +1587,7 @@ impl Serve<'_> {
                 let fill = |b: usize, h: usize, km: &mut Matrix, vm: &mut Matrix| {
                     chains[b].gather_head_into(h, cfg.head_dim, km, vm);
                 };
+                let t_gather = self.obs.now();
                 self.engine.run_gather_into(
                     self.method.as_ref(),
                     &q,
@@ -1496,6 +1597,11 @@ impl Serve<'_> {
                     seed,
                     &mut out,
                 );
+                // the per-head gathers run inside the engine's fan-out
+                // (the fill callback), so this span covers the whole
+                // cache-backed compute — it nests inside AttnCompute
+                // and marks the batch as chain-fed in the trace
+                self.obs.span(Span::KvGather, t_gather, 0, 0);
             }
             (None, Some((k, v))) => {
                 self.engine
@@ -1513,6 +1619,7 @@ impl Serve<'_> {
             }
         }
         self.sums.batch_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.obs.span(Span::AttnCompute, t_compute, 0, 0);
 
         let n = group.len();
         for (b, p) in group.into_iter().enumerate() {
@@ -1552,15 +1659,26 @@ impl Serve<'_> {
         let mut masks =
             if any_mask { Some(Matrix::full(group.len(), cfg.seq, 1.0)) } else { None };
         let mut seeds = Vec::with_capacity(group.len());
+        let t_adm = self.obs.now();
         for (b, p) in group.iter().enumerate() {
             if let (Some(mm), Some(req_mask)) = (masks.as_mut(), p.req.mask.as_ref()) {
                 mm.set_row(b, &req_mask[..]);
             }
             seeds.push(p.route.expect("routed group").seed);
             self.sums.queue_ms += p.enqueued.elapsed().as_secs_f64() * 1e3;
+            if t_adm != 0 {
+                self.obs.span_at(
+                    Span::QueueWait,
+                    obs::start_ns(t_adm, p.enqueued),
+                    t_adm,
+                    p.conn,
+                    0,
+                );
+            }
         }
 
         let t0 = Instant::now();
+        let t_compute = self.obs.now();
         let mut out = BatchTensor::zeros(group.len(), width, cfg.seq, cfg.head_dim);
         self.engine.run_seeded_into(
             self.method.as_ref(),
@@ -1573,6 +1691,7 @@ impl Serve<'_> {
             &mut out,
         );
         self.sums.batch_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.obs.span(Span::AttnCompute, t_compute, 0, 0);
 
         let n = group.len();
         for (b, p) in group.into_iter().enumerate() {
@@ -1624,7 +1743,9 @@ impl Serve<'_> {
             });
         }
         if !jobs.is_empty() {
+            let t_compute = self.obs.now();
             self.run_query_grid(&mut jobs);
+            self.obs.span(Span::AttnCompute, t_compute, 0, 0);
         }
         for job in jobs {
             self.stats.stream_queries += 1;
@@ -1645,6 +1766,7 @@ impl Serve<'_> {
         let cfg = self.cfg;
         let head_dim = cfg.head_dim;
         let method = self.method.as_ref();
+        let obs = &self.obs;
         let workers = cfg.workers.unwrap_or_else(pool::pool_size).max(1);
         // mirror the engine's oversubscription policy: when the task
         // grid alone saturates the pool, inner matmuls go single-threaded
@@ -1715,7 +1837,12 @@ impl Serve<'_> {
                     let n = chain.visible_len();
                     let mut k = scratch.matrix(n, head_dim);
                     let mut v = scratch.matrix(n, head_dim);
+                    // per-(stream, head) gather span, recorded from the
+                    // worker thread (the flight recorder's rings are
+                    // per-thread, so this is contention-free)
+                    let t_gather = obs.now();
                     chain.gather_head_into(h, head_dim, &mut k, &mut v);
+                    obs.span(Span::KvGather, t_gather, 0, ctx.stream);
                     let seed = session_seed(stream_seed(cfg.seed, ctx.stream, h as u64), ctx.epoch);
                     let inputs = AttnInputs::new(&q_head, &k, &v).with_seed(seed);
                     with_default_plan(inner_plan, || {
@@ -1778,6 +1905,13 @@ impl Serve<'_> {
             stats.kv_spill_hits = kv.spill_hits;
             stats.kv_spill_corrupt = kv.spill_corrupt;
         }
+        if self.obs.enabled() {
+            // refresh the residency gauges on every snapshot — the
+            // `/metrics` render polls stats first, so scrapes see
+            // current occupancy
+            self.obs.g_kv_resident_blocks.set(stats.kv_resident_blocks);
+            self.obs.g_kv_resident_bytes.set(stats.kv_resident_bytes);
+        }
         stats
     }
 }
@@ -1812,6 +1946,58 @@ enum KvSrc {
     Sessions(pool::SendPtr<Box<dyn AttentionSession>>),
     /// Shared read-only chain view (all heads gather from it).
     Chain(pool::SendPtr<StreamChain>),
+}
+
+/// Render the counter/mean portion of an [`AttentionServerStats`]
+/// snapshot as Prometheus text exposition.  The `/metrics` endpoint
+/// composes this with [`ServeTelemetry::render`]; it lives here rather
+/// than in [`crate::obs`] because the obs layer must not depend on the
+/// serving stack.  The KV residency numbers are deliberately omitted —
+/// the telemetry gauges `skein_kv_resident_blocks` /
+/// `skein_kv_resident_bytes` (refreshed by every stats snapshot) own
+/// those, and one exposition must not name a metric twice.
+pub fn render_stats_prometheus(s: &AttentionServerStats) -> String {
+    let mut out = String::new();
+    let counters = [
+        ("skein_requests_total", s.requests),
+        ("skein_batches_total", s.batches),
+        ("skein_steps_total", s.steps),
+        ("skein_rejected_total", s.rejected),
+        ("skein_stream_appends_total", s.stream_appends),
+        ("skein_stream_queries_total", s.stream_queries),
+        ("skein_kv_hit_blocks_total", s.kv_hit_blocks),
+        ("skein_kv_alloc_blocks_total", s.kv_alloc_blocks),
+        ("skein_kv_evicted_blocks_total", s.kv_evicted_blocks),
+        ("skein_kv_demoted_blocks_total", s.kv_demoted_blocks),
+        ("skein_kv_spilled_blocks_total", s.kv_spilled_blocks),
+        ("skein_kv_spill_hits_total", s.kv_spill_hits),
+        ("skein_kv_spill_corrupt_total", s.kv_spill_corrupt),
+    ];
+    for (name, v) in counters {
+        out.push_str("# TYPE ");
+        out.push_str(name);
+        out.push_str(" counter\n");
+        out.push_str(name);
+        out.push(' ');
+        out.push_str(&v.to_string());
+        out.push('\n');
+    }
+    let gauges = [
+        ("skein_mean_queue_ms", s.mean_queue_ms),
+        ("skein_mean_occupancy", s.mean_occupancy),
+        ("skein_mean_step_occupancy", s.mean_step_occupancy),
+        ("skein_mean_batch_ms", s.mean_batch_ms),
+    ];
+    for (name, v) in gauges {
+        out.push_str("# TYPE ");
+        out.push_str(name);
+        out.push_str(" gauge\n");
+        out.push_str(name);
+        out.push(' ');
+        out.push_str(&v.to_string());
+        out.push('\n');
+    }
+    out
 }
 
 /// Shape-check one one-shot request against the server shape.  A
@@ -1866,6 +2052,33 @@ mod tests {
             workers: None,
             queue_depth: 0,
             kv: None,
+        }
+    }
+
+    #[test]
+    fn telemetry_start_records_serving_spans() {
+        let c = cfg("standard", 2);
+        let obs = ServeTelemetry::new(true);
+        let handle = start_with_telemetry(c.clone(), Arc::clone(&obs)).unwrap();
+        let r1 = handle.submit(HeadsRequest::random(c.request_elems(), &mut Rng::new(1)));
+        assert_eq!(r1.recv().unwrap().len(), c.request_elems());
+        handle.shutdown().unwrap();
+        assert!(obs.h_queue_wait.snapshot().count() >= 1, "queue-wait histo empty");
+        assert!(obs.h_attn_compute.snapshot().count() >= 1, "attn-compute histo empty");
+        assert!(obs.recorder().recorded() >= 2, "flight recorder saw no spans");
+        let text = obs.render();
+        assert!(text.contains("skein_attn_compute_ns_count"));
+    }
+
+    #[test]
+    fn stats_prometheus_render_is_well_formed() {
+        let s = AttentionServerStats { requests: 3, mean_queue_ms: 0.5, ..Default::default() };
+        let text = render_stats_prometheus(&s);
+        assert!(text.contains("# TYPE skein_requests_total counter\nskein_requests_total 3\n"));
+        assert!(text.contains("# TYPE skein_mean_queue_ms gauge\nskein_mean_queue_ms 0.5\n"));
+        // every non-comment line is exactly `name value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad sample line {line:?}");
         }
     }
 

@@ -31,7 +31,7 @@ use super::wire::{
     encode_append, encode_close, encode_open, encode_open_with_stream, encode_ping,
     encode_prefill, encode_query, encode_stats_req, encode_submit, encode_submit_routed,
     read_hello, read_server_frame, read_server_frame_or_idle, write_hello, FrameError,
-    ServerFrame, ServerInfo, ServerRead,
+    ServerFrame, ServerInfo, ServerRead, StatsWire,
 };
 use crate::coordinator::attention_server::{AttentionServerStats, HeadsRequest, SubmitRoute};
 use std::io::{self, BufReader, BufWriter, Write};
@@ -383,12 +383,20 @@ impl NetClient {
         }
     }
 
-    /// Poll the server's live [`AttentionServerStats`] snapshot.
+    /// Poll the server's live [`AttentionServerStats`] snapshot (the
+    /// counter portion of [`stats_full`](Self::stats_full)).
     pub fn stats(&mut self) -> Result<AttentionServerStats, ClientError> {
+        Ok(self.stats_full()?.stats)
+    }
+
+    /// Poll the server's full stats payload: engine counters plus
+    /// telemetry gauge/histogram snapshots and — against a coordinator
+    /// — per-shard health rows.  `skein top` renders this.
+    pub fn stats_full(&mut self) -> Result<StatsWire, ClientError> {
         let id = self.fresh_id();
         self.send(encode_stats_req(id))?;
         match self.read_reply(id)? {
-            ServerFrame::StatsOk { stats, .. } => Ok(stats),
+            ServerFrame::StatsOk { stats, .. } => Ok(*stats),
             other => Err(ClientError::Protocol(format!("expected stats frame, got {other:?}"))),
         }
     }

@@ -30,4 +30,4 @@ pub use server::{
     serve, serve_backend, EngineBackend, NetServer, WireBackend, WireLane, READ_IDLE_BUDGET,
     READ_IDLE_PROBE, WRITER_QUEUE_FRAMES,
 };
-pub use wire::{ServerInfo, MAGIC, MAX_FRAME_BYTES, VERSION};
+pub use wire::{ServerInfo, ShardHealth, StatsWire, MAGIC, MAX_FRAME_BYTES, VERSION};

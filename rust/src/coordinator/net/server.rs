@@ -41,12 +41,13 @@
 use super::wire::{
     encode_config, encode_error, encode_open_ok, encode_output, encode_pong, encode_stats_ok,
     read_client_frame_or_idle, read_hello, write_hello, ClientFrame, ClientRead, FrameError,
-    ServerInfo, WIRE_ERROR_CODE,
+    ServerInfo, StatsWire, WIRE_ERROR_CODE,
 };
 use crate::coordinator::attention_server::{
-    AttentionServerHandle, AttentionServerStats, HeadsRequest, ReplyTo, ServeError,
-    ServerConnection, StreamOp, SubmitRoute,
+    AttentionServerHandle, HeadsRequest, ReplyTo, ServeError, ServerConnection, StreamOp,
+    SubmitRoute,
 };
+use crate::obs::{ServeTelemetry, Span};
 use std::collections::HashSet;
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -77,6 +78,12 @@ pub trait WireBackend: Send + Sync {
     fn info(&self) -> ServerInfo;
     /// A fresh lane for one accepted connection.
     fn lane(&self) -> Box<dyn WireLane>;
+    /// The backend's telemetry bundle, when it has one — the writer
+    /// threads record reply-write spans through it.  `None` (the
+    /// default) wires the front end with no-op telemetry.
+    fn telemetry(&self) -> Option<Arc<ServeTelemetry>> {
+        None
+    }
 }
 
 /// One connection's dispatch surface: everything a wire client can ask
@@ -94,8 +101,9 @@ pub trait WireLane: Send {
     fn open_stream(&self, repilot_stride: usize, explicit: Option<u64>) -> u64;
     /// One raw stream op with an optional error reporter.
     fn stream_op(&self, stream: u64, op: StreamOp, err: Option<ReplyTo>);
-    /// Live stats snapshot, or `None` if the backend is gone.
-    fn stats(&self) -> Option<AttentionServerStats>;
+    /// Live stats snapshot — counters plus telemetry gauge/histogram
+    /// snapshots — or `None` if the backend is gone.
+    fn stats(&self) -> Option<StatsWire>;
 }
 
 impl WireLane for ServerConnection {
@@ -117,8 +125,10 @@ impl WireLane for ServerConnection {
         ServerConnection::stream_op(self, stream, op, err);
     }
 
-    fn stats(&self) -> Option<AttentionServerStats> {
-        ServerConnection::stats(self)
+    fn stats(&self) -> Option<StatsWire> {
+        let stats = ServerConnection::stats(self)?;
+        let (gauges, histos) = self.telemetry().wire_snapshots();
+        Some(StatsWire { stats, gauges, histos, shards: Vec::new() })
     }
 }
 
@@ -159,6 +169,10 @@ impl WireBackend for EngineBackend {
 
     fn lane(&self) -> Box<dyn WireLane> {
         Box::new(self.base.sibling())
+    }
+
+    fn telemetry(&self) -> Option<Arc<ServeTelemetry>> {
+        Some(Arc::clone(self.base.telemetry()))
     }
 }
 
@@ -223,7 +237,10 @@ pub fn serve_backend(backend: Arc<dyn WireBackend>, addr: &str) -> io::Result<Ne
     let accept_join = {
         let stop = Arc::clone(&stop);
         let conns = Arc::clone(&conns);
-        std::thread::spawn(move || accept_loop(listener, backend, stop, conns))
+        // resolve the telemetry bundle once — backends without one get
+        // a single shared no-op bundle, not one per connection
+        let obs = backend.telemetry().unwrap_or_else(ServeTelemetry::disabled);
+        std::thread::spawn(move || accept_loop(listener, backend, obs, stop, conns))
     };
     Ok(NetServer { addr: local, stop, conns, accept_join: Some(accept_join) })
 }
@@ -231,6 +248,7 @@ pub fn serve_backend(backend: Arc<dyn WireBackend>, addr: &str) -> io::Result<Ne
 fn accept_loop(
     listener: TcpListener,
     backend: Arc<dyn WireBackend>,
+    obs: Arc<ServeTelemetry>,
     stop: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<TcpStream>>>,
 ) {
@@ -253,8 +271,9 @@ fn accept_loop(
         }
         let lane = backend.lane();
         let info = backend.info();
+        let obs = Arc::clone(&obs);
         std::thread::spawn(move || {
-            let _ = serve_connection(sock, lane, info);
+            let _ = serve_connection(sock, lane, info, obs);
         });
     }
 }
@@ -284,7 +303,12 @@ fn verdict_frame(id: u64, r: Result<Vec<f32>, ServeError>) -> Vec<u8> {
     }
 }
 
-fn serve_connection(sock: TcpStream, lane: Box<dyn WireLane>, info: ServerInfo) -> io::Result<()> {
+fn serve_connection(
+    sock: TcpStream,
+    lane: Box<dyn WireLane>,
+    info: ServerInfo,
+    obs: Arc<ServeTelemetry>,
+) -> io::Result<()> {
     let mut r = BufReader::new(sock.try_clone()?);
     // handshake: verify the client's hello, answer with ours plus the
     // config frame advertising the served shape
@@ -305,7 +329,7 @@ fn serve_connection(sock: TcpStream, lane: Box<dyn WireLane>, info: ServerInfo) 
     let (wtx, wrx) = mpsc::sync_channel::<Vec<u8>>(WRITER_QUEUE_FRAMES);
     let writer = {
         let sock = sock.try_clone()?;
-        std::thread::spawn(move || writer_loop(sock, wrx))
+        std::thread::spawn(move || writer_loop(sock, wrx, obs))
     };
     let pipe = ReplyPipe { tx: wtx, sock: Arc::new(sock.try_clone()?) };
     // streams this connection opened and has not closed — released when
@@ -396,10 +420,13 @@ fn dispatch(frame: ClientFrame, lane: &dyn WireLane, pipe: &ReplyPipe, open: &mu
 }
 
 /// Drain encoded frames to the socket, batching everything already
-/// queued into one flush.
-fn writer_loop(sock: TcpStream, rx: mpsc::Receiver<Vec<u8>>) {
+/// queued into one flush.  Each drain cycle — first frame through the
+/// flush — closes one reply-write span (the writer thread has its own
+/// flight-recorder ring, so recording is contention-free).
+fn writer_loop(sock: TcpStream, rx: mpsc::Receiver<Vec<u8>>, obs: Arc<ServeTelemetry>) {
     let mut w = BufWriter::new(sock);
     'outer: while let Ok(frame) = rx.recv() {
+        let t0 = obs.now();
         if w.write_all(&frame).is_err() {
             break;
         }
@@ -416,6 +443,7 @@ fn writer_loop(sock: TcpStream, rx: mpsc::Receiver<Vec<u8>>) {
         if w.flush().is_err() {
             break;
         }
+        obs.span(Span::ReplyWrite, t0, 0, 0);
     }
     let _ = w.flush();
 }

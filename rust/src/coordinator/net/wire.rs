@@ -62,6 +62,7 @@
 //! copied exactly once off the socket, with no intermediate buffer.
 
 use crate::coordinator::attention_server::{AttentionServerStats, HeadsRequest, SubmitRoute};
+use crate::obs::{HistoSnapshot, HISTO_BUCKETS};
 use std::io::{self, Read, Write};
 use std::sync::Arc;
 
@@ -137,6 +138,52 @@ impl ServerInfo {
     }
 }
 
+/// One shard's health row in a coordinator's stats reply — what
+/// `skein top` renders as the shard table.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardHealth {
+    /// The shard's address as the coordinator dials it.
+    pub addr: String,
+    /// Milliseconds since the coordinator last heard any frame from
+    /// this shard (heartbeat replies included).
+    pub heartbeat_age_ms: u64,
+    /// Replies the coordinator is still waiting on from this shard.
+    pub pending: u64,
+    /// Cumulative replies drained with `ShardDown` when this shard's
+    /// connection was killed.
+    pub down_drains: u64,
+    /// The shard's own admission-queue depth gauge at its last stats
+    /// poll (0 when unknown).
+    pub queue_depth: u64,
+    /// False once the connection was declared dead.
+    pub alive: bool,
+}
+
+/// The full payload of a stats reply: the engine counter snapshot plus
+/// the telemetry snapshots — named gauges and mergeable histogram
+/// buckets ([`HistoSnapshot`]) — and, from a coordinator, per-shard
+/// health rows.  Histograms merge bucket-wise
+/// ([`HistoSnapshot::merge`]), which is how the coordinator folds
+/// shard latency distributions into one cluster view without losing
+/// quantile fidelity beyond the bucket width.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsWire {
+    pub stats: AttentionServerStats,
+    /// `(name, value)` gauge snapshots, exposition-ready.
+    pub gauges: Vec<(String, u64)>,
+    /// `(name, snapshot)` histogram snapshots, bucket-mergeable.
+    pub histos: Vec<(String, HistoSnapshot)>,
+    /// Per-shard health (empty from a plain engine server).
+    pub shards: Vec<ShardHealth>,
+}
+
+impl StatsWire {
+    /// Wrap a bare counter snapshot (no telemetry attached).
+    pub fn from_stats(stats: AttentionServerStats) -> Self {
+        StatsWire { stats, ..Default::default() }
+    }
+}
+
 /// One decoded client→server frame.
 #[derive(Debug)]
 pub enum ClientFrame {
@@ -180,8 +227,9 @@ pub enum ServerFrame {
     /// Reply to a ping.
     Pong { id: u64 },
     /// Reply to a stats poll: a live snapshot (means computed over the
-    /// work so far; counters monotone).
-    StatsOk { id: u64, stats: AttentionServerStats },
+    /// work so far; counters monotone) plus telemetry gauge/histogram
+    /// snapshots and — from a coordinator — per-shard health.
+    StatsOk { id: u64, stats: Box<StatsWire> },
 }
 
 /// Result of [`read_client_frame_or_idle`]: a decoded frame, or a
@@ -489,15 +537,55 @@ fn stats_counters(s: &AttentionServerStats) -> [u64; 15] {
     ]
 }
 
-pub fn encode_stats_ok(id: u64, stats: &AttentionServerStats) -> Vec<u8> {
+/// A u16-length-prefixed string (names and addresses are short).
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let bytes = &bytes[..bytes.len().min(u16::MAX as usize)];
+    buf.extend_from_slice(&(bytes.len() as u16).to_le_bytes());
+    buf.extend_from_slice(bytes);
+}
+
+fn read_str(r: &mut impl Read, what: &'static str) -> io::Result<String> {
+    let len = read_u16(r)? as usize;
+    let mut bytes = vec![0u8; len];
+    r.read_exact(&mut bytes)?;
+    String::from_utf8(bytes).map_err(|_| io::Error::new(io::ErrorKind::InvalidData, what))
+}
+
+pub fn encode_stats_ok(id: u64, stats: &StatsWire) -> Vec<u8> {
     let mut body = Vec::new();
     put_u64(&mut body, id);
-    for c in stats_counters(stats) {
+    for c in stats_counters(&stats.stats) {
         put_u64(&mut body, c);
     }
-    for m in [stats.mean_queue_ms, stats.mean_occupancy, stats.mean_step_occupancy, stats.mean_batch_ms]
-    {
+    let s = &stats.stats;
+    for m in [s.mean_queue_ms, s.mean_occupancy, s.mean_step_occupancy, s.mean_batch_ms] {
         put_u64(&mut body, m.to_bits());
+    }
+    put_u32(&mut body, stats.gauges.len() as u32);
+    for (name, value) in &stats.gauges {
+        put_str(&mut body, name);
+        put_u64(&mut body, *value);
+    }
+    put_u32(&mut body, stats.histos.len() as u32);
+    for (name, h) in &stats.histos {
+        put_str(&mut body, name);
+        put_u64(&mut body, h.sum);
+        // bucket count on the wire so a build with a different
+        // HISTO_BUCKETS still decodes (extra buckets fold into +Inf)
+        put_u32(&mut body, h.buckets.len() as u32);
+        for b in h.buckets {
+            put_u64(&mut body, b);
+        }
+    }
+    put_u32(&mut body, stats.shards.len() as u32);
+    for sh in &stats.shards {
+        put_str(&mut body, &sh.addr);
+        put_u64(&mut body, sh.heartbeat_age_ms);
+        put_u64(&mut body, sh.pending);
+        put_u64(&mut body, sh.down_drains);
+        put_u64(&mut body, sh.queue_depth);
+        body.push(u8::from(sh.alive));
     }
     frame(KIND_STATS_OK, body)
 }
@@ -846,6 +934,58 @@ fn read_server_body(r: &mut impl Read, kind: u8, body_len: u32) -> Result<Server
                 mean_step_occupancy,
                 mean_batch_ms,
             };
+            let n_gauges = read_u32(b)?;
+            if n_gauges > 4096 {
+                return Err(io::Error::new(io::ErrorKind::InvalidData, "gauge count"));
+            }
+            let mut gauges = Vec::with_capacity(n_gauges as usize);
+            for _ in 0..n_gauges {
+                let name = read_str(b, "bad gauge name utf8")?;
+                gauges.push((name, read_u64(b)?));
+            }
+            let n_histos = read_u32(b)?;
+            if n_histos > 4096 {
+                return Err(io::Error::new(io::ErrorKind::InvalidData, "histo count"));
+            }
+            let mut histos = Vec::with_capacity(n_histos as usize);
+            for _ in 0..n_histos {
+                let name = read_str(b, "bad histo name utf8")?;
+                let sum = read_u64(b)?;
+                let nbuckets = read_u32(b)? as usize;
+                if nbuckets > 1024 {
+                    return Err(io::Error::new(io::ErrorKind::InvalidData, "bucket count"));
+                }
+                let mut snap = HistoSnapshot { sum, ..Default::default() };
+                for i in 0..nbuckets {
+                    let count = read_u64(b)?;
+                    // a peer with more buckets folds its tail into +Inf
+                    let slot = i.min(HISTO_BUCKETS - 1);
+                    snap.buckets[slot] += count;
+                }
+                histos.push((name, snap));
+            }
+            let n_shards = read_u32(b)?;
+            if n_shards > 4096 {
+                return Err(io::Error::new(io::ErrorKind::InvalidData, "shard count"));
+            }
+            let mut shards = Vec::with_capacity(n_shards as usize);
+            for _ in 0..n_shards {
+                let addr = read_str(b, "bad shard addr utf8")?;
+                let heartbeat_age_ms = read_u64(b)?;
+                let pending = read_u64(b)?;
+                let down_drains = read_u64(b)?;
+                let queue_depth = read_u64(b)?;
+                let alive = read_u8(b)? != 0;
+                shards.push(ShardHealth {
+                    addr,
+                    heartbeat_age_ms,
+                    pending,
+                    down_drains,
+                    queue_depth,
+                    alive,
+                });
+            }
+            let stats = Box::new(StatsWire { stats, gauges, histos, shards });
             Ok((id, ServerFrame::StatsOk { id, stats }))
         }),
         other => Err(FrameError::Fatal(format!("unknown server frame kind {other:#04x}"))),
@@ -931,7 +1071,7 @@ mod tests {
             ServerFrame::Pong { id } => assert_eq!(id, 23),
             other => panic!("wrong frame: {other:?}"),
         }
-        let stats = AttentionServerStats {
+        let stats = StatsWire::from_stats(AttentionServerStats {
             requests: 5,
             batches: 3,
             steps: 7,
@@ -943,16 +1083,50 @@ mod tests {
             mean_step_occupancy: 0.625,
             mean_batch_ms: 1.75,
             ..Default::default()
-        };
+        });
         match read_server_frame(&mut Cursor::new(encode_stats_ok(24, &stats))).unwrap() {
             ServerFrame::StatsOk { id, stats: got } => {
                 assert_eq!(id, 24);
-                assert_eq!(got.requests, 5);
-                assert_eq!(got.steps, 7);
-                assert_eq!(got.stream_appends, 40);
-                assert_eq!(got.kv_resident_bytes, 1 << 20);
-                assert_eq!(got.mean_step_occupancy.to_bits(), 0.625f64.to_bits());
-                assert_eq!(got.mean_batch_ms.to_bits(), 1.75f64.to_bits());
+                assert_eq!(got.stats.requests, 5);
+                assert_eq!(got.stats.steps, 7);
+                assert_eq!(got.stats.stream_appends, 40);
+                assert_eq!(got.stats.kv_resident_bytes, 1 << 20);
+                assert_eq!(got.stats.mean_step_occupancy.to_bits(), 0.625f64.to_bits());
+                assert_eq!(got.stats.mean_batch_ms.to_bits(), 1.75f64.to_bits());
+                assert!(got.gauges.is_empty() && got.histos.is_empty() && got.shards.is_empty());
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_ok_roundtrips_gauges_histos_and_shards() {
+        let mut h = HistoSnapshot::default();
+        h.sum = 12_345;
+        h.buckets[0] = 2;
+        h.buckets[7] = 5;
+        h.buckets[HISTO_BUCKETS - 1] = 1;
+        let stats = StatsWire {
+            stats: AttentionServerStats { requests: 9, ..Default::default() },
+            gauges: vec![("skein_queue_depth".into(), 3), ("skein_trace_dropped_total".into(), 0)],
+            histos: vec![("skein_queue_wait_ns".into(), h)],
+            shards: vec![
+                ShardHealth {
+                    addr: "127.0.0.1:7971".into(),
+                    heartbeat_age_ms: 120,
+                    pending: 2,
+                    down_drains: 0,
+                    queue_depth: 4,
+                    alive: true,
+                },
+                ShardHealth { addr: "127.0.0.1:7972".into(), alive: false, ..Default::default() },
+            ],
+        };
+        match read_server_frame(&mut Cursor::new(encode_stats_ok(31, &stats))).unwrap() {
+            ServerFrame::StatsOk { id, stats: got } => {
+                assert_eq!(id, 31);
+                assert_eq!(*got, stats);
+                assert_eq!(got.histos[0].1.count(), 8);
             }
             other => panic!("wrong frame: {other:?}"),
         }

@@ -15,13 +15,14 @@
 //! goes stale; a closed or errored socket kills the connection
 //! immediately from the reader thread.
 
-use crate::coordinator::attention_server::{AttentionServerStats, ReplyTo, ServeError, SubmitRoute};
+use crate::coordinator::attention_server::{ReplyTo, ServeError, SubmitRoute};
 use crate::coordinator::net::wire::{
     encode_append, encode_close, encode_open_with_stream, encode_ping, encode_prefill,
     encode_query, encode_stats_req, encode_submit_sliced, read_hello, read_server_frame,
-    write_hello, ServerFrame, ServerInfo,
+    write_hello, ServerFrame, ServerInfo, StatsWire,
 };
 use crate::coordinator::net::NetTimeouts;
+use crate::obs::{ServeTelemetry, Span};
 use std::collections::HashMap;
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
@@ -38,7 +39,7 @@ enum Expect {
     /// (fire-and-forget opens); the send then fails silently.
     Open(mpsc::Sender<Result<u64, ServeError>>),
     /// A `StatsOk` snapshot.
-    Stats(mpsc::Sender<Result<AttentionServerStats, ServeError>>),
+    Stats(mpsc::Sender<Result<StatsWire, ServeError>>),
 }
 
 impl Expect {
@@ -62,15 +63,25 @@ pub(crate) struct ShardConn {
     info: ServerInfo,
     sock: TcpStream,
     w: Mutex<BufWriter<TcpStream>>,
-    pending: Mutex<HashMap<u64, Expect>>,
+    /// Pending completions keyed by request id; the `u64` is the
+    /// telemetry send timestamp (0 when disabled) closing a `ShardRtt`
+    /// span when the reply matches.
+    pending: Mutex<HashMap<u64, (u64, Expect)>>,
     next_id: AtomicU64,
     last_rx: Mutex<Instant>,
     dead: AtomicBool,
+    /// Cumulative completions drained with `ShardDown` by [`kill`](Self::kill).
+    down_drains: AtomicU64,
+    obs: Arc<ServeTelemetry>,
 }
 
 impl ShardConn {
     /// Connect, handshake, and start the reader thread.
-    pub(crate) fn connect(addr: &str, timeouts: NetTimeouts) -> io::Result<Arc<ShardConn>> {
+    pub(crate) fn connect(
+        addr: &str,
+        timeouts: NetTimeouts,
+        obs: Arc<ServeTelemetry>,
+    ) -> io::Result<Arc<ShardConn>> {
         let mut last_err: Option<io::Error> = None;
         let mut sock = None;
         for resolved in addr.to_socket_addrs()? {
@@ -117,6 +128,8 @@ impl ShardConn {
             next_id: AtomicU64::new(0),
             last_rx: Mutex::new(Instant::now()),
             dead: AtomicBool::new(false),
+            down_drains: AtomicU64::new(0),
+            obs,
         });
         {
             let conn = Arc::clone(&conn);
@@ -146,6 +159,16 @@ impl ShardConn {
         *self.last_rx.lock().unwrap()
     }
 
+    /// Completions currently awaiting a reply from this shard.
+    pub(crate) fn pending_depth(&self) -> u64 {
+        self.pending.lock().unwrap().len() as u64
+    }
+
+    /// Cumulative completions failed with `ShardDown` by [`kill`](Self::kill).
+    pub(crate) fn down_drains(&self) -> u64 {
+        self.down_drains.load(Ordering::Relaxed)
+    }
+
     fn down(&self) -> ServeError {
         ServeError::ShardDown { shard: self.addr.clone() }
     }
@@ -159,8 +182,9 @@ impl ShardConn {
         let _ = self.sock.shutdown(Shutdown::Both);
         let drained: Vec<Expect> = {
             let mut pending = self.pending.lock().unwrap();
-            pending.drain().map(|(_, e)| e).collect()
+            pending.drain().map(|(_, (_, e))| e).collect()
         };
+        self.down_drains.fetch_add(drained.len() as u64, Ordering::Relaxed);
         for expect in drained {
             expect.fail(self.down());
         }
@@ -182,7 +206,7 @@ impl ShardConn {
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         if let Some(e) = expect {
-            self.pending.lock().unwrap().insert(id, e);
+            self.pending.lock().unwrap().insert(id, (self.obs.now(), e));
         }
         let bytes = frame(id);
         let sent = {
@@ -262,7 +286,7 @@ impl ShardConn {
 
     /// Poll the shard's live stats (blocking; bounded by connection
     /// death — a killed connection fails the wait with `ShardDown`).
-    pub(crate) fn stats(&self) -> Result<AttentionServerStats, ServeError> {
+    pub(crate) fn stats(&self) -> Result<StatsWire, ServeError> {
         let (tx, rx) = mpsc::channel();
         self.send_expect(Some(Expect::Stats(tx)), encode_stats_req)?;
         rx.recv().unwrap_or_else(|_| Err(self.down()))
@@ -277,7 +301,12 @@ fn reader_loop(mut r: BufReader<TcpStream>, conn: Arc<ShardConn>) {
             Err(_) => break, // EOF, socket error, or desync: the shard is gone
         };
         *conn.last_rx.lock().unwrap() = Instant::now();
-        let take = |id: u64| conn.pending.lock().unwrap().remove(&id);
+        // matched replies close a ShardRtt span opened at send time
+        let take = |id: u64| -> Option<Expect> {
+            let (t0, expect) = conn.pending.lock().unwrap().remove(&id)?;
+            conn.obs.span(Span::ShardRtt, t0, 0, id);
+            Some(expect)
+        };
         match frame {
             ServerFrame::Output { id, out } => {
                 if let Some(Expect::Output(reply)) = take(id) {
@@ -299,7 +328,7 @@ fn reader_loop(mut r: BufReader<TcpStream>, conn: Arc<ShardConn>) {
             }
             ServerFrame::StatsOk { id, stats } => {
                 if let Some(Expect::Stats(tx)) = take(id) {
-                    let _ = tx.send(Ok(stats));
+                    let _ = tx.send(Ok(*stats));
                 }
             }
             ServerFrame::Pong { .. } => {} // last_rx already stamped

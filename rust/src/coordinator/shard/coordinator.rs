@@ -8,7 +8,10 @@ use crate::coordinator::attention_server::{
     batch_seed, validate_request, AttentionServerConfig, AttentionServerStats, HeadsRequest,
     ReplyTo, ServeError, StreamOp, SubmitRoute,
 };
-use crate::coordinator::net::{NetTimeouts, ServerInfo, WireBackend, WireLane};
+use crate::coordinator::net::{
+    NetTimeouts, ServerInfo, ShardHealth, StatsWire, WireBackend, WireLane,
+};
+use crate::obs::{HistoSnapshot, ServeTelemetry, Span};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -54,6 +57,10 @@ struct CoordShared {
     next_request: AtomicU64,
     stop: AtomicBool,
     timeouts: NetTimeouts,
+    /// Coordinator-side telemetry: scatter encode, per-shard RTT, and
+    /// gather wait spans.  Shard-side spans live in the shards' own
+    /// bundles and arrive merged through their `Stats` replies.
+    obs: Arc<ServeTelemetry>,
 }
 
 impl CoordShared {
@@ -116,11 +123,25 @@ impl CoordShared {
             out: Vec<f32>,
             remaining: usize,
             reply: Option<ReplyTo>,
+            /// Telemetry scatter timestamp (0 when disabled): a
+            /// `GatherWait` span closes when the gather resolves.
+            t0_ns: u64,
+            obs: Arc<ServeTelemetry>,
         }
+        impl Gather {
+            fn resolve(&mut self) -> Option<ReplyTo> {
+                let reply = self.reply.take()?;
+                self.obs.span(Span::GatherWait, self.t0_ns, 0, 0);
+                Some(reply)
+            }
+        }
+        let t_scatter = self.obs.now();
         let gather = Arc::new(Mutex::new(Gather {
             out: vec![0.0; width * per_head],
             remaining: parts,
             reply: Some(reply),
+            t0_ns: t_scatter,
+            obs: Arc::clone(&self.obs),
         }));
         let mut cursor = lo;
         for (i, shard) in live.iter().take(parts).enumerate() {
@@ -139,14 +160,14 @@ impl CoordShared {
                         }
                         g.remaining -= 1;
                         if g.remaining == 0 {
-                            if let Some(reply) = g.reply.take() {
+                            if let Some(reply) = g.resolve() {
                                 let out = std::mem::take(&mut g.out);
                                 reply.send(Ok(out));
                             }
                         }
                     }
                     Err(e) => {
-                        if let Some(reply) = g.reply.take() {
+                        if let Some(reply) = g.resolve() {
                             reply.send(Err(e));
                         }
                     }
@@ -163,18 +184,89 @@ impl CoordShared {
                 cb,
             );
         }
+        // slab slicing + sub-request sends for this scatter are done;
+        // the per-shard RTTs and the gather tail run from here
+        self.obs.span(Span::ScatterEncode, t_scatter, 0, 0);
     }
 
-    /// Merge the live shards' stats snapshots (see
-    /// [`AttentionServerStats::merge_weighted`]).
-    fn merged_stats(&self) -> AttentionServerStats {
-        let mut per_shard = Vec::new();
-        for conn in self.live() {
-            if let Ok(s) = conn.stats() {
-                per_shard.push(s);
+    /// Merge the live shards' stats payloads into one cluster view:
+    /// engine counters via [`AttentionServerStats::merge_weighted`],
+    /// gauges summed by name, histograms merged bucket-wise by name
+    /// (exact — see [`HistoSnapshot::merge`]), plus the coordinator's
+    /// own scatter/RTT/gather histograms and one [`ShardHealth`] row
+    /// per shard ever added (dead ones flagged, not dropped).
+    fn merged_stats(&self) -> StatsWire {
+        fn add_gauges(into: &mut Vec<(String, u64)>, from: &[(String, u64)]) {
+            for (name, v) in from {
+                match into.iter_mut().find(|(n, _)| n == name) {
+                    Some((_, acc)) => *acc += v,
+                    None => into.push((name.clone(), *v)),
+                }
             }
         }
-        AttentionServerStats::merge_weighted(&per_shard)
+        fn add_histos(into: &mut Vec<(String, HistoSnapshot)>, from: &[(String, HistoSnapshot)]) {
+            for (name, snap) in from {
+                match into.iter_mut().find(|(n, _)| n == name) {
+                    Some((_, acc)) => acc.merge(snap),
+                    None => into.push((name.clone(), *snap)),
+                }
+            }
+        }
+        let mut engine = Vec::new();
+        let mut gauges = Vec::new();
+        let mut histos = Vec::new();
+        let mut shards_out = Vec::new();
+        let conns = self.shards.read().unwrap().clone();
+        for conn in &conns {
+            let mut health = ShardHealth {
+                addr: conn.addr().to_string(),
+                heartbeat_age_ms: conn.last_rx().elapsed().as_millis() as u64,
+                pending: conn.pending_depth(),
+                down_drains: conn.down_drains(),
+                queue_depth: 0,
+                alive: !conn.is_dead(),
+            };
+            if health.alive {
+                if let Ok(s) = conn.stats() {
+                    health.queue_depth = s
+                        .gauges
+                        .iter()
+                        .find(|(n, _)| n == "skein_queue_depth")
+                        .map_or(0, |(_, v)| *v);
+                    add_gauges(&mut gauges, &s.gauges);
+                    add_histos(&mut histos, &s.histos);
+                    engine.push(s.stats);
+                }
+            }
+            shards_out.push(health);
+        }
+        let (own_gauges, own_histos) = self.obs.wire_snapshots();
+        add_gauges(&mut gauges, &own_gauges);
+        add_histos(&mut histos, &own_histos);
+        StatsWire {
+            stats: AttentionServerStats::merge_weighted(&engine),
+            gauges,
+            histos,
+            shards: shards_out,
+        }
+    }
+
+    /// One [`ShardHealth`] row per shard, without polling shard stats
+    /// (cheap: local connection state only, no wire round trips).
+    fn shard_health(&self) -> Vec<ShardHealth> {
+        self.shards
+            .read()
+            .unwrap()
+            .iter()
+            .map(|conn| ShardHealth {
+                addr: conn.addr().to_string(),
+                heartbeat_age_ms: conn.last_rx().elapsed().as_millis() as u64,
+                pending: conn.pending_depth(),
+                down_drains: conn.down_drains(),
+                queue_depth: 0,
+                alive: !conn.is_dead(),
+            })
+            .collect()
     }
 
     fn open_stream_entry(&self, id: u64, repilot_stride: u32) {
@@ -310,7 +402,7 @@ impl WireLane for CoordLane {
         }
     }
 
-    fn stats(&self) -> Option<AttentionServerStats> {
+    fn stats(&self) -> Option<StatsWire> {
         Some(self.0.merged_stats())
     }
 }
@@ -336,6 +428,10 @@ impl WireBackend for CoordBackend {
     fn lane(&self) -> Box<dyn WireLane> {
         Box::new(CoordLane(Arc::clone(&self.0)))
     }
+
+    fn telemetry(&self) -> Option<Arc<ServeTelemetry>> {
+        Some(Arc::clone(&self.0.obs))
+    }
 }
 
 /// A running shard coordinator.  Plug [`backend`](Self::backend) into
@@ -359,12 +455,25 @@ impl Coordinator {
         heartbeat: Duration,
         timeouts: NetTimeouts,
     ) -> Result<Coordinator> {
+        Self::start_with_telemetry(shard_addrs, heartbeat, timeouts, ServeTelemetry::disabled())
+    }
+
+    /// [`start_with`](Self::start_with) plus a live telemetry bundle:
+    /// coordinator-side spans (scatter encode, shard RTT, gather wait)
+    /// record into it, and `Stats` replies carry it merged with the
+    /// shards' own snapshots.
+    pub fn start_with_telemetry(
+        shard_addrs: &[String],
+        heartbeat: Duration,
+        timeouts: NetTimeouts,
+        obs: Arc<ServeTelemetry>,
+    ) -> Result<Coordinator> {
         if shard_addrs.is_empty() {
             bail!("a coordinator needs at least one shard address");
         }
         let mut conns = Vec::with_capacity(shard_addrs.len());
         for addr in shard_addrs {
-            let conn = ShardConn::connect(addr, timeouts)
+            let conn = ShardConn::connect(addr, timeouts, Arc::clone(&obs))
                 .with_context(|| format!("connecting to shard {addr}"))?;
             conns.push(conn);
         }
@@ -407,6 +516,7 @@ impl Coordinator {
             next_request: AtomicU64::new(0),
             stop: AtomicBool::new(false),
             timeouts,
+            obs,
         });
         shared.rebuild_ring();
         let heartbeat_join = {
@@ -436,8 +546,9 @@ impl Coordinator {
     /// with a shared `--kv-spill-dir`, re-homed prompts warm-restart
     /// from the spill manifests the previous owner archived.
     pub fn add_shard(&self, addr: &str) -> Result<()> {
-        let conn = ShardConn::connect(addr, self.shared.timeouts)
-            .with_context(|| format!("connecting to shard {addr}"))?;
+        let conn =
+            ShardConn::connect(addr, self.shared.timeouts, Arc::clone(&self.shared.obs))
+                .with_context(|| format!("connecting to shard {addr}"))?;
         let info = conn.info();
         let cfg = &self.shared.cfg;
         if info.method != cfg.method
@@ -458,10 +569,30 @@ impl Coordinator {
         self.shared.live().len()
     }
 
-    /// Aggregated cluster stats (see
+    /// Aggregated cluster engine counters (see
     /// [`AttentionServerStats::merge_weighted`]).
     pub fn stats(&self) -> AttentionServerStats {
+        self.shared.merged_stats().stats
+    }
+
+    /// The full aggregated stats payload: merged engine counters,
+    /// summed gauges, bucket-merged histograms, and per-shard health
+    /// rows — what a wire `Stats` request against this coordinator
+    /// returns.
+    pub fn stats_full(&self) -> StatsWire {
         self.shared.merged_stats()
+    }
+
+    /// Per-shard health rows from local connection state (no wire round
+    /// trips; `queue_depth` is left 0 — poll
+    /// [`stats_full`](Self::stats_full) for it).
+    pub fn shard_health(&self) -> Vec<ShardHealth> {
+        self.shared.shard_health()
+    }
+
+    /// The coordinator's telemetry bundle.
+    pub fn telemetry(&self) -> &Arc<ServeTelemetry> {
+        &self.shared.obs
     }
 
     /// Stop the heartbeat and disconnect every shard.  Pending

@@ -1,4 +1,4 @@
-//! Image classification — the CIFAR-10 substitute (DESIGN.md §9):
+//! Image classification — the CIFAR-10 substitute (DESIGN.md §10):
 //! procedurally rendered grayscale glyphs on a small grid, flattened
 //! row-major into intensity-bucket tokens.  Ten classes = five shape
 //! families × two sizes, with pixel noise and random placement, so the

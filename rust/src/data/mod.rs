@@ -1,4 +1,4 @@
-//! Synthetic LRA-style tasks (DESIGN.md §9 documents each substitution).
+//! Synthetic LRA-style tasks (DESIGN.md §10 documents each substitution).
 //!
 //! Every task implements [`Task`]: an infinite, seeded stream of
 //! `(tokens, label)` examples over a shared vocabulary budget.  The

@@ -1,4 +1,4 @@
-//! Pathfinder — the LRA Pathfinder substitute (DESIGN.md §9): decide
+//! Pathfinder — the LRA Pathfinder substitute (DESIGN.md §10): decide
 //! whether two endpoint markers on a small grid are connected by a drawn
 //! path.  Positive examples draw one self-avoiding lattice path between
 //! the endpoints plus distractor fragments; negatives draw two *disjoint*

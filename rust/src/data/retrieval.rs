@@ -1,4 +1,4 @@
-//! Document retrieval — the AAN substitute (DESIGN.md §9): decide whether
+//! Document retrieval — the AAN substitute (DESIGN.md §10): decide whether
 //! two documents are "related".  Each document is generated from a topic
 //! template (a topic-specific token distribution plus shared noise);
 //! related pairs share a topic, unrelated pairs use two distinct topics.

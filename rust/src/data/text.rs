@@ -1,4 +1,4 @@
-//! Text classification — the IMDb substitute (DESIGN.md §9): a synthetic
+//! Text classification — the IMDb substitute (DESIGN.md §10): a synthetic
 //! "sentiment grammar" over a small word-id vocabulary.  Documents are a
 //! sequence of clauses; each clause contributes polarity (positive /
 //! negative word ids), optionally flipped by a preceding negation token,

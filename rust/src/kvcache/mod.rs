@@ -721,6 +721,14 @@ impl KvCache {
 
     /// Aggregate counters (monotonic except `resident_blocks` and
     /// `quant_blocks`).
+    ///
+    /// The serve loop snapshots these into its stats reply and — when
+    /// telemetry is on — mirrors residency into the
+    /// `skein_kv_resident_blocks` / `skein_kv_resident_bytes` gauges
+    /// and classifies per-request ingest spans as
+    /// [`KvIngestHit`](crate::obs::Span::KvIngestHit) vs
+    /// [`KvIngestMiss`](crate::obs::Span::KvIngestMiss) from the
+    /// `hit_blocks` / `alloc_blocks` deltas around each ingest.
     pub fn stats(&self) -> KvCacheStats {
         KvCacheStats {
             hit_blocks: self.hits,

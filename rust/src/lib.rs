@@ -32,6 +32,7 @@ pub mod flops;
 pub mod json;
 pub mod kvcache;
 pub mod metrics;
+pub mod obs;
 pub mod pool;
 pub mod prop;
 pub mod report;

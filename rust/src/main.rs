@@ -10,6 +10,8 @@
 //!   coordinator — front a cluster of `serve --listen` engine shards:
 //!              scatter head ranges, gather replies, same wire protocol
 //!   client   — drive a `serve --listen` (or coordinator) front end over TCP
+//!   top      — live terminal view of a server/coordinator's stats reply
+//!   scrape   — fetch a `/metrics` endpoint and validate the exposition
 //!   inspect  — dump an artifact manifest summary
 //!
 //! Run `skein help` for flags.
@@ -17,7 +19,7 @@
 use anyhow::{bail, Context, Result};
 use skeinformer::{
     attention, bench_util, cli::Args, config::ExperimentConfig, coordinator, data, flops, json,
-    metrics::Percentiles, report, rng::Rng, runtime::Runtime, synth_qkv, tensor, train,
+    obs, report, rng::Rng, runtime::Runtime, synth_qkv, tensor, train,
 };
 use std::time::Duration;
 
@@ -45,6 +47,8 @@ fn run() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("coordinator") => cmd_coordinator(&args),
         Some("client") => cmd_client(&args),
+        Some("top") => cmd_top(&args),
+        Some("scrape") => cmd_scrape(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("help") | None => {
             print_help();
@@ -84,17 +88,33 @@ fn print_help() {
                     [--queue-depth N] bounds in-flight work;\n\
                     [--shard-of N --shard-index I] annotate this worker as\n\
                     shard I of an N-shard ring for a coordinator)\n\
+                    telemetry (on by default for --listen):\n\
+                    [--metrics-addr H:P] Prometheus text exposition over\n\
+                    HTTP GET /metrics; [--trace-out FILE] write the span\n\
+                    flight recorder as Chrome-trace JSON at shutdown;\n\
+                    [--stats-every-secs N] periodic stats line on stderr;\n\
+                    [--no-telemetry] kill switch (serving is bitwise\n\
+                    identical either way; spans read clocks only)\n\
            coordinator --shards H1:P1,H2:P2,... --listen ADDR\n\
                     front a cluster of `serve --listen` engine shards on the\n\
                     same wire protocol: one-shots scatter by head range and\n\
                     gather bitwise, decode streams home by prompt-prefix\n\
                     consistent hashing; [--heartbeat-ms N] failover cadence\n\
                     (default 1000); [--serve-secs N] as for serve.  Shards\n\
-                    must share shape and --seed (checked at connect)\n\
+                    must share shape and --seed (checked at connect).\n\
+                    Same telemetry flags as serve --listen; its stats reply\n\
+                    aggregates the cluster (histograms merged bucket-wise,\n\
+                    gauges summed) plus per-shard health rows\n\
            client   --addr HOST:PORT [--requests N] [--window W] (pipelined\n\
                     one-shot submits, W in flight), or\n\
                     --stream [--tokens N] [--repilot-stride S] (decode loop);\n\
                     workload shape comes from the server's handshake\n\
+           top      --addr HOST:PORT [--interval-ms N] [--iterations N]\n\
+                    live terminal view of a server or coordinator: engine\n\
+                    counters, span histogram percentiles, shard health\n\
+                    (0 iterations = refresh until killed)\n\
+           scrape   --addr HOST:PORT fetch /metrics once and validate the\n\
+                    exposition is well-formed (nonzero exit otherwise)\n\
            inspect  <artifacts/..._manifest.json>\n\n\
          GLOBAL FLAGS\n\
            --pool-size N   worker threads in the persistent pool (default:\n\
@@ -104,6 +124,15 @@ fn print_help() {
          offline stub) linked in.",
         skeinformer::version()
     );
+}
+
+/// Millisecond view of one latency-histogram percentile.  The CLI demo
+/// loops record into constant-memory [`obs::Histo`]s (log2 buckets), so
+/// reported percentiles are bucket upper bounds, not exact samples —
+/// the trade that lets a server report latency forever without
+/// retaining per-request samples.
+fn histo_ms(snap: &obs::HistoSnapshot, p: f64) -> f64 {
+    snap.percentile(p) as f64 / 1e6
 }
 
 fn base_config(args: &Args) -> Result<ExperimentConfig> {
@@ -265,7 +294,7 @@ fn cmd_serve_cpu(args: &Args) -> Result<()> {
     let handle = attention_server::start(cfg.clone())?;
     let mut rng = Rng::new(7);
     let elems = cfg.request_elems();
-    let mut latency = Percentiles::default();
+    let latency = obs::Histo::default();
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for _ in 0..n_requests {
@@ -274,7 +303,7 @@ fn cmd_serve_cpu(args: &Args) -> Result<()> {
     }
     for (rx, sent) in pending {
         let out = rx.recv().context("server dropped request")?;
-        latency.push(sent.elapsed().as_secs_f64() * 1e3);
+        latency.record(sent.elapsed().as_nanos() as u64);
         anyhow::ensure!(out.len() == elems);
         anyhow::ensure!(out.iter().all(|x| x.is_finite()));
     }
@@ -290,11 +319,12 @@ fn cmd_serve_cpu(args: &Args) -> Result<()> {
         stats.mean_occupancy,
         stats.mean_batch_ms
     );
+    let snap = latency.snapshot();
     println!(
         "latency ms: p50={:.1} p95={:.1} p99={:.1} (queue {:.1})",
-        latency.percentile(50.0),
-        latency.percentile(95.0),
-        latency.percentile(99.0),
+        histo_ms(&snap, 50.0),
+        histo_ms(&snap, 95.0),
+        histo_ms(&snap, 99.0),
         stats.mean_queue_ms
     );
     Ok(())
@@ -305,12 +335,18 @@ fn cmd_serve_cpu(args: &Args) -> Result<()> {
 /// just more scheduler lanes, so serving is bitwise identical to the
 /// in-process path; `--serve-secs N` stops after N seconds (0 = run
 /// until killed).
+///
+/// Telemetry is on by default here (`--no-telemetry` kills it):
+/// `--metrics-addr H:P` exposes `GET /metrics`, `--trace-out FILE`
+/// writes the span flight recorder as Chrome-trace JSON at shutdown,
+/// and `--stats-every-secs N` prints a periodic stats line on stderr.
 fn cmd_serve_listen(
     args: &Args,
     cfg: skeinformer::coordinator::attention_server::AttentionServerConfig,
     addr: &str,
 ) -> Result<()> {
     use skeinformer::coordinator::{attention_server, net};
+    use std::sync::atomic::{AtomicBool, Ordering};
     use std::sync::Arc;
 
     let serve_secs = args.get_u64("serve-secs", 0)?;
@@ -319,11 +355,39 @@ fn cmd_serve_listen(
     if shard_count > 0 && shard_index >= shard_count {
         bail!("--shard-index {shard_index} out of range for --shard-of {shard_count}");
     }
-    let handle = attention_server::start(cfg.clone())?;
+    let telemetry = obs::ServeTelemetry::new(!args.switch("no-telemetry"));
+    let handle = attention_server::start_with_telemetry(cfg.clone(), Arc::clone(&telemetry))?;
     let backend = Arc::new(net::EngineBackend::new(&handle, shard_index, shard_count));
     let server = net::serve_backend(backend, addr).with_context(|| format!("bind {addr}"))?;
+    let metrics = match args.get("metrics-addr") {
+        Some(maddr) => {
+            let conn = handle.connection();
+            let t = Arc::clone(&telemetry);
+            // engine counters first (the stats poll also refreshes the
+            // KV residency gauges), then the registry exposition
+            let render: obs::RenderFn = Arc::new(move || {
+                let mut out = String::new();
+                if let Some(s) = conn.stats() {
+                    out.push_str(&attention_server::render_stats_prometheus(&s));
+                }
+                out.push_str(&t.render());
+                out
+            });
+            let m = obs::serve_metrics(maddr, render)
+                .with_context(|| format!("bind metrics endpoint {maddr}"))?;
+            eprintln!("metrics on http://{}/metrics", m.local_addr());
+            Some(m)
+        }
+        None => None,
+    };
+    let stats_stop = Arc::new(AtomicBool::new(false));
+    let stats_join = spawn_stats_ticker(
+        args.get_u64("stats-every-secs", 0)?,
+        Arc::clone(&stats_stop),
+        handle.connection(),
+    );
     eprintln!(
-        "serving method={} B<={} H={} n={} p={}{} on {}{}",
+        "serving method={} B<={} H={} n={} p={}{} on {}{}{}",
         cfg.method,
         cfg.max_batch,
         cfg.heads,
@@ -335,7 +399,8 @@ fn cmd_serve_listen(
             String::new()
         },
         server.local_addr(),
-        if serve_secs > 0 { format!(" for {serve_secs}s") } else { " until killed".into() }
+        if serve_secs > 0 { format!(" for {serve_secs}s") } else { " until killed".into() },
+        if telemetry.enabled() { "" } else { " (telemetry off)" }
     );
     if serve_secs == 0 {
         loop {
@@ -344,6 +409,13 @@ fn cmd_serve_listen(
     }
     std::thread::sleep(Duration::from_secs(serve_secs));
     server.stop();
+    stats_stop.store(true, Ordering::SeqCst);
+    if let Some(j) = stats_join {
+        let _ = j.join();
+    }
+    if let Some(m) = metrics {
+        m.stop();
+    }
     let stats = handle.shutdown()?;
     println!(
         "served {} requests — steps={} step-occupancy={:.2} rejected={} \
@@ -355,6 +427,66 @@ fn cmd_serve_listen(
         stats.stream_appends,
         stats.stream_queries,
         stats.mean_batch_ms
+    );
+    write_trace_out(args, &telemetry, &cfg.method)?;
+    Ok(())
+}
+
+/// `--stats-every-secs N`: a stderr stats line every N seconds until
+/// `stop` (checked in short slices so shutdown is prompt).  Returns
+/// `None` when `every_secs == 0` (off).
+fn spawn_stats_ticker(
+    every_secs: u64,
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    conn: skeinformer::coordinator::attention_server::ServerConnection,
+) -> Option<std::thread::JoinHandle<()>> {
+    use std::sync::atomic::Ordering;
+    if every_secs == 0 {
+        return None;
+    }
+    Some(std::thread::spawn(move || {
+        let slice = Duration::from_millis(250);
+        let mut elapsed = Duration::ZERO;
+        loop {
+            std::thread::sleep(slice);
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            elapsed += slice;
+            if elapsed < Duration::from_secs(every_secs) {
+                continue;
+            }
+            elapsed = Duration::ZERO;
+            let Some(s) = conn.stats() else { return };
+            eprintln!(
+                "stats: requests={} batches={} steps={} rejected={} appends={} queries={} \
+                 occupancy={:.2} queue={:.1}ms batch={:.1}ms kv-resident={}",
+                s.requests,
+                s.batches,
+                s.steps,
+                s.rejected,
+                s.stream_appends,
+                s.stream_queries,
+                s.mean_step_occupancy,
+                s.mean_queue_ms,
+                s.mean_batch_ms,
+                s.kv_resident_blocks
+            );
+        }
+    }))
+}
+
+/// `--trace-out FILE`: drain the flight recorder as Chrome-trace JSON
+/// (load it at chrome://tracing or ui.perfetto.dev).
+fn write_trace_out(args: &Args, telemetry: &obs::ServeTelemetry, method: &str) -> Result<()> {
+    let Some(path) = args.get("trace-out") else { return Ok(()) };
+    let rec = telemetry.recorder();
+    std::fs::write(path, rec.to_chrome_trace(method))
+        .with_context(|| format!("write trace {path}"))?;
+    eprintln!(
+        "chrome trace: {} span(s) ({} dropped oldest-first) written to {path}",
+        rec.snapshot().len(),
+        rec.dropped()
     );
     Ok(())
 }
@@ -369,6 +501,8 @@ fn cmd_serve_listen(
 /// means weighted per shard).
 fn cmd_coordinator(args: &Args) -> Result<()> {
     use skeinformer::coordinator::{net, shard};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
 
     let shards = args
         .get_list("shards")
@@ -378,12 +512,77 @@ fn cmd_coordinator(args: &Args) -> Result<()> {
         args.get_u64("heartbeat-ms", shard::DEFAULT_HEARTBEAT.as_millis() as u64)?.max(1),
     );
     let serve_secs = args.get_u64("serve-secs", 0)?;
-    let coord = shard::Coordinator::start(&shards, heartbeat)?;
+    let telemetry = obs::ServeTelemetry::new(!args.switch("no-telemetry"));
+    let coord = shard::Coordinator::start_with_telemetry(
+        &shards,
+        heartbeat,
+        net::NetTimeouts::default(),
+        Arc::clone(&telemetry),
+    )?;
     let info = coord.info();
     let server = net::serve_backend(coord.backend(), listen)
         .with_context(|| format!("bind {listen}"))?;
+    let metrics = match args.get("metrics-addr") {
+        Some(maddr) => {
+            // each scrape polls the shards through a fresh lane: merged
+            // engine counters + the coordinator's own span histograms
+            let backend = coord.backend();
+            let t = Arc::clone(&telemetry);
+            let render: obs::RenderFn = Arc::new(move || {
+                let mut out = String::new();
+                if let Some(sw) = backend.lane().stats() {
+                    out.push_str(&skeinformer::coordinator::attention_server::render_stats_prometheus(&sw.stats));
+                }
+                out.push_str(&t.render());
+                out
+            });
+            let m = obs::serve_metrics(maddr, render)
+                .with_context(|| format!("bind metrics endpoint {maddr}"))?;
+            eprintln!("metrics on http://{}/metrics", m.local_addr());
+            Some(m)
+        }
+        None => None,
+    };
+    let stats_stop = Arc::new(AtomicBool::new(false));
+    let stats_join = {
+        let every_secs = args.get_u64("stats-every-secs", 0)?;
+        (every_secs > 0).then(|| {
+            let lane = coord.backend().lane();
+            let stop = Arc::clone(&stats_stop);
+            std::thread::spawn(move || {
+                let slice = Duration::from_millis(250);
+                let mut elapsed = Duration::ZERO;
+                loop {
+                    std::thread::sleep(slice);
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    elapsed += slice;
+                    if elapsed < Duration::from_secs(every_secs) {
+                        continue;
+                    }
+                    elapsed = Duration::ZERO;
+                    let Some(sw) = lane.stats() else { return };
+                    let live = sw.shards.iter().filter(|h| h.alive).count();
+                    eprintln!(
+                        "stats: shards={}/{} requests={} steps={} rejected={} appends={} \
+                         queries={} queue={:.1}ms batch={:.1}ms",
+                        live,
+                        sw.shards.len(),
+                        sw.stats.requests,
+                        sw.stats.steps,
+                        sw.stats.rejected,
+                        sw.stats.stream_appends,
+                        sw.stats.stream_queries,
+                        sw.stats.mean_queue_ms,
+                        sw.stats.mean_batch_ms
+                    );
+                }
+            })
+        })
+    };
     eprintln!(
-        "coordinating {} shard(s): method={} B<={} H={} n={} p={} seed={} on {}{}",
+        "coordinating {} shard(s): method={} B<={} H={} n={} p={} seed={} on {}{}{}",
         coord.live_shards(),
         info.method,
         info.max_batch,
@@ -392,7 +591,8 @@ fn cmd_coordinator(args: &Args) -> Result<()> {
         info.head_dim,
         info.seed,
         server.local_addr(),
-        if serve_secs > 0 { format!(" for {serve_secs}s") } else { " until killed".into() }
+        if serve_secs > 0 { format!(" for {serve_secs}s") } else { " until killed".into() },
+        if telemetry.enabled() { "" } else { " (telemetry off)" }
     );
     if serve_secs == 0 {
         loop {
@@ -401,8 +601,16 @@ fn cmd_coordinator(args: &Args) -> Result<()> {
     }
     std::thread::sleep(Duration::from_secs(serve_secs));
     server.stop();
+    stats_stop.store(true, Ordering::SeqCst);
+    if let Some(j) = stats_join {
+        let _ = j.join();
+    }
+    if let Some(m) = metrics {
+        m.stop();
+    }
     let live = coord.live_shards();
     let stats = coord.stats();
+    let health = coord.shard_health();
     coord.shutdown();
     println!(
         "cluster served {} requests across {} live shard(s) — batches={} steps={} \
@@ -436,6 +644,17 @@ fn cmd_coordinator(args: &Args) -> Result<()> {
             stats.kv_spill_corrupt
         );
     }
+    for h in &health {
+        println!(
+            "shard {}: {} heartbeat-age={}ms pending={} down-drains={}",
+            h.addr,
+            if h.alive { "live" } else { "dead" },
+            h.heartbeat_age_ms,
+            h.pending,
+            h.down_drains
+        );
+    }
+    write_trace_out(args, &telemetry, &info.method)?;
     Ok(())
 }
 
@@ -456,7 +675,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         info.method, info.max_batch, info.heads, info.seq, info.head_dim
     );
     let mut rng = Rng::new(args.get_u64("seed", 7)?);
-    let mut latency = Percentiles::default();
+    let latency = obs::Histo::default();
 
     if args.switch("stream") {
         let tokens = args.get_usize("tokens", info.seq as usize)?;
@@ -474,7 +693,7 @@ fn cmd_client(args: &Args) -> Result<()> {
             let step = std::time::Instant::now();
             client.append(stream, &k, &v)?;
             let out = client.query(stream, 1, &q)?;
-            latency.push(step.elapsed().as_secs_f64() * 1e3);
+            latency.record(step.elapsed().as_nanos() as u64);
             anyhow::ensure!(out.len() == token_elems);
             anyhow::ensure!(out.iter().all(|x| x.is_finite()));
         }
@@ -488,11 +707,11 @@ fn cmd_client(args: &Args) -> Result<()> {
         let mut inflight = std::collections::VecDeque::new();
         let mut settle = |client: &mut NetClient,
                           inflight: &mut std::collections::VecDeque<(u64, std::time::Instant)>,
-                          latency: &mut Percentiles|
+                          latency: &obs::Histo|
          -> Result<()> {
             let (id, sent) = inflight.pop_front().expect("settle on empty window");
             let out = client.wait_output(id)?;
-            latency.push(sent.elapsed().as_secs_f64() * 1e3);
+            latency.record(sent.elapsed().as_nanos() as u64);
             anyhow::ensure!(out.len() == elems);
             anyhow::ensure!(out.iter().all(|x| x.is_finite()));
             Ok(())
@@ -505,11 +724,11 @@ fn cmd_client(args: &Args) -> Result<()> {
             // connection's lane, so draining the oldest keeps `window`
             // requests in flight without the server ever buffering more
             if inflight.len() >= window {
-                settle(&mut client, &mut inflight, &mut latency)?;
+                settle(&mut client, &mut inflight, &latency)?;
             }
         }
         while !inflight.is_empty() {
-            settle(&mut client, &mut inflight, &mut latency)?;
+            settle(&mut client, &mut inflight, &latency)?;
         }
         let wall = t0.elapsed().as_secs_f64();
         println!(
@@ -520,11 +739,12 @@ fn cmd_client(args: &Args) -> Result<()> {
             window
         );
     }
+    let snap = latency.snapshot();
     println!(
         "latency ms: p50={:.2} p95={:.2} p99={:.2}",
-        latency.percentile(50.0),
-        latency.percentile(95.0),
-        latency.percentile(99.0)
+        histo_ms(&snap, 50.0),
+        histo_ms(&snap, 95.0),
+        histo_ms(&snap, 99.0)
     );
     Ok(())
 }
@@ -569,7 +789,7 @@ fn cmd_serve_stream(
     );
 
     let handle = attention_server::start(cfg.clone())?;
-    let mut latency = Percentiles::default();
+    let latency = obs::Histo::default();
     let t0 = std::time::Instant::now();
     for _ in 0..n_streams {
         let stream = handle.open_stream(stride);
@@ -596,7 +816,7 @@ fn cmd_serve_stream(
             let step = std::time::Instant::now();
             let out = stream.query(q.into(), 1).recv().context("prefill query dropped")?;
             // drain latency: the query waits behind the whole ingest
-            latency.push(step.elapsed().as_secs_f64() * 1e3);
+            latency.record(step.elapsed().as_nanos() as u64);
             anyhow::ensure!(out.len() == token_elems);
             anyhow::ensure!(out.iter().all(|x| x.is_finite()));
         } else {
@@ -611,7 +831,7 @@ fn cmd_serve_stream(
                 let step = std::time::Instant::now();
                 stream.append(k, v);
                 let out = stream.query(q, 1).recv().context("stream query dropped")?;
-                latency.push(step.elapsed().as_secs_f64() * 1e3);
+                latency.record(step.elapsed().as_nanos() as u64);
                 anyhow::ensure!(out.len() == token_elems);
                 anyhow::ensure!(out.iter().all(|x| x.is_finite()));
             }
@@ -631,11 +851,12 @@ fn cmd_serve_stream(
         stats.stream_queries,
         stats.rejected
     );
+    let snap = latency.snapshot();
     println!(
         "per-step ms: p50={:.2} p95={:.2} p99={:.2}",
-        latency.percentile(50.0),
-        latency.percentile(95.0),
-        latency.percentile(99.0)
+        histo_ms(&snap, 50.0),
+        histo_ms(&snap, 95.0),
+        histo_ms(&snap, 99.0)
     );
     if cfg.kv.is_some() {
         println!(
@@ -668,7 +889,7 @@ fn cmd_serve_pjrt(args: &Args) -> Result<()> {
     let handle = coordinator::server::start(cfg, max_wait);
 
     let mut rng = Rng::new(7);
-    let mut latency = Percentiles::default();
+    let latency = obs::Histo::default();
     let sequences: Vec<Vec<i32>> =
         (0..n_requests).map(|_| task.sample(&mut rng).tokens).collect();
     let t0 = std::time::Instant::now();
@@ -691,7 +912,7 @@ fn cmd_serve_pjrt(args: &Args) -> Result<()> {
                 };
             }
         };
-        latency.push(submitted.elapsed().as_secs_f64() * 1e3);
+        latency.record(submitted.elapsed().as_nanos() as u64);
         anyhow::ensure!(!logits.is_empty());
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -704,13 +925,168 @@ fn cmd_serve_pjrt(args: &Args) -> Result<()> {
         stats.batches,
         stats.mean_occupancy
     );
+    let snap = latency.snapshot();
     println!(
         "latency ms: p50={:.1} p95={:.1} p99={:.1} (queue {:.1})",
-        latency.percentile(50.0),
-        latency.percentile(95.0),
-        latency.percentile(99.0),
+        histo_ms(&snap, 50.0),
+        histo_ms(&snap, 95.0),
+        histo_ms(&snap, 99.0),
         stats.mean_queue_ms
     );
+    Ok(())
+}
+
+/// `skein top --addr HOST:PORT`: live terminal view of a server or
+/// coordinator, refreshed every `--interval-ms`.  Each refresh polls
+/// the wire `Stats` reply: engine counters, span histogram percentiles
+/// (milliseconds, log2-bucket upper bounds), and — against a
+/// coordinator — per-shard health.  `--iterations N` stops after N
+/// refreshes (0 = until killed); the last frame is left on screen.
+fn cmd_top(args: &Args) -> Result<()> {
+    use skeinformer::coordinator::net::NetClient;
+
+    let addr = args
+        .get("addr")
+        .context("usage: skein top --addr HOST:PORT [--interval-ms N] [--iterations N]")?;
+    let interval = Duration::from_millis(args.get_u64("interval-ms", 1000)?.max(50));
+    let iterations = args.get_usize("iterations", 0)?;
+    let mut client = NetClient::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let info = client.info().clone();
+    let mut done = 0usize;
+    loop {
+        let sw = client.stats_full().context("stats poll")?;
+        let s = &sw.stats;
+        // ANSI clear + home: each refresh repaints from the top
+        print!("\x1b[2J\x1b[H");
+        println!(
+            "skein top — {addr} method={} B<={} H={} n={} p={} (every {}ms)",
+            info.method,
+            info.max_batch,
+            info.heads,
+            info.seq,
+            info.head_dim,
+            interval.as_millis()
+        );
+        println!(
+            "requests={} batches={} steps={} rejected={} appends={} queries={}",
+            s.requests, s.batches, s.steps, s.rejected, s.stream_appends, s.stream_queries
+        );
+        println!(
+            "occupancy={:.2} step-occupancy={:.2} queue={:.1}ms batch={:.1}ms",
+            s.mean_occupancy, s.mean_step_occupancy, s.mean_queue_ms, s.mean_batch_ms
+        );
+        println!(
+            "kv: hits={} allocs={} evicted={} resident={} ({:.1} KiB)",
+            s.kv_hit_blocks,
+            s.kv_alloc_blocks,
+            s.kv_evicted_blocks,
+            s.kv_resident_blocks,
+            s.kv_resident_bytes as f64 / 1024.0
+        );
+        let rows: Vec<Vec<String>> = sw
+            .histos
+            .iter()
+            .filter(|(_, h)| h.count() > 0)
+            .map(|(name, h)| {
+                vec![
+                    name.clone(),
+                    h.count().to_string(),
+                    format!("{:.3}", h.mean_ns() / 1e6),
+                    format!("{:.3}", histo_ms(h, 50.0)),
+                    format!("{:.3}", histo_ms(h, 95.0)),
+                    format!("{:.3}", histo_ms(h, 99.0)),
+                ]
+            })
+            .collect();
+        if !rows.is_empty() {
+            println!(
+                "{}",
+                bench_util::ascii_table(
+                    &["span", "count", "mean ms", "p50 ms", "p95 ms", "p99 ms"],
+                    &rows
+                )
+            );
+        }
+        if !sw.shards.is_empty() {
+            let rows: Vec<Vec<String>> = sw
+                .shards
+                .iter()
+                .map(|h| {
+                    vec![
+                        h.addr.clone(),
+                        if h.alive { "live".into() } else { "dead".to_string() },
+                        h.heartbeat_age_ms.to_string(),
+                        h.pending.to_string(),
+                        h.queue_depth.to_string(),
+                        h.down_drains.to_string(),
+                    ]
+                })
+                .collect();
+            println!(
+                "{}",
+                bench_util::ascii_table(
+                    &["shard", "state", "hb age ms", "pending", "queue", "down drains"],
+                    &rows
+                )
+            );
+        }
+        done += 1;
+        if iterations > 0 && done >= iterations {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// `skein scrape --addr HOST:PORT`: fetch `/metrics` over one raw HTTP
+/// GET and validate the Prometheus text exposition — at least one
+/// `# TYPE` line, at least one sample, and every non-comment line a
+/// `name value` pair with a numeric value.  Exits nonzero on anything
+/// malformed, so CI smoke tests can assert scrapeability.
+fn cmd_scrape(args: &Args) -> Result<()> {
+    use std::io::{Read, Write};
+
+    let addr = args.get("addr").context("usage: skein scrape --addr HOST:PORT")?;
+    let mut sock =
+        std::net::TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    sock.set_read_timeout(Some(Duration::from_secs(5)))?;
+    sock.set_write_timeout(Some(Duration::from_secs(5)))?;
+    write!(sock, "GET /metrics HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+    let mut raw = String::new();
+    sock.read_to_string(&mut raw).context("read response")?;
+    let (head, body) =
+        raw.split_once("\r\n\r\n").context("no header/body split in HTTP response")?;
+    let status = head.lines().next().unwrap_or("");
+    anyhow::ensure!(
+        status.starts_with("HTTP/1.1 200"),
+        "expected HTTP/1.1 200 from {addr}, got {status:?}"
+    );
+    let (mut types, mut samples) = (0usize, 0usize);
+    for line in body.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix('#') {
+            if comment.trim_start().starts_with("TYPE ") {
+                types += 1;
+            }
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (name, value) = (it.next(), it.next());
+        anyhow::ensure!(
+            name.is_some() && value.is_some() && it.next().is_none(),
+            "malformed sample line {line:?}: expected `name value`"
+        );
+        anyhow::ensure!(
+            value.unwrap().parse::<f64>().is_ok(),
+            "non-numeric value in sample line {line:?}"
+        );
+        samples += 1;
+    }
+    anyhow::ensure!(types > 0, "no # TYPE lines in exposition from {addr}");
+    anyhow::ensure!(samples > 0, "no sample lines in exposition from {addr}");
+    println!("scraped {addr}: {samples} sample(s), {types} # TYPE line(s) — well-formed");
     Ok(())
 }
 

@@ -65,8 +65,12 @@ impl RunningStats {
     }
 }
 
-/// A percentile sketch backed by full sample retention (fine at bench
-/// scale) — used for latency p50/p95/p99 in the serving example.
+/// A percentile sketch backed by **full sample retention**: memory
+/// grows without bound with the sample count, which is fine at bench
+/// scale (a few thousand samples per run) but wrong for a long-running
+/// server.  Serving paths use the constant-memory, mergeable
+/// [`obs::Histo`](crate::obs::Histo) instead; this type stays for
+/// offline benches that want exact interpolated quantiles.
 #[derive(Clone, Debug, Default)]
 pub struct Percentiles {
     samples: Vec<f64>,
@@ -93,7 +97,9 @@ impl Percentiles {
             return 0.0;
         }
         if !self.sorted {
-            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: NaN samples sort to the end instead of
+            // panicking the percentile read
+            self.samples.sort_by(f64::total_cmp);
             self.sorted = true;
         }
         let pos = q / 100.0 * (self.samples.len() - 1) as f64;
@@ -195,6 +201,20 @@ mod tests {
     fn percentile_of_empty_is_zero() {
         let mut p = Percentiles::default();
         assert_eq!(p.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_the_sort() {
+        // regression: partial_cmp(..).unwrap() died on any NaN sample
+        let mut p = Percentiles::default();
+        for x in [3.0, f64::NAN, 1.0, 2.0] {
+            p.push(x);
+        }
+        // NaN total-orders after every real number, so low quantiles
+        // still read the finite samples
+        assert_eq!(p.percentile(0.0), 1.0);
+        assert!((p.percentile(50.0) - 2.5).abs() < 1e-9);
+        assert!(p.percentile(100.0).is_nan());
     }
 
     #[test]

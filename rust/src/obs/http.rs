@@ -1,0 +1,161 @@
+//! Minimal dependency-free HTTP GET handler for `/metrics`.
+//!
+//! One accept loop thread, one short-lived connection per scrape — the
+//! Prometheus text exposition is rendered by a caller-supplied closure
+//! at request time, written with `Connection: close`, and the socket
+//! dropped.  This is deliberately not a web server: it answers
+//! `GET /metrics` (200, `text/plain; version=0.0.4`) and 404s
+//! everything else, reusing the same std-only `TcpListener` plumbing
+//! style as [`coordinator::net`](crate::coordinator::net).  Stop is
+//! the NetServer idiom: set the flag, self-connect to unblock
+//! `accept`, join.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Largest request head we will buffer before giving up on a client.
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// Per-connection socket timeout: a stalled scraper cannot wedge the
+/// accept loop for long.
+const SCRAPE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Render callback invoked per scrape.
+pub type RenderFn = Arc<dyn Fn() -> String + Send + Sync>;
+
+/// Handle to a running metrics endpoint; dropping without
+/// [`stop`](MetricsServer::stop) leaves the thread serving until
+/// process exit.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the serving thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock accept() the same way NetServer does
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Bind `addr` and serve `GET /metrics` with the text `render`
+/// produces, until [`MetricsServer::stop`].
+pub fn serve_metrics(addr: impl ToSocketAddrs, render: RenderFn) -> std::io::Result<MetricsServer> {
+    let listener = TcpListener::bind(addr)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_flag = Arc::clone(&stop);
+    let join = std::thread::Builder::new()
+        .name("skein-metrics".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop_flag.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(sock) = conn else { continue };
+                // scrapes are cheap: handle inline, one at a time
+                let _ = handle_scrape(sock, &render);
+            }
+        })
+        .expect("spawn metrics thread");
+    Ok(MetricsServer { addr, stop, join: Some(join) })
+}
+
+fn handle_scrape(mut sock: TcpStream, render: &RenderFn) -> std::io::Result<()> {
+    sock.set_read_timeout(Some(SCRAPE_TIMEOUT))?;
+    sock.set_write_timeout(Some(SCRAPE_TIMEOUT))?;
+    let mut head = Vec::new();
+    let mut buf = [0u8; 512];
+    // read until the blank line ending the request head (we ignore
+    // bodies: GET has none worth honoring)
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") {
+        if head.len() > MAX_REQUEST_BYTES {
+            return Ok(()); // hostile head: drop the connection
+        }
+        let n = sock.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+    }
+    let line = head.split(|&b| b == b'\r').next().unwrap_or(&[]);
+    let line = String::from_utf8_lossy(line);
+    let mut parts = line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method == "GET" && (path == "/metrics" || path == "/") {
+        let body = render();
+        let resp = format!(
+            "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        sock.write_all(resp.as_bytes())?;
+    } else {
+        let body = "not found\n";
+        let resp = format!(
+            "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        sock.write_all(resp.as_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_the_rest() {
+        let render: RenderFn = Arc::new(|| "# TYPE t counter\nt 1\n".to_string());
+        let srv = serve_metrics("127.0.0.1:0", render).unwrap();
+        let addr = srv.local_addr();
+        let ok = get(addr, "/metrics");
+        assert!(ok.starts_with("HTTP/1.1 200 OK"), "{ok}");
+        assert!(ok.contains("# TYPE t counter"));
+        assert!(ok.contains("text/plain"));
+        let miss = get(addr, "/nope");
+        assert!(miss.starts_with("HTTP/1.1 404"), "{miss}");
+        srv.stop();
+    }
+
+    #[test]
+    fn render_runs_per_scrape() {
+        let hits = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let h = Arc::clone(&hits);
+        let render: RenderFn = Arc::new(move || {
+            let n = h.fetch_add(1, Ordering::SeqCst) + 1;
+            format!("scrapes {n}\n")
+        });
+        let srv = serve_metrics("127.0.0.1:0", render).unwrap();
+        let addr = srv.local_addr();
+        assert!(get(addr, "/metrics").contains("scrapes 1"));
+        assert!(get(addr, "/metrics").contains("scrapes 2"));
+        srv.stop();
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+}

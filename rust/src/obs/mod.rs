@@ -1,0 +1,244 @@
+//! Serving telemetry: metrics registry, span tracing, and exposition.
+//!
+//! Three parts (see DESIGN.md §8):
+//!
+//! * [`registry`] — named counters / gauges / fixed-bucket log2
+//!   latency histograms (constant memory, mergeable bucket-wise for
+//!   cluster aggregation) with Prometheus text exposition.
+//! * [`trace`] — a lock-free per-thread flight recorder of
+//!   `{span, t_start, t_end, conn, stream}` events, drained as a
+//!   Chrome-trace-compatible JSON array.
+//! * [`http`] — the minimal dependency-free `GET /metrics` endpoint
+//!   (`skein serve --metrics-addr H:P`).
+//!
+//! [`ServeTelemetry`] bundles them for the serving layers with the
+//! hot-path metric handles prebound.  The **overhead contract**: every
+//! record site is gated on one `enabled` bool; instrumentation reads
+//! *clocks only* — never RNG state, never request data — so served
+//! bytes are bitwise identical with telemetry on, off, or tracing
+//! (pinned by `rust/tests/telemetry.rs`; measured by
+//! `make obs-bench`).  `--no-telemetry` is the kill switch.
+//!
+//! Timestamps are nanoseconds since a lazily-pinned process epoch
+//! ([`now_ns`]), so all spans in one process share a timeline.
+
+pub mod http;
+pub mod registry;
+pub mod trace;
+
+pub use http::{serve_metrics, MetricsServer, RenderFn};
+pub use registry::{
+    bucket_index, bucket_le, render_histogram, Counter, Gauge, Histo, HistoSnapshot, Registry,
+    HISTO_BUCKETS,
+};
+pub use trace::{FlightRecorder, Span, TraceEvent, DEFAULT_TRACE_CAP};
+
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+/// Nanoseconds since the process telemetry epoch (the first call pins
+/// it).  Monotone within a process; meaningless across processes.
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Epoch-relative start timestamp for a span whose duration was
+/// measured with an [`Instant`]: `end_ns - elapsed`, saturating.
+pub fn start_ns(end_ns: u64, since: Instant) -> u64 {
+    end_ns.saturating_sub(since.elapsed().as_nanos() as u64)
+}
+
+/// The telemetry bundle threaded through the serving layers: one
+/// registry, one flight recorder, and prebound handles for every
+/// hot-path metric so recording never touches the registry maps.
+///
+/// Constructed once per server / coordinator process
+/// ([`ServeTelemetry::new`]); `enabled == false` (the `--no-telemetry`
+/// kill switch, or [`ServeTelemetry::disabled`] — what plain
+/// `attention_server::start` uses) turns every record site into a
+/// single branch that reads no clock.
+pub struct ServeTelemetry {
+    enabled: bool,
+    registry: Arc<Registry>,
+    recorder: Arc<FlightRecorder>,
+    g_trace_dropped: Arc<Gauge>,
+    /// Engine: admission-queue wait per request.
+    pub h_queue_wait: Arc<Histo>,
+    /// Engine: first-ready-work to step execution.
+    pub h_batch_form: Arc<Histo>,
+    /// Engine: per-step attention compute.
+    pub h_attn_compute: Arc<Histo>,
+    /// Engine: KV append/prefill/dedupe ingest.
+    pub h_kv_ingest: Arc<Histo>,
+    /// Engine: cache-backed K/V gather.
+    pub h_kv_gather: Arc<Histo>,
+    /// Front end: reply frame write on the writer thread.
+    pub h_reply_write: Arc<Histo>,
+    /// Coordinator: scatter frame encode + send per request.
+    pub h_scatter_encode: Arc<Histo>,
+    /// Coordinator: per-shard submit→reply round trip.
+    pub h_shard_rtt: Arc<Histo>,
+    /// Coordinator: scatter start to gather completion.
+    pub h_gather_wait: Arc<Histo>,
+    /// Engine: ready admission-queue slots at the last step.
+    pub g_queue_depth: Arc<Gauge>,
+    /// Engine: resident KV blocks at the last snapshot.
+    pub g_kv_resident_blocks: Arc<Gauge>,
+    /// Engine: resident KV bytes at the last snapshot.
+    pub g_kv_resident_bytes: Arc<Gauge>,
+}
+
+impl ServeTelemetry {
+    pub fn new(enabled: bool) -> Arc<ServeTelemetry> {
+        Self::with_trace_cap(enabled, DEFAULT_TRACE_CAP)
+    }
+
+    /// As [`new`](Self::new) with an explicit per-thread ring
+    /// capacity (tests pin wrap behavior with tiny rings).
+    pub fn with_trace_cap(enabled: bool, trace_cap: usize) -> Arc<ServeTelemetry> {
+        let registry = Registry::new();
+        Arc::new(ServeTelemetry {
+            enabled,
+            recorder: FlightRecorder::new(trace_cap),
+            g_trace_dropped: registry.gauge("skein_trace_dropped_total"),
+            h_queue_wait: registry.histo("skein_queue_wait_ns"),
+            h_batch_form: registry.histo("skein_batch_form_ns"),
+            h_attn_compute: registry.histo("skein_attn_compute_ns"),
+            h_kv_ingest: registry.histo("skein_kv_ingest_ns"),
+            h_kv_gather: registry.histo("skein_kv_gather_ns"),
+            h_reply_write: registry.histo("skein_reply_write_ns"),
+            h_scatter_encode: registry.histo("skein_scatter_encode_ns"),
+            h_shard_rtt: registry.histo("skein_shard_rtt_ns"),
+            h_gather_wait: registry.histo("skein_gather_wait_ns"),
+            g_queue_depth: registry.gauge("skein_queue_depth"),
+            g_kv_resident_blocks: registry.gauge("skein_kv_resident_blocks"),
+            g_kv_resident_bytes: registry.gauge("skein_kv_resident_bytes"),
+            registry,
+        })
+    }
+
+    /// The no-op bundle: what in-process `start` wires by default.
+    pub fn disabled() -> Arc<ServeTelemetry> {
+        Self::new(false)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        &self.recorder
+    }
+
+    /// Epoch timestamp for an about-to-open span, or 0 when disabled
+    /// (record sites pass it straight back to [`span`](Self::span),
+    /// which ignores 0).
+    #[inline]
+    pub fn now(&self) -> u64 {
+        if self.enabled {
+            now_ns()
+        } else {
+            0
+        }
+    }
+
+    /// Close a span opened at `t0` (a [`now`](Self::now) reading):
+    /// records the flight-recorder event and the span's histogram
+    /// sample.  No-op when disabled or `t0 == 0`.
+    #[inline]
+    pub fn span(self: &Arc<Self>, span: Span, t0: u64, conn: u64, stream: u64) {
+        if !self.enabled || t0 == 0 {
+            return;
+        }
+        self.span_at(span, t0, now_ns(), conn, stream);
+    }
+
+    /// As [`span`](Self::span) with an explicit end timestamp (for
+    /// sites that already read the clock).
+    pub fn span_at(self: &Arc<Self>, span: Span, t0: u64, t1: u64, conn: u64, stream: u64) {
+        if !self.enabled || t0 == 0 {
+            return;
+        }
+        self.recorder.record(span, t0, t1, conn, stream);
+        self.histo_for(span).record(t1.saturating_sub(t0));
+    }
+
+    fn histo_for(&self, span: Span) -> &Histo {
+        match span {
+            Span::QueueWait => &self.h_queue_wait,
+            Span::BatchForm => &self.h_batch_form,
+            Span::KvIngestHit | Span::KvIngestMiss => &self.h_kv_ingest,
+            Span::KvGather => &self.h_kv_gather,
+            Span::AttnCompute => &self.h_attn_compute,
+            Span::ReplyWrite => &self.h_reply_write,
+            Span::ScatterEncode => &self.h_scatter_encode,
+            Span::ShardRtt => &self.h_shard_rtt,
+            Span::GatherWait => &self.h_gather_wait,
+        }
+    }
+
+    /// Render the registry's Prometheus exposition (refreshes the
+    /// trace drop counter first).
+    pub fn render(&self) -> String {
+        self.g_trace_dropped.set(self.recorder.dropped());
+        self.registry.render_prometheus()
+    }
+
+    /// Gauge and histogram snapshots for the wire `Stats` reply
+    /// (refreshes the trace drop counter first).  Empty when disabled,
+    /// so a kill-switched server sends the same frame bytes it always
+    /// did.
+    pub fn wire_snapshots(&self) -> (Vec<(String, u64)>, Vec<(String, HistoSnapshot)>) {
+        if !self.enabled {
+            return (Vec::new(), Vec::new());
+        }
+        self.g_trace_dropped.set(self.recorder.dropped());
+        (self.registry.gauge_snapshots(), self.registry.histo_snapshots())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_bundle_records_nothing() {
+        let t = ServeTelemetry::disabled();
+        let t0 = t.now();
+        assert_eq!(t0, 0, "disabled now() must not read the clock path");
+        t.span(Span::QueueWait, t0, 1, 0);
+        assert_eq!(t.recorder().recorded(), 0);
+        assert_eq!(t.h_queue_wait.snapshot().count(), 0);
+    }
+
+    #[test]
+    fn span_records_both_ring_and_histogram() {
+        let t = ServeTelemetry::new(true);
+        let t0 = t.now();
+        assert!(t0 > 0);
+        t.span(Span::AttnCompute, t0, 2, 5);
+        assert_eq!(t.recorder().recorded(), 1);
+        assert_eq!(t.h_attn_compute.snapshot().count(), 1);
+        let ev = &t.recorder().snapshot()[0];
+        assert_eq!((ev.conn, ev.stream), (2, 5));
+        assert!(ev.t_end_ns >= ev.t_start_ns);
+        let text = t.render();
+        assert!(text.contains("skein_attn_compute_ns_count 1"));
+        assert!(text.contains("skein_trace_dropped_total 0"));
+    }
+
+    #[test]
+    fn epoch_is_monotone() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+        let i = Instant::now();
+        let end = now_ns();
+        assert!(start_ns(end, i) <= end);
+    }
+}

@@ -1,0 +1,364 @@
+//! Metrics registry: named counters, gauges, and fixed-bucket log2
+//! latency histograms with Prometheus text exposition.
+//!
+//! The histogram is the load-bearing type: unlike
+//! [`metrics::Percentiles`](crate::metrics::Percentiles), which retains
+//! every sample, a [`Histo`] is **constant memory** ([`HISTO_BUCKETS`]
+//! atomic buckets over nanoseconds) and **mergeable by bucket-wise
+//! sum** — which is what lets the shard coordinator aggregate
+//! per-shard latency distributions over the wire without shipping
+//! samples.  Bucket `i` covers the duration range
+//! `(2^(i-1), 2^i]` ns (bucket 0 covers `0..=1`; the last bucket is
+//! the `+Inf` overflow), so quantiles come back as power-of-two upper
+//! bounds — coarse, but bounded and exact to the bucket contract.
+//!
+//! All mutation is relaxed atomics: recording a sample is a couple of
+//! `fetch_add`s, safe from any thread, and never allocates.  Snapshots
+//! ([`HistoSnapshot`]) are plain `Copy` data used for wire export and
+//! merging.
+//!
+//! ```
+//! use skeinformer::obs::{Histo, HistoSnapshot};
+//! let h = Histo::default();
+//! for v in [100u64, 200, 3_000, 50_000] {
+//!     h.record(v);
+//! }
+//! let s = h.snapshot();
+//! assert_eq!(s.count(), 4);
+//! assert!(s.percentile(50.0) >= 200);
+//! let merged = HistoSnapshot::merge_all(&[s, s]);
+//! assert_eq!(merged.count(), 8);
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of log2 buckets per histogram.  Bucket 38's upper bound is
+/// `2^38` ns ≈ 275 s; anything slower lands in the final `+Inf`
+/// bucket.
+pub const HISTO_BUCKETS: usize = 40;
+
+/// Bucket index for a nanosecond value: 0 for `v <= 1`, else
+/// `ceil(log2(v))`, clamped into the `+Inf` bucket.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    let bits = 64 - v.saturating_sub(1).leading_zeros() as usize;
+    bits.min(HISTO_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `i`, or `None` for the `+Inf`
+/// overflow bucket.
+#[inline]
+pub fn bucket_le(i: usize) -> Option<u64> {
+    if i + 1 < HISTO_BUCKETS {
+        Some(1u64 << i)
+    } else {
+        None
+    }
+}
+
+/// Monotone counter (relaxed atomics; safe from any thread).
+#[derive(Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (relaxed atomics).
+#[derive(Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log2 histogram over u64 nanoseconds: constant memory,
+/// lock-free recording, mergeable snapshots.
+pub struct Histo {
+    buckets: [AtomicU64; HISTO_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for Histo {
+    fn default() -> Self {
+        Histo { buckets: std::array::from_fn(|_| AtomicU64::new(0)), sum: AtomicU64::new(0) }
+    }
+}
+
+impl Histo {
+    /// Record one nanosecond sample.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the buckets (plain data, `Copy`).
+    pub fn snapshot(&self) -> HistoSnapshot {
+        HistoSnapshot {
+            sum: self.sum.load(Ordering::Relaxed),
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Plain-data copy of a [`Histo`]: what goes over the wire and what
+/// the coordinator merges bucket-wise.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistoSnapshot {
+    pub sum: u64,
+    pub buckets: [u64; HISTO_BUCKETS],
+}
+
+impl Default for HistoSnapshot {
+    fn default() -> Self {
+        HistoSnapshot { sum: 0, buckets: [0; HISTO_BUCKETS] }
+    }
+}
+
+impl HistoSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Bucket-wise sum: the merge is associative and commutative, so
+    /// any aggregation tree over any shard order yields the same
+    /// result (pinned by `rust/tests/telemetry.rs`).
+    pub fn merge(&mut self, other: &HistoSnapshot) {
+        self.sum = self.sum.wrapping_add(other.sum);
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn merge_all(parts: &[HistoSnapshot]) -> HistoSnapshot {
+        let mut out = HistoSnapshot::default();
+        for p in parts {
+            out.merge(p);
+        }
+        out
+    }
+
+    /// Upper bound (ns) of the bucket containing the `p`-th percentile
+    /// sample, or 0 for an empty histogram.  The `+Inf` bucket reports
+    /// the largest finite bound.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_le(i).unwrap_or(1u64 << (HISTO_BUCKETS - 1));
+            }
+        }
+        1u64 << (HISTO_BUCKETS - 1)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / n as f64
+        }
+    }
+}
+
+/// Named-metric registry: idempotent registration by name, sorted
+/// Prometheus text exposition.  `Arc`-shareable; handles returned by
+/// the getters are prebound `Arc`s so hot paths never touch the maps.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histos: Mutex<BTreeMap<String, Arc<Histo>>>,
+}
+
+impl Registry {
+    pub fn new() -> Arc<Registry> {
+        Arc::new(Registry::default())
+    }
+
+    /// Get-or-create the named counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().expect("registry poisoned");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Get-or-create the named gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().expect("registry poisoned");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Get-or-create the named histogram.
+    pub fn histo(&self, name: &str) -> Arc<Histo> {
+        let mut m = self.histos.lock().expect("registry poisoned");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Snapshot every gauge as `(name, value)` (wire export).
+    pub fn gauge_snapshots(&self) -> Vec<(String, u64)> {
+        let m = self.gauges.lock().expect("registry poisoned");
+        m.iter().map(|(k, v)| (k.clone(), v.get())).collect()
+    }
+
+    /// Snapshot every counter as `(name, value)`.
+    pub fn counter_snapshots(&self) -> Vec<(String, u64)> {
+        let m = self.counters.lock().expect("registry poisoned");
+        m.iter().map(|(k, v)| (k.clone(), v.get())).collect()
+    }
+
+    /// Snapshot every histogram as `(name, snapshot)` (wire export).
+    pub fn histo_snapshots(&self) -> Vec<(String, HistoSnapshot)> {
+        let m = self.histos.lock().expect("registry poisoned");
+        m.iter().map(|(k, v)| (k.clone(), v.snapshot())).collect()
+    }
+
+    /// Prometheus text exposition (format version 0.0.4): `# TYPE`
+    /// line per metric, `_bucket{le=...}` / `_sum` / `_count` series
+    /// per histogram, everything name-sorted so output is stable.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counter_snapshots() {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", c);
+        }
+        for (name, g) in self.gauge_snapshots() {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {}", g);
+        }
+        for (name, h) in self.histo_snapshots() {
+            render_histogram(&mut out, &name, &h);
+        }
+        out
+    }
+}
+
+/// Render one histogram in Prometheus text format (cumulative
+/// buckets).  Public so aggregated snapshots that never lived in a
+/// local [`Registry`] (the coordinator's merged view) render the same
+/// way.
+pub fn render_histogram(out: &mut String, name: &str, h: &HistoSnapshot) {
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, &c) in h.buckets.iter().enumerate() {
+        cum += c;
+        // empty interior buckets are skipped to keep the exposition
+        // small; cumulative semantics make that lossless
+        if c == 0 && i + 1 < HISTO_BUCKETS {
+            continue;
+        }
+        match bucket_le(i) {
+            Some(le) => {
+                let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+            }
+            None => {
+                let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+            }
+        }
+    }
+    let _ = writeln!(out, "{name}_sum {}", h.sum);
+    let _ = writeln!(out, "{name}_count {}", cum);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_covers_the_log2_ranges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(1 << 20), 20);
+        assert_eq!(bucket_index((1 << 20) + 1), 21);
+        assert_eq!(bucket_index(u64::MAX), HISTO_BUCKETS - 1);
+        // every value lands in a bucket whose le bound contains it
+        for v in [0u64, 1, 2, 7, 1000, 123_456_789] {
+            let i = bucket_index(v);
+            if let Some(le) = bucket_le(i) {
+                assert!(v <= le, "value {v} above its bucket bound {le}");
+            }
+            if i > 0 {
+                let below = bucket_le(i - 1).expect("interior bucket");
+                assert!(v > below, "value {v} should be in bucket {}", i - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn percentile_returns_bucket_upper_bounds() {
+        let h = Histo::default();
+        for _ in 0..99 {
+            h.record(100); // bucket le=128
+        }
+        h.record(1_000_000); // bucket le=2^20
+        let s = h.snapshot();
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.percentile(50.0), 128);
+        assert_eq!(s.percentile(99.0), 128);
+        assert_eq!(s.percentile(100.0), 1 << 20);
+        assert_eq!(HistoSnapshot::default().percentile(50.0), 0);
+    }
+
+    #[test]
+    fn merge_is_bucket_wise_sum() {
+        let a = Histo::default();
+        let b = Histo::default();
+        a.record(10);
+        a.record(10_000);
+        b.record(10);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count(), 3);
+        assert_eq!(m.sum, 20_010);
+        assert_eq!(m.buckets[bucket_index(10)], 2);
+    }
+
+    #[test]
+    fn registry_is_idempotent_and_renders_sorted() {
+        let r = Registry::new();
+        let c = r.counter("skein_requests_total");
+        c.add(3);
+        r.counter("skein_requests_total").inc(); // same handle
+        assert_eq!(c.get(), 4);
+        r.gauge("skein_queue_depth").set(7);
+        r.histo("skein_queue_wait_ns").record(100);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE skein_requests_total counter"));
+        assert!(text.contains("skein_requests_total 4"));
+        assert!(text.contains("skein_queue_depth 7"));
+        assert!(text.contains("skein_queue_wait_ns_bucket{le=\"128\"} 1"));
+        assert!(text.contains("skein_queue_wait_ns_count 1"));
+    }
+}

@@ -1,0 +1,351 @@
+//! Per-stage span tracing: a flight recorder of recent serving spans.
+//!
+//! Each writer thread owns a private ring of [`TRACE`-capacity] slots
+//! registered lazily through a thread-local, so the record path is
+//! **lock-free**: one relaxed counter bump plus a per-slot seqlock
+//! (odd/even sequence) that lets the drain side detect and skip slots
+//! being overwritten mid-read.  The ring is bounded — when a shard
+//! wraps, its oldest events are overwritten and counted as dropped
+//! ([`FlightRecorder::dropped`]), never blocking the writer.
+//!
+//! Spans only ever carry clock readings and routing ids (`conn`,
+//! `stream`) — never request data and never RNG state — which is the
+//! invariant that keeps tracing zero-cost on served bytes.
+//!
+//! Drains render as a Chrome-trace-event-compatible JSON array
+//! ([`FlightRecorder::to_chrome_trace`]), one complete `"ph": "X"`
+//! event object per line, loadable in `chrome://tracing` / Perfetto.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default per-thread ring capacity (slots).
+pub const DEFAULT_TRACE_CAP: usize = 4096;
+
+/// What a span measured.  Names are the Chrome-trace event names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Span {
+    /// Admission-queue wait: request enqueue to step admission.
+    QueueWait,
+    /// Batch formation: first ready work to step execution.
+    BatchForm,
+    /// KV ingest where every sealed block was shared (prefix hit).
+    KvIngestHit,
+    /// KV ingest that allocated at least one fresh block.
+    KvIngestMiss,
+    /// Cache-backed K/V gather feeding the engine.
+    KvGather,
+    /// Per-step attention compute (the engine grid).
+    AttnCompute,
+    /// Reply frame write on the connection writer thread.
+    ReplyWrite,
+    /// Coordinator: encoding + sending one request's scatter frames.
+    ScatterEncode,
+    /// Coordinator: one shard's submit→reply round trip.
+    ShardRtt,
+    /// Coordinator: scatter start to last sub-reply (gather countdown).
+    GatherWait,
+}
+
+impl Span {
+    pub fn name(self) -> &'static str {
+        match self {
+            Span::QueueWait => "queue_wait",
+            Span::BatchForm => "batch_form",
+            Span::KvIngestHit => "kv_ingest_hit",
+            Span::KvIngestMiss => "kv_ingest_miss",
+            Span::KvGather => "kv_gather",
+            Span::AttnCompute => "attn_compute",
+            Span::ReplyWrite => "reply_write",
+            Span::ScatterEncode => "scatter_encode",
+            Span::ShardRtt => "shard_rtt",
+            Span::GatherWait => "gather_wait",
+        }
+    }
+
+    fn to_u64(self) -> u64 {
+        match self {
+            Span::QueueWait => 0,
+            Span::BatchForm => 1,
+            Span::KvIngestHit => 2,
+            Span::KvIngestMiss => 3,
+            Span::KvGather => 4,
+            Span::AttnCompute => 5,
+            Span::ReplyWrite => 6,
+            Span::ScatterEncode => 7,
+            Span::ShardRtt => 8,
+            Span::GatherWait => 9,
+        }
+    }
+
+    fn from_u64(v: u64) -> Option<Span> {
+        Some(match v {
+            0 => Span::QueueWait,
+            1 => Span::BatchForm,
+            2 => Span::KvIngestHit,
+            3 => Span::KvIngestMiss,
+            4 => Span::KvGather,
+            5 => Span::AttnCompute,
+            6 => Span::ReplyWrite,
+            7 => Span::ScatterEncode,
+            8 => Span::ShardRtt,
+            9 => Span::GatherWait,
+            _ => return None,
+        })
+    }
+}
+
+/// One drained span event.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub span: Span,
+    pub t_start_ns: u64,
+    pub t_end_ns: u64,
+    pub conn: u64,
+    pub stream: u64,
+    /// Writer-thread ring id (the Chrome-trace `tid`).
+    pub tid: u64,
+}
+
+/// One ring slot: a seqlock sequence plus the event fields.  Fields
+/// are atomics so concurrent drain reads are race-free; the sequence
+/// (odd while a write is in flight) filters torn combinations.
+struct Slot {
+    seq: AtomicU64,
+    span: AtomicU64,
+    t0: AtomicU64,
+    t1: AtomicU64,
+    conn: AtomicU64,
+    stream: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            span: AtomicU64::new(0),
+            t0: AtomicU64::new(0),
+            t1: AtomicU64::new(0),
+            conn: AtomicU64::new(0),
+            stream: AtomicU64::new(0),
+        }
+    }
+}
+
+/// One writer thread's private ring.  `push` is called only by the
+/// owning thread; drains may run concurrently from any thread.
+struct RingShard {
+    tid: u64,
+    /// Total events ever pushed (monotone); `written - cap` of them
+    /// have been overwritten once `written > cap`.
+    written: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl RingShard {
+    fn push(&self, span: Span, t0: u64, t1: u64, conn: u64, stream: u64) {
+        let n = self.written.load(Ordering::Relaxed);
+        let slot = &self.slots[(n % self.slots.len() as u64) as usize];
+        // odd sequence marks the slot mid-write so drains skip it
+        slot.seq.fetch_add(1, Ordering::Release);
+        slot.span.store(span.to_u64(), Ordering::Relaxed);
+        slot.t0.store(t0, Ordering::Relaxed);
+        slot.t1.store(t1, Ordering::Relaxed);
+        slot.conn.store(conn, Ordering::Relaxed);
+        slot.stream.store(stream, Ordering::Relaxed);
+        slot.seq.fetch_add(1, Ordering::Release);
+        self.written.store(n + 1, Ordering::Release);
+    }
+
+    fn read(&self, idx: u64) -> Option<TraceEvent> {
+        let slot = &self.slots[(idx % self.slots.len() as u64) as usize];
+        let s1 = slot.seq.load(Ordering::Acquire);
+        if s1 % 2 == 1 {
+            return None; // write in flight
+        }
+        let ev = TraceEvent {
+            span: Span::from_u64(slot.span.load(Ordering::Relaxed))?,
+            t_start_ns: slot.t0.load(Ordering::Relaxed),
+            t_end_ns: slot.t1.load(Ordering::Relaxed),
+            conn: slot.conn.load(Ordering::Relaxed),
+            stream: slot.stream.load(Ordering::Relaxed),
+            tid: self.tid,
+        };
+        if slot.seq.load(Ordering::Acquire) != s1 {
+            return None; // overwritten under us
+        }
+        Some(ev)
+    }
+}
+
+static NEXT_RECORDER: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// This thread's shard per recorder it has written to, keyed by
+    /// recorder id (tests may run several recorders in one process).
+    static MY_SHARDS: std::cell::RefCell<Vec<(u64, Arc<RingShard>)>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Bounded multi-shard flight recorder; see the module doc.
+pub struct FlightRecorder {
+    id: u64,
+    cap: usize,
+    shards: Mutex<Vec<Arc<RingShard>>>,
+    next_tid: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Arc<FlightRecorder> {
+        Arc::new(FlightRecorder {
+            id: NEXT_RECORDER.fetch_add(1, Ordering::Relaxed),
+            cap: cap.max(1),
+            shards: Mutex::new(Vec::new()),
+            next_tid: AtomicU64::new(0),
+        })
+    }
+
+    /// Record one completed span from the calling thread (lock-free
+    /// after this thread's first record).
+    pub fn record(self: &Arc<Self>, span: Span, t0: u64, t1: u64, conn: u64, stream: u64) {
+        MY_SHARDS.with(|cell| {
+            let mut mine = cell.borrow_mut();
+            let shard = match mine.iter().find(|(id, _)| *id == self.id) {
+                Some((_, s)) => Arc::clone(s),
+                None => {
+                    let shard = Arc::new(RingShard {
+                        tid: self.next_tid.fetch_add(1, Ordering::Relaxed),
+                        written: AtomicU64::new(0),
+                        slots: (0..self.cap).map(|_| Slot::new()).collect(),
+                    });
+                    self.shards.lock().expect("recorder poisoned").push(Arc::clone(&shard));
+                    mine.push((self.id, Arc::clone(&shard)));
+                    shard
+                }
+            };
+            shard.push(span, t0, t1, conn, stream);
+        });
+    }
+
+    /// Total events overwritten before they could be drained, summed
+    /// over all writer shards.
+    pub fn dropped(&self) -> u64 {
+        let shards = self.shards.lock().expect("recorder poisoned");
+        shards
+            .iter()
+            .map(|s| s.written.load(Ordering::Acquire).saturating_sub(s.slots.len() as u64))
+            .sum()
+    }
+
+    /// Total events ever recorded, summed over all writer shards.
+    pub fn recorded(&self) -> u64 {
+        let shards = self.shards.lock().expect("recorder poisoned");
+        shards.iter().map(|s| s.written.load(Ordering::Acquire)).sum()
+    }
+
+    /// Drain a snapshot of every shard's retained events, sorted by
+    /// start time.  Slots being overwritten mid-drain are skipped
+    /// (seqlock), so the result is always well-formed.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let shards = self.shards.lock().expect("recorder poisoned");
+        let mut out = Vec::new();
+        for shard in shards.iter() {
+            let w = shard.written.load(Ordering::Acquire);
+            let lo = w.saturating_sub(shard.slots.len() as u64);
+            for idx in lo..w {
+                if let Some(ev) = shard.read(idx) {
+                    out.push(ev);
+                }
+            }
+        }
+        out.sort_by_key(|e| (e.t_start_ns, e.tid));
+        out
+    }
+
+    /// Render the retained events as a Chrome-trace-event JSON array,
+    /// one complete event object per line (`chrome://tracing` /
+    /// Perfetto compatible).  Timestamps are microseconds per the
+    /// trace-event spec.
+    pub fn to_chrome_trace(&self, method: &str) -> String {
+        let mut out = String::from("[\n");
+        let events = self.snapshot();
+        for (i, ev) in events.iter().enumerate() {
+            let ts = ev.t_start_ns as f64 / 1e3;
+            let dur = ev.t_end_ns.saturating_sub(ev.t_start_ns) as f64 / 1e3;
+            let sep = if i + 1 == events.len() { "" } else { "," };
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"serve\",\"ph\":\"X\",\"ts\":{ts:.3},\
+                 \"dur\":{dur:.3},\"pid\":0,\"tid\":{},\"args\":{{\"conn\":{},\
+                 \"stream\":{},\"method\":\"{}\"}}}}{sep}\n",
+                ev.span.name(),
+                ev.tid,
+                ev.conn,
+                ev.stream,
+                method,
+            ));
+        }
+        out.push_str("]\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_drains_in_start_order() {
+        let r = FlightRecorder::new(16);
+        r.record(Span::QueueWait, 100, 200, 1, 0);
+        r.record(Span::AttnCompute, 150, 400, 1, 0);
+        let evs = r.snapshot();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].span, Span::QueueWait);
+        assert_eq!(evs[1].span, Span::AttnCompute);
+        assert_eq!(r.dropped(), 0);
+        assert_eq!(r.recorded(), 2);
+    }
+
+    #[test]
+    fn wrap_drops_oldest_and_counts() {
+        let r = FlightRecorder::new(4);
+        for i in 0..10u64 {
+            r.record(Span::ReplyWrite, i, i + 1, 0, 0);
+        }
+        let evs = r.snapshot();
+        assert_eq!(evs.len(), 4, "ring retains cap events");
+        assert_eq!(r.dropped(), 6);
+        // the retained events are the newest ones
+        assert_eq!(evs[0].t_start_ns, 6);
+        assert_eq!(evs[3].t_start_ns, 9);
+    }
+
+    #[test]
+    fn shards_are_per_thread() {
+        let r = FlightRecorder::new(8);
+        r.record(Span::BatchForm, 1, 2, 0, 0);
+        let r2 = Arc::clone(&r);
+        std::thread::spawn(move || {
+            r2.record(Span::BatchForm, 3, 4, 0, 0);
+        })
+        .join()
+        .unwrap();
+        let evs = r.snapshot();
+        assert_eq!(evs.len(), 2);
+        let tids: std::collections::HashSet<u64> = evs.iter().map(|e| e.tid).collect();
+        assert_eq!(tids.len(), 2, "each writer thread gets its own shard");
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let r = FlightRecorder::new(8);
+        r.record(Span::QueueWait, 1_000, 2_500, 3, 7);
+        let text = r.to_chrome_trace("skeinformer");
+        let doc = crate::json::parse(&text).expect("chrome trace parses");
+        let arr = doc.as_arr().expect("array");
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].req_str("name").unwrap(), "queue_wait");
+        assert_eq!(arr[0].req_str("ph").unwrap(), "X");
+        assert_eq!(arr[0].path(&["args", "conn"]).unwrap().as_usize().unwrap(), 3);
+    }
+}

@@ -4,7 +4,7 @@
 //! bert-base-cased model, projected by either pretrained or randomly
 //! initialised W_Q/K/V.  Offline we cannot load BERT, so we synthesise
 //! inputs with the *statistics that matter for the experiment* (see
-//! DESIGN.md §9): pretrained embeddings are strongly anisotropic (a few
+//! DESIGN.md §10): pretrained embeddings are strongly anisotropic (a few
 //! dominant directions + token clusters), which is what produces peaked,
 //! low-rank attention; random init is isotropic and produces near-uniform
 //! attention.  Both modes are provided, exactly as the paper sweeps both.

@@ -1,0 +1,363 @@
+//! End-to-end serving telemetry: the tiers must be exact, bounded, and
+//! invisible in served bytes.
+//!
+//! * **Merge algebra** — cluster aggregation relies on bucket-wise
+//!   histogram merge being associative and commutative; pinned against
+//!   a brute-force oracle over random samples.
+//! * **Bounded tracing** — per-thread flight-recorder rings wrap
+//!   oldest-first and count drops exactly; drained Chrome-trace JSON is
+//!   parseable and every span is well-formed (`t_end >= t_start`).
+//! * **Zero-cost contract** — serving with telemetry on is bitwise
+//!   identical to serving with it off: spans read clocks only, never
+//!   RNG state or request data.
+//! * **Cluster aggregation** — a coordinator's stats reply carries
+//!   histograms whose counts equal the sum of its shards' own counts,
+//!   plus the coordinator's scatter/gather spans and shard health rows.
+
+use skeinformer::coordinator::attention_server::{self, AttentionServerConfig, HeadsRequest};
+use skeinformer::coordinator::net::{self, NetClient};
+use skeinformer::coordinator::shard::Coordinator;
+use skeinformer::json;
+use skeinformer::obs::{
+    FlightRecorder, Histo, HistoSnapshot, Registry, ServeTelemetry, Span, HISTO_BUCKETS,
+};
+use skeinformer::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn cfg(method: &str) -> AttentionServerConfig {
+    AttentionServerConfig {
+        method: method.to_string(),
+        d: 8,
+        heads: 2,
+        seq: 16,
+        head_dim: 4,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        seed: 0,
+        workers: None,
+        queue_depth: 0,
+        kv: None,
+    }
+}
+
+fn requests(c: &AttentionServerConfig, n: usize, seed: u64) -> Vec<HeadsRequest> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| HeadsRequest::random(c.request_elems(), &mut rng)).collect()
+}
+
+/// Bucket-wise merge must be associative and commutative — any
+/// aggregation tree over any shard order yields the oracle (one
+/// histogram fed every sample).
+#[test]
+fn histogram_merge_matches_brute_force_oracle() {
+    let mut rng = Rng::new(42);
+    // samples spanning the full log2 range, including 0 and huge
+    let samples: Vec<u64> = (0..3000)
+        .map(|i| {
+            let shift = (rng.next_u64() % 40) as u32;
+            match i % 7 {
+                0 => 0,
+                1 => u64::MAX,
+                _ => rng.next_u64() >> shift.min(63),
+            }
+        })
+        .collect();
+    let oracle = {
+        let h = Histo::default();
+        for &s in &samples {
+            h.record(s);
+        }
+        h.snapshot()
+    };
+    // three uneven shards
+    let parts: Vec<HistoSnapshot> = [0..500usize, 500..501, 501..3000]
+        .into_iter()
+        .map(|r| {
+            let h = Histo::default();
+            for &s in &samples[r] {
+                h.record(s);
+            }
+            h.snapshot()
+        })
+        .collect();
+    let (a, b, c) = (parts[0], parts[1], parts[2]);
+    // ((a+b)+c)
+    let mut left = a;
+    left.merge(&b);
+    left.merge(&c);
+    // (a+(b+c))
+    let mut right = b;
+    right.merge(&c);
+    let mut assoc = a;
+    assoc.merge(&right);
+    // (c+b)+a — commuted
+    let mut comm = c;
+    comm.merge(&b);
+    comm.merge(&a);
+    assert_eq!(left, oracle, "merge must equal the single-histogram oracle");
+    assert_eq!(assoc, oracle, "merge must be associative");
+    assert_eq!(comm, oracle, "merge must be commutative");
+    assert_eq!(HistoSnapshot::merge_all(&parts), oracle);
+    assert_eq!(oracle.count(), samples.len() as u64);
+    assert_eq!(oracle.buckets.len(), HISTO_BUCKETS);
+}
+
+/// A tiny ring under multi-thread pressure: each writer thread keeps
+/// exactly `cap` newest events, drops the rest, and counts every drop.
+#[test]
+fn trace_ring_wraps_oldest_first_and_counts_drops() {
+    const CAP: usize = 64;
+    const THREADS: u64 = 4;
+    const EACH: u64 = 100;
+    let rec = FlightRecorder::new(CAP);
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let rec = Arc::clone(&rec);
+            std::thread::spawn(move || {
+                for i in 0..EACH {
+                    rec.record(Span::AttnCompute, t * 1000 + i, t * 1000 + i + 1, t, 0);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(rec.recorded(), THREADS * EACH);
+    assert_eq!(rec.dropped(), THREADS * (EACH - CAP as u64));
+    let evs = rec.snapshot();
+    assert_eq!(evs.len(), THREADS as usize * CAP);
+    for ev in &evs {
+        assert!(ev.t_end_ns >= ev.t_start_ns, "span must close after it opens: {ev:?}");
+        // oldest-first drop: only each thread's newest CAP survive
+        let i = ev.t_start_ns % 1000;
+        assert!(i >= EACH - CAP as u64, "event {i} should have been overwritten");
+    }
+}
+
+/// Spans drained from a live instrumented server render as parseable
+/// Chrome-trace JSON with well-formed events.
+#[test]
+fn live_server_trace_drains_as_well_formed_chrome_json() {
+    let c = cfg("skeinformer");
+    let obs = ServeTelemetry::new(true);
+    let handle = attention_server::start_with_telemetry(c.clone(), Arc::clone(&obs))
+        .expect("start server");
+    for req in requests(&c, 3, 9) {
+        let out = handle.submit(req).recv().expect("reply");
+        assert_eq!(out.len(), c.request_elems());
+    }
+    let stream = handle.open_stream(1);
+    let token_elems = stream.token_elems();
+    let mut rng = Rng::new(11);
+    let mut mk = || {
+        let mut b = vec![0.0f32; token_elems];
+        rng.fill_normal(&mut b);
+        let s: Arc<[f32]> = b.into();
+        s
+    };
+    let (k, v, q) = (mk(), mk(), mk());
+    stream.append(k, v);
+    stream.query(q, 1).recv().expect("stream reply");
+    stream.close();
+    let _ = handle.shutdown().expect("shutdown");
+
+    let events = obs.recorder().snapshot();
+    assert!(!events.is_empty(), "instrumented serving must record spans");
+    for ev in &events {
+        assert!(ev.t_end_ns >= ev.t_start_ns, "ill-formed span {ev:?}");
+    }
+    let names: std::collections::HashSet<&str> =
+        events.iter().map(|e| e.span.name()).collect();
+    assert!(names.contains("queue_wait"), "one-shots wait in the admission queue: {names:?}");
+    assert!(names.contains("attn_compute"), "steps compute attention: {names:?}");
+
+    let text = obs.recorder().to_chrome_trace(&c.method);
+    let doc = json::parse(&text).expect("chrome trace parses as JSON");
+    let arr = doc.as_arr().expect("top level is an array");
+    assert_eq!(arr.len(), events.len());
+    for ev in arr {
+        assert_eq!(ev.req_str("ph").unwrap(), "X");
+        let name = ev.req_str("name").expect("event name");
+        assert!(
+            [
+                "queue_wait",
+                "batch_form",
+                "kv_ingest_hit",
+                "kv_ingest_miss",
+                "kv_gather",
+                "attn_compute",
+                "reply_write",
+                "scatter_encode",
+                "shard_rtt",
+                "gather_wait"
+            ]
+            .contains(&name),
+            "unknown span name {name:?}"
+        );
+        assert!(ev.get("ts").and_then(|t| t.as_f64()).expect("ts") >= 0.0);
+        assert!(ev.get("dur").and_then(|d| d.as_f64()).expect("dur") >= 0.0);
+        ev.path(&["args", "conn"]).and_then(|c| c.as_usize()).expect("args.conn");
+    }
+}
+
+/// The Prometheus exposition for a small fixed registry, byte-exact:
+/// name-sorted sections, cumulative skip-empty buckets, `+Inf` always
+/// emitted.
+#[test]
+fn metrics_exposition_matches_golden() {
+    let r = Registry::new();
+    r.counter("skein_requests_total").add(2);
+    r.gauge("skein_queue_depth").set(5);
+    let h = r.histo("skein_queue_wait_ns");
+    h.record(100); // le=128
+    h.record(200_000); // le=262144
+    let golden = "\
+# TYPE skein_requests_total counter
+skein_requests_total 2
+# TYPE skein_queue_depth gauge
+skein_queue_depth 5
+# TYPE skein_queue_wait_ns histogram
+skein_queue_wait_ns_bucket{le=\"128\"} 1
+skein_queue_wait_ns_bucket{le=\"262144\"} 2
+skein_queue_wait_ns_bucket{le=\"+Inf\"} 2
+skein_queue_wait_ns_sum 200100
+skein_queue_wait_ns_count 2
+";
+    assert_eq!(r.render_prometheus(), golden);
+}
+
+/// The zero-cost contract: the same workload served with telemetry on
+/// and off produces bitwise-identical bytes — instrumentation reads
+/// clocks only, never RNG state or request data.
+#[test]
+fn serving_is_bitwise_identical_with_telemetry_on() {
+    for method in ["skeinformer", "standard"] {
+        let c = cfg(method);
+        let plain = attention_server::start(c.clone()).expect("start plain");
+        let obs = ServeTelemetry::new(true);
+        let traced = attention_server::start_with_telemetry(c.clone(), Arc::clone(&obs))
+            .expect("start traced");
+
+        // one-shots, submitted in the same order on both servers
+        for (a, b) in requests(&c, 6, 3).into_iter().zip(requests(&c, 6, 3)) {
+            let oa = plain.submit(a).recv().expect("plain reply");
+            let ob = traced.submit(b).recv().expect("traced reply");
+            assert_eq!(oa, ob, "telemetry must not perturb one-shot bytes ({method})");
+        }
+
+        // a decode stream, token by token
+        let sa = plain.open_stream(1);
+        let sb = traced.open_stream(1);
+        let token_elems = sa.token_elems();
+        let mut rng_a = Rng::new(5);
+        let mut rng_b = Rng::new(5);
+        let mut mk = |rng: &mut Rng| {
+            let mut b = vec![0.0f32; token_elems];
+            rng.fill_normal(&mut b);
+            let s: Arc<[f32]> = b.into();
+            s
+        };
+        for _ in 0..8 {
+            let (ka, va, qa) = (mk(&mut rng_a), mk(&mut rng_a), mk(&mut rng_a));
+            let (kb, vb, qb) = (mk(&mut rng_b), mk(&mut rng_b), mk(&mut rng_b));
+            sa.append(ka, va);
+            sb.append(kb, vb);
+            let oa = sa.query(qa, 1).recv().expect("plain stream reply");
+            let ob = sb.query(qb, 1).recv().expect("traced stream reply");
+            assert_eq!(oa, ob, "telemetry must not perturb decode bytes ({method})");
+        }
+        sa.close();
+        sb.close();
+
+        let stats_a = plain.shutdown().expect("plain shutdown");
+        let stats_b = traced.shutdown().expect("traced shutdown");
+        assert_eq!(stats_a.requests, stats_b.requests);
+        assert!(obs.recorder().recorded() > 0, "traced server must actually record");
+        assert!(obs.h_attn_compute.snapshot().count() > 0);
+    }
+}
+
+/// A coordinator's aggregated stats reply: histogram counts equal the
+/// sum of the shards' own counts, the coordinator's scatter/RTT/gather
+/// spans ride along, and every shard gets a health row.
+#[test]
+fn cluster_aggregation_sums_shard_histograms_and_reports_health() {
+    const N: usize = 8;
+    let c = cfg("skeinformer");
+    // two engine shards, each with live telemetry, behind real TCP
+    let mut shards = Vec::new();
+    for i in 0..2u32 {
+        let obs = ServeTelemetry::new(true);
+        let handle = attention_server::start_with_telemetry(c.clone(), Arc::clone(&obs))
+            .expect("start shard");
+        let backend = Arc::new(net::EngineBackend::new(&handle, i, 2));
+        let server = net::serve_backend(backend, "127.0.0.1:0").expect("bind shard");
+        let addr = server.local_addr().to_string();
+        shards.push((handle, server, addr, obs));
+    }
+    let addrs: Vec<String> = shards.iter().map(|s| s.2.clone()).collect();
+    let coord_obs = ServeTelemetry::new(true);
+    let coord = Coordinator::start_with_telemetry(
+        &addrs,
+        Duration::from_millis(100),
+        net::NetTimeouts::default(),
+        Arc::clone(&coord_obs),
+    )
+    .expect("start coordinator");
+    let front = net::serve_backend(coord.backend(), "127.0.0.1:0").expect("bind front");
+    let mut client = NetClient::connect(front.local_addr()).expect("connect front");
+
+    for req in requests(&c, N, 21) {
+        let out = client.submit(&req).expect("scattered reply");
+        assert_eq!(out.len(), c.request_elems());
+    }
+
+    let sw = client.stats_full().expect("aggregated stats");
+    // every shard ever added gets a health row
+    assert_eq!(sw.shards.len(), 2);
+    for h in &sw.shards {
+        assert!(h.alive, "both shards are up: {h:?}");
+        assert_eq!(h.down_drains, 0);
+        assert!(addrs.contains(&h.addr));
+    }
+    // heads=2 over 2 shards: every request scatters into 2 sub-requests
+    assert_eq!(sw.stats.requests, 2 * N as u64);
+    // aggregated histogram counts == sum of the shards' own counts
+    let aggregated = |name: &str| -> u64 {
+        sw.histos
+            .iter()
+            .find(|(n, _)| n == name)
+            .map_or(0, |(_, h)| h.count())
+    };
+    for name in ["skein_attn_compute_ns", "skein_queue_wait_ns"] {
+        let shard_sum: u64 = shards
+            .iter()
+            .map(|(_, _, _, obs)| {
+                obs.wire_snapshots()
+                    .1
+                    .into_iter()
+                    .find(|(n, _)| n == name)
+                    .map_or(0, |(_, h)| h.count())
+            })
+            .sum();
+        assert!(shard_sum > 0, "shards must have recorded {name}");
+        assert_eq!(aggregated(name), shard_sum, "aggregation must sum {name} counts");
+    }
+    // the coordinator's own spans ride in the same reply: one scatter
+    // and one gather per request, one RTT per sub-reply — plus one RTT
+    // per shard for the stats poll itself (each shard's reply is taken
+    // before the merged view is assembled)
+    assert_eq!(aggregated("skein_scatter_encode_ns"), N as u64);
+    assert_eq!(aggregated("skein_gather_wait_ns"), N as u64);
+    assert_eq!(aggregated("skein_shard_rtt_ns"), 2 * N as u64 + 2);
+
+    drop(client);
+    front.stop();
+    coord.shutdown();
+    for (handle, server, _, _) in shards {
+        server.stop();
+        let _ = handle.shutdown();
+    }
+}
