@@ -3,7 +3,7 @@
 # `make artifacts` needs a python environment with jax installed (the L2
 # lowering path); everything else is pure rust and works offline.
 
-.PHONY: artifacts build test test-doc bench stream-bench cache-bench prefill-bench tier-bench net-bench shard-bench shard-smoke obs-bench fmt clippy doc
+.PHONY: artifacts build test test-doc bench stream-bench cache-bench prefill-bench tier-bench net-bench shard-bench shard-smoke obs-bench kernel-bench fmt clippy doc
 
 artifacts:
 	python3 python/compile/aot.py --out artifacts
@@ -54,6 +54,12 @@ shard-bench:
 # trace+scrape consumer -> reports/telemetry.csv
 obs-bench:
 	cargo bench --bench telemetry_overhead
+
+# per-kernel GFLOP/s sweep across every supported ISA (scalar / sse2 /
+# avx2) plus the seed's 4-way scalar dot as the legacy baseline
+# -> reports/kernels.csv
+kernel-bench:
+	cargo bench --features simd --bench kernels
 
 # quick cluster smoke for CI: two engine shards + a coordinator on
 # loopback, driven by the stock client (one-shots and a decode stream);

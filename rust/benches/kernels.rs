@@ -1,0 +1,158 @@
+//! §Kernels — per-kernel, per-ISA throughput sweep.
+//!
+//! Times every microkernel in the dispatch table ([`kernels::table_for`],
+//! so all supported ISAs are measured in one run without touching the
+//! process-wide selection) across vector lengths bracketing the head
+//! dims the attention hot paths use (p ∈ {32..256}) and the longer rows
+//! of the softmax/dequant passes.  A reimplementation of the seed's
+//! 4-way unrolled scalar dot rides along as the `legacy4` baseline —
+//! the acceptance bar for the SIMD work is AVX2 dot ≥ 2× `legacy4` at
+//! d ∈ {64, 128}.
+//!
+//! Emits `reports/kernels.csv` (`kernel,isa,len,ns_per_call,gops`);
+//! `gops` is GFLOP/s for the arithmetic kernels (2 flops/element for
+//! dot/saxpy/sum_sq, 1 for row_sum/row_max/scale) and Gelem/s for
+//! `exp_shifted` and the dequant decoders.  Run via `make kernel-bench`
+//! (which builds `--features simd`; without the feature only the
+//! scalar rows appear).
+
+use skeinformer::bench_util::write_csv;
+use skeinformer::rng::Rng;
+use skeinformer::tensor::kernels::{self, KernelIsa, KernelTable};
+use std::hint::black_box;
+use std::time::Instant;
+
+/// ns per call, best of 5 trials of `reps` calls each.
+fn time_ns(mut f: impl FnMut(), reps: u32) -> f64 {
+    f(); // warm
+    let mut best = f64::INFINITY;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        best = best.min(t0.elapsed().as_nanos() as f64 / reps as f64);
+    }
+    best
+}
+
+fn reps_for(len: usize) -> u32 {
+    (16_000_000 / len.max(1)).clamp(2_000, 1_000_000) as u32
+}
+
+fn gen(len: usize, seed: u64) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    Rng::new(seed).fill_normal(&mut v);
+    v
+}
+
+/// The seed's inner dot kernel (pre-microkernel `matmul_nt`): 4-way
+/// unrolled scalar accumulation.  Kept here verbatim as the before
+/// baseline the CSV compares every ISA against.
+fn legacy_dot4(a: &[f32], b: &[f32]) -> f32 {
+    let k = a.len();
+    let chunks = k / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let o = c * 4;
+        s0 += a[o] * b[o];
+        s1 += a[o + 1] * b[o + 1];
+        s2 += a[o + 2] * b[o + 2];
+        s3 += a[o + 3] * b[o + 3];
+    }
+    let mut acc = (s0 + s2) + (s1 + s3);
+    for o in chunks * 4..k {
+        acc += a[o] * b[o];
+    }
+    acc
+}
+
+struct Sink {
+    rows: Vec<String>,
+}
+
+impl Sink {
+    fn emit(&mut self, kernel: &str, isa: &str, len: usize, ns: f64, flops_per_elem: f64) {
+        let gops = flops_per_elem * len as f64 / ns;
+        println!("{kernel:<12} {isa:<8} len={len:<6} {ns:>9.2} ns/call  {gops:>7.3} Gop/s");
+        self.rows.push(format!("{kernel},{isa},{len},{ns:.2},{gops:.3}"));
+    }
+}
+
+fn main() {
+    let tables: Vec<&'static KernelTable> =
+        KernelIsa::ALL.iter().filter_map(|&isa| kernels::table_for(isa)).collect();
+    println!(
+        "kernel sweep: active={} available={:?} (simd feature {})",
+        kernels::active_isa(),
+        tables.iter().map(|t| t.isa.name()).collect::<Vec<_>>(),
+        if cfg!(feature = "simd") { "on" } else { "off" }
+    );
+    let mut sink = Sink { rows: Vec::new() };
+
+    // --- dot (the matmul_nt / matvec inner loop) ---
+    for &len in &[32usize, 64, 128, 256, 1024, 4096] {
+        let a = gen(len, 1);
+        let b = gen(len, 2);
+        let reps = reps_for(len);
+        let ns = time_ns(|| { black_box(legacy_dot4(black_box(&a), black_box(&b))); }, reps);
+        sink.emit("dot", "legacy4", len, ns, 2.0);
+        for t in &tables {
+            let ns = time_ns(|| { black_box((t.dot)(black_box(&a), black_box(&b))); }, reps);
+            sink.emit("dot", t.isa.name(), len, ns, 2.0);
+        }
+    }
+
+    // --- element-wise streams ---
+    for &len in &[128usize, 1024, 4096] {
+        let x = gen(len, 3);
+        let reps = reps_for(len);
+        for t in &tables {
+            let mut y = gen(len, 4);
+            // coefficient 0 keeps y numerically stable across reps
+            let ns = time_ns(|| (t.saxpy)(black_box(0.0), black_box(&x), &mut y), reps);
+            sink.emit("saxpy", t.isa.name(), len, ns, 2.0);
+            let mut s = gen(len, 5);
+            let ns = time_ns(|| (t.scale)(black_box(&mut s), black_box(1.0)), reps);
+            sink.emit("scale", t.isa.name(), len, ns, 1.0);
+            // shift 90 drives every element to exactly 0, a fixed point
+            // of the kernel, so reps measure a steady state
+            let mut e = gen(len, 6);
+            let ns = time_ns(|| (t.exp_shifted)(black_box(&mut e), black_box(90.0)), reps);
+            sink.emit("exp_shifted", t.isa.name(), len, ns, 1.0);
+        }
+    }
+
+    // --- row reductions (softmax / norms passes) ---
+    for &len in &[128usize, 1024, 4096] {
+        let x = gen(len, 7);
+        let reps = reps_for(len);
+        for t in &tables {
+            let ns = time_ns(|| { black_box((t.row_sum)(black_box(&x))); }, reps);
+            sink.emit("row_sum", t.isa.name(), len, ns, 1.0);
+            let ns = time_ns(|| { black_box((t.row_max)(black_box(&x))); }, reps);
+            sink.emit("row_max", t.isa.name(), len, ns, 1.0);
+            let ns = time_ns(|| { black_box((t.sum_sq)(black_box(&x))); }, reps);
+            sink.emit("sum_sq", t.isa.name(), len, ns, 2.0);
+        }
+    }
+
+    // --- dequantise (tiered KV gather path) ---
+    for &len in &[64usize, 1024] {
+        let halfs: Vec<u16> =
+            gen(len, 8).iter().map(|&x| skeinformer::kvcache::f32_to_f16_bits(x)).collect();
+        let signed: Vec<i8> = (0..len).map(|i| (i * 5 % 256) as u8 as i8).collect();
+        let mut out = vec![0.0f32; len];
+        let reps = reps_for(len);
+        for t in &tables {
+            let ns = time_ns(|| (t.dequant_f16)(black_box(&halfs), &mut out), reps);
+            sink.emit("dequant_f16", t.isa.name(), len, ns, 1.0);
+            let ns = time_ns(|| (t.dequant_i8)(black_box(&signed), black_box(0.0625), &mut out), reps);
+            sink.emit("dequant_i8", t.isa.name(), len, ns, 1.0);
+        }
+    }
+
+    write_csv("reports/kernels.csv", "kernel,isa,len,ns_per_call,gops", &sink.rows)
+        .expect("write reports/kernels.csv");
+    println!("-> reports/kernels.csv");
+}

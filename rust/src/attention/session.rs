@@ -438,22 +438,20 @@ impl AttentionSession for LinformerSession {
         }
         // rank-1 updates in matmul_tn's accumulation order (including its
         // zero-coefficient skip), so the projections stay bitwise equal
-        // to the batch path's
+        // to the batch path's — both sides route the row update through
+        // the same dispatched saxpy kernel
+        let kt = crate::tensor::kernels::active();
         for (c, &sc) in self.srow.iter().enumerate() {
             if sc == 0.0 {
                 continue;
             }
-            for (o, &x) in self.k_proj.row_mut(c).iter_mut().zip(k_row) {
-                *o += sc * x;
-            }
+            (kt.saxpy)(sc, k_row, self.k_proj.row_mut(c));
         }
         for (c, &sc) in self.srow.iter().enumerate() {
             if sc == 0.0 {
                 continue;
             }
-            for (o, &x) in self.v_proj.row_mut(c).iter_mut().zip(v_row) {
-                *o += sc * x;
-            }
+            (kt.saxpy)(sc, v_row, self.v_proj.row_mut(c));
         }
         self.len += 1;
     }

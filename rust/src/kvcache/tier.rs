@@ -152,31 +152,10 @@ pub fn f32_to_f16_bits(x: f32) -> u16 {
 }
 
 /// Convert IEEE binary16 bits back to f32 (exact — every f16 value is
-/// representable in f32).
-pub fn f16_bits_to_f32(h: u16) -> f32 {
-    let sign = ((h & 0x8000) as u32) << 16;
-    let exp = ((h >> 10) & 0x1f) as u32;
-    let man = (h & 0x03ff) as u32;
-    let bits = if exp == 0x1f {
-        sign | 0x7f80_0000 | (man << 13) // inf / NaN
-    } else if exp == 0 {
-        if man == 0 {
-            sign // ±0
-        } else {
-            // subnormal: normalise into an f32 normal
-            let mut e = 113u32; // would-be exponent field of 2^-14 * 1.x
-            let mut m = man;
-            while m & 0x0400 == 0 {
-                m <<= 1;
-                e -= 1;
-            }
-            sign | (e << 23) | ((m & 0x03ff) << 13)
-        }
-    } else {
-        sign | ((exp + 112) << 23) | (man << 13)
-    };
-    f32::from_bits(bits)
-}
+/// representable in f32).  The decoder now lives with the dispatched
+/// microkernels so the AVX2 dequant path can share its semantics;
+/// re-exported here to keep the tier module's public surface stable.
+pub use crate::tensor::kernels::f16_bits_to_f32;
 
 /// Smallest power of two ≥ `absmax / 127` (0 for an all-zero payload).
 /// A power-of-two scale makes `x / scale` and `q * scale` exact f32
@@ -236,19 +215,16 @@ impl QuantPayload {
         }
     }
 
+    /// Decode a contiguous element range into caller scratch on the
+    /// dispatched dequant kernels.  Both codecs are exact (f16 → f32 is
+    /// lossless; the int8 scale is a power of two), so every ISA
+    /// variant decodes to identical bits.
     fn decode_into(&self, range: std::ops::Range<usize>, out: &mut [f32]) {
         debug_assert_eq!(range.len(), out.len());
+        let kt = crate::tensor::kernels::active();
         match self {
-            Self::F16(data) => {
-                for (dst, &h) in out.iter_mut().zip(&data[range]) {
-                    *dst = f16_bits_to_f32(h);
-                }
-            }
-            Self::Int8 { data, scale } => {
-                for (dst, &q) in out.iter_mut().zip(&data[range]) {
-                    *dst = q as f32 * scale;
-                }
-            }
+            Self::F16(data) => (kt.dequant_f16)(&data[range], out),
+            Self::Int8 { data, scale } => (kt.dequant_i8)(&data[range], *scale, out),
         }
     }
 
@@ -338,8 +314,12 @@ impl QuantBlock {
     }
 
     /// Decode head columns `[offset, offset + head_dim)` of token `slot`
-    /// into `k_out` / `v_out` (each `head_dim` long) — the gather-path
-    /// read.  The decoded values exist only in the caller's scratch.
+    /// into `k_out` / `v_out` (each `head_dim` long) — the fused
+    /// gather + dequantise read: the range arithmetic picks the token's
+    /// head slice and the dispatched dequant kernel decodes it straight
+    /// into caller scratch (`vcvtph2ps` / `vpmovsxbd` on AVX2), with no
+    /// intermediate full-block decode.  The decoded values exist only
+    /// in the caller's scratch.
     pub fn dequant_head_into(
         &self,
         slot: usize,

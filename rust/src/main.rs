@@ -39,6 +39,14 @@ fn run() -> Result<()> {
     if pool_size > 0 {
         skeinformer::pool::set_pool_size(pool_size);
     }
+    // Global flag: pin the microkernel ISA (overrides SKEIN_KERNEL and
+    // runtime detection).  Errors rather than degrading silently — a
+    // pin exists to be trusted.
+    if let Some(k) = args.get("kernel") {
+        let isa = tensor::kernels::KernelIsa::parse(k)
+            .ok_or_else(|| anyhow::anyhow!("--kernel {k:?} unrecognised (want avx2|sse2|scalar)"))?;
+        tensor::kernels::select(isa).map_err(|e| anyhow::anyhow!(e))?;
+    }
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("sweep") => cmd_sweep(&args),
@@ -118,7 +126,11 @@ fn print_help() {
            inspect  <artifacts/..._manifest.json>\n\n\
          GLOBAL FLAGS\n\
            --pool-size N   worker threads in the persistent pool (default:\n\
-                           logical CPUs, capped at 16; 0 = default)\n\n\
+                           logical CPUs, capped at 16; 0 = default)\n\
+           --kernel ISA    pin the SIMD microkernel tier: avx2|sse2|scalar\n\
+                           (default: SKEIN_KERNEL env, else widest the\n\
+                           build/CPU supports; every tier is bitwise\n\
+                           identical — this is a speed knob only)\n\n\
          Artifacts come from `make artifacts` (python AOT path); `serve\n\
          --engine pjrt` additionally needs the real xla crate (not the\n\
          offline stub) linked in.",
@@ -287,8 +299,14 @@ fn cmd_serve_cpu(args: &Args) -> Result<()> {
     }
     let n_requests = args.get_usize("requests", 64)?;
     eprintln!(
-        "batched attention service: method={} B<={} H={} n={} p={} d={}",
-        cfg.method, cfg.max_batch, cfg.heads, cfg.seq, cfg.head_dim, cfg.d
+        "batched attention service: method={} B<={} H={} n={} p={} d={} kernel={}",
+        cfg.method,
+        cfg.max_batch,
+        cfg.heads,
+        cfg.seq,
+        cfg.head_dim,
+        cfg.d,
+        tensor::kernels::active_isa()
     );
 
     let handle = attention_server::start(cfg.clone())?;
@@ -387,12 +405,13 @@ fn cmd_serve_listen(
         handle.connection(),
     );
     eprintln!(
-        "serving method={} B<={} H={} n={} p={}{} on {}{}{}",
+        "serving method={} B<={} H={} n={} p={} kernel={}{} on {}{}{}",
         cfg.method,
         cfg.max_batch,
         cfg.heads,
         cfg.seq,
         cfg.head_dim,
+        tensor::kernels::active_isa(),
         if shard_count > 0 {
             format!(" (shard {shard_index}/{shard_count})")
         } else {
@@ -582,7 +601,7 @@ fn cmd_coordinator(args: &Args) -> Result<()> {
         })
     };
     eprintln!(
-        "coordinating {} shard(s): method={} B<={} H={} n={} p={} seed={} on {}{}{}",
+        "coordinating {} shard(s): method={} B<={} H={} n={} p={} seed={} kernel={} on {}{}{}",
         coord.live_shards(),
         info.method,
         info.max_batch,
@@ -590,6 +609,7 @@ fn cmd_coordinator(args: &Args) -> Result<()> {
         info.seq,
         info.head_dim,
         info.seed,
+        tensor::kernels::active_isa(),
         server.local_addr(),
         if serve_secs > 0 { format!(" for {serve_secs}s") } else { " until killed".into() },
         if telemetry.enabled() { "" } else { " (telemetry off)" }
@@ -983,6 +1003,22 @@ fn cmd_top(args: &Args) -> Result<()> {
             s.kv_resident_blocks,
             s.kv_resident_bytes as f64 / 1024.0
         );
+        // one-hot ISA gauges; against a coordinator the gauges are
+        // summed across shards, so values count engines per tier
+        let isas: Vec<String> = sw
+            .gauges
+            .iter()
+            .filter(|(name, v)| name.starts_with("skein_kernel_isa{") && *v > 0)
+            .map(|(name, v)| {
+                let tier = name
+                    .trim_start_matches("skein_kernel_isa{isa=\"")
+                    .trim_end_matches("\"}");
+                format!("{tier}={v}")
+            })
+            .collect();
+        if !isas.is_empty() {
+            println!("kernel: {}", isas.join(" "));
+        }
         let rows: Vec<Vec<String>> = sw
             .histos
             .iter()

@@ -98,6 +98,16 @@ impl ServeTelemetry {
     /// capacity (tests pin wrap behavior with tiny rings).
     pub fn with_trace_cap(enabled: bool, trace_cap: usize) -> Arc<ServeTelemetry> {
         let registry = Registry::new();
+        // One-hot ISA gauge family: every known ISA gets a labelled
+        // sample, the active one reads 1.  Summing a label across a
+        // fleet scrape (or the coordinator's gauge aggregation) counts
+        // shards running that kernel tier.
+        let active = crate::tensor::kernels::active_isa();
+        for isa in crate::tensor::kernels::KernelIsa::ALL {
+            registry
+                .gauge(&format!("skein_kernel_isa{{isa=\"{}\"}}", isa.name()))
+                .set((isa == active) as u64);
+        }
         Arc::new(ServeTelemetry {
             enabled,
             recorder: FlightRecorder::new(trace_cap),

@@ -242,16 +242,33 @@ impl Registry {
     }
 
     /// Prometheus text exposition (format version 0.0.4): `# TYPE`
-    /// line per metric, `_bucket{le=...}` / `_sum` / `_count` series
-    /// per histogram, everything name-sorted so output is stable.
+    /// line per metric family, `_bucket{le=...}` / `_sum` / `_count`
+    /// series per histogram, everything name-sorted so output is
+    /// stable.  Labelled samples (`name{k="v"}`) share one family: the
+    /// `# TYPE` line carries the base name (everything before `{`) and
+    /// is emitted once per family — snapshots are name-sorted, so a
+    /// family's labelled variants are always adjacent.
     pub fn render_prometheus(&self) -> String {
+        fn base(name: &str) -> &str {
+            name.split('{').next().unwrap_or(name)
+        }
         let mut out = String::new();
+        let mut last_family = String::new();
         for (name, c) in self.counter_snapshots() {
-            let _ = writeln!(out, "# TYPE {name} counter");
+            let fam = base(&name);
+            if fam != last_family {
+                let _ = writeln!(out, "# TYPE {fam} counter");
+                last_family = fam.to_string();
+            }
             let _ = writeln!(out, "{name} {}", c);
         }
+        last_family.clear();
         for (name, g) in self.gauge_snapshots() {
-            let _ = writeln!(out, "# TYPE {name} gauge");
+            let fam = base(&name);
+            if fam != last_family {
+                let _ = writeln!(out, "# TYPE {fam} gauge");
+                last_family = fam.to_string();
+            }
             let _ = writeln!(out, "{name} {}", g);
         }
         for (name, h) in self.histo_snapshots() {
@@ -360,5 +377,19 @@ mod tests {
         assert!(text.contains("skein_queue_depth 7"));
         assert!(text.contains("skein_queue_wait_ns_bucket{le=\"128\"} 1"));
         assert!(text.contains("skein_queue_wait_ns_count 1"));
+    }
+
+    #[test]
+    fn labelled_samples_share_one_type_line() {
+        let r = Registry::new();
+        r.gauge("skein_kernel_isa{isa=\"avx2\"}").set(0);
+        r.gauge("skein_kernel_isa{isa=\"scalar\"}").set(1);
+        r.gauge("skein_queue_depth").set(3);
+        let text = r.render_prometheus();
+        assert_eq!(text.matches("# TYPE skein_kernel_isa gauge").count(), 1);
+        assert!(!text.contains("# TYPE skein_kernel_isa{"), "TYPE must use the base name");
+        assert!(text.contains("skein_kernel_isa{isa=\"scalar\"} 1"));
+        assert!(text.contains("skein_kernel_isa{isa=\"avx2\"} 0"));
+        assert!(text.contains("# TYPE skein_queue_depth gauge"));
     }
 }

@@ -475,7 +475,15 @@ thread_local! {
 /// the pool's lifetime, so steady-state hot paths stop allocating.
 /// Return buffers with [`recycle_scratch`] when done; forgetting to is
 /// safe (the buffer is simply freed).
+///
+/// Capacity is rounded up to a whole number of microkernel lanes
+/// ([`crate::tensor::kernels::LANES`]) — the vector kernels use
+/// unaligned loads so correctness never depends on this, but whole-lane
+/// capacities make recycled buffers reusable across the slightly
+/// different row lengths the attention scratch cycles through.
 pub fn take_scratch(capacity: usize) -> Vec<f32> {
+    let capacity = (capacity + (crate::tensor::kernels::LANES - 1))
+        & !(crate::tensor::kernels::LANES - 1);
     let recycled = SCRATCH.with(|s| s.borrow_mut().pop());
     match recycled {
         Some(mut buf) => {

@@ -6,7 +6,7 @@
 
 use super::Sketch;
 use crate::rng::Rng;
-use crate::tensor::Matrix;
+use crate::tensor::{axpy, dot, Matrix};
 
 #[derive(Clone, Copy, Debug)]
 pub struct GaussianSketch {
@@ -51,22 +51,21 @@ pub fn jl_failure_rate(
     seed: u64,
 ) -> f32 {
     assert_eq!(b.len(), sketch.n());
-    let bn2: f32 = b.iter().map(|x| x * x).sum();
+    let bn2 = dot(b, b);
     let mut rng = Rng::new(seed);
     let mut fails = 0usize;
     for _ in 0..trials {
         let s = sketch.draw(&mut rng);
-        // Sᵀ b
+        // Sᵀ b — rank-1 accumulation on the shared saxpy kernel, with
+        // matmul_tn's zero-coefficient skip
         let mut proj = vec![0.0f32; sketch.d()];
         for i in 0..sketch.n() {
             let bi = b[i];
             if bi != 0.0 {
-                for (pj, &sij) in proj.iter_mut().zip(s.row(i)) {
-                    *pj += bi * sij;
-                }
+                axpy(bi, s.row(i), &mut proj);
             }
         }
-        let pn2: f32 = proj.iter().map(|x| x * x).sum();
+        let pn2 = dot(&proj, &proj);
         if (pn2 - bn2).abs() > eps * bn2 {
             fails += 1;
         }

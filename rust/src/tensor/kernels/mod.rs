@@ -1,0 +1,326 @@
+//! Explicit-SIMD microkernels behind a process-wide dispatch table.
+//!
+//! The sketching methods make attention linear in `n`, so serving cost
+//! is dominated by the *constant factor* of the remaining dense inner
+//! loops: the `QKᵀ`-shaped row dots, `SᵀV` rank-1 accumulates, the
+//! softmax max/exp/sum passes, and the f16/int8 dequantise-on-gather
+//! read path of the tiered KV cache.  This module provides those inner
+//! loops as per-ISA variants (scalar always; SSE2 and AVX2 via
+//! `core::arch` intrinsics when the `simd` cargo feature is on and the
+//! CPU supports them), selected once at startup into a [`KernelTable`]
+//! of plain function pointers.
+//!
+//! # The lane-order determinism rule
+//!
+//! The repo's determinism contract (DESIGN.md §2) requires served bytes
+//! to be identical across machines, worker counts, and builds.  SIMD
+//! normally breaks that by changing *accumulation order*.  Here every
+//! variant — including the scalar fallback — commits to one fixed
+//! order, so scalar, SSE2, and AVX2 are **bitwise identical by
+//! construction**:
+//!
+//! * **Reductions** (`dot`, `row_sum`, `sum_sq`, `row_max`) accumulate
+//!   into 8 lanes (`lane[l] ⊕= x[8c + l]`), reduce the lanes with the
+//!   fixed tree `s_i = lane_i ⊕ lane_{i+4}` → `t_i = s_i ⊕ s_{i+2}` →
+//!   `t_0 ⊕ t_1` — exactly the AVX2 `vextractf128`/`movhlps`/`shufps`
+//!   horizontal reduction — then fold the `len % 8` tail in
+//!   sequentially.  SSE2 keeps two 4-lane registers (lanes 0–3 / 4–7)
+//!   so its first tree level is one `addps`/`maxps`.
+//! * **Element-wise** kernels (`saxpy`, `scale`, `exp_shifted`,
+//!   `dequant_*`) perform the same per-element operation sequence at
+//!   any lane width, so they are bitwise-safe at every ISA trivially.
+//! * **No FMA.** Fused multiply-add rounds once where `mul`+`add`
+//!   rounds twice, which would split scalar from AVX2.  The AVX2 tier
+//!   is *gated* on `avx2 && fma && f16c` (the ISA class it targets) but
+//!   the kernels emit only separate `_mm256_mul_ps`/`_mm256_add_ps`.
+//!   Rust never contracts scalar `a * b + c`, so the mirror holds.
+//! * `exp_shifted` uses a Cephes-style polynomial (`sse_mathfun`
+//!   lineage) built from exactly-rounded IEEE ops, with the scalar
+//!   reference mirroring the *vector* semantics (`minps`/`maxps` NaN
+//!   behaviour, emulated floor, ordered-compare blends) lane for lane.
+//!
+//! All loads are unaligned (`loadu`); nothing here requires aligned
+//! buffers.  [`crate::pool::take_scratch`] still rounds capacities to
+//! whole lanes so recycled buffers bucket coarsely.
+//!
+//! # Dispatch
+//!
+//! [`active`] returns the process-wide table: on first use the `simd`
+//! feature gate, `is_x86_feature_detected!`, and the `SKEIN_KERNEL`
+//! env override (`avx2|sse2|scalar`) pick the ISA; the CLI's global
+//! `--kernel` flag calls [`select`].  The selection is a relaxed
+//! atomic — benign to race, because every table produces identical
+//! bytes (the property `rust/tests/kernels.rs` pins).  Tests and
+//! benches that compare ISAs directly use [`table_for`] instead of
+//! flipping the global.
+
+mod scalar;
+#[cfg(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64")))]
+mod x86;
+
+pub use scalar::f16_bits_to_f32;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Accumulator lanes every reduction kernel commits to (one AVX2
+/// register of f32s; scalar and SSE2 emulate the same eight).
+pub const LANES: usize = 8;
+
+/// The instruction sets a [`KernelTable`] can be built for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum KernelIsa {
+    /// Portable fallback — same 8-lane accumulation order as the
+    /// vector variants, compiled for any target.
+    Scalar = 0,
+    /// 128-bit SSE2 (x86-64 baseline); reductions keep two 4-lane
+    /// registers to match the 8-lane order.
+    Sse2 = 1,
+    /// 256-bit AVX2; requires `avx2`, `fma`, and `f16c` at runtime
+    /// (the dequant path converts halfs with `vcvtph2ps`; FMA is
+    /// detected as part of the ISA class but never emitted — see the
+    /// module docs).
+    Avx2 = 2,
+}
+
+impl KernelIsa {
+    pub const ALL: [KernelIsa; 3] = [KernelIsa::Scalar, KernelIsa::Sse2, KernelIsa::Avx2];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Sse2 => "sse2",
+            KernelIsa::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse the `SKEIN_KERNEL` / `--kernel` spelling.
+    pub fn parse(s: &str) -> Option<KernelIsa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelIsa::Scalar),
+            "sse2" => Some(KernelIsa::Sse2),
+            "avx2" => Some(KernelIsa::Avx2),
+            _ => None,
+        }
+    }
+
+    fn from_index(i: u8) -> KernelIsa {
+        match i {
+            0 => KernelIsa::Scalar,
+            1 => KernelIsa::Sse2,
+            2 => KernelIsa::Avx2,
+            _ => unreachable!("invalid kernel ISA index {i}"),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelIsa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One ISA's set of inner kernels.  Plain `fn` pointers: `Sync`, no
+/// indirection beyond one load, and trivially shareable across the
+/// worker pool.
+pub struct KernelTable {
+    pub isa: KernelIsa,
+    /// `Σ a[i]·b[i]` in the fixed 8-lane order (`a.len() == b.len()`).
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// `y[i] += a·x[i]` (element-wise; `x.len() == y.len()`).
+    pub saxpy: fn(f32, &[f32], &mut [f32]),
+    /// Max element with `maxps` semantics (`if acc > x { acc } else
+    /// { x }` — an accumulated NaN is *dropped* by the next ordered
+    /// compare); `-inf` for an empty slice.
+    pub row_max: fn(&[f32]) -> f32,
+    /// `Σ x[i]` in the fixed 8-lane order.
+    pub row_sum: fn(&[f32]) -> f32,
+    /// `Σ x[i]²` in the fixed 8-lane order.
+    pub sum_sq: fn(&[f32]) -> f32,
+    /// `x[i] *= s` (element-wise).
+    pub scale: fn(&mut [f32], f32),
+    /// `x[i] = exp(x[i] - shift)` via the shared Cephes-style
+    /// polynomial; `exp(-inf) == 0` exactly (mask semantics), `+inf`
+    /// stays `+inf`, NaN propagates as the canonical quiet NaN.
+    pub exp_shifted: fn(&mut [f32], f32),
+    /// Decode IEEE binary16 bits to f32 (exact conversion).
+    pub dequant_f16: fn(&[u16], &mut [f32]),
+    /// Decode int8 `q` to `q as f32 * scale` (both steps exact for the
+    /// tier ladder's power-of-two scales).
+    pub dequant_i8: fn(&[i8], f32, &mut [f32]),
+}
+
+static SCALAR_TABLE: KernelTable = KernelTable {
+    isa: KernelIsa::Scalar,
+    dot: scalar::dot,
+    saxpy: scalar::saxpy,
+    row_max: scalar::row_max,
+    row_sum: scalar::row_sum,
+    sum_sq: scalar::sum_sq,
+    scale: scalar::scale,
+    exp_shifted: scalar::exp_shifted,
+    dequant_f16: scalar::dequant_f16,
+    dequant_i8: scalar::dequant_i8,
+};
+
+/// Is `isa` usable in this build on this CPU?
+pub fn supported(isa: KernelIsa) -> bool {
+    match isa {
+        KernelIsa::Scalar => true,
+        KernelIsa::Sse2 => have_sse2(),
+        KernelIsa::Avx2 => have_avx2(),
+    }
+}
+
+#[cfg(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64")))]
+fn have_sse2() -> bool {
+    is_x86_feature_detected!("sse2")
+}
+
+#[cfg(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64")))]
+fn have_avx2() -> bool {
+    // fma rides along as the tier gate (AVX2+FMA class hardware) even
+    // though no fmadd is ever emitted; f16c is load-bearing for the
+    // dequant path's vcvtph2ps.
+    is_x86_feature_detected!("avx2")
+        && is_x86_feature_detected!("fma")
+        && is_x86_feature_detected!("f16c")
+}
+
+#[cfg(not(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64"))))]
+fn have_sse2() -> bool {
+    false
+}
+
+#[cfg(not(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64"))))]
+fn have_avx2() -> bool {
+    false
+}
+
+/// The table for a specific ISA, or `None` when this build/CPU cannot
+/// run it.  This is how tests and benches compare ISAs head-to-head
+/// without touching the process-wide selection.
+pub fn table_for(isa: KernelIsa) -> Option<&'static KernelTable> {
+    if !supported(isa) {
+        return None;
+    }
+    match isa {
+        KernelIsa::Scalar => Some(&SCALAR_TABLE),
+        #[cfg(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64")))]
+        KernelIsa::Sse2 => Some(&x86::SSE2_TABLE),
+        #[cfg(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64")))]
+        KernelIsa::Avx2 => Some(&x86::AVX2_TABLE),
+        #[cfg(not(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64"))))]
+        KernelIsa::Sse2 | KernelIsa::Avx2 => None,
+    }
+}
+
+/// Widest ISA this build/CPU supports.
+pub fn best_supported() -> KernelIsa {
+    if have_avx2() {
+        KernelIsa::Avx2
+    } else if have_sse2() {
+        KernelIsa::Sse2
+    } else {
+        KernelIsa::Scalar
+    }
+}
+
+const UNSELECTED: u8 = u8::MAX;
+static ACTIVE: AtomicU8 = AtomicU8::new(UNSELECTED);
+
+fn default_isa() -> KernelIsa {
+    match std::env::var("SKEIN_KERNEL") {
+        Ok(v) => match KernelIsa::parse(&v) {
+            Some(isa) if supported(isa) => isa,
+            Some(isa) => {
+                eprintln!(
+                    "skein: SKEIN_KERNEL={isa} unsupported by this build/CPU; using {}",
+                    best_supported()
+                );
+                best_supported()
+            }
+            None => {
+                eprintln!(
+                    "skein: SKEIN_KERNEL={v:?} unrecognised (want avx2|sse2|scalar); using {}",
+                    best_supported()
+                );
+                best_supported()
+            }
+        },
+        Err(_) => best_supported(),
+    }
+}
+
+/// The process-wide kernel table.  First call resolves the default
+/// (env override, else widest supported ISA).  Relaxed atomics
+/// throughout: a racing [`select`] is benign because every table is
+/// bitwise identical.
+pub fn active() -> &'static KernelTable {
+    let idx = ACTIVE.load(Ordering::Relaxed);
+    let isa = if idx == UNSELECTED {
+        let isa = default_isa();
+        ACTIVE.store(isa as u8, Ordering::Relaxed);
+        isa
+    } else {
+        KernelIsa::from_index(idx)
+    };
+    table_for(isa).expect("active kernel ISA is always a supported one")
+}
+
+/// The ISA [`active`] dispatches to (startup lines, the obs gauge).
+pub fn active_isa() -> KernelIsa {
+    active().isa
+}
+
+/// Pin the process-wide selection (the CLI's global `--kernel` flag).
+/// Errors when the ISA is compiled out (`simd` feature off, non-x86)
+/// or the CPU lacks it — a pin that silently degraded would defeat its
+/// use in the bitwise cross-ISA tests.
+pub fn select(isa: KernelIsa) -> Result<(), String> {
+    if !supported(isa) {
+        return Err(format!(
+            "kernel ISA {isa} not available (feature \"simd\" {}; best supported: {})",
+            if cfg!(feature = "simd") { "on" } else { "off" },
+            best_supported()
+        ));
+    }
+    ACTIVE.store(isa as u8, Ordering::Relaxed);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_names() {
+        for isa in KernelIsa::ALL {
+            assert_eq!(KernelIsa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(KernelIsa::parse("AVX2"), Some(KernelIsa::Avx2));
+        assert_eq!(KernelIsa::parse(" scalar "), Some(KernelIsa::Scalar));
+        assert_eq!(KernelIsa::parse("avx512"), None);
+    }
+
+    #[test]
+    fn scalar_is_always_supported_and_active_resolves() {
+        assert!(supported(KernelIsa::Scalar));
+        assert!(table_for(KernelIsa::Scalar).is_some());
+        let t = active();
+        assert!(supported(t.isa));
+        // best_supported is at least scalar and is what select falls
+        // back to rejecting: selecting the active ISA again is a no-op
+        select(t.isa).expect("re-selecting the active ISA succeeds");
+    }
+
+    #[test]
+    fn unsupported_isas_have_no_table() {
+        for isa in KernelIsa::ALL {
+            assert_eq!(table_for(isa).is_some(), supported(isa));
+            if !supported(isa) {
+                assert!(select(isa).is_err());
+            }
+        }
+    }
+}

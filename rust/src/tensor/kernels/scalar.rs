@@ -1,0 +1,297 @@
+//! Portable reference kernels in the fixed 8-lane accumulation order.
+//!
+//! These are the semantics definition: the SSE2/AVX2 variants in
+//! `x86.rs` must produce bitwise-identical results, and the tails of
+//! those vector loops call straight into the per-element helpers here
+//! ([`exp_core`], [`f16_bits_to_f32`]).  Scalar mirrors of *vector*
+//! instruction semantics are deliberate and load-bearing:
+//!
+//! * `sel_max(a, x) = if a > x { a } else { x }` is `maxps` — it
+//!   returns the second operand on an unordered compare, unlike the
+//!   NaN-ignoring `f32::max`.
+//! * [`exp_core`]'s clamps mirror `minps`/`maxps` operand order and
+//!   its final inf/zero/NaN selects mirror ordered-compare blends.
+
+use super::LANES;
+
+/// The fixed lane-reduction tree (see the module docs of
+/// [`super`]): fold lanes 4..8 onto 0..4, then quarters, then the
+/// final pair — the exact shape of the AVX2 horizontal reduction.
+#[inline]
+fn reduce_add(l: &[f32; LANES]) -> f32 {
+    let s0 = l[0] + l[4];
+    let s1 = l[1] + l[5];
+    let s2 = l[2] + l[6];
+    let s3 = l[3] + l[7];
+    let t0 = s0 + s2;
+    let t1 = s1 + s3;
+    t0 + t1
+}
+
+/// `maxps` semantics: NaN in the accumulator is dropped by the next
+/// ordered compare; NaN in the input propagates one step.  The vector
+/// kernels' scalar tails use this too.
+#[inline]
+pub(super) fn sel_max(acc: f32, x: f32) -> f32 {
+    if acc > x {
+        acc
+    } else {
+        x
+    }
+}
+
+pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let k = a.len();
+    let chunks = k / LANES;
+    let mut lanes = [0.0f32; LANES];
+    for c in 0..chunks {
+        let o = c * LANES;
+        for l in 0..LANES {
+            lanes[l] += a[o + l] * b[o + l];
+        }
+    }
+    let mut acc = reduce_add(&lanes);
+    for o in chunks * LANES..k {
+        acc += a[o] * b[o];
+    }
+    acc
+}
+
+pub(super) fn saxpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+pub(super) fn row_max(xs: &[f32]) -> f32 {
+    let k = xs.len();
+    let chunks = k / LANES;
+    let mut lanes = [f32::NEG_INFINITY; LANES];
+    for c in 0..chunks {
+        let o = c * LANES;
+        for l in 0..LANES {
+            lanes[l] = sel_max(lanes[l], xs[o + l]);
+        }
+    }
+    let s0 = sel_max(lanes[0], lanes[4]);
+    let s1 = sel_max(lanes[1], lanes[5]);
+    let s2 = sel_max(lanes[2], lanes[6]);
+    let s3 = sel_max(lanes[3], lanes[7]);
+    let t0 = sel_max(s0, s2);
+    let t1 = sel_max(s1, s3);
+    let mut m = sel_max(t0, t1);
+    for o in chunks * LANES..k {
+        m = sel_max(m, xs[o]);
+    }
+    m
+}
+
+pub(super) fn row_sum(xs: &[f32]) -> f32 {
+    let k = xs.len();
+    let chunks = k / LANES;
+    let mut lanes = [0.0f32; LANES];
+    for c in 0..chunks {
+        let o = c * LANES;
+        for l in 0..LANES {
+            lanes[l] += xs[o + l];
+        }
+    }
+    let mut acc = reduce_add(&lanes);
+    for o in chunks * LANES..k {
+        acc += xs[o];
+    }
+    acc
+}
+
+pub(super) fn sum_sq(xs: &[f32]) -> f32 {
+    let k = xs.len();
+    let chunks = k / LANES;
+    let mut lanes = [0.0f32; LANES];
+    for c in 0..chunks {
+        let o = c * LANES;
+        for l in 0..LANES {
+            lanes[l] += xs[o + l] * xs[o + l];
+        }
+    }
+    let mut acc = reduce_add(&lanes);
+    for o in chunks * LANES..k {
+        acc += xs[o] * xs[o];
+    }
+    acc
+}
+
+pub(super) fn scale(xs: &mut [f32], s: f32) {
+    for x in xs.iter_mut() {
+        *x *= s;
+    }
+}
+
+pub(super) fn exp_shifted(xs: &mut [f32], shift: f32) {
+    for x in xs.iter_mut() {
+        // x - 0.0 is bitwise x for every x (incl. -0.0, inf, NaN), so
+        // exp_inplace reuses this kernel with shift = 0.0
+        *x = exp_core(*x - shift);
+    }
+}
+
+pub(super) fn dequant_f16(src: &[u16], out: &mut [f32]) {
+    debug_assert_eq!(src.len(), out.len());
+    for (dst, &h) in out.iter_mut().zip(src) {
+        *dst = f16_bits_to_f32(h);
+    }
+}
+
+pub(super) fn dequant_i8(src: &[i8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(src.len(), out.len());
+    for (dst, &q) in out.iter_mut().zip(src) {
+        // i8 → f32 is exact; the tier ladder's scales are powers of
+        // two so the multiply is exact too
+        *dst = q as f32 * scale;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared per-element exp (Cephes / sse_mathfun lineage)
+// ---------------------------------------------------------------------------
+
+pub(super) const EXP_HI: f32 = 88.3762626647949;
+pub(super) const EXP_LO: f32 = -88.3762626647949;
+pub(super) const LOG2EF: f32 = 1.44269504088896341;
+/// High part of ln(2) — an exactly-representable short binary fraction
+/// (0.693359375 = 710/1024) so `fx · C1` loses no low bits.
+pub(super) const EXP_C1: f32 = 0.693359375;
+pub(super) const EXP_C2: f32 = -2.12194440e-4;
+pub(super) const EXP_P0: f32 = 1.9875691500e-4;
+pub(super) const EXP_P1: f32 = 1.3981999507e-3;
+pub(super) const EXP_P2: f32 = 8.3334519073e-3;
+pub(super) const EXP_P3: f32 = 4.1665795894e-2;
+pub(super) const EXP_P4: f32 = 1.6666665459e-1;
+pub(super) const EXP_P5: f32 = 5.0000001201e-1;
+
+/// `exp(x)` via the classic single-precision Cephes polynomial —
+/// every step an exactly-rounded IEEE op, so the SSE2/AVX2 ports in
+/// `x86.rs` reproduce it bit for bit.  Relative error vs `f32::exp`
+/// is a few ulps over the clamp range; the end selects pin the mask
+/// semantics softmax relies on: `exp(-inf) == 0` exactly, overflow
+/// saturates to `+inf`, NaN yields the canonical quiet NaN.
+pub(super) fn exp_core(x0: f32) -> f32 {
+    // minps then maxps, operand order as the vector code issues them:
+    // min(x, HI) returns HI when x is NaN, max(t, LO) then keeps NaN
+    // out of the pipeline until the final select re-injects it
+    let x = if x0 < EXP_HI { x0 } else { EXP_HI };
+    let x = if x > EXP_LO { x } else { EXP_LO };
+    // fx = floor(x·log2(e) + ½) — round-half-up nearest integer.
+    // f32::floor is exact, matching both vroundps and the SSE2
+    // truncate-and-adjust emulation for every in-range value.
+    let fx = (x * LOG2EF + 0.5).floor();
+    // extended-precision ln(2) split keeps x - fx·ln2 accurate
+    let x = x - fx * EXP_C1;
+    let x = x - fx * EXP_C2;
+    let z = x * x;
+    let mut y = EXP_P0;
+    y = y * x + EXP_P1;
+    y = y * x + EXP_P2;
+    y = y * x + EXP_P3;
+    y = y * x + EXP_P4;
+    y = y * x + EXP_P5;
+    y = y * z + x;
+    y += 1.0;
+    // 2^fx by exponent-field construction (fx ∈ [-127, 127] after the
+    // clamp; -127 builds +0.0, flushing the bottom edge to zero the
+    // same way on every ISA)
+    let pow2n = f32::from_bits((((fx as i32) + 127) as u32) << 23);
+    let mut r = y * pow2n;
+    // ordered-compare selects, same order as the vector blends; NaN
+    // input fails both ordered compares and takes only the last
+    if x0 > EXP_HI {
+        r = f32::INFINITY;
+    }
+    if x0 < EXP_LO {
+        r = 0.0;
+    }
+    if x0.is_nan() {
+        r = f32::NAN;
+    }
+    r
+}
+
+/// Convert IEEE binary16 bits to f32 (exact — every f16 value is
+/// representable, and the mapping matches `vcvtph2ps` including sign,
+/// subnormal normalisation, and NaN payload placement, which is what
+/// lets the AVX2 dequant kernel use the hardware converter).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13) // inf / NaN
+    } else if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal: normalise into an f32 normal
+            let mut e = 113u32; // would-be exponent field of 2^-14 * 1.x
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x03ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_core_tracks_libm_exp() {
+        // a few ulps of relative error across the useful range
+        for i in -3000..=3000 {
+            let x = i as f32 * 0.0293;
+            let got = exp_core(x);
+            let want = x.exp();
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 3e-7, "exp_core({x}) = {got}, libm {want}, rel {rel}");
+        }
+    }
+
+    #[test]
+    fn exp_core_edge_semantics() {
+        assert_eq!(exp_core(f32::NEG_INFINITY), 0.0, "mask semantics: exp(-inf) must be 0");
+        assert_eq!(exp_core(-1.0e4), 0.0);
+        assert_eq!(exp_core(f32::INFINITY), f32::INFINITY);
+        assert_eq!(exp_core(1.0e4), f32::INFINITY);
+        assert!(exp_core(f32::NAN).is_nan());
+        assert_eq!(exp_core(0.0), 1.0);
+        assert_eq!(exp_core(-0.0), 1.0);
+    }
+
+    #[test]
+    fn row_max_uses_maxps_semantics() {
+        // NaN first: dropped by the next ordered compare
+        assert_eq!(row_max(&[f32::NAN, 2.0]), 2.0);
+        // NaN last: propagates
+        assert!(row_max(&[2.0, f32::NAN]).is_nan());
+        assert_eq!(row_max(&[]), f32::NEG_INFINITY);
+        assert_eq!(row_max(&[-3.0]), -3.0);
+    }
+
+    #[test]
+    fn reductions_match_naive_within_tolerance() {
+        let xs: Vec<f32> = (0..37).map(|i| (i as f32 * 0.7).sin()).collect();
+        let ys: Vec<f32> = (0..37).map(|i| (i as f32 * 0.3).cos()).collect();
+        let naive_dot: f32 = xs.iter().zip(&ys).map(|(a, b)| a * b).sum();
+        assert!((dot(&xs, &ys) - naive_dot).abs() < 1e-4);
+        let naive_sum: f32 = xs.iter().sum();
+        assert!((row_sum(&xs) - naive_sum).abs() < 1e-4);
+        let naive_sq: f32 = xs.iter().map(|x| x * x).sum();
+        assert!((sum_sq(&xs) - naive_sq).abs() < 1e-4);
+    }
+}

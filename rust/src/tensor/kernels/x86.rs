@@ -1,0 +1,550 @@
+//! SSE2 and AVX2 kernel variants (`core::arch` intrinsics).
+//!
+//! Compiled only with `--features simd` on x86/x86_64; installed into
+//! the dispatch only after `is_x86_feature_detected!` confirms the CPU
+//! (see [`super::table_for`]).  Every kernel reproduces the scalar
+//! reference in `scalar.rs` bit for bit:
+//!
+//! * reductions keep the fixed 8-lane accumulation — AVX2 holds one
+//!   `__m256`, SSE2 holds two `__m128`s (lanes 0–3 / 4–7) whose first
+//!   `addps`/`maxps` *is* level one of the shared reduction tree;
+//! * multiplies and adds are issued separately (`mul_ps` + `add_ps`,
+//!   never `fmadd`) because FMA's single rounding would split the
+//!   variants;
+//! * `exp` ports [`scalar::exp_core`] lane-parallel with
+//!   ordered-compare blends for the inf/zero/NaN end selects (built
+//!   from `and`/`andnot`/`or` — no SSE4.1 `blendvps`);
+//! * tails (`len % lanes`) fall through to the scalar per-element
+//!   helpers, which are the same arithmetic by construction.
+//!
+//! All memory access is `loadu`/`storeu` — no alignment requirement.
+//!
+//! SSE2 lacks `vcvtph2ps`/`pmovsxbd`, so its table points the dequant
+//! entries at the scalar decoders (identical results; the conversions
+//! are exact either way).
+
+#![allow(unsafe_code)]
+
+#[cfg(target_arch = "x86")]
+use core::arch::x86::*;
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64::*;
+
+use super::scalar;
+use super::{KernelIsa, KernelTable};
+
+pub(super) static SSE2_TABLE: KernelTable = KernelTable {
+    isa: KernelIsa::Sse2,
+    dot: dot_sse2,
+    saxpy: saxpy_sse2,
+    row_max: row_max_sse2,
+    row_sum: row_sum_sse2,
+    sum_sq: sum_sq_sse2,
+    scale: scale_sse2,
+    exp_shifted: exp_shifted_sse2,
+    // no f16c / pmovsxbd at this tier: the scalar decoders are already
+    // exact, so pointing at them keeps the table total without a port
+    dequant_f16: scalar::dequant_f16,
+    dequant_i8: scalar::dequant_i8,
+};
+
+pub(super) static AVX2_TABLE: KernelTable = KernelTable {
+    isa: KernelIsa::Avx2,
+    dot: dot_avx2,
+    saxpy: saxpy_avx2,
+    row_max: row_max_avx2,
+    row_sum: row_sum_avx2,
+    sum_sq: sum_sq_avx2,
+    scale: scale_avx2,
+    exp_shifted: exp_shifted_avx2,
+    dequant_f16: dequant_f16_avx2,
+    dequant_i8: dequant_i8_avx2,
+};
+
+// ---------------------------------------------------------------------------
+// Shared horizontal reductions (the fixed tree)
+// ---------------------------------------------------------------------------
+
+/// Levels 2–3 of the reduction tree on a 4-lane register holding
+/// `s0..s3`: `t_i = s_i ⊕ s_{i+2}`, then `t_0 ⊕ t_1`.
+#[target_feature(enable = "sse2")]
+unsafe fn hadd_tree128(s4: __m128) -> f32 {
+    let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+    let s1 = _mm_add_ss(s2, _mm_shuffle_ps(s2, s2, 1));
+    _mm_cvtss_f32(s1)
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn hmax_tree128(s4: __m128) -> f32 {
+    let s2 = _mm_max_ps(s4, _mm_movehl_ps(s4, s4));
+    let s1 = _mm_max_ss(s2, _mm_shuffle_ps(s2, s2, 1));
+    _mm_cvtss_f32(s1)
+}
+
+// ---------------------------------------------------------------------------
+// SSE2
+// ---------------------------------------------------------------------------
+
+fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: reachable only through SSE2_TABLE, which table_for hands
+    // out only when sse2 is detected at runtime
+    unsafe { dot_sse2_impl(a, b) }
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn dot_sse2_impl(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let k = a.len();
+    let chunks = k / 8;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc_lo = _mm_setzero_ps(); // lanes 0..4
+    let mut acc_hi = _mm_setzero_ps(); // lanes 4..8
+    for c in 0..chunks {
+        let o = c * 8;
+        let p0 = _mm_mul_ps(_mm_loadu_ps(ap.add(o)), _mm_loadu_ps(bp.add(o)));
+        let p1 = _mm_mul_ps(_mm_loadu_ps(ap.add(o + 4)), _mm_loadu_ps(bp.add(o + 4)));
+        acc_lo = _mm_add_ps(acc_lo, p0);
+        acc_hi = _mm_add_ps(acc_hi, p1);
+    }
+    // level 1 of the tree: lane_i + lane_{i+4}
+    let mut s = hadd_tree128(_mm_add_ps(acc_lo, acc_hi));
+    for o in chunks * 8..k {
+        s += a[o] * b[o];
+    }
+    s
+}
+
+fn saxpy_sse2(a: f32, x: &[f32], y: &mut [f32]) {
+    // SAFETY: see dot_sse2
+    unsafe { saxpy_sse2_impl(a, x, y) }
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn saxpy_sse2_impl(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let va = _mm_set1_ps(a);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    for c in 0..chunks {
+        let o = c * 4;
+        let prod = _mm_mul_ps(va, _mm_loadu_ps(xp.add(o)));
+        _mm_storeu_ps(yp.add(o), _mm_add_ps(_mm_loadu_ps(yp.add(o)), prod));
+    }
+    for o in chunks * 4..n {
+        y[o] += a * x[o];
+    }
+}
+
+fn row_max_sse2(xs: &[f32]) -> f32 {
+    // SAFETY: see dot_sse2
+    unsafe { row_max_sse2_impl(xs) }
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn row_max_sse2_impl(xs: &[f32]) -> f32 {
+    let k = xs.len();
+    let chunks = k / 8;
+    let p = xs.as_ptr();
+    let mut acc_lo = _mm_set1_ps(f32::NEG_INFINITY);
+    let mut acc_hi = _mm_set1_ps(f32::NEG_INFINITY);
+    for c in 0..chunks {
+        let o = c * 8;
+        acc_lo = _mm_max_ps(acc_lo, _mm_loadu_ps(p.add(o)));
+        acc_hi = _mm_max_ps(acc_hi, _mm_loadu_ps(p.add(o + 4)));
+    }
+    let mut m = hmax_tree128(_mm_max_ps(acc_lo, acc_hi));
+    for o in chunks * 8..k {
+        m = scalar::sel_max(m, xs[o]);
+    }
+    m
+}
+
+fn row_sum_sse2(xs: &[f32]) -> f32 {
+    // SAFETY: see dot_sse2
+    unsafe { row_sum_sse2_impl(xs) }
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn row_sum_sse2_impl(xs: &[f32]) -> f32 {
+    let k = xs.len();
+    let chunks = k / 8;
+    let p = xs.as_ptr();
+    let mut acc_lo = _mm_setzero_ps();
+    let mut acc_hi = _mm_setzero_ps();
+    for c in 0..chunks {
+        let o = c * 8;
+        acc_lo = _mm_add_ps(acc_lo, _mm_loadu_ps(p.add(o)));
+        acc_hi = _mm_add_ps(acc_hi, _mm_loadu_ps(p.add(o + 4)));
+    }
+    let mut s = hadd_tree128(_mm_add_ps(acc_lo, acc_hi));
+    for o in chunks * 8..k {
+        s += xs[o];
+    }
+    s
+}
+
+fn sum_sq_sse2(xs: &[f32]) -> f32 {
+    // SAFETY: see dot_sse2
+    unsafe { sum_sq_sse2_impl(xs) }
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn sum_sq_sse2_impl(xs: &[f32]) -> f32 {
+    let k = xs.len();
+    let chunks = k / 8;
+    let p = xs.as_ptr();
+    let mut acc_lo = _mm_setzero_ps();
+    let mut acc_hi = _mm_setzero_ps();
+    for c in 0..chunks {
+        let o = c * 8;
+        let v0 = _mm_loadu_ps(p.add(o));
+        let v1 = _mm_loadu_ps(p.add(o + 4));
+        acc_lo = _mm_add_ps(acc_lo, _mm_mul_ps(v0, v0));
+        acc_hi = _mm_add_ps(acc_hi, _mm_mul_ps(v1, v1));
+    }
+    let mut s = hadd_tree128(_mm_add_ps(acc_lo, acc_hi));
+    for o in chunks * 8..k {
+        s += xs[o] * xs[o];
+    }
+    s
+}
+
+fn scale_sse2(xs: &mut [f32], s: f32) {
+    // SAFETY: see dot_sse2
+    unsafe { scale_sse2_impl(xs, s) }
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn scale_sse2_impl(xs: &mut [f32], s: f32) {
+    let n = xs.len();
+    let chunks = n / 4;
+    let vs = _mm_set1_ps(s);
+    let p = xs.as_mut_ptr();
+    for c in 0..chunks {
+        let o = c * 4;
+        _mm_storeu_ps(p.add(o), _mm_mul_ps(_mm_loadu_ps(p.add(o)), vs));
+    }
+    for x in xs[chunks * 4..].iter_mut() {
+        *x *= s;
+    }
+}
+
+fn exp_shifted_sse2(xs: &mut [f32], shift: f32) {
+    // SAFETY: see dot_sse2
+    unsafe { exp_shifted_sse2_impl(xs, shift) }
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn exp_shifted_sse2_impl(xs: &mut [f32], shift: f32) {
+    let n = xs.len();
+    let chunks = n / 4;
+    let p = xs.as_mut_ptr();
+    let vshift = _mm_set1_ps(shift);
+    for c in 0..chunks {
+        let o = c * 4;
+        let x0 = _mm_sub_ps(_mm_loadu_ps(p.add(o)), vshift);
+        _mm_storeu_ps(p.add(o), exp128(x0));
+    }
+    for x in xs[chunks * 4..].iter_mut() {
+        *x = scalar::exp_core(*x - shift);
+    }
+}
+
+/// 4-lane port of [`scalar::exp_core`] — same clamps, same polynomial,
+/// same end selects, per lane.  `floor` is emulated (no `roundps` in
+/// SSE2) by truncate-and-adjust, which is exact over the clamped range
+/// and therefore equal to `f32::floor`.
+#[target_feature(enable = "sse2")]
+unsafe fn exp128(x0: __m128) -> __m128 {
+    let hi = _mm_set1_ps(scalar::EXP_HI);
+    let lo = _mm_set1_ps(scalar::EXP_LO);
+    let mut x = _mm_min_ps(x0, hi);
+    x = _mm_max_ps(x, lo);
+    let fx0 = _mm_add_ps(_mm_mul_ps(x, _mm_set1_ps(scalar::LOG2EF)), _mm_set1_ps(0.5));
+    // floor: truncate toward zero, then subtract 1 where truncation
+    // rounded up (negative non-integers)
+    let trunc = _mm_cvtepi32_ps(_mm_cvttps_epi32(fx0));
+    let adj = _mm_and_ps(_mm_cmpgt_ps(trunc, fx0), _mm_set1_ps(1.0));
+    let fx = _mm_sub_ps(trunc, adj);
+    x = _mm_sub_ps(x, _mm_mul_ps(fx, _mm_set1_ps(scalar::EXP_C1)));
+    x = _mm_sub_ps(x, _mm_mul_ps(fx, _mm_set1_ps(scalar::EXP_C2)));
+    let z = _mm_mul_ps(x, x);
+    let mut y = _mm_set1_ps(scalar::EXP_P0);
+    y = _mm_add_ps(_mm_mul_ps(y, x), _mm_set1_ps(scalar::EXP_P1));
+    y = _mm_add_ps(_mm_mul_ps(y, x), _mm_set1_ps(scalar::EXP_P2));
+    y = _mm_add_ps(_mm_mul_ps(y, x), _mm_set1_ps(scalar::EXP_P3));
+    y = _mm_add_ps(_mm_mul_ps(y, x), _mm_set1_ps(scalar::EXP_P4));
+    y = _mm_add_ps(_mm_mul_ps(y, x), _mm_set1_ps(scalar::EXP_P5));
+    y = _mm_add_ps(_mm_mul_ps(y, z), x);
+    y = _mm_add_ps(y, _mm_set1_ps(1.0));
+    let emm = _mm_add_epi32(_mm_cvttps_epi32(fx), _mm_set1_epi32(127));
+    let pow2n = _mm_castsi128_ps(_mm_slli_epi32(emm, 23));
+    let mut r = _mm_mul_ps(y, pow2n);
+    // end selects in the scalar order: overflow → +inf, underflow /
+    // -inf → 0, NaN → canonical quiet NaN (ordered compares are false
+    // on NaN, so only the last mask fires for it)
+    let m_hi = _mm_cmpgt_ps(x0, hi);
+    let m_lo = _mm_cmplt_ps(x0, lo);
+    let m_nan = _mm_cmpunord_ps(x0, x0);
+    r = _mm_or_ps(_mm_andnot_ps(m_hi, r), _mm_and_ps(m_hi, _mm_set1_ps(f32::INFINITY)));
+    r = _mm_andnot_ps(m_lo, r);
+    r = _mm_or_ps(_mm_andnot_ps(m_nan, r), _mm_and_ps(m_nan, _mm_set1_ps(f32::NAN)));
+    r
+}
+
+// ---------------------------------------------------------------------------
+// AVX2
+// ---------------------------------------------------------------------------
+
+fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: reachable only through AVX2_TABLE, which table_for hands
+    // out only when avx2+fma+f16c are detected at runtime
+    unsafe { dot_avx2_impl(a, b) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2_impl(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let k = a.len();
+    let chunks = k / 8;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let o = c * 8;
+        // mul then add — not fmadd — to keep the scalar mirror bitwise
+        let prod = _mm256_mul_ps(_mm256_loadu_ps(ap.add(o)), _mm256_loadu_ps(bp.add(o)));
+        acc = _mm256_add_ps(acc, prod);
+    }
+    // level 1 of the tree: low half + high half
+    let s4 = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps(acc, 1));
+    let mut s = hadd_tree128(s4);
+    for o in chunks * 8..k {
+        s += a[o] * b[o];
+    }
+    s
+}
+
+fn saxpy_avx2(a: f32, x: &[f32], y: &mut [f32]) {
+    // SAFETY: see dot_avx2
+    unsafe { saxpy_avx2_impl(a, x, y) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn saxpy_avx2_impl(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let va = _mm256_set1_ps(a);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    for c in 0..chunks {
+        let o = c * 8;
+        let prod = _mm256_mul_ps(va, _mm256_loadu_ps(xp.add(o)));
+        _mm256_storeu_ps(yp.add(o), _mm256_add_ps(_mm256_loadu_ps(yp.add(o)), prod));
+    }
+    for o in chunks * 8..n {
+        y[o] += a * x[o];
+    }
+}
+
+fn row_max_avx2(xs: &[f32]) -> f32 {
+    // SAFETY: see dot_avx2
+    unsafe { row_max_avx2_impl(xs) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn row_max_avx2_impl(xs: &[f32]) -> f32 {
+    let k = xs.len();
+    let chunks = k / 8;
+    let p = xs.as_ptr();
+    let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+    for c in 0..chunks {
+        acc = _mm256_max_ps(acc, _mm256_loadu_ps(p.add(c * 8)));
+    }
+    let s4 = _mm_max_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps(acc, 1));
+    let mut m = hmax_tree128(s4);
+    for o in chunks * 8..k {
+        m = scalar::sel_max(m, xs[o]);
+    }
+    m
+}
+
+fn row_sum_avx2(xs: &[f32]) -> f32 {
+    // SAFETY: see dot_avx2
+    unsafe { row_sum_avx2_impl(xs) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn row_sum_avx2_impl(xs: &[f32]) -> f32 {
+    let k = xs.len();
+    let chunks = k / 8;
+    let p = xs.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        acc = _mm256_add_ps(acc, _mm256_loadu_ps(p.add(c * 8)));
+    }
+    let s4 = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps(acc, 1));
+    let mut s = hadd_tree128(s4);
+    for o in chunks * 8..k {
+        s += xs[o];
+    }
+    s
+}
+
+fn sum_sq_avx2(xs: &[f32]) -> f32 {
+    // SAFETY: see dot_avx2
+    unsafe { sum_sq_avx2_impl(xs) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sum_sq_avx2_impl(xs: &[f32]) -> f32 {
+    let k = xs.len();
+    let chunks = k / 8;
+    let p = xs.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let v = _mm256_loadu_ps(p.add(c * 8));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(v, v));
+    }
+    let s4 = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps(acc, 1));
+    let mut s = hadd_tree128(s4);
+    for o in chunks * 8..k {
+        s += xs[o] * xs[o];
+    }
+    s
+}
+
+fn scale_avx2(xs: &mut [f32], s: f32) {
+    // SAFETY: see dot_avx2
+    unsafe { scale_avx2_impl(xs, s) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_avx2_impl(xs: &mut [f32], s: f32) {
+    let n = xs.len();
+    let chunks = n / 8;
+    let vs = _mm256_set1_ps(s);
+    let p = xs.as_mut_ptr();
+    for c in 0..chunks {
+        let o = c * 8;
+        _mm256_storeu_ps(p.add(o), _mm256_mul_ps(_mm256_loadu_ps(p.add(o)), vs));
+    }
+    for x in xs[chunks * 8..].iter_mut() {
+        *x *= s;
+    }
+}
+
+fn exp_shifted_avx2(xs: &mut [f32], shift: f32) {
+    // SAFETY: see dot_avx2
+    unsafe { exp_shifted_avx2_impl(xs, shift) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn exp_shifted_avx2_impl(xs: &mut [f32], shift: f32) {
+    let n = xs.len();
+    let chunks = n / 8;
+    let p = xs.as_mut_ptr();
+    let vshift = _mm256_set1_ps(shift);
+    for c in 0..chunks {
+        let o = c * 8;
+        let x0 = _mm256_sub_ps(_mm256_loadu_ps(p.add(o)), vshift);
+        _mm256_storeu_ps(p.add(o), exp256(x0));
+    }
+    for x in xs[chunks * 8..].iter_mut() {
+        *x = scalar::exp_core(*x - shift);
+    }
+}
+
+/// 8-lane port of [`scalar::exp_core`]; `vroundps` floor is exact, so
+/// it equals both `f32::floor` and the SSE2 emulation.
+#[target_feature(enable = "avx2")]
+unsafe fn exp256(x0: __m256) -> __m256 {
+    let hi = _mm256_set1_ps(scalar::EXP_HI);
+    let lo = _mm256_set1_ps(scalar::EXP_LO);
+    let mut x = _mm256_min_ps(x0, hi);
+    x = _mm256_max_ps(x, lo);
+    let fx0 = _mm256_add_ps(_mm256_mul_ps(x, _mm256_set1_ps(scalar::LOG2EF)), _mm256_set1_ps(0.5));
+    let fx = _mm256_floor_ps(fx0);
+    x = _mm256_sub_ps(x, _mm256_mul_ps(fx, _mm256_set1_ps(scalar::EXP_C1)));
+    x = _mm256_sub_ps(x, _mm256_mul_ps(fx, _mm256_set1_ps(scalar::EXP_C2)));
+    let z = _mm256_mul_ps(x, x);
+    let mut y = _mm256_set1_ps(scalar::EXP_P0);
+    y = _mm256_add_ps(_mm256_mul_ps(y, x), _mm256_set1_ps(scalar::EXP_P1));
+    y = _mm256_add_ps(_mm256_mul_ps(y, x), _mm256_set1_ps(scalar::EXP_P2));
+    y = _mm256_add_ps(_mm256_mul_ps(y, x), _mm256_set1_ps(scalar::EXP_P3));
+    y = _mm256_add_ps(_mm256_mul_ps(y, x), _mm256_set1_ps(scalar::EXP_P4));
+    y = _mm256_add_ps(_mm256_mul_ps(y, x), _mm256_set1_ps(scalar::EXP_P5));
+    y = _mm256_add_ps(_mm256_mul_ps(y, z), x);
+    y = _mm256_add_ps(y, _mm256_set1_ps(1.0));
+    let emm = _mm256_add_epi32(_mm256_cvttps_epi32(fx), _mm256_set1_epi32(127));
+    let pow2n = _mm256_castsi256_ps(_mm256_slli_epi32(emm, 23));
+    let mut r = _mm256_mul_ps(y, pow2n);
+    let m_hi = _mm256_cmp_ps(x0, hi, _CMP_GT_OQ);
+    let m_lo = _mm256_cmp_ps(x0, lo, _CMP_LT_OQ);
+    let m_nan = _mm256_cmp_ps(x0, x0, _CMP_UNORD_Q);
+    r = _mm256_or_ps(
+        _mm256_andnot_ps(m_hi, r),
+        _mm256_and_ps(m_hi, _mm256_set1_ps(f32::INFINITY)),
+    );
+    r = _mm256_andnot_ps(m_lo, r);
+    r = _mm256_or_ps(
+        _mm256_andnot_ps(m_nan, r),
+        _mm256_and_ps(m_nan, _mm256_set1_ps(f32::NAN)),
+    );
+    r
+}
+
+fn dequant_f16_avx2(src: &[u16], out: &mut [f32]) {
+    // SAFETY: see dot_avx2 (the table gate includes f16c)
+    unsafe { dequant_f16_avx2_impl(src, out) }
+}
+
+#[target_feature(enable = "avx2,f16c")]
+unsafe fn dequant_f16_avx2_impl(src: &[u16], out: &mut [f32]) {
+    debug_assert_eq!(src.len(), out.len());
+    let n = src.len();
+    let chunks = n / 8;
+    let sp = src.as_ptr();
+    let op = out.as_mut_ptr();
+    for c in 0..chunks {
+        let o = c * 8;
+        // 8 halfs = 16 bytes; vcvtph2ps is the exact same mapping as
+        // the bit-twiddling scalar decoder (f16 → f32 is exact)
+        let halfs = _mm_loadu_si128(sp.add(o) as *const __m128i);
+        _mm256_storeu_ps(op.add(o), _mm256_cvtph_ps(halfs));
+    }
+    for o in chunks * 8..n {
+        out[o] = scalar::f16_bits_to_f32(src[o]);
+    }
+}
+
+fn dequant_i8_avx2(src: &[i8], scale: f32, out: &mut [f32]) {
+    // SAFETY: see dot_avx2
+    unsafe { dequant_i8_avx2_impl(src, scale, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dequant_i8_avx2_impl(src: &[i8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(src.len(), out.len());
+    let n = src.len();
+    let chunks = n / 8;
+    let sp = src.as_ptr();
+    let op = out.as_mut_ptr();
+    let vs = _mm256_set1_ps(scale);
+    for c in 0..chunks {
+        let o = c * 8;
+        // 8 bytes sign-extended to i32 (exact), converted to f32
+        // (exact), scaled by one IEEE multiply — same three steps as
+        // the scalar decoder
+        let bytes = _mm_loadl_epi64(sp.add(o) as *const __m128i);
+        let ints = _mm256_cvtepi8_epi32(bytes);
+        _mm256_storeu_ps(op.add(o), _mm256_mul_ps(_mm256_cvtepi32_ps(ints), vs));
+    }
+    for o in chunks * 8..n {
+        out[o] = src[o] as f32 * scale;
+    }
+}

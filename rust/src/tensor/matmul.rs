@@ -7,6 +7,22 @@
 //! * [`matmul_nt`]  — `C = A · Bᵀ`       (dot-product of rows; the `QKᵀ` shape)
 //! * [`matmul_tn`]  — `C = Aᵀ · B`       (outer-product accumulate; `SᵀV`)
 //!
+//! The inner loops are the dispatched SIMD microkernels of
+//! [`super::kernels`]: [`matmul_nt`]'s row dot runs on the shared
+//! 8-lane `dot` kernel (fixed lane-reduction tree — see the kernels
+//! module docs; this replaced an older 4-way unrolled accumulator),
+//! while [`matmul`] and [`matmul_tn`] stream `saxpy` row updates,
+//! which are element-wise and therefore bitwise identical at any lane
+//! width.  Every ISA variant of those kernels produces identical
+//! bytes, so kernel dispatch — like threading — never changes results.
+//!
+//! [`matmul`] probes each A row for zeros once: rows without any (the
+//! common dense case) take a branch-free saxpy stream; rows with real
+//! zeros (masked attention) keep the skip, which both saves the work
+//! and preserves the historical semantics that a zero coefficient
+//! contributes nothing even against non-finite B rows.  Output is
+//! bitwise identical either way.
+//!
 //! All kernels parallelise over row blocks with
 //! [`crate::pool::parallel_row_blocks`] when the output is large enough to
 //! amortise the queue round-trip on the persistent worker pool.  Results
@@ -21,6 +37,7 @@
 //! single-threaded instead of oversubscribing (~10–20% loss at 16×8
 //! before this existed).
 
+use super::kernels;
 use super::Matrix;
 use crate::pool;
 use std::cell::Cell;
@@ -109,19 +126,28 @@ fn matmul_into_plan(a: &Matrix, b: &Matrix, out: &mut Matrix, plan: MatmulPlan) 
     // allocating path does
     out.data_mut().iter_mut().for_each(|x| *x = 0.0);
     let bd = b.data();
+    let kt = kernels::active();
     let run = |rows: std::ops::Range<usize>, out_rows: &mut [f32]| {
-        // ikj order: C[i,:] += A[i,k] * B[k,:] — unit-stride on both C and B,
-        // which the compiler auto-vectorises.
+        // ikj order: C[i,:] += A[i,k] * B[k,:] — unit-stride saxpy on
+        // both C and B.  One zero-probe per row picks the path: dense
+        // rows (the common case) stream branch-free; rows with real
+        // zeros (masked attention) keep the per-coefficient skip.
+        // Bitwise identical either way — the dense path performs the
+        // exact add sequence the skip path would, because there is
+        // nothing to skip.
         for (ri, i) in rows.enumerate() {
             let arow = a.row(i);
             let crow = &mut out_rows[ri * n..(ri + 1) * n];
-            for (k, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue; // sparse-ish rows (masked attention) skip work
+            if arow.iter().any(|&x| x == 0.0) {
+                for (k, &aik) in arow.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue; // sparse-ish rows skip work
+                    }
+                    (kt.saxpy)(aik, &bd[k * n..(k + 1) * n], crow);
                 }
-                let brow = &bd[k * n..(k + 1) * n];
-                for (c, &bv) in crow.iter_mut().zip(brow) {
-                    *c += aik * bv;
+            } else {
+                for (k, &aik) in arow.iter().enumerate() {
+                    (kt.saxpy)(aik, &bd[k * n..(k + 1) * n], crow);
                 }
             }
         }
@@ -161,30 +187,16 @@ fn matmul_nt_into_plan(a: &Matrix, b: &Matrix, out: &mut Matrix, plan: MatmulPla
     assert_eq!(ka, kb, "matmul_nt inner-dim mismatch: {ka} vs {kb}");
     assert_eq!(out.shape(), (m, n), "matmul_nt_into output shape mismatch");
     let k = ka;
+    let kt = kernels::active();
     let run = |rows: std::ops::Range<usize>, out_rows: &mut [f32]| {
         for (ri, i) in rows.enumerate() {
             let arow = a.row(i);
             let crow = &mut out_rows[ri * n..(ri + 1) * n];
             for j in 0..n {
-                let brow = b.row(j);
-                // 4-way unrolled dot product; slices are unit-stride.
-                let mut acc0 = 0.0f32;
-                let mut acc1 = 0.0f32;
-                let mut acc2 = 0.0f32;
-                let mut acc3 = 0.0f32;
-                let chunks = k / 4;
-                for c in 0..chunks {
-                    let o = c * 4;
-                    acc0 += arow[o] * brow[o];
-                    acc1 += arow[o + 1] * brow[o + 1];
-                    acc2 += arow[o + 2] * brow[o + 2];
-                    acc3 += arow[o + 3] * brow[o + 3];
-                }
-                let mut acc = acc0 + acc1 + acc2 + acc3;
-                for o in chunks * 4..k {
-                    acc += arow[o] * brow[o];
-                }
-                crow[j] = acc;
+                // the shared dispatched dot kernel: 8-lane fixed
+                // accumulation order on every ISA (slices are
+                // unit-stride rows of both operands)
+                crow[j] = (kt.dot)(arow, b.row(j));
             }
         }
     };
@@ -217,7 +229,11 @@ pub fn matmul_tn_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
     out.data_mut().iter_mut().for_each(|x| *x = 0.0);
     // Accumulate rank-1 updates: C += A[k,:]ᵀ ⊗ B[k,:]. Single-threaded —
     // every k touches the whole output, and the m×n outputs here are small
-    // (d×p) in all call sites.
+    // (d×p) in all call sites.  The zero-coefficient skip is part of the
+    // accumulation order contract: the streaming sketch sessions replay
+    // it token by token (see `attention/session.rs`), so both sides now
+    // route the row update through the same dispatched saxpy kernel.
+    let kt = kernels::active();
     for kk in 0..ka {
         let arow = a.row(kk);
         let brow = b.row(kk);
@@ -225,26 +241,21 @@ pub fn matmul_tn_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
             if av == 0.0 {
                 continue;
             }
-            let crow = &mut out.data_mut()[i * n..(i + 1) * n];
-            for (c, &bv) in crow.iter_mut().zip(brow) {
-                *c += av * bv;
-            }
+            (kt.saxpy)(av, brow, &mut out.data_mut()[i * n..(i + 1) * n]);
         }
     }
 }
 
-/// `y = A · x` with `A: (m,k)`, `x: (k,)`.
+/// `y = A · x` with `A: (m,k)`, `x: (k,)` — per-row dots on the shared
+/// dispatched kernel, so matvec agrees bitwise with a 1-column
+/// [`matmul_nt`] of the same operands.
 pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
     let (m, k) = a.shape();
     assert_eq!(k, x.len(), "matvec dim mismatch");
+    let kt = kernels::active();
     let mut y = vec![0.0f32; m];
     for i in 0..m {
-        let row = a.row(i);
-        let mut acc = 0.0f32;
-        for (av, xv) in row.iter().zip(x) {
-            acc += av * xv;
-        }
-        y[i] = acc;
+        y[i] = (kt.dot)(a.row(i), x);
     }
     y
 }

@@ -10,13 +10,19 @@
 //! Methods that allocate return new matrices; `_into` / `*_assign` variants
 //! reuse buffers on hot paths.  Batched multi-head inputs live in
 //! [`BatchTensor`] (`[batch, heads, seq, head_dim]`, contiguous per head).
+//! The dense inner loops (dot, saxpy, softmax passes, dequantise) run on
+//! the runtime-dispatched SIMD microkernels in [`kernels`] — every ISA
+//! variant is bitwise identical by construction, so dispatch never
+//! perturbs the determinism contract.
 
 mod batch;
+pub mod kernels;
 mod matmul;
 mod norms;
 mod ops;
 
 pub use batch::BatchTensor;
+pub use kernels::KernelIsa;
 pub use matmul::{
     matmul, matmul_into, matmul_nt, matmul_nt_into, matmul_nt_plan, matmul_plan, matmul_tn,
     matmul_tn_into, matvec, with_default_plan, MatmulPlan,

@@ -5,18 +5,14 @@
 //! iteration on the p×p Gram matrix `EᵀE` converges in a handful of sweeps
 //! and costs O(n·p²) — negligible next to the attention compute.
 
-use super::ops::{normalize, sub};
+use super::ops::{dot, normalize, sub};
 use super::{matmul_tn, Matrix};
 
-/// Dense p×p mat-vec used inside the power iteration (p is small).
+/// Dense p×p mat-vec used inside the power iteration (p is small);
+/// per-row dots on the shared dispatched kernel.
 fn gram_matvec(g: &[f32], p: usize, x: &[f32], y: &mut [f32]) {
     for i in 0..p {
-        let row = &g[i * p..(i + 1) * p];
-        let mut acc = 0.0f32;
-        for (r, xv) in row.iter().zip(x) {
-            acc += r * xv;
-        }
-        y[i] = acc;
+        y[i] = dot(&g[i * p..(i + 1) * p], x);
     }
 }
 

@@ -3,39 +3,47 @@
 //! Everything the attention algorithms (and the softmax structure of the
 //! paper) need: stable row softmax, exp, row sums/means, scaling, the
 //! geometric-mean fill of Eq. (6), and small vector helpers.
+//!
+//! The dense row-contiguous loops (softmax passes, exp, scaling, dot,
+//! axpy, row norms) dispatch through [`kernels`] so every ISA variant
+//! is bitwise identical; the strided column reductions stay as plain
+//! element-order loops, which is itself a determinism pin (column
+//! accumulation order is row-by-row, unchanged from the seed).
 
-use super::Matrix;
+use super::{kernels, Matrix};
 
 /// Numerically-stable softmax applied to every row in place.
+///
+/// Four dispatched passes per row: row max, shifted exp, row sum,
+/// scale by the reciprocal.  `exp(-inf) == 0` exactly in the exp
+/// kernel, so masked columns contribute nothing to the sum.
 pub fn softmax_rows(m: &mut Matrix) {
+    let kt = kernels::active();
     let cols = m.cols();
     for i in 0..m.rows() {
         let row = m.row_mut(i);
-        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let max = (kt.row_max)(row);
         if !max.is_finite() {
             // fully-masked row: fall back to uniform so downstream stays finite
             let u = 1.0 / cols as f32;
             row.iter_mut().for_each(|x| *x = u);
             continue;
         }
-        let mut sum = 0.0f32;
-        for x in row.iter_mut() {
-            *x = (*x - max).exp();
-            sum += *x;
-        }
-        let inv = 1.0 / sum;
-        row.iter_mut().for_each(|x| *x *= inv);
+        (kt.exp_shifted)(row, max);
+        let sum = (kt.row_sum)(row);
+        (kt.scale)(row, 1.0 / sum);
     }
 }
 
-/// `exp` applied element-wise in place.
+/// `exp` applied element-wise in place (dispatched kernel; `x - 0.0`
+/// is bitwise `x`, so the shift-by-zero path is exact).
 pub fn exp_inplace(m: &mut Matrix) {
-    m.data_mut().iter_mut().for_each(|x| *x = x.exp());
+    (kernels::active().exp_shifted)(m.data_mut(), 0.0);
 }
 
 /// Multiply every element by a scalar in place.
 pub fn scale_inplace(m: &mut Matrix, s: f32) {
-    m.data_mut().iter_mut().for_each(|x| *x *= s);
+    (kernels::active().scale)(m.data_mut(), s);
 }
 
 /// `a - b`, allocating.
@@ -54,7 +62,8 @@ pub fn add(a: &Matrix, b: &Matrix) -> Matrix {
 
 /// Sum of each row.
 pub fn row_sums(m: &Matrix) -> Vec<f32> {
-    (0..m.rows()).map(|i| m.row(i).iter().sum()).collect()
+    let kt = kernels::active();
+    (0..m.rows()).map(|i| (kt.row_sum)(m.row(i))).collect()
 }
 
 /// Mean of each row.
@@ -72,8 +81,9 @@ pub fn row_norms(m: &Matrix) -> Vec<f32> {
 /// [`row_norms`] into a reused buffer (fully overwritten).
 pub fn row_norms_into(m: &Matrix, out: &mut [f32]) {
     assert_eq!(out.len(), m.rows(), "row_norms_into length mismatch");
+    let kt = kernels::active();
     for (i, o) in out.iter_mut().enumerate() {
-        *o = m.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+        *o = (kt.sum_sq)(m.row(i)).sqrt();
     }
 }
 
@@ -141,10 +151,12 @@ pub fn scale_rows_inplace(m: &mut Matrix, scales: &[f32]) {
     }
 }
 
-/// Dot product.
+/// Dot product on the dispatched kernel — the one accumulation order
+/// every dot in the crate shares (matmul_nt rows, matvec, power
+/// iteration, the sketch sessions).
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    (kernels::active().dot)(a, b)
 }
 
 /// ℓ2 norm of a vector.
@@ -162,12 +174,11 @@ pub fn normalize(v: &mut [f32]) -> f32 {
     n
 }
 
-/// axpy: `y += a * x`.
+/// axpy: `y += a * x` (dispatched kernel; element-wise, so every ISA
+/// performs the identical per-element mul-then-add — no FMA).
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, &xi) in y.iter_mut().zip(x) {
-        *yi += a * xi;
-    }
+    (kernels::active().saxpy)(a, x, y);
 }
 
 #[cfg(test)]

@@ -1,0 +1,412 @@
+//! Microkernel conformance: every ISA variant is bitwise identical.
+//!
+//! The dispatch layer's whole contract (DESIGN.md §Microkernels) is
+//! that kernel selection is a *speed knob only*: scalar, SSE2, and
+//! AVX2 commit to the same fixed 8-lane accumulation order, so served
+//! bytes never depend on the CPU, the `simd` feature, or the
+//! `SKEIN_KERNEL` override.  These tests pin that:
+//!
+//! * every kernel in the table, compared pairwise across all supported
+//!   ISAs via [`kernels::table_for`] (no global state touched), at
+//!   awkward shapes — lengths not a multiple of 8/16, empty slices,
+//!   single elements — and with NaN/inf inputs (bit-for-bit, including
+//!   NaN propagation);
+//! * the fused dequantise-on-gather path: decoding a sub-range of a
+//!   quantised payload equals decoding everything and slicing;
+//! * the `matmul` row zero-probe: the branch-free dense path and the
+//!   zero-skipping path are the same accumulation sequence, pinned
+//!   against an always-skip reference (which also pins that masked
+//!   zero rows never multiply `0 · inf` into NaN);
+//! * end to end: the full attention registry's `compute_into` under
+//!   each supported ISA (forced via [`kernels::select`]), and a tiered
+//!   KV cache demote/gather cycle, produce identical bits.
+//!
+//! The scalar table is compiled identically with and without the
+//! `simd` cargo feature, so scalar ≡ avx2 in a simd build transitively
+//! pins simd-on ≡ simd-off across builds.
+//!
+//! Tests that flip the process-wide selection serialize on a mutex and
+//! restore the previous ISA before exiting (table-based tests need no
+//! lock).
+
+use skeinformer::attention::{self, AttnInputs, AttnScratch};
+use skeinformer::kvcache::{f32_to_f16_bits, KvCache, KvCacheConfig, StreamChain, TierLadder};
+use skeinformer::rng::Rng;
+use skeinformer::tensor::kernels::{self, KernelIsa, KernelTable};
+use skeinformer::tensor::{matmul, matmul_nt, matvec, softmax_rows, Matrix};
+use std::sync::Mutex;
+
+/// Serializes tests that change the process-wide kernel selection.
+static SELECT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Every ISA this build/CPU can actually run (scalar always; SSE2/AVX2
+/// only in a `--features simd` build on hardware that has them).
+fn supported_tables() -> Vec<&'static KernelTable> {
+    KernelIsa::ALL.iter().filter_map(|&isa| kernels::table_for(isa)).collect()
+}
+
+/// Shape sweep: everything around the 8-lane boundary plus empties.
+const LENS: &[usize] = &[0, 1, 2, 3, 5, 7, 8, 9, 12, 15, 16, 17, 24, 31, 33, 63, 64, 100, 127];
+
+fn gen(len: usize, seed: u64) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    Rng::new(seed).fill_normal(&mut v);
+    v
+}
+
+/// As [`gen`] but with non-finite values planted at awkward positions
+/// (first element, a mid-lane slot, the scalar tail).
+fn gen_wild(len: usize, seed: u64) -> Vec<f32> {
+    let mut v = gen(len, seed);
+    if len > 0 {
+        v[0] = f32::NEG_INFINITY;
+    }
+    if len > 5 {
+        v[5] = f32::NAN;
+    }
+    if len > 9 {
+        v[9] = f32::INFINITY;
+    }
+    if len > 2 {
+        v[len - 1] = f32::NAN;
+    }
+    v
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: bit mismatch at {i} ({g} vs {w})"
+        );
+    }
+}
+
+#[test]
+fn reductions_are_bitwise_identical_across_isas() {
+    let scalar = kernels::table_for(KernelIsa::Scalar).unwrap();
+    for t in supported_tables() {
+        for &len in LENS {
+            for (tag, a) in [("plain", gen(len, 11)), ("wild", gen_wild(len, 11))] {
+                let b = gen(len, 17 + len as u64);
+                let what = format!("{} len={len} {tag}", t.isa);
+                assert_eq!(
+                    (t.dot)(&a, &b).to_bits(),
+                    (scalar.dot)(&a, &b).to_bits(),
+                    "dot {what}"
+                );
+                assert_eq!(
+                    (t.row_sum)(&a).to_bits(),
+                    (scalar.row_sum)(&a).to_bits(),
+                    "row_sum {what}"
+                );
+                assert_eq!(
+                    (t.sum_sq)(&a).to_bits(),
+                    (scalar.sum_sq)(&a).to_bits(),
+                    "sum_sq {what}"
+                );
+                assert_eq!(
+                    (t.row_max)(&a).to_bits(),
+                    (scalar.row_max)(&a).to_bits(),
+                    "row_max {what}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn elementwise_kernels_are_bitwise_identical_across_isas() {
+    let scalar = kernels::table_for(KernelIsa::Scalar).unwrap();
+    for t in supported_tables() {
+        for &len in LENS {
+            for (tag, x) in [("plain", gen(len, 23)), ("wild", gen_wild(len, 23))] {
+                let what = format!("{} len={len} {tag}", t.isa);
+                // saxpy
+                let mut y_got = gen(len, 29);
+                let mut y_want = y_got.clone();
+                (t.saxpy)(0.731, &x, &mut y_got);
+                (scalar.saxpy)(0.731, &x, &mut y_want);
+                assert_bits_eq(&y_got, &y_want, &format!("saxpy {what}"));
+                // scale
+                let mut s_got = x.clone();
+                let mut s_want = x.clone();
+                (t.scale)(&mut s_got, -1.75e-3);
+                (scalar.scale)(&mut s_want, -1.75e-3);
+                assert_bits_eq(&s_got, &s_want, &format!("scale {what}"));
+                // exp_shifted, both at zero shift and a softmax-like one
+                for shift in [0.0f32, 1.375, -88.0, 90.0] {
+                    let mut e_got = x.clone();
+                    let mut e_want = x.clone();
+                    (t.exp_shifted)(&mut e_got, shift);
+                    (scalar.exp_shifted)(&mut e_want, shift);
+                    assert_bits_eq(&e_got, &e_want, &format!("exp_shifted({shift}) {what}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dequant_kernels_are_bitwise_identical_across_isas() {
+    let scalar = kernels::table_for(KernelIsa::Scalar).unwrap();
+    // f16 payload: round-tripped normals plus every special encoding
+    let mut halfs: Vec<u16> = gen(90, 31).iter().map(|&x| f32_to_f16_bits(x)).collect();
+    halfs.extend([
+        0x0000, 0x8000, // ±0
+        0x7c00, 0xfc00, // ±inf
+        0x7e00, 0xfe00, // quiet NaN
+        0x7d55, // NaN with payload bits
+        0x0001, 0x03ff, 0x8001, // subnormals
+        0x7bff, 0xfbff, // ±max finite
+        0x0400, // smallest normal
+    ]);
+    let signed: Vec<i8> = (0..103).map(|i| (i * 5 % 256) as u8 as i8).collect();
+    for t in supported_tables() {
+        for &len in LENS {
+            let what = format!("{} len={len}", t.isa);
+            let hs = &halfs[..len.min(halfs.len())];
+            let mut got = vec![0.0f32; hs.len()];
+            let mut want = vec![0.0f32; hs.len()];
+            (t.dequant_f16)(hs, &mut got);
+            (scalar.dequant_f16)(hs, &mut want);
+            assert_bits_eq(&got, &want, &format!("dequant_f16 {what}"));
+            let qs = &signed[..len.min(signed.len())];
+            for scale in [0.0f32, 0.0625, 16.0] {
+                let mut got = vec![0.0f32; qs.len()];
+                let mut want = vec![0.0f32; qs.len()];
+                (t.dequant_i8)(qs, scale, &mut got);
+                (scalar.dequant_i8)(qs, scale, &mut want);
+                assert_bits_eq(&got, &want, &format!("dequant_i8({scale}) {what}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_range_dequant_equals_decode_all_then_slice() {
+    let scalar = kernels::table_for(KernelIsa::Scalar).unwrap();
+    let halfs: Vec<u16> = gen(128, 37).iter().map(|&x| f32_to_f16_bits(x)).collect();
+    let signed: Vec<i8> = (0..128).map(|i| (i * 7 % 256) as u8 as i8).collect();
+    let mut full_f16 = vec![0.0f32; halfs.len()];
+    (scalar.dequant_f16)(&halfs, &mut full_f16);
+    let mut full_i8 = vec![0.0f32; signed.len()];
+    (scalar.dequant_i8)(&signed, 0.03125, &mut full_i8);
+    for t in supported_tables() {
+        // the gather path decodes [offset, offset + head_dim) straight
+        // from the payload; any offset/width must agree with the
+        // decode-everything baseline
+        for (offset, width) in [(0usize, 128usize), (3, 13), (8, 64), (17, 5), (120, 8), (64, 0)] {
+            let mut got = vec![0.0f32; width];
+            (t.dequant_f16)(&halfs[offset..offset + width], &mut got);
+            assert_bits_eq(
+                &got,
+                &full_f16[offset..offset + width],
+                &format!("fused f16 gather {} {offset}+{width}", t.isa),
+            );
+            let mut got = vec![0.0f32; width];
+            (t.dequant_i8)(&signed[offset..offset + width], 0.03125, &mut got);
+            assert_bits_eq(
+                &got,
+                &full_i8[offset..offset + width],
+                &format!("fused i8 gather {} {offset}+{width}", t.isa),
+            );
+        }
+    }
+}
+
+/// Always-skip reference for `matmul`'s ikj accumulation: one saxpy
+/// stream per *nonzero* A element, in (i, k) order — the semantics the
+/// row zero-probe must preserve whichever path it picks.
+fn matmul_skip_reference(a: &Matrix, b: &Matrix) -> Matrix {
+    let kt = kernels::active();
+    let (m, ka) = a.shape();
+    let n = b.cols();
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        for k in 0..ka {
+            let aik = a.get(i, k);
+            if aik == 0.0 {
+                continue;
+            }
+            (kt.saxpy)(aik, b.row(k), out.row_mut(i));
+        }
+    }
+    out
+}
+
+#[test]
+fn matmul_zero_probe_paths_are_one_accumulation_order() {
+    // dense A: no zeros anywhere, so every row takes the branch-free path
+    let a_dense = Matrix::from_fn(9, 13, |i, j| ((i * 13 + j) as f32 * 0.19).sin() + 2.0);
+    // mixed A: zero elements mid-row and one all-zero (fully masked) row
+    let mut a_mixed = Matrix::from_fn(9, 13, |i, j| ((i * 13 + j) as f32 * 0.19).sin());
+    for j in 0..13 {
+        a_mixed.set(4, j, 0.0);
+    }
+    a_mixed.set(2, 3, 0.0);
+    a_mixed.set(7, 12, 0.0);
+    let b = Matrix::from_fn(13, 11, |i, j| ((i + j * 3) as f32 * 0.23).cos());
+    for a in [&a_dense, &a_mixed] {
+        let got = matmul(a, &b);
+        let want = matmul_skip_reference(a, &b);
+        assert_bits_eq(got.data(), want.data(), "matmul vs skip reference");
+    }
+    // masked-row poison: B has an inf row that only zero A coefficients
+    // touch — the skip must keep 0·inf = NaN out of the masked row
+    let mut b_inf = b.clone();
+    for j in 0..11 {
+        b_inf.set(3, j, f32::INFINITY);
+    }
+    let mut a_masked = a_mixed.clone();
+    for i in 0..9 {
+        a_masked.set(i, 3, 0.0);
+    }
+    let got = matmul(&a_masked, &b_inf);
+    assert!(got.all_finite(), "zero coefficients must skip the inf row entirely");
+    assert_bits_eq(got.data(), matmul_skip_reference(&a_masked, &b_inf).data(), "masked matmul");
+}
+
+/// Run every registry method once and return the output bits.
+fn registry_outputs(n: usize, p: usize, d: usize) -> Vec<(String, Vec<u32>)> {
+    let q = Matrix::from_fn(n, p, |i, j| ((i * 3 + j) as f32 * 0.13).sin());
+    let k = Matrix::from_fn(n, p, |i, j| ((i + j * 5) as f32 * 0.07).cos());
+    let v = Matrix::from_fn(n, p, |i, j| ((i * j) as f32 * 0.01).tanh());
+    // padding mask with real zeros: exercises the -inf score rows and
+    // the exp(-inf) == 0 kernel semantics
+    let mask: Vec<f32> = (0..n).map(|i| if i % 7 == 6 { 0.0 } else { 1.0 }).collect();
+    let mut scratch = AttnScratch::new();
+    let mut outs = Vec::new();
+    for method in attention::registry(d) {
+        for (tag, m) in [("nomask", None), ("mask", Some(mask.as_slice()))] {
+            let inputs = AttnInputs::new(&q, &k, &v).with_mask(m).with_seed(41);
+            let mut out = Matrix::zeros(n, p);
+            method.compute_into(&inputs, &mut out, &mut scratch);
+            outs.push((
+                format!("{}/{tag}", method.name()),
+                out.data().iter().map(|x| x.to_bits()).collect(),
+            ));
+        }
+    }
+    outs
+}
+
+#[test]
+fn full_registry_is_bitwise_identical_across_forced_isas() {
+    let _guard = SELECT_LOCK.lock().unwrap();
+    let prev = kernels::active_isa();
+    kernels::select(KernelIsa::Scalar).unwrap();
+    let baseline = registry_outputs(64, 16, 32);
+    for t in supported_tables() {
+        kernels::select(t.isa).unwrap();
+        let got = registry_outputs(64, 16, 32);
+        for ((name, want), (name2, bits)) in baseline.iter().zip(&got) {
+            assert_eq!(name, name2);
+            assert_eq!(
+                bits, want,
+                "{name}: output bits differ between scalar and {}",
+                t.isa
+            );
+        }
+    }
+    kernels::select(prev).unwrap();
+}
+
+#[test]
+fn matmul_family_is_bitwise_identical_across_forced_isas() {
+    let _guard = SELECT_LOCK.lock().unwrap();
+    let prev = kernels::active_isa();
+    // odd shapes so vector bodies and scalar tails both run
+    let a = Matrix::from_fn(23, 37, |i, j| ((i * 37 + j) as f32 * 0.11).sin());
+    let b = Matrix::from_fn(37, 19, |i, j| ((i + j * 7) as f32 * 0.05).cos());
+    let bt = b.transpose();
+    let x: Vec<f32> = (0..37).map(|i| (i as f32 * 0.3).tanh()).collect();
+    let mut sm = Matrix::from_fn(23, 37, |i, j| ((i * 37 + j) as f32 * 0.17).sin() * 4.0);
+    // a fully-masked softmax row exercises the uniform fallback
+    for j in 0..37 {
+        sm.set(11, j, f32::NEG_INFINITY);
+    }
+    kernels::select(KernelIsa::Scalar).unwrap();
+    let mm0 = matmul(&a, &b);
+    let nt0 = matmul_nt(&a, &bt);
+    let mv0 = matvec(&a, &x);
+    let mut sx0 = sm.clone();
+    softmax_rows(&mut sx0);
+    for t in supported_tables() {
+        kernels::select(t.isa).unwrap();
+        assert_bits_eq(matmul(&a, &b).data(), mm0.data(), &format!("matmul {}", t.isa));
+        assert_bits_eq(matmul_nt(&a, &bt).data(), nt0.data(), &format!("matmul_nt {}", t.isa));
+        let mv = matvec(&a, &x);
+        assert_bits_eq(&mv, &mv0, &format!("matvec {}", t.isa));
+        let mut sx = sm.clone();
+        softmax_rows(&mut sx);
+        assert_bits_eq(sx.data(), sx0.data(), &format!("softmax {}", t.isa));
+    }
+    kernels::select(prev).unwrap();
+}
+
+/// Fill a tiered cache past capacity (forcing f16 + int8 demotion),
+/// replay the prefix, and gather head 0 — the dequantise-on-gather
+/// read path end to end.
+fn tiered_gather_bits() -> Vec<u32> {
+    const TE: usize = 6;
+    const BS: usize = 4;
+    let tiers = TierLadder::none().with_f16(true).with_int8(true);
+    let mut c =
+        KvCache::new(KvCacheConfig::new(BS).with_capacity_blocks(2).with_tiers(tiers), TE);
+    let rows = |seed: u64, n: usize| {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut k = vec![0.0f32; TE];
+                let mut v = vec![0.0f32; TE];
+                rng.fill_normal(&mut k);
+                rng.fill_normal(&mut v);
+                (k, v)
+            })
+            .collect::<Vec<_>>()
+    };
+    let fill = |c: &mut KvCache, ch: &mut StreamChain, rows: &[(Vec<f32>, Vec<f32>)]| {
+        for (k, v) in rows {
+            c.append(ch, k, v);
+        }
+    };
+    let prompt = rows(3, 2 * BS);
+    let mut a = c.open_stream();
+    fill(&mut c, &mut a, &prompt);
+    c.close_stream(a);
+    // pressure: a second stream demotes the sealed prompt blocks
+    let mut b = c.open_stream();
+    fill(&mut c, &mut b, &rows(4, 2 * BS));
+    c.close_stream(b);
+    assert!(c.stats().demoted_blocks > 0, "setup must force demotion");
+    // replay hits the quantised entries; gather decodes them
+    let mut r = c.open_stream();
+    fill(&mut c, &mut r, &prompt);
+    let n = r.visible_len();
+    let mut k = Matrix::zeros(n, 3);
+    let mut v = Matrix::zeros(n, 3);
+    r.gather_head_into(1, 3, &mut k, &mut v);
+    c.close_stream(r);
+    k.data().iter().chain(v.data()).map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn tiered_kv_gather_is_bitwise_identical_across_forced_isas() {
+    let _guard = SELECT_LOCK.lock().unwrap();
+    let prev = kernels::active_isa();
+    kernels::select(KernelIsa::Scalar).unwrap();
+    let baseline = tiered_gather_bits();
+    for t in supported_tables() {
+        kernels::select(t.isa).unwrap();
+        assert_eq!(
+            tiered_gather_bits(),
+            baseline,
+            "tiered gather bits differ between scalar and {}",
+            t.isa
+        );
+    }
+    kernels::select(prev).unwrap();
+}
